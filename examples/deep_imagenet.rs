@@ -1,0 +1,113 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §4, paper §6).
+//!
+//! Reproduces the paper's deep-network ImageNet experiment across all
+//! three layers with Python nowhere on the path:
+//!
+//! * L1 — the Pallas kernels (tiled edge-score matmul + trellis Viterbi)
+//!   inside the AOT artifacts;
+//! * L2 — the JAX MLP (2×500 ReLU, the paper's architecture) and its
+//!   trellis-softmax SGD train step, lowered once by `make artifacts`;
+//! * L3 — this rust driver: data pipeline, training loop, evaluation, and
+//!   the baseline comparison (linear LTLS trained in rust).
+//!
+//! The paper reports linear LTLS collapsing to 0.0075 p@1 on ImageNet (*)
+//! while the deep variant reaches 0.0507 after 10 iterations. The analog
+//! here reproduces that *shape*: linear ≈ chance-level, deep ≫ linear.
+//!
+//! Run: `make artifacts && cargo run --release --example deep_imagenet -- [--epochs N] [--steps N]`
+//! (steps caps total SGD steps for quick runs; 0 = no cap)
+
+use ltls::data::datasets;
+use ltls::eval::precision_at_1;
+use ltls::runtime::{artifacts, ArtifactMeta, DeepLtls, Engine};
+use ltls::train::{TrainConfig, Trainer};
+use ltls::util::args::Args;
+use ltls::util::rng::Rng;
+use ltls::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let epochs = args.get_usize("epochs", 4);
+    let step_cap = args.get_usize("steps", 0);
+    let lr = args.get_f32("lr", 0.4);
+    let scale = args.get_f32("scale", 1.0) as f64;
+
+    let meta = ArtifactMeta::load(&artifacts::default_dir()).map_err(anyhow::Error::msg)?;
+    println!(
+        "artifacts: C={} D={} hidden={} batch={} E={} (trellis layout cross-checked)",
+        meta.c, meta.d, meta.hidden, meta.batch, meta.e
+    );
+
+    // The imageNet analog: dense features (30.8% like the real thing),
+    // nonlinear teacher — exactly the regime where linear LTLS fails.
+    let analog = datasets::by_name("imageNet").unwrap();
+    let (train, test) = analog.generate(scale, 7);
+    println!("data: {}", ltls::data::stats::stats(&train));
+
+    // --- Baseline: linear LTLS (the paper's * row) --------------------
+    let t0 = Timer::new();
+    let mut linear = Trainer::new(TrainConfig::default(), train.n_features, train.n_labels);
+    linear.fit(&train, 3);
+    let linear_model = linear.into_model();
+    let linear_p1 = precision_at_1(&linear_model, &test);
+    println!(
+        "\n[linear LTLS]  p@1 = {:.4}  ({:.1}s train)  — the paper's failure row (*)",
+        linear_p1,
+        t0.elapsed_s()
+    );
+
+    // --- Deep LTLS through the AOT PJRT artifacts ---------------------
+    let engine = Engine::cpu()?;
+    println!("[deep LTLS]    PJRT platform: {}", engine.platform());
+    let mut deep = DeepLtls::load(&engine, meta.clone())?;
+    println!(
+        "[deep LTLS]    {} params, LTLS output layer decodes E={} -> C={}",
+        deep.param_count(),
+        meta.e,
+        meta.c
+    );
+
+    let b = meta.batch;
+    let mut order: Vec<usize> = (0..train.n_examples()).collect();
+    let mut rng = Rng::new(3);
+    let mut steps = 0usize;
+    let t1 = Timer::new();
+    println!("\nstep, mean_loss, test_p@1   (loss curve for EXPERIMENTS.md)");
+    'outer: for epoch in 0..epochs {
+        rng.shuffle(&mut order);
+        let mut loss_sum = 0.0;
+        let mut seen = 0usize;
+        for chunk in order.chunks(b) {
+            loss_sum += deep.train_batch(&train, chunk, lr)? as f64;
+            seen += 1;
+            steps += 1;
+            if seen % 50 == 0 {
+                println!("  step {:>5}: loss {:.4}", steps, loss_sum / seen as f64);
+            }
+            if step_cap > 0 && steps >= step_cap {
+                break 'outer;
+            }
+        }
+        let p1 = deep.precision_at_1(&test)?;
+        println!(
+            "epoch {:>2}: mean loss {:.4}  test p@1 {:.4}  ({:.0}s elapsed)",
+            epoch + 1,
+            loss_sum / seen.max(1) as f64,
+            p1,
+            t1.elapsed_s()
+        );
+    }
+
+    let deep_p1 = deep.precision_at_1(&test)?;
+    println!("\n==== paper §6 shape check ====");
+    println!("linear LTLS p@1 = {linear_p1:.4}   (paper: 0.0075 on real ImageNet)");
+    println!("deep   LTLS p@1 = {deep_p1:.4}   (paper: 0.0507 after 10 iterations)");
+    let ratio = deep_p1 / linear_p1.max(1e-6);
+    println!("deep/linear ratio = {ratio:.1}x   (paper: ~6.8x)");
+    if deep_p1 > linear_p1 {
+        println!("REPRODUCED: the deep edge scorer rescues the dense regime.");
+    } else {
+        println!("WARNING: deep did not beat linear at this scale; raise --epochs.");
+    }
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Regenerate the paper's Tables 1, 2 and 3 on the synthetic analogs.
+//!
+//! Run: `cargo run --release --example paper_tables -- [table1|table2|table3|all] [--scale S] [--epochs N]`
+//!
+//! Absolute numbers differ from the paper (our substrate is synthetic —
+//! see DESIGN.md §3); the comparison *shape* is what must reproduce:
+//! who wins where, the imageNet/Eur-Lex failure rows, model-size ratios.
+
+use ltls::eval::tables;
+use ltls::util::args::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let scale = args.get_f32("scale", 0.25) as f64;
+    let epochs = args.get_usize("epochs", 5);
+    let seed = args.get_u64("seed", 42);
+
+    if matches!(which, "table1" | "all") {
+        let r = tables::table1(scale, epochs, seed);
+        print!("{}", r.render());
+        println!("json: {}\n", r.to_json().dump());
+    }
+    if matches!(which, "table2" | "all") {
+        let r = tables::table2(scale, epochs, seed);
+        print!("{}", r.render());
+        println!("json: {}\n", r.to_json().dump());
+    }
+    if matches!(which, "table3" | "all") {
+        let rows = tables::table3(scale, epochs, seed);
+        print!("{}", tables::render_table3(&rows));
+    }
+}

@@ -1,0 +1,53 @@
+//! Quickstart: the full LTLS story in one file.
+//!
+//! 1. Build the paper's Figure-1 trellis (C=22) and print it.
+//! 2. Show the Figure-2 update-trace semantics (symmetric difference).
+//! 3. Train LTLS on a small synthetic extreme-classification problem,
+//!    evaluate precision@1, and demonstrate log-space model size.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::eval::{precision_at_1, Predictor};
+use ltls::graph::{dot, Trellis};
+use ltls::train::{TrainConfig, Trainer};
+
+fn main() {
+    // --- Figure 1: the trellis for C=22 ------------------------------
+    let t = Trellis::new(22);
+    println!("{}", dot::to_ascii(&t));
+    println!("Graphviz (paths for labels 3=green / 17=red highlighted):\n");
+    println!("{}", dot::to_dot(&t, &[(3, "green"), (17, "red")]));
+
+    // --- Figure 2: update semantics ----------------------------------
+    println!("{}", dot::update_trace(&t, 3, 17));
+
+    // --- Train on a synthetic problem --------------------------------
+    let ds = SyntheticSpec::multiclass(4000, 2000, 128).noise(0.02).seed(1).generate();
+    let (train, test) = ltls::data::split::random_split(&ds, 0.2, 1);
+    println!("dataset: {}", ltls::data::stats::stats(&train));
+
+    let mut trainer = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    for (i, m) in trainer.fit(&train, 5).into_iter().enumerate() {
+        println!("epoch {}: {}", i + 1, m);
+    }
+    let model = trainer.into_model();
+    let p1 = precision_at_1(&model, &test);
+    println!("\nprecision@1 = {p1:.4}");
+
+    // --- The log-space claim ------------------------------------------
+    let e = model.trellis.num_edges();
+    println!(
+        "model: E = {} edges for C = {} classes -> {} weights ({:.2} MB); an OVA model would need {} ({:.2} MB)",
+        e,
+        ds.n_labels,
+        e * ds.n_features,
+        model.model_bytes() as f64 / 1e6,
+        ds.n_labels * ds.n_features,
+        (ds.n_labels * ds.n_features * 4) as f64 / 1e6,
+    );
+
+    // --- Top-k prediction ----------------------------------------------
+    let top = model.topk(test.row(0), 5);
+    println!("top-5 for test example 0 (true = {:?}): {:?}", test.labels_of(0), top);
+}

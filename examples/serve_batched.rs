@@ -1,0 +1,90 @@
+//! Serving driver: train LTLS on the aloi analog, stand up the batching
+//! prediction server, and drive an open-loop load test, reporting
+//! throughput and latency percentiles (the L3 coordinator's perf story).
+//!
+//! Run: `cargo run --release --example serve_batched -- [--requests N] [--batch B] [--max-wait-us U] [--clients T]`
+
+use ltls::coordinator::{server::SparsePath, BatcherConfig, PredictServer, ServerConfig};
+use ltls::data::datasets;
+use ltls::eval::{precision_at_1, Predictor};
+use ltls::train::{TrainConfig, Trainer};
+use ltls::util::args::Args;
+use ltls::util::timer::Timer;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let n_requests = args.get_usize("requests", 50_000);
+    let max_batch = args.get_usize("batch", 64);
+    let max_wait_us = args.get_u64("max-wait-us", 300);
+    let clients = args.get_usize("clients", 4);
+
+    let analog = datasets::by_name("aloi.bin").unwrap();
+    let (train, test) = analog.generate(0.2, 5);
+    println!("data: {}", ltls::data::stats::stats(&train));
+
+    let mut tr = Trainer::new(TrainConfig::default(), train.n_features, train.n_labels);
+    tr.fit(&train, 4);
+    let model = tr.into_model();
+    println!(
+        "model: p@1 = {:.4}, {:.2} MB, E = {}",
+        precision_at_1(&model, &test),
+        model.model_bytes() as f64 / 1e6,
+        model.trellis.num_edges()
+    );
+
+    let server = Arc::new(PredictServer::start(
+        SparsePath(model),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: std::time::Duration::from_micros(max_wait_us),
+            },
+            queue_depth: 2048,
+        },
+    ));
+
+    // Closed-loop clients, each with a small pipeline window.
+    let test = Arc::new(test);
+    let timer = Timer::new();
+    let per_client = n_requests / clients;
+    let handles: Vec<_> = (0..clients)
+        .map(|cid| {
+            let server = Arc::clone(&server);
+            let test = Arc::clone(&test);
+            std::thread::spawn(move || {
+                let mut pending = std::collections::VecDeque::new();
+                for i in 0..per_client {
+                    let row = test.row((cid * per_client + i) % test.n_examples());
+                    pending.push_back(server.submit(
+                        row.indices.to_vec(),
+                        row.values.to_vec(),
+                        1,
+                    ));
+                    if pending.len() >= 32 {
+                        pending.pop_front().unwrap().recv().unwrap();
+                    }
+                }
+                for rx in pending {
+                    rx.recv().unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = timer.elapsed_s();
+
+    println!("\n==== serving metrics ====");
+    println!("{}", server.metrics.summary());
+    println!(
+        "throughput: {:.0} req/s over {} requests ({} clients, batch<= {max_batch}, wait {max_wait_us}us)",
+        (per_client * clients) as f64 / secs,
+        per_client * clients,
+        clients,
+    );
+    let p50 = server.metrics.request_quantile_ns(0.5) / 1e3;
+    let p99 = server.metrics.request_quantile_ns(0.99) / 1e3;
+    println!("request latency p50 {p50:.0}us  p99 {p99:.0}us  (p99/p50 = {:.1})", p99 / p50.max(1.0));
+}

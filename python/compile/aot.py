@@ -1,0 +1,177 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+``xla`` crate's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit ids);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and DESIGN.md §5.
+
+Artifacts (shapes fixed at lower time, recorded in meta.json):
+
+* ``mlp_fwd.hlo.txt``        (x)              -> (h,)           edge scores
+* ``mlp_train_step.hlo.txt`` (params..., x, s, lr) -> (params'..., loss)
+* ``ltls_infer.hlo.txt``     (params..., x)   -> (labels, scores)
+* ``edge_scores.hlo.txt``    (x, w, b)        -> (h,)   bare Pallas matmul
+* ``meta.json``              shapes + trellis layout fingerprint
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import MlpParams, infer, init_params, mlp_edge_scores, sgd_train_step
+from .trellis import Trellis
+
+# Problem size: the imageNet analog of the paper's §6 deep experiment.
+DEFAULT = dict(c=1000, d=1000, hidden=500, batch=64)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_specs(d, hidden, e):
+    f32 = jnp.float32
+    return MlpParams(
+        w1=jax.ShapeDtypeStruct((d, hidden), f32),
+        b1=jax.ShapeDtypeStruct((hidden,), f32),
+        w2=jax.ShapeDtypeStruct((hidden, hidden), f32),
+        b2=jax.ShapeDtypeStruct((hidden,), f32),
+        w3=jax.ShapeDtypeStruct((hidden, e), f32),
+        b3=jax.ShapeDtypeStruct((e,), f32),
+    )
+
+
+def lower_all(c: int, d: int, hidden: int, batch: int):
+    """Lower every artifact; returns {name: hlo_text} plus metadata."""
+    t = Trellis(c)
+    e = t.num_edges
+    f32 = jnp.float32
+    x_spec = jax.ShapeDtypeStruct((batch, d), f32)
+    s_spec = jax.ShapeDtypeStruct((batch, e), f32)
+    lr_spec = jax.ShapeDtypeStruct((), f32)
+    params = param_specs(d, hidden, e)
+
+    out = {}
+
+    # mlp_fwd: params are runtime inputs so rust can stream updated weights.
+    def fwd(w1, b1, w2, b2, w3, b3, x):
+        return (mlp_edge_scores(MlpParams(w1, b1, w2, b2, w3, b3), x),)
+
+    out["mlp_fwd"] = to_hlo_text(jax.jit(fwd).lower(*params, x_spec))
+
+    # train step: flat param signature; donation happens implicitly on the
+    # rust side by dropping old buffers after each step.
+    def step(w1, b1, w2, b2, w3, b3, x, s, lr):
+        new, loss = sgd_train_step(t, MlpParams(w1, b1, w2, b2, w3, b3), x, s, lr)
+        return (*new, loss)
+
+    out["mlp_train_step"] = to_hlo_text(
+        jax.jit(step).lower(*params, x_spec, s_spec, lr_spec)
+    )
+
+    # full inference: MLP + Pallas viterbi in one program.
+    def full_infer(w1, b1, w2, b2, w3, b3, x):
+        labels, scores = infer(t, MlpParams(w1, b1, w2, b2, w3, b3), x)
+        return (labels, scores)
+
+    out["ltls_infer"] = to_hlo_text(jax.jit(full_infer).lower(*params, x_spec))
+
+    # bare Pallas edge-score matmul (kernel-level artifact, also used by
+    # the runtime microbenches).
+    from .kernels.edge_scores import edge_scores
+
+    w_spec = jax.ShapeDtypeStruct((d, e), f32)
+    b_spec = jax.ShapeDtypeStruct((e,), f32)
+
+    def bare(x, w, b):
+        return (edge_scores(x, w, b),)
+
+    out["edge_scores"] = to_hlo_text(jax.jit(bare).lower(x_spec, w_spec, b_spec))
+
+    meta = {
+        "c": c,
+        "d": d,
+        "hidden": hidden,
+        "batch": batch,
+        "e": e,
+        "trellis": t.layout_fingerprint(),
+        "artifacts": {
+            "mlp_fwd": {
+                "inputs": ["w1", "b1", "w2", "b2", "w3", "b3", "x"],
+                "outputs": ["h"],
+            },
+            "mlp_train_step": {
+                "inputs": ["w1", "b1", "w2", "b2", "w3", "b3", "x", "s", "lr"],
+                "outputs": ["w1", "b1", "w2", "b2", "w3", "b3", "loss"],
+            },
+            "ltls_infer": {
+                "inputs": ["w1", "b1", "w2", "b2", "w3", "b3", "x"],
+                "outputs": ["labels", "scores"],
+            },
+            "edge_scores": {"inputs": ["x", "w", "b"], "outputs": ["h"]},
+        },
+        "param_shapes": {
+            "w1": [d, hidden],
+            "b1": [hidden],
+            "w2": [hidden, hidden],
+            "b2": [hidden],
+            "w3": [hidden, e],
+            "b3": [e],
+        },
+    }
+    return out, meta
+
+
+def write_init_params(path: str, c: int, d: int, hidden: int, seed: int = 0):
+    """Dump He-initialized params as raw little-endian f32 (one file per
+    tensor) so the rust driver starts from the same init as python."""
+    t = Trellis(c)
+    # The rust data pipeline L2-normalizes inputs — scale w1 accordingly.
+    params = init_params(jax.random.PRNGKey(seed), d, hidden, t.num_edges,
+                         normalized_inputs=True)
+    os.makedirs(path, exist_ok=True)
+    import numpy as np
+
+    for name, arr in params._asdict().items():
+        np.asarray(arr, dtype="<f4").tofile(os.path.join(path, f"{name}.f32"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--c", type=int, default=DEFAULT["c"])
+    ap.add_argument("--d", type=int, default=DEFAULT["d"])
+    ap.add_argument("--hidden", type=int, default=DEFAULT["hidden"])
+    ap.add_argument("--batch", type=int, default=DEFAULT["batch"])
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    hlos, meta = lower_all(args.c, args.d, args.hidden, args.batch)
+    for name, text in hlos.items():
+        p = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(p, "w") as f:
+            f.write(text)
+        print(f"wrote {p} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1, sort_keys=True)
+    write_init_params(os.path.join(args.out_dir, "init_params"),
+                      args.c, args.d, args.hidden)
+    print(f"wrote {args.out_dir}/meta.json and init_params/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

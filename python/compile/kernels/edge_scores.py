@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: tiled matmul for the dense edge-score hot spot.
+
+The deep variant's layers are tall-skinny matmuls (batch x D times
+D x H / H x E). On TPU the right schedule tiles the batch and contraction
+dimensions into VMEM-resident blocks that feed the MXU, accumulating into
+an output block that is revisited across the contraction grid axis — the
+BlockSpec below expresses exactly that HBM<->VMEM schedule (see DESIGN.md
+§Hardware-Adaptation for the GPU-paper -> TPU mapping rationale).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the AOT
+artifacts ship. On a real TPU the same kernel compiles natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    """One (bm, bn) output block; grid axis 2 walks the contraction."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped block product, accumulated in f32.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(a, axis: int, mult: int):
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def _tiled_matmul_impl(x, w, bm: int = 32, bk: int = 128, bn: int = 128):
+    b, d = x.shape
+    d2, n = w.shape
+    assert d == d2, f"contraction mismatch {d} vs {d2}"
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp, dp = xp.shape
+    np_ = wp.shape[1]
+    grid = (bp // bm, np_ // bn, dp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:b, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def tiled_matmul(x, w, bm: int = 32, bk: int = 128, bn: int = 128):
+    """``x @ w`` via the Pallas kernel, padding ragged edges.
+
+    x: (B, D) f32, w: (D, N) f32 -> (B, N) f32.
+    Block sizes are VMEM-budgeted: bm*bk + bk*bn + bm*bn floats
+    (32*128 + 128*128 + 32*128 = 24.5k f32 = 96 KiB << 16 MiB VMEM),
+    leaving headroom for double buffering.
+
+    Differentiable: the custom VJP keeps both backward matmuls on the same
+    Pallas kernel (interpret-mode pallas_call has no autodiff rule of its
+    own), so the AOT'd train step's HLO contains the kernel's schedule for
+    forward and backward alike.
+    """
+    return _tiled_matmul_impl(x, w, bm=bm, bk=bk, bn=bn)
+
+
+def _tm_fwd(x, w, bm, bk, bn):
+    return _tiled_matmul_impl(x, w, bm=bm, bk=bk, bn=bn), (x, w)
+
+
+def _tm_bwd(bm, bk, bn, res, g):
+    x, w = res
+    # dx = g @ wᵀ, dw = xᵀ @ g — same kernel, transposed operands.
+    dx = _tiled_matmul_impl(g, w.T, bm=bm, bk=bk, bn=bn)
+    dw = _tiled_matmul_impl(x.T, g, bm=bm, bk=bk, bn=bn)
+    return dx, dw
+
+
+tiled_matmul.defvjp(_tm_fwd, _tm_bwd)
+
+
+def edge_scores(x, w, bias, **kw):
+    """Edge-score layer ``x @ w + bias`` on the Pallas matmul."""
+    return tiled_matmul(x, w, **kw) + bias

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness references).
+
+Every kernel in this package is pytest-compared against these functions
+(exactly in interpret mode, to float tolerance after AOT round-trips).
+"""
+
+import jax.numpy as jnp
+
+from ..trellis import Trellis
+
+
+def matmul_ref(x, w):
+    """Reference for kernels.edge_scores.tiled_matmul: plain X @ W."""
+    return jnp.matmul(x, w)
+
+
+def edge_scores_ref(x, w, b):
+    """Reference edge-score layer: X @ W + b (W is D x E)."""
+    return jnp.matmul(x, w) + b
+
+
+def viterbi_ref(t: Trellis, h):
+    """Reference decode: dense M_G argmax. h is (B, E).
+
+    Returns (labels int32 (B,), scores f32 (B,)). Ties break to the
+    smaller label (jnp.argmax semantics), matching the rust oracle.
+    """
+    m = jnp.asarray(t.path_matrix())  # (C, E)
+    scores = h @ m.T  # (B, C)
+    labels = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    best = jnp.max(scores, axis=1)
+    return labels, best
+
+
+def log_partition_ref(t: Trellis, h):
+    """Reference log-partition: logsumexp over all C path scores."""
+    m = jnp.asarray(t.path_matrix())
+    scores = h @ m.T  # (B, C)
+    mx = scores.max(axis=1)
+    return jnp.log(jnp.sum(jnp.exp(scores - mx[:, None]), axis=1)) + mx

@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: batched trellis Viterbi decode.
+
+The trellis DP has only two states per step, so the kernel keeps the whole
+DP state as two (block,) vectors and fills the VPU lanes with the *batch*
+dimension — the TPU adaptation of what a GPU implementation would do with
+one thread per example (DESIGN.md §Hardware-Adaptation). The ≤ floor(log2 C)
+steps are unrolled at trace time (the structure is static per C), so the
+lowered HLO is a flat chain of vectorized selects.
+
+Outputs the canonical path label (int32) and its score per example,
+matching ``rust/src/decode/viterbi.rs`` semantics (ties measure-zero under
+continuous scores).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..trellis import Trellis
+
+
+def _viterbi_kernel(h_ref, label_ref, score_ref, *, t: Trellis):
+    h = h_ref[...]  # (block, E)
+    b = t.steps
+
+    # DP state over the batch block: score/code per trellis state.
+    s0 = h[:, t.source_edge(0)]
+    s1 = h[:, t.source_edge(1)]
+    c0 = jnp.zeros_like(s0, dtype=jnp.int32)
+    c1 = jnp.ones_like(c0)
+
+    best_score = jnp.full_like(s0, -jnp.inf)
+    best_label = jnp.zeros_like(c0)
+
+    def consider(cand_s, cand_l, best_s, best_l):
+        take = cand_s > best_s
+        return jnp.where(take, cand_s, best_s), jnp.where(take, cand_l, best_l)
+
+    exit_rank = 0
+    if t.exit_bits and t.exit_bits[0] == 0:
+        lbl = t.exit_label_base(0)
+        cand = s1 + h[:, t.exit_edge(0)]
+        best_score, best_label = consider(
+            cand, jnp.full_like(best_label, lbl), best_score, best_label
+        )
+        exit_rank = 1
+
+    for j in range(2, b + 1):
+        e00 = h[:, t.transition_edge(j, 0, 0)]
+        e01 = h[:, t.transition_edge(j, 0, 1)]
+        e10 = h[:, t.transition_edge(j, 1, 0)]
+        e11 = h[:, t.transition_edge(j, 1, 1)]
+        to0_a = s0 + e00
+        to0_b = s1 + e10
+        n0 = jnp.maximum(to0_a, to0_b)
+        nc0 = jnp.where(to0_a >= to0_b, c0, c1)
+        to1_a = s0 + e01
+        to1_b = s1 + e11
+        n1 = jnp.maximum(to1_a, to1_b)
+        bitj = jnp.int32(1 << (j - 1))
+        nc1 = jnp.where(to1_a >= to1_b, c0, c1) | bitj
+        s0, s1, c0, c1 = n0, n1, nc0, nc1
+
+        if exit_rank < len(t.exit_bits) and t.exit_bits[exit_rank] == j - 1:
+            base = t.exit_label_base(exit_rank)
+            cand = s1 + h[:, t.exit_edge(exit_rank)]
+            lbl = (c1 & ~bitj) + jnp.int32(base)
+            best_score, best_label = consider(cand, lbl, best_score, best_label)
+            exit_rank += 1
+
+    aux_sink = h[:, t.aux_sink_edge()]
+    full0 = s0 + h[:, t.aux_edge(0)] + aux_sink
+    full1 = s1 + h[:, t.aux_edge(1)] + aux_sink
+    best_score, best_label = consider(full0, c0, best_score, best_label)
+    best_score, best_label = consider(full1, c1, best_score, best_label)
+
+    label_ref[...] = best_label
+    score_ref[...] = best_score
+
+
+def viterbi_decode(h, c: int, block: int = 128):
+    """Batched Viterbi decode of edge scores ``h`` (B, E) for C classes.
+
+    Returns (labels int32 (B,), scores f32 (B,)).
+    """
+    t = Trellis(c)
+    b_sz, e = h.shape
+    assert e == t.num_edges, f"edge dim {e} != {t.num_edges}"
+    pad = (-b_sz) % block
+    hp = jnp.pad(h, ((0, pad), (0, 0))) if pad else h
+    bp = hp.shape[0]
+    labels, scores = pl.pallas_call(
+        functools.partial(_viterbi_kernel, t=t),
+        grid=(bp // block,),
+        in_specs=[pl.BlockSpec((block, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp,), jnp.int32),
+            jax.ShapeDtypeStruct((bp,), jnp.float32),
+        ],
+        interpret=True,
+    )(hp)
+    return labels[:b_sz], scores[:b_sz]

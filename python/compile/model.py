@@ -1,0 +1,140 @@
+"""L2: the deep LTLS variant in JAX (paper §6 ImageNet experiment).
+
+A 2-layer MLP (ReLU, 500 hidden units each — the paper's architecture)
+produces the E edge scores; LTLS is the output layer, decoding E scores to
+C classes. Training uses the trellis softmax (multinomial logistic whose
+log-partition function the trellis computes in O(E), §5); gradients flow
+through the edge-score vector by JAX autodiff — the forward-backward
+algorithm emerges from differentiating the forward DP.
+
+Everything here is build-time only: ``aot.py`` lowers these functions to
+HLO text once, and the rust runtime executes them on the request path.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.edge_scores import tiled_matmul
+from .trellis import Trellis
+
+
+class MlpParams(NamedTuple):
+    """Parameters of the deep edge scorer (D -> H -> H -> E)."""
+
+    w1: jax.Array
+    b1: jax.Array
+    w2: jax.Array
+    b2: jax.Array
+    w3: jax.Array
+    b3: jax.Array
+
+
+def init_params(key, d: int, h: int, e: int, normalized_inputs: bool = False) -> MlpParams:
+    """He-initialized MLP parameters.
+
+    ``normalized_inputs=True`` rescales the first layer for L2-normalized
+    inputs (‖x‖ = 1): classic He init assumes per-coordinate unit variance
+    (‖x‖ ≈ √D), and with unit-norm rows the first-layer activations would
+    be ~√D too small — gradients vanish and the trellis softmax plateaus
+    at log C (measured in EXPERIMENTS.md §6).
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    w1_scale = (2.0 / d) ** 0.5 * (d ** 0.5 if normalized_inputs else 1.0)
+    return MlpParams(
+        w1=jax.random.normal(k1, (d, h), jnp.float32) * w1_scale,
+        b1=jnp.zeros((h,), jnp.float32),
+        w2=jax.random.normal(k2, (h, h), jnp.float32) * (2.0 / h) ** 0.5,
+        b2=jnp.zeros((h,), jnp.float32),
+        w3=jax.random.normal(k3, (h, e), jnp.float32) * (2.0 / h) ** 0.5,
+        b3=jnp.zeros((e,), jnp.float32),
+    )
+
+
+def mlp_edge_scores(params: MlpParams, x, use_pallas: bool = True):
+    """Edge scores h(w, x): (B, D) -> (B, E).
+
+    The first (widest) matmul runs on the L1 Pallas kernel; the small tail
+    matmuls use jnp directly (they lower to the same dot HLO).
+    """
+    mm = tiled_matmul if use_pallas else jnp.matmul
+    h1 = jax.nn.relu(mm(x, params.w1) + params.b1)
+    h2 = jax.nn.relu(jnp.matmul(h1, params.w2) + params.b2)
+    return jnp.matmul(h2, params.w3) + params.b3
+
+
+def trellis_log_partition(t: Trellis, h):
+    """log Σ_paths exp(score) for a batch of edge-score rows h (B, E).
+
+    The forward algorithm over the trellis, unrolled over the static
+    structure — O(E) ops, differentiable (its gradient is the posterior
+    edge-marginal vector, i.e. forward-backward via autodiff).
+    """
+    a0 = h[:, t.source_edge(0)]
+    a1 = h[:, t.source_edge(1)]
+    terms = []
+    exit_rank = 0
+    if t.exit_bits and t.exit_bits[0] == 0:
+        terms.append(a1 + h[:, t.exit_edge(0)])
+        exit_rank = 1
+    for j in range(2, t.steps + 1):
+        n0 = jnp.logaddexp(a0 + h[:, t.transition_edge(j, 0, 0)],
+                           a1 + h[:, t.transition_edge(j, 1, 0)])
+        n1 = jnp.logaddexp(a0 + h[:, t.transition_edge(j, 0, 1)],
+                           a1 + h[:, t.transition_edge(j, 1, 1)])
+        a0, a1 = n0, n1
+        if exit_rank < len(t.exit_bits) and t.exit_bits[exit_rank] == j - 1:
+            terms.append(a1 + h[:, t.exit_edge(exit_rank)])
+            exit_rank += 1
+    aux = h[:, t.aux_sink_edge()]
+    terms.append(a0 + h[:, t.aux_edge(0)] + aux)
+    terms.append(a1 + h[:, t.aux_edge(1)] + aux)
+    stacked = jnp.stack(terms, axis=0)  # (n_terms, B)
+    mx = stacked.max(axis=0)
+    return mx + jnp.log(jnp.sum(jnp.exp(stacked - mx[None, :]), axis=0))
+
+
+def trellis_softmax_loss(t: Trellis, params: MlpParams, x, s):
+    """Mean NLL of the true paths.
+
+    ``s`` is the (B, E) path-indicator matrix of the true labels (rows of
+    M_G, built by the caller — the rust side uses its codec, tests use
+    ``Trellis.edges_of_label``).
+    """
+    h = mlp_edge_scores(params, x)
+    logz = trellis_log_partition(t, h)
+    score = jnp.sum(s * h, axis=1)
+    return jnp.mean(logz - score)
+
+
+def sgd_train_step(t: Trellis, params: MlpParams, x, s, lr):
+    """One SGD step; returns (new_params, loss). AOT'd with donated params."""
+    loss, grads = jax.value_and_grad(
+        lambda p: trellis_softmax_loss(t, p, x, s)
+    )(params)
+    new = MlpParams(*(p - lr * g for p, g in zip(params, grads)))
+    return new, loss
+
+
+def infer(t: Trellis, params: MlpParams, x):
+    """Batched top-1 inference: (labels int32 (B,), scores (B,)).
+
+    Runs the MLP and the L1 Pallas Viterbi kernel — the full dense
+    prediction path that the rust coordinator calls as one HLO program.
+    """
+    from .kernels.viterbi import viterbi_decode
+
+    h = mlp_edge_scores(params, x)
+    return viterbi_decode(h, t.c)
+
+
+def make_jitted(c: int, d: int, hidden: int):
+    """Convenience bundle of jitted fns for a given problem size."""
+    t = Trellis(c)
+    e = t.num_edges
+    step = jax.jit(functools.partial(sgd_train_step, t))
+    fwd = jax.jit(functools.partial(mlp_edge_scores))
+    dec = jax.jit(functools.partial(infer, t))
+    return t, e, step, fwd, dec

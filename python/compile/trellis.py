@@ -1,0 +1,123 @@
+"""LTLS trellis structure — python twin of ``rust/src/graph/``.
+
+The edge layout here MUST match the rust implementation bit-for-bit (the
+AOT artifacts bake this structure into HLO, and the rust runtime
+cross-checks the layout recorded in ``artifacts/meta.json`` against its own
+trellis at load time).
+
+Layout for C classes, ``b = floor(log2(C))`` steps:
+
+* edges 0..1                      source -> (step1, state s)
+* edges 2 + 4*(j-2) + 2a + t      (step j-1, a) -> (step j, t), j in 2..=b
+* edges 2 + 4*(b-1) + s           (step b, s) -> auxiliary
+* edge  2 + 4*(b-1) + 2           auxiliary -> sink
+* then one early-exit edge (step i+1, state 1) -> sink per set bit i < b
+  of C, ascending.
+
+``E = 4*b + popcount(C)``.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+def floor_log2(c: int) -> int:
+    assert c >= 1
+    return c.bit_length() - 1
+
+
+@dataclass
+class Trellis:
+    """Trellis for ``c`` classes (c >= 2)."""
+
+    c: int
+    steps: int = field(init=False)
+    exit_bits: List[int] = field(init=False)
+
+    def __post_init__(self) -> None:
+        assert self.c >= 2, "LTLS needs at least 2 classes"
+        self.steps = floor_log2(self.c)
+        self.exit_bits = [i for i in range(self.steps) if (self.c >> i) & 1]
+
+    # -- edge indexing (mirrors rust O(1) arithmetic) --
+
+    @property
+    def num_edges(self) -> int:
+        return 4 * self.steps + bin(self.c).count("1")
+
+    def source_edge(self, s: int) -> int:
+        return s
+
+    def transition_edge(self, j: int, a: int, t: int) -> int:
+        assert 2 <= j <= self.steps
+        return 2 + 4 * (j - 2) + 2 * a + t
+
+    def _aux_base(self) -> int:
+        return 2 + 4 * (self.steps - 1)
+
+    def aux_edge(self, s: int) -> int:
+        return self._aux_base() + s
+
+    def aux_sink_edge(self) -> int:
+        return self._aux_base() + 2
+
+    def exit_edge(self, rank: int) -> int:
+        return self._aux_base() + 3 + rank
+
+    def exit_rank(self, bit: int) -> int:
+        return self.exit_bits.index(bit)
+
+    def exit_label_base(self, rank: int) -> int:
+        base = 1 << self.steps
+        for k in range(rank):
+            base += 1 << self.exit_bits[k]
+        return base
+
+    # -- path codec (canonical label <-> path) --
+
+    def path_states(self, label: int):
+        """(states, exit_bit|None) for a canonical label index."""
+        assert 0 <= label < self.c
+        full = 1 << self.steps
+        if label < full:
+            return [(label >> j) & 1 for j in range(self.steps)], None
+        r = label - full
+        for k, bit in enumerate(self.exit_bits):
+            cnt = 1 << bit
+            if r < cnt:
+                states = [(r >> j) & 1 for j in range(bit)] + [1]
+                return states, bit
+            r -= cnt
+        raise AssertionError("unreachable")
+
+    def edges_of_label(self, label: int) -> List[int]:
+        states, exit_bit = self.path_states(label)
+        out = [self.source_edge(states[0])]
+        for j in range(2, len(states) + 1):
+            out.append(self.transition_edge(j, states[j - 2], states[j - 1]))
+        if exit_bit is None:
+            out.append(self.aux_edge(states[-1]))
+            out.append(self.aux_sink_edge())
+        else:
+            out.append(self.exit_edge(self.exit_rank(exit_bit)))
+        return out
+
+    def path_matrix(self):
+        """Dense M_G in {0,1}^{C x E} (small C only — test oracle)."""
+        import numpy as np
+
+        m = np.zeros((self.c, self.num_edges), dtype=np.float32)
+        for l in range(self.c):
+            for e in self.edges_of_label(l):
+                m[l, e] = 1.0
+        return m
+
+    def layout_fingerprint(self) -> dict:
+        """Structure summary recorded in meta.json for the rust cross-check."""
+        return {
+            "c": self.c,
+            "steps": self.steps,
+            "num_edges": self.num_edges,
+            "exit_bits": list(self.exit_bits),
+            "aux_sink_edge": self.aux_sink_edge(),
+        }

@@ -1,0 +1,120 @@
+"""L1 kernel correctness: Pallas vs pure-jnp reference.
+
+Hypothesis sweeps shapes; fixed seeds keep runs reproducible. Everything
+runs in interpret mode (the CPU PJRT constraint — see kernels docstrings).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.edge_scores import edge_scores, tiled_matmul
+from compile.kernels.viterbi import viterbi_decode
+from compile.trellis import Trellis
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------- tiled matmul ----------
+
+def test_matmul_exact_blocks():
+    x = rand(0, 64, 256)
+    w = rand(1, 256, 128)
+    np.testing.assert_allclose(tiled_matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_ragged_padding():
+    x = rand(2, 33, 130)
+    w = rand(3, 130, 42)
+    np.testing.assert_allclose(tiled_matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 70),
+    d=st.integers(1, 200),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(b, d, n, seed):
+    x = rand(seed, b, d)
+    w = rand(seed + 1, d, n)
+    got = tiled_matmul(x, w)
+    assert got.shape == (b, n)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_nonsquare_block_sizes():
+    x = rand(4, 40, 300)
+    w = rand(5, 300, 50)
+    got = tiled_matmul(x, w, bm=16, bk=64, bn=32)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_edge_scores_adds_bias():
+    x = rand(6, 8, 100)
+    w = rand(7, 100, 42)
+    b = rand(8, 42)
+    np.testing.assert_allclose(
+        edge_scores(x, w, b), ref.edge_scores_ref(x, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_zero_inputs():
+    x = jnp.zeros((5, 7))
+    w = jnp.zeros((7, 3))
+    np.testing.assert_array_equal(tiled_matmul(x, w), jnp.zeros((5, 3)))
+
+
+# ---------- viterbi decode ----------
+
+@pytest.mark.parametrize("c", [2, 3, 22, 105, 159, 255, 256, 1000])
+def test_viterbi_matches_dense_oracle(c):
+    t = Trellis(c)
+    h = rand(c, 40, t.num_edges)
+    labels, scores = viterbi_decode(h, c)
+    want_l, want_s = ref.viterbi_ref(t, h)
+    np.testing.assert_array_equal(labels, want_l)
+    np.testing.assert_allclose(scores, want_s, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(2, 400),
+    b=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_viterbi_hypothesis(c, b, seed):
+    t = Trellis(c)
+    h = rand(seed, b, t.num_edges)
+    labels, scores = viterbi_decode(h, c)
+    want_l, want_s = ref.viterbi_ref(t, h)
+    np.testing.assert_array_equal(labels, want_l)
+    np.testing.assert_allclose(scores, want_s, rtol=1e-4, atol=1e-4)
+
+
+def test_viterbi_boosted_path_wins():
+    c = 105
+    t = Trellis(c)
+    h = np.zeros((4, t.num_edges), np.float32)
+    targets = [0, 17, 63, 104]
+    for row, lbl in enumerate(targets):
+        for e in t.edges_of_label(lbl):
+            h[row, e] = 10.0
+    labels, _ = viterbi_decode(jnp.asarray(h), c)
+    np.testing.assert_array_equal(labels, np.array(targets, np.int32))
+
+
+def test_viterbi_large_batch_padding():
+    c = 1000
+    t = Trellis(c)
+    h = rand(9, 300, t.num_edges)  # not a multiple of the 128 block
+    labels, scores = viterbi_decode(h, c)
+    assert labels.shape == (300,)
+    want_l, _ = ref.viterbi_ref(t, h)
+    np.testing.assert_array_equal(labels, want_l)

@@ -1,0 +1,83 @@
+"""Trellis structure tests — including the cross-language layout contract
+with rust (the same invariants rust/src/graph/trellis.rs pins)."""
+
+import numpy as np
+import pytest
+
+from compile.trellis import Trellis, floor_log2
+
+
+def test_edge_count_formula():
+    for c in list(range(2, 300)) + [1000, 12294, 320338]:
+        t = Trellis(c)
+        assert t.num_edges == 4 * floor_log2(c) + bin(c).count("1")
+
+
+@pytest.mark.parametrize(
+    "c,e",
+    [(105, 28), (1000, 42), (12294, 56), (11947, 61), (159, 34), (3956, 52)],
+)
+def test_paper_table3_edge_counts(c, e):
+    assert Trellis(c).num_edges == e
+
+
+def test_path_count_is_c():
+    for c in [2, 3, 22, 105, 256, 1000]:
+        t = Trellis(c)
+        # DP path count over the edge list reconstructed from labels.
+        labels = {tuple(t.edges_of_label(l)) for l in range(c)}
+        assert len(labels) == c  # distinct paths
+
+
+def test_codec_roundtrip():
+    for c in [2, 3, 22, 105, 159, 1024, 3956]:
+        t = Trellis(c)
+        seen = set()
+        for l in range(c):
+            states, exit_bit = t.path_states(l)
+            if exit_bit is None:
+                assert len(states) == t.steps
+            else:
+                assert len(states) == exit_bit + 1
+                assert states[-1] == 1
+            seen.add((tuple(states), exit_bit))
+        assert len(seen) == c
+
+
+def test_path_matrix_row_sums():
+    t = Trellis(22)
+    m = t.path_matrix()
+    assert m.shape == (22, t.num_edges)
+    sums = m.sum(axis=1)
+    assert sums.max() <= t.steps + 2
+    assert sums.min() >= 2
+
+
+def test_figure1_c22():
+    t = Trellis(22)
+    assert t.steps == 4
+    assert t.exit_bits == [1, 2]
+    assert t.num_edges == 4 * 4 + 3
+
+
+def test_exit_label_bases_partition():
+    for c in [22, 105, 3956]:
+        t = Trellis(c)
+        nxt = 1 << t.steps
+        for k, bit in enumerate(t.exit_bits):
+            assert t.exit_label_base(k) == nxt
+            nxt += 1 << bit
+        assert nxt == c
+
+
+def test_rejects_c_below_2():
+    with pytest.raises(AssertionError):
+        Trellis(1)
+
+
+def test_fingerprint_fields():
+    fp = Trellis(1000).layout_fingerprint()
+    assert fp["c"] == 1000
+    assert fp["num_edges"] == 42
+    assert fp["steps"] == 9
+    assert isinstance(fp["exit_bits"], list)

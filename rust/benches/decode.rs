@@ -1,0 +1,40 @@
+//! Decoder micro-benchmarks: Viterbi / list-Viterbi / forward-backward /
+//! label scoring across C — the O(log C) prediction claim at the op level.
+
+use ltls::graph::Trellis;
+use ltls::util::bench::Bench;
+use ltls::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new();
+    Bench::header("decode ops vs C (per-op latency must grow ~log C)");
+    let mut rng = Rng::new(42);
+    for c in [105u64, 1000, 12294, 320338, 1 << 24] {
+        let t = Trellis::new(c);
+        let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+        bench.run(&format!("viterbi            C={c}"), || {
+            ltls::decode::viterbi(&t, std::hint::black_box(&h))
+        });
+        bench.run(&format!("list_viterbi k=5   C={c}"), || {
+            ltls::decode::list_viterbi(&t, std::hint::black_box(&h), 5)
+        });
+        bench.run(&format!("list_viterbi k=50  C={c}"), || {
+            ltls::decode::list_viterbi(&t, std::hint::black_box(&h), 50)
+        });
+        bench.run(&format!("log_partition      C={c}"), || {
+            ltls::decode::log_partition(&t, std::hint::black_box(&h))
+        });
+        bench.run(&format!("score_label        C={c}"), || {
+            ltls::decode::score_label(&t, std::hint::black_box(&h), c / 2)
+        });
+    }
+
+    // The log-time check: per-op time ratio across 160x increase in C
+    // should be far below linear.
+    let r = bench.results();
+    let small = r.iter().find(|s| s.name.contains("viterbi            C=105")).unwrap();
+    let big = r.iter().find(|s| s.name.contains("viterbi            C=320338")).unwrap();
+    let ratio = big.mean_ns / small.mean_ns;
+    println!("\nviterbi time ratio C=320338 / C=105 = {ratio:.1}x (C ratio = 3051x; log-time requires << linear)");
+    assert!(ratio < 60.0, "decode does not look log-time: {ratio}");
+}

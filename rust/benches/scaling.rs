@@ -1,0 +1,32 @@
+//! The scaling bench: end-to-end prediction latency and model size as C
+//! grows 2^8 → 2^24 at fixed D — regenerates the paper's core complexity
+//! claims (log-time prediction §1, log-space model §4) as a series.
+
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::eval::Predictor;
+use ltls::train::{TrainConfig, Trainer};
+use ltls::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new();
+    Bench::header("end-to-end predict latency vs C (trained models, D=2000)");
+    let d = 2000;
+    let mut sizes = Vec::new();
+    for exp in [8u32, 12, 16, 20, 24] {
+        let c = 1usize << exp;
+        // Keep n modest: we bench prediction, not training.
+        let ds = SyntheticSpec::multiclass(1500, d, c).seed(exp as u64).generate();
+        let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+        tr.fit(&ds, 1);
+        let model = tr.into_model();
+        sizes.push((c, model.trellis.num_edges(), model.model_bytes()));
+        let row = ds.row(0);
+        bench.run(&format!("predict top-1  C=2^{exp}"), || model.topk(row, 1));
+        bench.run(&format!("predict top-10 C=2^{exp}"), || model.topk(row, 10));
+    }
+    println!("\nmodel size vs C (log-space claim):");
+    println!("{:<12}{:>8}{:>14}{:>16}", "C", "E", "LTLS bytes", "OVA bytes");
+    for (c, e, b) in sizes {
+        println!("{:<12}{:>8}{:>14}{:>16}", c, e, b, c * d * 4);
+    }
+}

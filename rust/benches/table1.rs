@@ -1,0 +1,22 @@
+//! Bench target regenerating paper Table 1 (multiclass: LTLS vs LOMtree vs
+//! FastXML — precision@1, prediction time, model size).
+//!
+//! `BENCH_FAST=1` or `LTLS_BENCH_SCALE` control the analog scale.
+
+fn scale() -> f64 {
+    if let Ok(s) = std::env::var("LTLS_BENCH_SCALE") {
+        return s.parse().unwrap_or(0.2);
+    }
+    if std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+        0.03
+    } else {
+        0.2
+    }
+}
+
+fn main() {
+    let epochs = if scale() < 0.05 { 2 } else { 5 };
+    let report = ltls::eval::tables::table1(scale(), epochs, 42);
+    print!("{}", report.render());
+    println!("json: {}", report.to_json().dump());
+}

@@ -1,0 +1,44 @@
+//! Training-throughput bench: SGD steps/second across C and nnz — the
+//! paper's O(log C) *training* claim (one update touches O(log C) edge
+//! models), plus the assignment-policy overhead.
+
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::train::{TrainConfig, Trainer};
+use ltls::util::bench::Bench;
+
+fn main() {
+    let mut bench = Bench::new();
+    Bench::header("SGD step latency vs C (D=5000, nnz~20)");
+    for exp in [7u32, 10, 14, 17] {
+        let c = 1usize << exp;
+        let ds = SyntheticSpec::multiclass(4_000, 5_000, c).seed(exp as u64).generate();
+        let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+        // Warm: assign all labels first so we measure steady-state steps.
+        tr.fit(&ds, 1);
+        let mut i = 0usize;
+        let mut metrics = ltls::train::metrics::EpochMetrics::default();
+        let stats = bench.run(&format!("sgd step  C=2^{exp}"), || {
+            i = (i + 1) % ds.n_examples();
+            tr.step(ds.row(i), ds.labels_of(i), &mut metrics)
+        });
+        let _ = stats;
+    }
+
+    Bench::header("SGD step latency vs nnz (C=4096, D=20000)");
+    for nnz in [10usize, 40, 160] {
+        let density = nnz as f64 / 20_000.0;
+        let ds = SyntheticSpec::multiclass(2_000, 20_000, 4096)
+            .teacher(ltls::data::synthetic::TeacherKind::Nonlinear)
+            .density(density)
+            .seed(9)
+            .generate();
+        let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+        tr.fit(&ds, 1);
+        let mut i = 0usize;
+        let mut metrics = ltls::train::metrics::EpochMetrics::default();
+        bench.run(&format!("sgd step  nnz~{nnz}"), || {
+            i = (i + 1) % ds.n_examples();
+            tr.step(ds.row(i), ds.labels_of(i), &mut metrics)
+        });
+    }
+}

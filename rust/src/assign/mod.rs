@@ -1,0 +1,14 @@
+//! Label→path assignment (paper §5.1).
+//!
+//! The decompression matrix `M_G` is fixed, so *which* dataset label gets
+//! *which* trellis path matters. The paper's online policy: when a training
+//! example arrives with an unseen label, list-Viterbi the top `m = O(log C)`
+//! paths for that example and assign the label to the highest-ranked free
+//! path; if none of the m are free, assign a random free path. The
+//! path-occupancy table costs `O(C)` memory but holds no model parameters.
+
+pub mod policy;
+pub mod table;
+
+pub use policy::{AssignPolicy, Assigner};
+pub use table::AssignmentTable;

@@ -1,0 +1,156 @@
+//! The online assignment policies of §5.1.
+
+use super::table::AssignmentTable;
+use crate::decode::list_viterbi;
+use crate::graph::Trellis;
+use crate::util::rng::Rng;
+
+/// Which policy to use when an unseen label arrives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AssignPolicy {
+    /// Paper policy: top-m list-Viterbi, first free path wins; random free
+    /// fallback. `m = O(log C)` (we use `4·⌈log₂C⌉`, capped at 64).
+    TopRanked,
+    /// Ablation: always a random free path (the paper reports this is
+    /// significantly worse).
+    Random,
+    /// Identity: label ℓ ↔ path ℓ (only valid when n_labels ≤ C; used by
+    /// tests and by the deep variant where JAX fixes the mapping).
+    Identity,
+}
+
+/// Stateful assigner owned by the trainer.
+pub struct Assigner {
+    pub policy: AssignPolicy,
+    pub table: AssignmentTable,
+    m: usize,
+    rng: Rng,
+    /// Count of assignments that fell back to random (telemetry).
+    pub random_fallbacks: u64,
+}
+
+impl Assigner {
+    pub fn new(policy: AssignPolicy, n_labels: usize, t: &Trellis, seed: u64) -> Self {
+        let m = (4 * crate::util::ceil_log2(t.c) as usize).clamp(4, 64);
+        Assigner {
+            policy,
+            table: AssignmentTable::new(n_labels, t.c),
+            m,
+            rng: Rng::new(seed ^ 0xA551_6E),
+            random_fallbacks: 0,
+        }
+    }
+
+    /// Path for `label`, assigning it now (using the example's edge scores
+    /// `h`) if it was never seen before.
+    pub fn path_for(&mut self, t: &Trellis, h: &[f32], label: u32) -> u64 {
+        if let Some(p) = self.table.path_of(label) {
+            return p;
+        }
+        let path = match self.policy {
+            AssignPolicy::Identity => {
+                let p = label as u64;
+                assert!(
+                    self.table.is_free(p),
+                    "identity policy requires free path per label"
+                );
+                p
+            }
+            AssignPolicy::Random => {
+                self.random_fallbacks += 1;
+                self.table.random_free(&mut self.rng).expect("paths exhausted")
+            }
+            AssignPolicy::TopRanked => {
+                let top = list_viterbi(t, h, self.m);
+                match top.iter().find(|s| self.table.is_free(s.label)) {
+                    Some(s) => s.label,
+                    None => {
+                        self.random_fallbacks += 1;
+                        self.table.random_free(&mut self.rng).expect("paths exhausted")
+                    }
+                }
+            }
+        };
+        self.table.bind(label, path);
+        path
+    }
+
+    /// Paths for a label set (multilabel): assigns any unseen ones.
+    pub fn paths_for(&mut self, t: &Trellis, h: &[f32], labels: &[u32]) -> Vec<u64> {
+        labels.iter().map(|&l| self.path_for(t, h, l)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng as TRng;
+
+    fn scores(t: &Trellis, seed: u64) -> Vec<f32> {
+        let mut r = TRng::new(seed);
+        (0..t.num_edges()).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn top_ranked_assigns_best_free_path() {
+        let t = Trellis::new(22);
+        let mut a = Assigner::new(AssignPolicy::TopRanked, 22, &t, 1);
+        let h = scores(&t, 5);
+        let best = crate::decode::viterbi(&t, &h).label;
+        let p0 = a.path_for(&t, &h, 3);
+        assert_eq!(p0, best, "first unseen label gets the Viterbi path");
+        // Second distinct label with same scores gets the runner-up.
+        let top = list_viterbi(&t, &h, 2);
+        let p1 = a.path_for(&t, &h, 9);
+        assert_eq!(p1, top[1].label);
+        // Stable: repeated lookups don't reassign.
+        assert_eq!(a.path_for(&t, &h, 3), p0);
+    }
+
+    #[test]
+    fn random_policy_counts_fallbacks() {
+        let t = Trellis::new(105);
+        let mut a = Assigner::new(AssignPolicy::Random, 105, &t, 2);
+        let h = scores(&t, 6);
+        for l in 0..50u32 {
+            a.path_for(&t, &h, l);
+        }
+        assert_eq!(a.random_fallbacks, 50);
+        assert_eq!(a.table.n_assigned(), 50);
+    }
+
+    #[test]
+    fn identity_policy_maps_straight_through() {
+        let t = Trellis::new(22);
+        let mut a = Assigner::new(AssignPolicy::Identity, 22, &t, 3);
+        let h = scores(&t, 7);
+        for l in [0u32, 7, 21] {
+            assert_eq!(a.path_for(&t, &h, l), l as u64);
+        }
+    }
+
+    #[test]
+    fn exhaustion_falls_back_to_random_free() {
+        // C = n_labels: once top-m are taken, fallback must still succeed.
+        let t = Trellis::new(8);
+        let mut a = Assigner::new(AssignPolicy::TopRanked, 8, &t, 4);
+        let h = scores(&t, 8);
+        let mut paths: Vec<u64> = (0..8u32).map(|l| a.path_for(&t, &h, l)).collect();
+        paths.sort_unstable();
+        paths.dedup();
+        assert_eq!(paths.len(), 8, "all labels got distinct paths");
+    }
+
+    #[test]
+    fn multilabel_assignment() {
+        let t = Trellis::new(159);
+        let mut a = Assigner::new(AssignPolicy::TopRanked, 159, &t, 5);
+        let h = scores(&t, 9);
+        let ps = a.paths_for(&t, &h, &[3, 14, 15]);
+        assert_eq!(ps.len(), 3);
+        let mut d = ps.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 3);
+    }
+}

@@ -1,0 +1,168 @@
+//! Bidirectional label ↔ path table with O(1) random free-path sampling.
+
+use crate::util::rng::Rng;
+
+const UNASSIGNED: u64 = u64::MAX;
+
+/// Bijective (partial) mapping between dataset labels and trellis paths.
+#[derive(Clone, Debug)]
+pub struct AssignmentTable {
+    /// label → path (UNASSIGNED if none yet).
+    label_to_path: Vec<u64>,
+    /// path → label (UNASSIGNED if free).
+    path_to_label: Vec<u64>,
+    /// Free paths as a swap-remove pool + position index for O(1) claims.
+    free_pool: Vec<u64>,
+    free_pos: Vec<usize>,
+}
+
+impl AssignmentTable {
+    /// `n_labels` dataset labels over `c` trellis paths (`n_labels ≤ c`).
+    pub fn new(n_labels: usize, c: u64) -> Self {
+        assert!(n_labels as u64 <= c, "need at least as many paths as labels");
+        AssignmentTable {
+            label_to_path: vec![UNASSIGNED; n_labels],
+            path_to_label: vec![UNASSIGNED; c as usize],
+            free_pool: (0..c).collect(),
+            free_pos: (0..c as usize).collect(),
+        }
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free_pool.len()
+    }
+
+    /// Path assigned to `label`, if any.
+    #[inline]
+    pub fn path_of(&self, label: u32) -> Option<u64> {
+        let p = self.label_to_path[label as usize];
+        (p != UNASSIGNED).then_some(p)
+    }
+
+    /// Label assigned to `path`, if any.
+    #[inline]
+    pub fn label_of(&self, path: u64) -> Option<u32> {
+        let l = self.path_to_label[path as usize];
+        (l != UNASSIGNED).then_some(l as u32)
+    }
+
+    #[inline]
+    pub fn is_free(&self, path: u64) -> bool {
+        self.path_to_label[path as usize] == UNASSIGNED
+    }
+
+    /// Claim `path` for `label`. Panics if either side is already bound
+    /// (callers check first).
+    pub fn bind(&mut self, label: u32, path: u64) {
+        assert!(self.label_to_path[label as usize] == UNASSIGNED, "label already bound");
+        assert!(self.is_free(path), "path already bound");
+        self.label_to_path[label as usize] = path;
+        self.path_to_label[path as usize] = label as u64;
+        // Swap-remove from the free pool.
+        let pos = self.free_pos[path as usize];
+        let last = *self.free_pool.last().unwrap();
+        self.free_pool.swap_remove(pos);
+        if pos < self.free_pool.len() {
+            self.free_pos[last as usize] = pos;
+        }
+    }
+
+    /// A uniformly random free path (None if full).
+    pub fn random_free(&self, rng: &mut Rng) -> Option<u64> {
+        if self.free_pool.is_empty() {
+            None
+        } else {
+            Some(self.free_pool[rng.index(self.free_pool.len())])
+        }
+    }
+
+    /// Number of labels already assigned.
+    pub fn n_assigned(&self) -> usize {
+        self.path_to_label.len() - self.free_pool.len()
+    }
+
+    /// Iterate (label, path) pairs.
+    pub fn pairs(&self) -> impl Iterator<Item = (u32, u64)> + '_ {
+        self.label_to_path
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p != UNASSIGNED)
+            .map(|(l, &p)| (l as u32, p))
+    }
+
+    /// Memory used (the paper's "O(C) but not model parameters" note).
+    pub fn bytes(&self) -> usize {
+        (self.label_to_path.len() + self.path_to_label.len() + self.free_pool.len()) * 8
+            + self.free_pos.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_and_lookup() {
+        let mut t = AssignmentTable::new(3, 10);
+        assert_eq!(t.n_free(), 10);
+        t.bind(1, 7);
+        assert_eq!(t.path_of(1), Some(7));
+        assert_eq!(t.label_of(7), Some(1));
+        assert!(!t.is_free(7));
+        assert_eq!(t.n_free(), 9);
+        assert_eq!(t.n_assigned(), 1);
+        assert_eq!(t.path_of(0), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_bind_label_panics() {
+        let mut t = AssignmentTable::new(2, 4);
+        t.bind(0, 1);
+        t.bind(0, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_bind_path_panics() {
+        let mut t = AssignmentTable::new(2, 4);
+        t.bind(0, 1);
+        t.bind(1, 1);
+    }
+
+    #[test]
+    fn random_free_never_returns_bound() {
+        let mut t = AssignmentTable::new(8, 8);
+        let mut rng = Rng::new(81);
+        for l in 0..7u32 {
+            let p = t.random_free(&mut rng).unwrap();
+            t.bind(l, p);
+        }
+        assert_eq!(t.n_free(), 1);
+        let last = t.random_free(&mut rng).unwrap();
+        assert!(t.is_free(last));
+        t.bind(7, last);
+        assert!(t.random_free(&mut rng).is_none());
+        // All bound paths distinct.
+        let mut paths: Vec<u64> = t.pairs().map(|(_, p)| p).collect();
+        paths.sort_unstable();
+        paths.dedup();
+        assert_eq!(paths.len(), 8);
+    }
+
+    /// Free-pool positional index stays consistent under many binds.
+    #[test]
+    fn free_pool_consistency_fuzz() {
+        let mut t = AssignmentTable::new(100, 150);
+        let mut rng = Rng::new(82);
+        for l in 0..100u32 {
+            let p = t.random_free(&mut rng).unwrap();
+            t.bind(l, p);
+            // Invariant: every pool entry's recorded position is correct.
+            for (pos, &path) in t.free_pool.iter().enumerate() {
+                assert_eq!(t.free_pos[path as usize], pos);
+            }
+        }
+        assert_eq!(t.n_free(), 50);
+    }
+}

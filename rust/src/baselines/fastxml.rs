@@ -1,0 +1,260 @@
+//! FastXML-style tree ensemble (Prabhu & Varma, KDD 2014), simplified.
+//!
+//! Each tree recursively splits its training rows with a data-aware random
+//! hyperplane (the normalized difference of two example centroids seeded
+//! from random rows — a cheap surrogate for FastXML's nDCG-optimized
+//! split) until a node holds few examples, then stores the node's top
+//! label distribution. Prediction averages the leaf distributions of all
+//! trees. Model size is the stored hyperplanes + leaf distributions,
+//! which reproduces the paper's "FastXML models are large" column.
+
+use crate::data::Dataset;
+use crate::eval::Predictor;
+use crate::sparse::SparseVec;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// A split hyperplane stored sparsely.
+struct Split {
+    idx: Vec<u32>,
+    val: Vec<f32>,
+    bias: f32,
+}
+
+impl Split {
+    fn side(&self, x: SparseVec) -> bool {
+        // Sparse-sparse dot.
+        let (mut i, mut j, mut acc) = (0usize, 0usize, self.bias);
+        while i < x.indices.len() && j < self.idx.len() {
+            match x.indices[i].cmp(&self.idx[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += x.values[i] * self.val[j];
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        acc >= 0.0
+    }
+}
+
+enum TreeNode {
+    Internal { split: Split, left: usize, right: usize },
+    Leaf { dist: Vec<(u32, f32)> },
+}
+
+struct Tree {
+    nodes: Vec<TreeNode>,
+}
+
+/// Hyperparameters.
+#[derive(Clone, Debug)]
+pub struct FastXmlConfig {
+    pub n_trees: usize,
+    pub max_leaf: usize,
+    pub max_depth: u32,
+    /// Labels kept per leaf distribution.
+    pub leaf_topk: usize,
+    pub seed: u64,
+}
+
+impl Default for FastXmlConfig {
+    fn default() -> Self {
+        FastXmlConfig { n_trees: 8, max_leaf: 10, max_depth: 24, leaf_topk: 10, seed: 7 }
+    }
+}
+
+/// The trained ensemble.
+pub struct FastXml {
+    trees: Vec<Tree>,
+    name: String,
+}
+
+impl FastXml {
+    pub fn train(ds: &Dataset, cfg: &FastXmlConfig) -> Self {
+        let mut trees = Vec::with_capacity(cfg.n_trees);
+        for t in 0..cfg.n_trees {
+            let mut rng = Rng::new(cfg.seed ^ (t as u64).wrapping_mul(0x9E37_79B9));
+            // Bagging: sample rows with replacement.
+            let n = ds.n_examples();
+            let rows: Vec<usize> = (0..n).map(|_| rng.index(n)).collect();
+            let mut tree = Tree { nodes: Vec::new() };
+            build(&mut tree, ds, rows, 0, cfg, &mut rng);
+            trees.push(tree);
+        }
+        FastXml { trees, name: "FastXML".into() }
+    }
+}
+
+/// Recursively build; returns node index.
+fn build(
+    tree: &mut Tree,
+    ds: &Dataset,
+    rows: Vec<usize>,
+    depth: u32,
+    cfg: &FastXmlConfig,
+    rng: &mut Rng,
+) -> usize {
+    if rows.len() <= cfg.max_leaf || depth >= cfg.max_depth {
+        return make_leaf(tree, ds, &rows, cfg);
+    }
+    // Data-aware random hyperplane: difference of two random rows.
+    let split = make_split(ds, &rows, rng);
+    let (mut left_rows, mut right_rows) = (Vec::new(), Vec::new());
+    for &r in &rows {
+        if split.side(ds.row(r)) {
+            right_rows.push(r);
+        } else {
+            left_rows.push(r);
+        }
+    }
+    if left_rows.is_empty() || right_rows.is_empty() {
+        return make_leaf(tree, ds, &rows, cfg);
+    }
+    let id = tree.nodes.len();
+    tree.nodes.push(TreeNode::Leaf { dist: Vec::new() }); // placeholder
+    let left = build(tree, ds, left_rows, depth + 1, cfg, rng);
+    let right = build(tree, ds, right_rows, depth + 1, cfg, rng);
+    tree.nodes[id] = TreeNode::Internal { split, left, right };
+    id
+}
+
+fn make_split(ds: &Dataset, rows: &[usize], rng: &mut Rng) -> Split {
+    let a = ds.row(rows[rng.index(rows.len())]);
+    let b = ds.row(rows[rng.index(rows.len())]);
+    // w = a − b, sparse merge.
+    let mut map: HashMap<u32, f32> = HashMap::new();
+    for (&i, &v) in a.indices.iter().zip(a.values) {
+        *map.entry(i).or_insert(0.0) += v;
+    }
+    for (&i, &v) in b.indices.iter().zip(b.values) {
+        *map.entry(i).or_insert(0.0) -= v;
+    }
+    let mut pairs: Vec<(u32, f32)> = map.into_iter().filter(|(_, v)| *v != 0.0).collect();
+    if pairs.is_empty() {
+        // Degenerate identical rows: random axis.
+        pairs.push((rng.below(ds.n_features as u64) as u32, 1.0));
+    }
+    pairs.sort_by_key(|p| p.0);
+    let norm = pairs.iter().map(|(_, v)| v * v).sum::<f32>().sqrt().max(1e-12);
+    Split {
+        idx: pairs.iter().map(|p| p.0).collect(),
+        val: pairs.iter().map(|p| p.1 / norm).collect(),
+        bias: (rng.f32() - 0.5) * 0.1,
+    }
+}
+
+fn make_leaf(tree: &mut Tree, ds: &Dataset, rows: &[usize], cfg: &FastXmlConfig) -> usize {
+    let mut hist: HashMap<u32, u32> = HashMap::new();
+    for &r in rows {
+        for &l in ds.labels_of(r) {
+            *hist.entry(l).or_insert(0) += 1;
+        }
+    }
+    let total: u32 = hist.values().sum();
+    let mut dist: Vec<(u32, f32)> =
+        hist.into_iter().map(|(l, c)| (l, c as f32 / total.max(1) as f32)).collect();
+    dist.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    dist.truncate(cfg.leaf_topk);
+    let id = tree.nodes.len();
+    tree.nodes.push(TreeNode::Leaf { dist });
+    id
+}
+
+impl Tree {
+    fn leaf_dist(&self, x: SparseVec) -> &[(u32, f32)] {
+        let mut id = 0usize;
+        loop {
+            match &self.nodes[id] {
+                TreeNode::Internal { split, left, right } => {
+                    id = if split.side(x) { *right } else { *left };
+                }
+                TreeNode::Leaf { dist } => return dist,
+            }
+        }
+    }
+}
+
+impl Predictor for FastXml {
+    fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
+        let mut agg: HashMap<u32, f32> = HashMap::new();
+        for t in &self.trees {
+            for &(l, p) in t.leaf_dist(x) {
+                *agg.entry(l).or_insert(0.0) += p;
+            }
+        }
+        let mut out: Vec<(u32, f32)> =
+            agg.into_iter().map(|(l, p)| (l, p / self.trees.len() as f32)).collect();
+        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        out.truncate(k);
+        out
+    }
+
+    fn model_bytes(&self) -> usize {
+        self.trees
+            .iter()
+            .map(|t| {
+                t.nodes
+                    .iter()
+                    .map(|n| match n {
+                        TreeNode::Internal { split, .. } => split.idx.len() * 8 + 12,
+                        TreeNode::Leaf { dist } => dist.len() * 8,
+                    })
+                    .sum::<usize>()
+            })
+            .sum()
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::eval::precision_at_1;
+
+    #[test]
+    fn learns_multiclass() {
+        let ds = SyntheticSpec::multiclass(2000, 600, 20).noise(0.02).seed(10).generate();
+        let (train, test) = crate::data::split::random_split(&ds, 0.2, 2);
+        let fx = FastXml::train(&train, &FastXmlConfig::default());
+        let p1 = precision_at_1(&fx, &test);
+        assert!(p1 > 0.5, "FastXML p@1 = {p1}");
+    }
+
+    #[test]
+    fn learns_multilabel() {
+        let ds = SyntheticSpec::multilabel(1500, 500, 30, 2).seed(11).generate();
+        let (train, test) = crate::data::split::random_split(&ds, 0.2, 3);
+        let fx = FastXml::train(&train, &FastXmlConfig { n_trees: 5, ..Default::default() });
+        let p1 = precision_at_1(&fx, &test);
+        assert!(p1 > 0.3, "FastXML multilabel p@1 = {p1}");
+    }
+
+    #[test]
+    fn ensemble_size_grows_model() {
+        let ds = SyntheticSpec::multiclass(300, 200, 10).seed(12).generate();
+        let small = FastXml::train(&ds, &FastXmlConfig { n_trees: 2, ..Default::default() });
+        let large = FastXml::train(&ds, &FastXmlConfig { n_trees: 8, ..Default::default() });
+        assert!(large.model_bytes() > small.model_bytes());
+    }
+
+    #[test]
+    fn topk_is_sorted_probabilities() {
+        let ds = SyntheticSpec::multiclass(400, 300, 12).seed(13).generate();
+        let fx = FastXml::train(&ds, &FastXmlConfig { n_trees: 3, ..Default::default() });
+        let top = fx.topk(ds.row(0), 5);
+        assert!(!top.is_empty());
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        for (_, p) in &top {
+            assert!((0.0..=1.0 + 1e-6).contains(p));
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! Every method the paper compares against (§6, Tables 1–3), implemented
+//! from scratch on the same [`crate::data::Dataset`] substrate and exposed
+//! through the same [`crate::eval::Predictor`] trait so the table
+//! harnesses are generic:
+//!
+//! * [`logistic`] — binary L2-regularized logistic regression by SGD (the
+//!   building block of the naive baseline).
+//! * [`naive_topk`] — Table 3: one-vs-all LR over the `E` most frequent
+//!   labels, plus the frequency "oracle" upper bound.
+//! * [`ova`] — full One-Vs-All linear (the reference point of §1; `O(C·D)`
+//!   space, `O(C)` predict).
+//! * [`lomtree`] — LOMtree-style online logarithmic-time multiclass tree
+//!   (Choromanska & Langford, 2015), simplified: online balanced router
+//!   training, `O(C)` nodes.
+//! * [`fastxml`] — FastXML-style ensemble of balanced random-hyperplane
+//!   trees with label-distribution leaves (Prabhu & Varma, 2014).
+//! * [`leml`] — LEML-style low-rank embedding (Yu et al., 2014):
+//!   rank-r label embedding + ridge regression, `O(C·r)` decode.
+
+pub mod fastxml;
+pub mod leml;
+pub mod logistic;
+pub mod lomtree;
+pub mod naive_topk;
+pub mod ova;
+pub mod plt;
+
+pub use fastxml::FastXml;
+pub use leml::Leml;
+pub use lomtree::LomTree;
+pub use naive_topk::{NaiveTopK, OracleTopK};
+pub use ova::Ova;
+pub use plt::Plt;

@@ -1,0 +1,184 @@
+//! Table 3's naive baseline: "a 1-vs-All classifier for E most frequent
+//! labels in each dataset ... L2-regularized Logistic Regression with
+//! tuned regularization constant", plus the *oracle* upper bound (best
+//! achievable by any predictor restricted to those E labels).
+
+use super::logistic::BinaryLogistic;
+use crate::data::Dataset;
+use crate::eval::Predictor;
+use crate::sparse::SparseVec;
+
+/// The `E` most frequent labels of a dataset, most frequent first.
+pub fn top_e_labels(ds: &Dataset, e: usize) -> Vec<u32> {
+    let freqs = ds.label_frequencies();
+    let mut order: Vec<u32> = (0..ds.n_labels as u32).collect();
+    order.sort_by_key(|&l| std::cmp::Reverse(freqs[l as usize]));
+    order.truncate(e);
+    order
+}
+
+/// OVA logistic regression restricted to the top-E labels.
+pub struct NaiveTopK {
+    pub labels: Vec<u32>,
+    models: Vec<BinaryLogistic>,
+}
+
+impl NaiveTopK {
+    /// Train with `epochs` SGD passes; `l2` candidates are tuned on a
+    /// held-out fifth of the training data (paper: "tuned regularization
+    /// constant").
+    pub fn train(ds: &Dataset, e: usize, epochs: usize, l2_candidates: &[f32]) -> Self {
+        let labels = top_e_labels(ds, e);
+        let (tr_rows, va_rows) = crate::data::split::fold_rows(ds.n_examples(), 5, 0);
+        let mut best: Option<(f64, Vec<BinaryLogistic>)> = None;
+        for &l2 in l2_candidates {
+            let models = Self::fit(ds, &labels, &tr_rows, epochs, l2);
+            let acc = Self::validate(ds, &labels, &models, &va_rows);
+            if best.as_ref().map(|(b, _)| acc > *b).unwrap_or(true) {
+                best = Some((acc, models));
+            }
+        }
+        // Refit on everything with the winning λ is skipped (the paper's
+        // baseline is intentionally naive); keep the tuned models.
+        NaiveTopK { labels, models: best.unwrap().1 }
+    }
+
+    fn fit(
+        ds: &Dataset,
+        labels: &[u32],
+        rows: &[usize],
+        epochs: usize,
+        l2: f32,
+    ) -> Vec<BinaryLogistic> {
+        let mut models: Vec<BinaryLogistic> =
+            labels.iter().map(|_| BinaryLogistic::new(ds.n_features, l2, 0.5)).collect();
+        let mut t = 0u64;
+        for _ in 0..epochs {
+            for &r in rows {
+                t += 1;
+                let x = ds.row(r);
+                let ls = ds.labels_of(r);
+                for (mi, &l) in labels.iter().enumerate() {
+                    models[mi].step(x, ls.contains(&l), t);
+                }
+            }
+        }
+        models
+    }
+
+    fn validate(
+        ds: &Dataset,
+        labels: &[u32],
+        models: &[BinaryLogistic],
+        rows: &[usize],
+    ) -> f64 {
+        if rows.is_empty() {
+            return 0.0;
+        }
+        let mut hits = 0usize;
+        for &r in rows {
+            let x = ds.row(r);
+            let best = models
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.margin(x).partial_cmp(&b.1.margin(x)).unwrap())
+                .map(|(i, _)| labels[i])
+                .unwrap();
+            if ds.labels_of(r).contains(&best) {
+                hits += 1;
+            }
+        }
+        hits as f64 / rows.len() as f64
+    }
+}
+
+impl Predictor for NaiveTopK {
+    fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
+        let mut scored: Vec<(u32, f32)> = self
+            .labels
+            .iter()
+            .zip(&self.models)
+            .map(|(&l, m)| (l, m.margin(x)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        scored.truncate(k);
+        scored
+    }
+    fn model_bytes(&self) -> usize {
+        self.models.iter().map(|m| m.bytes()).sum()
+    }
+    fn name(&self) -> &str {
+        "top-#edges LR"
+    }
+}
+
+/// The Table 3 "oracle": for each example, counts a hit if *any* true
+/// label is inside the top-E frequent set — the ceiling for any predictor
+/// restricted to those labels. Not a real predictor (it peeks at the
+/// labels), so it is exposed as a direct scoring function.
+pub struct OracleTopK {
+    pub labels: Vec<u32>,
+}
+
+impl OracleTopK {
+    pub fn from_train(ds: &Dataset, e: usize) -> Self {
+        OracleTopK { labels: top_e_labels(ds, e) }
+    }
+
+    /// Upper-bound precision@1 on a test set.
+    pub fn precision_at_1(&self, test: &Dataset) -> f64 {
+        if test.n_examples() == 0 {
+            return 0.0;
+        }
+        let inset: std::collections::HashSet<u32> = self.labels.iter().copied().collect();
+        let hits = (0..test.n_examples())
+            .filter(|&i| test.labels_of(i).iter().any(|l| inset.contains(l)))
+            .count();
+        hits as f64 / test.n_examples() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::eval::precision_at_1;
+
+    #[test]
+    fn top_e_labels_are_most_frequent() {
+        let ds = SyntheticSpec::multiclass(1000, 500, 30).skew(1.2).seed(1).generate();
+        let freqs = ds.label_frequencies();
+        let top = top_e_labels(&ds, 5);
+        assert_eq!(top.len(), 5);
+        let min_top = top.iter().map(|&l| freqs[l as usize]).min().unwrap();
+        let max_rest = (0..30u32)
+            .filter(|l| !top.contains(l))
+            .map(|l| freqs[l as usize])
+            .max()
+            .unwrap();
+        assert!(min_top >= max_rest);
+    }
+
+    #[test]
+    fn oracle_bounds_naive_lr() {
+        let ds = SyntheticSpec::multiclass(2000, 800, 40).skew(1.0).noise(0.02).seed(2).generate();
+        let (train, test) = crate::data::split::random_split(&ds, 0.25, 3);
+        let e = 12;
+        let naive = NaiveTopK::train(&train, e, 3, &[1e-5, 1e-3]);
+        let oracle = OracleTopK::from_train(&train, e);
+        let p_naive = precision_at_1(&naive, &test);
+        let p_oracle = oracle.precision_at_1(&test);
+        assert!(p_naive <= p_oracle + 1e-9, "naive {p_naive} > oracle {p_oracle}");
+        assert!(p_oracle < 1.0, "restricting to 12/40 labels must lose something");
+        assert!(p_naive > 0.08, "LR should beat chance: {p_naive}");
+    }
+
+    #[test]
+    fn oracle_is_coverage() {
+        let ds = SyntheticSpec::multiclass(500, 300, 10).seed(4).generate();
+        let oracle = OracleTopK { labels: (0..10).collect() };
+        assert!((oracle.precision_at_1(&ds) - 1.0).abs() < 1e-12);
+        let none = OracleTopK { labels: vec![] };
+        assert_eq!(none.precision_at_1(&ds), 0.0);
+    }
+}

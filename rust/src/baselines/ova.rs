@@ -1,0 +1,105 @@
+//! Full One-Vs-All linear classifier — the `O(C·D)` reference point the
+//! paper positions LTLS against (§1). Trained with the multiclass
+//! perceptron-style hinge (positive vs best-violating negative), which is
+//! the OVA analogue of the separation ranking loss.
+
+use crate::data::Dataset;
+use crate::eval::Predictor;
+use crate::sparse::SparseVec;
+use crate::util::rng::Rng;
+
+/// Dense `C × D` OVA model. Only feasible for the smaller analogs.
+pub struct Ova {
+    pub c: usize,
+    pub d: usize,
+    w: Vec<f32>,
+}
+
+impl Ova {
+    pub fn train(ds: &Dataset, epochs: usize, lr: f32, seed: u64) -> Self {
+        let (c, d) = (ds.n_labels, ds.n_features);
+        let mut w = vec![0.0f32; c * d];
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..ds.n_examples()).collect();
+        let mut t = 0u64;
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            for &r in &order {
+                t += 1;
+                let x = ds.row(r);
+                let ls = ds.labels_of(r);
+                if ls.is_empty() {
+                    continue;
+                }
+                let eta = lr / (1.0 + 1e-4 * t as f32).powf(0.75);
+                // Scores of all classes: O(C·nnz).
+                let (mut best_neg, mut best_neg_s) = (usize::MAX, f32::NEG_INFINITY);
+                let (mut worst_pos, mut worst_pos_s) = (usize::MAX, f32::INFINITY);
+                for l in 0..c {
+                    let s = x.dot_dense(&w[l * d..(l + 1) * d]);
+                    if ls.contains(&(l as u32)) {
+                        if s < worst_pos_s {
+                            worst_pos = l;
+                            worst_pos_s = s;
+                        }
+                    } else if s > best_neg_s {
+                        best_neg = l;
+                        best_neg_s = s;
+                    }
+                }
+                if worst_pos != usize::MAX
+                    && best_neg != usize::MAX
+                    && 1.0 + best_neg_s - worst_pos_s > 0.0
+                {
+                    x.axpy_into(eta, &mut w[worst_pos * d..(worst_pos + 1) * d]);
+                    x.axpy_into(-eta, &mut w[best_neg * d..(best_neg + 1) * d]);
+                }
+            }
+        }
+        Ova { c, d, w }
+    }
+}
+
+impl Predictor for Ova {
+    fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
+        let mut best: Vec<(u32, f32)> = Vec::with_capacity(k + 1);
+        for l in 0..self.c {
+            let s = x.dot_dense(&self.w[l * self.d..(l + 1) * self.d]);
+            if best.len() < k || s > best.last().unwrap().1 {
+                best.push((l as u32, s));
+                best.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+                best.truncate(k);
+            }
+        }
+        best
+    }
+    fn model_bytes(&self) -> usize {
+        self.w.len() * 4
+    }
+    fn name(&self) -> &str {
+        "OVA"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::eval::precision_at_1;
+
+    #[test]
+    fn ova_learns_separable_data() {
+        let ds = SyntheticSpec::multiclass(1500, 600, 24).noise(0.02).seed(5).generate();
+        let (train, test) = crate::data::split::random_split(&ds, 0.2, 1);
+        let ova = Ova::train(&train, 4, 0.5, 7);
+        let p1 = precision_at_1(&ova, &test);
+        assert!(p1 > 0.85, "OVA p@1 = {p1}");
+    }
+
+    #[test]
+    fn model_size_is_c_times_d() {
+        let ds = SyntheticSpec::multiclass(200, 100, 10).seed(6).generate();
+        let ova = Ova::train(&ds, 1, 0.5, 8);
+        assert_eq!(ova.model_bytes(), 10 * 100 * 4);
+    }
+}

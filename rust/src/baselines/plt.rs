@@ -1,0 +1,208 @@
+//! PLT — Probabilistic Label Tree baseline (Jasinska et al., ICML 2016 —
+//! the paper's reference [5], called out in §1 as having `O(log C)`
+//! *training* but not `O(log C)` prediction).
+//!
+//! A complete binary tree over labels; every node `v` holds a binary
+//! probabilistic classifier estimating `P(v | parent(v), x)`. Training is
+//! logarithmic (an example updates the nodes on its labels' root→leaf
+//! paths plus their siblings); prediction does beam search / threshold
+//! expansion down the tree, which in the worst case is **not**
+//! logarithmic — exactly the complexity contrast the paper draws with
+//! LTLS, which this implementation lets the benches demonstrate.
+
+use super::logistic::sigmoid;
+use crate::data::Dataset;
+use crate::eval::Predictor;
+use crate::sparse::SparseVec;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Probabilistic label tree with sparse node weights.
+pub struct Plt {
+    /// Leaf offset: leaves occupy ids `n_internal ..` in heap order.
+    n_internal: usize,
+    depth: u32,
+    /// Sparse weights per node.
+    w: Vec<HashMap<u32, f32>>,
+    bias: Vec<f32>,
+    /// Heap leaf index → dataset label (identity here; labels ≤ leaves).
+    n_labels: usize,
+    /// Beam width at prediction time.
+    pub beam: usize,
+    name: String,
+}
+
+impl Plt {
+    /// Train with `epochs` online passes.
+    pub fn train(ds: &Dataset, epochs: usize, lr: f32, seed: u64) -> Self {
+        let depth = crate::util::ceil_log2(ds.n_labels.max(2) as u64);
+        let n_internal = (1usize << depth) - 1;
+        let n_nodes = n_internal + (1usize << depth);
+        let mut plt = Plt {
+            n_internal,
+            depth,
+            w: (0..n_nodes).map(|_| HashMap::new()).collect(),
+            bias: vec![0.0; n_nodes],
+            n_labels: ds.n_labels,
+            beam: 16,
+            name: "PLT".into(),
+        };
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..ds.n_examples()).collect();
+        let mut t = 0u64;
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            for &r in &order {
+                t += 1;
+                plt.update(ds.row(r), ds.labels_of(r), lr, t);
+            }
+        }
+        plt
+    }
+
+    fn leaf_of(&self, label: u32) -> usize {
+        self.n_internal + label as usize
+    }
+
+    fn margin(&self, node: usize, x: SparseVec) -> f32 {
+        let mut acc = self.bias[node];
+        for (&i, &v) in x.indices.iter().zip(x.values) {
+            if let Some(w) = self.w[node].get(&i) {
+                acc += w * v;
+            }
+        }
+        acc
+    }
+
+    fn sgd(&mut self, node: usize, x: SparseVec, y: bool, lr: f32, t: u64) {
+        let eta = lr / (1.0 + 1e-4 * t as f32).sqrt();
+        let p = sigmoid(self.margin(node, x));
+        let err = p - if y { 1.0 } else { 0.0 };
+        for (&i, &v) in x.indices.iter().zip(x.values) {
+            *self.w[node].entry(i).or_insert(0.0) -= eta * err * v;
+        }
+        self.bias[node] -= eta * err;
+    }
+
+    /// PLT update rule: positive nodes = union of root→leaf paths of the
+    /// true labels; negative nodes = siblings of positive nodes that are
+    /// not positive themselves.
+    fn update(&mut self, x: SparseVec, labels: &[u32], lr: f32, t: u64) {
+        if labels.is_empty() {
+            return;
+        }
+        let mut positive = std::collections::HashSet::new();
+        for &l in labels {
+            let mut v = self.leaf_of(l);
+            loop {
+                positive.insert(v);
+                if v == 0 {
+                    break;
+                }
+                v = (v - 1) / 2;
+            }
+        }
+        let mut negatives = Vec::new();
+        for &v in &positive {
+            if v == 0 {
+                continue;
+            }
+            let sib = if v % 2 == 1 { v + 1 } else { v - 1 };
+            if !positive.contains(&sib) {
+                negatives.push(sib);
+            }
+        }
+        for &v in &positive {
+            self.sgd(v, x, true, lr, t);
+        }
+        for v in negatives {
+            self.sgd(v, x, false, lr, t);
+        }
+    }
+}
+
+impl Predictor for Plt {
+    /// Beam search down the tree by path probability.
+    fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
+        // (log-prob, node)
+        let mut frontier: Vec<(f32, usize)> = vec![(0.0, 0)];
+        for _ in 0..self.depth {
+            let mut next: Vec<(f32, usize)> = Vec::with_capacity(frontier.len() * 2);
+            for &(lp, v) in &frontier {
+                let (l, r) = (2 * v + 1, 2 * v + 2);
+                let pl = sigmoid(self.margin(l, x)).clamp(1e-6, 1.0 - 1e-6);
+                let pr = sigmoid(self.margin(r, x)).clamp(1e-6, 1.0 - 1e-6);
+                next.push((lp + pl.ln(), l));
+                next.push((lp + pr.ln(), r));
+            }
+            next.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            next.truncate(self.beam.max(k));
+            frontier = next;
+        }
+        frontier
+            .into_iter()
+            .filter_map(|(lp, v)| {
+                let label = (v - self.n_internal) as u32;
+                ((label as usize) < self.n_labels).then_some((label, lp.exp()))
+            })
+            .take(k)
+            .collect()
+    }
+
+    fn model_bytes(&self) -> usize {
+        self.w.iter().map(|m| m.len() * 8).sum::<usize>() + self.bias.len() * 4
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::eval::precision_at_1;
+
+    #[test]
+    fn learns_multiclass() {
+        let ds = SyntheticSpec::multiclass(2500, 700, 24).noise(0.02).seed(71).generate();
+        let (train, test) = crate::data::split::random_split(&ds, 0.2, 1);
+        let plt = Plt::train(&train, 5, 0.5, 3);
+        let p1 = precision_at_1(&plt, &test);
+        assert!(p1 > 0.6, "PLT p@1 = {p1}");
+    }
+
+    #[test]
+    fn learns_multilabel() {
+        let ds = SyntheticSpec::multilabel(2000, 600, 32, 2).seed(72).generate();
+        let (train, test) = crate::data::split::random_split(&ds, 0.2, 2);
+        let plt = Plt::train(&train, 5, 0.5, 4);
+        let p1 = precision_at_1(&plt, &test);
+        assert!(p1 > 0.35, "PLT multilabel p@1 = {p1}");
+    }
+
+    #[test]
+    fn topk_probabilities_descend_and_are_valid() {
+        let ds = SyntheticSpec::multiclass(500, 300, 16).seed(73).generate();
+        let plt = Plt::train(&ds, 2, 0.5, 5);
+        let top = plt.topk(ds.row(0), 5);
+        assert!(!top.is_empty());
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        for (l, p) in &top {
+            assert!((*l as usize) < 16);
+            assert!((0.0..=1.0).contains(p));
+        }
+    }
+
+    #[test]
+    fn training_touches_log_many_nodes() {
+        // One example with one label updates ≤ 2·(depth+1) node models.
+        let ds = SyntheticSpec::multiclass(1, 50, 64).seed(74).generate();
+        let plt = Plt::train(&ds, 1, 0.5, 6);
+        let touched = plt.w.iter().filter(|m| !m.is_empty()).count();
+        assert!(touched <= 2 * (plt.depth as usize + 1), "touched {touched}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Dynamic micro-batching: collect requests until `max_batch` or
+//! `max_wait` elapses, whichever first — the standard latency/throughput
+//! dial of serving systems.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A collected batch of items.
+pub struct Batch<T> {
+    pub items: Vec<T>,
+    /// When the oldest item entered the batcher (queueing-latency metric).
+    pub oldest: Instant,
+}
+
+/// Pull one batch from `rx`. Blocks for the first item, then drains until
+/// the size or time bound trips. Returns `None` when the channel closed
+/// and is empty.
+pub fn next_batch<T>(rx: &Receiver<T>, cfg: &BatcherConfig) -> Option<Batch<T>> {
+    let first = rx.recv().ok()?;
+    let oldest = Instant::now();
+    let mut items = vec![first];
+    let deadline = oldest + cfg.max_wait;
+    while items.len() < cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => items.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(Batch { items, oldest })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(50) };
+        let b = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b.items, vec![0, 1, 2, 3]);
+        let b2 = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b2.items.len(), 4);
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let cfg = BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(5) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b.items, vec![1, 2]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn returns_none_on_closed_empty_channel() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatcherConfig::default()).is_none());
+    }
+
+    #[test]
+    fn drains_after_close() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        let b = next_batch(&rx, &BatcherConfig::default()).unwrap();
+        assert_eq!(b.items, vec![7]);
+        assert!(next_batch(&rx, &BatcherConfig::default()).is_none());
+    }
+}

@@ -1,0 +1,89 @@
+//! Serving metrics: shared latency/throughput counters the server threads
+//! update and the driver reads.
+
+use crate::util::timer::LatencyHistogram;
+use std::sync::Mutex;
+
+/// Aggregated serving metrics (interior-mutable; one lock per record is
+//  fine at micro-batch granularity).
+#[derive(Default)]
+pub struct ServingMetrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// End-to-end per-request latency (enqueue → response).
+    request_latency: LatencyHistogram,
+    /// Queueing time of the oldest item per batch.
+    queue_latency: LatencyHistogram,
+    /// Batch execution time.
+    exec_latency: LatencyHistogram,
+    requests: u64,
+    batches: u64,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, batch_size: usize, queue_ns: u64, exec_ns: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue_latency.record_ns(queue_ns);
+        g.exec_latency.record_ns(exec_ns);
+        g.batches += 1;
+        g.requests += batch_size as u64;
+    }
+
+    pub fn record_request_latency(&self, ns: u64) {
+        self.inner.lock().unwrap().request_latency.record_ns(ns);
+    }
+
+    /// (requests, batches, mean batch size).
+    pub fn counts(&self) -> (u64, u64, f64) {
+        let g = self.inner.lock().unwrap();
+        let mean = if g.batches == 0 { 0.0 } else { g.requests as f64 / g.batches as f64 };
+        (g.requests, g.batches, mean)
+    }
+
+    /// Human-readable summary block.
+    pub fn summary(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        format!(
+            "requests={} batches={} mean_batch={:.1}\n  request latency: {}\n  queue  latency: {}\n  exec   latency: {}",
+            g.requests,
+            g.batches,
+            if g.batches == 0 { 0.0 } else { g.requests as f64 / g.batches as f64 },
+            g.request_latency.summary(),
+            g.queue_latency.summary(),
+            g.exec_latency.summary(),
+        )
+    }
+
+    /// Request-latency quantile in ns.
+    pub fn request_quantile_ns(&self, q: f64) -> f64 {
+        self.inner.lock().unwrap().request_latency.quantile_ns(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = ServingMetrics::new();
+        m.record_batch(8, 1_000, 50_000);
+        m.record_batch(4, 2_000, 30_000);
+        for _ in 0..12 {
+            m.record_request_latency(60_000);
+        }
+        let (reqs, batches, mean) = m.counts();
+        assert_eq!(reqs, 12);
+        assert_eq!(batches, 2);
+        assert!((mean - 6.0).abs() < 1e-9);
+        assert!(m.request_quantile_ns(0.5) > 0.0);
+        assert!(m.summary().contains("batches=2"));
+    }
+}

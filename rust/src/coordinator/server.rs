@@ -1,0 +1,207 @@
+//! The prediction server: request channel → dynamic batcher → worker
+//! threads → response channels.
+//!
+//! Routing: sparse requests go to the rust-native LTLS path (per-example
+//! `O(E·nnz + log C)`, batching only amortizes queueing); dense requests
+//! can be routed to the AOT deep model, where batching amortizes the PJRT
+//! dispatch. The server is generic over a [`BatchModel`] so both paths —
+//! and test mocks — plug in.
+
+use super::batcher::{next_batch, BatcherConfig};
+use super::metrics::ServingMetrics;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A prediction request: sparse feature vector + top-k + reply channel.
+pub struct Request {
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+    pub k: usize,
+    pub enqueued: Instant,
+    reply: Sender<Response>,
+}
+
+/// The server's answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub topk: Vec<(u32, f32)>,
+}
+
+/// Anything that can answer a batch of requests at once.
+pub trait BatchModel: Send + Sync + 'static {
+    /// Answer each request (same order as the input).
+    fn predict_batch(&self, batch: &[Request]) -> Vec<Response>;
+    fn name(&self) -> &str;
+}
+
+/// Adapter: any [`crate::eval::Predictor`] serves per-example (the sparse
+/// LTLS path — batching only helps queueing, which is the honest story
+/// for a per-example O(log C) model).
+pub struct SparsePath<P>(pub P);
+
+impl<P: crate::eval::Predictor + Send + Sync + 'static> BatchModel for SparsePath<P> {
+    fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
+        batch
+            .iter()
+            .map(|r| Response {
+                topk: self.0.topk(crate::sparse::SparseVec::new(&r.indices, &r.values), r.k),
+            })
+            .collect()
+    }
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+}
+
+/// Server configuration.
+#[derive(Clone, Debug, Default)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    pub queue_depth: usize,
+}
+
+/// Handle to a running server.
+pub struct PredictServer {
+    tx: SyncSender<Request>,
+    pub metrics: Arc<ServingMetrics>,
+    worker: Option<JoinHandle<()>>,
+    stopping: Arc<AtomicBool>,
+}
+
+impl PredictServer {
+    /// Spawn the worker thread.
+    pub fn start<M: BatchModel>(model: M, cfg: ServerConfig) -> PredictServer {
+        let depth = if cfg.queue_depth == 0 { 1024 } else { cfg.queue_depth };
+        let (tx, rx) = mpsc::sync_channel::<Request>(depth);
+        let metrics = Arc::new(ServingMetrics::new());
+        let stopping = Arc::new(AtomicBool::new(false));
+        let m = Arc::clone(&metrics);
+        let rx = Mutex::new(rx);
+        let bcfg = cfg.batcher.clone();
+        let worker = std::thread::Builder::new()
+            .name("ltls-server".into())
+            .spawn(move || {
+                let rx: Receiver<Request> = rx.into_inner().unwrap();
+                while let Some(batch) = next_batch(&rx, &bcfg) {
+                    let queue_ns = batch.oldest.elapsed().as_nanos() as u64;
+                    let t0 = Instant::now();
+                    let responses = model.predict_batch(&batch.items);
+                    let exec_ns = t0.elapsed().as_nanos() as u64;
+                    m.record_batch(batch.items.len(), queue_ns, exec_ns);
+                    for (req, resp) in batch.items.into_iter().zip(responses) {
+                        m.record_request_latency(req.enqueued.elapsed().as_nanos() as u64);
+                        let _ = req.reply.send(resp);
+                    }
+                }
+            })
+            .expect("spawn server worker");
+        PredictServer { tx, metrics, worker: Some(worker), stopping }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    /// Blocks when the bounded queue is full (backpressure).
+    pub fn submit(&self, indices: Vec<u32>, values: Vec<f32>, k: usize) -> Receiver<Response> {
+        let (reply, rx) = channel();
+        let req = Request { indices, values, k, enqueued: Instant::now(), reply };
+        self.tx.send(req).expect("server stopped");
+        rx
+    }
+
+    /// Blocking convenience call.
+    pub fn predict(&self, indices: Vec<u32>, values: Vec<f32>, k: usize) -> Response {
+        self.submit(indices, values, k).recv().expect("server dropped reply")
+    }
+
+    /// Graceful shutdown: close the queue, join the worker.
+    pub fn shutdown(mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        drop(std::mem::replace(&mut self.tx, {
+            // Replace with a dead sender by building a dummy pair.
+            let (tx, _rx) = mpsc::sync_channel(1);
+            tx
+        }));
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for PredictServer {
+    fn drop(&mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        if let Some(w) = self.worker.take() {
+            // Dropping self.tx happens after drop returns; detach instead
+            // of joining to avoid deadlock if callers forgot shutdown().
+            drop(w);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    struct Echo;
+    impl BatchModel for Echo {
+        fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
+            batch
+                .iter()
+                .map(|r| Response { topk: vec![(r.indices.first().copied().unwrap_or(0), 1.0)] })
+                .collect()
+        }
+        fn name(&self) -> &str {
+            "echo"
+        }
+    }
+
+    #[test]
+    fn serves_requests_and_collects_metrics() {
+        let server = PredictServer::start(
+            Echo,
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+                queue_depth: 64,
+            },
+        );
+        let mut receivers = Vec::new();
+        for i in 0..50u32 {
+            receivers.push(server.submit(vec![i], vec![1.0], 1));
+        }
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.topk[0].0, i as u32);
+        }
+        let (reqs, batches, _) = server.metrics.counts();
+        assert_eq!(reqs, 50);
+        assert!(batches >= 7, "batches={batches}"); // 50/8 → at least 7
+        server.shutdown();
+    }
+
+    #[test]
+    fn blocking_predict_roundtrip() {
+        let server = PredictServer::start(Echo, ServerConfig::default());
+        let r = server.predict(vec![42], vec![1.0], 1);
+        assert_eq!(r.topk, vec![(42, 1.0)]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn sparse_path_adapter_uses_predictor() {
+        use crate::data::synthetic::SyntheticSpec;
+        use crate::train::{TrainConfig, Trainer};
+        let ds = SyntheticSpec::multiclass(400, 500, 16).seed(33).generate();
+        let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+        tr.fit(&ds, 3);
+        let model = tr.into_model();
+        let server = PredictServer::start(SparsePath(model), ServerConfig::default());
+        let row = ds.row(0);
+        let resp = server.predict(row.indices.to_vec(), row.values.to_vec(), 3);
+        assert!(!resp.topk.is_empty());
+        assert!(resp.topk.len() <= 3);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,284 @@
+//! Registry of the paper's nine evaluation datasets as synthetic analogs
+//! (DESIGN.md §3). Shape statistics (C, density, multiclass/multilabel,
+//! teacher regime) follow the paper's Tables 1–2; `n` and `D` are scaled
+//! down (documented per entry) so every table regenerates on a laptop-class
+//! box. Pass `scale = 1.0` for the full analog sizes used in
+//! EXPERIMENTS.md, smaller for smoke tests.
+
+use super::synthetic::{SyntheticSpec, TeacherKind};
+use super::Dataset;
+
+/// One paper dataset analog.
+#[derive(Clone, Debug)]
+pub struct AnalogSpec {
+    pub paper_name: &'static str,
+    /// Paper's (n, D, C) for reference.
+    pub paper_n: usize,
+    pub paper_d: usize,
+    pub paper_c: usize,
+    /// Our scaled (n, D) at scale=1.0 (C is never scaled: it drives E).
+    pub n: usize,
+    pub d: usize,
+    pub density: f64,
+    pub multiclass: bool,
+    pub labels_per_example: usize,
+    pub teacher: TeacherKind,
+    pub noise: f64,
+    pub skew: f64,
+    /// Cluster-pool fraction: 1.0 = separable clusters (LTLS fits),
+    /// small = heavy collisions (LTLS degrades through the E bottleneck).
+    pub pool_frac: f64,
+}
+
+impl AnalogSpec {
+    /// Build the generator spec at a given scale factor (scales n only;
+    /// D and C define the learning problem's shape and stay fixed).
+    pub fn spec(&self, scale: f64, seed: u64) -> SyntheticSpec {
+        let n = ((self.n as f64 * scale).round() as usize).max(200);
+        SyntheticSpec {
+            name: self.paper_name.to_string(),
+            n_examples: n,
+            n_features: self.d,
+            n_labels: self.paper_c,
+            density: self.density,
+            labels_per_example: self.labels_per_example,
+            teacher: self.teacher,
+            noise: self.noise,
+            skew: self.skew,
+            cluster_size: 12,
+            active_per_label: 8,
+            background: 4,
+            pool_frac: self.pool_frac,
+            seed,
+        }
+    }
+
+    /// Generate train and test splits (80/20). A single generator call
+    /// produces both so the planted teacher (cluster salt) is identical;
+    /// the split itself is i.i.d.
+    pub fn generate(&self, scale: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut spec = self.spec(scale * 1.25, seed);
+        spec.n_examples = (spec.n_examples).max(250);
+        let all = spec.generate();
+        crate::data::split::random_split(&all, 0.2, seed ^ 0xDEAD)
+    }
+}
+
+/// The five multiclass datasets of Table 1.
+pub fn multiclass_analogs() -> Vec<AnalogSpec> {
+    vec![
+        // sector: small C, high-dim sparse text; LTLS fits well (0.88).
+        AnalogSpec {
+            paper_name: "sector",
+            paper_n: 8658,
+            paper_d: 55197,
+            paper_c: 105,
+            n: 8658,
+            d: 4000,
+            density: 0.01,
+            multiclass: true,
+            labels_per_example: 1,
+            teacher: TeacherKind::Cluster,
+            noise: 0.03,
+            skew: 0.0,
+            pool_frac: 1.0,
+        },
+        // aloi.bin: C=1000, sparse; LTLS competitive (0.82).
+        AnalogSpec {
+            paper_name: "aloi.bin",
+            paper_n: 100_000,
+            paper_d: 636_911,
+            paper_c: 1000,
+            n: 20_000,
+            d: 8000,
+            density: 0.004,
+            multiclass: true,
+            labels_per_example: 1,
+            teacher: TeacherKind::Cluster,
+            noise: 0.05,
+            skew: 0.0,
+            pool_frac: 1.0,
+        },
+        // LSHTC1: C=12294 long-tail text; LTLS overfits/underperforms (0.095†).
+        AnalogSpec {
+            paper_name: "LSHTC1",
+            paper_n: 83_805,
+            paper_d: 347_255,
+            paper_c: 12_294,
+            n: 20_000,
+            d: 10_000,
+            density: 0.004,
+            multiclass: true,
+            labels_per_example: 1,
+            teacher: TeacherKind::Cluster,
+            noise: 0.05,
+            skew: 1.1,
+            pool_frac: 0.04,
+        },
+        // ImageNet: dense small feature space; linear LTLS fails (0.0075*).
+        AnalogSpec {
+            paper_name: "imageNet",
+            paper_n: 1_261_404,
+            paper_d: 1000,
+            paper_c: 1000,
+            n: 30_000,
+            d: 1000,
+            density: 0.308,
+            multiclass: true,
+            labels_per_example: 1,
+            teacher: TeacherKind::Nonlinear,
+            noise: 0.02,
+            skew: 0.0,
+            pool_frac: 1.0,
+        },
+        // Dmoz: C=11947 text; LTLS mid (0.23†).
+        AnalogSpec {
+            paper_name: "Dmoz",
+            paper_n: 345_068,
+            paper_d: 833_484,
+            paper_c: 11_947,
+            n: 25_000,
+            d: 10_000,
+            density: 0.003,
+            multiclass: true,
+            labels_per_example: 1,
+            teacher: TeacherKind::Cluster,
+            noise: 0.05,
+            skew: 0.9,
+            pool_frac: 0.06,
+        },
+    ]
+}
+
+/// The four multilabel datasets of Table 2.
+pub fn multilabel_analogs() -> Vec<AnalogSpec> {
+    vec![
+        // Bibtex: tiny; LTLS notably below LEML/FastXML (0.27).
+        AnalogSpec {
+            paper_name: "bibtex",
+            paper_n: 5991,
+            paper_d: 1837,
+            paper_c: 159,
+            n: 5991,
+            d: 1837,
+            density: 0.04,
+            multiclass: false,
+            labels_per_example: 2,
+            teacher: TeacherKind::Cluster,
+            noise: 0.08,
+            skew: 0.7,
+            pool_frac: 0.08,
+        },
+        // rcv1-regions: LTLS strong (0.90).
+        AnalogSpec {
+            paper_name: "rcv1-regions",
+            paper_n: 20_835,
+            paper_d: 47_236,
+            paper_c: 225,
+            n: 20_835,
+            d: 5000,
+            density: 0.015,
+            multiclass: false,
+            labels_per_example: 2,
+            teacher: TeacherKind::Cluster,
+            noise: 0.03,
+            skew: 0.0,
+            pool_frac: 1.0,
+        },
+        // Eur-Lex: LTLS underfits badly (0.056*).
+        AnalogSpec {
+            paper_name: "Eur-Lex",
+            paper_n: 15_643,
+            paper_d: 5000,
+            paper_c: 3956,
+            n: 15_643,
+            d: 5000,
+            density: 0.05,
+            multiclass: false,
+            labels_per_example: 3,
+            teacher: TeacherKind::Cluster,
+            noise: 0.05,
+            skew: 1.0,
+            pool_frac: 0.05,
+        },
+        // LSHTCwiki: C=320k; LTLS decent given tiny model (0.22).
+        AnalogSpec {
+            paper_name: "LSHTCwiki",
+            paper_n: 2_355_436,
+            paper_d: 2_085_167,
+            paper_c: 320_338,
+            n: 40_000,
+            d: 20_000,
+            density: 0.002,
+            multiclass: false,
+            labels_per_example: 2,
+            teacher: TeacherKind::Cluster,
+            noise: 0.06,
+            skew: 1.1,
+            pool_frac: 1.0,
+        },
+    ]
+}
+
+/// All nine analogs (Table 3 runs over every dataset).
+pub fn all_analogs() -> Vec<AnalogSpec> {
+    let mut v = multiclass_analogs();
+    v.extend(multilabel_analogs());
+    v
+}
+
+/// Look up an analog by paper name (case-insensitive).
+pub fn by_name(name: &str) -> Option<AnalogSpec> {
+    all_analogs().into_iter().find(|a| a.paper_name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Trellis;
+
+    #[test]
+    fn registry_is_complete() {
+        assert_eq!(multiclass_analogs().len(), 5);
+        assert_eq!(multilabel_analogs().len(), 4);
+        assert_eq!(all_analogs().len(), 9);
+    }
+
+    /// The paper's Table 3 "#edges" column emerges from our C values.
+    #[test]
+    fn edge_counts_match_paper_table3() {
+        let expect = [
+            ("sector", 28usize),
+            ("aloi.bin", 42),
+            ("LSHTC1", 56),
+            ("imageNet", 42),
+            ("Dmoz", 61),
+            ("bibtex", 34),
+            ("Eur-Lex", 52),
+            ("LSHTCwiki", 81),
+        ];
+        for (name, e) in expect {
+            let a = by_name(name).unwrap();
+            assert_eq!(Trellis::new(a.paper_c as u64).num_edges(), e, "{name}");
+        }
+    }
+
+    #[test]
+    fn small_scale_generation_works() {
+        for a in all_analogs() {
+            if a.paper_c > 50_000 {
+                continue; // LSHTCwiki covered in integration tests
+            }
+            let (train, test) = a.generate(0.02, 1);
+            assert!(train.validate().is_ok(), "{}", a.paper_name);
+            assert!(test.n_examples() > 0);
+            assert_eq!(train.multiclass, a.multiclass, "{}", a.paper_name);
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("SECTOR").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

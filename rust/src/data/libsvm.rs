@@ -1,0 +1,201 @@
+//! libsvm / XMLC-repository format loader.
+//!
+//! Lines look like `l1,l2,... f1:v1 f2:v2 ...` (multilabel) or
+//! `l f1:v1 ...` (multiclass). An optional header line `n d c` (three bare
+//! integers, the XMLC repository convention) is auto-detected and used to
+//! size the dataset. Feature ids may be 0- or 1-based; the loader keeps
+//! them as-is and sizes `n_features` to the max seen (or header value).
+
+use super::Dataset;
+use crate::sparse::CsrMatrix;
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+/// Parse a dataset from a reader.
+pub fn parse<R: Read>(name: &str, reader: R) -> Result<Dataset, String> {
+    let mut lines = BufReader::new(reader).lines();
+    let mut first: Option<String> = None;
+    // Header detection: "n d c" of bare integers.
+    let mut header: Option<(usize, usize, usize)> = None;
+    if let Some(Ok(line)) = lines.next() {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.len() == 3 && toks.iter().all(|t| t.parse::<usize>().is_ok()) {
+            header = Some((
+                toks[0].parse().unwrap(),
+                toks[1].parse().unwrap(),
+                toks[2].parse().unwrap(),
+            ));
+        } else {
+            first = Some(line);
+        }
+    }
+
+    let mut rows: Vec<(Vec<u32>, Vec<u32>, Vec<f32>)> = Vec::new();
+    let mut max_feat = 0u32;
+    let mut max_label = 0u32;
+    let mut handle = |line: &str, lineno: usize| -> Result<(), String> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(());
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts.next().ok_or(format!("line {lineno}: empty"))?;
+        let mut labels: Vec<u32> = Vec::new();
+        // A first token with ':' means "no labels" (XMLC allows it) — treat
+        // the token as a feature and the example as unlabeled.
+        let mut feature_toks: Vec<&str> = Vec::new();
+        if label_tok.contains(':') {
+            feature_toks.push(label_tok);
+        } else {
+            for l in label_tok.split(',') {
+                if l.is_empty() {
+                    continue;
+                }
+                let v: u32 = l.parse().map_err(|e| format!("line {lineno}: label {l:?}: {e}"))?;
+                labels.push(v);
+                max_label = max_label.max(v);
+            }
+        }
+        labels.sort_unstable();
+        labels.dedup();
+        let mut idx: Vec<u32> = Vec::new();
+        let mut val: Vec<f32> = Vec::new();
+        for tok in feature_toks.into_iter().map(Some).chain(parts.map(Some)).flatten() {
+            let (i, v) = tok
+                .split_once(':')
+                .ok_or(format!("line {lineno}: bad feature token {tok:?}"))?;
+            let i: u32 = i.parse().map_err(|e| format!("line {lineno}: {e}"))?;
+            let v: f32 = v.parse().map_err(|e| format!("line {lineno}: {e}"))?;
+            idx.push(i);
+            val.push(v);
+            max_feat = max_feat.max(i);
+        }
+        // Sort features by index (some files are unsorted).
+        let mut order: Vec<usize> = (0..idx.len()).collect();
+        order.sort_by_key(|&k| idx[k]);
+        let idx: Vec<u32> = order.iter().map(|&k| idx[k]).collect();
+        let val: Vec<f32> = order.iter().map(|&k| val[k]).collect();
+        if idx.windows(2).any(|w| w[0] == w[1]) {
+            return Err(format!("line {lineno}: duplicate feature index"));
+        }
+        rows.push((labels, idx, val));
+        Ok(())
+    };
+
+    let mut lineno = if header.is_some() { 1 } else { 0 };
+    if let Some(line) = first {
+        lineno += 1;
+        handle(&line, lineno)?;
+    }
+    for line in lines {
+        lineno += 1;
+        handle(&line.map_err(|e| e.to_string())?, lineno)?;
+    }
+
+    let (n_features, n_labels) = match header {
+        Some((_, d, c)) => (d.max(max_feat as usize + 1), c.max(max_label as usize + 1)),
+        None => (max_feat as usize + 1, max_label as usize + 1),
+    };
+    let mut features = CsrMatrix::new(n_features);
+    let mut labels = Vec::with_capacity(rows.len());
+    for (ls, idx, val) in rows {
+        features.push_row(&idx, &val);
+        labels.push(ls);
+    }
+    let mut ds = Dataset {
+        name: name.to_string(),
+        features,
+        labels,
+        n_features,
+        n_labels,
+        multiclass: false,
+    };
+    ds.detect_multiclass();
+    ds.validate()?;
+    Ok(ds)
+}
+
+/// Load a dataset from a file path.
+pub fn load(path: &Path) -> Result<Dataset, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("dataset").to_string();
+    parse(&name, f)
+}
+
+/// Serialize a dataset back to libsvm text (round-trip tests, exporting
+/// synthetic analogs for external tools).
+pub fn dump(ds: &Dataset) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{} {} {}\n", ds.n_examples(), ds.n_features, ds.n_labels));
+    for i in 0..ds.n_examples() {
+        let ls: Vec<String> = ds.labels_of(i).iter().map(|l| l.to_string()).collect();
+        out.push_str(&ls.join(","));
+        let row = ds.row(i);
+        for (&j, &v) in row.indices.iter().zip(row.values) {
+            out.push_str(&format!(" {j}:{v}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_multiclass() {
+        let text = "3 0:1.5 4:2\n1 2:0.5\n0 1:1 3:1\n";
+        let ds = parse("mc", text.as_bytes()).unwrap();
+        assert_eq!(ds.n_examples(), 3);
+        assert!(ds.multiclass);
+        assert_eq!(ds.n_labels, 4);
+        assert_eq!(ds.n_features, 5);
+        assert_eq!(ds.labels_of(0), &[3]);
+        assert_eq!(ds.row(0).values, &[1.5, 2.0]);
+    }
+
+    #[test]
+    fn parses_multilabel_with_header() {
+        let text = "2 6 10\n1,5,3 0:1\n7 5:2.5\n";
+        let ds = parse("ml", text.as_bytes()).unwrap();
+        assert!(!ds.multiclass);
+        assert_eq!(ds.n_labels, 10);
+        assert_eq!(ds.n_features, 6);
+        assert_eq!(ds.labels_of(0), &[1, 3, 5]); // sorted
+    }
+
+    #[test]
+    fn unsorted_features_get_sorted() {
+        let ds = parse("u", "0 5:1 2:2 7:3\n".as_bytes()).unwrap();
+        assert_eq!(ds.row(0).indices, &[2, 5, 7]);
+        assert_eq!(ds.row(0).values, &[2.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("b", "1 nocolon\n".as_bytes()).is_err());
+        assert!(parse("b", "x 0:1\n".as_bytes()).is_err());
+        assert!(parse("b", "0 1:1 1:2\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn dump_parse_roundtrip() {
+        let text = "1,2 0:1.5 3:2\n0 1:1\n";
+        let ds = parse("rt", text.as_bytes()).unwrap();
+        let dumped = dump(&ds);
+        let again = parse("rt2", dumped.as_bytes()).unwrap();
+        assert_eq!(again.n_examples(), ds.n_examples());
+        assert_eq!(again.n_labels, ds.n_labels);
+        for i in 0..ds.n_examples() {
+            assert_eq!(again.labels_of(i), ds.labels_of(i));
+            assert_eq!(again.row(i).indices, ds.row(i).indices);
+        }
+    }
+
+    #[test]
+    fn empty_lines_and_comments_skipped() {
+        let ds = parse("c", "# comment\n0 0:1\n\n1 1:1\n".as_bytes()).unwrap();
+        assert_eq!(ds.n_examples(), 2);
+    }
+}

@@ -1,0 +1,138 @@
+//! Dataset substrate: the in-memory dataset type, a libsvm-format loader
+//! (so the real XC benchmark files can be dropped in), synthetic dataset
+//! generators that clone the *shape statistics* of the paper's nine
+//! datasets (DESIGN.md §3 documents the substitution), and splits/stats.
+
+pub mod datasets;
+pub mod libsvm;
+pub mod split;
+pub mod stats;
+pub mod synthetic;
+
+use crate::sparse::{CsrMatrix, SparseVec};
+
+/// A multiclass or multilabel dataset.
+///
+/// Labels are `Vec<u32>` per example: length 1 for multiclass, arbitrary
+/// (sorted, distinct) for multilabel.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub name: String,
+    pub features: CsrMatrix,
+    pub labels: Vec<Vec<u32>>,
+    pub n_features: usize,
+    pub n_labels: usize,
+    /// True if every example has exactly one label.
+    pub multiclass: bool,
+}
+
+impl Dataset {
+    pub fn n_examples(&self) -> usize {
+        self.features.n_rows()
+    }
+
+    /// Feature row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> SparseVec<'_> {
+        self.features.row(i)
+    }
+
+    /// Label set of example `i`.
+    #[inline]
+    pub fn labels_of(&self, i: usize) -> &[u32] {
+        &self.labels[i]
+    }
+
+    /// Recompute the `multiclass` flag from the labels.
+    pub fn detect_multiclass(&mut self) {
+        self.multiclass = self.labels.iter().all(|l| l.len() == 1);
+    }
+
+    /// Label frequencies (used by the Table 3 naive baseline and stats).
+    pub fn label_frequencies(&self) -> Vec<u64> {
+        let mut f = vec![0u64; self.n_labels];
+        for ls in &self.labels {
+            for &l in ls {
+                f[l as usize] += 1;
+            }
+        }
+        f
+    }
+
+    /// Select examples into a new dataset (splits).
+    pub fn select(&self, rows: &[usize]) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            features: self.features.select_rows(rows),
+            labels: rows.iter().map(|&r| self.labels[r].clone()).collect(),
+            n_features: self.n_features,
+            n_labels: self.n_labels,
+            multiclass: self.multiclass,
+        }
+    }
+
+    /// Sanity checks used across tests and loaders.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.features.n_rows() != self.labels.len() {
+            return Err(format!(
+                "rows {} != labels {}",
+                self.features.n_rows(),
+                self.labels.len()
+            ));
+        }
+        if self.features.n_cols != self.n_features {
+            return Err("n_features mismatch".into());
+        }
+        for (i, ls) in self.labels.iter().enumerate() {
+            if ls.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("labels of example {i} not sorted/distinct"));
+            }
+            if ls.iter().any(|&l| l as usize >= self.n_labels) {
+                return Err(format!("label out of range in example {i}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_accessors_and_validate() {
+        let mut f = CsrMatrix::new(4);
+        f.push_row(&[0, 2], &[1.0, 1.0]);
+        f.push_row(&[1], &[2.0]);
+        let mut ds = Dataset {
+            name: "t".into(),
+            features: f,
+            labels: vec![vec![0], vec![1, 2]],
+            n_features: 4,
+            n_labels: 3,
+            multiclass: false,
+        };
+        assert!(ds.validate().is_ok());
+        ds.detect_multiclass();
+        assert!(!ds.multiclass);
+        assert_eq!(ds.label_frequencies(), vec![1, 1, 1]);
+        let s = ds.select(&[1]);
+        assert_eq!(s.n_examples(), 1);
+        assert_eq!(s.labels_of(0), &[1, 2]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_labels() {
+        let mut f = CsrMatrix::new(2);
+        f.push_row(&[0], &[1.0]);
+        let ds = Dataset {
+            name: "bad".into(),
+            features: f,
+            labels: vec![vec![5]],
+            n_features: 2,
+            n_labels: 3,
+            multiclass: true,
+        };
+        assert!(ds.validate().is_err());
+    }
+}

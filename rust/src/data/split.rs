@@ -1,0 +1,72 @@
+//! Train/test splitting utilities.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Random split into (train, test) with `test_frac` of examples held out.
+pub fn random_split(ds: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let n = ds.n_examples();
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(seed ^ 0x5917);
+    rng.shuffle(&mut order);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let (test_rows, train_rows) = order.split_at(n_test);
+    let mut train_rows = train_rows.to_vec();
+    let mut test_rows = test_rows.to_vec();
+    train_rows.sort_unstable();
+    test_rows.sort_unstable();
+    (ds.select(&train_rows), ds.select(&test_rows))
+}
+
+/// Deterministic k-fold iterator: returns the rows of fold `i` of `k`.
+pub fn fold_rows(n: usize, k: usize, i: usize) -> (Vec<usize>, Vec<usize>) {
+    assert!(i < k && k >= 2);
+    let mut train = Vec::new();
+    let mut test = Vec::new();
+    for r in 0..n {
+        if r % k == i {
+            test.push(r);
+        } else {
+            train.push(r);
+        }
+    }
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    #[test]
+    fn split_partitions_examples() {
+        let ds = SyntheticSpec::multiclass(100, 50, 10).seed(2).generate();
+        let (tr, te) = random_split(&ds, 0.2, 7);
+        assert_eq!(tr.n_examples() + te.n_examples(), 100);
+        assert_eq!(te.n_examples(), 20);
+        assert!(tr.validate().is_ok() && te.validate().is_ok());
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let ds = SyntheticSpec::multiclass(60, 30, 8).seed(3).generate();
+        let (a, _) = random_split(&ds, 0.25, 1);
+        let (b, _) = random_split(&ds, 0.25, 1);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn folds_cover_all_rows() {
+        let k = 5;
+        let mut seen = vec![0; 23];
+        for i in 0..k {
+            let (tr, te) = fold_rows(23, k, i);
+            assert_eq!(tr.len() + te.len(), 23);
+            for r in te {
+                seen[r] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+}

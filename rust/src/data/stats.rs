@@ -1,0 +1,84 @@
+//! Dataset statistics: the numbers the paper's tables report in their
+//! left-hand columns (#examples, #features, #classes) plus density and
+//! label-prior diagnostics used to verify our analogs match the regime.
+
+use super::Dataset;
+
+/// Summary statistics of a dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetStats {
+    pub name: String,
+    pub n_examples: usize,
+    pub n_features: usize,
+    pub n_labels: usize,
+    pub mean_nnz: f64,
+    pub density: f64,
+    pub mean_labels_per_example: f64,
+    /// Fraction of label mass on the 10% most frequent labels.
+    pub head_mass: f64,
+    /// Number of labels that never appear.
+    pub unused_labels: usize,
+}
+
+/// Compute stats.
+pub fn stats(ds: &Dataset) -> DatasetStats {
+    let freqs = ds.label_frequencies();
+    let total: u64 = freqs.iter().sum();
+    let mut sorted = freqs.clone();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    let head_n = (sorted.len() / 10).max(1);
+    let head: u64 = sorted.iter().take(head_n).sum();
+    DatasetStats {
+        name: ds.name.clone(),
+        n_examples: ds.n_examples(),
+        n_features: ds.n_features,
+        n_labels: ds.n_labels,
+        mean_nnz: ds.features.mean_nnz(),
+        density: ds.features.mean_nnz() / ds.n_features.max(1) as f64,
+        mean_labels_per_example: total as f64 / ds.n_examples().max(1) as f64,
+        head_mass: if total == 0 { 0.0 } else { head as f64 / total as f64 },
+        unused_labels: freqs.iter().filter(|&&f| f == 0).count(),
+    }
+}
+
+impl std::fmt::Display for DatasetStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: n={} D={} C={} nnz/row={:.1} density={:.4} labels/ex={:.2} head10%={:.2} unused={}",
+            self.name,
+            self.n_examples,
+            self.n_features,
+            self.n_labels,
+            self.mean_nnz,
+            self.density,
+            self.mean_labels_per_example,
+            self.head_mass,
+            self.unused_labels
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    #[test]
+    fn stats_reflect_spec() {
+        let ds = SyntheticSpec::multiclass(500, 100, 20).density(0.1).seed(1).generate();
+        let s = stats(&ds);
+        assert_eq!(s.n_examples, 500);
+        assert_eq!(s.n_labels, 20);
+        assert!((s.density - 0.1).abs() < 0.02);
+        assert!((s.mean_labels_per_example - 1.0).abs() < 1e-9);
+        assert!(!format!("{s}").is_empty());
+    }
+
+    #[test]
+    fn skewed_data_has_head_mass() {
+        let flat = SyntheticSpec::multiclass(2000, 100, 100).seed(2).generate();
+        let skewed = SyntheticSpec::multiclass(2000, 100, 100).skew(1.2).seed(2).generate();
+        assert!(stats(&skewed).head_mass > stats(&flat).head_mass);
+    }
+}

@@ -1,0 +1,214 @@
+//! Forward–backward over the trellis (paper §5): the log-partition
+//! function `log Σ_ℓ exp(F(x, s(ℓ)))` in `O(E)`, and per-edge posterior
+//! marginals `P(e ∈ s | x)` for multinomial-logistic training.
+//!
+//! The gradient of the trellis-softmax loss w.r.t. edge scores is
+//! `∂L/∂h_e = P(e ∈ s) − 1[e ∈ s(y)]`, so these marginals are exactly the
+//! backprop signal for the deep variant (the same math `python/compile`
+//! gets from JAX autodiff; this rust twin is used for CPU training, for
+//! testing the JAX artifact, and for calibrated probability outputs).
+
+use crate::util::{logaddexp, logsumexp};
+use crate::graph::Trellis;
+
+/// Log-partition function `log Σ_paths exp(path score)`.
+pub fn log_partition(t: &Trellis, h: &[f32]) -> f32 {
+    forward(t, h).logz
+}
+
+struct Forward {
+    /// alpha[j][s]: log-sum of prefix scores into (step j+1?, state s) —
+    /// indexed alpha[j-1][s] for step j in 1..=b.
+    alpha: Vec<[f32; 2]>,
+    /// Log-sum over complete paths.
+    logz: f32,
+    /// Per-terminal contributions for the backward pass:
+    /// exit_terms[k] = alpha at exit k's step/state + exit edge.
+    exit_terms: Vec<f32>,
+    /// full_terms[s] = alpha[b-1][s] + aux edge s + aux_sink.
+    full_terms: [f32; 2],
+}
+
+fn forward(t: &Trellis, h: &[f32]) -> Forward {
+    let b = t.steps as usize;
+    let mut alpha = Vec::with_capacity(b);
+    alpha.push([h[t.source_edge(0) as usize], h[t.source_edge(1) as usize]]);
+    for j in 2..=b as u32 {
+        let prev = *alpha.last().unwrap();
+        let a0 = logaddexp(
+            prev[0] + h[t.transition_edge(j, 0, 0) as usize],
+            prev[1] + h[t.transition_edge(j, 1, 0) as usize],
+        );
+        let a1 = logaddexp(
+            prev[0] + h[t.transition_edge(j, 0, 1) as usize],
+            prev[1] + h[t.transition_edge(j, 1, 1) as usize],
+        );
+        alpha.push([a0, a1]);
+    }
+    let mut exit_terms = Vec::with_capacity(t.exit_bits().len());
+    for (k, &bit) in t.exit_bits().iter().enumerate() {
+        let j = bit as usize; // step = bit+1 → alpha index = bit
+        exit_terms.push(alpha[j][1] + h[t.exit_edge(k) as usize]);
+    }
+    let aux_sink = h[t.aux_sink_edge() as usize];
+    let full_terms = [
+        alpha[b - 1][0] + h[t.aux_edge(0) as usize] + aux_sink,
+        alpha[b - 1][1] + h[t.aux_edge(1) as usize] + aux_sink,
+    ];
+    let mut terms = exit_terms.clone();
+    terms.extend_from_slice(&full_terms);
+    Forward { alpha, logz: logsumexp(&terms), exit_terms, full_terms }
+}
+
+/// Posterior edge marginals `P(e ∈ s | x)` under the trellis softmax.
+/// Returns a vector of length `E` summing (per edge-cut) to 1.
+pub fn posterior_marginals(t: &Trellis, h: &[f32]) -> Vec<f32> {
+    let b = t.steps as usize;
+    let f = forward(t, h);
+    let logz = f.logz;
+
+    // Backward pass: beta[j][s] = log-sum over suffixes from (step j, s)
+    // to the sink (including terminal edges), indexed beta[j-1][s].
+    let mut beta = vec![[f32::NEG_INFINITY; 2]; b];
+    let aux_sink = h[t.aux_sink_edge() as usize];
+    beta[b - 1] = [
+        h[t.aux_edge(0) as usize] + aux_sink,
+        h[t.aux_edge(1) as usize] + aux_sink,
+    ];
+    // Terminal exits contribute to beta at their step.
+    for (k, &bit) in t.exit_bits().iter().enumerate() {
+        let j = bit as usize; // step bit+1 → beta index bit
+        beta[j][1] = logaddexp(beta[j][1], h[t.exit_edge(k) as usize]);
+    }
+    for j in (1..b).rev() {
+        // beta for step j (index j-1) from step j+1 (index j).
+        let step = (j + 1) as u32;
+        for a in 0..2usize {
+            let v = logaddexp(
+                h[t.transition_edge(step, a as u8, 0) as usize] + beta[j][0],
+                h[t.transition_edge(step, a as u8, 1) as usize] + beta[j][1],
+            );
+            beta[j - 1][a] = logaddexp(beta[j - 1][a], v);
+        }
+    }
+
+    let mut m = vec![0.0f32; t.num_edges()];
+    // Source edges.
+    for s in 0..2usize {
+        m[t.source_edge(s as u8) as usize] =
+            (h[t.source_edge(s as u8) as usize] + beta[0][s] - logz).exp();
+    }
+    // Transition edges.
+    for j in 2..=b as u32 {
+        for a in 0..2usize {
+            for s2 in 0..2usize {
+                let e = t.transition_edge(j, a as u8, s2 as u8) as usize;
+                m[e] = (f.alpha[j as usize - 2][a] + h[e] + beta[j as usize - 1][s2] - logz).exp();
+            }
+        }
+    }
+    // Aux edges + aux_sink.
+    let mut aux_total = 0.0;
+    for s in 0..2usize {
+        let p = (f.full_terms[s] - logz).exp();
+        m[t.aux_edge(s as u8) as usize] = p;
+        aux_total += p;
+    }
+    m[t.aux_sink_edge() as usize] = aux_total;
+    // Exit edges.
+    for k in 0..t.exit_bits().len() {
+        m[t.exit_edge(k) as usize] = (f.exit_terms[k] - logz).exp();
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::codec::path_of_label;
+    use crate::graph::pathmat::PathMatrix;
+    use crate::util::rng::Rng;
+
+    /// logZ equals the brute-force log-sum over all C path scores.
+    #[test]
+    fn log_partition_matches_bruteforce() {
+        let mut rng = Rng::new(41);
+        for c in [2u64, 3, 22, 105, 159, 1000] {
+            let t = Trellis::new(c);
+            let m = PathMatrix::materialize(&t);
+            for _ in 0..10 {
+                let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+                let scores = m.decode(&h);
+                let want = crate::util::logsumexp(&scores);
+                let got = log_partition(&t, &h);
+                assert!((got - want).abs() < 1e-3, "C={c}: {got} vs {want}");
+            }
+        }
+    }
+
+    /// Marginals equal the brute-force posterior Σ_ℓ p(ℓ)·1[e ∈ s(ℓ)].
+    #[test]
+    fn marginals_match_bruteforce() {
+        let mut rng = Rng::new(42);
+        for c in [2u64, 3, 22, 105, 159] {
+            let t = Trellis::new(c);
+            let m = PathMatrix::materialize(&t);
+            for _ in 0..5 {
+                let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+                let scores = m.decode(&h);
+                let logz = crate::util::logsumexp(&scores);
+                let probs: Vec<f32> = scores.iter().map(|s| (s - logz).exp()).collect();
+                let mut want = vec![0.0f32; t.num_edges()];
+                for l in 0..c {
+                    for e in path_of_label(&t, l).edges(&t) {
+                        want[e as usize] += probs[l as usize];
+                    }
+                }
+                let got = posterior_marginals(&t, &h);
+                for e in 0..t.num_edges() {
+                    assert!(
+                        (got[e] - want[e]).abs() < 1e-3,
+                        "C={c} edge {e}: {} vs {}",
+                        got[e],
+                        want[e]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Marginals are in [0,1]; source pair sums to 1; aux_sink + exits = 1.
+    #[test]
+    fn marginals_are_probabilities() {
+        let mut rng = Rng::new(43);
+        for c in [22u64, 105, 12294] {
+            let t = Trellis::new(c);
+            let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+            let m = posterior_marginals(&t, &h);
+            for &v in &m {
+                assert!((-1e-4..=1.0 + 1e-4).contains(&v));
+            }
+            let src = m[t.source_edge(0) as usize] + m[t.source_edge(1) as usize];
+            assert!((src - 1.0).abs() < 1e-3, "C={c} src={src}");
+            let mut terminal = m[t.aux_sink_edge() as usize];
+            for k in 0..t.exit_bits().len() {
+                terminal += m[t.exit_edge(k) as usize];
+            }
+            assert!((terminal - 1.0).abs() < 1e-3, "C={c} terminal={terminal}");
+        }
+    }
+
+    /// Softmax probability of the Viterbi winner dominates when its path
+    /// score is boosted.
+    #[test]
+    fn boosted_path_dominates_posterior() {
+        let t = Trellis::new(105);
+        let mut h = vec![0.0f32; t.num_edges()];
+        for e in crate::graph::codec::edges_of_label(&t, 42) {
+            h[e as usize] = 8.0;
+        }
+        let logz = log_partition(&t, &h);
+        let p42 = (crate::decode::score_label(&t, &h, 42) - logz).exp();
+        assert!(p42 > 0.95, "p={p42}");
+    }
+}

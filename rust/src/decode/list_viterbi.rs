@@ -1,0 +1,194 @@
+//! Top-k decoding (list Viterbi, paper §3).
+//!
+//! Keeps the k best prefixes per (step, state); merging two sorted
+//! predecessor lists per state is `O(k)` per step, so the total cost is
+//! `O(k·E)` plus an `O(k log k)` final selection — the paper's
+//! `O(k log(k) log(C))` bound.
+
+use super::Scored;
+use crate::graph::Trellis;
+
+/// A DP entry: prefix score + packed state choices (bit j−1 = state at
+/// step j).
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    score: f32,
+    code: u64,
+}
+
+/// Merge two descending entry lists, each first adding `add0` / `add1`,
+/// keeping the best `k`.
+fn merge_topk(a: &[Entry], add0: f32, b: &[Entry], add1: f32, k: usize, out: &mut Vec<Entry>) {
+    out.clear();
+    let (mut i, mut j) = (0, 0);
+    while out.len() < k && (i < a.len() || j < b.len()) {
+        let ta = a.get(i).map(|e| e.score + add0);
+        let tb = b.get(j).map(|e| e.score + add1);
+        match (ta, tb) {
+            (Some(sa), Some(sb)) => {
+                if sa >= sb {
+                    out.push(Entry { score: sa, code: a[i].code });
+                    i += 1;
+                } else {
+                    out.push(Entry { score: sb, code: b[j].code });
+                    j += 1;
+                }
+            }
+            (Some(sa), None) => {
+                out.push(Entry { score: sa, code: a[i].code });
+                i += 1;
+            }
+            (None, Some(sb)) => {
+                out.push(Entry { score: sb, code: b[j].code });
+                j += 1;
+            }
+            (None, None) => unreachable!(),
+        }
+    }
+}
+
+/// Top-k highest-scoring paths for edge scores `h`, descending by score
+/// (ties → smaller label). Returns `min(k, C)` results.
+pub fn list_viterbi(t: &Trellis, h: &[f32], k: usize) -> Vec<Scored> {
+    debug_assert_eq!(h.len(), t.num_edges());
+    if k == 0 {
+        return Vec::new();
+    }
+    let k = k.min(t.c as usize);
+    let b = t.steps;
+
+    // Per-state k-best prefix lists.
+    let mut list0 = vec![Entry { score: h[t.source_edge(0) as usize], code: 0 }];
+    let mut list1 = vec![Entry { score: h[t.source_edge(1) as usize], code: 1 }];
+    let mut finals: Vec<Scored> = Vec::new();
+    let mut exit_rank = 0usize;
+
+    let push_exits =
+        |j: u32, list1: &[Entry], exit_rank: &mut usize, finals: &mut Vec<Scored>| {
+            if *exit_rank < t.exit_bits().len() && t.exit_bits()[*exit_rank] == j - 1 {
+                let base = t.exit_label_base(*exit_rank);
+                let edge = h[t.exit_edge(*exit_rank) as usize];
+                for e in list1.iter().take(k) {
+                    // Free bits exclude the forced state-1 at step j.
+                    let label = base + (e.code & !(1u64 << (j - 1)));
+                    finals.push(Scored { label, score: e.score + edge });
+                }
+                *exit_rank += 1;
+            }
+        };
+
+    push_exits(1, &list1, &mut exit_rank, &mut finals);
+
+    let (mut next0, mut next1) = (Vec::with_capacity(k), Vec::with_capacity(k));
+    for j in 2..=b {
+        let e00 = h[t.transition_edge(j, 0, 0) as usize];
+        let e01 = h[t.transition_edge(j, 0, 1) as usize];
+        let e10 = h[t.transition_edge(j, 1, 0) as usize];
+        let e11 = h[t.transition_edge(j, 1, 1) as usize];
+        merge_topk(&list0, e00, &list1, e10, k, &mut next0);
+        merge_topk(&list0, e01, &list1, e11, k, &mut next1);
+        for e in next1.iter_mut() {
+            e.code |= 1 << (j - 1);
+        }
+        std::mem::swap(&mut list0, &mut next0);
+        std::mem::swap(&mut list1, &mut next1);
+        push_exits(j, &list1, &mut exit_rank, &mut finals);
+    }
+
+    // Full paths: through aux state edges + aux→sink.
+    let aux_sink = h[t.aux_sink_edge() as usize];
+    for (list, s) in [(&list0, 0u8), (&list1, 1u8)] {
+        let add = h[t.aux_edge(s) as usize] + aux_sink;
+        for e in list.iter().take(k) {
+            finals.push(Scored { label: e.code, score: e.score + add });
+        }
+    }
+
+    finals.sort_by(|a, b| {
+        b.score.partial_cmp(&a.score).unwrap().then(a.label.cmp(&b.label))
+    });
+    finals.dedup_by_key(|s| s.label); // codes are distinct; belt & braces
+    finals.truncate(k);
+    finals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::pathmat::PathMatrix;
+    use crate::util::rng::Rng;
+
+    /// list_viterbi == dense top-k oracle on random scores, many (C, k).
+    #[test]
+    fn matches_dense_oracle() {
+        let mut rng = Rng::new(21);
+        for c in [2u64, 3, 5, 22, 105, 159, 255, 256, 1000] {
+            let t = Trellis::new(c);
+            let m = PathMatrix::materialize(&t);
+            for &k in &[1usize, 2, 5, 16] {
+                for _ in 0..15 {
+                    let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+                    let got = list_viterbi(&t, &h, k);
+                    let want = m.topk(&h, k);
+                    assert_eq!(got.len(), want.len(), "C={c} k={k}");
+                    for (g, w) in got.iter().zip(&want) {
+                        assert_eq!(g.label, w.0, "C={c} k={k}");
+                        assert!((g.score - w.1).abs() < 1e-4, "C={c} k={k}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// k ≥ C returns all C paths, each exactly once.
+    #[test]
+    fn k_at_least_c_enumerates_all() {
+        let mut rng = Rng::new(22);
+        for c in [2u64, 3, 22, 105] {
+            let t = Trellis::new(c);
+            let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+            let got = list_viterbi(&t, &h, c as usize + 10);
+            assert_eq!(got.len(), c as usize);
+            let mut labels: Vec<u64> = got.iter().map(|s| s.label).collect();
+            labels.sort_unstable();
+            labels.dedup();
+            assert_eq!(labels.len(), c as usize, "C={c}");
+        }
+    }
+
+    /// Top-1 of list equals plain Viterbi.
+    #[test]
+    fn top1_consistent_with_viterbi() {
+        let mut rng = Rng::new(23);
+        for c in [22u64, 1000, 12294] {
+            let t = Trellis::new(c);
+            for _ in 0..20 {
+                let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+                let lv = list_viterbi(&t, &h, 4);
+                let v = super::super::viterbi(&t, &h);
+                assert_eq!(lv[0].label, v.label, "C={c}");
+                assert!((lv[0].score - v.score).abs() < 1e-4);
+            }
+        }
+    }
+
+    /// Scores are non-increasing.
+    #[test]
+    fn scores_sorted_descending() {
+        let mut rng = Rng::new(24);
+        let t = Trellis::new(320338);
+        let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+        let got = list_viterbi(&t, &h, 50);
+        assert_eq!(got.len(), 50);
+        for w in got.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    /// k=0 is empty.
+    #[test]
+    fn k_zero_is_empty() {
+        let t = Trellis::new(22);
+        assert!(list_viterbi(&t, &vec![0.0; t.num_edges()], 0).is_empty());
+    }
+}

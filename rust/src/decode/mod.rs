@@ -1,0 +1,30 @@
+//! Dynamic-programming decoders over the trellis (paper §3, §5).
+//!
+//! Given the edge-score vector `h ∈ R^E` produced by the underlying model,
+//! these find the best / top-k scoring source→sink paths:
+//!
+//! * [`viterbi::viterbi`] — top-1 in `O(E)` (the paper's prediction op);
+//! * [`list_viterbi::list_viterbi`] — top-k in `O(kE + k log k)` (used for
+//!   multilabel prediction, the separation-ranking loss, and the label
+//!   assignment policy);
+//! * [`forward_backward`] — log-partition function and per-edge posterior
+//!   marginals (the multinomial-logistic training mode of §5, and the
+//!   gradient signal for the deep variant);
+//! * [`score::score_label`] — score one known label's path in `O(log C)`.
+
+pub mod forward_backward;
+pub mod list_viterbi;
+pub mod score;
+pub mod viterbi;
+
+pub use forward_backward::{log_partition, posterior_marginals};
+pub use list_viterbi::list_viterbi;
+pub use score::{score_label, score_labels};
+pub use viterbi::viterbi;
+
+/// A decoded prediction: label (canonical path id) and its path score.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scored {
+    pub label: u64,
+    pub score: f32,
+}

@@ -1,0 +1,48 @@
+//! `O(log C)` scoring of known labels (paper §5: "Getting a score
+//! F(·, s(ℓ), w) for a given label ℓ is O(E)").
+
+use crate::graph::codec::edges_of_label;
+use crate::graph::Trellis;
+
+/// Score one label's path: sum of its edge scores.
+pub fn score_label(t: &Trellis, h: &[f32], label: u64) -> f32 {
+    edges_of_label(t, label).iter().map(|&e| h[e as usize]).sum()
+}
+
+/// Score several labels (multilabel positives; |P| ≪ C).
+pub fn score_labels(t: &Trellis, h: &[f32], labels: &[u64]) -> Vec<f32> {
+    labels.iter().map(|&l| score_label(t, h, l)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::pathmat::PathMatrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_dense_scores() {
+        let mut rng = Rng::new(31);
+        for c in [22u64, 105, 1000] {
+            let t = Trellis::new(c);
+            let m = PathMatrix::materialize(&t);
+            let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+            let f = m.decode(&h);
+            for l in 0..c {
+                assert!((score_label(&t, &h, l) - f[l as usize]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_scoring_matches_single() {
+        let mut rng = Rng::new(32);
+        let t = Trellis::new(3956);
+        let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+        let labels = [0u64, 7, 1999, 3955];
+        let batch = score_labels(&t, &h, &labels);
+        for (i, &l) in labels.iter().enumerate() {
+            assert_eq!(batch[i], score_label(&t, &h, l));
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! The standard extreme-classification metric suite beyond precision@1:
+//! precision@k for several k, nDCG@k, and label-space coverage — the
+//! metrics the XMLC repository reports for every method, so results from
+//! this library are directly comparable.
+
+use super::precision::Predictor;
+use crate::data::Dataset;
+
+/// Full metric sweep at the given cutoffs.
+#[derive(Clone, Debug)]
+pub struct XcMetrics {
+    pub cutoffs: Vec<usize>,
+    /// precision@k per cutoff.
+    pub precision: Vec<f64>,
+    /// nDCG@k per cutoff.
+    pub ndcg: Vec<f64>,
+    /// Fraction of distinct labels ever predicted at the largest cutoff —
+    /// a long-tail health diagnostic (degenerate head-only models score
+    /// low here).
+    pub coverage: f64,
+}
+
+/// Compute precision@k and nDCG@k for each cutoff in one pass.
+pub fn evaluate<P: Predictor + ?Sized>(model: &P, ds: &Dataset, cutoffs: &[usize]) -> XcMetrics {
+    assert!(!cutoffs.is_empty());
+    let kmax = *cutoffs.iter().max().unwrap();
+    let n = ds.n_examples();
+    let mut precision = vec![0.0f64; cutoffs.len()];
+    let mut ndcg = vec![0.0f64; cutoffs.len()];
+    let mut predicted = std::collections::HashSet::new();
+
+    // Precompute discount table 1/log2(i+2).
+    let disc: Vec<f64> = (0..kmax).map(|i| 1.0 / ((i + 2) as f64).log2()).collect();
+
+    for i in 0..n {
+        let truth = ds.labels_of(i);
+        if truth.is_empty() {
+            continue;
+        }
+        let top = model.topk(ds.row(i), kmax);
+        for &l in top.iter().map(|(l, _)| l) {
+            predicted.insert(l);
+        }
+        for (ci, &k) in cutoffs.iter().enumerate() {
+            let hits = top.iter().take(k).filter(|(l, _)| truth.contains(l)).count();
+            precision[ci] += hits as f64 / k as f64;
+            // nDCG@k: DCG over the ranked list / ideal DCG.
+            let dcg: f64 = top
+                .iter()
+                .take(k)
+                .enumerate()
+                .filter(|(_, (l, _))| truth.contains(l))
+                .map(|(r, _)| disc[r])
+                .sum();
+            let ideal: f64 = disc.iter().take(k.min(truth.len())).sum();
+            ndcg[ci] += if ideal > 0.0 { dcg / ideal } else { 0.0 };
+        }
+    }
+    let denom = n.max(1) as f64;
+    for v in precision.iter_mut().chain(ndcg.iter_mut()) {
+        *v /= denom;
+    }
+    XcMetrics {
+        cutoffs: cutoffs.to_vec(),
+        precision,
+        ndcg,
+        coverage: predicted.len() as f64 / ds.n_labels.max(1) as f64,
+    }
+}
+
+impl std::fmt::Display for XcMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, &k) in self.cutoffs.iter().enumerate() {
+            write!(f, "P@{k}={:.4} nDCG@{k}={:.4}  ", self.precision[i], self.ndcg[i])?;
+        }
+        write!(f, "coverage={:.3}", self.coverage)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::sparse::SparseVec;
+
+    /// Oracle-at-rank-r predictor: puts a true label at rank r.
+    struct AtRank(usize, std::cell::Cell<usize>);
+    impl Predictor for AtRank {
+        fn topk(&self, _x: SparseVec, k: usize) -> Vec<(u32, f32)> {
+            let i = self.1.get();
+            self.1.set(i + 1);
+            // Fill with distinct wrong labels (value 1000+r), truth at rank self.0.
+            (0..k)
+                .map(|r| {
+                    if r == self.0 {
+                        (0u32, 1.0) // label 0 is always true below
+                    } else {
+                        (1000 + r as u32, 0.5)
+                    }
+                })
+                .collect()
+        }
+        fn model_bytes(&self) -> usize {
+            0
+        }
+        fn name(&self) -> &str {
+            "at-rank"
+        }
+    }
+
+    fn constant_label_dataset(n: usize) -> Dataset {
+        let mut f = crate::sparse::CsrMatrix::new(4);
+        let mut labels = Vec::new();
+        for _ in 0..n {
+            f.push_row(&[0], &[1.0]);
+            labels.push(vec![0u32]);
+        }
+        Dataset {
+            name: "const".into(),
+            features: f,
+            labels,
+            n_features: 4,
+            n_labels: 2000,
+            multiclass: true,
+        }
+    }
+
+    #[test]
+    fn rank_position_affects_ndcg_not_precision() {
+        let ds = constant_label_dataset(50);
+        let top = evaluate(&AtRank(0, Default::default()), &ds, &[5]);
+        let third = evaluate(&AtRank(2, Default::default()), &ds, &[5]);
+        // P@5 identical (one hit in 5 either way)...
+        assert!((top.precision[0] - third.precision[0]).abs() < 1e-9);
+        assert!((top.precision[0] - 0.2).abs() < 1e-9);
+        // ... but nDCG penalizes the lower rank.
+        assert!(top.ndcg[0] > third.ndcg[0]);
+        assert!((top.ndcg[0] - 1.0).abs() < 1e-9, "truth at rank0, |truth|=1 → perfect nDCG");
+    }
+
+    #[test]
+    fn multiple_cutoffs_monotone_precision_for_single_label() {
+        let ds = constant_label_dataset(20);
+        let m = evaluate(&AtRank(0, Default::default()), &ds, &[1, 3, 5]);
+        // With exactly one relevant label, P@k decays like 1/k.
+        assert!((m.precision[0] - 1.0).abs() < 1e-9);
+        assert!((m.precision[1] - 1.0 / 3.0).abs() < 1e-9);
+        assert!((m.precision[2] - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coverage_counts_distinct_predictions() {
+        let ds = constant_label_dataset(10);
+        let m = evaluate(&AtRank(1, Default::default()), &ds, &[3]);
+        // Predicts labels {0, 1000, 1002} every time → 3 / 2000.
+        assert!((m.coverage - 3.0 / 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn end_to_end_on_trained_model() {
+        let ds = SyntheticSpec::multiclass(800, 500, 32).seed(62).generate();
+        let (train, test) = crate::data::split::random_split(&ds, 0.25, 1);
+        let mut tr = crate::train::Trainer::new(
+            crate::train::TrainConfig::default(),
+            ds.n_features,
+            ds.n_labels,
+        );
+        tr.fit(&train, 4);
+        let model = tr.into_model();
+        let m = evaluate(&model, &test, &[1, 5]);
+        assert!(m.precision[0] > 0.7, "{m}");
+        assert!(m.ndcg[1] >= m.precision[0] - 1e-9, "nDCG@5 ≥ P@1 for single-label data");
+        assert!(m.coverage > 0.5, "{m}");
+        assert!(!format!("{m}").is_empty());
+    }
+}

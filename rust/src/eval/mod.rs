@@ -1,0 +1,12 @@
+//! Evaluation harness: precision@k, prediction timing, model-size
+//! accounting, and the table formatting used to regenerate the paper's
+//! Tables 1–3.
+
+pub mod metrics;
+pub mod precision;
+pub mod report;
+pub mod tables;
+pub mod timing;
+
+pub use precision::{precision_at_1, precision_at_k, Predictor};
+pub use timing::time_predictions;

@@ -1,0 +1,117 @@
+//! Precision@k — the paper's headline metric.
+//!
+//! precision@k = (1/n) Σ_i |top_k(x_i) ∩ Y_i| / k.
+//! For multiclass with k=1 this is plain accuracy.
+
+use crate::data::Dataset;
+use crate::sparse::SparseVec;
+
+/// Anything that can rank labels for an example. Implemented by LTLS and
+/// by every baseline so the evaluation and table harnesses are generic.
+pub trait Predictor {
+    /// Top-k (label, score) pairs, descending score.
+    fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)>;
+
+    /// Model size in bytes (for the tables' "model size" column).
+    fn model_bytes(&self) -> usize;
+
+    /// Display name for reports.
+    fn name(&self) -> &str;
+}
+
+impl Predictor for crate::train::TrainedModel {
+    fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
+        self.predict_topk(x, k)
+    }
+    fn model_bytes(&self) -> usize {
+        self.bytes()
+    }
+    fn name(&self) -> &str {
+        "LTLS"
+    }
+}
+
+/// precision@k over a dataset.
+pub fn precision_at_k<P: Predictor + ?Sized>(model: &P, ds: &Dataset, k: usize) -> f64 {
+    if ds.n_examples() == 0 {
+        return 0.0;
+    }
+    let mut total = 0.0f64;
+    for i in 0..ds.n_examples() {
+        let labels = ds.labels_of(i);
+        let top = model.topk(ds.row(i), k);
+        let hits = top.iter().filter(|(l, _)| labels.contains(l)).count();
+        total += hits as f64 / k as f64;
+    }
+    total / ds.n_examples() as f64
+}
+
+/// precision@1 shorthand.
+pub fn precision_at_1<P: Predictor + ?Sized>(model: &P, ds: &Dataset) -> f64 {
+    precision_at_k(model, ds, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    /// An oracle predictor that always returns the true label scores 1.0.
+    struct Oracle<'a>(&'a Dataset, std::cell::Cell<usize>);
+
+    impl Predictor for Oracle<'_> {
+        fn topk(&self, _x: SparseVec, k: usize) -> Vec<(u32, f32)> {
+            let i = self.1.get();
+            self.1.set(i + 1);
+            self.0.labels_of(i).iter().take(k).map(|&l| (l, 1.0)).collect()
+        }
+        fn model_bytes(&self) -> usize {
+            0
+        }
+        fn name(&self) -> &str {
+            "oracle"
+        }
+    }
+
+    #[test]
+    fn oracle_gets_perfect_p1() {
+        let ds = SyntheticSpec::multiclass(50, 20, 8).seed(1).generate();
+        let o = Oracle(&ds, std::cell::Cell::new(0));
+        assert!((precision_at_1(&o, &ds) - 1.0).abs() < 1e-12);
+    }
+
+    /// A constant predictor scores the base rate of its label.
+    struct Constant(u32);
+    impl Predictor for Constant {
+        fn topk(&self, _x: SparseVec, _k: usize) -> Vec<(u32, f32)> {
+            vec![(self.0, 1.0)]
+        }
+        fn model_bytes(&self) -> usize {
+            4
+        }
+        fn name(&self) -> &str {
+            "const"
+        }
+    }
+
+    #[test]
+    fn constant_predictor_matches_base_rate() {
+        let ds = SyntheticSpec::multiclass(400, 30, 4).seed(2).generate();
+        let freq = ds.label_frequencies();
+        let best = (0..4).max_by_key(|&l| freq[l as usize]).unwrap();
+        let p1 = precision_at_1(&Constant(best), &ds);
+        let want = freq[best as usize] as f64 / 400.0;
+        assert!((p1 - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_dataset_is_zero() {
+        let ds = crate::data::Dataset {
+            n_features: 1,
+            n_labels: 1,
+            features: crate::sparse::CsrMatrix::new(1),
+            ..Default::default()
+        };
+        assert_eq!(precision_at_1(&Constant(0), &ds), 0.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Table formatting for the paper-reproduction harnesses: renders rows in
+//! the same shape as the paper's Tables 1–3 and serializes them as JSON
+//! for EXPERIMENTS.md.
+
+use crate::util::json::Json;
+
+/// One (dataset × method) measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub dataset: String,
+    pub method: String,
+    pub precision_at_1: f64,
+    pub predict_time_s: f64,
+    pub model_mb: f64,
+    pub train_time_s: f64,
+}
+
+/// A collection of measurements renderable as a table.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub title: String,
+    pub rows: Vec<Measurement>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        Report { title: title.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, m: Measurement) {
+        self.rows.push(m);
+    }
+
+    /// Methods in first-appearance order.
+    fn methods(&self) -> Vec<String> {
+        let mut ms = Vec::new();
+        for r in &self.rows {
+            if !ms.contains(&r.method) {
+                ms.push(r.method.clone());
+            }
+        }
+        ms
+    }
+
+    /// Datasets in first-appearance order.
+    fn datasets(&self) -> Vec<String> {
+        let mut ds = Vec::new();
+        for r in &self.rows {
+            if !ds.contains(&r.dataset) {
+                ds.push(r.dataset.clone());
+            }
+        }
+        ds
+    }
+
+    fn find(&self, dataset: &str, method: &str) -> Option<&Measurement> {
+        self.rows.iter().find(|r| r.dataset == dataset && r.method == method)
+    }
+
+    /// Render in the paper's layout: per dataset, one block of
+    /// precision@1 / prediction time / model size per method column.
+    pub fn render(&self) -> String {
+        let methods = self.methods();
+        let mut out = format!("=== {} ===\n", self.title);
+        out.push_str(&format!("{:<16}{:<22}", "dataset", "metric"));
+        for m in &methods {
+            out.push_str(&format!("{m:>14}"));
+        }
+        out.push('\n');
+        for d in self.datasets() {
+            for (metric, get) in [
+                ("precision@1", 0usize),
+                ("prediction time [s]", 1),
+                ("model size [M]", 2),
+                ("train time [s]", 3),
+            ] {
+                out.push_str(&format!("{d:<16}{metric:<22}"));
+                for m in &methods {
+                    match self.find(&d, m) {
+                        Some(r) => {
+                            let v = match get {
+                                0 => r.precision_at_1,
+                                1 => r.predict_time_s,
+                                2 => r.model_mb,
+                                _ => r.train_time_s,
+                            };
+                            let s = match get {
+                                0 => format!("{v:.4}"),
+                                _ => format!("{v:.2}"),
+                            };
+                            out.push_str(&format!("{s:>14}"));
+                        }
+                        None => out.push_str(&format!("{:>14}", "-")),
+                    }
+                }
+                out.push('\n');
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON for machine consumption (EXPERIMENTS.md assembly).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::from(self.title.as_str())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("dataset", Json::from(r.dataset.as_str())),
+                                ("method", Json::from(r.method.as_str())),
+                                ("p1", Json::Num(r.precision_at_1)),
+                                ("predict_s", Json::Num(r.predict_time_s)),
+                                ("model_mb", Json::Num(r.model_mb)),
+                                ("train_s", Json::Num(r.train_time_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(d: &str, meth: &str, p: f64) -> Measurement {
+        Measurement {
+            dataset: d.into(),
+            method: meth.into(),
+            precision_at_1: p,
+            predict_time_s: 0.5,
+            model_mb: 1.5,
+            train_time_s: 2.0,
+        }
+    }
+
+    #[test]
+    fn render_contains_all_cells() {
+        let mut r = Report::new("Table 1");
+        r.push(m("sector", "LTLS", 0.88));
+        r.push(m("sector", "LOMtree", 0.82));
+        r.push(m("aloi", "LTLS", 0.82));
+        let text = r.render();
+        assert!(text.contains("Table 1"));
+        assert!(text.contains("sector"));
+        assert!(text.contains("LOMtree"));
+        assert!(text.contains("0.8800"));
+        assert!(text.contains("precision@1"));
+        // aloi has no LOMtree → a dash cell exists.
+        assert!(text.contains('-'));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut r = Report::new("T");
+        r.push(m("d", "x", 0.5));
+        let j = r.to_json().dump();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("title").unwrap().as_str(), Some("T"));
+        assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,178 @@
+//! Paper-table harnesses: regenerate Tables 1, 2 and 3 on the synthetic
+//! analogs (DESIGN.md §4 experiment index). Shared by the CLI
+//! (`ltls tables`), `examples/paper_tables.rs`, and the bench targets.
+
+use super::precision::{precision_at_1, Predictor};
+use super::report::{Measurement, Report};
+use super::timing::time_predictions;
+use crate::baselines::fastxml::FastXmlConfig;
+use crate::baselines::leml::LemlConfig;
+use crate::baselines::{FastXml, Leml, LomTree, NaiveTopK, OracleTopK};
+use crate::data::datasets::{multiclass_analogs, multilabel_analogs, AnalogSpec};
+use crate::data::Dataset;
+use crate::train::{TrainConfig, Trainer};
+use crate::util::timer::Timer;
+
+/// Train LTLS on an analog with the paper's per-dataset settings
+/// (L1 soft-thresholding on the LSHTC1/Dmoz analogs, §6).
+pub fn train_ltls(analog: &AnalogSpec, train: &Dataset, epochs: usize) -> crate::train::TrainedModel {
+    let l1 = match analog.paper_name {
+        "LSHTC1" | "Dmoz" => 0.01, // the paper's † rows
+        _ => 0.0,
+    };
+    let cfg = TrainConfig { l1_lambda: l1, ..TrainConfig::default() };
+    let mut tr = Trainer::new(cfg, train.n_features, train.n_labels);
+    tr.fit(train, epochs);
+    tr.into_model()
+}
+
+fn measure<P: Predictor + ?Sized>(
+    report: &mut Report,
+    dataset: &str,
+    model: &P,
+    test: &Dataset,
+    train_time_s: f64,
+) {
+    let p1 = precision_at_1(model, test);
+    let t = time_predictions(model, test, 1);
+    report.push(Measurement {
+        dataset: dataset.to_string(),
+        method: model.name().to_string(),
+        precision_at_1: p1,
+        predict_time_s: t.total_s,
+        model_mb: model.model_bytes() as f64 / 1e6,
+        train_time_s,
+    });
+}
+
+/// Table 1: multiclass — LTLS vs LOMtree vs FastXML.
+pub fn table1(scale: f64, epochs: usize, seed: u64) -> Report {
+    let mut report = Report::new("Table 1 — multiclass (synthetic analogs)");
+    for analog in multiclass_analogs() {
+        let (train, test) = analog.generate(scale, seed);
+        eprintln!("[table1] {} n={} C={}", analog.paper_name, train.n_examples(), train.n_labels);
+
+        let t = Timer::new();
+        let ltls = train_ltls(&analog, &train, epochs);
+        measure(&mut report, analog.paper_name, &ltls, &test, t.elapsed_s());
+
+        let t = Timer::new();
+        let lom = LomTree::train(&train, epochs.max(2), 0.3, seed ^ 1);
+        measure(&mut report, analog.paper_name, &lom, &test, t.elapsed_s());
+
+        let t = Timer::new();
+        let fx = FastXml::train(&train, &FastXmlConfig { seed: seed ^ 2, ..Default::default() });
+        measure(&mut report, analog.paper_name, &fx, &test, t.elapsed_s());
+    }
+    report
+}
+
+/// Table 2: multilabel — LTLS vs LEML vs FastXML.
+pub fn table2(scale: f64, epochs: usize, seed: u64) -> Report {
+    let mut report = Report::new("Table 2 — multilabel (synthetic analogs)");
+    for analog in multilabel_analogs() {
+        let (train, test) = analog.generate(scale, seed);
+        eprintln!("[table2] {} n={} C={}", analog.paper_name, train.n_examples(), train.n_labels);
+
+        let t = Timer::new();
+        let ltls = train_ltls(&analog, &train, epochs);
+        measure(&mut report, analog.paper_name, &ltls, &test, t.elapsed_s());
+
+        // LEML rank scaled down for very large C (decode is O(C·r)).
+        let rank = if train.n_labels > 100_000 { 16 } else { 32 };
+        let t = Timer::new();
+        let leml = Leml::train(
+            &train,
+            &LemlConfig { rank, epochs: epochs.min(5), seed: seed ^ 3, ..Default::default() },
+        );
+        measure(&mut report, analog.paper_name, &leml, &test, t.elapsed_s());
+
+        let t = Timer::new();
+        let fx = FastXml::train(&train, &FastXmlConfig { seed: seed ^ 4, ..Default::default() });
+        measure(&mut report, analog.paper_name, &fx, &test, t.elapsed_s());
+    }
+    report
+}
+
+/// One Table 3 row: (dataset, #edges, oracle, naive LR, LTLS).
+#[derive(Clone, Debug)]
+pub struct Table3Row {
+    pub dataset: String,
+    pub n_edges: usize,
+    pub oracle: f64,
+    pub naive_lr: f64,
+    pub ltls: f64,
+}
+
+/// Table 3: the naive top-#edges baseline vs LTLS on all nine datasets.
+pub fn table3(scale: f64, epochs: usize, seed: u64) -> Vec<Table3Row> {
+    let mut rows = Vec::new();
+    for analog in crate::data::datasets::all_analogs() {
+        let (train, test) = analog.generate(scale, seed);
+        let e = crate::graph::Trellis::new(train.n_labels as u64).num_edges();
+        eprintln!("[table3] {} E={}", analog.paper_name, e);
+
+        let oracle = OracleTopK::from_train(&train, e).precision_at_1(&test);
+        let naive = NaiveTopK::train(&train, e, epochs.min(3), &[1e-5, 1e-4, 1e-3]);
+        let naive_p1 = precision_at_1(&naive, &test);
+        let ltls = train_ltls(&analog, &train, epochs);
+        let ltls_p1 = precision_at_1(&ltls, &test);
+        rows.push(Table3Row {
+            dataset: analog.paper_name.to_string(),
+            n_edges: e,
+            oracle,
+            naive_lr: naive_p1,
+            ltls: ltls_p1,
+        });
+    }
+    rows
+}
+
+/// Render Table 3 in the paper's layout.
+pub fn render_table3(rows: &[Table3Row]) -> String {
+    let mut s = String::from(
+        "=== Table 3 — naive top-#edges baseline vs LTLS ===\n",
+    );
+    s.push_str(&format!(
+        "{:<16}{:>8}{:>10}{:>10}{:>10}\n",
+        "dataset", "#edges", "oracle", "LR", "LTLS"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<16}{:>8}{:>10.4}{:>10.4}{:>10.4}\n",
+            r.dataset, r.n_edges, r.oracle, r.naive_lr, r.ltls
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smoke: a miniature Table 1 run produces all cells.
+    #[test]
+    fn table1_smoke() {
+        let r = table1(0.01, 1, 9);
+        // 5 datasets × 3 methods.
+        assert_eq!(r.rows.len(), 15);
+        let text = r.render();
+        assert!(text.contains("sector") && text.contains("imageNet"));
+        assert!(text.contains("LTLS") && text.contains("LOMtree") && text.contains("FastXML"));
+    }
+
+    #[test]
+    fn table3_smoke_subset() {
+        // Full table3 at tiny scale is still slow in debug; run two analogs.
+        let analogs: Vec<_> = crate::data::datasets::all_analogs()
+            .into_iter()
+            .filter(|a| a.paper_name == "sector" || a.paper_name == "bibtex")
+            .collect();
+        for analog in analogs {
+            let (train, test) = analog.generate(0.02, 3);
+            let e = crate::graph::Trellis::new(train.n_labels as u64).num_edges();
+            let oracle = OracleTopK::from_train(&train, e).precision_at_1(&test);
+            assert!((0.0..=1.0).contains(&oracle));
+        }
+    }
+}

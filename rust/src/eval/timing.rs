@@ -1,0 +1,59 @@
+//! Prediction-time measurement (the tables' "prediction time [s]" column:
+//! total wall time to predict the whole test set).
+
+use super::precision::Predictor;
+use crate::data::Dataset;
+use crate::util::timer::Timer;
+
+/// Result of timing a full test-set prediction sweep.
+#[derive(Clone, Debug)]
+pub struct PredictionTiming {
+    pub total_s: f64,
+    pub per_example_us: f64,
+    pub n: usize,
+}
+
+/// Predict every test example once with `topk(x, k)` and time the sweep.
+pub fn time_predictions<P: Predictor + ?Sized>(model: &P, ds: &Dataset, k: usize) -> PredictionTiming {
+    let t = Timer::new();
+    let mut sink = 0usize;
+    for i in 0..ds.n_examples() {
+        sink += model.topk(ds.row(i), k).len();
+    }
+    std::hint::black_box(sink);
+    let total_s = t.elapsed_s();
+    PredictionTiming {
+        total_s,
+        per_example_us: total_s * 1e6 / ds.n_examples().max(1) as f64,
+        n: ds.n_examples(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::sparse::SparseVec;
+
+    struct Noop;
+    impl Predictor for Noop {
+        fn topk(&self, _x: SparseVec, _k: usize) -> Vec<(u32, f32)> {
+            vec![(0, 0.0)]
+        }
+        fn model_bytes(&self) -> usize {
+            0
+        }
+        fn name(&self) -> &str {
+            "noop"
+        }
+    }
+
+    #[test]
+    fn timing_counts_examples() {
+        let ds = SyntheticSpec::multiclass(100, 10, 4).seed(1).generate();
+        let t = time_predictions(&Noop, &ds, 1);
+        assert_eq!(t.n, 100);
+        assert!(t.total_s >= 0.0);
+        assert!(t.per_example_us >= 0.0);
+    }
+}

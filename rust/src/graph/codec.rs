@@ -1,0 +1,234 @@
+//! Path ↔ label bijection (paper §4: "each label ℓ is exclusively assigned
+//! to a path s(ℓ)").
+//!
+//! A path is encoded by its state choices `z_1 … z_k` (one bit per visited
+//! step) plus whether it exits early. Canonical label indexing:
+//!
+//! * **Full paths** (all `b` steps → auxiliary → sink): index
+//!   `Σ_j z_j · 2^(j−1)` ∈ `[0, 2^b)`.
+//! * **Early-exit paths** at step `k = i+1` (exit bit `i`, requires
+//!   `z_k = 1`): index `base_i + Σ_{j<k} z_j · 2^(j−1)`, where the bases
+//!   pack exit groups after `2^b` in ascending-bit order.
+//!
+//! Note this canonical index is the *path id*; the mapping from dataset
+//! labels to path ids is learned online by [`crate::assign`].
+
+use super::trellis::Trellis;
+
+/// A decoded path through the trellis.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Path {
+    /// State choice per visited step (length `k ≤ b`).
+    pub states: Vec<u8>,
+    /// `Some(bit)` if the path exits early via the exit edge for `bit`
+    /// (then `states.len() == bit + 1`), `None` for full paths.
+    pub exit_bit: Option<u32>,
+}
+
+impl Path {
+    /// Number of trellis steps this path visits.
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    /// Edge indices of this path, in source→sink order.
+    pub fn edges(&self, t: &Trellis) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.states.len() + 2);
+        out.push(t.source_edge(self.states[0]));
+        for j in 2..=self.states.len() as u32 {
+            out.push(t.transition_edge(j, self.states[j as usize - 2], self.states[j as usize - 1]));
+        }
+        match self.exit_bit {
+            Some(bit) => {
+                debug_assert_eq!(self.states.len() as u32, bit + 1);
+                debug_assert_eq!(*self.states.last().unwrap(), 1);
+                out.push(t.exit_edge(t.exit_rank(bit).expect("bit is an exit bit")));
+            }
+            None => {
+                debug_assert_eq!(self.states.len() as u32, t.steps);
+                out.push(t.aux_edge(self.states[t.steps as usize - 1]));
+                out.push(t.aux_sink_edge());
+            }
+        }
+        out
+    }
+
+    /// Dense {0,1}^E indicator (a row of the decompression matrix `M_G`).
+    pub fn indicator(&self, t: &Trellis) -> Vec<f32> {
+        let mut row = vec![0.0; t.num_edges()];
+        for e in self.edges(t) {
+            row[e as usize] = 1.0;
+        }
+        row
+    }
+}
+
+/// Encode: canonical label index of a path.
+pub fn label_of_path(t: &Trellis, p: &Path) -> u64 {
+    let mut bits = 0u64;
+    match p.exit_bit {
+        None => {
+            debug_assert_eq!(p.states.len() as u32, t.steps);
+            for (j, &z) in p.states.iter().enumerate() {
+                bits |= (z as u64) << j;
+            }
+            bits
+        }
+        Some(bit) => {
+            let k = t.exit_rank(bit).expect("bit is an exit bit");
+            debug_assert_eq!(p.states.len() as u32, bit + 1);
+            debug_assert_eq!(*p.states.last().unwrap(), 1, "exit requires state 1");
+            for (j, &z) in p.states.iter().take(bit as usize).enumerate() {
+                bits |= (z as u64) << j;
+            }
+            t.exit_label_base(k) + bits
+        }
+    }
+}
+
+/// Decode: path of a canonical label index `l ∈ [0, C)`.
+pub fn path_of_label(t: &Trellis, l: u64) -> Path {
+    debug_assert!(l < t.c, "label {l} out of range C={}", t.c);
+    let full = 1u64 << t.steps;
+    if l < full {
+        let states = (0..t.steps).map(|j| ((l >> j) & 1) as u8).collect();
+        return Path { states, exit_bit: None };
+    }
+    let mut r = l - full;
+    for (k, &bit) in t.exit_bits().iter().enumerate() {
+        let cnt = t.exit_path_count(k);
+        if r < cnt {
+            let mut states: Vec<u8> = (0..bit).map(|j| ((r >> j) & 1) as u8).collect();
+            states.push(1); // exit edges leave state 1
+            return Path { states, exit_bit: Some(bit) };
+        }
+        r -= cnt;
+    }
+    unreachable!("label {l} not covered; C={}", t.c)
+}
+
+/// Edge indices for a label — the `O(log C)` scoring primitive of §5.
+pub fn edges_of_label(t: &Trellis, l: u64) -> Vec<u32> {
+    path_of_label(t, l).edges(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn all_paths(t: &Trellis) -> Vec<Path> {
+        // Enumerate every source→sink path by walking the edge structure.
+        let mut out = Vec::new();
+        let b = t.steps;
+        // Full paths: all 2^b state sequences.
+        for code in 0..(1u64 << b) {
+            let states: Vec<u8> = (0..b).map(|j| ((code >> j) & 1) as u8).collect();
+            out.push(Path { states, exit_bit: None });
+        }
+        // Early exits: prefix choices ending at state 1 of step bit+1.
+        for &bit in t.exit_bits() {
+            for code in 0..(1u64 << bit) {
+                let mut states: Vec<u8> = (0..bit).map(|j| ((code >> j) & 1) as u8).collect();
+                states.push(1);
+                out.push(Path { states, exit_bit: Some(bit) });
+            }
+        }
+        out
+    }
+
+    /// label_of_path ∘ path_of_label = id on [0, C) for many C.
+    #[test]
+    fn codec_roundtrip_exhaustive() {
+        for c in (2u64..130).chain([159, 256, 1000, 1024, 3956]) {
+            let t = Trellis::new(c);
+            for l in 0..c {
+                let p = path_of_label(&t, l);
+                assert_eq!(label_of_path(&t, &p), l, "C={c} l={l}");
+            }
+        }
+    }
+
+    /// Every enumerated path maps to a distinct label in [0, C).
+    #[test]
+    fn paths_biject_labels() {
+        for c in [2u64, 3, 22, 105, 159, 1000] {
+            let t = Trellis::new(c);
+            let paths = all_paths(&t);
+            assert_eq!(paths.len() as u64, c, "C={c}");
+            let mut seen = vec![false; c as usize];
+            for p in &paths {
+                let l = label_of_path(&t, p);
+                assert!(l < c);
+                assert!(!seen[l as usize], "duplicate label {l} (C={c})");
+                seen[l as usize] = true;
+            }
+        }
+    }
+
+    /// Path edges are valid, connected source→sink walks.
+    #[test]
+    fn path_edges_form_connected_walk() {
+        for c in [22u64, 105, 1000, 12294] {
+            let t = Trellis::new(c);
+            let mut rng = Rng::new(c);
+            for _ in 0..200 {
+                let l = rng.below(c);
+                let edges = edges_of_label(&t, l);
+                let elist = t.edges();
+                assert_eq!(elist[edges[0] as usize].from, 0, "starts at source");
+                for w in edges.windows(2) {
+                    assert_eq!(
+                        elist[w[0] as usize].to,
+                        elist[w[1] as usize].from,
+                        "C={c} l={l} disconnected"
+                    );
+                }
+                let last = elist[*edges.last().unwrap() as usize];
+                assert_eq!(last.to as usize, t.num_vertices() - 1, "ends at sink");
+            }
+        }
+    }
+
+    /// Path length: full paths have b+2 edges, exit at bit i has i+2 edges.
+    #[test]
+    fn path_edge_counts() {
+        let t = Trellis::new(22); // b=4, exits at bits 1,2
+        for l in 0..22u64 {
+            let p = path_of_label(&t, l);
+            let ne = p.edges(&t).len();
+            match p.exit_bit {
+                None => assert_eq!(ne, 4 + 2),
+                Some(bit) => assert_eq!(ne as u32, bit + 2),
+            }
+        }
+    }
+
+    /// The indicator rows are exactly the M_G rows: distinct per label.
+    #[test]
+    fn indicators_distinct() {
+        let t = Trellis::new(105);
+        let mut rows: Vec<Vec<f32>> = (0..105).map(|l| path_of_label(&t, l).indicator(&t)).collect();
+        let before = rows.len();
+        rows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rows.dedup();
+        assert_eq!(rows.len(), before);
+    }
+
+    /// Row sums of M_G equal path edge counts (≤ b+2).
+    #[test]
+    fn indicator_row_sums() {
+        let t = Trellis::new(1000);
+        for l in (0..1000).step_by(37) {
+            let p = path_of_label(&t, l);
+            let row = p.indicator(&t);
+            let sum: f32 = row.iter().sum();
+            assert_eq!(sum as usize, p.edges(&t).len());
+            assert!(sum as u32 <= t.steps + 2);
+        }
+    }
+}

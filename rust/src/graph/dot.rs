@@ -1,0 +1,115 @@
+//! Render a trellis as Graphviz DOT and as a terminal ASCII sketch —
+//! reproduces the paper's Figure 1 (graph for C=22) and the Figure 2
+//! update-trace visualization (positive/negative path edges).
+
+use super::codec::path_of_label;
+use super::trellis::{EdgeKind, Trellis};
+
+/// Graphviz DOT of the trellis. Optional highlighted paths: (label, color).
+pub fn to_dot(t: &Trellis, highlights: &[(u64, &str)]) -> String {
+    let mut s = String::new();
+    s.push_str("digraph ltls {\n  rankdir=LR;\n  node [shape=circle];\n");
+    let name = |v: u32| format!("v{v}");
+    // Color map edge->color from highlighted paths (later wins).
+    let mut color = vec![None; t.num_edges()];
+    for (l, c) in highlights {
+        for e in path_of_label(t, *l).edges(t) {
+            color[e as usize] = Some(*c);
+        }
+    }
+    for e in t.edges() {
+        let attr = match color[e.index as usize] {
+            Some(c) => format!(" [label=\"e{}\", color={c}, penwidth=2]", e.index),
+            None => format!(" [label=\"e{}\"]", e.index),
+        };
+        s.push_str(&format!("  {} -> {}{};\n", name(e.from), name(e.to), attr));
+    }
+    s.push_str("}\n");
+    s
+}
+
+/// Compact ASCII rendering of the trellis structure (one line per layer).
+pub fn to_ascii(t: &Trellis) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "LTLS trellis: C={} steps={} edges={} vertices={}\n",
+        t.c,
+        t.steps,
+        t.num_edges(),
+        t.num_vertices()
+    ));
+    s.push_str("  source v0\n");
+    for j in 1..=t.steps {
+        let v0 = 1 + 2 * (j - 1);
+        let exit = t
+            .exit_bits()
+            .iter()
+            .any(|&bit| bit + 1 == j)
+            .then(|| "  [state1 -> sink]")
+            .unwrap_or("");
+        s.push_str(&format!("  step {j}: v{} v{}{}\n", v0, v0 + 1, exit));
+    }
+    s.push_str(&format!("  aux v{} -> sink v{}\n", 1 + 2 * t.steps, 2 + 2 * t.steps));
+    s
+}
+
+/// Figure-2 style update trace: which edges get positive / negative /
+/// no updates for a (positive path, negative path) pair — the symmetric
+/// difference logic of §5.
+pub fn update_trace(t: &Trellis, pos_label: u64, neg_label: u64) -> String {
+    let pos = path_of_label(t, pos_label).edges(t);
+    let neg = path_of_label(t, neg_label).edges(t);
+    let mut s = format!("positive path (label {pos_label}): edges {pos:?}\n");
+    s.push_str(&format!("negative path (label {neg_label}): edges {neg:?}\n"));
+    let only_pos: Vec<_> = pos.iter().filter(|e| !neg.contains(e)).collect();
+    let only_neg: Vec<_> = neg.iter().filter(|e| !pos.contains(e)).collect();
+    let shared: Vec<_> = pos.iter().filter(|e| neg.contains(e)).collect();
+    s.push_str(&format!("positive update (+x): {only_pos:?}\n"));
+    s.push_str(&format!("negative update (−x): {only_neg:?}\n"));
+    s.push_str(&format!("untouched (shared):   {shared:?}\n"));
+    s
+}
+
+/// Edge-kind label for diagnostics.
+pub fn kind_name(k: &EdgeKind) -> &'static str {
+    match k {
+        EdgeKind::Source { .. } => "source",
+        EdgeKind::Transition { .. } => "transition",
+        EdgeKind::Aux { .. } => "aux",
+        EdgeKind::AuxSink => "aux_sink",
+        EdgeKind::EarlyExit { .. } => "early_exit",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_contains_all_edges() {
+        let t = Trellis::new(22);
+        let dot = to_dot(&t, &[(0, "green"), (21, "red")]);
+        assert!(dot.starts_with("digraph"));
+        for e in t.edges() {
+            assert!(dot.contains(&format!("e{}", e.index)));
+        }
+        assert!(dot.contains("green") && dot.contains("red"));
+    }
+
+    #[test]
+    fn ascii_mentions_structure() {
+        let t = Trellis::new(22);
+        let a = to_ascii(&t);
+        assert!(a.contains("C=22"));
+        assert!(a.contains("step 4"));
+        assert!(a.contains("v9") && a.contains("v10"));
+    }
+
+    #[test]
+    fn update_trace_partitions_edges() {
+        let t = Trellis::new(22);
+        let tr = update_trace(&t, 3, 17);
+        assert!(tr.contains("positive update"));
+        assert!(tr.contains("negative update"));
+    }
+}

@@ -1,0 +1,26 @@
+//! The LTLS trellis graph (paper §3–§4).
+//!
+//! A directed acyclic graph with exactly `C` source→sink paths and
+//! `E = 4·⌊log₂C⌋ + popcount(C)` edges:
+//!
+//! * `b = ⌊log₂ C⌋` trellis *steps*, each with 2 states;
+//! * the source connects to both states of step 1 (2 edges);
+//! * consecutive steps are completely connected (4 edges per gap);
+//! * both states of step `b` connect to an *auxiliary* vertex (2 edges),
+//!   and the auxiliary connects to the sink (1 edge) — this subgraph
+//!   carries exactly `2^b` paths;
+//! * for every set bit `i < b` of `C`, state 1 of step `i+1` gets a direct
+//!   *early-exit* edge to the sink, adding exactly `2^i` paths.
+//!
+//! Since `C = 2^b + Σ_{i<b, bit i set} 2^i`, the path count is exactly `C`.
+//! This reproduces the paper's edge counts precisely: sector (C=105) → 28,
+//! aloi/imagenet (C=1000) → 42, LSHTC1 (C=12294) → 56, Dmoz (C=11947) → 61,
+//! bibtex (C=159) → 34, Eur-Lex (C=3956) → 52 (paper Table 3).
+
+pub mod codec;
+pub mod dot;
+pub mod pathmat;
+pub mod trellis;
+
+pub use codec::Path;
+pub use trellis::{Edge, EdgeKind, Trellis};

@@ -1,0 +1,104 @@
+//! The decompression matrix `M_G ∈ {0,1}^{C×E}` (paper §4): all paths
+//! stacked. Materializing it is `O(C·E)` — only used for small-C tests,
+//! oracle decoding in unit tests, and the naive "decode by matmul"
+//! reference that the log-time decoders are validated against.
+
+use super::codec::path_of_label;
+use super::trellis::Trellis;
+
+/// Dense path matrix with row-major storage.
+pub struct PathMatrix {
+    pub c: usize,
+    pub e: usize,
+    data: Vec<f32>,
+}
+
+impl PathMatrix {
+    /// Materialize `M_G` for the trellis. `O(C·E)` memory — test scale only.
+    pub fn materialize(t: &Trellis) -> Self {
+        let (c, e) = (t.c as usize, t.num_edges());
+        let mut data = vec![0.0f32; c * e];
+        for l in 0..c {
+            let p = path_of_label(t, l as u64);
+            for edge in p.edges(t) {
+                data[l * e + edge as usize] = 1.0;
+            }
+        }
+        PathMatrix { c, e, data }
+    }
+
+    /// Row for label `l`.
+    pub fn row(&self, l: usize) -> &[f32] {
+        &self.data[l * self.e..(l + 1) * self.e]
+    }
+
+    /// Dense decode `f = M_G · h`: score of every label. `O(C·E)` — this is
+    /// exactly what LTLS avoids at prediction time; kept as the oracle.
+    pub fn decode(&self, h: &[f32]) -> Vec<f32> {
+        assert_eq!(h.len(), self.e);
+        (0..self.c)
+            .map(|l| self.row(l).iter().zip(h).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Oracle top-k labels by full enumeration (descending score, ties by
+    /// smaller label id — the same order the decoders must produce).
+    pub fn topk(&self, h: &[f32], k: usize) -> Vec<(u64, f32)> {
+        let scores = self.decode(h);
+        let mut idx: Vec<usize> = (0..self.c).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+        });
+        idx.into_iter().take(k).map(|l| (l as u64, scores[l])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matrix_shape_and_row_sums() {
+        let t = Trellis::new(22);
+        let m = PathMatrix::materialize(&t);
+        assert_eq!(m.c, 22);
+        assert_eq!(m.e, t.num_edges());
+        for l in 0..22 {
+            let s: f32 = m.row(l).iter().sum();
+            assert!(s >= 2.0 && s <= (t.steps + 2) as f32);
+        }
+    }
+
+    #[test]
+    fn decode_equals_per_label_scoring() {
+        let t = Trellis::new(105);
+        let m = PathMatrix::materialize(&t);
+        let mut rng = Rng::new(9);
+        let h: Vec<f32> = (0..m.e).map(|_| rng.normal()).collect();
+        let f = m.decode(&h);
+        for l in (0..105u64).step_by(7) {
+            let direct: f32 = super::super::codec::edges_of_label(&t, l)
+                .iter()
+                .map(|&e| h[e as usize])
+                .sum();
+            assert!((f[l as usize] - direct).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn topk_is_sorted_and_distinct() {
+        let t = Trellis::new(159);
+        let m = PathMatrix::materialize(&t);
+        let mut rng = Rng::new(10);
+        let h: Vec<f32> = (0..m.e).map(|_| rng.normal()).collect();
+        let top = m.topk(&h, 10);
+        assert_eq!(top.len(), 10);
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        let mut labels: Vec<u64> = top.iter().map(|x| x.0).collect();
+        labels.dedup();
+        assert_eq!(labels.len(), 10);
+    }
+}

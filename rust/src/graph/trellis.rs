@@ -1,0 +1,339 @@
+//! Trellis construction: vertices, edges, step layout, and O(1) edge-index
+//! arithmetic. See module docs in [`super`] for the topology.
+
+/// What role an edge plays in the trellis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Source → (step 1, state s).
+    Source { state: u8 },
+    /// (step j−1, state a) → (step j, state b), `j ≥ 2`.
+    Transition { step: u32, from: u8, to: u8 },
+    /// (step b, state s) → auxiliary.
+    Aux { state: u8 },
+    /// Auxiliary → sink (carries the 2^b "full" paths).
+    AuxSink,
+    /// (step i+1, state 1) → sink for set bit `i < b` of C (2^i paths).
+    EarlyExit { bit: u32 },
+}
+
+/// A trellis edge: endpoints are vertex ids, `kind` gives the structural
+/// role, `index` is the position of its learnable scorer `h_e` in the
+/// edge-score vector.
+#[derive(Clone, Copy, Debug)]
+pub struct Edge {
+    pub index: u32,
+    pub from: u32,
+    pub to: u32,
+    pub kind: EdgeKind,
+}
+
+/// The LTLS trellis for `C` classes.
+///
+/// Vertex numbering (matches the paper's Figure 1 for C=22):
+/// source = 0; (step j, state s) = `1 + 2(j−1) + s` for `j ∈ 1..=b`;
+/// auxiliary = `1 + 2b`; sink = `2 + 2b`.
+#[derive(Clone, Debug)]
+pub struct Trellis {
+    /// Number of classes / paths.
+    pub c: u64,
+    /// Number of trellis steps, `⌊log₂ C⌋`.
+    pub steps: u32,
+    /// All edges in index order.
+    edges: Vec<Edge>,
+    /// Set bits of C below the msb, ascending — the early-exit bits.
+    exit_bits: Vec<u32>,
+    /// exit_edge_index[k] = edge index of the early exit for `exit_bits[k]`.
+    exit_edge_base: u32,
+}
+
+impl Trellis {
+    /// Build the trellis for `c ≥ 2` classes.
+    pub fn new(c: u64) -> Self {
+        assert!(c >= 2, "LTLS needs at least 2 classes, got {c}");
+        let b = crate::util::floor_log2(c);
+        let mut edges = Vec::new();
+        let vsource = 0u32;
+        let vstate = |j: u32, s: u8| 1 + 2 * (j - 1) + s as u32;
+        let vaux = 1 + 2 * b;
+        let vsink = 2 + 2 * b;
+
+        // 2 source edges.
+        for s in 0..2u8 {
+            edges.push(Edge {
+                index: edges.len() as u32,
+                from: vsource,
+                to: vstate(1, s),
+                kind: EdgeKind::Source { state: s },
+            });
+        }
+        // 4 transition edges per step gap, order (from, to) row-major.
+        for j in 2..=b {
+            for a in 0..2u8 {
+                for t in 0..2u8 {
+                    edges.push(Edge {
+                        index: edges.len() as u32,
+                        from: vstate(j - 1, a),
+                        to: vstate(j, t),
+                        kind: EdgeKind::Transition { step: j, from: a, to: t },
+                    });
+                }
+            }
+        }
+        // 2 auxiliary-collector edges.
+        for s in 0..2u8 {
+            edges.push(Edge {
+                index: edges.len() as u32,
+                from: vstate(b, s),
+                to: vaux,
+                kind: EdgeKind::Aux { state: s },
+            });
+        }
+        // Auxiliary → sink.
+        edges.push(Edge { index: edges.len() as u32, from: vaux, to: vsink, kind: EdgeKind::AuxSink });
+        // Early exits for set bits below the msb, ascending.
+        let exit_edge_base = edges.len() as u32;
+        let mut exit_bits = Vec::new();
+        for i in 0..b {
+            if (c >> i) & 1 == 1 {
+                edges.push(Edge {
+                    index: edges.len() as u32,
+                    from: vstate(i + 1, 1),
+                    to: vsink,
+                    kind: EdgeKind::EarlyExit { bit: i },
+                });
+                exit_bits.push(i);
+            }
+        }
+        Trellis { c, steps: b, edges, exit_bits, exit_edge_base }
+    }
+
+    /// Number of learnable edges `E = 4·⌊log₂C⌋ + popcount(C)`.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Number of vertices (source + 2·steps + auxiliary + sink).
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        3 + 2 * self.steps as usize
+    }
+
+    /// All edges in index order.
+    #[inline]
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Set bits of C below the msb (ascending) — one early exit each.
+    #[inline]
+    pub fn exit_bits(&self) -> &[u32] {
+        &self.exit_bits
+    }
+
+    // ---- O(1) edge-index arithmetic (the decoder hot path uses these; ----
+    // ---- they are checked against the edge list in tests).            ----
+
+    /// Edge index: source → (step 1, state s).
+    #[inline]
+    pub fn source_edge(&self, s: u8) -> u32 {
+        s as u32
+    }
+
+    /// Edge index: (step j−1, a) → (step j, t), for `2 ≤ j ≤ steps`.
+    #[inline]
+    pub fn transition_edge(&self, j: u32, a: u8, t: u8) -> u32 {
+        debug_assert!((2..=self.steps).contains(&j));
+        2 + 4 * (j - 2) + 2 * a as u32 + t as u32
+    }
+
+    /// Edge index: (step b, state s) → auxiliary.
+    #[inline]
+    pub fn aux_edge(&self, s: u8) -> u32 {
+        self.aux_edge_base() + s as u32
+    }
+
+    #[inline]
+    fn aux_edge_base(&self) -> u32 {
+        2 + 4 * (self.steps - 1)
+    }
+
+    /// Edge index: auxiliary → sink.
+    #[inline]
+    pub fn aux_sink_edge(&self) -> u32 {
+        self.aux_edge_base() + 2
+    }
+
+    /// Edge index of the early exit at (step i+1, state 1) for exit-bit
+    /// rank `k` (position of `i` in [`Self::exit_bits`]).
+    #[inline]
+    pub fn exit_edge(&self, k: usize) -> u32 {
+        self.exit_edge_base + k as u32
+    }
+
+    /// Rank of `bit` in [`Self::exit_bits`], if it is an exit bit.
+    pub fn exit_rank(&self, bit: u32) -> Option<usize> {
+        self.exit_bits.binary_search(&bit).ok()
+    }
+
+    /// Paths entering the sink through the early exit with rank `k`: `2^bit`.
+    #[inline]
+    pub fn exit_path_count(&self, k: usize) -> u64 {
+        1u64 << self.exit_bits[k]
+    }
+
+    /// First label index routed through exit rank `k` (labels `< 2^steps`
+    /// are full-trellis paths; exits follow in ascending-bit order).
+    pub fn exit_label_base(&self, k: usize) -> u64 {
+        let mut base = 1u64 << self.steps;
+        for kk in 0..k {
+            base += self.exit_path_count(kk);
+        }
+        base
+    }
+
+    /// Model-size accounting: learnable parameters for a linear edge model
+    /// with `d` features (paper's "model size [M]" columns).
+    pub fn linear_param_count(&self, d: usize) -> usize {
+        self.num_edges() * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// E = 4·⌊log₂C⌋ + popcount(C) — and the paper's Table 3 edge counts.
+    #[test]
+    fn edge_count_formula_and_paper_values() {
+        for c in 2u64..=4096 {
+            let t = Trellis::new(c);
+            let expect = 4 * crate::util::floor_log2(c) as usize + c.count_ones() as usize;
+            assert_eq!(t.num_edges(), expect, "C={c}");
+        }
+        // Paper Table 3 "#edges" column:
+        for (c, e) in [
+            (105u64, 28usize),   // sector
+            (1000, 42),          // aloi.bin, imageNet
+            (12294, 56),         // LSHTC1
+            (11947, 61),         // Dmoz
+            (159, 34),           // bibtex
+            (3956, 52),          // Eur-Lex
+        ] {
+            assert_eq!(Trellis::new(c).num_edges(), e, "C={c}");
+        }
+    }
+
+    /// Paper's upper bound: E ≤ 5⌈log₂C⌉ + 1.
+    #[test]
+    fn edge_count_upper_bound() {
+        for c in 2u64..=10_000 {
+            let t = Trellis::new(c);
+            assert!(t.num_edges() <= 5 * crate::util::ceil_log2(c) as usize + 1, "C={c}");
+        }
+    }
+
+    /// Figure 1: C=22 has source v0, steps v1..v8 (4 steps), aux v9, sink v10.
+    #[test]
+    fn figure1_layout_c22() {
+        let t = Trellis::new(22);
+        assert_eq!(t.steps, 4);
+        assert_eq!(t.num_vertices(), 11);
+        // 22 = 10110₂ → early exits at bits 1 and 2 → steps 2 and 3.
+        assert_eq!(t.exit_bits(), &[1, 2]);
+        let exits: Vec<_> = t
+            .edges()
+            .iter()
+            .filter_map(|e| match e.kind {
+                EdgeKind::EarlyExit { bit } => Some((bit, e.from, e.to)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(exits.len(), 2);
+        // exit at bit 1 leaves (step 2, state 1) = vertex 1 + 2*1 + 1 = 4
+        assert_eq!(exits[0], (1, 4, 10));
+        // exit at bit 2 leaves (step 3, state 1) = vertex 1 + 2*2 + 1 = 6
+        assert_eq!(exits[1], (2, 6, 10));
+    }
+
+    /// Edge-index arithmetic matches the edge list for many C.
+    #[test]
+    fn edge_index_arithmetic_consistent() {
+        for c in [2u64, 3, 4, 7, 22, 105, 159, 1000, 12294] {
+            let t = Trellis::new(c);
+            for e in t.edges() {
+                let computed = match e.kind {
+                    EdgeKind::Source { state } => t.source_edge(state),
+                    EdgeKind::Transition { step, from, to } => t.transition_edge(step, from, to),
+                    EdgeKind::Aux { state } => t.aux_edge(state),
+                    EdgeKind::AuxSink => t.aux_sink_edge(),
+                    EdgeKind::EarlyExit { bit } => t.exit_edge(t.exit_rank(bit).unwrap()),
+                };
+                assert_eq!(computed, e.index, "C={c} kind={:?}", e.kind);
+            }
+        }
+    }
+
+    /// The number of source→sink paths is exactly C (DP path count).
+    #[test]
+    fn path_count_is_c() {
+        for c in (2u64..200).chain([255, 256, 257, 1000, 1024, 12294]) {
+            let t = Trellis::new(c);
+            // Count paths by DP over vertices in topological (id) order.
+            let mut count = vec![0u64; t.num_vertices()];
+            count[0] = 1;
+            for e in t.edges() {
+                let add = count[e.from as usize];
+                count[e.to as usize] += add;
+            }
+            assert_eq!(count[t.num_vertices() - 1], c, "C={c}");
+        }
+    }
+
+    /// Power-of-two C has no early exits.
+    #[test]
+    fn power_of_two_has_no_exits() {
+        for b in 1..16 {
+            let t = Trellis::new(1 << b);
+            assert!(t.exit_bits().is_empty());
+            assert_eq!(t.num_edges(), 4 * b as usize + 1);
+        }
+    }
+
+    /// Exit label bases partition the label range [2^b, C).
+    #[test]
+    fn exit_label_bases_partition() {
+        for c in [22u64, 105, 159, 3956, 12294] {
+            let t = Trellis::new(c);
+            let mut next = 1u64 << t.steps;
+            for k in 0..t.exit_bits().len() {
+                assert_eq!(t.exit_label_base(k), next);
+                next += t.exit_path_count(k);
+            }
+            assert_eq!(next, c, "C={c}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn c_below_two_panics() {
+        Trellis::new(1);
+    }
+
+    /// Edges are topologically ordered (from-vertex < to-vertex in id order
+    /// works because vertex ids increase along every path).
+    #[test]
+    fn edges_are_topologically_ordered() {
+        for c in [22u64, 1000, 12294] {
+            let t = Trellis::new(c);
+            for e in t.edges() {
+                assert!(e.from < e.to, "edge {e:?}");
+            }
+            // And edge indices respect from-vertex order (needed by the
+            // one-pass Viterbi the paper describes in §3).
+            for w in t.edges().windows(2) {
+                assert!(w[0].from <= w[1].from || matches!(w[1].kind, EdgeKind::EarlyExit { .. }));
+            }
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! # LTLS — Log-time and Log-space Extreme Classification
+//!
+//! A production-grade reproduction of *"Log-time and Log-space Extreme
+//! Classification"* (Jasinska & Karampatziakis, 2016). LTLS embeds a C-way
+//! multiclass / multilabel problem into a structured-prediction problem over
+//! a trellis DAG with exactly `C` source→sink paths and `E = O(log C)`
+//! learnable edges; (list-)Viterbi dynamic programming gives top-1 / top-k
+//! prediction in `O(k log k · log C)` with an `O(D log C)` model.
+//!
+//! The crate is organized in three layers:
+//!
+//! * **L3 (this crate)** — the full LTLS system: trellis graph construction
+//!   ([`graph`]), dynamic-programming decoders ([`decode`]), sparse averaged
+//!   SGD training with the separation ranking loss ([`model`], [`loss`],
+//!   [`train`]), the online label→path assignment policy ([`assign`]),
+//!   dataset substrates ([`data`]), every baseline the paper compares
+//!   against ([`baselines`]), evaluation harnesses ([`eval`]), a PJRT
+//!   runtime that executes AOT-compiled JAX/Pallas artifacts ([`runtime`]),
+//!   and a batching prediction server ([`coordinator`]).
+//! * **L2 (python/compile, build time only)** — the deep edge-scorer (the
+//!   paper's ImageNet fix) and its training step as JAX programs, lowered
+//!   once to HLO text by `make artifacts`.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the dense hot
+//!   spots (tiled edge-score matmul, batched trellis Viterbi), lowered into
+//!   the same HLO artifacts.
+//!
+//! Python never runs on the request path: the rust binary is self-contained
+//! once `artifacts/` is built.
+
+pub mod assign;
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod decode;
+pub mod eval;
+pub mod graph;
+pub mod loss;
+pub mod model;
+pub mod runtime;
+pub mod sparse;
+pub mod train;
+pub mod util;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,14 @@
+//! Training losses (paper §5).
+//!
+//! * [`separation`] — the separation ranking loss used for all linear
+//!   experiments: hinge on the margin between the lowest-scoring positive
+//!   path and the highest-scoring negative path.
+//! * [`trellis_softmax`] — multinomial logistic over all C paths via the
+//!   trellis log-partition function (the deep-variant loss; its gradient
+//!   w.r.t. edge scores is `posterior − indicator`).
+
+pub mod separation;
+pub mod trellis_softmax;
+
+pub use separation::{separation_loss, SeparationOutcome};
+pub use trellis_softmax::{trellis_softmax_grad, trellis_softmax_loss};

@@ -1,0 +1,129 @@
+//! Separation ranking loss (paper §5, after Crammer & Singer):
+//!
+//! `L(w, y) = max_{ℓn ∈ N(y)} max_{ℓp ∈ P(y)} (1 + F(s(ℓn)) − F(s(ℓp)))₊`
+//!
+//! Finding it needs only two labels: the *lowest-scoring positive* ℓp and
+//! the *highest-scoring negative* ℓn. ℓp is found by scoring the |P|
+//! positive paths directly (`O(|P|·log C)`); ℓn by taking the top
+//! `|P| + 1` paths with list-Viterbi and picking the best one that is not
+//! positive — exactly the procedure of §5.
+
+use crate::decode::{list_viterbi, score_label};
+use crate::graph::Trellis;
+
+/// What the loss computation found.
+#[derive(Clone, Debug)]
+pub struct SeparationOutcome {
+    /// Hinge value `(1 + F(ℓn) − F(ℓp))₊`.
+    pub loss: f32,
+    /// Lowest-scoring positive path (label id in path space).
+    pub pos: u64,
+    pub pos_score: f32,
+    /// Highest-scoring negative path.
+    pub neg: u64,
+    pub neg_score: f32,
+}
+
+/// Compute the separation ranking loss for an example whose positive
+/// labels map to trellis paths `positive_paths` (non-empty, sorted or not).
+///
+/// `h` is the edge-score vector for the example. Returns `None` when every
+/// path in the top-(|P|+1) list is positive (can only happen if |P| = C).
+pub fn separation_loss(
+    t: &Trellis,
+    h: &[f32],
+    positive_paths: &[u64],
+) -> Option<SeparationOutcome> {
+    debug_assert!(!positive_paths.is_empty());
+    // Lowest-scoring positive: direct O(|P| log C) scoring.
+    let (mut pos, mut pos_score) = (positive_paths[0], f32::INFINITY);
+    for &p in positive_paths {
+        let s = score_label(t, h, p);
+        if s < pos_score {
+            pos = p;
+            pos_score = s;
+        }
+    }
+    // Highest-scoring negative: top-(|P|+1) must contain at least one
+    // negative path.
+    let top = list_viterbi(t, h, positive_paths.len() + 1);
+    let neg = top.iter().find(|s| !positive_paths.contains(&s.label))?;
+    let margin = 1.0 + neg.score - pos_score;
+    Some(SeparationOutcome {
+        loss: margin.max(0.0),
+        pos,
+        pos_score,
+        neg: neg.label,
+        neg_score: neg.score,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::pathmat::PathMatrix;
+    use crate::util::rng::Rng;
+
+    /// Against brute force over all (ℓp, ℓn) pairs.
+    #[test]
+    fn matches_bruteforce() {
+        let mut rng = Rng::new(61);
+        for c in [8u64, 22, 105] {
+            let t = Trellis::new(c);
+            let m = PathMatrix::materialize(&t);
+            for trial in 0..30 {
+                let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+                let np = 1 + (trial % 3);
+                let pos: Vec<u64> =
+                    rng.sample_distinct(c as usize, np).into_iter().map(|v| v as u64).collect();
+                let f = m.decode(&h);
+                let worst_pos = pos
+                    .iter()
+                    .map(|&p| f[p as usize])
+                    .fold(f32::INFINITY, f32::min);
+                let best_neg = (0..c)
+                    .filter(|l| !pos.contains(l))
+                    .map(|l| f[l as usize])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let want = (1.0 + best_neg - worst_pos).max(0.0);
+                let got = separation_loss(&t, &h, &pos).unwrap();
+                assert!(
+                    (got.loss - want).abs() < 1e-4,
+                    "C={c} trial={trial}: {} vs {want}",
+                    got.loss
+                );
+                assert!((got.pos_score - worst_pos).abs() < 1e-4);
+                assert!((got.neg_score - best_neg).abs() < 1e-4);
+            }
+        }
+    }
+
+    /// Zero loss when the positive is far ahead.
+    #[test]
+    fn zero_when_separated() {
+        let t = Trellis::new(22);
+        let mut h = vec![0.0f32; t.num_edges()];
+        for e in crate::graph::codec::edges_of_label(&t, 5) {
+            h[e as usize] = 10.0;
+        }
+        let out = separation_loss(&t, &h, &[5]).unwrap();
+        assert_eq!(out.loss, 0.0);
+        assert_eq!(out.pos, 5);
+        assert_ne!(out.neg, 5);
+    }
+
+    /// Multiclass (|P| = 1): ℓn is the runner-up of the top-2.
+    #[test]
+    fn multiclass_uses_top2() {
+        let mut rng = Rng::new(62);
+        let t = Trellis::new(105);
+        for _ in 0..20 {
+            let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+            let y = rng.below(105);
+            let out = separation_loss(&t, &h, &[y]).unwrap();
+            let top2 = list_viterbi(&t, &h, 2);
+            let expect_neg = if top2[0].label == y { top2[1].label } else { top2[0].label };
+            assert_eq!(out.neg, expect_neg);
+        }
+    }
+}

@@ -1,0 +1,328 @@
+//! `ltls` — the LTLS command-line launcher.
+//!
+//! Subcommands:
+//!
+//! * `trellis --c N [--dot]` — print the trellis structure (paper Fig. 1).
+//! * `gen-data --dataset <analog> [--scale S] [--out F]` — emit a synthetic
+//!   analog in libsvm format.
+//! * `train --dataset <analog|path.svm> [--epochs N] [--lr η] [--policy
+//!   top|random] [--l1 λ]` — train linear LTLS, report precision@1,
+//!   prediction time and model size.
+//! * `tables --which 1|2|3 [--scale S] [--epochs N]` — regenerate the
+//!   paper's tables on the synthetic analogs.
+//! * `deep [--epochs N] [--steps N]` — the §6 deep-network ImageNet
+//!   experiment through the AOT PJRT runtime.
+//! * `serve [--requests N] [--batch B]` — run the batching prediction
+//!   server on a trained model and print latency/throughput metrics.
+//! * `scaling [--kmax K]` — prediction-time scaling in C (the log-time
+//!   claim).
+
+use ltls::util::args::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "trellis" => cmd_trellis(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "train" => cmd_train(&args),
+        "tables" => cmd_tables(&args),
+        "deep" => cmd_deep(&args),
+        "serve" => cmd_serve(&args),
+        "eval" => cmd_eval(&args),
+        "scaling" => cmd_scaling(&args),
+        _ => {
+            print!("{}", HELP);
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+ltls — Log-time and Log-space Extreme Classification (reproduction)
+
+USAGE: ltls <trellis|gen-data|train|eval|tables|deep|serve|scaling> [--flags]
+Run with a subcommand; see the crate docs / README for flag details.
+";
+
+fn load_dataset(args: &Args) -> Result<(ltls::data::Dataset, ltls::data::Dataset), String> {
+    let name = args.get_str("dataset", "sector");
+    let scale = args.get_f32("scale", 0.2) as f64;
+    let seed = args.get_u64("seed", 42);
+    if name.ends_with(".svm") || name.ends_with(".txt") {
+        let ds = ltls::data::libsvm::load(std::path::Path::new(name))?;
+        Ok(ltls::data::split::random_split(&ds, 0.2, seed))
+    } else {
+        let analog = ltls::data::datasets::by_name(name)
+            .ok_or(format!("unknown dataset {name:?} (try: sector, aloi.bin, LSHTC1, imageNet, Dmoz, bibtex, rcv1-regions, Eur-Lex, LSHTCwiki)"))?;
+        Ok(analog.generate(scale, seed))
+    }
+}
+
+fn cmd_trellis(args: &Args) -> i32 {
+    let c = args.get_u64("c", 22);
+    let t = ltls::graph::Trellis::new(c);
+    print!("{}", ltls::graph::dot::to_ascii(&t));
+    if args.get_bool("dot") {
+        print!("{}", ltls::graph::dot::to_dot(&t, &[]));
+    }
+    println!(
+        "paths={} edges={} (4·⌊log₂C⌋+popcount) upper bound 5⌈log₂C⌉+1 = {}",
+        c,
+        t.num_edges(),
+        5 * ltls::util::ceil_log2(c) + 1
+    );
+    0
+}
+
+fn cmd_gen_data(args: &Args) -> i32 {
+    match load_dataset(args) {
+        Ok((train, test)) => {
+            let out = args.get_str("out", "dataset.svm").to_string();
+            std::fs::write(&out, ltls::data::libsvm::dump(&train)).expect("write dataset");
+            std::fs::write(format!("{out}.test"), ltls::data::libsvm::dump(&test))
+                .expect("write test split");
+            println!("{}", ltls::data::stats::stats(&train));
+            println!("wrote {out} and {out}.test");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let (train, test) = match load_dataset(args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("{}", ltls::data::stats::stats(&train));
+    let policy = match args.get_str("policy", "top") {
+        "random" => ltls::assign::AssignPolicy::Random,
+        _ => ltls::assign::AssignPolicy::TopRanked,
+    };
+    let cfg = ltls::train::TrainConfig {
+        lr: args.get_f32("lr", 0.5),
+        l1_lambda: args.get_f32("l1", 0.0),
+        policy,
+        seed: args.get_u64("seed", 42),
+        log_every: args.get_usize("log-every", 0),
+        ..Default::default()
+    };
+    let epochs = args.get_usize("epochs", 5);
+    let timer = ltls::util::timer::Timer::new();
+    let mut tr = ltls::train::Trainer::new(cfg, train.n_features, train.n_labels);
+    for (i, m) in tr.fit(&train, epochs).iter().enumerate() {
+        println!("epoch {}: {}", i + 1, m);
+    }
+    let train_s = timer.elapsed_s();
+    let model = tr.into_model();
+    let p1 = ltls::eval::precision_at_1(&model, &test);
+    let t = ltls::eval::time_predictions(&model, &test, 1);
+    println!(
+        "precision@1 = {:.4}   train {:.2}s   predict {:.3}s ({:.1} µs/ex)   model {:.2} MB (E={})",
+        p1,
+        train_s,
+        t.total_s,
+        t.per_example_us,
+        model.bytes() as f64 / 1e6,
+        model.trellis.num_edges(),
+    );
+    // Full XC metric sweep + optional model persistence.
+    let metrics = ltls::eval::metrics::evaluate(&model, &test, &[1, 3, 5]);
+    println!("{metrics}");
+    if let Some(path) = args.get("save") {
+        match ltls::model::io::save(&model, std::path::Path::new(path)) {
+            Ok(()) => println!("saved model to {path}"),
+            Err(e) => {
+                eprintln!("error saving model: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+/// `ltls eval --model m.ltls --dataset <analog|file.svm>`: load a saved
+/// model and report the full XC metric suite on the test split.
+fn cmd_eval(args: &Args) -> i32 {
+    let Some(path) = args.get("model") else {
+        eprintln!("error: --model <file> is required");
+        return 1;
+    };
+    let model = match ltls::model::io::load(std::path::Path::new(path)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let (_, test) = match load_dataset(args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let m = ltls::eval::metrics::evaluate(&model, &test, &[1, 3, 5]);
+    println!("{} (C={}, E={})", m, model.trellis.c, model.trellis.num_edges());
+    0
+}
+
+fn cmd_tables(args: &Args) -> i32 {
+    let scale = args.get_f32("scale", 0.2) as f64;
+    let epochs = args.get_usize("epochs", 5);
+    let seed = args.get_u64("seed", 42);
+    let which = args.get_str("which", "all");
+    if which == "1" || which == "all" {
+        print!("{}", ltls::eval::tables::table1(scale, epochs, seed).render());
+    }
+    if which == "2" || which == "all" {
+        print!("{}", ltls::eval::tables::table2(scale, epochs, seed).render());
+    }
+    if which == "3" || which == "all" {
+        let rows = ltls::eval::tables::table3(scale, epochs, seed);
+        print!("{}", ltls::eval::tables::render_table3(&rows));
+    }
+    0
+}
+
+fn cmd_deep(args: &Args) -> i32 {
+    let epochs = args.get_usize("epochs", 3);
+    let steps = args.get_usize("steps", 0);
+    match run_deep(epochs, steps, args.get_f32("lr", 0.4), args.get_f32("scale", 1.0) as f64) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn run_deep(epochs: usize, step_cap: usize, lr: f32, scale: f64) -> anyhow::Result<()> {
+    use ltls::runtime::{artifacts, ArtifactMeta, DeepLtls, Engine};
+    let meta = ArtifactMeta::load(&artifacts::default_dir()).map_err(anyhow::Error::msg)?;
+    println!(
+        "artifacts: C={} D={} hidden={} batch={} E={}",
+        meta.c, meta.d, meta.hidden, meta.batch, meta.e
+    );
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    let mut deep = DeepLtls::load(&engine, meta.clone())?;
+
+    // The imageNet analog at the artifact's dimensions.
+    let analog = ltls::data::datasets::by_name("imageNet").unwrap();
+    let (train, test) = analog.generate(scale, 7);
+    let b = meta.batch;
+    let n = train.n_examples();
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut rng = ltls::util::rng::Rng::new(3);
+    let mut step = 0usize;
+    for epoch in 0..epochs {
+        rng.shuffle(&mut order);
+        let mut loss_sum = 0.0f64;
+        let mut batches = 0;
+        for chunk in order.chunks(b) {
+            loss_sum += deep.train_batch(&train, chunk, lr)? as f64;
+            batches += 1;
+            step += 1;
+            if step_cap > 0 && step >= step_cap {
+                break;
+            }
+        }
+        let p1 = deep.precision_at_1(&test)?;
+        println!(
+            "epoch {}: mean loss {:.4}  test p@1 {:.4}",
+            epoch + 1,
+            loss_sum / batches.max(1) as f64,
+            p1
+        );
+        if step_cap > 0 && step >= step_cap {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use ltls::coordinator::{server::SparsePath, PredictServer, ServerConfig};
+    let (train, test) = match load_dataset(args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let mut tr = ltls::train::Trainer::new(
+        ltls::train::TrainConfig::default(),
+        train.n_features,
+        train.n_labels,
+    );
+    tr.fit(&train, args.get_usize("epochs", 3));
+    let model = tr.into_model();
+    let cfg = ServerConfig {
+        batcher: ltls::coordinator::BatcherConfig {
+            max_batch: args.get_usize("batch", 64),
+            max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 500)),
+        },
+        queue_depth: 1024,
+    };
+    let server = PredictServer::start(SparsePath(model), cfg);
+    let n_req = args.get_usize("requests", 20_000);
+    let timer = ltls::util::timer::Timer::new();
+    let mut pending = std::collections::VecDeque::new();
+    for i in 0..n_req {
+        let row = test.row(i % test.n_examples());
+        pending.push_back(server.submit(row.indices.to_vec(), row.values.to_vec(), 1));
+        if pending.len() >= 256 {
+            pending.pop_front().unwrap().recv().unwrap();
+        }
+    }
+    for rx in pending {
+        rx.recv().unwrap();
+    }
+    let secs = timer.elapsed_s();
+    println!("{}", server.metrics.summary());
+    println!("throughput: {:.0} req/s", n_req as f64 / secs);
+    server.shutdown();
+    0
+}
+
+fn cmd_scaling(args: &Args) -> i32 {
+    use ltls::util::rng::Rng;
+    let kmax = args.get_usize("kmax", 20);
+    println!("{:<14}{:>8}{:>14}{:>14}{:>16}", "C", "E", "viterbi", "top-10", "model KB (D=1k)");
+    let mut rng = Rng::new(9);
+    for exp in (4..=kmax.min(40)).step_by(4) {
+        let c = (1u64 << exp) + 12345 % (1 << exp);
+        let t = ltls::graph::Trellis::new(c);
+        let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+        let timer = ltls::util::timer::Timer::new();
+        let iters = 20_000;
+        for _ in 0..iters {
+            std::hint::black_box(ltls::decode::viterbi(&t, std::hint::black_box(&h)));
+        }
+        let v_ns = timer.elapsed_s() * 1e9 / iters as f64;
+        let timer = ltls::util::timer::Timer::new();
+        for _ in 0..iters / 10 {
+            std::hint::black_box(ltls::decode::list_viterbi(&t, std::hint::black_box(&h), 10));
+        }
+        let l_ns = timer.elapsed_s() * 1e9 / (iters / 10) as f64;
+        println!(
+            "{:<14}{:>8}{:>12.0}ns{:>12.0}ns{:>16.1}",
+            c,
+            t.num_edges(),
+            v_ns,
+            l_ns,
+            (t.num_edges() * 1000 * 4) as f64 / 1024.0
+        );
+    }
+    println!("(prediction cost grows with E = O(log C); model size is E·D floats)");
+    0
+}

@@ -1,0 +1,163 @@
+//! Weight averaging for SGD (paper §5: "stochastic gradient descent with
+//! averaging").
+//!
+//! The averaged iterate `w̄_T = (1/T) Σ_t w_t` is maintained lazily so the
+//! sparse hot path stays `O(nnz)`: with `u = Σ_τ (τ−1)·Δ_τ` accumulated at
+//! each sparse update, `(1/T) Σ_t w_t = w_T − u/T` exactly (each `Δ_τ`
+//! appears in the `T−τ+1` iterates `w_τ … w_T`).
+//!
+//! Storage mirrors [`super::linear::LinearEdgeModel`]'s feature-major
+//! layout, and [`Averager::record_edges`] fuses a separation-loss update
+//! the same way.
+
+use crate::sparse::SparseVec;
+
+/// Averaging companion for a feature-major `D × E` weight matrix.
+#[derive(Clone, Debug)]
+pub struct Averager {
+    /// Shadow accumulators, feature-major like the model.
+    u: Vec<f32>,
+    u_bias: Vec<f32>,
+    /// Current step counter (1-based after the first `tick`).
+    t: u64,
+    n_edges: usize,
+}
+
+impl Averager {
+    pub fn new(n_edges: usize, n_features: usize) -> Self {
+        Averager { u: vec![0.0; n_edges * n_features], u_bias: vec![0.0; n_edges], t: 0, n_edges }
+    }
+
+    /// Advance the step counter; call once per SGD example.
+    #[inline]
+    pub fn tick(&mut self) {
+        self.t += 1;
+    }
+
+    /// Record a sparse update `w_e += scale·x` made at the current step.
+    #[inline]
+    pub fn record(&mut self, e: usize, x: SparseVec, scale: f32) {
+        let ne = self.n_edges;
+        let ts = (self.t - 1) as f32 * scale;
+        for (&i, &v) in x.indices.iter().zip(x.values) {
+            self.u[i as usize * ne + e] += ts * v;
+        }
+        self.u_bias[e] += ts * 0.1;
+    }
+
+    /// Fused twin of [`crate::model::LinearEdgeModel::update_edges`].
+    pub fn record_edges(&mut self, pos: &[u32], neg: &[u32], x: SparseVec, scale: f32) {
+        let ne = self.n_edges;
+        let ts = (self.t - 1) as f32 * scale;
+        for (&i, &v) in x.indices.iter().zip(x.values) {
+            let strip = &mut self.u[i as usize * ne..(i as usize + 1) * ne];
+            let sv = ts * v;
+            for &e in pos {
+                strip[e as usize] += sv;
+            }
+            for &e in neg {
+                strip[e as usize] -= sv;
+            }
+        }
+        for &e in pos {
+            self.u_bias[e as usize] += ts * 0.1;
+        }
+        for &e in neg {
+            self.u_bias[e as usize] -= ts * 0.1;
+        }
+    }
+
+    /// Produce the averaged weights from the final weights:
+    /// `w̄ = w − u/T` (passthrough if no steps were taken).
+    pub fn averaged(&self, w: &[f32], bias: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        if self.t == 0 {
+            return (w.to_vec(), bias.to_vec());
+        }
+        let inv_t = 1.0 / self.t as f32;
+        let aw = w.iter().zip(&self.u).map(|(wv, uv)| wv - uv * inv_t).collect();
+        let ab = bias.iter().zip(&self.u_bias).map(|(wv, uv)| wv - uv * inv_t).collect();
+        (aw, ab)
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LinearEdgeModel;
+    use crate::util::rng::Rng;
+
+    /// Lazy averaging equals the brute-force running mean of iterates.
+    #[test]
+    fn matches_bruteforce_average() {
+        let (e, d) = (3usize, 8usize);
+        let mut m = LinearEdgeModel::new(e, d);
+        let mut avg = Averager::new(e, d);
+        let mut rng = Rng::new(51);
+
+        let mut sum_w = vec![0.0f64; e * d];
+        let steps = 57;
+        let mut idx_buf: Vec<u32> = Vec::new();
+        let mut val_buf: Vec<f32> = Vec::new();
+        for _ in 0..steps {
+            avg.tick();
+            idx_buf.clear();
+            val_buf.clear();
+            let mut last = 0u32;
+            for _ in 0..3 {
+                last += 1 + rng.below(2) as u32;
+                idx_buf.push(last.min(d as u32 - 1));
+                val_buf.push(rng.normal());
+            }
+            idx_buf.dedup();
+            val_buf.truncate(idx_buf.len());
+            let x = SparseVec::new(&idx_buf, &val_buf);
+            let edge = rng.index(e);
+            let scale = rng.normal() * 0.1;
+            m.update_edge(edge, x, scale);
+            avg.record(edge, x, scale);
+            for (s, w) in sum_w.iter_mut().zip(&m.w) {
+                *s += *w as f64;
+            }
+        }
+        let (aw, _) = avg.averaged(&m.w, &m.bias);
+        for i in 0..e * d {
+            let brute = (sum_w[i] / steps as f64) as f32;
+            assert!((aw[i] - brute).abs() < 1e-4, "i={i}: {} vs {brute}", aw[i]);
+        }
+    }
+
+    /// record_edges == record per edge with signs.
+    #[test]
+    fn fused_record_matches_per_edge() {
+        let (e, d) = (6usize, 5usize);
+        let mut a = Averager::new(e, d);
+        let mut b = Averager::new(e, d);
+        let idx = [0u32, 4];
+        let val = [1.0f32, -2.0];
+        let x = SparseVec::new(&idx, &val);
+        for _ in 0..3 {
+            a.tick();
+            b.tick();
+            a.record_edges(&[1, 2], &[5], x, 0.7);
+            b.record(1, x, 0.7);
+            b.record(2, x, 0.7);
+            b.record(5, x, -0.7);
+        }
+        assert_eq!(a.u, b.u);
+        assert_eq!(a.u_bias, b.u_bias);
+    }
+
+    #[test]
+    fn no_updates_passthrough() {
+        let avg = Averager::new(2, 4);
+        let w = vec![1.0f32; 8];
+        let b = vec![0.5f32; 2];
+        let (aw, ab) = avg.averaged(&w, &b);
+        assert_eq!(aw, w);
+        assert_eq!(ab, b);
+    }
+}

@@ -1,0 +1,182 @@
+//! Model persistence: save / load a trained LTLS model (weights + trellis
+//! + label↔path assignment) as a single self-describing binary file, so
+//! `ltls train` can hand a model to `ltls serve` / `ltls eval` across
+//! processes.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "LTLS" | version u32 | C u64 | D u64 | E u64 | n_labels u64
+//! bias  [E f32] | weights [D*E f32, feature-major]
+//! n_pairs u64 | (label u32, path u64) * n_pairs
+//! ```
+
+use crate::assign::{AssignPolicy, Assigner};
+use crate::graph::Trellis;
+use crate::model::LinearEdgeModel;
+use crate::train::TrainedModel;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"LTLS";
+const VERSION: u32 = 1;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.i + n > self.b.len() {
+            return Err(format!("truncated model file at byte {}", self.i));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Serialize a trained model.
+pub fn serialize(m: &TrainedModel) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + m.model.w.len() * 4);
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_u64(&mut out, m.trellis.c);
+    put_u64(&mut out, m.model.n_features as u64);
+    put_u64(&mut out, m.model.n_edges as u64);
+    let pairs: Vec<(u32, u64)> = m.assigner.table.pairs().collect();
+    let n_labels = pairs.iter().map(|&(l, _)| l as u64 + 1).max().unwrap_or(0);
+    put_u64(&mut out, n_labels);
+    for &b in &m.model.bias {
+        out.extend_from_slice(&b.to_le_bytes());
+    }
+    for &w in &m.model.w {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    put_u64(&mut out, pairs.len() as u64);
+    for (l, p) in pairs {
+        put_u32(&mut out, l);
+        put_u64(&mut out, p);
+    }
+    out
+}
+
+/// Deserialize a trained model.
+pub fn deserialize(bytes: &[u8]) -> Result<TrainedModel, String> {
+    let mut r = Reader { b: bytes, i: 0 };
+    if r.take(4)? != MAGIC {
+        return Err("not an LTLS model file (bad magic)".into());
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(format!("unsupported model version {version}"));
+    }
+    let c = r.u64()?;
+    let d = r.u64()? as usize;
+    let e = r.u64()? as usize;
+    let n_labels = r.u64()? as usize;
+    let trellis = Trellis::new(c);
+    if trellis.num_edges() != e {
+        return Err(format!("edge count mismatch: file {e}, trellis {}", trellis.num_edges()));
+    }
+    let bias = r.f32s(e)?;
+    let w = r.f32s(d * e)?;
+    let mut model = LinearEdgeModel::new(e, d);
+    model.bias = bias;
+    model.w = w;
+    let mut assigner = Assigner::new(AssignPolicy::Identity, n_labels.max(1), &trellis, 0);
+    let n_pairs = r.u64()? as usize;
+    for _ in 0..n_pairs {
+        let l = r.u32()?;
+        let p = r.u64()?;
+        assigner.table.bind(l, p);
+    }
+    if r.i != bytes.len() {
+        return Err(format!("{} trailing bytes", bytes.len() - r.i));
+    }
+    Ok(TrainedModel { trellis, model, assigner })
+}
+
+/// Save to a file.
+pub fn save(m: &TrainedModel, path: &Path) -> Result<(), String> {
+    let bytes = serialize(m);
+    let mut f = std::fs::File::create(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    f.write_all(&bytes).map_err(|e| e.to_string())
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> Result<TrainedModel, String> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?
+        .read_to_end(&mut bytes)
+        .map_err(|e| e.to_string())?;
+    deserialize(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::eval::Predictor;
+    use crate::train::{TrainConfig, Trainer};
+
+    fn trained() -> (TrainedModel, crate::data::Dataset) {
+        let ds = SyntheticSpec::multiclass(600, 400, 24).seed(61).generate();
+        let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+        tr.fit(&ds, 3);
+        (tr.into_model(), ds)
+    }
+
+    #[test]
+    fn roundtrip_preserves_predictions() {
+        let (m, ds) = trained();
+        let bytes = serialize(&m);
+        let m2 = deserialize(&bytes).unwrap();
+        assert_eq!(m2.trellis.c, m.trellis.c);
+        assert_eq!(m2.model.w, m.model.w);
+        for i in 0..50 {
+            assert_eq!(m.topk(ds.row(i), 3), m2.topk(ds.row(i), 3), "row {i}");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let (m, _) = trained();
+        let path = std::env::temp_dir().join("ltls_model_io_test.bin");
+        save(&m, &path).unwrap();
+        let m2 = load(&path).unwrap();
+        assert_eq!(m2.model.bias, m.model.bias);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_files() {
+        let (m, _) = trained();
+        let mut bytes = serialize(&m);
+        assert!(deserialize(&bytes[..10]).is_err()); // truncated
+        bytes[0] = b'X';
+        assert!(deserialize(&bytes).is_err()); // bad magic
+        let (m2, _) = trained();
+        let mut ok = serialize(&m2);
+        ok.push(0); // trailing garbage
+        assert!(deserialize(&ok).is_err());
+    }
+}

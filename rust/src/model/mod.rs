@@ -1,0 +1,17 @@
+//! Underlying models for edge scores `h(w, x)` (paper §4.1).
+//!
+//! The basic model is one linear scorer per edge, `W ∈ R^{E×D}` — the
+//! model is then the low-rank factorization `f = M_G · W · x`. Training is
+//! sparse averaged SGD (§5): an update touches only the edges in the
+//! symmetric difference of two paths and only the active features of `x`.
+//!
+//! The deep variant (the ImageNet fix of §6) lives in `python/compile` and
+//! is executed via [`crate::runtime`]; this module also hosts the L1
+//! soft-thresholding predictor of §6.
+
+pub mod averaged;
+pub mod io;
+pub mod l1;
+pub mod linear;
+
+pub use linear::LinearEdgeModel;

@@ -1,0 +1,158 @@
+//! Artifact metadata: parses `artifacts/meta.json` and validates the
+//! cross-language trellis-layout contract against the rust implementation.
+
+use crate::graph::Trellis;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Parsed meta.json.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub c: usize,
+    pub d: usize,
+    pub hidden: usize,
+    pub batch: usize,
+    pub e: usize,
+    pub dir: PathBuf,
+}
+
+impl ArtifactMeta {
+    /// Load and validate from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<ArtifactMeta, String> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))
+            .map_err(|e| format!("{}/meta.json: {e} (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text)?;
+        let get = |k: &str| -> Result<usize, String> {
+            j.get(k).and_then(|v| v.as_usize()).ok_or(format!("meta.json missing {k}"))
+        };
+        let meta = ArtifactMeta {
+            c: get("c")?,
+            d: get("d")?,
+            hidden: get("hidden")?,
+            batch: get("batch")?,
+            e: get("e")?,
+            dir: dir.to_path_buf(),
+        };
+        meta.validate_trellis(&j)?;
+        Ok(meta)
+    }
+
+    /// The cross-language contract: python's trellis layout must equal the
+    /// rust one (same E, steps, exit bits, aux-sink index).
+    fn validate_trellis(&self, j: &Json) -> Result<(), String> {
+        let t = Trellis::new(self.c as u64);
+        if t.num_edges() != self.e {
+            return Err(format!("E mismatch: rust {} vs meta {}", t.num_edges(), self.e));
+        }
+        let tj = j.get("trellis").ok_or("meta.json missing trellis")?;
+        let steps = tj.get("steps").and_then(|v| v.as_usize()).ok_or("trellis.steps")?;
+        if steps != t.steps as usize {
+            return Err(format!("steps mismatch: rust {} vs meta {steps}", t.steps));
+        }
+        let exit_bits = tj
+            .get("exit_bits")
+            .and_then(|v| v.as_usize_arr())
+            .ok_or("trellis.exit_bits")?;
+        let rust_bits: Vec<usize> = t.exit_bits().iter().map(|&b| b as usize).collect();
+        if exit_bits != rust_bits {
+            return Err(format!("exit_bits mismatch: rust {rust_bits:?} vs meta {exit_bits:?}"));
+        }
+        let aux = tj.get("aux_sink_edge").and_then(|v| v.as_usize()).ok_or("aux_sink_edge")?;
+        if aux != t.aux_sink_edge() as usize {
+            return Err(format!("aux_sink mismatch: rust {} vs meta {aux}", t.aux_sink_edge()));
+        }
+        Ok(())
+    }
+
+    /// Path of an artifact HLO file.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Read an init-params tensor dumped by aot.py (raw little-endian f32).
+    pub fn init_param(&self, name: &str) -> Result<Vec<f32>, String> {
+        let p = self.dir.join("init_params").join(format!("{name}.f32"));
+        let bytes = std::fs::read(&p).map_err(|e| format!("{}: {e}", p.display()))?;
+        if bytes.len() % 4 != 0 {
+            return Err(format!("{}: length {} not divisible by 4", p.display(), bytes.len()));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Parameter shapes in artifact order (w1,b1,w2,b2,w3,b3).
+    pub fn param_shapes(&self) -> Vec<(&'static str, Vec<usize>)> {
+        vec![
+            ("w1", vec![self.d, self.hidden]),
+            ("b1", vec![self.hidden]),
+            ("w2", vec![self.hidden, self.hidden]),
+            ("b2", vec![self.hidden]),
+            ("w3", vec![self.hidden, self.e]),
+            ("b3", vec![self.e]),
+        ]
+    }
+}
+
+/// Locate the artifacts directory: $LTLS_ARTIFACTS or ./artifacts upward.
+pub fn default_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("LTLS_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("meta.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_meta(dir: &Path, c: usize, tweak: impl Fn(&mut String)) {
+        let t = Trellis::new(c as u64);
+        let bits: Vec<String> = t.exit_bits().iter().map(|b| b.to_string()).collect();
+        let mut s = format!(
+            r#"{{"c": {c}, "d": 10, "hidden": 4, "batch": 2, "e": {e},
+                "trellis": {{"c": {c}, "steps": {st}, "num_edges": {e},
+                              "exit_bits": [{bits}], "aux_sink_edge": {aux}}}}}"#,
+            e = t.num_edges(),
+            st = t.steps,
+            bits = bits.join(","),
+            aux = t.aux_sink_edge(),
+        );
+        tweak(&mut s);
+        std::fs::write(dir.join("meta.json"), s).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_meta_and_rejects_mismatch() {
+        let dir = std::env::temp_dir().join("ltls_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_meta(&dir, 105, |_| {});
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(m.c, 105);
+        assert_eq!(m.e, 28);
+        assert_eq!(m.param_shapes()[0].1, vec![10, 4]);
+
+        // Corrupt the exit bits → must fail the contract.
+        write_meta(&dir, 105, |s| {
+            *s = s.replace("\"exit_bits\": [0,3,5]", "\"exit_bits\": [1,3,5]");
+        });
+        assert!(ArtifactMeta::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = ArtifactMeta::load(Path::new("/nonexistent/abc")).unwrap_err();
+        assert!(err.contains("make artifacts"));
+    }
+}

@@ -1,0 +1,127 @@
+//! The deep LTLS variant driven from rust (paper §6: "we have used LTLS
+//! with a deep network ... a network with 2 layers, 500 hidden units in
+//! each, and ReLU nonlinearities").
+//!
+//! Holds the MLP parameters as host tensors, executes the AOT'd
+//! `mlp_train_step` for SGD and `ltls_infer` / `mlp_fwd` for prediction.
+//! Label ↔ path mapping for the deep variant is the identity (fixed at
+//! lowering time).
+
+use super::artifacts::ArtifactMeta;
+use super::pjrt::{Engine, Executable, Tensor};
+use crate::data::Dataset;
+use anyhow::{anyhow, Result};
+
+/// Deep LTLS model state + compiled programs.
+pub struct DeepLtls {
+    pub meta: ArtifactMeta,
+    params: Vec<Tensor>, // w1,b1,w2,b2,w3,b3
+    train_step: Executable,
+    infer: Executable,
+    fwd: Executable,
+    /// Path indicators per label, cached (C × E bitmap rows as f32).
+    path_rows: Vec<Vec<f32>>,
+}
+
+impl DeepLtls {
+    /// Load artifacts and the He-initialized parameters dumped by aot.py.
+    pub fn load(engine: &Engine, meta: ArtifactMeta) -> Result<DeepLtls> {
+        let mut params = Vec::new();
+        for (name, shape) in meta.param_shapes() {
+            let data = meta.init_param(name).map_err(|e| anyhow!(e))?;
+            if data.len() != shape.iter().product::<usize>() {
+                return Err(anyhow!("param {name}: {} elems, want {:?}", data.len(), shape));
+            }
+            params.push(Tensor::f32(data, &shape));
+        }
+        let train_step = engine.load_hlo(&meta.hlo_path("mlp_train_step"))?;
+        let infer = engine.load_hlo(&meta.hlo_path("ltls_infer"))?;
+        let fwd = engine.load_hlo(&meta.hlo_path("mlp_fwd"))?;
+        let t = crate::graph::Trellis::new(meta.c as u64);
+        let path_rows = (0..meta.c as u64)
+            .map(|l| crate::graph::codec::path_of_label(&t, l).indicator(&t))
+            .collect();
+        Ok(DeepLtls { meta, params, train_step, infer, fwd, path_rows })
+    }
+
+    /// One SGD step on a batch (rows of `ds`); returns the loss.
+    /// Short batches are padded by repeating rows (averaging over dupes is
+    /// harmless for SGD).
+    pub fn train_batch(&mut self, ds: &Dataset, rows: &[usize], lr: f32) -> Result<f32> {
+        let b = self.meta.batch;
+        let d = self.meta.d;
+        let e = self.meta.e;
+        let mut x = vec![0.0f32; b * d];
+        let mut s = vec![0.0f32; b * e];
+        for i in 0..b {
+            let r = rows[i % rows.len()];
+            let row = ds.row(r);
+            for (&fi, &fv) in row.indices.iter().zip(row.values) {
+                x[i * d + fi as usize] = fv;
+            }
+            let label = ds.labels_of(r)[0] as usize;
+            for (j, &v) in self.path_rows[label].iter().enumerate() {
+                s[i * e + j] = v;
+            }
+        }
+        let mut inputs = self.params.clone();
+        inputs.push(Tensor::f32(x, &[b, d]));
+        inputs.push(Tensor::f32(s, &[b, e]));
+        inputs.push(Tensor::scalar_f32(lr));
+        let mut out = self.train_step.run(&inputs)?;
+        let loss = out.pop().ok_or(anyhow!("train_step returned nothing"))?;
+        self.params = out;
+        Ok(loss.as_f32()?[0])
+    }
+
+    /// Batched top-1 prediction (pads the final short batch).
+    pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Result<Vec<u32>> {
+        let b = self.meta.batch;
+        let d = self.meta.d;
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(b) {
+            let mut x = vec![0.0f32; b * d];
+            for (i, &r) in chunk.iter().enumerate() {
+                let row = ds.row(r);
+                for (&fi, &fv) in row.indices.iter().zip(row.values) {
+                    x[i * d + fi as usize] = fv;
+                }
+            }
+            let mut inputs = self.params.clone();
+            inputs.push(Tensor::f32(x, &[b, d]));
+            let res = self.infer.run(&inputs)?;
+            let labels = res[0].as_i32()?;
+            out.extend(labels.iter().take(chunk.len()).map(|&l| l as u32));
+        }
+        Ok(out)
+    }
+
+    /// Raw edge scores for a dense batch (used by the coordinator's dense
+    /// path and the runtime micro-benches).
+    /// `rows` must equal the lowered batch size (`meta.batch`).
+    pub fn edge_scores(&self, x: Vec<f32>, rows: usize) -> Result<Vec<f32>> {
+        let d = self.meta.d;
+        debug_assert_eq!(rows, self.meta.batch, "mlp_fwd is lowered for a fixed batch");
+        debug_assert_eq!(x.len(), rows * d);
+        let mut inputs = self.params.clone();
+        inputs.push(Tensor::f32(x, &[rows, d]));
+        let res = self.fwd.run(&inputs)?;
+        Ok(res[0].as_f32()?.to_vec())
+    }
+
+    /// Precision@1 on a dataset (batched over the whole set).
+    pub fn precision_at_1(&self, ds: &Dataset) -> Result<f64> {
+        let rows: Vec<usize> = (0..ds.n_examples()).collect();
+        let preds = self.predict(ds, &rows)?;
+        let hits = preds
+            .iter()
+            .zip(rows.iter())
+            .filter(|(p, &r)| ds.labels_of(r).contains(p))
+            .count();
+        Ok(hits as f64 / rows.len().max(1) as f64)
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|t| t.shape().iter().product::<usize>()).sum()
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts emitted by
+//! `python/compile/aot.py` and executes them from the rust request path.
+//!
+//! Python never runs at serving or training time — `make artifacts` lowers
+//! the JAX/Pallas programs to HLO *text* once (see DESIGN.md §5 for why
+//! text, not serialized protos), and [`Engine`] compiles them with the
+//! local PJRT CPU client.
+//!
+//! Layout:
+//! * [`artifacts`] — meta.json parsing + trellis-layout cross-check.
+//! * [`pjrt`] — thin typed wrapper over the `xla` crate (load → compile →
+//!   execute with f32/i32 tensors).
+//! * [`deep`] — the deep LTLS model driver: parameter state, train steps,
+//!   batched inference (the paper's §6 ImageNet experiment, from rust).
+
+pub mod artifacts;
+pub mod deep;
+pub mod pjrt;
+
+pub use artifacts::ArtifactMeta;
+pub use deep::DeepLtls;
+pub use pjrt::{Engine, Executable, Tensor};

@@ -1,0 +1,106 @@
+//! Compressed sparse row matrix: the storage for datasets (`n × D`
+//! examples) shared by LTLS and every baseline.
+
+use super::vec::SparseVec;
+
+/// CSR matrix with u32 column indices and f32 values.
+#[derive(Clone, Debug, Default)]
+pub struct CsrMatrix {
+    pub n_cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    pub fn new(n_cols: usize) -> Self {
+        CsrMatrix { n_cols, indptr: vec![0], indices: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Append a row given ascending (index, value) pairs.
+    pub fn push_row(&mut self, indices: &[u32], values: &[f32]) {
+        debug_assert_eq!(indices.len(), values.len());
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]));
+        debug_assert!(indices.iter().all(|&i| (i as usize) < self.n_cols));
+        self.indices.extend_from_slice(indices);
+        self.values.extend_from_slice(values);
+        self.indptr.push(self.indices.len());
+    }
+
+    /// Borrow row `i` as a sparse vector.
+    #[inline]
+    pub fn row(&self, i: usize) -> SparseVec<'_> {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        SparseVec { indices: &self.indices[s..e], values: &self.values[s..e] }
+    }
+
+    /// Mean nnz per row (dataset density diagnostic).
+    pub fn mean_nnz(&self) -> f64 {
+        if self.n_rows() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n_rows() as f64
+        }
+    }
+
+    /// Bytes of storage (model/dataset size accounting).
+    pub fn bytes(&self) -> usize {
+        self.indices.len() * 4 + self.values.len() * 4 + self.indptr.len() * 8
+    }
+
+    /// Select a subset of rows into a new matrix (train/test splits).
+    pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
+        let mut out = CsrMatrix::new(self.n_cols);
+        for &r in rows {
+            let v = self.row(r);
+            out.push_row(v.indices, v.values);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        let mut m = CsrMatrix::new(10);
+        m.push_row(&[0, 5], &[1.0, 2.0]);
+        m.push_row(&[], &[]);
+        m.push_row(&[9], &[3.0]);
+        m
+    }
+
+    #[test]
+    fn rows_roundtrip() {
+        let m = sample();
+        assert_eq!(m.n_rows(), 3);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row(0).indices, &[0, 5]);
+        assert_eq!(m.row(1).nnz(), 0);
+        assert_eq!(m.row(2).values, &[3.0]);
+        assert!((m.mean_nnz() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn select_rows_reorders() {
+        let m = sample();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.n_rows(), 2);
+        assert_eq!(s.row(0).indices, &[9]);
+        assert_eq!(s.row(1).indices, &[0, 5]);
+    }
+
+    #[test]
+    fn bytes_positive() {
+        assert!(sample().bytes() > 0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Sparse linear-algebra substrate: sparse feature vectors and CSR example
+//! matrices. Extreme-classification datasets are extremely sparse (e.g.
+//! LSHTC1 has ~347k features with ~100 active per example), so the entire
+//! training hot path operates on index/value pairs.
+
+pub mod csr;
+pub mod vec;
+
+pub use csr::CsrMatrix;
+pub use vec::SparseVec;

@@ -1,0 +1,147 @@
+//! Sparse vector view and ops used by the SGD hot loop.
+
+/// A borrowed sparse vector: parallel (index, value) slices, indices
+/// strictly ascending.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseVec<'a> {
+    pub indices: &'a [u32],
+    pub values: &'a [f32],
+}
+
+impl<'a> SparseVec<'a> {
+    pub fn new(indices: &'a [u32], values: &'a [f32]) -> Self {
+        debug_assert_eq!(indices.len(), values.len());
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "indices must ascend");
+        SparseVec { indices, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Dot product with a dense vector.
+    #[inline]
+    pub fn dot_dense(&self, w: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (&i, &v) in self.indices.iter().zip(self.values) {
+            acc += w[i as usize] * v;
+        }
+        acc
+    }
+
+    /// `w += scale * self` into a dense vector.
+    #[inline]
+    pub fn axpy_into(&self, scale: f32, w: &mut [f32]) {
+        for (&i, &v) in self.indices.iter().zip(self.values) {
+            w[i as usize] += scale * v;
+        }
+    }
+
+    /// Squared L2 norm.
+    pub fn norm2(&self) -> f32 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+
+    /// Materialize as a dense vector of length `d`.
+    pub fn to_dense(&self, d: usize) -> Vec<f32> {
+        let mut out = vec![0.0; d];
+        for (&i, &v) in self.indices.iter().zip(self.values) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// Sparse-sparse dot product (two-pointer merge).
+    pub fn dot_sparse(&self, other: &SparseVec) -> f32 {
+        let (mut i, mut j, mut acc) = (0usize, 0usize, 0.0f32);
+        while i < self.indices.len() && j < other.indices.len() {
+            match self.indices[i].cmp(&other.indices[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += self.values[i] * other.values[j];
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        acc
+    }
+}
+
+/// An owned sparse vector (builder for synthetic data and tests).
+#[derive(Clone, Debug, Default)]
+pub struct SparseVecOwned {
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseVecOwned {
+    pub fn view(&self) -> SparseVec<'_> {
+        SparseVec::new(&self.indices, &self.values)
+    }
+
+    pub fn push(&mut self, i: u32, v: f32) {
+        debug_assert!(self.indices.last().map(|&l| l < i).unwrap_or(true));
+        self.indices.push(i);
+        self.values.push(v);
+    }
+
+    /// L2-normalize in place (no-op on zero vectors).
+    pub fn l2_normalize(&mut self) {
+        let n = self.view().norm2().sqrt();
+        if n > 0.0 {
+            for v in &mut self.values {
+                *v /= n;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_dense_and_axpy() {
+        let idx = [1u32, 3, 5];
+        let val = [1.0f32, 2.0, -1.0];
+        let sv = SparseVec::new(&idx, &val);
+        let mut w = vec![0.5f32; 6];
+        assert!((sv.dot_dense(&w) - (0.5 + 1.0 - 0.5)).abs() < 1e-6);
+        sv.axpy_into(2.0, &mut w);
+        assert_eq!(w[1], 2.5);
+        assert_eq!(w[3], 4.5);
+        assert_eq!(w[5], -1.5);
+        assert_eq!(w[0], 0.5);
+    }
+
+    #[test]
+    fn sparse_sparse_dot() {
+        let a = SparseVecOwned { indices: vec![0, 2, 4], values: vec![1.0, 2.0, 3.0] };
+        let b = SparseVecOwned { indices: vec![2, 3, 4], values: vec![5.0, 7.0, 11.0] };
+        assert_eq!(a.view().dot_sparse(&b.view()), 2.0 * 5.0 + 3.0 * 11.0);
+    }
+
+    #[test]
+    fn normalize_and_dense_roundtrip() {
+        let mut v = SparseVecOwned { indices: vec![0, 3], values: vec![3.0, 4.0] };
+        v.l2_normalize();
+        assert!((v.view().norm2() - 1.0).abs() < 1e-6);
+        let d = v.view().to_dense(5);
+        assert_eq!(d.len(), 5);
+        assert!((d[0] - 0.6).abs() < 1e-6);
+        assert!((d[3] - 0.8).abs() < 1e-6);
+        assert_eq!(d[1], 0.0);
+    }
+
+    #[test]
+    fn empty_vector_ops() {
+        let sv = SparseVec::new(&[], &[]);
+        assert_eq!(sv.nnz(), 0);
+        assert_eq!(sv.dot_dense(&[1.0, 2.0]), 0.0);
+        let mut w = vec![1.0f32; 2];
+        sv.axpy_into(5.0, &mut w);
+        assert_eq!(w, vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,66 @@
+//! Trainer hyper-parameters.
+
+use crate::assign::AssignPolicy;
+
+/// Configuration for [`super::Trainer`].
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Base learning rate η.
+    pub lr: f32,
+    /// Learning-rate decay: η_t = lr / (1 + decay·t)^power.
+    pub decay: f32,
+    pub power: f32,
+    /// Use averaged weights for the final model (paper §5).
+    pub averaging: bool,
+    /// Label→path assignment policy (paper §5.1).
+    pub policy: AssignPolicy,
+    /// L1 soft-threshold λ applied to the *final* model (paper §6); 0 = off.
+    pub l1_lambda: f32,
+    /// RNG seed (example shuffling, random assignment).
+    pub seed: u64,
+    /// Shuffle examples between epochs.
+    pub shuffle: bool,
+    /// Print a progress line every N examples (0 = quiet).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 0.5,
+            decay: 1e-4,
+            power: 0.75,
+            averaging: true,
+            policy: AssignPolicy::TopRanked,
+            l1_lambda: 0.0,
+            seed: 42,
+            shuffle: true,
+            log_every: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// η at step t.
+    #[inline]
+    pub fn lr_at(&self, t: u64) -> f32 {
+        self.lr / (1.0 + self.decay * t as f32).powf(self.power)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_decays_monotonically() {
+        let c = TrainConfig::default();
+        let mut prev = f32::INFINITY;
+        for t in [0u64, 10, 100, 1000, 100_000] {
+            let lr = c.lr_at(t);
+            assert!(lr <= prev && lr > 0.0);
+            prev = lr;
+        }
+        assert_eq!(c.lr_at(0), c.lr);
+    }
+}

@@ -1,0 +1,62 @@
+//! Running training metrics.
+
+/// Accumulated over an epoch.
+#[derive(Clone, Debug, Default)]
+pub struct EpochMetrics {
+    pub examples: u64,
+    pub active_hinge: u64,
+    pub loss_sum: f64,
+    pub new_labels: u64,
+}
+
+impl EpochMetrics {
+    pub fn mean_loss(&self) -> f64 {
+        if self.examples == 0 {
+            0.0
+        } else {
+            self.loss_sum / self.examples as f64
+        }
+    }
+
+    /// Fraction of steps where the hinge was active (an update happened).
+    pub fn update_rate(&self) -> f64 {
+        if self.examples == 0 {
+            0.0
+        } else {
+            self.active_hinge as f64 / self.examples as f64
+        }
+    }
+}
+
+impl std::fmt::Display for EpochMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "examples={} mean_loss={:.4} update_rate={:.3} new_labels={}",
+            self.examples,
+            self.mean_loss(),
+            self.update_rate(),
+            self.new_labels
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_math() {
+        let m = EpochMetrics { examples: 10, active_hinge: 4, loss_sum: 5.0, new_labels: 2 };
+        assert!((m.mean_loss() - 0.5).abs() < 1e-12);
+        assert!((m.update_rate() - 0.4).abs() < 1e-12);
+        assert!(!format!("{m}").is_empty());
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = EpochMetrics::default();
+        assert_eq!(m.mean_loss(), 0.0);
+        assert_eq!(m.update_rate(), 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Online training of the LTLS linear model (paper §5).
+//!
+//! One SGD step: compute edge scores `h = Wx` (`O(E·nnz)`), find the
+//! separation-ranking loss pair (ℓp, ℓn) via list-Viterbi, and if the
+//! hinge is active update only the edges in the symmetric difference of
+//! the two paths (`+ηx` on positive-only edges, `−ηx` on negative-only
+//! edges) — `O(log C)` model work per step, with weight averaging.
+
+pub mod config;
+pub mod metrics;
+pub mod trainer;
+
+pub use config::TrainConfig;
+pub use trainer::{TrainedModel, Trainer};

@@ -1,0 +1,300 @@
+//! The LTLS trainer and the trained-model predictor.
+
+use super::config::TrainConfig;
+use super::metrics::EpochMetrics;
+use crate::assign::Assigner;
+use crate::data::Dataset;
+use crate::decode::{list_viterbi, viterbi, Scored};
+use crate::graph::codec::edges_of_label;
+use crate::graph::Trellis;
+use crate::loss::separation_loss;
+use crate::model::averaged::Averager;
+use crate::model::LinearEdgeModel;
+use crate::sparse::SparseVec;
+use crate::util::rng::Rng;
+
+/// Online LTLS trainer (separation ranking loss + averaged sparse SGD).
+pub struct Trainer {
+    pub config: TrainConfig,
+    pub trellis: Trellis,
+    pub model: LinearEdgeModel,
+    pub assigner: Assigner,
+    averager: Option<Averager>,
+    step: u64,
+    /// Scratch buffers (allocation-free hot loop).
+    h_buf: Vec<f32>,
+    pos_buf: Vec<u64>,
+    pos_only: Vec<u32>,
+    neg_only: Vec<u32>,
+}
+
+impl Trainer {
+    /// New trainer for `n_features`-dim inputs and `n_labels` classes.
+    pub fn new(config: TrainConfig, n_features: usize, n_labels: usize) -> Self {
+        let trellis = Trellis::new(n_labels as u64);
+        let model = LinearEdgeModel::new(trellis.num_edges(), n_features);
+        let assigner = Assigner::new(config.policy, n_labels, &trellis, config.seed);
+        let averager = config
+            .averaging
+            .then(|| Averager::new(trellis.num_edges(), n_features));
+        Trainer {
+            config,
+            trellis,
+            model,
+            assigner,
+            averager,
+            step: 0,
+            h_buf: Vec::new(),
+            pos_buf: Vec::new(),
+            pos_only: Vec::new(),
+            neg_only: Vec::new(),
+        }
+    }
+
+    /// One SGD step on example `(x, labels)`. Returns the hinge loss.
+    pub fn step(&mut self, x: SparseVec, labels: &[u32], metrics: &mut EpochMetrics) -> f32 {
+        self.step += 1;
+        if let Some(a) = &mut self.averager {
+            a.tick();
+        }
+        // h = Wx + b.
+        let mut h = std::mem::take(&mut self.h_buf);
+        self.model.edge_scores(x, &mut h);
+
+        // Resolve labels → paths (assigning unseen labels by policy §5.1).
+        let before = self.assigner.table.n_assigned();
+        let mut pos = std::mem::take(&mut self.pos_buf);
+        pos.clear();
+        for &l in labels {
+            pos.push(self.assigner.path_for(&self.trellis, &h, l));
+        }
+        metrics.new_labels += (self.assigner.table.n_assigned() - before) as u64;
+
+        // Separation ranking loss (§5).
+        let mut loss_val = 0.0;
+        if let Some(out) = separation_loss(&self.trellis, &h, &pos) {
+            metrics.examples += 1;
+            metrics.loss_sum += out.loss as f64;
+            loss_val = out.loss;
+            if out.loss > 0.0 {
+                metrics.active_hinge += 1;
+                let lr = self.config.lr_at(self.step);
+                // Update only the symmetric difference of the two paths
+                // (fused, feature-major — see model::linear perf notes).
+                let pos_edges = edges_of_label(&self.trellis, out.pos);
+                let neg_edges = edges_of_label(&self.trellis, out.neg);
+                self.pos_only.clear();
+                self.neg_only.clear();
+                self.pos_only.extend(pos_edges.iter().filter(|e| !neg_edges.contains(e)));
+                self.neg_only.extend(neg_edges.iter().filter(|e| !pos_edges.contains(e)));
+                self.model.update_edges(&self.pos_only, &self.neg_only, x, lr);
+                if let Some(a) = &mut self.averager {
+                    a.record_edges(&self.pos_only, &self.neg_only, x, lr);
+                }
+            }
+        }
+        self.h_buf = h;
+        self.pos_buf = pos;
+        loss_val
+    }
+
+    /// Train one epoch over the dataset; returns epoch metrics.
+    pub fn epoch(&mut self, ds: &Dataset) -> EpochMetrics {
+        let mut metrics = EpochMetrics::default();
+        let n = ds.n_examples();
+        let mut order: Vec<usize> = (0..n).collect();
+        if self.config.shuffle {
+            let mut rng = Rng::new(self.config.seed ^ self.step);
+            rng.shuffle(&mut order);
+        }
+        for (i, &r) in order.iter().enumerate() {
+            self.step(ds.row(r), ds.labels_of(r), &mut metrics);
+            if self.config.log_every > 0 && (i + 1) % self.config.log_every == 0 {
+                eprintln!("  [{}] {}/{} {}", ds.name, i + 1, n, metrics);
+            }
+        }
+        metrics
+    }
+
+    /// Train for `epochs` epochs; returns per-epoch metrics.
+    pub fn fit(&mut self, ds: &Dataset, epochs: usize) -> Vec<EpochMetrics> {
+        (0..epochs).map(|_| self.epoch(ds)).collect()
+    }
+
+    /// Finalize into a predictor: applies weight averaging and the L1
+    /// soft-threshold (if configured).
+    pub fn into_model(self) -> TrainedModel {
+        let mut model = self.model;
+        if let Some(a) = &self.averager {
+            let (w, b) = a.averaged(&model.w, &model.bias);
+            model.w = w;
+            model.bias = b;
+        }
+        if self.config.l1_lambda > 0.0 {
+            model = crate::model::l1::soft_threshold_model(&model, self.config.l1_lambda);
+        }
+        TrainedModel { trellis: self.trellis, model, assigner: self.assigner }
+    }
+}
+
+/// A trained LTLS predictor: model + trellis + label↔path table.
+pub struct TrainedModel {
+    pub trellis: Trellis,
+    pub model: LinearEdgeModel,
+    pub assigner: Assigner,
+}
+
+impl TrainedModel {
+    /// Top-1 dataset label for `x` (`O(E·nnz + log C)`).
+    pub fn predict(&self, x: SparseVec) -> u32 {
+        let h = self.model.edge_scores_vec(x);
+        let Scored { label: path, .. } = viterbi(&self.trellis, &h);
+        self.resolve(path, &h)
+    }
+
+    /// Top-k dataset labels (paths without an assigned label are skipped —
+    /// they correspond to no class).
+    pub fn predict_topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
+        let h = self.model.edge_scores_vec(x);
+        // Over-fetch so unassigned paths can be skipped.
+        let fetch = (k + 8).min(self.trellis.c as usize);
+        let mut out = Vec::with_capacity(k);
+        for s in list_viterbi(&self.trellis, &h, fetch) {
+            if let Some(l) = self.assigner.table.label_of(s.label) {
+                out.push((l, s.score));
+                if out.len() == k {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// The label the Viterbi path maps to; if the best path is unassigned,
+    /// fall back to the best *assigned* path in the top-m list.
+    fn resolve(&self, path: u64, h: &[f32]) -> u32 {
+        if let Some(l) = self.assigner.table.label_of(path) {
+            return l;
+        }
+        let m = 64.min(self.trellis.c as usize);
+        for s in list_viterbi(&self.trellis, h, m) {
+            if let Some(l) = self.assigner.table.label_of(s.label) {
+                return l;
+            }
+        }
+        0 // degenerate: nothing assigned yet
+    }
+
+    /// Model size in bytes.
+    pub fn bytes(&self) -> usize {
+        self.model.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::AssignPolicy;
+    use crate::data::synthetic::{SyntheticSpec, TeacherKind};
+    use crate::eval::precision_at_1;
+
+    /// LTLS learns a rank-E realizable problem to high precision.
+    #[test]
+    fn learns_trellis_teacher() {
+        let ds = SyntheticSpec::multiclass(3000, 1200, 64)
+            .teacher(TeacherKind::Cluster)
+            .seed(17)
+            .generate();
+        let (train, test) = crate::data::split::random_split(&ds, 0.2, 1);
+        let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+        let ms = tr.fit(&train, 8);
+        // Loss decreases over epochs.
+        assert!(
+            ms.last().unwrap().mean_loss() < ms[0].mean_loss(),
+            "loss did not decrease: {:?}",
+            ms.iter().map(|m| m.mean_loss()).collect::<Vec<_>>()
+        );
+        let model = tr.into_model();
+        let p1 = precision_at_1(&model, &test);
+        assert!(p1 > 0.55, "precision@1 = {p1}");
+    }
+
+    /// Multilabel training works and beats chance clearly.
+    #[test]
+    fn learns_multilabel() {
+        let ds = SyntheticSpec::multilabel(2500, 1000, 48, 2)
+            .teacher(TeacherKind::Cluster)
+            .seed(18)
+            .generate();
+        let (train, test) = crate::data::split::random_split(&ds, 0.2, 2);
+        let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+        tr.fit(&train, 8);
+        let model = tr.into_model();
+        let p1 = precision_at_1(&model, &test);
+        assert!(p1 > 0.3, "precision@1 = {p1} (chance ≈ {:.3})", 2.0 / 48.0);
+    }
+
+    /// The paper's §5.1 claim: policy assignment beats random assignment.
+    #[test]
+    fn policy_beats_random_assignment() {
+        let ds = SyntheticSpec::multiclass(4000, 2000, 128)
+            .teacher(TeacherKind::Cluster)
+            .seed(19)
+            .generate();
+        let (train, test) = crate::data::split::random_split(&ds, 0.2, 3);
+        let mut scores = Vec::new();
+        for policy in [AssignPolicy::TopRanked, AssignPolicy::Random] {
+            let cfg = TrainConfig { policy, ..TrainConfig::default() };
+            let mut tr = Trainer::new(cfg, ds.n_features, ds.n_labels);
+            tr.fit(&train, 5);
+            scores.push(precision_at_1(&tr.into_model(), &test));
+        }
+        // TopRanked ≥ Random minus noise; usually strictly better.
+        assert!(
+            scores[0] > scores[1] - 0.02,
+            "policy {} vs random {}",
+            scores[0],
+            scores[1]
+        );
+    }
+
+    /// Updates touch only symmetric-difference edges (Fig. 2 semantics):
+    /// when loss fires for a multiclass pair, shared edges keep weights 0
+    /// in the first step.
+    #[test]
+    fn first_update_touches_only_symmetric_difference() {
+        let ds = SyntheticSpec::multiclass(10, 30, 8).seed(20).generate();
+        let mut tr = Trainer::new(
+            TrainConfig { averaging: false, shuffle: false, ..TrainConfig::default() },
+            ds.n_features,
+            ds.n_labels,
+        );
+        let mut m = EpochMetrics::default();
+        tr.step(ds.row(0), ds.labels_of(0), &mut m);
+        if m.active_hinge == 1 {
+            // Rows for updated edges are ±lr·x; others all zero.
+            let nonzero_rows: Vec<usize> = (0..tr.model.n_edges)
+                .filter(|&e| tr.model.edge_row(e).iter().any(|&v| v != 0.0))
+                .collect();
+            assert!(!nonzero_rows.is_empty());
+            assert!(nonzero_rows.len() <= 2 * (tr.trellis.steps as usize + 2));
+        }
+    }
+
+    /// Predict_topk returns assigned labels only, descending.
+    #[test]
+    fn topk_prediction_shape() {
+        let ds = SyntheticSpec::multiclass(800, 80, 32).seed(21).generate();
+        let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+        tr.fit(&ds, 3);
+        let model = tr.into_model();
+        let top = model.predict_topk(ds.row(0), 5);
+        assert!(top.len() <= 5 && !top.is_empty());
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        for (l, _) in &top {
+            assert!((*l as usize) < ds.n_labels);
+        }
+    }
+}

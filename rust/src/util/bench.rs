@@ -1,0 +1,145 @@
+//! Micro-benchmark harness (criterion is not vendored in this offline
+//! environment, so `cargo bench` targets use this instead with
+//! `harness = false`).
+//!
+//! Reports mean / p50 / p99 wall time per iteration and derived throughput.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    /// Iterations per second implied by the mean.
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Benchmark runner: warms up, then samples `f` until both a minimum
+/// iteration count and a minimum measured duration are reached.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    min_iters: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // BENCH_FAST=1 trims times for smoke runs (used by `make bench-fast`).
+        let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        Bench {
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(200) } else { Duration::from_secs(1) },
+            min_iters: if fast { 5 } else { 20 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should perform one logical iteration and return a
+    /// value (kept opaque to the optimizer via `std::hint::black_box`).
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> BenchStats {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.measure || samples_ns.len() < self.min_iters {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+            if samples_ns.len() >= 1_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            p50_ns: samples_ns[n / 2],
+            p99_ns: samples_ns[((n as f64 * 0.99) as usize).min(n - 1)],
+            min_ns: samples_ns[0],
+        };
+        println!(
+            "{:<48} {:>12} {:>12} {:>12} {:>14}",
+            stats.name,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p50_ns),
+            fmt_ns(stats.p99_ns),
+            format!("{:.0}/s", stats.per_sec()),
+        );
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Print the header row for the table `run` emits.
+    pub fn header(title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<48} {:>12} {:>12} {:>12} {:>14}",
+            "case", "mean", "p50", "p99", "throughput"
+        );
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+/// Human-format a duration in ns.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let s = b.run("noop-ish", || 1 + 1);
+        assert!(s.iters >= 5);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p50_ns <= s.p99_ns);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.0e9), "3.00s");
+    }
+}

@@ -1,0 +1,94 @@
+//! Small self-contained utilities: deterministic RNG, micro-bench harness,
+//! minimal JSON, CLI argument parsing, timers and numeric helpers.
+//!
+//! The build environment is fully offline with only `xla` + `anyhow`
+//! vendored, so the usual ecosystem crates (rand, criterion, serde_json,
+//! clap) are reimplemented here at the scale this project needs.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+/// Numerically stable `log(sum(exp(xs)))` over a slice.
+///
+/// Returns `f32::NEG_INFINITY` for an empty slice (the identity of
+/// log-space addition), which is what the trellis forward pass wants for
+/// "no incoming path yet".
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f32 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// Log-space addition of two values: `log(exp(a) + exp(b))`.
+pub fn logaddexp(a: f32, b: f32) -> f32 {
+    let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+    if !hi.is_finite() {
+        return hi;
+    }
+    hi + (lo - hi).exp().ln_1p()
+}
+
+/// `ceil(log2(c))` for `c >= 1`.
+pub fn ceil_log2(c: u64) -> u32 {
+    debug_assert!(c >= 1);
+    64 - (c - 1).leading_zeros().max(0)
+}
+
+/// `floor(log2(c))` for `c >= 1`.
+pub fn floor_log2(c: u64) -> u32 {
+    debug_assert!(c >= 1);
+    63 - c.leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logsumexp_matches_naive() {
+        let xs = [0.5f32, -1.0, 2.0, 0.0];
+        let naive = xs.iter().map(|x| x.exp()).sum::<f32>().ln();
+        assert!((logsumexp(&xs) - naive).abs() < 1e-6);
+    }
+
+    #[test]
+    fn logsumexp_empty_is_neg_inf() {
+        assert_eq!(logsumexp(&[]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn logsumexp_large_values_stable() {
+        let xs = [1000.0f32, 1000.0];
+        let v = logsumexp(&xs);
+        assert!((v - (1000.0 + 2f32.ln())).abs() < 1e-3);
+    }
+
+    #[test]
+    fn logaddexp_matches_logsumexp() {
+        for (a, b) in [(0.0f32, 1.0f32), (-5.0, 3.0), (2.0, 2.0)] {
+            assert!((logaddexp(a, b) - logsumexp(&[a, b])).abs() < 1e-6);
+        }
+        assert_eq!(logaddexp(f32::NEG_INFINITY, f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!((logaddexp(f32::NEG_INFINITY, 1.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log2_helpers() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
+        assert_eq!(floor_log2(1), 0);
+        assert_eq!(floor_log2(2), 1);
+        assert_eq!(floor_log2(3), 1);
+        assert_eq!(floor_log2(22), 4);
+        assert_eq!(floor_log2(1000), 9);
+    }
+}

@@ -1,0 +1,240 @@
+//! Deterministic pseudo-random number generation (xoshiro256**).
+//!
+//! Everything in this crate that draws randomness — synthetic dataset
+//! generation, weight init, random path assignment, property tests — goes
+//! through [`Rng`] so runs are exactly reproducible from a seed.
+
+/// xoshiro256** — fast, high-quality, 256-bit state PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 expansion so that any `u64` seed (including 0)
+    /// yields a well-mixed state.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in `[0, 1)` with f64 precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be nonzero.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free-enough reduction; bias is
+        // negligible for the n (< 2^32) used here.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize index into a slice of length `n`.
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = (1.0 - self.f64()).max(1e-12);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn coin(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Draw `k` distinct indices from `[0, n)` (k << n assumed; rejection).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<u32> {
+        assert!(k <= n);
+        if k * 3 > n {
+            let mut all: Vec<u32> = (0..n as u32).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            all.sort_unstable();
+            return all;
+        }
+        let mut out = Vec::with_capacity(k);
+        while out.len() < k {
+            let v = self.below(n as u64) as u32;
+            if !out.contains(&v) {
+                out.push(v);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Zipf-distributed integer in `[0, n)` with exponent `a` (via inverse
+    /// CDF on a precomputed table — see [`ZipfTable`] for the fast path).
+    pub fn zipf(&mut self, table: &ZipfTable) -> usize {
+        table.sample(self)
+    }
+}
+
+/// Precomputed cumulative Zipf distribution over `[0, n)`.
+pub struct ZipfTable {
+    cdf: Vec<f64>,
+}
+
+impl ZipfTable {
+    /// Build a Zipf(a) table over `n` items (`p(i) ∝ (i+1)^-a`).
+    pub fn new(n: usize, a: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += ((i + 1) as f64).powf(-a);
+            cdf.push(acc);
+        }
+        let z = acc;
+        for v in &mut cdf {
+            *v /= z;
+        }
+        ZipfTable { cdf }
+    }
+
+    /// Sample an index.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(4);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            let v = r.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 50_000;
+        let (mut m, mut v) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            m += x;
+            v += x * x;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.05, "var {v}");
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut r = Rng::new(6);
+        for _ in 0..50 {
+            let n = 1 + r.index(200);
+            let k = r.index(n + 1);
+            let s = r.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted distinct");
+            assert!(s.iter().all(|&v| (v as usize) < n));
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let t = ZipfTable::new(1000, 1.2);
+        let mut r = Rng::new(7);
+        let mut head = 0;
+        for _ in 0..10_000 {
+            if t.sample(&mut r) < 10 {
+                head += 1;
+            }
+        }
+        // Zipf(1.2) puts far more than uniform (1%) mass on the top 10.
+        assert!(head > 2_000, "head mass {head}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(8);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

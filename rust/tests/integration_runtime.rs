@@ -1,0 +1,135 @@
+//! Cross-layer integration: the AOT artifacts (L1 Pallas + L2 JAX, lowered
+//! to HLO text) executed through the rust PJRT runtime (L3) must agree
+//! with the rust-native implementations on the same inputs.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise — CI runs
+//! `make test`, which builds them first).
+
+use ltls::graph::Trellis;
+use ltls::runtime::{artifacts, ArtifactMeta, DeepLtls, Engine, Tensor};
+use ltls::util::rng::Rng;
+
+fn load() -> Option<(Engine, ArtifactMeta)> {
+    let dir = artifacts::default_dir();
+    match ArtifactMeta::load(&dir) {
+        Ok(meta) => {
+            let engine = Engine::cpu().expect("PJRT CPU client");
+            Some((engine, meta))
+        }
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+/// The bare Pallas edge-score matmul artifact == rust-side dense matmul.
+#[test]
+fn pallas_edge_scores_match_rust_matmul() {
+    let Some((engine, meta)) = load() else { return };
+    let exe = engine.load_hlo(&meta.hlo_path("edge_scores")).expect("compile edge_scores");
+    let (b, d, e) = (meta.batch, meta.d, meta.e);
+    let mut rng = Rng::new(101);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..d * e).map(|_| rng.normal() * 0.1).collect();
+    let bias: Vec<f32> = (0..e).map(|_| rng.normal()).collect();
+
+    let out = exe
+        .run(&[
+            Tensor::f32(x.clone(), &[b, d]),
+            Tensor::f32(w.clone(), &[d, e]),
+            Tensor::f32(bias.clone(), &[e]),
+        ])
+        .expect("execute");
+    let got = out[0].as_f32().unwrap();
+    assert_eq!(out[0].shape(), &[b, e]);
+
+    // Rust-side reference.
+    for i in (0..b).step_by(7) {
+        for j in (0..e).step_by(5) {
+            let mut want = bias[j];
+            for k in 0..d {
+                want += x[i * d + k] * w[k * e + j];
+            }
+            let g = got[i * e + j];
+            assert!(
+                (g - want).abs() < 1e-2 * want.abs().max(1.0),
+                "({i},{j}): {g} vs {want}"
+            );
+        }
+    }
+}
+
+/// The fused ltls_infer artifact (MLP + Pallas Viterbi) == rust Viterbi on
+/// the mlp_fwd artifact's edge scores — ties L1, L2, L3 decoders together.
+#[test]
+fn infer_artifact_matches_rust_viterbi() {
+    let Some((engine, meta)) = load() else { return };
+    let deep = DeepLtls::load(&engine, meta.clone()).expect("load deep model");
+    let t = Trellis::new(meta.c as u64);
+    let (b, d) = (meta.batch, meta.d);
+    let mut rng = Rng::new(102);
+    let x: Vec<f32> = (0..b * d).map(|_| if rng.coin(0.3) { rng.normal() } else { 0.0 }).collect();
+
+    // Dense batch through mlp_fwd → rust viterbi.
+    let h = deep.edge_scores(x.clone(), b).expect("fwd");
+    let rust_labels: Vec<u32> = (0..b)
+        .map(|i| ltls::decode::viterbi(&t, &h[i * meta.e..(i + 1) * meta.e]).label as u32)
+        .collect();
+
+    // Same batch through the fused artifact (Pallas viterbi inside).
+    let mut ds = ltls::data::Dataset {
+        name: "t".into(),
+        features: ltls::sparse::CsrMatrix::new(d),
+        labels: vec![],
+        n_features: d,
+        n_labels: meta.c,
+        multiclass: true,
+    };
+    for i in 0..b {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for k in 0..d {
+            let v = x[i * d + k];
+            if v != 0.0 {
+                idx.push(k as u32);
+                val.push(v);
+            }
+        }
+        ds.features.push_row(&idx, &val);
+        ds.labels.push(vec![0]);
+    }
+    let rows: Vec<usize> = (0..b).collect();
+    let artifact_labels = deep.predict(&ds, &rows).expect("predict");
+
+    assert_eq!(artifact_labels, rust_labels, "L1 Pallas viterbi != L3 rust viterbi");
+}
+
+/// Training through the AOT train step reduces the loss (the §6 deep
+/// experiment at miniature scale).
+#[test]
+fn train_step_reduces_loss() {
+    let Some((engine, meta)) = load() else { return };
+    let mut deep = DeepLtls::load(&engine, meta.clone()).expect("load deep model");
+    let analog = ltls::data::datasets::by_name("imageNet").unwrap();
+    let (train, _) = analog.generate(0.02, 11);
+    let rows: Vec<usize> = (0..meta.batch.min(train.n_examples())).collect();
+    let first = deep.train_batch(&train, &rows, 0.05).expect("step");
+    let mut last = first;
+    for _ in 0..15 {
+        last = deep.train_batch(&train, &rows, 0.05).expect("step");
+    }
+    assert!(
+        last < first,
+        "loss did not decrease on a fixed batch: {first} -> {last}"
+    );
+}
+
+/// meta.json ↔ rust trellis layout contract (belt-and-braces re-check in
+/// the integration suite; the loader also enforces it).
+#[test]
+fn meta_contract_holds() {
+    let Some((_, meta)) = load() else { return };
+    let t = Trellis::new(meta.c as u64);
+    assert_eq!(t.num_edges(), meta.e);
+}

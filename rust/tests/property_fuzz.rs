@@ -1,0 +1,230 @@
+//! Randomized property tests over the library's core invariants
+//! (proptest is not vendored offline; this uses the crate's deterministic
+//! RNG with many sampled cases per property — same discipline, explicit
+//! seeds, shrink-free but fully reproducible).
+
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::decode::{list_viterbi, log_partition, posterior_marginals, score_label, viterbi};
+use ltls::graph::codec::{edges_of_label, label_of_path, path_of_label};
+use ltls::graph::Trellis;
+use ltls::util::json::Json;
+use ltls::util::rng::Rng;
+
+/// Random C (2..=2^22), random scores: decoder invariants.
+#[test]
+fn decoder_invariants_random_c() {
+    let mut rng = Rng::new(7001);
+    for case in 0..300 {
+        let c = 2 + rng.below((1 << 22) - 2);
+        let t = Trellis::new(c);
+        let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+
+        // (1) Viterbi returns a valid label whose score equals its path sum.
+        let best = viterbi(&t, &h);
+        assert!(best.label < c, "case {case}");
+        let direct: f32 = edges_of_label(&t, best.label).iter().map(|&e| h[e as usize]).sum();
+        assert!((best.score - direct).abs() < 1e-3);
+
+        // (2) No label scores above the Viterbi winner.
+        for _ in 0..20 {
+            let l = rng.below(c);
+            assert!(
+                score_label(&t, &h, l) <= best.score + 1e-3,
+                "case {case}: label {l} beats viterbi"
+            );
+        }
+
+        // (3) list-Viterbi top-1 == Viterbi; descending; distinct labels.
+        let k = 1 + rng.index(12);
+        let top = list_viterbi(&t, &h, k);
+        assert_eq!(top[0].label, best.label);
+        for w in top.windows(2) {
+            assert!(w[0].score >= w[1].score - 1e-5);
+            assert_ne!(w[0].label, w[1].label);
+        }
+
+        // (4) logZ ≥ best score (softmax partition dominates the max).
+        let lz = log_partition(&t, &h);
+        assert!(lz >= best.score - 1e-3, "case {case}: logZ {lz} < max {}", best.score);
+
+        // (5) Posterior marginals: probability-simplex cuts.
+        if case % 10 == 0 {
+            let m = posterior_marginals(&t, &h);
+            let src = m[t.source_edge(0) as usize] + m[t.source_edge(1) as usize];
+            assert!((src - 1.0).abs() < 1e-3);
+            assert!(m.iter().all(|&p| (-1e-4..=1.0 + 1e-4).contains(&p)));
+        }
+    }
+}
+
+/// Codec bijection on randomly sampled labels at extreme C.
+#[test]
+fn codec_bijection_sampled_extreme_c() {
+    let mut rng = Rng::new(7002);
+    for _ in 0..40 {
+        let c = 2 + rng.below((1u64 << 40) - 2);
+        let t = Trellis::new(c);
+        for _ in 0..200 {
+            let l = rng.below(c);
+            let p = path_of_label(&t, l);
+            assert_eq!(label_of_path(&t, &p), l, "C={c}");
+            // Path edges are within range and strictly increasing vertices.
+            let edges = p.edges(&t);
+            assert!(edges.iter().all(|&e| (e as usize) < t.num_edges()));
+        }
+        // Edge-count formula at extreme C.
+        assert_eq!(
+            t.num_edges(),
+            4 * ltls::util::floor_log2(c) as usize + c.count_ones() as usize
+        );
+    }
+}
+
+/// Boosting a random label's path always makes it the Viterbi winner
+/// (for margins larger than any accumulated noise).
+#[test]
+fn boosted_path_always_wins() {
+    let mut rng = Rng::new(7003);
+    for _ in 0..200 {
+        let c = 2 + rng.below(100_000);
+        let t = Trellis::new(c);
+        let mut h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+        let target = rng.below(c);
+        for e in edges_of_label(&t, target) {
+            h[e as usize] += 1000.0;
+        }
+        assert_eq!(viterbi(&t, &h).label, target, "C={c}");
+    }
+}
+
+/// JSON round-trip on randomized documents.
+#[test]
+fn json_roundtrip_fuzz() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.coin(0.5)),
+            2 => Json::Num((rng.normal() * 100.0).round() as f64),
+            3 => {
+                let n = rng.index(8);
+                Json::Str((0..n).map(|_| (b'a' + rng.index(26) as u8) as char).collect())
+            }
+            4 => Json::Arr((0..rng.index(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.index(5) {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    let mut rng = Rng::new(7004);
+    for _ in 0..500 {
+        let doc = random_json(&mut rng, 3);
+        let text = doc.dump();
+        let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(parsed, doc, "{text}");
+    }
+}
+
+/// Training is deterministic given the config seed (bit-for-bit weights).
+#[test]
+fn training_is_deterministic() {
+    let ds = SyntheticSpec::multiclass(400, 300, 20).seed(7).generate();
+    let run = || {
+        let mut tr = ltls::train::Trainer::new(
+            ltls::train::TrainConfig::default(),
+            ds.n_features,
+            ds.n_labels,
+        );
+        tr.fit(&ds, 2);
+        tr.into_model().model.w
+    };
+    assert_eq!(run(), run());
+}
+
+/// libsvm parser fuzz: dump(generate()) always re-parses to equal data.
+#[test]
+fn libsvm_fuzz_roundtrip() {
+    let mut rng = Rng::new(7005);
+    for case in 0..30 {
+        let n = 5 + rng.index(60);
+        let d = 5 + rng.index(300);
+        let c = 2 + rng.index(40);
+        let k = 1 + rng.index(3);
+        let ds = SyntheticSpec::multilabel(n, d, c, k).seed(case as u64).generate();
+        let text = ltls::data::libsvm::dump(&ds);
+        let again = ltls::data::libsvm::parse("f", text.as_bytes()).unwrap();
+        assert_eq!(again.n_examples(), ds.n_examples(), "case {case}");
+        for i in 0..n {
+            assert_eq!(again.labels_of(i), ds.labels_of(i), "case {case} row {i}");
+            assert_eq!(again.row(i).indices, ds.row(i).indices, "case {case} row {i}");
+        }
+    }
+}
+
+/// Assignment table fuzz: interleaved binds and random_free never violate
+/// the bijection.
+#[test]
+fn assignment_table_fuzz() {
+    let mut rng = Rng::new(7006);
+    for _ in 0..50 {
+        let c = 4 + rng.below(5000);
+        let n_labels = 1 + rng.index(c as usize);
+        let mut tab = ltls::assign::AssignmentTable::new(n_labels, c);
+        let mut bound = 0;
+        for l in 0..n_labels as u32 {
+            if rng.coin(0.7) {
+                let p = tab.random_free(&mut rng).unwrap();
+                tab.bind(l, p);
+                bound += 1;
+                assert_eq!(tab.path_of(l), Some(p));
+                assert_eq!(tab.label_of(p), Some(l));
+            }
+        }
+        assert_eq!(tab.n_assigned(), bound);
+        assert_eq!(tab.n_free(), c as usize - bound);
+    }
+}
+
+/// Separation loss with one positive: boosting its path by a margin far
+/// above the noise always gives zero loss — no distinct path can contain
+/// all of another path's edges (exit edges / differing transitions), so
+/// the boosted path separates. With several positives this does NOT hold
+/// (a negative can share most edges with a strongly-boosted positive
+/// while the *worst* positive is a short early-exit path), which is
+/// exactly why the loss uses the worst positive — checked separately.
+#[test]
+fn separation_loss_margin_semantics() {
+    let mut rng = Rng::new(7007);
+    for _ in 0..100 {
+        let c = 8 + rng.below(2000);
+        let t = Trellis::new(c);
+        let mut h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal() * 0.1).collect();
+        let pos = vec![rng.below(c)];
+        for e in edges_of_label(&t, pos[0]) {
+            h[e as usize] += 500.0;
+        }
+        let out = ltls::loss::separation_loss(&t, &h, &pos).unwrap();
+        assert_eq!(out.loss, 0.0, "C={c}");
+        assert_eq!(out.pos, pos[0]);
+        assert_ne!(out.neg, pos[0]);
+
+        // Multi-positive variant: the loss is still the hinge on
+        // (worst positive, best negative) — verify the pair identity.
+        let pos3: Vec<u64> = {
+            let mut v: Vec<u64> = (0..3).map(|_| rng.below(c)).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let out3 = ltls::loss::separation_loss(&t, &h, &pos3).unwrap();
+        let worst = pos3
+            .iter()
+            .map(|&p| score_label(&t, &h, p))
+            .fold(f32::INFINITY, f32::min);
+        assert!((out3.pos_score - worst).abs() < 1e-3);
+        assert!(!pos3.contains(&out3.neg));
+    }
+}
