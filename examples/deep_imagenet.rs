@@ -25,14 +25,14 @@ use ltls::util::args::Args;
 use ltls::util::rng::Rng;
 use ltls::util::timer::Timer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), String> {
     let args = Args::from_env();
     let epochs = args.get_usize("epochs", 4);
     let step_cap = args.get_usize("steps", 0);
     let lr = args.get_f32("lr", 0.4);
     let scale = args.get_f32("scale", 1.0) as f64;
 
-    let meta = ArtifactMeta::load(&artifacts::default_dir()).map_err(anyhow::Error::msg)?;
+    let meta = ArtifactMeta::load(&artifacts::default_dir())?;
     println!(
         "artifacts: C={} D={} hidden={} batch={} E={} (trellis layout cross-checked)",
         meta.c, meta.d, meta.hidden, meta.batch, meta.e

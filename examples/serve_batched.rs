@@ -1,10 +1,12 @@
 //! Serving driver: train LTLS on the aloi analog, stand up the batching
-//! prediction server, and drive an open-loop load test, reporting
+//! multi-worker prediction server (batched edge scoring + per-worker
+//! engine scratchpads), and drive a closed-loop load test, reporting
 //! throughput and latency percentiles (the L3 coordinator's perf story).
 //!
-//! Run: `cargo run --release --example serve_batched -- [--requests N] [--batch B] [--max-wait-us U] [--clients T]`
+//! Run: `cargo run --release --example serve_batched -- [--requests N] [--batch B] [--max-wait-us U] [--clients T] [--workers W]`
+//! (`--workers 0`, the default, sizes the pool to the available cores)
 
-use ltls::coordinator::{server::SparsePath, BatcherConfig, PredictServer, ServerConfig};
+use ltls::coordinator::{BatchedLtls, BatcherConfig, PredictServer, ServerConfig};
 use ltls::data::datasets;
 use ltls::eval::{precision_at_1, Predictor};
 use ltls::train::{TrainConfig, Trainer};
@@ -18,6 +20,7 @@ fn main() {
     let max_batch = args.get_usize("batch", 64);
     let max_wait_us = args.get_u64("max-wait-us", 300);
     let clients = args.get_usize("clients", 4);
+    let workers = args.get_usize("workers", 0);
 
     let analog = datasets::by_name("aloi.bin").unwrap();
     let (train, test) = analog.generate(0.2, 5);
@@ -34,15 +37,17 @@ fn main() {
     );
 
     let server = Arc::new(PredictServer::start(
-        SparsePath(model),
+        BatchedLtls(model),
         ServerConfig {
             batcher: BatcherConfig {
                 max_batch,
                 max_wait: std::time::Duration::from_micros(max_wait_us),
             },
             queue_depth: 2048,
+            workers,
         },
     ));
+    println!("server: {} workers (batched LTLS path)", server.n_workers());
 
     // Closed-loop clients, each with a small pipeline window.
     let test = Arc::new(test);
@@ -79,10 +84,11 @@ fn main() {
     println!("\n==== serving metrics ====");
     println!("{}", server.metrics.summary());
     println!(
-        "throughput: {:.0} req/s over {} requests ({} clients, batch<= {max_batch}, wait {max_wait_us}us)",
+        "throughput: {:.0} req/s over {} requests ({} clients, {} workers, batch<= {max_batch}, wait {max_wait_us}us)",
         (per_client * clients) as f64 / secs,
         per_client * clients,
         clients,
+        server.n_workers(),
     );
     let p50 = server.metrics.request_quantile_ns(0.5) / 1e3;
     let p99 = server.metrics.request_quantile_ns(0.99) / 1e3;

@@ -1,6 +1,9 @@
 //! Decoder micro-benchmarks: Viterbi / list-Viterbi / forward-backward /
-//! label scoring across C — the O(log C) prediction claim at the op level.
+//! label scoring across C — the O(log C) prediction claim at the op level —
+//! plus the allocating-vs-workspace comparison for the engine's `_into`
+//! variants (EXPERIMENTS.md §Engine).
 
+use ltls::engine::DecodeWorkspace;
 use ltls::graph::Trellis;
 use ltls::util::bench::Bench;
 use ltls::util::rng::Rng;
@@ -29,6 +32,39 @@ fn main() {
         });
     }
 
+    // The engine story: same ops on a reused DecodeWorkspace — the delta
+    // to the rows above is pure allocator cost.
+    Bench::header("alloc vs reused workspace (C=320338)");
+    let t = Trellis::new(320338);
+    let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+    let mut ws = DecodeWorkspace::new();
+    let mut topk = Vec::new();
+    let mut marg = Vec::new();
+    let mut pairs = Vec::new();
+    for k in [5usize, 50] {
+        let alloc = bench.run(&format!("list_viterbi k={k:<2}  alloc"), || {
+            ltls::decode::list_viterbi(&t, std::hint::black_box(&h), k)
+        });
+        let reused = bench.run(&format!("list_viterbi k={k:<2}  workspace"), || {
+            ltls::decode::list_viterbi_into(&t, std::hint::black_box(&h), k, &mut ws, &mut topk);
+            topk.len()
+        });
+        pairs.push((k, alloc, reused));
+    }
+    bench.run("log_partition       alloc", || {
+        ltls::decode::log_partition(&t, std::hint::black_box(&h))
+    });
+    bench.run("log_partition       workspace", || {
+        ltls::decode::log_partition_ws(&t, std::hint::black_box(&h), &mut ws)
+    });
+    bench.run("posterior_marginals alloc", || {
+        ltls::decode::posterior_marginals(&t, std::hint::black_box(&h))
+    });
+    bench.run("posterior_marginals workspace", || {
+        ltls::decode::posterior_marginals_into(&t, std::hint::black_box(&h), &mut ws, &mut marg);
+        marg.len()
+    });
+
     // The log-time check: per-op time ratio across 160x increase in C
     // should be far below linear.
     let r = bench.results();
@@ -37,4 +73,14 @@ fn main() {
     let ratio = big.mean_ns / small.mean_ns;
     println!("\nviterbi time ratio C=320338 / C=105 = {ratio:.1}x (C ratio = 3051x; log-time requires << linear)");
     assert!(ratio < 60.0, "decode does not look log-time: {ratio}");
+
+    // The zero-allocation comparison. Advisory only: the two means are
+    // close (the DP dominates at this E), so a hard assert would flake on
+    // noisy shared runners — correctness parity is asserted by
+    // rust/tests/engine_parity.rs instead.
+    for (k, alloc, reused) in &pairs {
+        let speedup = alloc.mean_ns / reused.mean_ns;
+        let note = if speedup < 1.0 { "  (WARNING: slower than alloc — check for a regression)" } else { "" };
+        println!("list_viterbi k={k} workspace speedup = {speedup:.2}x{note}");
+    }
 }

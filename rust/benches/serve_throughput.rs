@@ -1,0 +1,111 @@
+//! Serve-throughput bench: requests/sec of the multi-worker prediction
+//! server at workers ∈ {1, 2, 4}, with closed-loop clients and the batched
+//! LTLS path. Emits a machine-readable JSON line for the BENCH trajectory
+//! (EXPERIMENTS.md §Engine).
+//!
+//! `BENCH_FAST=1` trims the request count for smoke runs.
+
+use ltls::coordinator::{BatchedLtls, BatcherConfig, PredictServer, ServerConfig};
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::train::{TrainConfig, Trainer};
+use ltls::util::json::Json;
+use ltls::util::timer::Timer;
+use std::sync::Arc;
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let n_requests: usize = if fast { 4_000 } else { 40_000 };
+    let clients = 4usize;
+
+    // aloi-like shape: C=1000, sparse rows.
+    let ds = SyntheticSpec::multiclass(if fast { 1_500 } else { 4_000 }, 3_000, 1000)
+        .seed(5)
+        .generate();
+    let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    tr.fit(&ds, 2);
+    let model = tr.into_model();
+
+    println!(
+        "== serve throughput vs workers (C=1000, E={}, {clients} closed-loop clients, {} cores) ==",
+        model.trellis.num_edges(),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    );
+    let ds = Arc::new(ds);
+    let mut results: Vec<(usize, f64)> = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let server = Arc::new(PredictServer::start(
+            BatchedLtls(model.clone()),
+            ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch: 64,
+                    max_wait: std::time::Duration::from_micros(200),
+                },
+                queue_depth: 2048,
+                workers,
+            },
+        ));
+        let timer = Timer::new();
+        let per_client = n_requests / clients;
+        let handles: Vec<_> = (0..clients)
+            .map(|cid| {
+                let server = Arc::clone(&server);
+                let ds = Arc::clone(&ds);
+                std::thread::spawn(move || {
+                    let mut pending = std::collections::VecDeque::new();
+                    for i in 0..per_client {
+                        let row = ds.row((cid * per_client + i) % ds.n_examples());
+                        pending.push_back(server.submit(
+                            row.indices.to_vec(),
+                            row.values.to_vec(),
+                            1,
+                        ));
+                        if pending.len() >= 32 {
+                            pending.pop_front().unwrap().recv().unwrap();
+                        }
+                    }
+                    for rx in pending {
+                        rx.recv().unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let secs = timer.elapsed_s();
+        let rps = (per_client * clients) as f64 / secs;
+        let p99_us = server.metrics.request_quantile_ns(0.99) / 1e3;
+        println!(
+            "workers={workers}  {rps:>10.0} req/s   p99 {p99_us:>7.0}us   ({} requests in {secs:.2}s)",
+            per_client * clients
+        );
+        let server = Arc::try_unwrap(server).ok().expect("all clients joined");
+        server.shutdown();
+        results.push((workers, rps));
+    }
+
+    let base = results[0].1;
+    let best = results.iter().map(|r| r.1).fold(0.0f64, f64::max);
+    println!("\nspeedup best/1-worker = {:.2}x", best / base);
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("serve_throughput")),
+        ("clients", Json::from(clients)),
+        ("requests", Json::from(n_requests)),
+        (
+            "results",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|&(w, r)| {
+                        Json::obj(vec![
+                            ("workers", Json::from(w)),
+                            ("req_per_s", Json::Num(r)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    println!("json: {}", json.dump());
+}

@@ -41,4 +41,43 @@ fn main() {
             tr.step(ds.row(i), ds.labels_of(i), &mut metrics)
         });
     }
+
+    // The engine side of the same model: per-example predict (allocating
+    // vs scratch-reusing) and batched edge scoring.
+    Bench::header("inference through the engine (C=4096, D=20000, nnz~40)");
+    let ds = SyntheticSpec::multiclass(2_000, 20_000, 4096)
+        .teacher(ltls::data::synthetic::TeacherKind::Nonlinear)
+        .density(40.0 / 20_000.0)
+        .seed(10)
+        .generate();
+    let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    tr.fit(&ds, 1);
+    let model = tr.into_model();
+    let mut i = 0usize;
+    bench.run("predict_topk k=5       (alloc)", || {
+        i = (i + 1) % ds.n_examples();
+        model.predict_topk(ds.row(i), 5)
+    });
+    let mut scratch = ltls::engine::PredictScratch::new();
+    let mut out = Vec::new();
+    bench.run("predict_topk_into k=5  (engine)", || {
+        i = (i + 1) % ds.n_examples();
+        model.predict_topk_into(ds.row(i), 5, &mut scratch, &mut out);
+        out.len()
+    });
+    let rows: Vec<ltls::sparse::SparseVec> = (0..64).map(|r| ds.row(r)).collect();
+    bench.run("edge_scores x64        (per-example)", || {
+        let mut acc = 0.0f32;
+        for x in &rows {
+            model.model.edge_scores(*x, &mut scratch.h);
+            acc += scratch.h[0];
+        }
+        acc
+    });
+    let mut gather = Vec::new();
+    let mut batch_h = Vec::new();
+    bench.run("edge_scores_batch B=64 (one sweep)", || {
+        model.model.edge_scores_batch(&rows, &mut gather, &mut batch_h);
+        batch_h.len()
+    });
 }

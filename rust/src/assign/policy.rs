@@ -20,6 +20,7 @@ pub enum AssignPolicy {
 }
 
 /// Stateful assigner owned by the trainer.
+#[derive(Clone)]
 pub struct Assigner {
     pub policy: AssignPolicy,
     pub table: AssignmentTable,

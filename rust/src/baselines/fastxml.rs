@@ -179,17 +179,28 @@ impl Tree {
 
 impl Predictor for FastXml {
     fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
+        let mut out = Vec::new();
+        self.topk_into(x, k, &mut crate::engine::PredictScratch::new(), &mut out);
+        out
+    }
+
+    fn topk_into(
+        &self,
+        x: SparseVec,
+        k: usize,
+        _scratch: &mut crate::engine::PredictScratch,
+        out: &mut Vec<(u32, f32)>,
+    ) {
         let mut agg: HashMap<u32, f32> = HashMap::new();
         for t in &self.trees {
             for &(l, p) in t.leaf_dist(x) {
                 *agg.entry(l).or_insert(0.0) += p;
             }
         }
-        let mut out: Vec<(u32, f32)> =
-            agg.into_iter().map(|(l, p)| (l, p / self.trees.len() as f32)).collect();
+        out.clear();
+        out.extend(agg.into_iter().map(|(l, p)| (l, p / self.trees.len() as f32)));
         out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
         out.truncate(k);
-        out
     }
 
     fn model_bytes(&self) -> usize {

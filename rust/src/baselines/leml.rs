@@ -126,16 +126,16 @@ impl Leml {
         Leml { r, c, d, h, w, name: "LEML".into() }
     }
 
-    /// Embed a feature vector: `u = Wᵀx` (r-dim).
-    fn embed(&self, x: SparseVec) -> Vec<f32> {
-        let mut u = vec![0.0f32; self.r];
+    /// Embed a feature vector `u = Wᵀx` into `out` (r-dim).
+    fn embed_into(&self, x: SparseVec, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.r, 0.0);
         for (&fi, &fv) in x.indices.iter().zip(x.values) {
             let row = &self.w[fi as usize * self.r..(fi as usize + 1) * self.r];
-            for (uv, &wv) in u.iter_mut().zip(row) {
+            for (uv, &wv) in out.iter_mut().zip(row) {
                 *uv += fv * wv;
             }
         }
-        u
     }
 }
 
@@ -165,19 +165,32 @@ fn orthonormalize(m: &mut [f32], c: usize, r: usize) {
 
 impl Predictor for Leml {
     fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
-        let u = self.embed(x);
+        let mut out = Vec::with_capacity(k + 1);
+        self.topk_into(x, k, &mut crate::engine::PredictScratch::new(), &mut out);
+        out
+    }
+
+    fn topk_into(
+        &self,
+        x: SparseVec,
+        k: usize,
+        scratch: &mut crate::engine::PredictScratch,
+        out: &mut Vec<(u32, f32)>,
+    ) {
+        // Embed `u = Wᵀx` into the scratch's edge-score buffer (r-dim).
+        self.embed_into(x, &mut scratch.h);
+        let u = &scratch.h;
         // O(C·r) decode — intentionally linear in C (see module docs).
-        let mut best: Vec<(u32, f32)> = Vec::with_capacity(k + 1);
+        out.clear();
         for l in 0..self.c {
             let row = &self.h[l * self.r..(l + 1) * self.r];
-            let s: f32 = row.iter().zip(&u).map(|(a, b)| a * b).sum();
-            if best.len() < k || s > best.last().unwrap().1 {
-                best.push((l as u32, s));
-                best.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-                best.truncate(k);
+            let s: f32 = row.iter().zip(u).map(|(a, b)| a * b).sum();
+            if out.len() < k || s > out.last().unwrap().1 {
+                out.push((l as u32, s));
+                out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+                out.truncate(k);
             }
         }
-        best
     }
 
     fn model_bytes(&self) -> usize {

@@ -131,15 +131,24 @@ impl LomTree {
 
 impl Predictor for LomTree {
     fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
+        let mut out = Vec::new();
+        self.topk_into(x, k, &mut crate::engine::PredictScratch::new(), &mut out);
+        out
+    }
+
+    fn topk_into(
+        &self,
+        x: SparseVec,
+        k: usize,
+        _scratch: &mut crate::engine::PredictScratch,
+        out: &mut Vec<(u32, f32)>,
+    ) {
         let hist = &self.leaf_hist[self.route(x)];
         let total: u32 = hist.values().sum();
-        let mut out: Vec<(u32, f32)> = hist
-            .iter()
-            .map(|(&l, &c)| (l, c as f32 / total.max(1) as f32))
-            .collect();
+        out.clear();
+        out.extend(hist.iter().map(|(&l, &c)| (l, c as f32 / total.max(1) as f32)));
         out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
         out.truncate(k);
-        out
     }
 
     fn model_bytes(&self) -> usize {

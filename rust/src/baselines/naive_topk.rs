@@ -94,15 +94,21 @@ impl NaiveTopK {
 
 impl Predictor for NaiveTopK {
     fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
-        let mut scored: Vec<(u32, f32)> = self
-            .labels
-            .iter()
-            .zip(&self.models)
-            .map(|(&l, m)| (l, m.margin(x)))
-            .collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        scored.truncate(k);
-        scored
+        let mut out = Vec::new();
+        self.topk_into(x, k, &mut crate::engine::PredictScratch::new(), &mut out);
+        out
+    }
+    fn topk_into(
+        &self,
+        x: SparseVec,
+        k: usize,
+        _scratch: &mut crate::engine::PredictScratch,
+        out: &mut Vec<(u32, f32)>,
+    ) {
+        out.clear();
+        out.extend(self.labels.iter().zip(&self.models).map(|(&l, m)| (l, m.margin(x))));
+        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        out.truncate(k);
     }
     fn model_bytes(&self) -> usize {
         self.models.iter().map(|m| m.bytes()).sum()

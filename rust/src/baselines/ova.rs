@@ -62,16 +62,26 @@ impl Ova {
 
 impl Predictor for Ova {
     fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
-        let mut best: Vec<(u32, f32)> = Vec::with_capacity(k + 1);
+        let mut best = Vec::with_capacity(k + 1);
+        self.topk_into(x, k, &mut crate::engine::PredictScratch::new(), &mut best);
+        best
+    }
+    fn topk_into(
+        &self,
+        x: SparseVec,
+        k: usize,
+        _scratch: &mut crate::engine::PredictScratch,
+        out: &mut Vec<(u32, f32)>,
+    ) {
+        out.clear();
         for l in 0..self.c {
             let s = x.dot_dense(&self.w[l * self.d..(l + 1) * self.d]);
-            if best.len() < k || s > best.last().unwrap().1 {
-                best.push((l as u32, s));
-                best.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-                best.truncate(k);
+            if out.len() < k || s > out.last().unwrap().1 {
+                out.push((l as u32, s));
+                out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+                out.truncate(k);
             }
         }
-        best
     }
     fn model_bytes(&self) -> usize {
         self.w.len() * 4

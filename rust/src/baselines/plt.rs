@@ -124,6 +124,18 @@ impl Plt {
 impl Predictor for Plt {
     /// Beam search down the tree by path probability.
     fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
+        let mut out = Vec::new();
+        self.topk_into(x, k, &mut crate::engine::PredictScratch::new(), &mut out);
+        out
+    }
+
+    fn topk_into(
+        &self,
+        x: SparseVec,
+        k: usize,
+        _scratch: &mut crate::engine::PredictScratch,
+        out: &mut Vec<(u32, f32)>,
+    ) {
         // (log-prob, node)
         let mut frontier: Vec<(f32, usize)> = vec![(0.0, 0)];
         for _ in 0..self.depth {
@@ -139,14 +151,16 @@ impl Predictor for Plt {
             next.truncate(self.beam.max(k));
             frontier = next;
         }
-        frontier
-            .into_iter()
-            .filter_map(|(lp, v)| {
-                let label = (v - self.n_internal) as u32;
-                ((label as usize) < self.n_labels).then_some((label, lp.exp()))
-            })
-            .take(k)
-            .collect()
+        out.clear();
+        out.extend(
+            frontier
+                .into_iter()
+                .filter_map(|(lp, v)| {
+                    let label = (v - self.n_internal) as u32;
+                    ((label as usize) < self.n_labels).then_some((label, lp.exp()))
+                })
+                .take(k),
+        );
     }
 
     fn model_bytes(&self) -> usize {

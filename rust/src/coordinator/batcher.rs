@@ -18,28 +18,40 @@ impl Default for BatcherConfig {
     }
 }
 
+/// An item that records when it entered the queue, so the batcher can
+/// report true queueing latency (measured from *enqueue*, not from when a
+/// worker happened to pick the item up).
+pub trait Stamped {
+    fn enqueued_at(&self) -> Instant;
+}
+
 /// A collected batch of items.
 pub struct Batch<T> {
     pub items: Vec<T>,
-    /// When the oldest item entered the batcher (queueing-latency metric).
+    /// When the oldest item was *enqueued* (queueing-latency metric).
     pub oldest: Instant,
 }
 
 /// Pull one batch from `rx`. Blocks for the first item, then drains until
 /// the size or time bound trips. Returns `None` when the channel closed
-/// and is empty.
-pub fn next_batch<T>(rx: &Receiver<T>, cfg: &BatcherConfig) -> Option<Batch<T>> {
+/// and is empty. `oldest` is the earliest enqueue stamp in the batch —
+/// taking it after `recv` returned would under-report the first
+/// request's queueing time.
+pub fn next_batch<T: Stamped>(rx: &Receiver<T>, cfg: &BatcherConfig) -> Option<Batch<T>> {
     let first = rx.recv().ok()?;
-    let oldest = Instant::now();
+    let mut oldest = first.enqueued_at();
+    let deadline = Instant::now() + cfg.max_wait;
     let mut items = vec![first];
-    let deadline = oldest + cfg.max_wait;
     while items.len() < cfg.max_batch {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(item) => items.push(item),
+            Ok(item) => {
+                oldest = oldest.min(item.enqueued_at());
+                items.push(item);
+            }
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
@@ -52,15 +64,35 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
+    /// Test item: payload + enqueue stamp.
+    #[derive(Debug, PartialEq)]
+    struct Item(u32, Instant);
+
+    impl Item {
+        fn now(v: u32) -> Item {
+            Item(v, Instant::now())
+        }
+    }
+
+    impl Stamped for Item {
+        fn enqueued_at(&self) -> Instant {
+            self.1
+        }
+    }
+
+    fn ids(b: &Batch<Item>) -> Vec<u32> {
+        b.items.iter().map(|i| i.0).collect()
+    }
+
     #[test]
     fn batches_up_to_max_batch() {
         let (tx, rx) = channel();
         for i in 0..10 {
-            tx.send(i).unwrap();
+            tx.send(Item::now(i)).unwrap();
         }
         let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(50) };
         let b = next_batch(&rx, &cfg).unwrap();
-        assert_eq!(b.items, vec![0, 1, 2, 3]);
+        assert_eq!(ids(&b), vec![0, 1, 2, 3]);
         let b2 = next_batch(&rx, &cfg).unwrap();
         assert_eq!(b2.items.len(), 4);
     }
@@ -68,18 +100,18 @@ mod tests {
     #[test]
     fn flushes_on_timeout() {
         let (tx, rx) = channel();
-        tx.send(1).unwrap();
-        tx.send(2).unwrap();
+        tx.send(Item::now(1)).unwrap();
+        tx.send(Item::now(2)).unwrap();
         let cfg = BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(5) };
         let t0 = Instant::now();
         let b = next_batch(&rx, &cfg).unwrap();
-        assert_eq!(b.items, vec![1, 2]);
+        assert_eq!(ids(&b), vec![1, 2]);
         assert!(t0.elapsed() < Duration::from_millis(200));
     }
 
     #[test]
     fn returns_none_on_closed_empty_channel() {
-        let (tx, rx) = channel::<u32>();
+        let (tx, rx) = channel::<Item>();
         drop(tx);
         assert!(next_batch(&rx, &BatcherConfig::default()).is_none());
     }
@@ -87,10 +119,41 @@ mod tests {
     #[test]
     fn drains_after_close() {
         let (tx, rx) = channel();
-        tx.send(7).unwrap();
+        tx.send(Item::now(7)).unwrap();
         drop(tx);
         let b = next_batch(&rx, &BatcherConfig::default()).unwrap();
-        assert_eq!(b.items, vec![7]);
+        assert_eq!(ids(&b), vec![7]);
         assert!(next_batch(&rx, &BatcherConfig::default()).is_none());
+    }
+
+    /// The regression this module's `oldest` fix pins down: an item that
+    /// sat in the channel before the batcher woke up must be accounted
+    /// from its *enqueue* time, not from when `recv` returned it.
+    #[test]
+    fn oldest_is_enqueue_time_not_recv_time() {
+        let (tx, rx) = channel();
+        let stamp = Instant::now();
+        tx.send(Item(1, stamp)).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        let cfg = BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) };
+        let b = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b.oldest, stamp);
+        assert!(b.oldest.elapsed() >= Duration::from_millis(10));
+    }
+
+    /// `oldest` is the minimum stamp across the whole batch.
+    #[test]
+    fn oldest_is_minimum_over_batch() {
+        let (tx, rx) = channel();
+        let early = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let late = Instant::now();
+        // Later-stamped item arrives first in the queue.
+        tx.send(Item(1, late)).unwrap();
+        tx.send(Item(2, early)).unwrap();
+        let cfg = BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(50) };
+        let b = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(b.items.len(), 2);
+        assert_eq!(b.oldest, early);
     }
 }

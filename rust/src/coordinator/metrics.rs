@@ -1,11 +1,33 @@
-//! Serving metrics: shared latency/throughput counters the server threads
-//! update and the driver reads.
+//! Serving metrics: shared latency/throughput counters the server workers
+//! update and the driver reads — including per-worker breakdowns so
+//! pool-imbalance is visible.
 
+use crate::util::bench::fmt_ns;
 use crate::util::timer::LatencyHistogram;
 use std::sync::Mutex;
 
+/// Per-worker counters (one slot per worker thread in the pool).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// Total batch-execution time on this worker.
+    pub busy_ns: u64,
+}
+
+impl WorkerStats {
+    /// Mean batch size on this worker.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
 /// Aggregated serving metrics (interior-mutable; one lock per record is
-//  fine at micro-batch granularity).
+/// fine at micro-batch granularity).
 #[derive(Default)]
 pub struct ServingMetrics {
     inner: Mutex<Inner>,
@@ -21,6 +43,7 @@ struct Inner {
     exec_latency: LatencyHistogram,
     requests: u64,
     batches: u64,
+    per_worker: Vec<WorkerStats>,
 }
 
 impl ServingMetrics {
@@ -28,12 +51,26 @@ impl ServingMetrics {
         Self::default()
     }
 
-    pub fn record_batch(&self, batch_size: usize, queue_ns: u64, exec_ns: u64) {
+    /// Pre-size the per-worker table for an `n`-worker pool.
+    pub fn with_workers(n: usize) -> Self {
+        let m = ServingMetrics::default();
+        m.inner.lock().unwrap().per_worker = vec![WorkerStats::default(); n];
+        m
+    }
+
+    pub fn record_batch(&self, worker: usize, batch_size: usize, queue_ns: u64, exec_ns: u64) {
         let mut g = self.inner.lock().unwrap();
         g.queue_latency.record_ns(queue_ns);
         g.exec_latency.record_ns(exec_ns);
         g.batches += 1;
         g.requests += batch_size as u64;
+        if g.per_worker.len() <= worker {
+            g.per_worker.resize(worker + 1, WorkerStats::default());
+        }
+        let w = &mut g.per_worker[worker];
+        w.requests += batch_size as u64;
+        w.batches += 1;
+        w.busy_ns += exec_ns;
     }
 
     pub fn record_request_latency(&self, ns: u64) {
@@ -47,10 +84,15 @@ impl ServingMetrics {
         (g.requests, g.batches, mean)
     }
 
-    /// Human-readable summary block.
+    /// Snapshot of the per-worker counters.
+    pub fn per_worker(&self) -> Vec<WorkerStats> {
+        self.inner.lock().unwrap().per_worker.clone()
+    }
+
+    /// Human-readable summary block (aggregate + per-worker lines).
     pub fn summary(&self) -> String {
         let g = self.inner.lock().unwrap();
-        format!(
+        let mut s = format!(
             "requests={} batches={} mean_batch={:.1}\n  request latency: {}\n  queue  latency: {}\n  exec   latency: {}",
             g.requests,
             g.batches,
@@ -58,7 +100,17 @@ impl ServingMetrics {
             g.request_latency.summary(),
             g.queue_latency.summary(),
             g.exec_latency.summary(),
-        )
+        );
+        for (i, w) in g.per_worker.iter().enumerate() {
+            s.push_str(&format!(
+                "\n  worker {i}: requests={} batches={} mean_batch={:.1} busy={}",
+                w.requests,
+                w.batches,
+                w.mean_batch(),
+                fmt_ns(w.busy_ns as f64),
+            ));
+        }
+        s
     }
 
     /// Request-latency quantile in ns.
@@ -74,8 +126,8 @@ mod tests {
     #[test]
     fn records_and_summarizes() {
         let m = ServingMetrics::new();
-        m.record_batch(8, 1_000, 50_000);
-        m.record_batch(4, 2_000, 30_000);
+        m.record_batch(0, 8, 1_000, 50_000);
+        m.record_batch(0, 4, 2_000, 30_000);
         for _ in 0..12 {
             m.record_request_latency(60_000);
         }
@@ -85,5 +137,34 @@ mod tests {
         assert!((mean - 6.0).abs() < 1e-9);
         assert!(m.request_quantile_ns(0.5) > 0.0);
         assert!(m.summary().contains("batches=2"));
+    }
+
+    #[test]
+    fn per_worker_attribution() {
+        let m = ServingMetrics::with_workers(3);
+        m.record_batch(0, 5, 100, 1_000);
+        m.record_batch(2, 3, 100, 2_000);
+        m.record_batch(2, 1, 100, 3_000);
+        let pw = m.per_worker();
+        assert_eq!(pw.len(), 3);
+        assert_eq!(pw[0].requests, 5);
+        assert_eq!(pw[0].batches, 1);
+        assert_eq!(pw[1].requests, 0);
+        assert_eq!(pw[2].requests, 4);
+        assert_eq!(pw[2].batches, 2);
+        assert_eq!(pw[2].busy_ns, 5_000);
+        assert!((pw[2].mean_batch() - 2.0).abs() < 1e-9);
+        let (reqs, batches, _) = m.counts();
+        assert_eq!((reqs, batches), (9, 3));
+        assert!(m.summary().contains("worker 2"));
+    }
+
+    #[test]
+    fn worker_table_grows_on_demand() {
+        let m = ServingMetrics::new();
+        m.record_batch(5, 2, 0, 0);
+        let pw = m.per_worker();
+        assert_eq!(pw.len(), 6);
+        assert_eq!(pw[5].requests, 2);
     }
 }

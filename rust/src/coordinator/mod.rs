@@ -1,22 +1,28 @@
-//! L3 serving coordinator: a batching prediction server in the style of a
-//! model-serving router (vLLM-like architecture, scaled to this paper's
-//! needs).
+//! L3 serving coordinator: a batching multi-worker prediction server in
+//! the style of a model-serving router (vLLM-like architecture, scaled to
+//! this paper's needs).
 //!
-//! Requests (feature vectors) arrive on a channel; the [`batcher`]
-//! accumulates them into micro-batches bounded by size and latency; the
-//! [`server`] worker executes a batch at a time — either on the sparse
-//! linear LTLS path (`O(E·nnz + log C)` per example, rust-native) or on
-//! the dense deep path (one AOT PJRT program call per batch) — and
-//! completes the callers' futures. [`metrics`] aggregates the latency
-//! histograms reported by `examples/serve_batched.rs`.
+//! Requests (feature vectors) arrive on a bounded channel; the [`batcher`]
+//! accumulates them into micro-batches bounded by size and latency
+//! (stamping queueing latency from *enqueue* time); a configurable pool of
+//! [`server`] workers pulls batches from the shared queue — each worker
+//! owns a [`crate::engine::PredictScratch`], so the decode path is
+//! allocation-free and throughput scales with cores. A batch executes
+//! either on the sparse linear LTLS path (`O(E·nnz + log C)` per example;
+//! [`server::BatchedLtls`] amortizes the feature-strip sweep over the
+//! whole batch) or on the dense deep path (one AOT PJRT program call per
+//! batch) — and completes the callers' futures. [`metrics`] aggregates
+//! latency histograms plus per-worker counters, reported by
+//! `examples/serve_batched.rs` and `benches/serve_throughput.rs`.
 //!
 //! Everything is std-only (threads + channels): tokio is not vendored in
 //! this offline build, and the workload is CPU-bound anyway — a small
-//! fixed worker pool with bounded queues is the right shape.
+//! fixed worker pool over a bounded queue is the right shape.
 
 pub mod batcher;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{Batch, BatcherConfig};
-pub use server::{PredictServer, Request, Response, ServerConfig};
+pub use batcher::{Batch, BatcherConfig, Stamped};
+pub use metrics::{ServingMetrics, WorkerStats};
+pub use server::{BatchedLtls, PredictServer, Request, Response, ServerConfig};

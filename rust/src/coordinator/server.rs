@@ -1,15 +1,25 @@
-//! The prediction server: request channel → dynamic batcher → worker
-//! threads → response channels.
+//! The prediction server: request channel → dynamic batcher → N-worker
+//! pool → response channels.
+//!
+//! Architecture: all workers share one bounded request queue. A worker
+//! takes the queue lock only while *collecting* a micro-batch (the lock is
+//! cheap to hold — collection ends at `max_batch` or `max_wait`), then
+//! releases it and executes the batch on its own
+//! [`PredictScratch`], so batch execution — the expensive part — runs on
+//! all cores concurrently and steady-state serving performs no heap
+//! allocation in the decode path. Each worker reports per-worker metrics.
 //!
 //! Routing: sparse requests go to the rust-native LTLS path (per-example
-//! `O(E·nnz + log C)`, batching only amortizes queueing); dense requests
+//! `O(E·nnz + log C)`); [`BatchedLtls`] additionally amortizes the
+//! feature-strip sweep across the whole micro-batch
+//! ([`crate::model::LinearEdgeModel::edge_scores_batch`]). Dense requests
 //! can be routed to the AOT deep model, where batching amortizes the PJRT
-//! dispatch. The server is generic over a [`BatchModel`] so both paths —
+//! dispatch. The server is generic over a [`BatchModel`] so all paths —
 //! and test mocks — plug in.
 
-use super::batcher::{next_batch, BatcherConfig};
+use super::batcher::{next_batch, BatcherConfig, Stamped};
 use super::metrics::ServingMetrics;
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::engine::PredictScratch;
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -24,6 +34,12 @@ pub struct Request {
     reply: Sender<Response>,
 }
 
+impl Stamped for Request {
+    fn enqueued_at(&self) -> Instant {
+        self.enqueued
+    }
+}
+
 /// The server's answer.
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -34,25 +50,104 @@ pub struct Response {
 pub trait BatchModel: Send + Sync + 'static {
     /// Answer each request (same order as the input).
     fn predict_batch(&self, batch: &[Request]) -> Vec<Response>;
+
+    /// Engine variant: answer into `out` reusing the worker's scratch.
+    /// Must produce exactly what [`Self::predict_batch`] produces; the
+    /// default delegates to it. The worker pool always calls this.
+    fn predict_batch_into(
+        &self,
+        batch: &[Request],
+        scratch: &mut PredictScratch,
+        out: &mut Vec<Response>,
+    ) {
+        let _ = scratch;
+        out.clear();
+        out.extend(self.predict_batch(batch));
+    }
+
     fn name(&self) -> &str;
 }
 
-/// Adapter: any [`crate::eval::Predictor`] serves per-example (the sparse
-/// LTLS path — batching only helps queueing, which is the honest story
-/// for a per-example O(log C) model).
+/// Adapter: any [`crate::eval::Predictor`] serves per-example through its
+/// `topk_into` engine path (batching amortizes queueing; edge scoring
+/// stays per-example).
 pub struct SparsePath<P>(pub P);
 
 impl<P: crate::eval::Predictor + Send + Sync + 'static> BatchModel for SparsePath<P> {
     fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
-        batch
-            .iter()
-            .map(|r| Response {
-                topk: self.0.topk(crate::sparse::SparseVec::new(&r.indices, &r.values), r.k),
-            })
-            .collect()
+        let mut out = Vec::with_capacity(batch.len());
+        self.predict_batch_into(batch, &mut PredictScratch::new(), &mut out);
+        out
     }
+
+    fn predict_batch_into(
+        &self,
+        batch: &[Request],
+        scratch: &mut PredictScratch,
+        out: &mut Vec<Response>,
+    ) {
+        out.clear();
+        for r in batch {
+            let mut topk = Vec::with_capacity(r.k);
+            self.0.topk_into(
+                crate::sparse::SparseVec::new(&r.indices, &r.values),
+                r.k,
+                scratch,
+                &mut topk,
+            );
+            out.push(Response { topk });
+        }
+    }
+
     fn name(&self) -> &str {
         self.0.name()
+    }
+}
+
+/// The batched LTLS path: one feature-strip sweep scores the *whole*
+/// micro-batch ([`crate::model::LinearEdgeModel::edge_scores_batch`]),
+/// then each row is list-Viterbi-decoded from the shared score matrix —
+/// all on the worker's scratch. Bit-identical to the per-example path.
+pub struct BatchedLtls(pub crate::train::TrainedModel);
+
+impl BatchModel for BatchedLtls {
+    fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
+        let mut out = Vec::with_capacity(batch.len());
+        self.predict_batch_into(batch, &mut PredictScratch::new(), &mut out);
+        out
+    }
+
+    fn predict_batch_into(
+        &self,
+        batch: &[Request],
+        scratch: &mut PredictScratch,
+        out: &mut Vec<Response>,
+    ) {
+        out.clear();
+        let e = self.0.model.n_edges;
+        let rows: Vec<crate::sparse::SparseVec> = batch
+            .iter()
+            .map(|r| crate::sparse::SparseVec::new(&r.indices, &r.values))
+            .collect();
+        self.0.model.edge_scores_batch(&rows, &mut scratch.batch_gather, &mut scratch.batch_h);
+        for (i, r) in batch.iter().enumerate() {
+            let h = &scratch.batch_h[i * e..(i + 1) * e];
+            let fetch = (r.k + 8).min(self.0.trellis.c as usize);
+            crate::decode::list_viterbi_into(
+                &self.0.trellis,
+                h,
+                fetch,
+                &mut scratch.ws,
+                &mut scratch.paths,
+            );
+            let mut topk = Vec::with_capacity(r.k);
+            self.0.resolve_topk(r.k, &scratch.paths, &mut topk);
+            out.push(Response { topk });
+        }
+    }
+
+    fn name(&self) -> &str {
+        "LTLS-batched"
     }
 }
 
@@ -60,45 +155,71 @@ impl<P: crate::eval::Predictor + Send + Sync + 'static> BatchModel for SparsePat
 #[derive(Clone, Debug, Default)]
 pub struct ServerConfig {
     pub batcher: BatcherConfig,
+    /// Bounded request-queue depth (0 → 1024).
     pub queue_depth: usize,
+    /// Worker threads (0 → one per available core).
+    pub workers: usize,
 }
 
 /// Handle to a running server.
 pub struct PredictServer {
     tx: SyncSender<Request>,
     pub metrics: Arc<ServingMetrics>,
-    worker: Option<JoinHandle<()>>,
-    stopping: Arc<AtomicBool>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl PredictServer {
-    /// Spawn the worker thread.
+    /// Spawn the worker pool.
     pub fn start<M: BatchModel>(model: M, cfg: ServerConfig) -> PredictServer {
         let depth = if cfg.queue_depth == 0 { 1024 } else { cfg.queue_depth };
+        let n_workers = if cfg.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            cfg.workers
+        };
         let (tx, rx) = mpsc::sync_channel::<Request>(depth);
-        let metrics = Arc::new(ServingMetrics::new());
-        let stopping = Arc::new(AtomicBool::new(false));
-        let m = Arc::clone(&metrics);
-        let rx = Mutex::new(rx);
-        let bcfg = cfg.batcher.clone();
-        let worker = std::thread::Builder::new()
-            .name("ltls-server".into())
-            .spawn(move || {
-                let rx: Receiver<Request> = rx.into_inner().unwrap();
-                while let Some(batch) = next_batch(&rx, &bcfg) {
-                    let queue_ns = batch.oldest.elapsed().as_nanos() as u64;
-                    let t0 = Instant::now();
-                    let responses = model.predict_batch(&batch.items);
-                    let exec_ns = t0.elapsed().as_nanos() as u64;
-                    m.record_batch(batch.items.len(), queue_ns, exec_ns);
-                    for (req, resp) in batch.items.into_iter().zip(responses) {
-                        m.record_request_latency(req.enqueued.elapsed().as_nanos() as u64);
-                        let _ = req.reply.send(resp);
+        let metrics = Arc::new(ServingMetrics::with_workers(n_workers));
+        let model = Arc::new(model);
+        let queue = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(n_workers);
+        for wid in 0..n_workers {
+            let m = Arc::clone(&metrics);
+            let model = Arc::clone(&model);
+            let queue = Arc::clone(&queue);
+            let bcfg = cfg.batcher.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ltls-server-{wid}"))
+                .spawn(move || {
+                    // Worker-owned engine state: reused across every batch.
+                    let mut scratch = PredictScratch::new();
+                    let mut responses: Vec<Response> = Vec::new();
+                    loop {
+                        // Hold the queue lock only while collecting.
+                        let batch = {
+                            let rx = queue.lock().unwrap();
+                            next_batch(&*rx, &bcfg)
+                        };
+                        let Some(batch) = batch else { break };
+                        let queue_ns = batch.oldest.elapsed().as_nanos() as u64;
+                        let t0 = Instant::now();
+                        model.predict_batch_into(&batch.items, &mut scratch, &mut responses);
+                        let exec_ns = t0.elapsed().as_nanos() as u64;
+                        m.record_batch(wid, batch.items.len(), queue_ns, exec_ns);
+                        for (req, resp) in batch.items.into_iter().zip(responses.drain(..)) {
+                            m.record_request_latency(req.enqueued.elapsed().as_nanos() as u64);
+                            let _ = req.reply.send(resp);
+                        }
                     }
-                }
-            })
-            .expect("spawn server worker");
-        PredictServer { tx, metrics, worker: Some(worker), stopping }
+                })
+                .expect("spawn server worker");
+            workers.push(handle);
+        }
+        PredictServer { tx, metrics, workers }
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
     }
 
     /// Submit a request; returns a receiver for the response.
@@ -115,27 +236,14 @@ impl PredictServer {
         self.submit(indices, values, k).recv().expect("server dropped reply")
     }
 
-    /// Graceful shutdown: close the queue, join the worker.
-    pub fn shutdown(mut self) {
-        self.stopping.store(true, Ordering::SeqCst);
-        drop(std::mem::replace(&mut self.tx, {
-            // Replace with a dead sender by building a dummy pair.
-            let (tx, _rx) = mpsc::sync_channel(1);
-            tx
-        }));
-        if let Some(w) = self.worker.take() {
+    /// Graceful shutdown: close the queue, join every worker. (Merely
+    /// dropping the server also closes the queue, but detaches the
+    /// workers instead of joining them.)
+    pub fn shutdown(self) {
+        let PredictServer { tx, workers, metrics: _ } = self;
+        drop(tx);
+        for w in workers {
             let _ = w.join();
-        }
-    }
-}
-
-impl Drop for PredictServer {
-    fn drop(&mut self) {
-        self.stopping.store(true, Ordering::SeqCst);
-        if let Some(w) = self.worker.take() {
-            // Dropping self.tx happens after drop returns; detach instead
-            // of joining to avoid deadlock if callers forgot shutdown().
-            drop(w);
         }
     }
 }
@@ -165,6 +273,7 @@ mod tests {
             ServerConfig {
                 batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
                 queue_depth: 64,
+                workers: 1,
             },
         );
         let mut receivers = Vec::new();
@@ -184,8 +293,33 @@ mod tests {
     #[test]
     fn blocking_predict_roundtrip() {
         let server = PredictServer::start(Echo, ServerConfig::default());
+        assert!(server.n_workers() >= 1);
         let r = server.predict(vec![42], vec![1.0], 1);
         assert_eq!(r.topk, vec![(42, 1.0)]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn multi_worker_pool_answers_every_request() {
+        let server = PredictServer::start(
+            Echo,
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(200) },
+                queue_depth: 128,
+                workers: 4,
+            },
+        );
+        assert_eq!(server.n_workers(), 4);
+        let receivers: Vec<_> = (0..200u32).map(|i| server.submit(vec![i], vec![1.0], 1)).collect();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().topk[0].0, i as u32);
+        }
+        let (reqs, _, _) = server.metrics.counts();
+        assert_eq!(reqs, 200);
+        // Every request is attributed to exactly one worker slot.
+        let pw = server.metrics.per_worker();
+        assert_eq!(pw.len(), 4);
+        assert_eq!(pw.iter().map(|w| w.requests).sum::<u64>(), 200);
         server.shutdown();
     }
 
@@ -202,6 +336,38 @@ mod tests {
         let resp = server.predict(row.indices.to_vec(), row.values.to_vec(), 3);
         assert!(!resp.topk.is_empty());
         assert!(resp.topk.len() <= 3);
+        server.shutdown();
+    }
+
+    /// BatchedLtls (one strip-sweep per batch) == SparsePath (per-example)
+    /// == inline predict_topk — bit-identical.
+    #[test]
+    fn batched_path_matches_per_example_path() {
+        use crate::data::synthetic::SyntheticSpec;
+        use crate::eval::Predictor;
+        use crate::train::{TrainConfig, Trainer};
+        let ds = SyntheticSpec::multiclass(500, 400, 24).seed(34).generate();
+        let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+        tr.fit(&ds, 3);
+        let model = tr.into_model();
+        let inline: Vec<_> = (0..40).map(|i| model.topk(ds.row(i), 3)).collect();
+        let server = PredictServer::start(
+            BatchedLtls(model),
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_micros(300) },
+                queue_depth: 64,
+                workers: 2,
+            },
+        );
+        let receivers: Vec<_> = (0..40)
+            .map(|i| {
+                let row = ds.row(i);
+                server.submit(row.indices.to_vec(), row.values.to_vec(), 3)
+            })
+            .collect();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().topk, inline[i], "request {i}");
+        }
         server.shutdown();
     }
 }

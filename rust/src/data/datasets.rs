@@ -227,8 +227,28 @@ pub fn all_analogs() -> Vec<AnalogSpec> {
     v
 }
 
-/// Look up an analog by paper name (case-insensitive).
+/// Look up an analog by paper name (case-insensitive). The extra name
+/// `"synthetic"` resolves to a small generic analog used by CI smoke runs
+/// (`ltls train --dataset synthetic --epochs 1`); it is not part of the
+/// paper registry and does not appear in [`all_analogs`].
 pub fn by_name(name: &str) -> Option<AnalogSpec> {
+    if name.eq_ignore_ascii_case("synthetic") {
+        return Some(AnalogSpec {
+            paper_name: "synthetic",
+            paper_n: 4_000,
+            paper_d: 1_000,
+            paper_c: 64,
+            n: 4_000,
+            d: 1_000,
+            density: 0.01,
+            multiclass: true,
+            labels_per_example: 1,
+            teacher: TeacherKind::Cluster,
+            noise: 0.02,
+            skew: 0.0,
+            pool_frac: 1.0,
+        });
+    }
     all_analogs().into_iter().find(|a| a.paper_name.eq_ignore_ascii_case(name))
 }
 
@@ -280,5 +300,14 @@ mod tests {
     fn by_name_lookup() {
         assert!(by_name("SECTOR").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    /// The CI smoke alias generates quickly and stays out of the registry.
+    #[test]
+    fn synthetic_smoke_alias() {
+        let a = by_name("synthetic").unwrap();
+        let (train, test) = a.generate(0.1, 1);
+        assert!(train.validate().is_ok() && test.n_examples() > 0);
+        assert!(all_analogs().iter().all(|x| x.paper_name != "synthetic"));
     }
 }

@@ -7,34 +7,35 @@
 //! backprop signal for the deep variant (the same math `python/compile`
 //! gets from JAX autodiff; this rust twin is used for CPU training, for
 //! testing the JAX artifact, and for calibrated probability outputs).
+//!
+//! The cores are [`log_partition_ws`] and [`posterior_marginals_into`],
+//! which run on a caller-owned [`DecodeWorkspace`] (alpha/beta tables)
+//! and allocate nothing after warm-up; the classic allocating functions
+//! are thin wrappers.
 
-use crate::util::{logaddexp, logsumexp};
+use crate::engine::DecodeWorkspace;
 use crate::graph::Trellis;
+use crate::util::{logaddexp, logsumexp};
 
-/// Log-partition function `log Σ_paths exp(path score)`.
-pub fn log_partition(t: &Trellis, h: &[f32]) -> f32 {
-    forward(t, h).logz
-}
-
-struct Forward {
-    /// alpha[j][s]: log-sum of prefix scores into (step j+1?, state s) —
-    /// indexed alpha[j-1][s] for step j in 1..=b.
-    alpha: Vec<[f32; 2]>,
+/// Terminal quantities of the forward pass (alpha and per-exit terms live
+/// in the workspace).
+struct ForwardTerms {
     /// Log-sum over complete paths.
     logz: f32,
-    /// Per-terminal contributions for the backward pass:
-    /// exit_terms[k] = alpha at exit k's step/state + exit edge.
-    exit_terms: Vec<f32>,
     /// full_terms[s] = alpha[b-1][s] + aux edge s + aux_sink.
     full_terms: [f32; 2],
 }
 
-fn forward(t: &Trellis, h: &[f32]) -> Forward {
+/// Forward pass: fills `ws.alpha` (`alpha[j-1][s]` = log-sum of prefix
+/// scores into (step j, state s)) and `ws.exit_terms`, returns the
+/// terminal sums.
+fn forward_into(t: &Trellis, h: &[f32], ws: &mut DecodeWorkspace) -> ForwardTerms {
     let b = t.steps as usize;
-    let mut alpha = Vec::with_capacity(b);
-    alpha.push([h[t.source_edge(0) as usize], h[t.source_edge(1) as usize]]);
+    ws.alpha.clear();
+    ws.alpha.reserve(b);
+    ws.alpha.push([h[t.source_edge(0) as usize], h[t.source_edge(1) as usize]]);
     for j in 2..=b as u32 {
-        let prev = *alpha.last().unwrap();
+        let prev = *ws.alpha.last().unwrap();
         let a0 = logaddexp(
             prev[0] + h[t.transition_edge(j, 0, 0) as usize],
             prev[1] + h[t.transition_edge(j, 1, 0) as usize],
@@ -43,67 +44,88 @@ fn forward(t: &Trellis, h: &[f32]) -> Forward {
             prev[0] + h[t.transition_edge(j, 0, 1) as usize],
             prev[1] + h[t.transition_edge(j, 1, 1) as usize],
         );
-        alpha.push([a0, a1]);
+        ws.alpha.push([a0, a1]);
     }
-    let mut exit_terms = Vec::with_capacity(t.exit_bits().len());
+    ws.exit_terms.clear();
     for (k, &bit) in t.exit_bits().iter().enumerate() {
         let j = bit as usize; // step = bit+1 → alpha index = bit
-        exit_terms.push(alpha[j][1] + h[t.exit_edge(k) as usize]);
+        ws.exit_terms.push(ws.alpha[j][1] + h[t.exit_edge(k) as usize]);
     }
     let aux_sink = h[t.aux_sink_edge() as usize];
     let full_terms = [
-        alpha[b - 1][0] + h[t.aux_edge(0) as usize] + aux_sink,
-        alpha[b - 1][1] + h[t.aux_edge(1) as usize] + aux_sink,
+        ws.alpha[b - 1][0] + h[t.aux_edge(0) as usize] + aux_sink,
+        ws.alpha[b - 1][1] + h[t.aux_edge(1) as usize] + aux_sink,
     ];
-    let mut terms = exit_terms.clone();
-    terms.extend_from_slice(&full_terms);
-    Forward { alpha, logz: logsumexp(&terms), exit_terms, full_terms }
+    ws.terms.clear();
+    ws.terms.extend_from_slice(&ws.exit_terms);
+    ws.terms.extend_from_slice(&full_terms);
+    ForwardTerms { logz: logsumexp(&ws.terms), full_terms }
 }
 
-/// Posterior edge marginals `P(e ∈ s | x)` under the trellis softmax.
-/// Returns a vector of length `E` summing (per edge-cut) to 1.
-pub fn posterior_marginals(t: &Trellis, h: &[f32]) -> Vec<f32> {
+/// Log-partition function `log Σ_paths exp(path score)` reusing the
+/// workspace. Allocation-free after warm-up.
+pub fn log_partition_ws(t: &Trellis, h: &[f32], ws: &mut DecodeWorkspace) -> f32 {
+    forward_into(t, h, ws).logz
+}
+
+/// Allocating wrapper over [`log_partition_ws`].
+pub fn log_partition(t: &Trellis, h: &[f32]) -> f32 {
+    log_partition_ws(t, h, &mut DecodeWorkspace::new())
+}
+
+/// Posterior edge marginals `P(e ∈ s | x)` under the trellis softmax,
+/// written into `out` (length `E`, summing per edge-cut to 1), reusing
+/// the workspace's alpha/beta tables. Allocation-free after warm-up.
+pub fn posterior_marginals_into(
+    t: &Trellis,
+    h: &[f32],
+    ws: &mut DecodeWorkspace,
+    out: &mut Vec<f32>,
+) {
     let b = t.steps as usize;
-    let f = forward(t, h);
+    let f = forward_into(t, h, ws);
     let logz = f.logz;
 
     // Backward pass: beta[j][s] = log-sum over suffixes from (step j, s)
     // to the sink (including terminal edges), indexed beta[j-1][s].
-    let mut beta = vec![[f32::NEG_INFINITY; 2]; b];
+    ws.beta.clear();
+    ws.beta.resize(b, [f32::NEG_INFINITY; 2]);
     let aux_sink = h[t.aux_sink_edge() as usize];
-    beta[b - 1] = [
+    ws.beta[b - 1] = [
         h[t.aux_edge(0) as usize] + aux_sink,
         h[t.aux_edge(1) as usize] + aux_sink,
     ];
     // Terminal exits contribute to beta at their step.
     for (k, &bit) in t.exit_bits().iter().enumerate() {
         let j = bit as usize; // step bit+1 → beta index bit
-        beta[j][1] = logaddexp(beta[j][1], h[t.exit_edge(k) as usize]);
+        ws.beta[j][1] = logaddexp(ws.beta[j][1], h[t.exit_edge(k) as usize]);
     }
     for j in (1..b).rev() {
         // beta for step j (index j-1) from step j+1 (index j).
         let step = (j + 1) as u32;
         for a in 0..2usize {
             let v = logaddexp(
-                h[t.transition_edge(step, a as u8, 0) as usize] + beta[j][0],
-                h[t.transition_edge(step, a as u8, 1) as usize] + beta[j][1],
+                h[t.transition_edge(step, a as u8, 0) as usize] + ws.beta[j][0],
+                h[t.transition_edge(step, a as u8, 1) as usize] + ws.beta[j][1],
             );
-            beta[j - 1][a] = logaddexp(beta[j - 1][a], v);
+            ws.beta[j - 1][a] = logaddexp(ws.beta[j - 1][a], v);
         }
     }
 
-    let mut m = vec![0.0f32; t.num_edges()];
+    out.clear();
+    out.resize(t.num_edges(), 0.0);
     // Source edges.
     for s in 0..2usize {
-        m[t.source_edge(s as u8) as usize] =
-            (h[t.source_edge(s as u8) as usize] + beta[0][s] - logz).exp();
+        out[t.source_edge(s as u8) as usize] =
+            (h[t.source_edge(s as u8) as usize] + ws.beta[0][s] - logz).exp();
     }
     // Transition edges.
     for j in 2..=b as u32 {
         for a in 0..2usize {
             for s2 in 0..2usize {
                 let e = t.transition_edge(j, a as u8, s2 as u8) as usize;
-                m[e] = (f.alpha[j as usize - 2][a] + h[e] + beta[j as usize - 1][s2] - logz).exp();
+                out[e] =
+                    (ws.alpha[j as usize - 2][a] + h[e] + ws.beta[j as usize - 1][s2] - logz).exp();
             }
         }
     }
@@ -111,15 +133,21 @@ pub fn posterior_marginals(t: &Trellis, h: &[f32]) -> Vec<f32> {
     let mut aux_total = 0.0;
     for s in 0..2usize {
         let p = (f.full_terms[s] - logz).exp();
-        m[t.aux_edge(s as u8) as usize] = p;
+        out[t.aux_edge(s as u8) as usize] = p;
         aux_total += p;
     }
-    m[t.aux_sink_edge() as usize] = aux_total;
+    out[t.aux_sink_edge() as usize] = aux_total;
     // Exit edges.
     for k in 0..t.exit_bits().len() {
-        m[t.exit_edge(k) as usize] = (f.exit_terms[k] - logz).exp();
+        out[t.exit_edge(k) as usize] = (ws.exit_terms[k] - logz).exp();
     }
-    m
+}
+
+/// Allocating wrapper over [`posterior_marginals_into`].
+pub fn posterior_marginals(t: &Trellis, h: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    posterior_marginals_into(t, h, &mut DecodeWorkspace::new(), &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -143,6 +171,21 @@ mod tests {
                 let got = log_partition(&t, &h);
                 assert!((got - want).abs() < 1e-3, "C={c}: {got} vs {want}");
             }
+        }
+    }
+
+    /// A reused workspace is bit-identical to fresh calls across shapes.
+    #[test]
+    fn reused_workspace_matches_fresh() {
+        let mut rng = Rng::new(44);
+        let mut ws = DecodeWorkspace::new();
+        let mut out = Vec::new();
+        for c in [2u64, 3, 22, 105, 12294, 159] {
+            let t = Trellis::new(c);
+            let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+            assert_eq!(log_partition_ws(&t, &h, &mut ws), log_partition(&t, &h), "C={c}");
+            posterior_marginals_into(&t, &h, &mut ws, &mut out);
+            assert_eq!(out, posterior_marginals(&t, &h), "C={c}");
         }
     }
 

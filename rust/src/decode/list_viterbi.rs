@@ -4,42 +4,46 @@
 //! predecessor lists per state is `O(k)` per step, so the total cost is
 //! `O(k·E)` plus an `O(k log k)` final selection — the paper's
 //! `O(k log(k) log(C))` bound.
+//!
+//! The core is [`list_viterbi_into`], which runs on a caller-owned
+//! [`DecodeWorkspace`] and allocates nothing after warm-up; the classic
+//! allocating [`list_viterbi`] is a thin wrapper over it.
 
 use super::Scored;
+use crate::engine::DecodeWorkspace;
 use crate::graph::Trellis;
 
-/// A DP entry: prefix score + packed state choices (bit j−1 = state at
-/// step j).
-#[derive(Clone, Copy, Debug)]
-struct Entry {
-    score: f32,
-    code: u64,
-}
-
-/// Merge two descending entry lists, each first adding `add0` / `add1`,
-/// keeping the best `k`.
-fn merge_topk(a: &[Entry], add0: f32, b: &[Entry], add1: f32, k: usize, out: &mut Vec<Entry>) {
+/// Merge two descending `(score, code)` lists, each first adding
+/// `add0` / `add1`, keeping the best `k`.
+fn merge_topk(
+    a: &[(f32, u64)],
+    add0: f32,
+    b: &[(f32, u64)],
+    add1: f32,
+    k: usize,
+    out: &mut Vec<(f32, u64)>,
+) {
     out.clear();
     let (mut i, mut j) = (0, 0);
     while out.len() < k && (i < a.len() || j < b.len()) {
-        let ta = a.get(i).map(|e| e.score + add0);
-        let tb = b.get(j).map(|e| e.score + add1);
+        let ta = a.get(i).map(|e| e.0 + add0);
+        let tb = b.get(j).map(|e| e.0 + add1);
         match (ta, tb) {
             (Some(sa), Some(sb)) => {
                 if sa >= sb {
-                    out.push(Entry { score: sa, code: a[i].code });
+                    out.push((sa, a[i].1));
                     i += 1;
                 } else {
-                    out.push(Entry { score: sb, code: b[j].code });
+                    out.push((sb, b[j].1));
                     j += 1;
                 }
             }
             (Some(sa), None) => {
-                out.push(Entry { score: sa, code: a[i].code });
+                out.push((sa, a[i].1));
                 i += 1;
             }
             (None, Some(sb)) => {
-                out.push(Entry { score: sb, code: b[j].code });
+                out.push((sb, b[j].1));
                 j += 1;
             }
             (None, None) => unreachable!(),
@@ -47,69 +51,95 @@ fn merge_topk(a: &[Entry], add0: f32, b: &[Entry], add1: f32, k: usize, out: &mu
     }
 }
 
-/// Top-k highest-scoring paths for edge scores `h`, descending by score
-/// (ties → smaller label). Returns `min(k, C)` results.
-pub fn list_viterbi(t: &Trellis, h: &[f32], k: usize) -> Vec<Scored> {
+/// If step `j` carries an early exit, emit the exit completions of the
+/// current state-1 prefix list into `finals`.
+fn push_exits(
+    t: &Trellis,
+    h: &[f32],
+    k: usize,
+    j: u32,
+    list1: &[(f32, u64)],
+    exit_rank: &mut usize,
+    finals: &mut Vec<Scored>,
+) {
+    if *exit_rank < t.exit_bits().len() && t.exit_bits()[*exit_rank] == j - 1 {
+        let base = t.exit_label_base(*exit_rank);
+        let edge = h[t.exit_edge(*exit_rank) as usize];
+        for &(score, code) in list1.iter().take(k) {
+            // Free bits exclude the forced state-1 at step j.
+            let label = base + (code & !(1u64 << (j - 1)));
+            finals.push(Scored { label, score: score + edge });
+        }
+        *exit_rank += 1;
+    }
+}
+
+/// Top-k highest-scoring paths for edge scores `h` into `out`, descending
+/// by score (ties → smaller label), reusing the workspace buffers.
+/// `out` receives `min(k, C)` results. Allocation-free after warm-up.
+pub fn list_viterbi_into(
+    t: &Trellis,
+    h: &[f32],
+    k: usize,
+    ws: &mut DecodeWorkspace,
+    out: &mut Vec<Scored>,
+) {
     debug_assert_eq!(h.len(), t.num_edges());
+    out.clear();
     if k == 0 {
-        return Vec::new();
+        return;
     }
     let k = k.min(t.c as usize);
     let b = t.steps;
 
     // Per-state k-best prefix lists.
-    let mut list0 = vec![Entry { score: h[t.source_edge(0) as usize], code: 0 }];
-    let mut list1 = vec![Entry { score: h[t.source_edge(1) as usize], code: 1 }];
-    let mut finals: Vec<Scored> = Vec::new();
+    ws.list0.clear();
+    ws.list0.push((h[t.source_edge(0) as usize], 0));
+    ws.list1.clear();
+    ws.list1.push((h[t.source_edge(1) as usize], 1));
     let mut exit_rank = 0usize;
 
-    let push_exits =
-        |j: u32, list1: &[Entry], exit_rank: &mut usize, finals: &mut Vec<Scored>| {
-            if *exit_rank < t.exit_bits().len() && t.exit_bits()[*exit_rank] == j - 1 {
-                let base = t.exit_label_base(*exit_rank);
-                let edge = h[t.exit_edge(*exit_rank) as usize];
-                for e in list1.iter().take(k) {
-                    // Free bits exclude the forced state-1 at step j.
-                    let label = base + (e.code & !(1u64 << (j - 1)));
-                    finals.push(Scored { label, score: e.score + edge });
-                }
-                *exit_rank += 1;
-            }
-        };
+    push_exits(t, h, k, 1, &ws.list1, &mut exit_rank, out);
 
-    push_exits(1, &list1, &mut exit_rank, &mut finals);
-
-    let (mut next0, mut next1) = (Vec::with_capacity(k), Vec::with_capacity(k));
     for j in 2..=b {
         let e00 = h[t.transition_edge(j, 0, 0) as usize];
         let e01 = h[t.transition_edge(j, 0, 1) as usize];
         let e10 = h[t.transition_edge(j, 1, 0) as usize];
         let e11 = h[t.transition_edge(j, 1, 1) as usize];
-        merge_topk(&list0, e00, &list1, e10, k, &mut next0);
-        merge_topk(&list0, e01, &list1, e11, k, &mut next1);
-        for e in next1.iter_mut() {
-            e.code |= 1 << (j - 1);
+        merge_topk(&ws.list0, e00, &ws.list1, e10, k, &mut ws.next0);
+        merge_topk(&ws.list0, e01, &ws.list1, e11, k, &mut ws.next1);
+        for e in ws.next1.iter_mut() {
+            e.1 |= 1 << (j - 1);
         }
-        std::mem::swap(&mut list0, &mut next0);
-        std::mem::swap(&mut list1, &mut next1);
-        push_exits(j, &list1, &mut exit_rank, &mut finals);
+        std::mem::swap(&mut ws.list0, &mut ws.next0);
+        std::mem::swap(&mut ws.list1, &mut ws.next1);
+        push_exits(t, h, k, j, &ws.list1, &mut exit_rank, out);
     }
 
     // Full paths: through aux state edges + aux→sink.
     let aux_sink = h[t.aux_sink_edge() as usize];
-    for (list, s) in [(&list0, 0u8), (&list1, 1u8)] {
+    for (list, s) in [(&ws.list0, 0u8), (&ws.list1, 1u8)] {
         let add = h[t.aux_edge(s) as usize] + aux_sink;
-        for e in list.iter().take(k) {
-            finals.push(Scored { label: e.code, score: e.score + add });
+        for &(score, code) in list.iter().take(k) {
+            out.push(Scored { label: code, score: score + add });
         }
     }
 
-    finals.sort_by(|a, b| {
+    out.sort_by(|a, b| {
         b.score.partial_cmp(&a.score).unwrap().then(a.label.cmp(&b.label))
     });
-    finals.dedup_by_key(|s| s.label); // codes are distinct; belt & braces
-    finals.truncate(k);
-    finals
+    out.dedup_by_key(|s| s.label); // codes are distinct; belt & braces
+    out.truncate(k);
+}
+
+/// Allocating wrapper over [`list_viterbi_into`]: top-k highest-scoring
+/// paths, descending by score (ties → smaller label). Returns
+/// `min(k, C)` results.
+pub fn list_viterbi(t: &Trellis, h: &[f32], k: usize) -> Vec<Scored> {
+    let mut ws = DecodeWorkspace::new();
+    let mut out = Vec::new();
+    list_viterbi_into(t, h, k, &mut ws, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -137,6 +167,23 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// A reused workspace produces bit-identical results to fresh calls,
+    /// across interleaved (C, k) shapes.
+    #[test]
+    fn reused_workspace_matches_fresh() {
+        let mut rng = Rng::new(25);
+        let mut ws = DecodeWorkspace::new();
+        let mut out = Vec::new();
+        for _ in 0..30 {
+            let c = 2 + rng.below(5000);
+            let t = Trellis::new(c);
+            let k = 1 + rng.index(20);
+            let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+            list_viterbi_into(&t, &h, k, &mut ws, &mut out);
+            assert_eq!(out, list_viterbi(&t, &h, k), "C={c} k={k}");
         }
     }
 
@@ -185,10 +232,14 @@ mod tests {
         }
     }
 
-    /// k=0 is empty.
+    /// k=0 is empty (and clears a dirty out-buffer).
     #[test]
     fn k_zero_is_empty() {
         let t = Trellis::new(22);
         assert!(list_viterbi(&t, &vec![0.0; t.num_edges()], 0).is_empty());
+        let mut ws = DecodeWorkspace::new();
+        let mut out = vec![Scored { label: 9, score: 9.0 }];
+        list_viterbi_into(&t, &vec![0.0; t.num_edges()], 0, &mut ws, &mut out);
+        assert!(out.is_empty());
     }
 }

@@ -11,16 +11,23 @@
 //!   marginals (the multinomial-logistic training mode of §5, and the
 //!   gradient signal for the deep variant);
 //! * [`score::score_label`] — score one known label's path in `O(log C)`.
+//!
+//! Each decoder has an `_into` variant ([`list_viterbi_into`],
+//! [`posterior_marginals_into`], [`log_partition_ws`], [`viterbi_into`])
+//! running on a caller-owned [`crate::engine::DecodeWorkspace`] with zero
+//! steady-state allocation; the classic names are thin wrappers over them.
 
 pub mod forward_backward;
 pub mod list_viterbi;
 pub mod score;
 pub mod viterbi;
 
-pub use forward_backward::{log_partition, posterior_marginals};
-pub use list_viterbi::list_viterbi;
+pub use forward_backward::{
+    log_partition, log_partition_ws, posterior_marginals, posterior_marginals_into,
+};
+pub use list_viterbi::{list_viterbi, list_viterbi_into};
 pub use score::{score_label, score_labels};
-pub use viterbi::viterbi;
+pub use viterbi::{viterbi, viterbi_into};
 
 /// A decoded prediction: label (canonical path id) and its path score.
 #[derive(Clone, Copy, Debug, PartialEq)]

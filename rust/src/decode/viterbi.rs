@@ -88,6 +88,15 @@ pub fn viterbi(t: &Trellis, h: &[f32]) -> Scored {
     Scored { label: l, score: s }
 }
 
+/// Out-parameter twin of [`viterbi`] for API symmetry with the other
+/// `_into` decoders. Top-1 Viterbi is already allocation-free (the DP
+/// state is two score registers plus packed backpointer bits), so this
+/// simply writes the result through `out`.
+#[inline]
+pub fn viterbi_into(t: &Trellis, h: &[f32], out: &mut Scored) {
+    *out = viterbi(t, h);
+}
+
 /// Decode the best path object (states + exit) rather than just the label.
 pub fn viterbi_path(t: &Trellis, h: &[f32]) -> (Path, f32) {
     let Scored { label, score } = viterbi(t, h);

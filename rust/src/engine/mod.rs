@@ -1,0 +1,34 @@
+//! The unified zero-allocation inference engine.
+//!
+//! LTLS's value proposition is `O(log C)` *decode* work per example — which
+//! means allocator traffic and queueing, not arithmetic, dominate the hot
+//! path unless the whole inference stack reuses its buffers. This layer
+//! owns the reusable state and every inference consumer threads through it:
+//!
+//! * [`DecodeWorkspace`] — the buffers of the dynamic-programming decoders
+//!   (list-Viterbi per-state k-best lists, forward–backward alpha/beta
+//!   tables). The `_into` variants in [`crate::decode`]
+//!   ([`crate::decode::list_viterbi_into`],
+//!   [`crate::decode::posterior_marginals_into`],
+//!   [`crate::decode::log_partition_ws`]) take one of these and perform
+//!   **zero heap allocation** after warm-up; the classic allocating
+//!   functions remain as thin wrappers.
+//! * [`PredictScratch`] — a full per-worker prediction scratchpad: the
+//!   edge-score buffer `h`, a [`DecodeWorkspace`], the decoded-path list,
+//!   and the gather/output buffers of the batched edge scorer
+//!   ([`crate::model::LinearEdgeModel::edge_scores_batch`]). One of these
+//!   is owned by each consumer with a hot loop: every worker of the
+//!   [`crate::coordinator`] prediction server, the timing harness
+//!   ([`crate::eval::timing`]), and the decode benches.
+//!
+//! The [`crate::eval::Predictor`] trait exposes the engine to generic
+//! callers through `topk_into(&self, x, k, &mut PredictScratch, &mut Vec)`;
+//! LTLS ([`crate::train::TrainedModel`]) and every baseline implement it.
+//!
+//! Invariant (enforced by `rust/tests/engine_parity.rs`): the engine paths
+//! are **bit-identical** to the allocating paths — same float-op order,
+//! same tie-breaks — so the choice is purely a performance dial.
+
+pub mod workspace;
+
+pub use workspace::{DecodeWorkspace, PredictScratch};

@@ -1,0 +1,94 @@
+//! Reusable decode/predict buffers (see module docs in [`super`]).
+
+use crate::decode::Scored;
+
+/// Buffers for the trellis dynamic-programming decoders.
+///
+/// Holds the list-Viterbi per-state k-best prefix lists (entries are
+/// `(score, packed state code)` pairs) and the forward–backward
+/// alpha/beta tables. After the first call at a given `(C, k)` every
+/// subsequent `_into` decode performs no heap allocation.
+#[derive(Clone, Debug, Default)]
+pub struct DecodeWorkspace {
+    /// list-Viterbi: k-best prefixes ending in state 0 / state 1.
+    pub(crate) list0: Vec<(f32, u64)>,
+    pub(crate) list1: Vec<(f32, u64)>,
+    /// list-Viterbi: merge targets for the next step (swapped each step).
+    pub(crate) next0: Vec<(f32, u64)>,
+    pub(crate) next1: Vec<(f32, u64)>,
+    /// Forward pass: alpha[j-1][s] = log-sum of prefix scores into
+    /// (step j, state s).
+    pub(crate) alpha: Vec<[f32; 2]>,
+    /// Backward pass: beta[j-1][s] = log-sum over suffixes from
+    /// (step j, state s) to the sink.
+    pub(crate) beta: Vec<[f32; 2]>,
+    /// Per-terminal forward contributions (one per early exit).
+    pub(crate) exit_terms: Vec<f32>,
+    /// Terminal-term gather buffer for the log-partition logsumexp.
+    pub(crate) terms: Vec<f32>,
+}
+
+impl DecodeWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size for a trellis with `steps` steps and top-`k` decoding, so
+    /// even the first decode is allocation-free.
+    pub fn reserve(&mut self, steps: usize, k: usize) {
+        for l in [&mut self.list0, &mut self.list1, &mut self.next0, &mut self.next1] {
+            l.reserve(k);
+        }
+        self.alpha.reserve(steps);
+        self.beta.reserve(steps);
+        self.exit_terms.reserve(steps);
+        self.terms.reserve(steps + 2);
+    }
+}
+
+/// A full per-worker prediction scratchpad: everything a consumer needs to
+/// run `x → edge scores → decode → top-k` (and the batched variant) with
+/// zero steady-state allocation.
+#[derive(Clone, Debug, Default)]
+pub struct PredictScratch {
+    /// Edge-score vector `h = Wx + b` for the current example.
+    pub h: Vec<f32>,
+    /// Decoder buffers.
+    pub ws: DecodeWorkspace,
+    /// Decoded (path, score) list before label resolution.
+    pub paths: Vec<Scored>,
+    /// Batched edge scores (`B × E`, row-major), written by
+    /// [`crate::model::LinearEdgeModel::edge_scores_batch`].
+    pub batch_h: Vec<f32>,
+    /// Gather buffer `(feature, row, value)` for the batched scorer's
+    /// one-sweep-per-feature-strip schedule.
+    pub batch_gather: Vec<(u32, u32, f32)>,
+}
+
+impl PredictScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_reserve_is_idempotent() {
+        let mut ws = DecodeWorkspace::new();
+        ws.reserve(40, 16);
+        let cap = ws.list0.capacity();
+        ws.reserve(40, 16);
+        assert!(ws.list0.capacity() >= 16);
+        assert_eq!(ws.list0.capacity(), cap);
+        assert!(ws.alpha.capacity() >= 40);
+    }
+
+    #[test]
+    fn scratch_constructs_empty() {
+        let s = PredictScratch::new();
+        assert!(s.h.is_empty() && s.batch_h.is_empty() && s.paths.is_empty());
+    }
+}

@@ -4,6 +4,7 @@
 //! For multiclass with k=1 this is plain accuracy.
 
 use crate::data::Dataset;
+use crate::engine::PredictScratch;
 use crate::sparse::SparseVec;
 
 /// Anything that can rank labels for an example. Implemented by LTLS and
@@ -11,6 +12,23 @@ use crate::sparse::SparseVec;
 pub trait Predictor {
     /// Top-k (label, score) pairs, descending score.
     fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)>;
+
+    /// Top-k into a caller-owned buffer, reusing `scratch` — the
+    /// inference engine's hot path (see [`crate::engine`]). Must produce
+    /// exactly what [`Self::topk`] produces. The default delegates to
+    /// `topk`; implementations with a real zero-allocation path (LTLS,
+    /// the baselines) override it.
+    fn topk_into(
+        &self,
+        x: SparseVec,
+        k: usize,
+        scratch: &mut PredictScratch,
+        out: &mut Vec<(u32, f32)>,
+    ) {
+        let _ = scratch;
+        out.clear();
+        out.extend(self.topk(x, k));
+    }
 
     /// Model size in bytes (for the tables' "model size" column).
     fn model_bytes(&self) -> usize;
@@ -22,6 +40,15 @@ pub trait Predictor {
 impl Predictor for crate::train::TrainedModel {
     fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
         self.predict_topk(x, k)
+    }
+    fn topk_into(
+        &self,
+        x: SparseVec,
+        k: usize,
+        scratch: &mut PredictScratch,
+        out: &mut Vec<(u32, f32)>,
+    ) {
+        self.predict_topk_into(x, k, scratch, out)
     }
     fn model_bytes(&self) -> usize {
         self.bytes()

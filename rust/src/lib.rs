@@ -16,7 +16,16 @@
 //!   dataset substrates ([`data`]), every baseline the paper compares
 //!   against ([`baselines`]), evaluation harnesses ([`eval`]), a PJRT
 //!   runtime that executes AOT-compiled JAX/Pallas artifacts ([`runtime`]),
-//!   and a batching prediction server ([`coordinator`]).
+//!   and a batching multi-worker prediction server ([`coordinator`]).
+//! * **Inference engine** ([`engine`]) — the zero-allocation spine under
+//!   all prediction consumers: reusable decode workspaces
+//!   ([`engine::DecodeWorkspace`]) backing the `_into` decoder variants,
+//!   per-worker prediction scratchpads ([`engine::PredictScratch`]), and
+//!   batched edge scoring
+//!   ([`model::LinearEdgeModel::edge_scores_batch`]). The serving
+//!   coordinator, the evaluation/timing harnesses, and the benches all
+//!   route through it; `rust/tests/engine_parity.rs` pins the engine paths
+//!   bit-identical to the allocating ones.
 //! * **L2 (python/compile, build time only)** — the deep edge-scorer (the
 //!   paper's ImageNet fix) and its training step as JAX programs, lowered
 //!   once to HLO text by `make artifacts`.
@@ -32,6 +41,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod data;
 pub mod decode;
+pub mod engine;
 pub mod eval;
 pub mod graph;
 pub mod loss;

@@ -12,8 +12,9 @@
 //!   paper's tables on the synthetic analogs.
 //! * `deep [--epochs N] [--steps N]` — the §6 deep-network ImageNet
 //!   experiment through the AOT PJRT runtime.
-//! * `serve [--requests N] [--batch B]` — run the batching prediction
-//!   server on a trained model and print latency/throughput metrics.
+//! * `serve [--requests N] [--batch B] [--workers W]` — run the batching
+//!   multi-worker prediction server on a trained model (W=0 → one worker
+//!   per core) and print latency/throughput metrics incl. per-worker.
 //! * `scaling [--kmax K]` — prediction-time scaling in C (the log-time
 //!   claim).
 
@@ -55,7 +56,7 @@ fn load_dataset(args: &Args) -> Result<(ltls::data::Dataset, ltls::data::Dataset
         Ok(ltls::data::split::random_split(&ds, 0.2, seed))
     } else {
         let analog = ltls::data::datasets::by_name(name)
-            .ok_or(format!("unknown dataset {name:?} (try: sector, aloi.bin, LSHTC1, imageNet, Dmoz, bibtex, rcv1-regions, Eur-Lex, LSHTCwiki)"))?;
+            .ok_or(format!("unknown dataset {name:?} (try: synthetic, sector, aloi.bin, LSHTC1, imageNet, Dmoz, bibtex, rcv1-regions, Eur-Lex, LSHTCwiki)"))?;
         Ok(analog.generate(scale, seed))
     }
 }
@@ -199,15 +200,15 @@ fn cmd_deep(args: &Args) -> i32 {
     match run_deep(epochs, steps, args.get_f32("lr", 0.4), args.get_f32("scale", 1.0) as f64) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             1
         }
     }
 }
 
-fn run_deep(epochs: usize, step_cap: usize, lr: f32, scale: f64) -> anyhow::Result<()> {
+fn run_deep(epochs: usize, step_cap: usize, lr: f32, scale: f64) -> Result<(), String> {
     use ltls::runtime::{artifacts, ArtifactMeta, DeepLtls, Engine};
-    let meta = ArtifactMeta::load(&artifacts::default_dir()).map_err(anyhow::Error::msg)?;
+    let meta = ArtifactMeta::load(&artifacts::default_dir())?;
     println!(
         "artifacts: C={} D={} hidden={} batch={} E={}",
         meta.c, meta.d, meta.hidden, meta.batch, meta.e
@@ -251,7 +252,7 @@ fn run_deep(epochs: usize, step_cap: usize, lr: f32, scale: f64) -> anyhow::Resu
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    use ltls::coordinator::{server::SparsePath, PredictServer, ServerConfig};
+    use ltls::coordinator::{BatchedLtls, PredictServer, ServerConfig};
     let (train, test) = match load_dataset(args) {
         Ok(x) => x,
         Err(e) => {
@@ -272,8 +273,11 @@ fn cmd_serve(args: &Args) -> i32 {
             max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 500)),
         },
         queue_depth: 1024,
+        // 0 → one worker per available core.
+        workers: args.get_usize("workers", 0),
     };
-    let server = PredictServer::start(SparsePath(model), cfg);
+    let server = PredictServer::start(BatchedLtls(model), cfg);
+    println!("serving with {} workers (batched LTLS path)", server.n_workers());
     let n_req = args.get_usize("requests", 20_000);
     let timer = ltls::util::timer::Timer::new();
     let mut pending = std::collections::VecDeque::new();
@@ -299,6 +303,10 @@ fn cmd_scaling(args: &Args) -> i32 {
     let kmax = args.get_usize("kmax", 20);
     println!("{:<14}{:>8}{:>14}{:>14}{:>16}", "C", "E", "viterbi", "top-10", "model KB (D=1k)");
     let mut rng = Rng::new(9);
+    // Engine workspace reused across every C — the decode loop below is
+    // allocation-free.
+    let mut ws = ltls::engine::DecodeWorkspace::new();
+    let mut topk = Vec::new();
     for exp in (4..=kmax.min(40)).step_by(4) {
         let c = (1u64 << exp) + 12345 % (1 << exp);
         let t = ltls::graph::Trellis::new(c);
@@ -311,7 +319,8 @@ fn cmd_scaling(args: &Args) -> i32 {
         let v_ns = timer.elapsed_s() * 1e9 / iters as f64;
         let timer = ltls::util::timer::Timer::new();
         for _ in 0..iters / 10 {
-            std::hint::black_box(ltls::decode::list_viterbi(&t, std::hint::black_box(&h), 10));
+            ltls::decode::list_viterbi_into(&t, std::hint::black_box(&h), 10, &mut ws, &mut topk);
+            std::hint::black_box(topk.len());
         }
         let l_ns = timer.elapsed_s() * 1e9 / (iters / 10) as f64;
         println!(

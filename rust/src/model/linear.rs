@@ -64,6 +64,48 @@ impl LinearEdgeModel {
         out
     }
 
+    /// Batched edge scores for a block of sparse rows: `out` receives the
+    /// `B × E` row-major score matrix (`out[r·E + e] = h_e(x_r)`).
+    ///
+    /// Instead of `Σ_r nnz_r` independent strip reads, the block's
+    /// `(feature, row, value)` triples are gathered into `scratch` and
+    /// sorted by feature, so each distinct feature's E-strip is swept once
+    /// for all rows that use it while it is cache-hot — one feature-strip
+    /// sweep per batch (EXPERIMENTS.md §Perf).
+    ///
+    /// Bit-identical to per-row [`Self::edge_scores`]: every output cell
+    /// accumulates bias first, then its row's features in ascending index
+    /// order, exactly like the single-row path (each `(feature, row)` pair
+    /// is unique, so sort instability cannot reorder a cell's updates).
+    /// Allocation-free after warm-up when `scratch`/`out` are reused.
+    pub fn edge_scores_batch(
+        &self,
+        rows: &[SparseVec],
+        scratch: &mut Vec<(u32, u32, f32)>,
+        out: &mut Vec<f32>,
+    ) {
+        let e = self.n_edges;
+        out.clear();
+        out.reserve(rows.len() * e);
+        for _ in 0..rows.len() {
+            out.extend_from_slice(&self.bias);
+        }
+        scratch.clear();
+        for (r, x) in rows.iter().enumerate() {
+            for (&i, &v) in x.indices.iter().zip(x.values) {
+                scratch.push((i, r as u32, v));
+            }
+        }
+        scratch.sort_unstable_by_key(|t| t.0);
+        for &(i, r, v) in scratch.iter() {
+            let strip = &self.w[i as usize * e..(i as usize + 1) * e];
+            let dst = &mut out[r as usize * e..(r as usize + 1) * e];
+            for (o, &w) in dst.iter_mut().zip(strip) {
+                *o += v * w;
+            }
+        }
+    }
+
     /// Sparse SGD update on one edge: `w_e += scale · x`, `b_e += scale·0.1`.
     #[inline]
     pub fn update_edge(&mut self, e: usize, x: SparseVec, scale: f32) {
@@ -133,6 +175,28 @@ mod tests {
         // w[·,1] = 0.5·x; h_1 = 0.5·1 + 1.0·2 + bias(0.05)
         assert!((h[1] - (2.5 + 0.05)).abs() < 1e-6);
         assert_eq!(h[2], 0.0);
+    }
+
+    #[test]
+    fn batch_scores_match_per_example() {
+        let mut m = LinearEdgeModel::new(4, 6);
+        let xa = xvec(&[0, 2], &[1.0, 2.0]);
+        let xb = xvec(&[2, 5], &[-1.0, 0.5]);
+        let xc = xvec(&[], &[]);
+        m.update_edge(1, xa, 0.5);
+        m.update_edge(3, xb, -0.25);
+        let rows = [xa, xb, xc];
+        let mut scratch = Vec::new();
+        let mut batch = Vec::new();
+        m.edge_scores_batch(&rows, &mut scratch, &mut batch);
+        assert_eq!(batch.len(), 3 * 4);
+        for (r, x) in rows.iter().enumerate() {
+            assert_eq!(&batch[r * 4..(r + 1) * 4], m.edge_scores_vec(*x).as_slice(), "row {r}");
+        }
+        // Buffer reuse with a different block shape stays exact.
+        let rows2 = [xb];
+        m.edge_scores_batch(&rows2, &mut scratch, &mut batch);
+        assert_eq!(batch, m.edge_scores_vec(xb));
     }
 
     #[test]

@@ -8,9 +8,8 @@
 //! lowering time).
 
 use super::artifacts::ArtifactMeta;
-use super::pjrt::{Engine, Executable, Tensor};
+use super::pjrt::{Engine, Executable, RtResult, Tensor};
 use crate::data::Dataset;
-use anyhow::{anyhow, Result};
 
 /// Deep LTLS model state + compiled programs.
 pub struct DeepLtls {
@@ -25,12 +24,12 @@ pub struct DeepLtls {
 
 impl DeepLtls {
     /// Load artifacts and the He-initialized parameters dumped by aot.py.
-    pub fn load(engine: &Engine, meta: ArtifactMeta) -> Result<DeepLtls> {
+    pub fn load(engine: &Engine, meta: ArtifactMeta) -> RtResult<DeepLtls> {
         let mut params = Vec::new();
         for (name, shape) in meta.param_shapes() {
-            let data = meta.init_param(name).map_err(|e| anyhow!(e))?;
+            let data = meta.init_param(name)?;
             if data.len() != shape.iter().product::<usize>() {
-                return Err(anyhow!("param {name}: {} elems, want {:?}", data.len(), shape));
+                return Err(format!("param {name}: {} elems, want {:?}", data.len(), shape));
             }
             params.push(Tensor::f32(data, &shape));
         }
@@ -47,7 +46,7 @@ impl DeepLtls {
     /// One SGD step on a batch (rows of `ds`); returns the loss.
     /// Short batches are padded by repeating rows (averaging over dupes is
     /// harmless for SGD).
-    pub fn train_batch(&mut self, ds: &Dataset, rows: &[usize], lr: f32) -> Result<f32> {
+    pub fn train_batch(&mut self, ds: &Dataset, rows: &[usize], lr: f32) -> RtResult<f32> {
         let b = self.meta.batch;
         let d = self.meta.d;
         let e = self.meta.e;
@@ -69,13 +68,13 @@ impl DeepLtls {
         inputs.push(Tensor::f32(s, &[b, e]));
         inputs.push(Tensor::scalar_f32(lr));
         let mut out = self.train_step.run(&inputs)?;
-        let loss = out.pop().ok_or(anyhow!("train_step returned nothing"))?;
+        let loss = out.pop().ok_or_else(|| "train_step returned nothing".to_string())?;
         self.params = out;
         Ok(loss.as_f32()?[0])
     }
 
     /// Batched top-1 prediction (pads the final short batch).
-    pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Result<Vec<u32>> {
+    pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> RtResult<Vec<u32>> {
         let b = self.meta.batch;
         let d = self.meta.d;
         let mut out = Vec::with_capacity(rows.len());
@@ -99,7 +98,7 @@ impl DeepLtls {
     /// Raw edge scores for a dense batch (used by the coordinator's dense
     /// path and the runtime micro-benches).
     /// `rows` must equal the lowered batch size (`meta.batch`).
-    pub fn edge_scores(&self, x: Vec<f32>, rows: usize) -> Result<Vec<f32>> {
+    pub fn edge_scores(&self, x: Vec<f32>, rows: usize) -> RtResult<Vec<f32>> {
         let d = self.meta.d;
         debug_assert_eq!(rows, self.meta.batch, "mlp_fwd is lowered for a fixed batch");
         debug_assert_eq!(x.len(), rows * d);
@@ -110,7 +109,7 @@ impl DeepLtls {
     }
 
     /// Precision@1 on a dataset (batched over the whole set).
-    pub fn precision_at_1(&self, ds: &Dataset) -> Result<f64> {
+    pub fn precision_at_1(&self, ds: &Dataset) -> RtResult<f64> {
         let rows: Vec<usize> = (0..ds.n_examples()).collect();
         let preds = self.predict(ds, &rows)?;
         let hits = preds

@@ -13,10 +13,15 @@
 //! * [`deep`] — the deep LTLS model driver: parameter state, train steps,
 //!   batched inference (the paper's §6 ImageNet experiment, from rust).
 
+//! The PJRT client itself lives behind the `pjrt` cargo feature (the `xla`
+//! crate is not vendored in the default offline build); without it a stub
+//! backend with the same API compiles and `Engine::cpu()` errors, so the
+//! sparse serving path and all tests stay fully functional.
+
 pub mod artifacts;
 pub mod deep;
 pub mod pjrt;
 
 pub use artifacts::ArtifactMeta;
 pub use deep::DeepLtls;
-pub use pjrt::{Engine, Executable, Tensor};
+pub use pjrt::{Engine, Executable, RtResult, Tensor};

@@ -1,12 +1,24 @@
-//! Thin typed wrapper over the `xla` crate's PJRT client.
+//! Thin typed wrapper over the PJRT client.
 //!
-//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. All artifact programs were lowered with
-//! `return_tuple=True`, so outputs always decompose as a tuple.
+//! The real backend (cargo feature `pjrt` **plus** an `xla` entry added to
+//! rust/Cargo.toml `[dependencies]` — the crate is deliberately not
+//! declared there, even optionally, because offline builds cannot resolve
+//! it) follows the pattern from /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. All
+//! artifact programs were lowered with `return_tuple=True`, so outputs
+//! always decompose as a tuple.
+//!
+//! The default (offline) build has neither `xla` nor `anyhow` vendored, so
+//! it compiles a **stub backend** with the identical API: [`Engine::cpu`]
+//! returns an error, and every caller that needs artifacts (the
+//! integration suite, `ltls deep`, `examples/deep_imagenet.rs`) skips or
+//! reports cleanly. [`Tensor`] is std-only and always available.
 
-use anyhow::{anyhow, Context, Result};
 use std::path::Path;
+
+/// Runtime result type (`anyhow` is not vendored in the offline build).
+pub type RtResult<T> = Result<T, String>;
 
 /// A host tensor: f32 or i32 data + shape. The minimal currency between
 /// rust and the compiled programs.
@@ -26,17 +38,17 @@ impl Tensor {
         Tensor::F32 { data: vec![v], shape: vec![] }
     }
 
-    pub fn as_f32(&self) -> Result<&[f32]> {
+    pub fn as_f32(&self) -> RtResult<&[f32]> {
         match self {
             Tensor::F32 { data, .. } => Ok(data),
-            _ => Err(anyhow!("tensor is not f32")),
+            _ => Err("tensor is not f32".to_string()),
         }
     }
 
-    pub fn as_i32(&self) -> Result<&[i32]> {
+    pub fn as_i32(&self) -> RtResult<&[i32]> {
         match self {
             Tensor::I32 { data, .. } => Ok(data),
-            _ => Err(anyhow!("tensor is not i32")),
+            _ => Err("tensor is not i32".to_string()),
         }
     }
 
@@ -45,111 +57,199 @@ impl Tensor {
             Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
         }
     }
+}
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        match self {
-            Tensor::F32 { data, shape } => {
-                let lit = xla::Literal::vec1(data);
-                if shape.is_empty() {
-                    // rank-0: reshape to scalar
-                    Ok(lit.reshape(&[])?)
-                } else {
+/// Real PJRT backend (requires the vendored `xla` crate).
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::{RtResult, Tensor};
+    use std::path::Path;
+
+    impl Tensor {
+        fn to_literal(&self) -> RtResult<xla::Literal> {
+            match self {
+                Tensor::F32 { data, shape } => {
+                    let lit = xla::Literal::vec1(data);
+                    if shape.is_empty() {
+                        // rank-0: reshape to scalar
+                        lit.reshape(&[]).map_err(|e| e.to_string())
+                    } else {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        lit.reshape(&dims).map_err(|e| e.to_string())
+                    }
+                }
+                Tensor::I32 { data, shape } => {
+                    let lit = xla::Literal::vec1(data);
                     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                    Ok(lit.reshape(&dims)?)
+                    lit.reshape(&dims).map_err(|e| e.to_string())
                 }
             }
-            Tensor::I32 { data, shape } => {
-                let lit = xla::Literal::vec1(data);
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                Ok(lit.reshape(&dims)?)
+        }
+
+        fn from_literal(lit: &xla::Literal) -> RtResult<Tensor> {
+            let shape: Vec<usize> = lit
+                .array_shape()
+                .map_err(|e| e.to_string())?
+                .dims()
+                .iter()
+                .map(|&d| d as usize)
+                .collect();
+            match lit.ty().map_err(|e| e.to_string())? {
+                xla::ElementType::F32 => Ok(Tensor::F32 {
+                    data: lit.to_vec::<f32>().map_err(|e| e.to_string())?,
+                    shape,
+                }),
+                xla::ElementType::S32 => Ok(Tensor::I32 {
+                    data: lit.to_vec::<i32>().map_err(|e| e.to_string())?,
+                    shape,
+                }),
+                other => Err(format!("unsupported output element type {other:?}")),
             }
         }
     }
 
-    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape: Vec<usize> = lit.array_shape()?.dims().iter().map(|&d| d as usize).collect();
-        match lit.ty()? {
-            xla::ElementType::F32 => Ok(Tensor::F32 { data: lit.to_vec::<f32>()?, shape }),
-            xla::ElementType::S32 => Ok(Tensor::I32 { data: lit.to_vec::<i32>()?, shape }),
-            other => Err(anyhow!("unsupported output element type {other:?}")),
+    /// The PJRT engine: one CPU client shared by all executables.
+    pub struct Engine {
+        client: xla::PjRtClient,
+    }
+
+    impl Engine {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> RtResult<Engine> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| format!("creating PJRT CPU client: {e}"))?;
+            Ok(Engine { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact and compile it.
+        pub fn load_hlo(&self, path: &Path) -> RtResult<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| format!("parsing HLO text {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| format!("compiling {}: {e}", path.display()))?;
+            Ok(Executable { exe, name: path.display().to_string() })
+        }
+    }
+
+    /// A compiled program.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    impl Executable {
+        /// Execute with host tensors; returns the decomposed output tuple.
+        pub fn run(&self, inputs: &[Tensor]) -> RtResult<Vec<Tensor>> {
+            let lits: Vec<xla::Literal> =
+                inputs.iter().map(|t| t.to_literal()).collect::<RtResult<_>>()?;
+            let out = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| format!("executing {}: {e}", self.name))?;
+            let result = out[0][0].to_literal_sync().map_err(|e| e.to_string())?;
+            let parts = result.to_tuple().map_err(|e| e.to_string())?;
+            parts.iter().map(Tensor::from_literal).collect()
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::super::Tensor;
+
+        #[test]
+        fn tensor_roundtrip_f32() {
+            let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+            let lit = t.to_literal().unwrap();
+            let back = Tensor::from_literal(&lit).unwrap();
+            assert_eq!(back.shape(), &[2, 2]);
+            assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        }
+
+        #[test]
+        fn scalar_tensor() {
+            let t = Tensor::scalar_f32(0.5);
+            assert!(t.shape().is_empty());
+            let lit = t.to_literal().unwrap();
+            assert_eq!(lit.to_vec::<f32>().unwrap(), vec![0.5]);
         }
     }
 }
 
-/// The PJRT engine: one CPU client shared by all executables.
-pub struct Engine {
-    client: xla::PjRtClient,
-}
+/// Stub backend: the same API surface as the real one, failing at
+/// [`Engine::cpu`] with an actionable message. Keeps every caller of the
+/// runtime compiling in the offline build without `xla`.
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::{RtResult, Tensor};
+    use std::path::Path;
 
-impl Engine {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Engine> {
-        Ok(Engine { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    const UNAVAILABLE: &str = "PJRT backend unavailable: this build has no `pjrt` feature. \
+         To enable it, add the vendored `xla` crate to rust/Cargo.toml \
+         [dependencies] (it is deliberately not declared — offline builds \
+         cannot resolve it) and rebuild with `--features pjrt`";
+
+    /// Stub engine (cannot be constructed; `cpu()` always errors).
+    pub struct Engine {
+        _private: (),
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl Engine {
+        pub fn cpu() -> RtResult<Engine> {
+            Err(UNAVAILABLE.to_string())
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-unavailable".to_string()
+        }
+
+        pub fn load_hlo(&self, path: &Path) -> RtResult<Executable> {
+            Err(format!("{UNAVAILABLE} (loading {})", path.display()))
+        }
     }
 
-    /// Load an HLO-text artifact and compile it.
-    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe, name: path.display().to_string() })
+    /// Stub compiled program.
+    pub struct Executable {
+        pub name: String,
+    }
+
+    impl Executable {
+        pub fn run(&self, _inputs: &[Tensor]) -> RtResult<Vec<Tensor>> {
+            Err(format!("{UNAVAILABLE} (running {})", self.name))
+        }
     }
 }
 
-/// A compiled program.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-impl Executable {
-    /// Execute with host tensors; returns the decomposed output tuple.
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let lits: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let out = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .with_context(|| format!("executing {}", self.name))?;
-        let result = out[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        parts.iter().map(Tensor::from_literal).collect()
-    }
-}
+pub use backend::{Engine, Executable};
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn tensor_roundtrip_f32() {
-        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
-        let lit = t.to_literal().unwrap();
-        let back = Tensor::from_literal(&lit).unwrap();
-        assert_eq!(back.shape(), &[2, 2]);
-        assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
-    }
-
-    #[test]
-    fn scalar_tensor() {
-        let t = Tensor::scalar_f32(0.5);
-        assert!(t.shape().is_empty());
-        let lit = t.to_literal().unwrap();
-        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![0.5]);
-    }
-
-    #[test]
     fn type_mismatch_errors() {
         let t = Tensor::f32(vec![1.0], &[1]);
         assert!(t.as_i32().is_err());
         assert!(t.as_f32().is_ok());
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(Tensor::scalar_f32(0.5).shape().is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_errors_actionably() {
+        let err = Engine::cpu().err().unwrap();
+        assert!(err.contains("pjrt"), "{err}");
     }
 }

@@ -4,7 +4,8 @@ use super::config::TrainConfig;
 use super::metrics::EpochMetrics;
 use crate::assign::Assigner;
 use crate::data::Dataset;
-use crate::decode::{list_viterbi, viterbi, Scored};
+use crate::decode::{list_viterbi_into, viterbi, Scored};
+use crate::engine::PredictScratch;
 use crate::graph::codec::edges_of_label;
 use crate::graph::Trellis;
 use crate::loss::separation_loss;
@@ -138,6 +139,7 @@ impl Trainer {
 }
 
 /// A trained LTLS predictor: model + trellis + label↔path table.
+#[derive(Clone)]
 pub struct TrainedModel {
     pub trellis: Trellis,
     pub model: LinearEdgeModel,
@@ -147,19 +149,59 @@ pub struct TrainedModel {
 impl TrainedModel {
     /// Top-1 dataset label for `x` (`O(E·nnz + log C)`).
     pub fn predict(&self, x: SparseVec) -> u32 {
-        let h = self.model.edge_scores_vec(x);
-        let Scored { label: path, .. } = viterbi(&self.trellis, &h);
-        self.resolve(path, &h)
+        self.predict_with(x, &mut PredictScratch::new())
+    }
+
+    /// Top-1 dataset label reusing a caller-owned scratch — the
+    /// zero-allocation hot path of the serving engine.
+    pub fn predict_with(&self, x: SparseVec, scratch: &mut PredictScratch) -> u32 {
+        self.model.edge_scores(x, &mut scratch.h);
+        let Scored { label: path, .. } = viterbi(&self.trellis, &scratch.h);
+        if let Some(l) = self.assigner.table.label_of(path) {
+            return l;
+        }
+        // The best path is unassigned: fall back to the best *assigned*
+        // path in the top-m list.
+        let m = 64.min(self.trellis.c as usize);
+        list_viterbi_into(&self.trellis, &scratch.h, m, &mut scratch.ws, &mut scratch.paths);
+        for s in &scratch.paths {
+            if let Some(l) = self.assigner.table.label_of(s.label) {
+                return l;
+            }
+        }
+        0 // degenerate: nothing assigned yet
     }
 
     /// Top-k dataset labels (paths without an assigned label are skipped —
     /// they correspond to no class).
     pub fn predict_topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
-        let h = self.model.edge_scores_vec(x);
+        let mut out = Vec::with_capacity(k);
+        self.predict_topk_into(x, k, &mut PredictScratch::new(), &mut out);
+        out
+    }
+
+    /// Top-k dataset labels into `out`, reusing a caller-owned scratch.
+    /// Bit-identical to [`Self::predict_topk`]; allocation-free after
+    /// warm-up.
+    pub fn predict_topk_into(
+        &self,
+        x: SparseVec,
+        k: usize,
+        scratch: &mut PredictScratch,
+        out: &mut Vec<(u32, f32)>,
+    ) {
+        out.clear();
+        self.model.edge_scores(x, &mut scratch.h);
         // Over-fetch so unassigned paths can be skipped.
         let fetch = (k + 8).min(self.trellis.c as usize);
-        let mut out = Vec::with_capacity(k);
-        for s in list_viterbi(&self.trellis, &h, fetch) {
+        list_viterbi_into(&self.trellis, &scratch.h, fetch, &mut scratch.ws, &mut scratch.paths);
+        self.resolve_topk(k, &scratch.paths, out);
+    }
+
+    /// Map decoded (path, score) pairs to assigned dataset labels,
+    /// keeping at most `k`.
+    pub(crate) fn resolve_topk(&self, k: usize, paths: &[Scored], out: &mut Vec<(u32, f32)>) {
+        for s in paths {
             if let Some(l) = self.assigner.table.label_of(s.label) {
                 out.push((l, s.score));
                 if out.len() == k {
@@ -167,22 +209,6 @@ impl TrainedModel {
                 }
             }
         }
-        out
-    }
-
-    /// The label the Viterbi path maps to; if the best path is unassigned,
-    /// fall back to the best *assigned* path in the top-m list.
-    fn resolve(&self, path: u64, h: &[f32]) -> u32 {
-        if let Some(l) = self.assigner.table.label_of(path) {
-            return l;
-        }
-        let m = 64.min(self.trellis.c as usize);
-        for s in list_viterbi(&self.trellis, h, m) {
-            if let Some(l) = self.assigner.table.label_of(s.label) {
-                return l;
-            }
-        }
-        0 // degenerate: nothing assigned yet
     }
 
     /// Model size in bytes.

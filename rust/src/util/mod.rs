@@ -1,9 +1,11 @@
 //! Small self-contained utilities: deterministic RNG, micro-bench harness,
 //! minimal JSON, CLI argument parsing, timers and numeric helpers.
 //!
-//! The build environment is fully offline with only `xla` + `anyhow`
-//! vendored, so the usual ecosystem crates (rand, criterion, serde_json,
-//! clap) are reimplemented here at the scale this project needs.
+//! The build environment is fully offline and the default build is
+//! std-only (the PJRT runtime's `xla` dependency sits behind the `pjrt`
+//! cargo feature), so the usual ecosystem crates (rand, criterion,
+//! serde_json, clap, anyhow) are reimplemented here at the scale this
+//! project needs.
 
 pub mod args;
 pub mod bench;

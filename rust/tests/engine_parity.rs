@@ -1,0 +1,239 @@
+//! Parity suite for the zero-allocation inference engine:
+//!
+//! (a) batched edge scoring ≡ per-example edge scoring on random CSR
+//!     blocks — bit-identical, including buffer reuse across blocks;
+//! (b) `_into` decoders ≡ allocating decoders ≡ the dense
+//!     `PathMatrix::topk` oracle, across k ∈ {1, 5, C};
+//! (c) the multi-worker prediction server answers every request
+//!     correctly and in request order under concurrent load.
+
+use ltls::coordinator::{BatchedLtls, BatcherConfig, PredictServer, Request, Response, ServerConfig};
+use ltls::coordinator::server::BatchModel;
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::decode::{
+    list_viterbi, list_viterbi_into, log_partition, log_partition_ws, posterior_marginals,
+    posterior_marginals_into, viterbi, viterbi_into, Scored,
+};
+use ltls::engine::{DecodeWorkspace, PredictScratch};
+use ltls::eval::Predictor;
+use ltls::graph::pathmat::PathMatrix;
+use ltls::graph::Trellis;
+use ltls::model::LinearEdgeModel;
+use ltls::sparse::SparseVec;
+use ltls::train::{TrainConfig, Trainer};
+use ltls::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// (a) `edge_scores_batch` ≡ per-example `edge_scores` on random CSR
+/// blocks, bit-identical, with buffers reused across blocks of different
+/// shapes.
+#[test]
+fn batched_edge_scores_match_per_example() {
+    let mut rng = Rng::new(9001);
+    let mut gather = Vec::new();
+    let mut batch = Vec::new();
+    for (e, d) in [(28usize, 500usize), (81, 2000)] {
+        let mut m = LinearEdgeModel::new(e, d);
+        for w in &mut m.w {
+            *w = rng.normal();
+        }
+        for b in &mut m.bias {
+            *b = rng.normal();
+        }
+        for block in 0..5 {
+            let n_rows = 1 + rng.index(24);
+            let mut indices: Vec<Vec<u32>> = Vec::new();
+            let mut values: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..n_rows {
+                let nnz = rng.index(40); // includes empty rows
+                let idx = rng.sample_distinct(d, nnz);
+                let val: Vec<f32> = (0..nnz).map(|_| rng.normal()).collect();
+                indices.push(idx);
+                values.push(val);
+            }
+            let rows: Vec<SparseVec> =
+                indices.iter().zip(&values).map(|(i, v)| SparseVec::new(i, v)).collect();
+            m.edge_scores_batch(&rows, &mut gather, &mut batch);
+            assert_eq!(batch.len(), rows.len() * e);
+            for (r, row) in rows.iter().enumerate() {
+                let single = m.edge_scores_vec(*row);
+                assert_eq!(
+                    &batch[r * e..(r + 1) * e],
+                    single.as_slice(),
+                    "E={e} block={block} row={r} must be bit-identical"
+                );
+            }
+        }
+    }
+}
+
+/// (b) `_into` decoders ≡ allocating decoders (bit-identical) ≡ the dense
+/// oracle, across k ∈ {1, 5, C}, with one workspace reused throughout.
+#[test]
+fn into_decoders_match_allocating_and_oracle() {
+    let mut rng = Rng::new(9002);
+    let mut ws = DecodeWorkspace::new();
+    let mut out: Vec<Scored> = Vec::new();
+    let mut marg: Vec<f32> = Vec::new();
+    for c in [2u64, 3, 22, 105, 159, 256, 1000] {
+        let t = Trellis::new(c);
+        let m = PathMatrix::materialize(&t);
+        for trial in 0..8 {
+            let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+
+            // viterbi_into == viterbi.
+            let mut s = Scored { label: 0, score: 0.0 };
+            viterbi_into(&t, &h, &mut s);
+            assert_eq!(s, viterbi(&t, &h), "C={c} trial={trial}");
+
+            for k in [1usize, 5, c as usize] {
+                let alloc = list_viterbi(&t, &h, k);
+                list_viterbi_into(&t, &h, k, &mut ws, &mut out);
+                assert_eq!(out, alloc, "C={c} k={k} trial={trial} (bit-identical)");
+                let oracle = m.topk(&h, k);
+                assert_eq!(out.len(), oracle.len(), "C={c} k={k}");
+                for (g, w) in out.iter().zip(&oracle) {
+                    assert_eq!(g.label, w.0, "C={c} k={k}");
+                    assert!((g.score - w.1).abs() < 1e-4, "C={c} k={k}");
+                }
+            }
+
+            // Forward–backward twins are bit-identical.
+            assert_eq!(
+                log_partition_ws(&t, &h, &mut ws),
+                log_partition(&t, &h),
+                "C={c} trial={trial}"
+            );
+            posterior_marginals_into(&t, &h, &mut ws, &mut marg);
+            assert_eq!(marg, posterior_marginals(&t, &h), "C={c} trial={trial}");
+        }
+    }
+}
+
+/// (b, end-to-end) `topk_into` with a reused scratch ≡ `topk` on a
+/// trained model, for every test row.
+#[test]
+fn trained_model_topk_into_matches_topk() {
+    let ds = SyntheticSpec::multiclass(600, 400, 32).seed(9003).generate();
+    let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    tr.fit(&ds, 3);
+    let model = tr.into_model();
+    let mut scratch = PredictScratch::new();
+    let mut out = Vec::new();
+    for i in 0..ds.n_examples() {
+        for k in [1usize, 5] {
+            model.topk_into(ds.row(i), k, &mut scratch, &mut out);
+            assert_eq!(out, model.topk(ds.row(i), k), "row {i} k={k}");
+        }
+        assert_eq!(model.predict_with(ds.row(i), &mut scratch), model.predict(ds.row(i)));
+    }
+}
+
+/// Echo model: replies with the request's first feature index, so order
+/// mix-ups are visible.
+struct Echo;
+
+impl BatchModel for Echo {
+    fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
+        batch
+            .iter()
+            .map(|r| Response { topk: vec![(r.indices[0], r.values[0])] })
+            .collect()
+    }
+    fn name(&self) -> &str {
+        "echo"
+    }
+}
+
+/// (c) Multi-worker server: every concurrent client receives its own
+/// responses, in request order, with nothing lost or cross-wired.
+#[test]
+fn multi_worker_server_preserves_request_order() {
+    let server = Arc::new(PredictServer::start(
+        Echo,
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(100) },
+            queue_depth: 512,
+            workers: 4,
+        },
+    ));
+    let n_clients = 4u32;
+    let per_client = 500u32;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|cid| {
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || {
+                let rxs: Vec<_> = (0..per_client)
+                    .map(|i| server.submit(vec![cid * 10_000 + i], vec![i as f32], 1))
+                    .collect();
+                for (i, rx) in rxs.into_iter().enumerate() {
+                    let resp = rx.recv().expect("response delivered");
+                    assert_eq!(
+                        resp.topk[0].0,
+                        cid * 10_000 + i as u32,
+                        "client {cid} response {i} out of order"
+                    );
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = (n_clients * per_client) as u64;
+    let (reqs, batches, _) = server.metrics.counts();
+    assert_eq!(reqs, total);
+    assert!(batches >= (total / 8).max(1), "batches={batches}");
+    // Per-worker attribution covers every request exactly once.
+    let pw = server.metrics.per_worker();
+    assert_eq!(pw.len(), 4);
+    assert_eq!(pw.iter().map(|w| w.requests).sum::<u64>(), total);
+    Arc::try_unwrap(server).ok().unwrap().shutdown();
+}
+
+/// (c, batched path) The batched multi-worker server is bit-identical to
+/// inline prediction under concurrent load.
+#[test]
+fn batched_multi_worker_server_matches_inline() {
+    let ds = SyntheticSpec::multiclass(800, 600, 48).seed(9005).generate();
+    let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    tr.fit(&ds, 3);
+    let model = tr.into_model();
+    let inline: Vec<Vec<(u32, f32)>> = (0..200).map(|i| model.topk(ds.row(i), 3)).collect();
+
+    let server = Arc::new(PredictServer::start(
+        BatchedLtls(model),
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_micros(200) },
+            queue_depth: 256,
+            workers: 3,
+        },
+    ));
+    let ds = Arc::new(ds);
+    let inline = Arc::new(inline);
+    let handles: Vec<_> = (0..4usize)
+        .map(|cid| {
+            let server = Arc::clone(&server);
+            let ds = Arc::clone(&ds);
+            let inline = Arc::clone(&inline);
+            std::thread::spawn(move || {
+                let rows: Vec<usize> = (0..200).map(|i| (i + 50 * cid) % 200).collect();
+                let rxs: Vec<_> = rows
+                    .iter()
+                    .map(|&i| {
+                        let row = ds.row(i);
+                        server.submit(row.indices.to_vec(), row.values.to_vec(), 3)
+                    })
+                    .collect();
+                for (&i, rx) in rows.iter().zip(rxs) {
+                    assert_eq!(rx.recv().unwrap().topk, inline[i], "row {i}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    Arc::try_unwrap(server).ok().unwrap().shutdown();
+}

@@ -82,6 +82,7 @@ fn server_matches_inline_predictions() {
                 max_wait: std::time::Duration::from_micros(200),
             },
             queue_depth: 256,
+            workers: 2,
         },
     );
     let receivers: Vec<_> = (0..100)
