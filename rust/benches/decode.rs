@@ -6,6 +6,7 @@
 use ltls::engine::DecodeWorkspace;
 use ltls::graph::Trellis;
 use ltls::util::bench::Bench;
+use ltls::util::json::Json;
 use ltls::util::rng::Rng;
 
 fn main() {
@@ -83,4 +84,20 @@ fn main() {
         let note = if speedup < 1.0 { "  (WARNING: slower than alloc — check for a regression)" } else { "" };
         println!("list_viterbi k={k} workspace speedup = {speedup:.2}x{note}");
     }
+
+    // Machine-readable line for the CI perf gate (tools/bench_check.rs).
+    let mut fields = vec![
+        ("bench".to_string(), Json::from("decode")),
+        ("viterbi_ratio".to_string(), Json::Num(ratio)),
+        ("viterbi_small_ns".to_string(), Json::Num(small.mean_ns)),
+        ("viterbi_big_ns".to_string(), Json::Num(big.mean_ns)),
+    ];
+    for (k, alloc, reused) in &pairs {
+        fields.push((
+            format!("list_viterbi_k{k}_ws_speedup"),
+            Json::Num(alloc.mean_ns / reused.mean_ns),
+        ));
+    }
+    let json = Json::Obj(fields.into_iter().collect());
+    println!("json: {}", json.dump());
 }

@@ -1,0 +1,84 @@
+//! Parallel-training throughput bench: epoch examples/sec of the Hogwild
+//! trainer at threads ∈ {1, 2, 4} (threads=1 is the serial path — the
+//! honest baseline), plus the mini-batch scoring path at 4 workers. Every
+//! configuration starts from the same warmed state (labels assigned, one
+//! epoch of updates applied) so the sweep measures steady-state SGD, and
+//! every configuration runs through [`ltls::eval::time_epoch`].
+//!
+//! Emits a machine-readable JSON line for the BENCH trajectory and the CI
+//! perf-regression gate (`tools/bench_check.rs` vs `BENCH_BASELINE.json`).
+//! `BENCH_FAST=1` trims the dataset and epoch count for smoke runs.
+
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::eval::time_epoch;
+use ltls::train::{ParallelTrainer, TrainConfig};
+use ltls::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let n = if fast { 8_000 } else { 30_000 };
+    let epochs = if fast { 1usize } else { 2 };
+
+    let ds = SyntheticSpec::multiclass(n, 4_000, 1_024).seed(11).generate();
+
+    // Shared warm start: one serial epoch assigns every label and moves the
+    // weights off zero.
+    let cfg = TrainConfig { averaging: false, ..TrainConfig::default() };
+    let mut base = ParallelTrainer::new(cfg, ds.n_features, ds.n_labels);
+    base.fit(&ds, 1);
+
+    println!(
+        "== parallel training epoch throughput (C=1024, D=4000, {n} examples, {} cores) ==",
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1),
+    );
+
+    // (threads, batch, examples/s)
+    let mut results: Vec<(usize, usize, f64)> = Vec::new();
+    for &(threads, batch) in &[(1usize, 1usize), (2, 1), (4, 1), (4, 16)] {
+        let mut tr = base.clone();
+        tr.config_mut().threads = threads;
+        tr.config_mut().batch = batch;
+        let mut total_s = 0.0f64;
+        for _ in 0..epochs {
+            total_s += time_epoch(&mut tr, &ds).total_s;
+        }
+        let eps = (epochs * n) as f64 / total_s.max(1e-9);
+        let engine = if threads == 1 && batch == 1 { "serial " } else { "hogwild" };
+        println!(
+            "threads={threads} batch={batch:<3} [{engine}]  {eps:>10.0} examples/s   ({epochs} epoch(s) in {total_s:.2}s)"
+        );
+        results.push((threads, batch, eps));
+    }
+
+    let serial = results[0].2;
+    let four = results
+        .iter()
+        .find(|&&(t, b, _)| t == 4 && b == 1)
+        .map(|&(_, _, e)| e)
+        .unwrap_or(serial);
+    let speedup = four / serial;
+    println!("\nspeedup threads=4 / serial = {speedup:.2}x");
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("train_parallel")),
+        ("examples", Json::from(n)),
+        ("epochs", Json::from(epochs)),
+        ("speedup_4v1", Json::Num(speedup)),
+        (
+            "results",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|&(t, b, e)| {
+                        Json::obj(vec![
+                            ("threads", Json::from(t)),
+                            ("batch", Json::from(b)),
+                            ("examples_per_s", Json::Num(e)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    println!("json: {}", json.dump());
+}

@@ -81,6 +81,20 @@ impl AssignmentTable {
         self.path_to_label.len() - self.free_pool.len()
     }
 
+    /// Grow the label side to at least `n_labels` (paths and existing
+    /// bindings unchanged). Model/checkpoint files record only the *bound*
+    /// (label, path) pairs, so a table restored from disk may cover fewer
+    /// labels than the dataset a resumed training run sees.
+    pub fn ensure_labels(&mut self, n_labels: usize) {
+        if self.label_to_path.len() < n_labels {
+            assert!(
+                n_labels <= self.path_to_label.len(),
+                "need at least as many paths as labels"
+            );
+            self.label_to_path.resize(n_labels, UNASSIGNED);
+        }
+    }
+
     /// Iterate (label, path) pairs.
     pub fn pairs(&self) -> impl Iterator<Item = (u32, u64)> + '_ {
         self.label_to_path
@@ -148,6 +162,28 @@ mod tests {
         paths.sort_unstable();
         paths.dedup();
         assert_eq!(paths.len(), 8);
+    }
+
+    #[test]
+    fn ensure_labels_grows_without_touching_bindings() {
+        let mut t = AssignmentTable::new(2, 10);
+        t.bind(1, 7);
+        t.ensure_labels(5);
+        assert_eq!(t.path_of(1), Some(7));
+        assert_eq!(t.path_of(4), None);
+        assert_eq!(t.n_assigned(), 1);
+        // Shrinking is a no-op.
+        t.ensure_labels(1);
+        assert_eq!(t.path_of(1), Some(7));
+        t.bind(4, 2);
+        assert_eq!(t.path_of(4), Some(2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ensure_labels_rejects_more_labels_than_paths() {
+        let mut t = AssignmentTable::new(2, 4);
+        t.ensure_labels(5);
     }
 
     /// Free-pool positional index stays consistent under many binds.

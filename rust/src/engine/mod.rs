@@ -29,6 +29,11 @@
 //! are **bit-identical** to the allocating paths — same float-op order,
 //! same tie-breaks — so the choice is purely a performance dial.
 
+//! The training side mirrors this: [`TrainScratch`] is the per-worker SGD
+//! scratchpad (edge scores, loss decode buffers, symmetric-difference edge
+//! sets, mini-batch gather/output buffers) owned by the serial trainer and
+//! by every Hogwild worker of [`crate::train::ParallelTrainer`].
+
 pub mod workspace;
 
-pub use workspace::{DecodeWorkspace, PredictScratch};
+pub use workspace::{DecodeWorkspace, PredictScratch, TrainScratch};

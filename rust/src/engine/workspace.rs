@@ -71,6 +71,38 @@ impl PredictScratch {
     }
 }
 
+/// A full per-worker *training* scratchpad: everything one SGD worker needs
+/// to run `x → edge scores → separation loss → sparse update` (and the
+/// mini-batch variant) with zero steady-state allocation. One of these is
+/// owned by the serial [`crate::train::Trainer`] and by every worker of the
+/// Hogwild [`crate::train::ParallelTrainer`].
+#[derive(Clone, Debug, Default)]
+pub struct TrainScratch {
+    /// Edge-score vector `h = Wx + b` for the current example.
+    pub h: Vec<f32>,
+    /// Decoder buffers for the loss's list-Viterbi.
+    pub ws: DecodeWorkspace,
+    /// Decoded (path, score) list used by
+    /// [`crate::loss::separation_loss_ws`].
+    pub paths: Vec<Scored>,
+    /// Positive paths of the current example (labels resolved via the
+    /// assignment table).
+    pub pos: Vec<u64>,
+    /// Symmetric-difference edge sets of the loss pair.
+    pub pos_only: Vec<u32>,
+    pub neg_only: Vec<u32>,
+    /// Batched edge scores (`B × E`, row-major) for the mini-batch path.
+    pub batch_h: Vec<f32>,
+    /// Gather buffer `(feature, row, value)` for the batched scorer.
+    pub batch_gather: Vec<(u32, u32, f32)>,
+}
+
+impl TrainScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,5 +122,12 @@ mod tests {
     fn scratch_constructs_empty() {
         let s = PredictScratch::new();
         assert!(s.h.is_empty() && s.batch_h.is_empty() && s.paths.is_empty());
+    }
+
+    #[test]
+    fn train_scratch_constructs_empty() {
+        let s = TrainScratch::new();
+        assert!(s.h.is_empty() && s.pos.is_empty() && s.batch_h.is_empty());
+        assert!(s.pos_only.is_empty() && s.neg_only.is_empty());
     }
 }

@@ -9,4 +9,4 @@ pub mod tables;
 pub mod timing;
 
 pub use precision::{precision_at_1, precision_at_k, Predictor};
-pub use timing::time_predictions;
+pub use timing::{time_epoch, time_predictions};

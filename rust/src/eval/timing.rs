@@ -1,9 +1,12 @@
 //! Prediction-time measurement (the tables' "prediction time [s]" column:
-//! total wall time to predict the whole test set).
+//! total wall time to predict the whole test set), plus the
+//! training-epoch throughput harness used by the parallel-training bench
+//! and the CI perf gate.
 
 use super::precision::Predictor;
 use crate::data::Dataset;
 use crate::engine::PredictScratch;
+use crate::train::{EpochMetrics, ParallelTrainer};
 use crate::util::timer::Timer;
 
 /// Result of timing a full test-set prediction sweep.
@@ -36,11 +39,35 @@ pub fn time_predictions<P: Predictor + ?Sized>(model: &P, ds: &Dataset, k: usize
     }
 }
 
+/// Result of timing one training epoch.
+#[derive(Clone, Debug)]
+pub struct EpochTiming {
+    pub total_s: f64,
+    pub examples_per_s: f64,
+    pub metrics: EpochMetrics,
+}
+
+/// Run one training epoch through the (possibly parallel) trainer and time
+/// it. The trainer's configuration decides the execution engine — serial,
+/// Hogwild multi-worker, or mini-batch — so this one harness measures them
+/// all comparably (`benches/train_parallel.rs`).
+pub fn time_epoch(tr: &mut ParallelTrainer, ds: &Dataset) -> EpochTiming {
+    let t = Timer::new();
+    let metrics = tr.epoch(ds);
+    let total_s = t.elapsed_s();
+    EpochTiming {
+        total_s,
+        examples_per_s: ds.n_examples() as f64 / total_s.max(1e-9),
+        metrics,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synthetic::SyntheticSpec;
     use crate::sparse::SparseVec;
+    use crate::train::TrainConfig;
 
     struct Noop;
     impl Predictor for Noop {
@@ -62,5 +89,16 @@ mod tests {
         assert_eq!(t.n, 100);
         assert!(t.total_s >= 0.0);
         assert!(t.per_example_us >= 0.0);
+    }
+
+    #[test]
+    fn epoch_timing_reports_throughput() {
+        let ds = SyntheticSpec::multiclass(200, 50, 8).seed(2).generate();
+        let cfg = TrainConfig { threads: 2, averaging: false, ..TrainConfig::default() };
+        let mut tr = ParallelTrainer::new(cfg, ds.n_features, ds.n_labels);
+        let t = time_epoch(&mut tr, &ds);
+        assert_eq!(t.metrics.examples, 200);
+        assert!(t.examples_per_s > 0.0);
+        assert!(t.total_s >= 0.0);
     }
 }

@@ -10,5 +10,5 @@
 pub mod separation;
 pub mod trellis_softmax;
 
-pub use separation::{separation_loss, SeparationOutcome};
+pub use separation::{separation_loss, separation_loss_ws, SeparationOutcome};
 pub use trellis_softmax::{trellis_softmax_grad, trellis_softmax_loss};

@@ -8,7 +8,8 @@
 //! `|P| + 1` paths with list-Viterbi and picking the best one that is not
 //! positive — exactly the procedure of §5.
 
-use crate::decode::{list_viterbi, score_label};
+use crate::decode::{list_viterbi_into, score_label, Scored};
+use crate::engine::DecodeWorkspace;
 use crate::graph::Trellis;
 
 /// What the loss computation found.
@@ -34,6 +35,25 @@ pub fn separation_loss(
     h: &[f32],
     positive_paths: &[u64],
 ) -> Option<SeparationOutcome> {
+    let mut ws = DecodeWorkspace::new();
+    let mut topk = Vec::new();
+    separation_loss_ws(t, h, positive_paths, &mut ws, &mut topk)
+}
+
+/// Engine variant of [`separation_loss`]: the list-Viterbi runs on a reused
+/// [`DecodeWorkspace`] and top-k buffer, so the loss computation performs
+/// no heap allocation after warm-up. Bit-identical to [`separation_loss`]
+/// (the `_into` decoder is pinned bit-identical by
+/// `rust/tests/engine_parity.rs`). This is the form the training hot loops
+/// — serial and Hogwild — call with their per-worker
+/// [`crate::engine::TrainScratch`] buffers.
+pub fn separation_loss_ws(
+    t: &Trellis,
+    h: &[f32],
+    positive_paths: &[u64],
+    ws: &mut DecodeWorkspace,
+    topk: &mut Vec<Scored>,
+) -> Option<SeparationOutcome> {
     debug_assert!(!positive_paths.is_empty());
     // Lowest-scoring positive: direct O(|P| log C) scoring.
     let (mut pos, mut pos_score) = (positive_paths[0], f32::INFINITY);
@@ -46,8 +66,8 @@ pub fn separation_loss(
     }
     // Highest-scoring negative: top-(|P|+1) must contain at least one
     // negative path.
-    let top = list_viterbi(t, h, positive_paths.len() + 1);
-    let neg = top.iter().find(|s| !positive_paths.contains(&s.label))?;
+    list_viterbi_into(t, h, positive_paths.len() + 1, ws, topk);
+    let neg = topk.iter().find(|s| !positive_paths.contains(&s.label))?;
     let margin = 1.0 + neg.score - pos_score;
     Some(SeparationOutcome {
         loss: margin.max(0.0),
@@ -61,6 +81,7 @@ pub fn separation_loss(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::decode::list_viterbi;
     use crate::graph::pathmat::PathMatrix;
     use crate::util::rng::Rng;
 
@@ -110,6 +131,29 @@ mod tests {
         assert_eq!(out.loss, 0.0);
         assert_eq!(out.pos, 5);
         assert_ne!(out.neg, 5);
+    }
+
+    /// The workspace variant is bit-identical to the allocating one, also
+    /// when the buffers are reused across calls of different |P|.
+    #[test]
+    fn workspace_variant_matches_allocating() {
+        let mut rng = Rng::new(63);
+        let t = Trellis::new(105);
+        let mut ws = DecodeWorkspace::new();
+        let mut topk = Vec::new();
+        for trial in 0..20 {
+            let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+            let np = 1 + (trial % 3);
+            let pos: Vec<u64> =
+                rng.sample_distinct(105, np).into_iter().map(|v| v as u64).collect();
+            let a = separation_loss(&t, &h, &pos).unwrap();
+            let b = separation_loss_ws(&t, &h, &pos, &mut ws, &mut topk).unwrap();
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.pos, b.pos);
+            assert_eq!(a.neg, b.neg);
+            assert_eq!(a.pos_score, b.pos_score);
+            assert_eq!(a.neg_score, b.neg_score);
+        }
     }
 
     /// Multiclass (|P| = 1): ℓn is the runner-up of the top-2.

@@ -6,8 +6,12 @@
 //! * `gen-data --dataset <analog> [--scale S] [--out F]` — emit a synthetic
 //!   analog in libsvm format.
 //! * `train --dataset <analog|path.svm> [--epochs N] [--lr η] [--policy
-//!   top|random] [--l1 λ]` — train linear LTLS, report precision@1,
-//!   prediction time and model size.
+//!   top|random] [--l1 λ] [--threads N] [--batch B] [--checkpoint-dir D]
+//!   [--resume]` — train linear LTLS (serially, or Hogwild-parallel with
+//!   `--threads`; `--batch` scores B examples per feature-strip sweep),
+//!   report precision@1, prediction time and model size. With
+//!   `--checkpoint-dir` a checkpoint is written after every epoch and
+//!   `--resume` continues from the latest one.
 //! * `tables --which 1|2|3 [--scale S] [--epochs N]` — regenerate the
 //!   paper's tables on the synthetic analogs.
 //! * `deep [--epochs N] [--steps N]` — the §6 deep-network ImageNet
@@ -114,13 +118,99 @@ fn cmd_train(args: &Args) -> i32 {
         policy,
         seed: args.get_u64("seed", 42),
         log_every: args.get_usize("log-every", 0),
+        threads: args.get_usize("threads", 1),
+        batch: args.get_usize("batch", 1),
         ..Default::default()
     };
     let epochs = args.get_usize("epochs", 5);
+    let ckpt_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
     let timer = ltls::util::timer::Timer::new();
-    let mut tr = ltls::train::Trainer::new(cfg, train.n_features, train.n_labels);
-    for (i, m) in tr.fit(&train, epochs).iter().enumerate() {
-        println!("epoch {}: {}", i + 1, m);
+
+    // Fresh trainer, or resume from the latest checkpoint in the dir. An
+    // empty or not-yet-created directory starts fresh, so rerunning the
+    // same command after a crash is always safe.
+    let mut tr = if args.get_bool("resume") {
+        let Some(dir) = &ckpt_dir else {
+            eprintln!("error: --resume requires --checkpoint-dir");
+            return 1;
+        };
+        let latest = if dir.is_dir() {
+            ltls::model::io::latest_checkpoint(dir)
+        } else {
+            Ok(None)
+        };
+        match latest {
+            Ok(Some((epoch, path))) => match ltls::model::io::load_checkpoint(&path)
+                .and_then(|ck| ltls::train::ParallelTrainer::resume(cfg.clone(), ck))
+            {
+                Ok(tr) => {
+                    println!(
+                        "resuming from {} (epoch {epoch}, step {})",
+                        path.display(),
+                        tr.global_step()
+                    );
+                    tr
+                }
+                Err(e) => {
+                    eprintln!("error resuming checkpoint: {e}");
+                    return 1;
+                }
+            },
+            Ok(None) => {
+                println!("no checkpoint in {}; starting fresh", dir.display());
+                ltls::train::ParallelTrainer::new(cfg, train.n_features, train.n_labels)
+            }
+            Err(e) => {
+                eprintln!("error scanning {}: {e}", dir.display());
+                return 1;
+            }
+        }
+    } else {
+        // Fresh run: clear any older run's checkpoints from the dir, so a
+        // later --resume can't pick up stale higher-numbered epochs.
+        if let Some(dir) = &ckpt_dir {
+            if dir.is_dir() {
+                match ltls::model::io::clear_checkpoints(dir) {
+                    Ok(0) => {}
+                    Ok(n) => println!("cleared {n} stale checkpoint file(s) in {}", dir.display()),
+                    Err(e) => {
+                        eprintln!("error clearing {}: {e}", dir.display());
+                        return 1;
+                    }
+                }
+            }
+        }
+        ltls::train::ParallelTrainer::new(cfg, train.n_features, train.n_labels)
+    };
+    println!(
+        "training: {} thread(s), batch {}",
+        tr.n_threads(),
+        tr.config().batch.max(1)
+    );
+    if (tr.n_threads() > 1 || tr.config().batch > 1) && tr.config().averaging {
+        println!("note: weight averaging is serial-only and is disabled on the Hogwild path");
+    }
+
+    // `--epochs` is the *total* target: a resumed run trains only the
+    // remaining epochs, so rerunning the interrupted command converges
+    // instead of compounding.
+    let epoch_offset = tr.epochs_done() as usize;
+    let remaining = epochs.saturating_sub(epoch_offset);
+    if remaining < epochs {
+        println!("{epoch_offset} epoch(s) already trained; {remaining} remaining of {epochs}");
+    }
+    let ms = match &ckpt_dir {
+        Some(dir) => match tr.fit_with_checkpoints(&train, remaining, dir) {
+            Ok(ms) => ms,
+            Err(e) => {
+                eprintln!("error writing checkpoint: {e}");
+                return 1;
+            }
+        },
+        None => tr.fit(&train, remaining),
+    };
+    for (i, m) in ms.iter().enumerate() {
+        println!("epoch {}: {}", epoch_offset + i + 1, m);
     }
     let train_s = timer.elapsed_s();
     let model = tr.into_model();

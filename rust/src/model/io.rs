@@ -1,24 +1,41 @@
 //! Model persistence: save / load a trained LTLS model (weights + trellis
 //! + label↔path assignment) as a single self-describing binary file, so
 //! `ltls train` can hand a model to `ltls serve` / `ltls eval` across
-//! processes.
+//! processes — plus the epoch-boundary training **checkpoint** format used
+//! by [`crate::train::ParallelTrainer`] for crash-safe resume.
 //!
-//! Format (little-endian):
+//! Model format (little-endian):
 //! ```text
 //! magic "LTLS" | version u32 | C u64 | D u64 | E u64 | n_labels u64
 //! bias  [E f32] | weights [D*E f32, feature-major]
 //! n_pairs u64 | (label u32, path u64) * n_pairs
 //! ```
+//!
+//! Checkpoint format (little-endian, versioned independently):
+//! ```text
+//! magic "LTCK" | version u32 | epoch u32 | step u64 | seed u64
+//! n_history u64 | (examples u64, active_hinge u64,
+//!                  loss_sum f64-bits, new_labels u64) * n_history
+//! model_len u64 | model bytes (the "LTLS" format above, raw weights)
+//! ```
+//!
+//! A checkpoint stores the *raw* (unaveraged, un-thresholded) weights plus
+//! the global SGD step, so a resumed run continues the lr schedule and the
+//! per-epoch shuffles exactly. Not stored (restarts fresh at resume): the
+//! weight-averager state and the assigner's random-fallback RNG.
 
 use crate::assign::{AssignPolicy, Assigner};
 use crate::graph::Trellis;
 use crate::model::LinearEdgeModel;
+use crate::train::metrics::EpochMetrics;
 use crate::train::TrainedModel;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"LTLS";
 const VERSION: u32 = 1;
+const CKPT_MAGIC: &[u8; 4] = b"LTCK";
+const CKPT_VERSION: u32 = 1;
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -55,19 +72,25 @@ impl<'a> Reader<'a> {
 
 /// Serialize a trained model.
 pub fn serialize(m: &TrainedModel) -> Vec<u8> {
-    let mut out = Vec::with_capacity(16 + m.model.w.len() * 4);
+    serialize_parts(&m.trellis, &m.model, &m.assigner)
+}
+
+/// Borrowing variant of [`serialize`]: write a model straight from live
+/// trainer state, without assembling (or cloning into) a `TrainedModel`.
+pub fn serialize_parts(trellis: &Trellis, model: &LinearEdgeModel, assigner: &Assigner) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + model.w.len() * 4);
     out.extend_from_slice(MAGIC);
     put_u32(&mut out, VERSION);
-    put_u64(&mut out, m.trellis.c);
-    put_u64(&mut out, m.model.n_features as u64);
-    put_u64(&mut out, m.model.n_edges as u64);
-    let pairs: Vec<(u32, u64)> = m.assigner.table.pairs().collect();
+    put_u64(&mut out, trellis.c);
+    put_u64(&mut out, model.n_features as u64);
+    put_u64(&mut out, model.n_edges as u64);
+    let pairs: Vec<(u32, u64)> = assigner.table.pairs().collect();
     let n_labels = pairs.iter().map(|&(l, _)| l as u64 + 1).max().unwrap_or(0);
     put_u64(&mut out, n_labels);
-    for &b in &m.model.bias {
+    for &b in &model.bias {
         out.extend_from_slice(&b.to_le_bytes());
     }
-    for &w in &m.model.w {
+    for &w in &model.w {
         out.extend_from_slice(&w.to_le_bytes());
     }
     put_u64(&mut out, pairs.len() as u64);
@@ -131,6 +154,159 @@ pub fn load(path: &Path) -> Result<TrainedModel, String> {
     deserialize(&bytes)
 }
 
+/// An epoch-boundary training checkpoint (see the module docs for the
+/// on-disk format and what is / is not restored).
+#[derive(Clone)]
+pub struct Checkpoint {
+    /// Epochs completed when this checkpoint was taken.
+    pub epoch: u32,
+    /// Global SGD step (examples seen), driving the lr schedule and the
+    /// per-epoch shuffle salts.
+    pub step: u64,
+    /// The training seed (sanity: resume with the same-seeded config).
+    pub seed: u64,
+    /// Per-epoch metrics, oldest first.
+    pub history: Vec<EpochMetrics>,
+    /// Raw (unaveraged) weights + trellis + label↔path table.
+    pub model: TrainedModel,
+}
+
+/// Serialize a checkpoint.
+pub fn serialize_checkpoint(ck: &Checkpoint) -> Vec<u8> {
+    serialize_checkpoint_with(ck.epoch, ck.step, ck.seed, &ck.history, &serialize(&ck.model))
+}
+
+/// Low-level checkpoint writer over pre-serialized model bytes. Combined
+/// with [`serialize_parts`] this lets the trainer checkpoint every epoch
+/// without cloning its weight matrix into a temporary `TrainedModel`.
+pub fn serialize_checkpoint_with(
+    epoch: u32,
+    step: u64,
+    seed: u64,
+    history: &[EpochMetrics],
+    model_bytes: &[u8],
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(model_bytes.len() + 64 + history.len() * 32);
+    out.extend_from_slice(CKPT_MAGIC);
+    put_u32(&mut out, CKPT_VERSION);
+    put_u32(&mut out, epoch);
+    put_u64(&mut out, step);
+    put_u64(&mut out, seed);
+    put_u64(&mut out, history.len() as u64);
+    for m in history {
+        put_u64(&mut out, m.examples);
+        put_u64(&mut out, m.active_hinge);
+        put_u64(&mut out, m.loss_sum.to_bits());
+        put_u64(&mut out, m.new_labels);
+    }
+    put_u64(&mut out, model_bytes.len() as u64);
+    out.extend_from_slice(model_bytes);
+    out
+}
+
+/// Deserialize a checkpoint.
+pub fn deserialize_checkpoint(bytes: &[u8]) -> Result<Checkpoint, String> {
+    let mut r = Reader { b: bytes, i: 0 };
+    if r.take(4)? != CKPT_MAGIC {
+        return Err("not an LTLS checkpoint file (bad magic)".into());
+    }
+    let version = r.u32()?;
+    if version != CKPT_VERSION {
+        return Err(format!("unsupported checkpoint version {version}"));
+    }
+    let epoch = r.u32()?;
+    let step = r.u64()?;
+    let seed = r.u64()?;
+    let n_history = r.u64()? as usize;
+    if n_history.saturating_mul(32) > bytes.len() {
+        return Err("truncated checkpoint (history)".into());
+    }
+    let mut history = Vec::with_capacity(n_history);
+    for _ in 0..n_history {
+        let examples = r.u64()?;
+        let active_hinge = r.u64()?;
+        let loss_sum = f64::from_bits(r.u64()?);
+        let new_labels = r.u64()?;
+        history.push(EpochMetrics { examples, active_hinge, loss_sum, new_labels });
+    }
+    let model_len = r.u64()? as usize;
+    let model = deserialize(r.take(model_len)?)?;
+    if r.i != bytes.len() {
+        return Err(format!("{} trailing bytes", bytes.len() - r.i));
+    }
+    Ok(Checkpoint { epoch, step, seed, history, model })
+}
+
+/// Save a checkpoint, atomically: write to `<path>.tmp`, then rename, so a
+/// crash mid-write never clobbers the previous checkpoint.
+pub fn save_checkpoint(ck: &Checkpoint, path: &Path) -> Result<(), String> {
+    write_atomic(&serialize_checkpoint(ck), path)
+}
+
+/// Atomic file replace (`<path>.tmp` + rename).
+pub fn write_atomic(bytes: &[u8], path: &Path) -> Result<(), String> {
+    let tmp = path.with_extension("ltck.tmp");
+    std::fs::write(&tmp, bytes).map_err(|e| format!("{}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Load a checkpoint from a file.
+pub fn load_checkpoint(path: &Path) -> Result<Checkpoint, String> {
+    let bytes =
+        std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    deserialize_checkpoint(&bytes)
+}
+
+/// Canonical checkpoint file name for an epoch: `dir/epoch-NNNN.ltck`.
+pub fn checkpoint_path(dir: &Path, epoch: u32) -> PathBuf {
+    dir.join(format!("epoch-{epoch:04}.ltck"))
+}
+
+/// Delete every `epoch-NNNN.ltck` (and stray `.ltck.tmp`) in `dir`;
+/// returns how many files were removed. A *fresh* training run pointed at
+/// a dir that still holds an older run's checkpoints must clear them,
+/// otherwise a later `--resume` would pick up the stale run's
+/// higher-numbered epochs instead of the new run's.
+pub fn clear_checkpoints(dir: &Path) -> Result<usize, String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut removed = 0usize;
+    for entry in entries {
+        let entry = entry.map_err(|e| e.to_string())?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let is_ckpt = name
+            .strip_prefix("epoch-")
+            .and_then(|s| s.strip_suffix(".ltck").or_else(|| s.strip_suffix(".ltck.tmp")))
+            .map(|num| num.parse::<u32>().is_ok())
+            .unwrap_or(false);
+        if is_ckpt {
+            std::fs::remove_file(entry.path())
+                .map_err(|e| format!("{}: {e}", entry.path().display()))?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+/// The highest-epoch `epoch-NNNN.ltck` in `dir`, if any.
+pub fn latest_checkpoint(dir: &Path) -> Result<Option<(u32, PathBuf)>, String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut best: Option<(u32, PathBuf)> = None;
+    for entry in entries {
+        let entry = entry.map_err(|e| e.to_string())?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(num) = name.strip_prefix("epoch-").and_then(|s| s.strip_suffix(".ltck")) else {
+            continue;
+        };
+        let Ok(epoch) = num.parse::<u32>() else { continue };
+        if best.as_ref().map(|(b, _)| epoch > *b).unwrap_or(true) {
+            best = Some((epoch, entry.path()));
+        }
+    }
+    Ok(best)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +341,106 @@ mod tests {
         let m2 = load(&path).unwrap();
         assert_eq!(m2.model.bias, m.model.bias);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let (m, _) = trained();
+        let ck = Checkpoint {
+            epoch: 3,
+            step: 1234,
+            seed: 42,
+            history: vec![
+                EpochMetrics { examples: 400, active_hinge: 300, loss_sum: 99.5, new_labels: 24 },
+                EpochMetrics { examples: 400, active_hinge: 120, loss_sum: 31.25, new_labels: 0 },
+            ],
+            model: m,
+        };
+        let bytes = serialize_checkpoint(&ck);
+        let ck2 = deserialize_checkpoint(&bytes).unwrap();
+        assert_eq!(ck2.epoch, 3);
+        assert_eq!(ck2.step, 1234);
+        assert_eq!(ck2.seed, 42);
+        assert_eq!(ck2.history.len(), 2);
+        assert_eq!(ck2.history[0].examples, 400);
+        assert_eq!(ck2.history[1].loss_sum, 31.25);
+        assert_eq!(ck2.model.model.w, ck.model.model.w);
+        assert_eq!(ck2.model.model.bias, ck.model.model.bias);
+        // The embedded assignment table round-trips.
+        let a: Vec<_> = ck.model.assigner.table.pairs().collect();
+        let b: Vec<_> = ck2.model.assigner.table.pairs().collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn checkpoint_rejects_corrupt_and_foreign_files() {
+        let (m, _) = trained();
+        let ck = Checkpoint { epoch: 1, step: 10, seed: 7, history: vec![], model: m };
+        let mut bytes = serialize_checkpoint(&ck);
+        assert!(deserialize_checkpoint(&bytes[..16]).is_err()); // truncated
+        bytes.push(0);
+        assert!(deserialize_checkpoint(&bytes).is_err()); // trailing garbage
+        bytes.pop();
+        bytes[0] = b'X';
+        assert!(deserialize_checkpoint(&bytes).is_err()); // bad magic
+        // A plain model file is not a checkpoint (and vice versa).
+        let (m2, _) = trained();
+        assert!(deserialize_checkpoint(&serialize(&m2)).is_err());
+        let ck2 = Checkpoint { epoch: 1, step: 10, seed: 7, history: vec![], model: m2 };
+        assert!(deserialize(&serialize_checkpoint(&ck2)).is_err());
+    }
+
+    #[test]
+    fn checkpoint_dir_save_load_latest() {
+        let dir = std::env::temp_dir().join(format!("ltls_ckpt_io_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (m, _) = trained();
+        for epoch in [1u32, 2, 10] {
+            let ck = Checkpoint {
+                epoch,
+                step: epoch as u64 * 100,
+                seed: 42,
+                history: vec![],
+                model: m.clone(),
+            };
+            save_checkpoint(&ck, &checkpoint_path(&dir, epoch)).unwrap();
+        }
+        let (epoch, path) = latest_checkpoint(&dir).unwrap().expect("checkpoints exist");
+        assert_eq!(epoch, 10);
+        let ck = load_checkpoint(&path).unwrap();
+        assert_eq!(ck.epoch, 10);
+        assert_eq!(ck.step, 1000);
+        // No tmp files left behind by the atomic writes.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_checkpoint_empty_dir_is_none() {
+        let dir = std::env::temp_dir().join(format!("ltls_ckpt_empty_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(latest_checkpoint(&dir).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn clear_checkpoints_removes_only_checkpoint_files() {
+        let dir = std::env::temp_dir().join(format!("ltls_ckpt_clear_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("epoch-0001.ltck"), b"x").unwrap();
+        std::fs::write(dir.join("epoch-0007.ltck.tmp"), b"x").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"keep me").unwrap();
+        std::fs::write(dir.join("epoch-abc.ltck"), b"keep me too").unwrap();
+        assert_eq!(clear_checkpoints(&dir).unwrap(), 2);
+        assert!(latest_checkpoint(&dir).unwrap().is_none());
+        assert!(dir.join("notes.txt").exists());
+        assert!(dir.join("epoch-abc.ltck").exists());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

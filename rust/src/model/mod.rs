@@ -14,4 +14,5 @@ pub mod io;
 pub mod l1;
 pub mod linear;
 
+pub use io::Checkpoint;
 pub use linear::LinearEdgeModel;

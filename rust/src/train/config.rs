@@ -22,6 +22,13 @@ pub struct TrainConfig {
     pub shuffle: bool,
     /// Print a progress line every N examples (0 = quiet).
     pub log_every: usize,
+    /// Worker threads for [`super::ParallelTrainer`]: 1 = the serial path,
+    /// 0 = one per available core, N = Hogwild with N workers.
+    pub threads: usize,
+    /// Mini-batch width for the batched scoring path (1 = per-example;
+    /// B > 1 scores B examples per feature-strip sweep, see
+    /// [`crate::model::LinearEdgeModel::edge_scores_batch`]).
+    pub batch: usize,
 }
 
 impl Default for TrainConfig {
@@ -36,6 +43,8 @@ impl Default for TrainConfig {
             seed: 42,
             shuffle: true,
             log_every: 0,
+            threads: 1,
+            batch: 1,
         }
     }
 }
@@ -62,5 +71,38 @@ mod tests {
             prev = lr;
         }
         assert_eq!(c.lr_at(0), c.lr);
+    }
+
+    /// Pin the decay-schedule endpoints numerically (default lr=0.5,
+    /// decay=1e-4, power=0.75), so a silent change to the formula fails
+    /// loudly instead of shifting every training trajectory.
+    #[test]
+    fn lr_schedule_pinned_endpoints() {
+        let c = TrainConfig::default();
+        // t = 0: exactly the base rate.
+        assert_eq!(c.lr_at(0), 0.5);
+        // t = 10^4: 1 + 1e-4·1e4 = 2 → 0.5 / 2^0.75 = 0.29730177…
+        assert!((c.lr_at(10_000) - 0.297_301_8).abs() < 1e-5, "{}", c.lr_at(10_000));
+        // t = 10^6: 1 + 100 = 101 → 0.5 / 101^0.75 = 0.01569381…
+        assert!((c.lr_at(1_000_000) - 0.015_693_8).abs() < 2e-5, "{}", c.lr_at(1_000_000));
+    }
+
+    /// Degenerate schedule shapes behave: no decay ⇒ constant; power 1 ⇒
+    /// exact harmonic decay.
+    #[test]
+    fn lr_schedule_degenerate_shapes() {
+        let c0 = TrainConfig { decay: 0.0, ..TrainConfig::default() };
+        assert_eq!(c0.lr_at(1_000_000_000), c0.lr);
+        let c1 = TrainConfig { power: 1.0, ..TrainConfig::default() };
+        // 0.5 / (1 + 1e-4·1e4) = 0.25.
+        assert!((c1.lr_at(10_000) - 0.25).abs() < 1e-6);
+    }
+
+    /// The parallel knobs default to the serial configuration.
+    #[test]
+    fn parallel_knobs_default_serial() {
+        let c = TrainConfig::default();
+        assert_eq!(c.threads, 1);
+        assert_eq!(c.batch, 1);
     }
 }

@@ -26,6 +26,15 @@ impl EpochMetrics {
             self.active_hinge as f64 / self.examples as f64
         }
     }
+
+    /// Fold another accumulator into this one (merging per-worker metrics
+    /// after a parallel epoch).
+    pub fn merge(&mut self, other: &EpochMetrics) {
+        self.examples += other.examples;
+        self.active_hinge += other.active_hinge;
+        self.loss_sum += other.loss_sum;
+        self.new_labels += other.new_labels;
+    }
 }
 
 impl std::fmt::Display for EpochMetrics {
@@ -53,10 +62,34 @@ mod tests {
         assert!(!format!("{m}").is_empty());
     }
 
+    /// Empty-epoch edge cases: the ratio metrics must not divide by zero,
+    /// also after merging empties.
     #[test]
     fn empty_metrics_are_zero() {
         let m = EpochMetrics::default();
         assert_eq!(m.mean_loss(), 0.0);
         assert_eq!(m.update_rate(), 0.0);
+        assert!(m.mean_loss().is_finite() && m.update_rate().is_finite());
+        let mut e = EpochMetrics::default();
+        e.merge(&EpochMetrics::default());
+        assert_eq!(e.mean_loss(), 0.0);
+        assert_eq!(e.update_rate(), 0.0);
+        assert!(!format!("{e}").is_empty());
+    }
+
+    #[test]
+    fn merge_accumulates_workers() {
+        let mut a = EpochMetrics { examples: 10, active_hinge: 4, loss_sum: 5.0, new_labels: 2 };
+        let b = EpochMetrics { examples: 6, active_hinge: 1, loss_sum: 1.5, new_labels: 0 };
+        a.merge(&b);
+        assert_eq!(a.examples, 16);
+        assert_eq!(a.active_hinge, 5);
+        assert!((a.loss_sum - 6.5).abs() < 1e-12);
+        assert_eq!(a.new_labels, 2);
+        // Merging an empty accumulator is the identity.
+        let snapshot = a.clone();
+        a.merge(&EpochMetrics::default());
+        assert_eq!(a.examples, snapshot.examples);
+        assert_eq!(a.loss_sum, snapshot.loss_sum);
     }
 }

@@ -5,10 +5,25 @@
 //! hinge is active update only the edges in the symmetric difference of
 //! the two paths (`+ηx` on positive-only edges, `−ηx` on negative-only
 //! edges) — `O(log C)` model work per step, with weight averaging.
+//!
+//! Two execution engines share that step:
+//!
+//! * [`trainer::Trainer`] — the strictly-serial path (with weight
+//!   averaging), now also the `threads = 1` special case of the parallel
+//!   trainer.
+//! * [`parallel::ParallelTrainer`] — the Hogwild-style multi-worker path:
+//!   deterministic sharding ([`shard`]), lock-free shared weight updates,
+//!   per-worker engine scratch, optional mini-batch scoring through the
+//!   serving kernel, and epoch-boundary checkpoint/resume
+//!   ([`crate::model::io::Checkpoint`]).
 
 pub mod config;
 pub mod metrics;
+pub mod parallel;
+pub mod shard;
 pub mod trainer;
 
 pub use config::TrainConfig;
+pub use metrics::EpochMetrics;
+pub use parallel::ParallelTrainer;
 pub use trainer::{TrainedModel, Trainer};

@@ -1,0 +1,566 @@
+//! Hogwild-style parallel trainer (Recht et al., 2011 applied to LTLS).
+//!
+//! LTLS updates are *sparse*: one SGD step touches only the `O(log C)`
+//! edges in the symmetric difference of two trellis paths, over the
+//! example's active features. Sparse updates are exactly the regime where
+//! lock-free ("Hogwild") SGD converges despite racy writes, so the
+//! parallel trainer runs `N` scoped workers over one shared
+//! [`LinearEdgeModel`]:
+//!
+//! * **Sharding** — every epoch's deterministic permutation (the same
+//!   `seed ^ step` permutation the serial trainer uses, see
+//!   [`super::shard`]) is split into one contiguous chunk per worker, so a
+//!   1-worker Hogwild epoch is *bit-identical* to the serial epoch
+//!   (pinned by `rust/tests/train_parallel.rs`).
+//! * **Shared weights** — workers read and write the weight matrix through
+//!   [`SharedWeights`], a `&[AtomicU32]` view over the model's `f32`
+//!   storage (same size/alignment/bit-validity). All accesses are
+//!   `Relaxed` atomic loads/stores: plain machine loads/stores on x86/ARM,
+//!   formally race-free, with the classic Hogwild semantics that
+//!   concurrent read-modify-writes may occasionally drop an update.
+//! * **Per-worker engine scratch** — each worker owns a
+//!   [`TrainScratch`] (edge-score buffer, loss decode workspace,
+//!   symmetric-difference sets, mini-batch buffers), so the steady-state
+//!   epoch performs no heap allocation in the hot loop.
+//! * **Mini-batch scoring** — with `config.batch > 1` a worker scores `B`
+//!   examples per feature-strip sweep using the same gather-sort schedule
+//!   as the serving kernel [`LinearEdgeModel::edge_scores_batch`], then
+//!   applies the per-example hinge updates from the shared score matrix
+//!   (scores within a block are computed before the block's updates —
+//!   standard mini-batch staleness).
+//! * **Assignment** — the online label→path table (paper §5.1) is the one
+//!   piece that cannot be racy (it is a bijection), so it sits behind an
+//!   `RwLock`: the steady-state path is a read-lock lookup; only unseen
+//!   labels take the write lock. After the first epoch this is
+//!   read-mostly.
+//!
+//! Weight **averaging is a strictly-serial feature**: the Hogwild path
+//! trains raw weights and drops the averager (a racy average would be
+//! neither the paper's average nor reproducible). The `threads = 1,
+//! batch = 1` configuration routes to the serial [`Trainer`] and keeps
+//! averaging.
+//!
+//! The learning-rate schedule is driven by one shared `AtomicU64` step
+//! counter (`fetch_add` per example), matching the serial step count in
+//! distribution and exactly at one worker.
+
+use super::config::TrainConfig;
+use super::metrics::EpochMetrics;
+use super::shard::shard_epoch;
+use super::trainer::{TrainedModel, Trainer};
+use crate::assign::Assigner;
+use crate::data::Dataset;
+use crate::engine::TrainScratch;
+use crate::graph::codec::edges_of_label;
+use crate::graph::Trellis;
+use crate::loss::separation_loss_ws;
+use crate::model::io::{self, Checkpoint};
+use crate::model::LinearEdgeModel;
+use crate::sparse::SparseVec;
+use std::path::Path;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// View a `&mut [f32]` as `&[AtomicU32]` for the duration of the borrow.
+///
+/// SAFETY: `AtomicU32` has the same size, alignment and bit validity as
+/// `u32`/`f32`; the exclusive borrow guarantees no plain (non-atomic)
+/// access can alias the view while it lives, and every access through the
+/// view is atomic — so concurrent workers are formally race-free.
+fn atomic_view(v: &mut [f32]) -> &[AtomicU32] {
+    unsafe { std::slice::from_raw_parts(v.as_mut_ptr() as *const AtomicU32, v.len()) }
+}
+
+/// The shared Hogwild view over one [`LinearEdgeModel`]'s storage.
+///
+/// Mirrors the model's scoring/update kernels 1:1 (same loop structure,
+/// same float-op order — `shared_kernels_match_model` pins the parity)
+/// with relaxed atomic element access instead of plain loads/stores.
+struct SharedWeights<'a> {
+    /// Feature-major `D × E` weights (see [`LinearEdgeModel::w`]).
+    w: &'a [AtomicU32],
+    /// Per-edge bias.
+    bias: &'a [AtomicU32],
+    n_edges: usize,
+}
+
+impl<'a> SharedWeights<'a> {
+    fn new(m: &'a mut LinearEdgeModel) -> SharedWeights<'a> {
+        let n_edges = m.n_edges;
+        SharedWeights { w: atomic_view(&mut m.w), bias: atomic_view(&mut m.bias), n_edges }
+    }
+
+    #[inline]
+    fn get(a: &AtomicU32) -> f32 {
+        f32::from_bits(a.load(Ordering::Relaxed))
+    }
+
+    /// Lossy Hogwild read-modify-write (no CAS loop by design: a lost
+    /// increment under contention is the algorithm's accepted noise).
+    #[inline]
+    fn add(a: &AtomicU32, delta: f32) {
+        let v = f32::from_bits(a.load(Ordering::Relaxed)) + delta;
+        a.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Mirrors [`LinearEdgeModel::edge_scores`].
+    fn edge_scores(&self, x: SparseVec, out: &mut Vec<f32>) {
+        let e = self.n_edges;
+        out.clear();
+        out.extend(self.bias.iter().map(Self::get));
+        for (&i, &v) in x.indices.iter().zip(x.values) {
+            let strip = &self.w[i as usize * e..(i as usize + 1) * e];
+            for (o, wv) in out.iter_mut().zip(strip) {
+                *o += v * Self::get(wv);
+            }
+        }
+    }
+
+    /// Mirrors [`LinearEdgeModel::edge_scores_batch`] (same gather-sort
+    /// schedule: one feature-strip sweep per block).
+    fn edge_scores_batch(
+        &self,
+        rows: &[SparseVec],
+        scratch: &mut Vec<(u32, u32, f32)>,
+        out: &mut Vec<f32>,
+    ) {
+        let e = self.n_edges;
+        out.clear();
+        out.reserve(rows.len() * e);
+        for _ in 0..rows.len() {
+            out.extend(self.bias.iter().map(Self::get));
+        }
+        scratch.clear();
+        for (r, x) in rows.iter().enumerate() {
+            for (&i, &v) in x.indices.iter().zip(x.values) {
+                scratch.push((i, r as u32, v));
+            }
+        }
+        scratch.sort_unstable_by_key(|t| t.0);
+        for &(i, r, v) in scratch.iter() {
+            let strip = &self.w[i as usize * e..(i as usize + 1) * e];
+            let dst = &mut out[r as usize * e..(r as usize + 1) * e];
+            for (o, wv) in dst.iter_mut().zip(strip) {
+                *o += v * Self::get(wv);
+            }
+        }
+    }
+
+    /// Mirrors [`LinearEdgeModel::update_edges`] (fused symmetric-difference
+    /// update, feature-major strips, bias after weights).
+    fn update_edges(&self, pos: &[u32], neg: &[u32], x: SparseVec, scale: f32) {
+        let e = self.n_edges;
+        for (&i, &v) in x.indices.iter().zip(x.values) {
+            let strip = &self.w[i as usize * e..(i as usize + 1) * e];
+            let sv = scale * v;
+            for &edge in pos {
+                Self::add(&strip[edge as usize], sv);
+            }
+            for &edge in neg {
+                Self::add(&strip[edge as usize], -sv);
+            }
+        }
+        for &edge in pos {
+            Self::add(&self.bias[edge as usize], scale * 0.1);
+        }
+        for &edge in neg {
+            Self::add(&self.bias[edge as usize], -(scale * 0.1));
+        }
+    }
+}
+
+/// One worker's epoch over its shard. Runs the full SGD step pipeline on
+/// worker-owned [`TrainScratch`] buffers against the shared weights.
+#[allow(clippy::too_many_arguments)]
+fn run_worker(
+    shard: &[usize],
+    ds: &Dataset,
+    trellis: &Trellis,
+    config: &TrainConfig,
+    weights: &SharedWeights<'_>,
+    assigner: &RwLock<&mut Assigner>,
+    step_ctr: &AtomicU64,
+    batch: usize,
+) -> EpochMetrics {
+    let mut metrics = EpochMetrics::default();
+    let mut scratch = TrainScratch::new();
+    let mut rows: Vec<SparseVec<'_>> = Vec::with_capacity(batch);
+    let e = weights.n_edges;
+    for block in shard.chunks(batch.max(1)) {
+        rows.clear();
+        rows.extend(block.iter().map(|&r| ds.row(r)));
+        let batched = rows.len() > 1;
+        if batched {
+            // One feature-strip sweep scores the whole block (the serving
+            // kernel's schedule); updates apply per example below.
+            weights.edge_scores_batch(&rows, &mut scratch.batch_gather, &mut scratch.batch_h);
+        }
+        for (bi, &r) in block.iter().enumerate() {
+            let x = rows[bi];
+            // Global step: one fetch_add per example, like the serial
+            // `self.step += 1`.
+            let t = step_ctr.fetch_add(1, Ordering::Relaxed) + 1;
+            if !batched {
+                weights.edge_scores(x, &mut scratch.h);
+            }
+            let h: &[f32] = if batched {
+                &scratch.batch_h[bi * e..(bi + 1) * e]
+            } else {
+                &scratch.h
+            };
+
+            // Resolve labels → paths. Steady state is a read-lock lookup;
+            // unseen labels re-resolve under the write lock (the order of
+            // §5.1 assignments under concurrency is racy by design).
+            let labels = ds.labels_of(r);
+            let mut pos = std::mem::take(&mut scratch.pos);
+            pos.clear();
+            let all_assigned = {
+                let a = assigner.read().expect("assigner lock poisoned");
+                let mut ok = true;
+                for &l in labels {
+                    match a.table.path_of(l) {
+                        Some(p) => pos.push(p),
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                ok
+            };
+            if !all_assigned {
+                pos.clear();
+                let mut a = assigner.write().expect("assigner lock poisoned");
+                let before = a.table.n_assigned();
+                for &l in labels {
+                    pos.push(a.path_for(trellis, h, l));
+                }
+                metrics.new_labels += (a.table.n_assigned() - before) as u64;
+            }
+
+            // Separation ranking loss + symmetric-difference update.
+            if let Some(out) =
+                separation_loss_ws(trellis, h, &pos, &mut scratch.ws, &mut scratch.paths)
+            {
+                metrics.examples += 1;
+                metrics.loss_sum += out.loss as f64;
+                if out.loss > 0.0 {
+                    metrics.active_hinge += 1;
+                    let lr = config.lr_at(t);
+                    let pos_edges = edges_of_label(trellis, out.pos);
+                    let neg_edges = edges_of_label(trellis, out.neg);
+                    scratch.pos_only.clear();
+                    scratch.neg_only.clear();
+                    scratch.pos_only.extend(pos_edges.iter().filter(|ed| !neg_edges.contains(ed)));
+                    scratch.neg_only.extend(neg_edges.iter().filter(|ed| !pos_edges.contains(ed)));
+                    weights.update_edges(&scratch.pos_only, &scratch.neg_only, x, lr);
+                }
+            }
+            scratch.pos = pos;
+        }
+    }
+    metrics
+}
+
+/// Multi-threaded Hogwild trainer wrapping the serial [`Trainer`].
+///
+/// `config.threads` picks the worker count (0 → one per core, 1 → the
+/// serial path); `config.batch` picks the mini-batch scoring width. See
+/// the module docs for the execution model.
+#[derive(Clone)]
+pub struct ParallelTrainer {
+    inner: Trainer,
+    /// Epochs completed, including epochs restored from a checkpoint.
+    epochs_done: u32,
+    /// Per-epoch metrics history (checkpointed alongside the model).
+    history: Vec<EpochMetrics>,
+}
+
+impl ParallelTrainer {
+    /// New trainer for `n_features`-dim inputs and `n_labels` classes.
+    pub fn new(config: TrainConfig, n_features: usize, n_labels: usize) -> Self {
+        ParallelTrainer {
+            inner: Trainer::new(config, n_features, n_labels),
+            epochs_done: 0,
+            history: Vec::new(),
+        }
+    }
+
+    /// Resume training from a checkpoint: restores the raw weights, the
+    /// label→path table, the global step (so the lr schedule and epoch
+    /// permutations continue exactly), the epoch counter and the metrics
+    /// history. Errors if `config.seed` differs from the checkpoint's seed
+    /// — the "reproducible from the config alone" guarantee would silently
+    /// break otherwise. Not restored (documented): the weight-averager
+    /// state and the assigner's random-fallback RNG — both restart fresh.
+    pub fn resume(config: TrainConfig, ck: Checkpoint) -> Result<ParallelTrainer, String> {
+        let Checkpoint { epoch, step, seed, history, model } = ck;
+        if seed != config.seed {
+            return Err(format!(
+                "checkpoint was trained with seed {seed}, config has seed {} — \
+                 resume with the same seed (or retrain)",
+                config.seed
+            ));
+        }
+        let TrainedModel { trellis, model, mut assigner } = model;
+        // Model files record only the bound pairs; restore the configured
+        // assignment policy for the labels still unseen.
+        assigner.policy = config.policy;
+        Ok(ParallelTrainer {
+            inner: Trainer::from_parts(config, trellis, model, assigner, step),
+            epochs_done: epoch,
+            history,
+        })
+    }
+
+    /// Resolved worker count (`config.threads`, with 0 → one per core).
+    pub fn n_threads(&self) -> usize {
+        match self.inner.config.threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            t => t,
+        }
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.inner.config
+    }
+
+    pub fn config_mut(&mut self) -> &mut TrainConfig {
+        &mut self.inner.config
+    }
+
+    /// Global SGD step count (examples seen across all epochs/resumes).
+    pub fn global_step(&self) -> u64 {
+        self.inner.step
+    }
+
+    /// Epochs completed so far (including checkpoint-restored ones).
+    pub fn epochs_done(&self) -> u32 {
+        self.epochs_done
+    }
+
+    /// Per-epoch metrics, oldest first (checkpoint-restored + this run).
+    pub fn history(&self) -> &[EpochMetrics] {
+        &self.history
+    }
+
+    /// Snapshot the current training state (raw, unaveraged weights).
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            epoch: self.epochs_done,
+            step: self.inner.step,
+            seed: self.inner.config.seed,
+            history: self.history.clone(),
+            model: TrainedModel {
+                trellis: self.inner.trellis.clone(),
+                model: self.inner.model.clone(),
+                assigner: self.inner.assigner.clone(),
+            },
+        }
+    }
+
+    /// Train one epoch. `threads = 1, batch = 1` routes to the serial
+    /// [`Trainer::epoch`] (bit-identical to the legacy path, averaging
+    /// included); anything else runs the Hogwild worker pool.
+    pub fn epoch(&mut self, ds: &Dataset) -> EpochMetrics {
+        assert_eq!(
+            ds.n_features, self.inner.model.n_features,
+            "dataset feature dim {} != model feature dim {} (resumed against a different dataset?)",
+            ds.n_features, self.inner.model.n_features
+        );
+        // A checkpointed model records only bound (label, path) pairs;
+        // make sure the label side covers this dataset.
+        self.inner.assigner.table.ensure_labels(ds.n_labels);
+        let m = if self.n_threads() <= 1 && self.inner.config.batch <= 1 {
+            self.inner.epoch(ds)
+        } else {
+            self.hogwild_epoch_inner(ds)
+        };
+        self.epochs_done += 1;
+        self.history.push(m.clone());
+        m
+    }
+
+    /// Train for `epochs` epochs; returns per-epoch metrics.
+    pub fn fit(&mut self, ds: &Dataset, epochs: usize) -> Vec<EpochMetrics> {
+        (0..epochs).map(|_| self.epoch(ds)).collect()
+    }
+
+    /// Like [`Self::fit`], writing a checkpoint into `dir` after every
+    /// epoch (`epoch-NNNN.ltck`, atomically replaced).
+    pub fn fit_with_checkpoints(
+        &mut self,
+        ds: &Dataset,
+        epochs: usize,
+        dir: &Path,
+    ) -> Result<Vec<EpochMetrics>, String> {
+        let mut out = Vec::with_capacity(epochs);
+        for _ in 0..epochs {
+            out.push(self.epoch(ds));
+            self.save_checkpoint_to(dir)?;
+        }
+        Ok(out)
+    }
+
+    /// Write the current state as `dir/epoch-NNNN.ltck` (atomic replace),
+    /// serializing straight from the live weights — no model clone, so the
+    /// epoch-boundary write costs one output buffer, not 3× the model.
+    pub fn save_checkpoint_to(&self, dir: &Path) -> Result<std::path::PathBuf, String> {
+        std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+        let model_bytes =
+            io::serialize_parts(&self.inner.trellis, &self.inner.model, &self.inner.assigner);
+        let bytes = io::serialize_checkpoint_with(
+            self.epochs_done,
+            self.inner.step,
+            self.inner.config.seed,
+            &self.history,
+            &model_bytes,
+        );
+        let path = io::checkpoint_path(dir, self.epochs_done);
+        io::write_atomic(&bytes, &path)?;
+        Ok(path)
+    }
+
+    /// Always run the Hogwild worker path, regardless of `threads`/`batch`
+    /// (test and bench hook: at `threads = 1, batch = 1` with averaging
+    /// off, this is bit-identical to the serial path).
+    pub fn hogwild_epoch(&mut self, ds: &Dataset) -> EpochMetrics {
+        self.inner.assigner.table.ensure_labels(ds.n_labels);
+        let m = self.hogwild_epoch_inner(ds);
+        self.epochs_done += 1;
+        self.history.push(m.clone());
+        m
+    }
+
+    fn hogwild_epoch_inner(&mut self, ds: &Dataset) -> EpochMetrics {
+        // Averaging is strictly serial (module docs); the Hogwild path
+        // trains raw weights, and once any hogwild epoch has run the
+        // average is gone for good (a restarted average over a suffix of
+        // the run would be neither the paper's average nor meaningful).
+        // The config flag is cleared too, so `config().averaging` always
+        // reflects what `into_model` will actually do.
+        self.inner.averager = None;
+        self.inner.config.averaging = false;
+        let n_workers = self.n_threads().max(1);
+        let batch = self.inner.config.batch.max(1);
+        let shards = shard_epoch(
+            ds.n_examples(),
+            n_workers,
+            self.inner.config.shuffle,
+            self.inner.config.seed,
+            self.inner.step,
+        );
+        let step_ctr = AtomicU64::new(self.inner.step);
+        let trellis = &self.inner.trellis;
+        let config = &self.inner.config;
+        let assigner = RwLock::new(&mut self.inner.assigner);
+        let weights = SharedWeights::new(&mut self.inner.model);
+
+        let mut merged = EpochMetrics::default();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .iter()
+                .map(|shard| {
+                    let weights = &weights;
+                    let assigner = &assigner;
+                    let step_ctr = &step_ctr;
+                    scope.spawn(move || {
+                        run_worker(shard, ds, trellis, config, weights, assigner, step_ctr, batch)
+                    })
+                })
+                .collect();
+            for h in handles {
+                merged.merge(&h.join().expect("hogwild worker panicked"));
+            }
+        });
+        self.inner.step = step_ctr.load(Ordering::Relaxed);
+        merged
+    }
+
+    /// Finalize into a predictor (averaging/L1 exactly as the serial
+    /// [`Trainer::into_model`]; Hogwild-trained weights are raw).
+    pub fn into_model(self) -> TrainedModel {
+        self.inner.into_model()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::util::rng::Rng;
+
+    /// The SharedWeights kernels are bit-identical to the LinearEdgeModel
+    /// kernels they mirror (single-threaded, so no lost updates).
+    #[test]
+    fn shared_kernels_match_model() {
+        let mut rng = Rng::new(77);
+        let mut a = LinearEdgeModel::new(6, 40);
+        let idx: Vec<u32> = vec![1, 7, 13, 22, 39];
+        let val: Vec<f32> = idx.iter().map(|_| rng.normal()).collect();
+        let x = SparseVec::new(&idx, &val);
+        a.update_edges(&[0, 3], &[5], x, 0.7);
+        let mut b = a.clone();
+
+        // Scores: plain vs atomic view.
+        let want = a.edge_scores_vec(x);
+        let shared = SharedWeights::new(&mut b);
+        let mut got = Vec::new();
+        shared.edge_scores(x, &mut got);
+        assert_eq!(want, got);
+
+        // Batch scores: plain vs atomic view.
+        let idx2: Vec<u32> = vec![0, 13, 30];
+        let val2: Vec<f32> = idx2.iter().map(|_| rng.normal()).collect();
+        let x2 = SparseVec::new(&idx2, &val2);
+        let rows = [x, x2, x];
+        let (mut g1, mut o1, mut g2, mut o2) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        a.edge_scores_batch(&rows, &mut g1, &mut o1);
+        shared.edge_scores_batch(&rows, &mut g2, &mut o2);
+        assert_eq!(o1, o2);
+
+        // Updates: plain vs atomic view.
+        shared.update_edges(&[1, 2], &[4], x2, -0.3);
+        drop(shared);
+        a.update_edges(&[1, 2], &[4], x2, -0.3);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.bias, b.bias);
+    }
+
+    /// Smoke: a 3-worker Hogwild epoch trains (loss decreases) and counts
+    /// every example exactly once.
+    #[test]
+    fn hogwild_epoch_counts_every_example() {
+        let ds = SyntheticSpec::multiclass(900, 400, 32).seed(91).generate();
+        let cfg = TrainConfig { threads: 3, averaging: false, ..TrainConfig::default() };
+        let mut tr = ParallelTrainer::new(cfg, ds.n_features, ds.n_labels);
+        let m1 = tr.epoch(&ds);
+        assert_eq!(m1.examples, 900);
+        assert_eq!(tr.global_step(), 900);
+        let m2 = tr.epoch(&ds);
+        assert_eq!(tr.global_step(), 1800);
+        assert!(
+            m2.mean_loss() < m1.mean_loss(),
+            "loss did not decrease: {} → {}",
+            m1.mean_loss(),
+            m2.mean_loss()
+        );
+        assert_eq!(tr.epochs_done(), 2);
+        assert_eq!(tr.history().len(), 2);
+    }
+
+    /// The mini-batch scoring path (single worker, batch > 1) also trains.
+    #[test]
+    fn minibatch_path_trains() {
+        let ds = SyntheticSpec::multiclass(800, 300, 24).seed(92).generate();
+        let cfg = TrainConfig { threads: 1, batch: 16, averaging: false, ..TrainConfig::default() };
+        let mut tr = ParallelTrainer::new(cfg, ds.n_features, ds.n_labels);
+        let ms = tr.fit(&ds, 3);
+        assert_eq!(ms.len(), 3);
+        assert!(ms[2].mean_loss() < ms[0].mean_loss());
+        let model = tr.into_model();
+        let p1 = crate::eval::precision_at_1(&model, &ds);
+        assert!(p1 > 0.3, "precision@1 = {p1}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Deterministic epoch ordering and dataset sharding for parallel training.
+//!
+//! The serial trainer visits one shuffled permutation of the dataset per
+//! epoch; the Hogwild trainer splits *the same permutation* into one
+//! contiguous chunk per worker. Both sides call [`epoch_order`] with the
+//! same `(seed, salt)` pair — `salt` is the global SGD step at the start of
+//! the epoch, exactly the `seed ^ step` construction the serial trainer has
+//! always used — so a 1-worker Hogwild epoch visits examples in the exact
+//! serial order (the basis of the bit-identity test in
+//! `rust/tests/train_parallel.rs`), and any run is reproducible from its
+//! config alone.
+
+use crate::util::rng::Rng;
+
+/// The example visit order for one epoch: a deterministic permutation of
+/// `0..n` (identity when `shuffle` is off), keyed by `seed ^ salt`.
+pub fn epoch_order(n: usize, shuffle: bool, seed: u64, salt: u64) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..n).collect();
+    if shuffle {
+        let mut rng = Rng::new(seed ^ salt);
+        rng.shuffle(&mut order);
+    }
+    order
+}
+
+/// Split one epoch's visit order into `n_shards` contiguous chunks, one
+/// per worker. The chunks partition `0..n` (disjoint, covering) and are
+/// balanced to within one example; with `n_shards = 1` the single shard is
+/// exactly [`epoch_order`].
+pub fn shard_epoch(
+    n: usize,
+    n_shards: usize,
+    shuffle: bool,
+    seed: u64,
+    salt: u64,
+) -> Vec<Vec<usize>> {
+    let n_shards = n_shards.max(1);
+    let order = epoch_order(n, shuffle, seed, salt);
+    let base = n / n_shards;
+    let rem = n % n_shards;
+    let mut out = Vec::with_capacity(n_shards);
+    let mut start = 0usize;
+    for s in 0..n_shards {
+        let len = base + usize::from(s < rem);
+        out.push(order[start..start + len].to_vec());
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_is_deterministic_and_a_permutation() {
+        let a = epoch_order(100, true, 42, 7);
+        let b = epoch_order(100, true, 42, 7);
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        // Different salt (epoch) → different order.
+        assert_ne!(a, epoch_order(100, true, 42, 8));
+        // No shuffle → identity.
+        assert_eq!(epoch_order(5, false, 42, 7), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn shards_partition_and_balance() {
+        for (n, k) in [(100usize, 4usize), (101, 4), (7, 3), (3, 8), (0, 2)] {
+            let shards = shard_epoch(n, k, true, 1, 2);
+            assert_eq!(shards.len(), k);
+            let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+            assert_eq!(all.len(), n, "covering");
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), n, "disjoint");
+            let max = shards.iter().map(|s| s.len()).max().unwrap();
+            let min = shards.iter().map(|s| s.len()).min().unwrap();
+            assert!(max - min <= 1, "balanced: {max} vs {min}");
+        }
+    }
+
+    #[test]
+    fn single_shard_is_the_serial_order() {
+        let shards = shard_epoch(64, 1, true, 9, 3);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0], epoch_order(64, true, 9, 3));
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let shards = shard_epoch(10, 0, false, 0, 0);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].len(), 10);
+    }
+}

@@ -5,28 +5,28 @@ use super::metrics::EpochMetrics;
 use crate::assign::Assigner;
 use crate::data::Dataset;
 use crate::decode::{list_viterbi_into, viterbi, Scored};
-use crate::engine::PredictScratch;
+use crate::engine::{PredictScratch, TrainScratch};
 use crate::graph::codec::edges_of_label;
 use crate::graph::Trellis;
-use crate::loss::separation_loss;
+use crate::loss::separation_loss_ws;
 use crate::model::averaged::Averager;
 use crate::model::LinearEdgeModel;
 use crate::sparse::SparseVec;
-use crate::util::rng::Rng;
 
 /// Online LTLS trainer (separation ranking loss + averaged sparse SGD).
+///
+/// This is the strictly-serial engine; [`super::ParallelTrainer`] wraps it
+/// and runs it directly as the `threads = 1` special case.
+#[derive(Clone)]
 pub struct Trainer {
     pub config: TrainConfig,
     pub trellis: Trellis,
     pub model: LinearEdgeModel,
     pub assigner: Assigner,
-    averager: Option<Averager>,
-    step: u64,
-    /// Scratch buffers (allocation-free hot loop).
-    h_buf: Vec<f32>,
-    pos_buf: Vec<u64>,
-    pos_only: Vec<u32>,
-    neg_only: Vec<u32>,
+    pub(crate) averager: Option<Averager>,
+    pub(crate) step: u64,
+    /// Engine scratch buffers (allocation-free hot loop).
+    pub(crate) scratch: TrainScratch,
 }
 
 impl Trainer {
@@ -45,11 +45,30 @@ impl Trainer {
             assigner,
             averager,
             step: 0,
-            h_buf: Vec::new(),
-            pos_buf: Vec::new(),
-            pos_only: Vec::new(),
-            neg_only: Vec::new(),
+            scratch: TrainScratch::new(),
         }
+    }
+
+    /// Rebuild a trainer from checkpointed parts (see
+    /// [`crate::model::io::Checkpoint`]). The weight averager — whose state
+    /// is not checkpointed — restarts empty, so with `config.averaging` the
+    /// final average covers post-resume steps only.
+    pub(crate) fn from_parts(
+        config: TrainConfig,
+        trellis: Trellis,
+        model: LinearEdgeModel,
+        assigner: Assigner,
+        step: u64,
+    ) -> Self {
+        let averager = config
+            .averaging
+            .then(|| Averager::new(trellis.num_edges(), model.n_features));
+        Trainer { config, trellis, model, assigner, averager, step, scratch: TrainScratch::new() }
+    }
+
+    /// Global SGD step count (examples seen across all epochs).
+    pub fn global_step(&self) -> u64 {
+        self.step
     }
 
     /// One SGD step on example `(x, labels)`. Returns the hinge loss.
@@ -59,21 +78,24 @@ impl Trainer {
             a.tick();
         }
         // h = Wx + b.
-        let mut h = std::mem::take(&mut self.h_buf);
+        let mut h = std::mem::take(&mut self.scratch.h);
         self.model.edge_scores(x, &mut h);
 
         // Resolve labels → paths (assigning unseen labels by policy §5.1).
         let before = self.assigner.table.n_assigned();
-        let mut pos = std::mem::take(&mut self.pos_buf);
+        let mut pos = std::mem::take(&mut self.scratch.pos);
         pos.clear();
         for &l in labels {
             pos.push(self.assigner.path_for(&self.trellis, &h, l));
         }
         metrics.new_labels += (self.assigner.table.n_assigned() - before) as u64;
 
-        // Separation ranking loss (§5).
+        // Separation ranking loss (§5), on the engine's reused decode
+        // buffers.
         let mut loss_val = 0.0;
-        if let Some(out) = separation_loss(&self.trellis, &h, &pos) {
+        if let Some(out) =
+            separation_loss_ws(&self.trellis, &h, &pos, &mut self.scratch.ws, &mut self.scratch.paths)
+        {
             metrics.examples += 1;
             metrics.loss_sum += out.loss as f64;
             loss_val = out.loss;
@@ -84,18 +106,18 @@ impl Trainer {
                 // (fused, feature-major — see model::linear perf notes).
                 let pos_edges = edges_of_label(&self.trellis, out.pos);
                 let neg_edges = edges_of_label(&self.trellis, out.neg);
-                self.pos_only.clear();
-                self.neg_only.clear();
-                self.pos_only.extend(pos_edges.iter().filter(|e| !neg_edges.contains(e)));
-                self.neg_only.extend(neg_edges.iter().filter(|e| !pos_edges.contains(e)));
-                self.model.update_edges(&self.pos_only, &self.neg_only, x, lr);
+                self.scratch.pos_only.clear();
+                self.scratch.neg_only.clear();
+                self.scratch.pos_only.extend(pos_edges.iter().filter(|e| !neg_edges.contains(e)));
+                self.scratch.neg_only.extend(neg_edges.iter().filter(|e| !pos_edges.contains(e)));
+                self.model.update_edges(&self.scratch.pos_only, &self.scratch.neg_only, x, lr);
                 if let Some(a) = &mut self.averager {
-                    a.record_edges(&self.pos_only, &self.neg_only, x, lr);
+                    a.record_edges(&self.scratch.pos_only, &self.scratch.neg_only, x, lr);
                 }
             }
         }
-        self.h_buf = h;
-        self.pos_buf = pos;
+        self.scratch.h = h;
+        self.scratch.pos = pos;
         loss_val
     }
 
@@ -103,11 +125,10 @@ impl Trainer {
     pub fn epoch(&mut self, ds: &Dataset) -> EpochMetrics {
         let mut metrics = EpochMetrics::default();
         let n = ds.n_examples();
-        let mut order: Vec<usize> = (0..n).collect();
-        if self.config.shuffle {
-            let mut rng = Rng::new(self.config.seed ^ self.step);
-            rng.shuffle(&mut order);
-        }
+        // Deterministic epoch permutation, shared with the parallel
+        // trainer's sharding (`seed ^ step-at-epoch-start`).
+        let order =
+            super::shard::epoch_order(n, self.config.shuffle, self.config.seed, self.step);
         for (i, &r) in order.iter().enumerate() {
             self.step(ds.row(r), ds.labels_of(r), &mut metrics);
             if self.config.log_every > 0 && (i + 1) % self.config.log_every == 0 {

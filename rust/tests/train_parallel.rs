@@ -1,0 +1,217 @@
+//! Parallel-vs-serial training parity and checkpoint round-trips.
+//!
+//! The contract under test (see `rust/src/train/parallel.rs` module docs):
+//!
+//! 1. `ParallelTrainer` at `threads = 1, batch = 1` routes to the legacy
+//!    serial `Trainer` — **bit-identical**, averaging included.
+//! 2. The Hogwild worker path itself, forced at one worker
+//!    (`hogwild_epoch`), is **bit-identical** to the serial path with
+//!    averaging off: same epoch permutation, same step counter, same float
+//!    ops through the atomic view.
+//! 3. Multi-threaded Hogwild training reaches comparable loss / precision
+//!    (seeded, tolerance-based — racy updates change exact trajectories).
+//! 4. Checkpoint save → load → resume reproduces the uninterrupted run's
+//!    final metrics and weights exactly on the deterministic path.
+
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::data::Dataset;
+use ltls::eval::precision_at_1;
+use ltls::model::io;
+use ltls::train::{EpochMetrics, ParallelTrainer, TrainConfig, Trainer};
+
+fn dataset(n: usize, d: usize, c: usize, seed: u64) -> Dataset {
+    SyntheticSpec::multiclass(n, d, c).seed(seed).generate()
+}
+
+fn cfg(threads: usize, batch: usize) -> TrainConfig {
+    TrainConfig { averaging: false, threads, batch, ..TrainConfig::default() }
+}
+
+fn assert_metrics_identical(a: &[EpochMetrics], b: &[EpochMetrics]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.examples, y.examples, "epoch {i} examples");
+        assert_eq!(x.active_hinge, y.active_hinge, "epoch {i} active_hinge");
+        assert_eq!(x.new_labels, y.new_labels, "epoch {i} new_labels");
+        assert_eq!(
+            x.loss_sum.to_bits(),
+            y.loss_sum.to_bits(),
+            "epoch {i} loss_sum: {} vs {}",
+            x.loss_sum,
+            y.loss_sum
+        );
+    }
+}
+
+/// Contract 1: the default configuration (averaging ON) through
+/// `ParallelTrainer` is the legacy serial path, bit for bit.
+#[test]
+fn threads1_is_the_legacy_serial_path() {
+    let ds = dataset(1500, 600, 64, 101);
+    let mut serial = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    let ms = serial.fit(&ds, 3);
+    let mut par = ParallelTrainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    let mp = par.fit(&ds, 3);
+    assert_metrics_identical(&ms, &mp);
+    let a = serial.into_model();
+    let b = par.into_model();
+    assert_eq!(a.model.w, b.model.w);
+    assert_eq!(a.model.bias, b.model.bias);
+}
+
+/// Contract 2: the Hogwild worker path at one worker is bit-identical to
+/// the serial path (averaging off) — shared permutation, shared step
+/// counting, identical float-op order through the atomic weight view.
+#[test]
+fn one_worker_hogwild_is_bit_identical_to_serial() {
+    let ds = dataset(1200, 500, 48, 102);
+    let mut serial = Trainer::new(cfg(1, 1), ds.n_features, ds.n_labels);
+    let mut hog = ParallelTrainer::new(cfg(1, 1), ds.n_features, ds.n_labels);
+    let mut ms = Vec::new();
+    let mut mh = Vec::new();
+    for _ in 0..3 {
+        ms.push(serial.epoch(&ds));
+        mh.push(hog.hogwild_epoch(&ds));
+    }
+    assert_metrics_identical(&ms, &mh);
+    assert_eq!(serial.global_step(), hog.global_step());
+    let a = serial.into_model();
+    let b = hog.into_model();
+    assert_eq!(a.model.w, b.model.w);
+    assert_eq!(a.model.bias, b.model.bias);
+    // And the label→path tables agree pair for pair.
+    let pa: Vec<_> = a.assigner.table.pairs().collect();
+    let pb: Vec<_> = b.assigner.table.pairs().collect();
+    assert_eq!(pa, pb);
+}
+
+/// Contract 3: multi-threaded Hogwild reaches comparable quality on the
+/// synthetic dataset (seeded, tolerance-based).
+#[test]
+fn multithreaded_reaches_comparable_loss() {
+    let ds = dataset(4000, 1200, 128, 103);
+    let (train, test) = ltls::data::split::random_split(&ds, 0.2, 9);
+
+    let mut serial = ParallelTrainer::new(cfg(1, 1), ds.n_features, ds.n_labels);
+    let ms = serial.fit(&train, 5);
+    let mut hog = ParallelTrainer::new(cfg(4, 1), ds.n_features, ds.n_labels);
+    let mh = hog.fit(&train, 5);
+
+    // Both trajectories actually learn.
+    assert!(mh.last().unwrap().mean_loss() < mh[0].mean_loss());
+    // Final loss comparable: within 35% relative + small absolute slack.
+    let ls = ms.last().unwrap().mean_loss();
+    let lh = mh.last().unwrap().mean_loss();
+    assert!(
+        lh < ls * 1.35 + 0.05,
+        "hogwild loss {lh} not comparable to serial {ls}"
+    );
+    // Predictive quality comparable on held-out data.
+    let ps = precision_at_1(&serial.into_model(), &test);
+    let ph = precision_at_1(&hog.into_model(), &test);
+    assert!(
+        ph > ps - 0.1,
+        "hogwild p@1 {ph} not comparable to serial {ps}"
+    );
+}
+
+/// Contract 3b: the mini-batch scoring path trains to comparable quality
+/// too (same tolerance scheme), including combined with multi-threading.
+#[test]
+fn minibatch_reaches_comparable_loss() {
+    let ds = dataset(2500, 800, 64, 104);
+    let mut serial = ParallelTrainer::new(cfg(1, 1), ds.n_features, ds.n_labels);
+    let ms = serial.fit(&ds, 4);
+    let mut mb = ParallelTrainer::new(cfg(2, 32), ds.n_features, ds.n_labels);
+    let mm = mb.fit(&ds, 4);
+    let ls = ms.last().unwrap().mean_loss();
+    let lm = mm.last().unwrap().mean_loss();
+    assert!(mm.last().unwrap().mean_loss() < mm[0].mean_loss());
+    assert!(
+        lm < ls * 1.35 + 0.05,
+        "minibatch loss {lm} not comparable to serial {ls}"
+    );
+    // Every example is still visited exactly once per epoch.
+    for m in &mm {
+        assert_eq!(m.examples, ds.n_examples() as u64);
+    }
+}
+
+/// Contract 4: checkpoint save → load → resume reproduces the
+/// uninterrupted run exactly on the deterministic (serial-route) path.
+#[test]
+fn checkpoint_resume_reproduces_uninterrupted_run() {
+    let ds = dataset(1000, 400, 32, 105);
+    let dir = std::env::temp_dir().join(format!("ltls_resume_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Uninterrupted: 3 epochs straight.
+    let mut full = ParallelTrainer::new(cfg(1, 1), ds.n_features, ds.n_labels);
+    let mf = full.fit(&ds, 3);
+
+    // Interrupted: 2 epochs with checkpoints, then resume for 1 more.
+    let mut first = ParallelTrainer::new(cfg(1, 1), ds.n_features, ds.n_labels);
+    first.fit_with_checkpoints(&ds, 2, &dir).unwrap();
+    drop(first);
+
+    let (epoch, path) = io::latest_checkpoint(&dir).unwrap().expect("checkpoints written");
+    assert_eq!(epoch, 2);
+    let ck = io::load_checkpoint(&path).unwrap();
+    assert_eq!(ck.epoch, 2);
+    assert_eq!(ck.step, 2 * ds.n_examples() as u64);
+    assert_eq!(ck.history.len(), 2);
+    // The checkpointed history matches the uninterrupted first two epochs.
+    assert_metrics_identical(&ck.history, &mf[..2]);
+
+    // Seed mismatch is rejected loudly…
+    let wrong_seed = TrainConfig { seed: 7, ..cfg(1, 1) };
+    assert!(ParallelTrainer::resume(wrong_seed, ck.clone()).is_err());
+    // …and the matching config resumes.
+    let mut resumed = ParallelTrainer::resume(cfg(1, 1), ck).unwrap();
+    assert_eq!(resumed.epochs_done(), 2);
+    let m3 = resumed.epoch(&ds);
+
+    // Epoch 3 after resume == epoch 3 of the uninterrupted run, exactly.
+    assert_metrics_identical(std::slice::from_ref(&m3), std::slice::from_ref(&mf[2]));
+    assert_eq!(resumed.global_step(), full.global_step());
+    let a = full.into_model();
+    let b = resumed.into_model();
+    assert_eq!(a.model.w, b.model.w);
+    assert_eq!(a.model.bias, b.model.bias);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Checkpointing works from the multi-threaded path too: the checkpoint
+/// holds a loadable model whose quality matches the live trainer's.
+#[test]
+fn hogwild_checkpoint_is_a_valid_model() {
+    let ds = dataset(1500, 500, 48, 106);
+    let dir = std::env::temp_dir().join(format!("ltls_hogwild_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut tr = ParallelTrainer::new(cfg(4, 8), ds.n_features, ds.n_labels);
+    tr.fit_with_checkpoints(&ds, 2, &dir).unwrap();
+    let (_, path) = io::latest_checkpoint(&dir).unwrap().unwrap();
+    let ck = io::load_checkpoint(&path).unwrap();
+    assert_eq!(ck.step, 2 * ds.n_examples() as u64);
+
+    let live = tr.into_model();
+    let from_ck = ck.model.clone();
+    // The checkpoint was taken after the same 2 epochs: identical weights.
+    assert_eq!(live.model.w, from_ck.model.w);
+    let p_live = precision_at_1(&live, &ds);
+    let p_ck = precision_at_1(&from_ck, &ds);
+    assert_eq!(p_live, p_ck);
+
+    // Resuming from it continues training without losing quality.
+    let mut resumed = ParallelTrainer::resume(cfg(4, 8), ck).unwrap();
+    resumed.fit(&ds, 1);
+    let p_resumed = precision_at_1(&resumed.into_model(), &ds);
+    assert!(
+        p_resumed > p_ck - 0.1,
+        "resumed p@1 {p_resumed} collapsed vs checkpoint {p_ck}"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,318 @@
+//! `bench_check` — the CI perf-regression gate.
+//!
+//! Reads raw bench stdout files (any line of the form `json: {...}`, as
+//! emitted by `benches/decode.rs`, `benches/serve_throughput.rs` and
+//! `benches/train_parallel.rs`), flattens them into `bench.metric` /
+//! `bench.disc=V.metric` scalar metrics, and compares them against a
+//! committed baseline file:
+//!
+//! ```text
+//! bench_check --baseline BENCH_BASELINE.json [--write current.json] \
+//!     bench-out/decode.txt bench-out/serve_throughput.txt ...
+//! ```
+//!
+//! Baseline format (see `BENCH_BASELINE.json`):
+//!
+//! ```json
+//! {
+//!   "tolerance": 0.25,
+//!   "metrics": {
+//!     "train_parallel.speedup_4v1": {"baseline": 1.5},
+//!     "decode.viterbi_ratio": {"baseline": 20.0, "higher_is_better": false,
+//!                               "tolerance": 2.0},
+//!     "serve_throughput.workers=1.req_per_s": null
+//!   }
+//! }
+//! ```
+//!
+//! * An entry with a `"baseline"` number is **gated**: with
+//!   `higher_is_better` (the default) the job fails when
+//!   `current < baseline·(1 − tolerance)`; with `higher_is_better: false`
+//!   it fails when `current > baseline·(1 + tolerance)`. A gated metric
+//!   that no bench produced also fails (bench rot).
+//! * A `null` entry is **record-only**: its current value is printed and
+//!   written to `--write`, never failed on. Absolute throughputs are
+//!   machine-dependent, so they start as record-only; ratio metrics
+//!   (speedups, scaling shapes) are gated.
+//!
+//! `--write` dumps the flattened current metrics as one JSON object — CI
+//! uploads it as an artifact; paste values from a trusted runner into the
+//! baseline to tighten the gate.
+
+use ltls::util::args::Args;
+use ltls::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Result-array keys that name a configuration rather than a measurement.
+const DISCRIMINATORS: [&str; 4] = ["workers", "threads", "batch", "k"];
+
+fn main() {
+    let args = Args::from_env();
+    std::process::exit(run(&args));
+}
+
+fn run(args: &Args) -> i32 {
+    let baseline_path = args.get_str("baseline", "BENCH_BASELINE.json");
+    if args.positional.is_empty() {
+        eprintln!("usage: bench_check --baseline <file> [--write <file>] <bench-output>...");
+        return 2;
+    }
+    let mut current: BTreeMap<String, f64> = BTreeMap::new();
+    for path in &args.positional {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("error: {path}: {e}");
+                return 2;
+            }
+        };
+        for doc in extract_json_lines(&text) {
+            flatten(&doc, &mut current);
+        }
+    }
+    if current.is_empty() {
+        eprintln!("error: no `json: {{...}}` lines found in any input file");
+        return 2;
+    }
+    if let Some(out) = args.get("write") {
+        let obj = Json::Obj(current.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect());
+        if let Err(e) = std::fs::write(out, obj.dump() + "\n") {
+            eprintln!("error: writing {out}: {e}");
+            return 2;
+        }
+    }
+    let baseline_text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {baseline_path}: {e}");
+            return 2;
+        }
+    };
+    match check_against_baseline(&baseline_text, &current) {
+        Ok(report) => {
+            print!("{}", report.text);
+            if report.failures == 0 {
+                println!("bench_check: all {} gated metric(s) within tolerance", report.gated);
+                0
+            } else {
+                println!("bench_check: {} regression(s) detected", report.failures);
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {baseline_path}: {e}");
+            2
+        }
+    }
+}
+
+/// Parse every `json: {...}` line of a bench's stdout.
+fn extract_json_lines(text: &str) -> Vec<Json> {
+    text.lines()
+        .filter_map(|l| l.trim().strip_prefix("json: "))
+        .filter_map(|s| Json::parse(s).ok())
+        .collect()
+}
+
+/// Flatten one bench JSON object into `bench.metric` scalars. Top-level
+/// numeric fields become `bench.<key>`; entries of a `results` array
+/// become `bench.<disc>=<v>[.<disc>=<v>…].<key>` using the discriminator
+/// keys present in the entry.
+fn flatten(doc: &Json, out: &mut BTreeMap<String, f64>) {
+    let Some(bench) = doc.get("bench").and_then(|b| b.as_str()) else { return };
+    if let Json::Obj(map) = doc {
+        for (k, v) in map {
+            if k == "bench" || k == "results" {
+                continue;
+            }
+            if let Some(nv) = v.as_f64() {
+                out.insert(format!("{bench}.{k}"), nv);
+            }
+        }
+    }
+    let Some(results) = doc.get("results").and_then(|r| r.as_arr()) else { return };
+    for item in results {
+        let Json::Obj(imap) = item else { continue };
+        let disc: Vec<String> = DISCRIMINATORS
+            .iter()
+            .filter_map(|d| {
+                imap.get(*d).and_then(|v| v.as_f64()).map(|n| format!("{d}={}", n as i64))
+            })
+            .collect();
+        let prefix = if disc.is_empty() {
+            bench.to_string()
+        } else {
+            format!("{bench}.{}", disc.join("."))
+        };
+        for (k, v) in imap {
+            if DISCRIMINATORS.contains(&k.as_str()) {
+                continue;
+            }
+            if let Some(nv) = v.as_f64() {
+                out.insert(format!("{prefix}.{k}"), nv);
+            }
+        }
+    }
+}
+
+struct Report {
+    text: String,
+    gated: usize,
+    failures: usize,
+}
+
+fn check_against_baseline(
+    baseline_text: &str,
+    current: &BTreeMap<String, f64>,
+) -> Result<Report, String> {
+    use std::fmt::Write as _;
+    let doc = Json::parse(baseline_text)?;
+    let global_tol = doc.get("tolerance").and_then(|t| t.as_f64()).unwrap_or(0.25);
+    let Some(Json::Obj(metrics)) = doc.get("metrics") else {
+        return Err("baseline has no \"metrics\" object".into());
+    };
+    let mut text = String::new();
+    let mut gated = 0usize;
+    let mut failures = 0usize;
+    for (name, spec) in metrics {
+        match spec {
+            Json::Null => match current.get(name) {
+                Some(v) => {
+                    let _ = writeln!(text, "record     {name} = {v:.4}");
+                }
+                None => {
+                    let _ = writeln!(text, "record     {name} (absent this run)");
+                }
+            },
+            spec => {
+                let Some(base) = spec.get("baseline").and_then(|b| b.as_f64()) else {
+                    return Err(format!("metric {name:?}: entry must be null or have \"baseline\""));
+                };
+                gated += 1;
+                let higher = match spec.get("higher_is_better") {
+                    Some(Json::Bool(b)) => *b,
+                    _ => true,
+                };
+                let tol = spec.get("tolerance").and_then(|t| t.as_f64()).unwrap_or(global_tol);
+                match current.get(name) {
+                    None => {
+                        failures += 1;
+                        let _ = writeln!(
+                            text,
+                            "GATE FAIL  {name}: not produced by any bench output (rot?)"
+                        );
+                    }
+                    Some(&v) => {
+                        let ok = if higher {
+                            v >= base * (1.0 - tol)
+                        } else {
+                            v <= base * (1.0 + tol)
+                        };
+                        let dir = if higher { "min" } else { "max" };
+                        let bound =
+                            if higher { base * (1.0 - tol) } else { base * (1.0 + tol) };
+                        if ok {
+                            let _ = writeln!(
+                                text,
+                                "gate ok    {name} = {v:.4} (baseline {base:.4}, {dir} {bound:.4})"
+                            );
+                        } else {
+                            failures += 1;
+                            let _ = writeln!(
+                                text,
+                                "GATE FAIL  {name} = {v:.4} (baseline {base:.4}, {dir} {bound:.4})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for (name, v) in current {
+        if !metrics.contains_key(name) {
+            let _ = writeln!(text, "new        {name} = {v:.4} (not in baseline)");
+        }
+    }
+    Ok(Report { text, gated, failures })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn current_from(text: &str) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for doc in extract_json_lines(text) {
+            flatten(&doc, &mut out);
+        }
+        out
+    }
+
+    const SAMPLE: &str = r#"
+some human-readable table
+json: {"bench":"serve_throughput","clients":4,"speedup_best_v1":1.8,"results":[{"workers":1,"req_per_s":1000.0},{"workers":4,"req_per_s":1800.0}]}
+json: {"bench":"train_parallel","speedup_4v1":2.1,"results":[{"threads":4,"batch":16,"examples_per_s":5000.0}]}
+trailing noise
+"#;
+
+    #[test]
+    fn flattens_top_level_and_results() {
+        let c = current_from(SAMPLE);
+        assert_eq!(c["serve_throughput.speedup_best_v1"], 1.8);
+        assert_eq!(c["serve_throughput.clients"], 4.0);
+        assert_eq!(c["serve_throughput.workers=1.req_per_s"], 1000.0);
+        assert_eq!(c["serve_throughput.workers=4.req_per_s"], 1800.0);
+        // Multiple discriminators compose, so rows can't collide.
+        assert_eq!(c["train_parallel.threads=4.batch=16.examples_per_s"], 5000.0);
+        assert_eq!(c["train_parallel.speedup_4v1"], 2.1);
+    }
+
+    #[test]
+    fn ignores_lines_that_are_not_bench_json() {
+        let c = current_from("json: {\"no_bench_key\":1}\njson: not json at all\n");
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_fails_beyond() {
+        let c = current_from(SAMPLE);
+        // Passing: 2.1 ≥ 1.5·0.75.
+        let base = r#"{"tolerance":0.25,"metrics":{"train_parallel.speedup_4v1":{"baseline":1.5}}}"#;
+        let r = check_against_baseline(base, &c).unwrap();
+        assert_eq!(r.failures, 0);
+        assert_eq!(r.gated, 1);
+        // Failing: 2.1 < 4.0·0.75.
+        let base = r#"{"tolerance":0.25,"metrics":{"train_parallel.speedup_4v1":{"baseline":4.0}}}"#;
+        let r = check_against_baseline(base, &c).unwrap();
+        assert_eq!(r.failures, 1);
+        assert!(r.text.contains("GATE FAIL"));
+    }
+
+    #[test]
+    fn lower_is_better_direction() {
+        let mut c = BTreeMap::new();
+        c.insert("decode.viterbi_ratio".to_string(), 30.0);
+        let base = r#"{"metrics":{"decode.viterbi_ratio":{"baseline":20.0,"higher_is_better":false,"tolerance":1.0}}}"#;
+        // 30 ≤ 20·2 → ok.
+        assert_eq!(check_against_baseline(base, &c).unwrap().failures, 0);
+        c.insert("decode.viterbi_ratio".to_string(), 50.0);
+        // 50 > 40 → fail.
+        assert_eq!(check_against_baseline(base, &c).unwrap().failures, 1);
+    }
+
+    #[test]
+    fn missing_gated_metric_fails_but_null_is_record_only() {
+        let c = current_from(SAMPLE);
+        let base = r#"{"metrics":{
+            "decode.viterbi_ratio":{"baseline":20.0,"higher_is_better":false},
+            "serve_throughput.workers=1.req_per_s":null,
+            "serve_throughput.workers=9.req_per_s":null}}"#;
+        let r = check_against_baseline(base, &c).unwrap();
+        assert_eq!(r.failures, 1, "gated decode metric absent → fail");
+        assert!(r.text.contains("record"));
+        // Per-metric override of the global tolerance is honored above;
+        // malformed entries error instead of silently passing.
+        let bad = r#"{"metrics":{"x":{"note":"no baseline key"}}}"#;
+        assert!(check_against_baseline(bad, &c).is_err());
+    }
+}
