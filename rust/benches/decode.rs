@@ -4,7 +4,7 @@
 //! variants (EXPERIMENTS.md §Engine).
 
 use ltls::engine::DecodeWorkspace;
-use ltls::graph::Trellis;
+use ltls::graph::{Topology, Trellis, WideTrellis};
 use ltls::util::bench::Bench;
 use ltls::util::json::Json;
 use ltls::util::rng::Rng;
@@ -85,6 +85,26 @@ fn main() {
         println!("list_viterbi k={k} workspace speedup = {speedup:.2}x{note}");
     }
 
+    // Wide (W-LTLS) decode rows: the generic W-ary kernels at C=320338,
+    // W ∈ {4, 8}, on a reused workspace. Wider steps are fewer but each
+    // carries W² transition edges, so per-op cost grows with W — these rows
+    // are record-only in BENCH_BASELINE.json (absolute ns are
+    // machine-dependent).
+    Bench::header("wide decode (W-LTLS generic kernels, C=320338)");
+    let mut wide_rows: Vec<(u32, f64, f64)> = Vec::new();
+    for w in [4u32, 8] {
+        let t = WideTrellis::new(320338, w).unwrap();
+        let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+        let v = bench.run(&format!("wide viterbi        W={w}"), || {
+            ltls::decode::viterbi_ws(&t, std::hint::black_box(&h), &mut ws)
+        });
+        let lv = bench.run(&format!("wide list_vit k=5   W={w}"), || {
+            ltls::decode::list_viterbi_into(&t, std::hint::black_box(&h), 5, &mut ws, &mut topk);
+            topk.len()
+        });
+        wide_rows.push((w, v.mean_ns, lv.mean_ns));
+    }
+
     // Machine-readable line for the CI perf gate (tools/bench_check.rs).
     let mut fields = vec![
         ("bench".to_string(), Json::from("decode")),
@@ -98,6 +118,23 @@ fn main() {
             Json::Num(alloc.mean_ns / reused.mean_ns),
         ));
     }
-    let json = Json::Obj(fields.into_iter().collect());
+    let mut json = Json::Obj(fields.into_iter().collect());
+    if let Json::Obj(map) = &mut json {
+        map.insert(
+            "results".to_string(),
+            Json::Arr(
+                wide_rows
+                    .iter()
+                    .map(|&(w, v_ns, lv_ns)| {
+                        Json::obj(vec![
+                            ("width", Json::from(w as usize)),
+                            ("viterbi_ns", Json::Num(v_ns)),
+                            ("list_viterbi_k5_ns", Json::Num(lv_ns)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+    }
     println!("json: {}", json.dump());
 }

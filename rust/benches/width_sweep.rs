@@ -1,0 +1,119 @@
+//! W-LTLS width sweep: the accuracy / parameters / latency tradeoff curve
+//! for W ∈ {2, 4, 8, 16} on the synthetic dataset (Evron et al., 2018:
+//! widening the trellis trades a modest parameter increase for large
+//! accuracy gains — turning the paper's single width-2 point into a dial).
+//!
+//! Every width trains the same generic stack (`Trainer<WideTrellis>`), so
+//! the sweep isolates the topology. Prints a human table and a
+//! machine-readable `json:` line compatible with `tools/bench_check.rs`
+//! (`width` is a result discriminator → `width_sweep.width=4.p1` etc.).
+//! `BENCH_FAST=1` trims examples and epochs for CI smoke runs.
+//!
+//! Hard-asserted shape (the acceptance claim of the wide subsystem): W=8
+//! has strictly more parameters AND strictly higher precision@1 than W=2.
+
+use ltls::data::synthetic::{SyntheticSpec, TeacherKind};
+use ltls::eval::{precision_at_1, time_predictions};
+use ltls::graph::{Topology, WideTrellis};
+use ltls::train::{TrainConfig, Trainer};
+use ltls::util::json::Json;
+use ltls::util::timer::Timer;
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let n = if fast { 5_000 } else { 15_000 };
+    let epochs = if fast { 4usize } else { 8 };
+    let c = 256usize;
+    let d = 1_500usize;
+
+    let ds = SyntheticSpec::multiclass(n, d, c)
+        .teacher(TeacherKind::Cluster)
+        .seed(31)
+        .generate();
+    let (train, test) = ltls::data::split::random_split(&ds, 0.2, 7);
+
+    println!(
+        "== W-LTLS width sweep (C={c}, D={d}, {} train / {} test, {epochs} epochs) ==",
+        train.n_examples(),
+        test.n_examples()
+    );
+    println!(
+        "{:<8}{:>8}{:>8}{:>12}{:>10}{:>12}{:>12}",
+        "width", "steps", "edges", "params", "p@1", "train s", "predict µs"
+    );
+
+    // (width, steps, edges, params, p1, train_s, predict_us)
+    let mut rows: Vec<(u32, u32, usize, usize, f64, f64, f64)> = Vec::new();
+    for width in [2u32, 4, 8, 16] {
+        let cfg = TrainConfig { width, ..TrainConfig::default() };
+        let mut tr = Trainer::<WideTrellis>::with_topology(cfg, ds.n_features, ds.n_labels)
+            .expect("width sweep config is valid");
+        let timer = Timer::new();
+        tr.fit(&train, epochs);
+        let train_s = timer.elapsed_s();
+        let model = tr.into_model();
+        let p1 = precision_at_1(&model, &test);
+        let t = time_predictions(&model, &test, 1);
+        let (steps, edges, params) = (
+            model.trellis.steps(),
+            model.trellis.num_edges(),
+            model.model.param_count(),
+        );
+        println!(
+            "{width:<8}{steps:>8}{edges:>8}{params:>12}{p1:>10.4}{train_s:>12.2}{:>12.1}",
+            t.per_example_us
+        );
+        rows.push((width, steps, edges, params, p1, train_s, t.per_example_us));
+    }
+
+    // The tradeoff shape this subsystem exists for: parameters strictly
+    // increase with width, and W=8 buys strictly higher accuracy than the
+    // paper's W=2 point.
+    for pair in rows.windows(2) {
+        assert!(
+            pair[1].3 > pair[0].3,
+            "params not strictly increasing: W={} has {} vs W={} has {}",
+            pair[1].0,
+            pair[1].3,
+            pair[0].0,
+            pair[0].3
+        );
+    }
+    let p1_w2 = rows[0].4;
+    let p1_w8 = rows.iter().find(|r| r.0 == 8).unwrap().4;
+    assert!(
+        p1_w8 > p1_w2,
+        "W=8 accuracy {p1_w8} not strictly above W=2 {p1_w2}"
+    );
+    println!("\naccuracy gain W=8 over W=2: {:+.4} p@1", p1_w8 - p1_w2);
+    println!(
+        "parameter cost W=8 over W=2: {:.2}x",
+        rows.iter().find(|r| r.0 == 8).unwrap().3 as f64 / rows[0].3 as f64
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("width_sweep")),
+        ("classes", Json::from(c)),
+        ("epochs", Json::from(epochs)),
+        ("p1_gain_8v2", Json::Num(p1_w8 - p1_w2)),
+        (
+            "results",
+            Json::Arr(
+                rows.iter()
+                    .map(|&(w, steps, edges, params, p1, train_s, pred_us)| {
+                        Json::obj(vec![
+                            ("width", Json::from(w as usize)),
+                            ("steps", Json::from(steps as usize)),
+                            ("edges", Json::from(edges)),
+                            ("params", Json::from(params)),
+                            ("p1", Json::Num(p1)),
+                            ("train_s", Json::Num(train_s)),
+                            ("predict_us", Json::Num(pred_us)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    println!("json: {}", json.dump());
+}

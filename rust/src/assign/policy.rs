@@ -2,7 +2,7 @@
 
 use super::table::AssignmentTable;
 use crate::decode::list_viterbi;
-use crate::graph::Trellis;
+use crate::graph::Topology;
 use crate::util::rng::Rng;
 
 /// Which policy to use when an unseen label arrives.
@@ -31,11 +31,14 @@ pub struct Assigner {
 }
 
 impl Assigner {
-    pub fn new(policy: AssignPolicy, n_labels: usize, t: &Trellis, seed: u64) -> Self {
-        let m = (4 * crate::util::ceil_log2(t.c) as usize).clamp(4, 64);
+    /// New assigner over any [`Topology`] (the policy only needs the path
+    /// count and a top-m decode).
+    pub fn new<T: Topology>(policy: AssignPolicy, n_labels: usize, t: &T, seed: u64) -> Self {
+        let c = t.c();
+        let m = (4 * crate::util::ceil_log2(c) as usize).clamp(4, 64);
         Assigner {
             policy,
-            table: AssignmentTable::new(n_labels, t.c),
+            table: AssignmentTable::new(n_labels, c),
             m,
             rng: Rng::new(seed ^ 0xA551_6E),
             random_fallbacks: 0,
@@ -44,7 +47,7 @@ impl Assigner {
 
     /// Path for `label`, assigning it now (using the example's edge scores
     /// `h`) if it was never seen before.
-    pub fn path_for(&mut self, t: &Trellis, h: &[f32], label: u32) -> u64 {
+    pub fn path_for<T: Topology>(&mut self, t: &T, h: &[f32], label: u32) -> u64 {
         if let Some(p) = self.table.path_of(label) {
             return p;
         }
@@ -77,7 +80,7 @@ impl Assigner {
     }
 
     /// Paths for a label set (multilabel): assigns any unseen ones.
-    pub fn paths_for(&mut self, t: &Trellis, h: &[f32], labels: &[u32]) -> Vec<u64> {
+    pub fn paths_for<T: Topology>(&mut self, t: &T, h: &[f32], labels: &[u32]) -> Vec<u64> {
         labels.iter().map(|&l| self.path_for(t, h, l)).collect()
     }
 }
@@ -85,6 +88,7 @@ impl Assigner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::Trellis;
     use crate::util::rng::Rng as TRng;
 
     fn scores(t: &Trellis, seed: u64) -> Vec<f32> {

@@ -108,9 +108,13 @@ impl<P: crate::eval::Predictor + Send + Sync + 'static> BatchModel for SparsePat
 /// micro-batch ([`crate::model::LinearEdgeModel::edge_scores_batch`]),
 /// then each row is list-Viterbi-decoded from the shared score matrix —
 /// all on the worker's scratch. Bit-identical to the per-example path.
-pub struct BatchedLtls(pub crate::train::TrainedModel);
+/// Generic over the graph topology, so wide (W-LTLS) models serve through
+/// the same multi-worker pool.
+pub struct BatchedLtls<T: crate::graph::Topology = crate::graph::Trellis>(
+    pub crate::train::TrainedModel<T>,
+);
 
-impl BatchModel for BatchedLtls {
+impl<T: crate::graph::Topology> BatchModel for BatchedLtls<T> {
     fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
         let mut out = Vec::with_capacity(batch.len());
         self.predict_batch_into(batch, &mut PredictScratch::new(), &mut out);
@@ -132,7 +136,7 @@ impl BatchModel for BatchedLtls {
         self.0.model.edge_scores_batch(&rows, &mut scratch.batch_gather, &mut scratch.batch_h);
         for (i, r) in batch.iter().enumerate() {
             let h = &scratch.batch_h[i * e..(i + 1) * e];
-            let fetch = (r.k + 8).min(self.0.trellis.c as usize);
+            let fetch = (r.k + 8).min(crate::graph::Topology::c(&self.0.trellis) as usize);
             crate::decode::list_viterbi_into(
                 &self.0.trellis,
                 h,

@@ -14,7 +14,7 @@
 //! are thin wrappers.
 
 use crate::engine::DecodeWorkspace;
-use crate::graph::Trellis;
+use crate::graph::{Topology, Trellis};
 use crate::util::{logaddexp, logsumexp};
 
 /// Terminal quantities of the forward pass (alpha and per-exit terms live
@@ -63,20 +63,38 @@ fn forward_into(t: &Trellis, h: &[f32], ws: &mut DecodeWorkspace) -> ForwardTerm
 }
 
 /// Log-partition function `log Σ_paths exp(path score)` reusing the
-/// workspace. Allocation-free after warm-up.
-pub fn log_partition_ws(t: &Trellis, h: &[f32], ws: &mut DecodeWorkspace) -> f32 {
-    forward_into(t, h, ws).logz
+/// workspace, over any [`Topology`] (width-2 dispatches to the specialized
+/// kernel). Allocation-free after warm-up.
+pub fn log_partition_ws<T: Topology>(t: &T, h: &[f32], ws: &mut DecodeWorkspace) -> f32 {
+    match t.as_binary() {
+        Some(bt) => forward_into(bt, h, ws).logz,
+        None => super::generic::log_partition_generic(t, h, ws),
+    }
 }
 
 /// Allocating wrapper over [`log_partition_ws`].
-pub fn log_partition(t: &Trellis, h: &[f32]) -> f32 {
+pub fn log_partition<T: Topology>(t: &T, h: &[f32]) -> f32 {
     log_partition_ws(t, h, &mut DecodeWorkspace::new())
 }
 
 /// Posterior edge marginals `P(e ∈ s | x)` under the trellis softmax,
 /// written into `out` (length `E`, summing per edge-cut to 1), reusing
-/// the workspace's alpha/beta tables. Allocation-free after warm-up.
-pub fn posterior_marginals_into(
+/// the workspace's alpha/beta tables, over any [`Topology`].
+/// Allocation-free after warm-up.
+pub fn posterior_marginals_into<T: Topology>(
+    t: &T,
+    h: &[f32],
+    ws: &mut DecodeWorkspace,
+    out: &mut Vec<f32>,
+) {
+    match t.as_binary() {
+        Some(bt) => posterior_marginals_binary_into(bt, h, ws, out),
+        None => super::generic::posterior_marginals_generic(t, h, ws, out),
+    }
+}
+
+/// The width-2 specialized backward pass + marginal assembly.
+pub(crate) fn posterior_marginals_binary_into(
     t: &Trellis,
     h: &[f32],
     ws: &mut DecodeWorkspace,
@@ -144,7 +162,7 @@ pub fn posterior_marginals_into(
 }
 
 /// Allocating wrapper over [`posterior_marginals_into`].
-pub fn posterior_marginals(t: &Trellis, h: &[f32]) -> Vec<f32> {
+pub fn posterior_marginals<T: Topology>(t: &T, h: &[f32]) -> Vec<f32> {
     let mut out = Vec::new();
     posterior_marginals_into(t, h, &mut DecodeWorkspace::new(), &mut out);
     out

@@ -1,0 +1,358 @@
+//! Width-generic dynamic-programming decoders over any [`Topology`]
+//! (paper §3/§5 generalized to W states per step, after Evron et al. 2018).
+//!
+//! These are the decode engines for [`crate::graph::WideTrellis`] (and any
+//! future topology): top-1 Viterbi in `O(E)`, top-k list-Viterbi in
+//! `O(k·E·log(Wk))`, and forward–backward in `O(E)`. The canonical width-2
+//! [`crate::graph::Trellis`] keeps its register-specialized kernels (see
+//! [`Topology::as_binary`]); `rust/tests/wide_parity.rs` pins the two code
+//! paths path-for-path identical at `W = 2`.
+//!
+//! All DP state lives in the caller's [`DecodeWorkspace`] (the `w*`
+//! buffers), so decoding is allocation-free after warm-up — the same
+//! engine contract as the width-2 kernels.
+
+use super::Scored;
+use crate::engine::DecodeWorkspace;
+use crate::graph::topology::{ExitGroup, Topology};
+use crate::util::{logaddexp, logsumexp};
+
+/// Order-independent best-candidate fold: max score, smaller label on ties
+/// (the ordering of the dense `PathMatrix::topk` oracle).
+#[inline]
+fn consider(best: &mut Option<(f32, u64)>, score: f32, label: u64) {
+    let better = match best {
+        None => true,
+        Some((s, l)) => score > *s || (score == *s && label < *l),
+    };
+    if better {
+        *best = Some((score, label));
+    }
+}
+
+/// Label of the exit at `state s` of `group`, given the packed mixed-radix
+/// prefix code of the state-s DP cell at the group's step (`pv = W^(step−1)`).
+#[inline]
+fn exit_label(g: &ExitGroup, s: u32, code: u64, pv: u64) -> u64 {
+    let prefix = code - s as u64 * pv;
+    debug_assert!(prefix < g.paths_per_state);
+    g.label_base + (s as u64 - 1) * g.paths_per_state + prefix
+}
+
+/// Top-1 Viterbi over a width-W topology, on the workspace's generic DP
+/// registers. Allocation-free after warm-up.
+pub fn viterbi_generic<T: Topology>(t: &T, h: &[f32], ws: &mut DecodeWorkspace) -> Scored {
+    debug_assert_eq!(h.len(), t.num_edges());
+    let w = t.width() as usize;
+    let wu = t.width() as u64;
+    let b = t.steps();
+
+    ws.wscore.clear();
+    ws.wcode.clear();
+    for s in 0..w {
+        ws.wscore.push(h[t.source(s as u32) as usize]);
+        ws.wcode.push(s as u64);
+    }
+
+    let groups = t.exit_groups();
+    let mut gi = 0usize;
+    let mut pv = 1u64; // W^(j−1) while at step j
+    let mut best: Option<(f32, u64)> = None;
+
+    if gi < groups.len() && groups[gi].step == 1 {
+        let g = &groups[gi];
+        for s in 1..=g.digit {
+            let label = exit_label(g, s, ws.wcode[s as usize], pv);
+            let score = ws.wscore[s as usize] + h[(g.edge_base + s - 1) as usize];
+            consider(&mut best, score, label);
+        }
+        gi += 1;
+    }
+
+    for j in 2..=b {
+        pv *= wu;
+        ws.wscore_next.clear();
+        ws.wcode_next.clear();
+        for ts in 0..w {
+            // Max over predecessors; strict > keeps the earliest state on
+            // ties (the width-2 kernel's tie-break).
+            let mut bs = f32::NEG_INFINITY;
+            let mut bc = 0u64;
+            for a in 0..w {
+                let v = ws.wscore[a] + h[t.transition(j, a as u32, ts as u32) as usize];
+                if v > bs {
+                    bs = v;
+                    bc = ws.wcode[a];
+                }
+            }
+            ws.wscore_next.push(bs);
+            ws.wcode_next.push(bc + ts as u64 * pv);
+        }
+        std::mem::swap(&mut ws.wscore, &mut ws.wscore_next);
+        std::mem::swap(&mut ws.wcode, &mut ws.wcode_next);
+
+        if gi < groups.len() && groups[gi].step == j {
+            let g = &groups[gi];
+            for s in 1..=g.digit {
+                let label = exit_label(g, s, ws.wcode[s as usize], pv);
+                let score = ws.wscore[s as usize] + h[(g.edge_base + s - 1) as usize];
+                consider(&mut best, score, label);
+            }
+            gi += 1;
+        }
+    }
+
+    // Full paths: every (aux copy m, final state s) pair.
+    let full_per_sink = pv * wu; // W^b
+    for m in 0..t.n_aux_sinks() {
+        let sink = h[t.aux_sink(m) as usize];
+        for s in 0..w {
+            let total = ws.wscore[s] + h[t.aux(s as u32) as usize] + sink;
+            consider(&mut best, total, m as u64 * full_per_sink + ws.wcode[s]);
+        }
+    }
+
+    let (score, label) = best.expect("trellis always has paths");
+    Scored { label, score }
+}
+
+/// Emit the exit completions of the current per-state k-best lists at the
+/// group for step `j` (if any) into `out`.
+#[allow(clippy::too_many_arguments)]
+fn push_exits_generic(
+    groups: &[ExitGroup],
+    gi: &mut usize,
+    j: u32,
+    pv: u64,
+    h: &[f32],
+    k: usize,
+    lists: &[Vec<(f32, u64)>],
+    out: &mut Vec<Scored>,
+) {
+    if *gi < groups.len() && groups[*gi].step == j {
+        let g = &groups[*gi];
+        for s in 1..=g.digit {
+            let edge = h[(g.edge_base + s - 1) as usize];
+            for &(score, code) in lists[s as usize].iter().take(k) {
+                out.push(Scored { label: exit_label(g, s, code, pv), score: score + edge });
+            }
+        }
+        *gi += 1;
+    }
+}
+
+/// Top-k list-Viterbi over a width-W topology into `out`, descending by
+/// score (ties → smaller label). `out` receives `min(k, C)` results.
+/// Allocation-free after warm-up.
+pub fn list_viterbi_generic<T: Topology>(
+    t: &T,
+    h: &[f32],
+    k: usize,
+    ws: &mut DecodeWorkspace,
+    out: &mut Vec<Scored>,
+) {
+    debug_assert_eq!(h.len(), t.num_edges());
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    let k = k.min(t.c() as usize);
+    let w = t.width() as usize;
+    let wu = t.width() as u64;
+    let b = t.steps();
+
+    if ws.wlists.len() < w {
+        ws.wlists.resize_with(w, Vec::new);
+    }
+    if ws.wnext.len() < w {
+        ws.wnext.resize_with(w, Vec::new);
+    }
+    for s in 0..w {
+        ws.wlists[s].clear();
+        ws.wlists[s].push((h[t.source(s as u32) as usize], s as u64));
+    }
+
+    let groups = t.exit_groups();
+    let mut gi = 0usize;
+    let mut pv = 1u64;
+    push_exits_generic(groups, &mut gi, 1, pv, h, k, &ws.wlists, out);
+
+    for j in 2..=b {
+        pv *= wu;
+        for ts in 0..w {
+            // Gather all predecessor candidates, keep the k best. Sorted by
+            // (score desc, code asc) so truncation ties resolve to the
+            // smaller prefix code, matching the final output ordering.
+            ws.wcand.clear();
+            for a in 0..w {
+                let e = h[t.transition(j, a as u32, ts as u32) as usize];
+                for &(score, code) in ws.wlists[a].iter().take(k) {
+                    ws.wcand.push((score + e, code));
+                }
+            }
+            ws.wcand
+                .sort_unstable_by(|x, y| y.0.partial_cmp(&x.0).unwrap().then(x.1.cmp(&y.1)));
+            ws.wcand.truncate(k);
+            let dst = &mut ws.wnext[ts];
+            dst.clear();
+            dst.extend(ws.wcand.iter().map(|&(score, code)| (score, code + ts as u64 * pv)));
+        }
+        std::mem::swap(&mut ws.wlists, &mut ws.wnext);
+        push_exits_generic(groups, &mut gi, j, pv, h, k, &ws.wlists, out);
+    }
+
+    let full_per_sink = pv * wu;
+    for m in 0..t.n_aux_sinks() {
+        let sink = h[t.aux_sink(m) as usize];
+        for s in 0..w {
+            let add = h[t.aux(s as u32) as usize] + sink;
+            for &(score, code) in ws.wlists[s].iter().take(k) {
+                out.push(Scored {
+                    label: m as u64 * full_per_sink + code,
+                    score: score + add,
+                });
+            }
+        }
+    }
+
+    out.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap().then(a.label.cmp(&b.label)));
+    out.dedup_by_key(|s| s.label); // labels are distinct; belt & braces
+    out.truncate(k);
+}
+
+/// Forward pass over a width-W topology: fills `ws.walpha`
+/// (`walpha[(j−1)·W + s]` = log-sum of prefix scores into (step j, state
+/// s)), `ws.exit_terms` and `ws.terms` (exit terms then full terms, the
+/// width-2 kernel's order); returns `log Z`.
+fn forward_generic<T: Topology>(t: &T, h: &[f32], ws: &mut DecodeWorkspace) -> f32 {
+    let w = t.width() as usize;
+    let b = t.steps() as usize;
+
+    ws.walpha.clear();
+    for s in 0..w {
+        ws.walpha.push(h[t.source(s as u32) as usize]);
+    }
+    for j in 2..=b as u32 {
+        let base = (j as usize - 2) * w;
+        for ts in 0..w {
+            ws.wtmp.clear();
+            for a in 0..w {
+                ws.wtmp
+                    .push(ws.walpha[base + a] + h[t.transition(j, a as u32, ts as u32) as usize]);
+            }
+            let v = logsumexp(&ws.wtmp);
+            ws.walpha.push(v);
+        }
+    }
+
+    ws.exit_terms.clear();
+    for g in t.exit_groups() {
+        let row = (g.step as usize - 1) * w;
+        for s in 1..=g.digit {
+            ws.exit_terms
+                .push(ws.walpha[row + s as usize] + h[(g.edge_base + s - 1) as usize]);
+        }
+    }
+
+    ws.terms.clear();
+    ws.terms.extend_from_slice(&ws.exit_terms);
+    let last = (b - 1) * w;
+    for m in 0..t.n_aux_sinks() {
+        let sink = h[t.aux_sink(m) as usize];
+        for s in 0..w {
+            ws.terms.push(ws.walpha[last + s] + h[t.aux(s as u32) as usize] + sink);
+        }
+    }
+    logsumexp(&ws.terms)
+}
+
+/// Log-partition function over a width-W topology. Allocation-free after
+/// warm-up.
+pub fn log_partition_generic<T: Topology>(t: &T, h: &[f32], ws: &mut DecodeWorkspace) -> f32 {
+    forward_generic(t, h, ws)
+}
+
+/// Posterior edge marginals over a width-W topology into `out` (length E).
+/// Allocation-free after warm-up.
+pub fn posterior_marginals_generic<T: Topology>(
+    t: &T,
+    h: &[f32],
+    ws: &mut DecodeWorkspace,
+    out: &mut Vec<f32>,
+) {
+    let w = t.width() as usize;
+    let b = t.steps() as usize;
+    let logz = forward_generic(t, h, ws);
+
+    // Backward pass: wbeta[(j−1)·W + s] = log-sum over suffixes from
+    // (step j, state s) to the sink, including terminal edges.
+    ws.wbeta.clear();
+    ws.wbeta.resize(b * w, f32::NEG_INFINITY);
+    ws.wtmp.clear();
+    for m in 0..t.n_aux_sinks() {
+        ws.wtmp.push(h[t.aux_sink(m) as usize]);
+    }
+    let sink_sum = logsumexp(&ws.wtmp);
+    let last = (b - 1) * w;
+    for s in 0..w {
+        ws.wbeta[last + s] = h[t.aux(s as u32) as usize] + sink_sum;
+    }
+    for g in t.exit_groups() {
+        let row = (g.step as usize - 1) * w;
+        for s in 1..=g.digit {
+            let cell = &mut ws.wbeta[row + s as usize];
+            *cell = logaddexp(*cell, h[(g.edge_base + s - 1) as usize]);
+        }
+    }
+    for j in (1..b).rev() {
+        let step = (j + 1) as u32;
+        for a in 0..w {
+            ws.wtmp.clear();
+            for ts in 0..w {
+                ws.wtmp
+                    .push(h[t.transition(step, a as u32, ts as u32) as usize] + ws.wbeta[j * w + ts]);
+            }
+            let v = logsumexp(&ws.wtmp);
+            let cell = &mut ws.wbeta[(j - 1) * w + a];
+            *cell = logaddexp(*cell, v);
+        }
+    }
+
+    out.clear();
+    out.resize(t.num_edges(), 0.0);
+    for s in 0..w {
+        let e = t.source(s as u32) as usize;
+        out[e] = (h[e] + ws.wbeta[s] - logz).exp();
+    }
+    for j in 2..=b as u32 {
+        for a in 0..w {
+            for ts in 0..w {
+                let e = t.transition(j, a as u32, ts as u32) as usize;
+                out[e] = (ws.walpha[(j as usize - 2) * w + a]
+                    + h[e]
+                    + ws.wbeta[(j as usize - 1) * w + ts]
+                    - logz)
+                    .exp();
+            }
+        }
+    }
+    // Aux collectors and the parallel aux→sink copies.
+    for m in 0..t.n_aux_sinks() {
+        let sink_e = t.aux_sink(m) as usize;
+        let mut total = 0.0f32;
+        for s in 0..w {
+            let p = (ws.walpha[last + s] + h[t.aux(s as u32) as usize] + h[sink_e] - logz).exp();
+            out[t.aux(s as u32) as usize] += p;
+            total += p;
+        }
+        out[sink_e] = total;
+    }
+    // Exit edges.
+    let mut ti = 0usize;
+    for g in t.exit_groups() {
+        for s in 1..=g.digit {
+            out[(g.edge_base + s - 1) as usize] = (ws.exit_terms[ti] - logz).exp();
+            ti += 1;
+        }
+    }
+}

@@ -11,7 +11,7 @@
 
 use super::Scored;
 use crate::engine::DecodeWorkspace;
-use crate::graph::Trellis;
+use crate::graph::{Topology, Trellis};
 
 /// Merge two descending `(score, code)` lists, each first adding
 /// `add0` / `add1`, keeping the best `k`.
@@ -77,7 +77,26 @@ fn push_exits(
 /// Top-k highest-scoring paths for edge scores `h` into `out`, descending
 /// by score (ties → smaller label), reusing the workspace buffers.
 /// `out` receives `min(k, C)` results. Allocation-free after warm-up.
-pub fn list_viterbi_into(
+///
+/// Works over any [`Topology`]: the width-2 [`Trellis`] dispatches to the
+/// two-list merge kernel below; other widths run the generic W-ary beam
+/// ([`crate::decode::generic`]).
+pub fn list_viterbi_into<T: Topology>(
+    t: &T,
+    h: &[f32],
+    k: usize,
+    ws: &mut DecodeWorkspace,
+    out: &mut Vec<Scored>,
+) {
+    match t.as_binary() {
+        Some(bt) => list_viterbi_binary_into(bt, h, k, ws, out),
+        None => super::generic::list_viterbi_generic(t, h, k, ws, out),
+    }
+}
+
+/// The width-2 specialized kernel (two sorted per-state lists, O(k) merge
+/// per step).
+pub(crate) fn list_viterbi_binary_into(
     t: &Trellis,
     h: &[f32],
     k: usize,
@@ -135,7 +154,7 @@ pub fn list_viterbi_into(
 /// Allocating wrapper over [`list_viterbi_into`]: top-k highest-scoring
 /// paths, descending by score (ties → smaller label). Returns
 /// `min(k, C)` results.
-pub fn list_viterbi(t: &Trellis, h: &[f32], k: usize) -> Vec<Scored> {
+pub fn list_viterbi<T: Topology>(t: &T, h: &[f32], k: usize) -> Vec<Scored> {
     let mut ws = DecodeWorkspace::new();
     let mut out = Vec::new();
     list_viterbi_into(t, h, k, &mut ws, &mut out);

@@ -16,8 +16,17 @@
 //! [`posterior_marginals_into`], [`log_partition_ws`], [`viterbi_into`])
 //! running on a caller-owned [`crate::engine::DecodeWorkspace`] with zero
 //! steady-state allocation; the classic names are thin wrappers over them.
+//!
+//! Every entry point is generic over [`crate::graph::Topology`]: the
+//! canonical width-2 [`crate::graph::Trellis`] dispatches to the
+//! register-specialized kernels in this module, while the
+//! width-parameterized [`crate::graph::WideTrellis`] (and any other
+//! topology) runs the W-ary implementations in [`generic`]. The two code
+//! paths are pinned path-for-path identical at `W = 2` by
+//! `rust/tests/wide_parity.rs`.
 
 pub mod forward_backward;
+pub mod generic;
 pub mod list_viterbi;
 pub mod score;
 pub mod viterbi;
@@ -27,7 +36,7 @@ pub use forward_backward::{
 };
 pub use list_viterbi::{list_viterbi, list_viterbi_into};
 pub use score::{score_label, score_labels};
-pub use viterbi::{viterbi, viterbi_into};
+pub use viterbi::{viterbi, viterbi_into, viterbi_ws};
 
 /// A decoded prediction: label (canonical path id) and its path score.
 #[derive(Clone, Copy, Debug, PartialEq)]

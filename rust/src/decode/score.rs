@@ -1,16 +1,16 @@
 //! `O(log C)` scoring of known labels (paper §5: "Getting a score
 //! F(·, s(ℓ), w) for a given label ℓ is O(E)").
 
-use crate::graph::codec::edges_of_label;
-use crate::graph::Trellis;
+use crate::graph::Topology;
 
-/// Score one label's path: sum of its edge scores.
-pub fn score_label(t: &Trellis, h: &[f32], label: u64) -> f32 {
-    edges_of_label(t, label).iter().map(|&e| h[e as usize]).sum()
+/// Score one label's path: sum of its edge scores. Works over any
+/// [`Topology`] through its label → edge-set codec.
+pub fn score_label<T: Topology>(t: &T, h: &[f32], label: u64) -> f32 {
+    t.edges_of_label(label).iter().map(|&e| h[e as usize]).sum()
 }
 
 /// Score several labels (multilabel positives; |P| ≪ C).
-pub fn score_labels(t: &Trellis, h: &[f32], labels: &[u64]) -> Vec<f32> {
+pub fn score_labels<T: Topology>(t: &T, h: &[f32], labels: &[u64]) -> Vec<f32> {
     labels.iter().map(|&l| score_label(t, h, l)).collect()
 }
 

@@ -5,15 +5,35 @@
 //! hot path.
 
 use super::Scored;
+use crate::engine::DecodeWorkspace;
 use crate::graph::codec::{label_of_path, Path};
-use crate::graph::Trellis;
+use crate::graph::{Topology, Trellis};
 
-/// Find the highest-scoring source→sink path for edge scores `h`.
+/// Find the highest-scoring source→sink path for edge scores `h`, over any
+/// topology. The canonical width-2 [`Trellis`] dispatches to the
+/// register-specialized kernel below; other topologies run the generic
+/// W-ary DP ([`crate::decode::generic`]).
 ///
 /// Ties are broken toward the *smaller canonical label* so results are
 /// deterministic and match the [`crate::graph::pathmat::PathMatrix::topk`]
 /// oracle's ordering.
-pub fn viterbi(t: &Trellis, h: &[f32]) -> Scored {
+pub fn viterbi<T: Topology>(t: &T, h: &[f32]) -> Scored {
+    viterbi_ws(t, h, &mut DecodeWorkspace::new())
+}
+
+/// Workspace variant of [`viterbi`]: the generic W-ary path keeps its DP
+/// registers in `ws` and is allocation-free after warm-up (the width-2
+/// kernel needs no buffers at all).
+pub fn viterbi_ws<T: Topology>(t: &T, h: &[f32], ws: &mut DecodeWorkspace) -> Scored {
+    match t.as_binary() {
+        Some(bt) => viterbi_binary(bt, h),
+        None => super::generic::viterbi_generic(t, h, ws),
+    }
+}
+
+/// The width-2 specialized kernel: the DP state is two running scores plus
+/// backpointer bits packed in a `u64` — no allocation on the hot path.
+pub(crate) fn viterbi_binary(t: &Trellis, h: &[f32]) -> Scored {
     debug_assert_eq!(h.len(), t.num_edges());
     let b = t.steps;
 
@@ -89,11 +109,12 @@ pub fn viterbi(t: &Trellis, h: &[f32]) -> Scored {
 }
 
 /// Out-parameter twin of [`viterbi`] for API symmetry with the other
-/// `_into` decoders. Top-1 Viterbi is already allocation-free (the DP
-/// state is two score registers plus packed backpointer bits), so this
-/// simply writes the result through `out`.
+/// `_into` decoders. The width-2 kernel is allocation-free here (its DP
+/// state is two score registers plus packed backpointer bits); wide
+/// topologies need DP buffers, so hot loops over a `WideTrellis` should
+/// call [`viterbi_ws`] with a reused workspace instead.
 #[inline]
-pub fn viterbi_into(t: &Trellis, h: &[f32], out: &mut Scored) {
+pub fn viterbi_into<T: Topology>(t: &T, h: &[f32], out: &mut Scored) {
     *out = viterbi(t, h);
 }
 

@@ -26,6 +26,27 @@ pub struct DecodeWorkspace {
     pub(crate) exit_terms: Vec<f32>,
     /// Terminal-term gather buffer for the log-partition logsumexp.
     pub(crate) terms: Vec<f32>,
+
+    // ---- Width-generic (W-LTLS) decoder buffers. The width-2 kernels ----
+    // ---- above keep their fixed-arity state; a topology of width W    ----
+    // ---- runs the generic decoders in `crate::decode::generic`, which ----
+    // ---- keep their per-state DP registers here.                      ----
+    /// Generic Viterbi: per-state best score / packed mixed-radix code.
+    pub(crate) wscore: Vec<f32>,
+    pub(crate) wcode: Vec<u64>,
+    pub(crate) wscore_next: Vec<f32>,
+    pub(crate) wcode_next: Vec<u64>,
+    /// Generic list-Viterbi: per-state k-best prefix lists (W lists) and
+    /// their next-step targets (swapped each step).
+    pub(crate) wlists: Vec<Vec<(f32, u64)>>,
+    pub(crate) wnext: Vec<Vec<(f32, u64)>>,
+    /// Generic list-Viterbi: merge candidate buffer (up to W·k entries).
+    pub(crate) wcand: Vec<(f32, u64)>,
+    /// Generic forward/backward tables, `steps × W` row-major.
+    pub(crate) walpha: Vec<f32>,
+    pub(crate) wbeta: Vec<f32>,
+    /// Generic logsumexp gather scratch (W entries).
+    pub(crate) wtmp: Vec<f32>,
 }
 
 impl DecodeWorkspace {
@@ -43,6 +64,31 @@ impl DecodeWorkspace {
         self.beta.reserve(steps);
         self.exit_terms.reserve(steps);
         self.terms.reserve(steps + 2);
+    }
+
+    /// Pre-size the width-generic buffers for a `width × steps` topology
+    /// and top-`k` decoding, so even the first generic decode is
+    /// allocation-free.
+    pub fn reserve_wide(&mut self, width: usize, steps: usize, k: usize) {
+        for v in [&mut self.wscore, &mut self.wscore_next, &mut self.wtmp] {
+            v.reserve(width);
+        }
+        self.wcode.reserve(width);
+        self.wcode_next.reserve(width);
+        if self.wlists.len() < width {
+            self.wlists.resize_with(width, Vec::new);
+        }
+        if self.wnext.len() < width {
+            self.wnext.resize_with(width, Vec::new);
+        }
+        for l in self.wlists.iter_mut().chain(self.wnext.iter_mut()) {
+            l.reserve(k);
+        }
+        self.wcand.reserve(width * k);
+        self.walpha.reserve(width * steps);
+        self.wbeta.reserve(width * steps);
+        self.exit_terms.reserve(steps * width);
+        self.terms.reserve(steps * width + width);
     }
 }
 
@@ -88,6 +134,10 @@ pub struct TrainScratch {
     /// Positive paths of the current example (labels resolved via the
     /// assignment table).
     pub pos: Vec<u64>,
+    /// Full edge sets of the loss pair (positive / negative path), filled
+    /// by [`crate::graph::Topology::edges_of_label_into`].
+    pub pos_edges: Vec<u32>,
+    pub neg_edges: Vec<u32>,
     /// Symmetric-difference edge sets of the loss pair.
     pub pos_only: Vec<u32>,
     pub neg_only: Vec<u32>,
@@ -129,5 +179,22 @@ mod tests {
         let s = TrainScratch::new();
         assert!(s.h.is_empty() && s.pos.is_empty() && s.batch_h.is_empty());
         assert!(s.pos_only.is_empty() && s.neg_only.is_empty());
+        assert!(s.pos_edges.is_empty() && s.neg_edges.is_empty());
+    }
+
+    #[test]
+    fn wide_reserve_is_idempotent_and_sizes_lists() {
+        let mut ws = DecodeWorkspace::new();
+        ws.reserve_wide(8, 12, 16);
+        assert_eq!(ws.wlists.len(), 8);
+        assert_eq!(ws.wnext.len(), 8);
+        assert!(ws.wlists.iter().all(|l| l.capacity() >= 16));
+        assert!(ws.walpha.capacity() >= 8 * 12);
+        let cap = ws.wcand.capacity();
+        ws.reserve_wide(8, 12, 16);
+        assert_eq!(ws.wcand.capacity(), cap);
+        // Narrower re-reserve never shrinks.
+        ws.reserve_wide(4, 6, 8);
+        assert_eq!(ws.wlists.len(), 8);
     }
 }

@@ -37,7 +37,7 @@ pub trait Predictor {
     fn name(&self) -> &str;
 }
 
-impl Predictor for crate::train::TrainedModel {
+impl<T: crate::graph::Topology> Predictor for crate::train::TrainedModel<T> {
     fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
         self.predict_topk(x, k)
     }

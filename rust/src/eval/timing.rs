@@ -49,9 +49,13 @@ pub struct EpochTiming {
 
 /// Run one training epoch through the (possibly parallel) trainer and time
 /// it. The trainer's configuration decides the execution engine — serial,
-/// Hogwild multi-worker, or mini-batch — so this one harness measures them
-/// all comparably (`benches/train_parallel.rs`).
-pub fn time_epoch(tr: &mut ParallelTrainer, ds: &Dataset) -> EpochTiming {
+/// Hogwild multi-worker, or mini-batch — and the topology decides the
+/// width, so this one harness measures them all comparably
+/// (`benches/train_parallel.rs`, `benches/width_sweep.rs`).
+pub fn time_epoch<T: crate::graph::Topology>(
+    tr: &mut ParallelTrainer<T>,
+    ds: &Dataset,
+) -> EpochTiming {
     let t = Timer::new();
     let metrics = tr.epoch(ds);
     let total_s = t.elapsed_s();

@@ -1,23 +1,25 @@
 //! Render a trellis as Graphviz DOT and as a terminal ASCII sketch —
 //! reproduces the paper's Figure 1 (graph for C=22) and the Figure 2
-//! update-trace visualization (positive/negative path edges).
+//! update-trace visualization (positive/negative path edges). Generic over
+//! [`Topology`], so wide (W-LTLS) graphs render too — reachable from the
+//! binary via `ltls graph --dot [--width W]`.
 
-use super::codec::path_of_label;
-use super::trellis::{EdgeKind, Trellis};
+use super::topology::Topology;
+use super::trellis::EdgeKind;
 
 /// Graphviz DOT of the trellis. Optional highlighted paths: (label, color).
-pub fn to_dot(t: &Trellis, highlights: &[(u64, &str)]) -> String {
+pub fn to_dot<T: Topology>(t: &T, highlights: &[(u64, &str)]) -> String {
     let mut s = String::new();
     s.push_str("digraph ltls {\n  rankdir=LR;\n  node [shape=circle];\n");
     let name = |v: u32| format!("v{v}");
     // Color map edge->color from highlighted paths (later wins).
     let mut color = vec![None; t.num_edges()];
     for (l, c) in highlights {
-        for e in path_of_label(t, *l).edges(t) {
+        for e in t.edges_of_label(*l) {
             color[e as usize] = Some(*c);
         }
     }
-    for e in t.edges() {
+    for e in t.edge_list() {
         let attr = match color[e.index as usize] {
             Some(c) => format!(" [label=\"e{}\", color={c}, penwidth=2]", e.index),
             None => format!(" [label=\"e{}\"]", e.index),
@@ -29,36 +31,51 @@ pub fn to_dot(t: &Trellis, highlights: &[(u64, &str)]) -> String {
 }
 
 /// Compact ASCII rendering of the trellis structure (one line per layer).
-pub fn to_ascii(t: &Trellis) -> String {
+pub fn to_ascii<T: Topology>(t: &T) -> String {
+    let w = t.width();
     let mut s = String::new();
     s.push_str(&format!(
-        "LTLS trellis: C={} steps={} edges={} vertices={}\n",
-        t.c,
-        t.steps,
+        "LTLS trellis: C={} W={} steps={} edges={} vertices={}\n",
+        Topology::c(t),
+        w,
+        t.steps(),
         t.num_edges(),
         t.num_vertices()
     ));
     s.push_str("  source v0\n");
-    for j in 1..=t.steps {
-        let v0 = 1 + 2 * (j - 1);
-        let exit = t
-            .exit_bits()
-            .iter()
-            .any(|&bit| bit + 1 == j)
-            .then(|| "  [state1 -> sink]")
-            .unwrap_or("");
-        s.push_str(&format!("  step {j}: v{} v{}{}\n", v0, v0 + 1, exit));
+    for j in 1..=t.steps() {
+        let v0 = 1 + w * (j - 1);
+        let states = if w <= 8 {
+            (0..w).map(|i| format!("v{}", v0 + i)).collect::<Vec<_>>().join(" ")
+        } else {
+            format!("v{}..v{}", v0, v0 + w - 1)
+        };
+        let exit = match t.exit_groups().iter().find(|g| g.step == j) {
+            Some(g) if g.digit == 1 => "  [state1 -> sink]".to_string(),
+            Some(g) => format!("  [states 1..={} -> sink]", g.digit),
+            None => String::new(),
+        };
+        s.push_str(&format!("  step {j}: {states}{exit}\n"));
     }
-    s.push_str(&format!("  aux v{} -> sink v{}\n", 1 + 2 * t.steps, 2 + 2 * t.steps));
+    let copies = match t.n_aux_sinks() {
+        1 => String::new(),
+        m => format!(" ({m} parallel edges)"),
+    };
+    s.push_str(&format!(
+        "  aux v{} -> sink v{}{}\n",
+        1 + w * t.steps(),
+        2 + w * t.steps(),
+        copies
+    ));
     s
 }
 
 /// Figure-2 style update trace: which edges get positive / negative /
 /// no updates for a (positive path, negative path) pair — the symmetric
 /// difference logic of §5.
-pub fn update_trace(t: &Trellis, pos_label: u64, neg_label: u64) -> String {
-    let pos = path_of_label(t, pos_label).edges(t);
-    let neg = path_of_label(t, neg_label).edges(t);
+pub fn update_trace<T: Topology>(t: &T, pos_label: u64, neg_label: u64) -> String {
+    let pos = t.edges_of_label(pos_label);
+    let neg = t.edges_of_label(neg_label);
     let mut s = format!("positive path (label {pos_label}): edges {pos:?}\n");
     s.push_str(&format!("negative path (label {neg_label}): edges {neg:?}\n"));
     let only_pos: Vec<_> = pos.iter().filter(|e| !neg.contains(e)).collect();
@@ -84,6 +101,7 @@ pub fn kind_name(k: &EdgeKind) -> &'static str {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::{Trellis, WideTrellis};
 
     #[test]
     fn dot_contains_all_edges() {
@@ -111,5 +129,21 @@ mod tests {
         let tr = update_trace(&t, 3, 17);
         assert!(tr.contains("positive update"));
         assert!(tr.contains("negative update"));
+    }
+
+    /// Wide graphs render: every edge appears in the DOT, the ASCII names
+    /// the width and multi-state exits.
+    #[test]
+    fn wide_graph_renders() {
+        let t = WideTrellis::new(1000, 4).unwrap();
+        let dot = to_dot(&t, &[(0, "green"), (999, "red")]);
+        for e in t.edge_list() {
+            assert!(dot.contains(&format!("e{}", e.index)));
+        }
+        let a = to_ascii(&t);
+        assert!(a.contains("C=1000"), "{a}");
+        assert!(a.contains("W=4"), "{a}");
+        let tr = update_trace(&t, 1, 998);
+        assert!(tr.contains("positive update"));
     }
 }

@@ -16,11 +16,20 @@
 //! This reproduces the paper's edge counts precisely: sector (C=105) → 28,
 //! aloi/imagenet (C=1000) → 42, LSHTC1 (C=12294) → 56, Dmoz (C=11947) → 61,
 //! bibtex (C=159) → 34, Eur-Lex (C=3956) → 52 (paper Table 3).
+//!
+//! The width-2 trellis is one point on an accuracy/size curve: the
+//! [`topology::Topology`] trait abstracts the graph shape, and
+//! [`wide::WideTrellis`] generalizes the construction to `W` states per
+//! step (W-LTLS), with `W = 2` reproducing [`Trellis`] exactly.
 
 pub mod codec;
 pub mod dot;
 pub mod pathmat;
+pub mod topology;
 pub mod trellis;
+pub mod wide;
 
 pub use codec::Path;
+pub use topology::{ExitGroup, Topology};
 pub use trellis::{Edge, EdgeKind, Trellis};
+pub use wide::{WidePath, WideTrellis};

@@ -3,8 +3,7 @@
 //! oracle decoding in unit tests, and the naive "decode by matmul"
 //! reference that the log-time decoders are validated against.
 
-use super::codec::path_of_label;
-use super::trellis::Trellis;
+use super::topology::Topology;
 
 /// Dense path matrix with row-major storage.
 pub struct PathMatrix {
@@ -14,13 +13,15 @@ pub struct PathMatrix {
 }
 
 impl PathMatrix {
-    /// Materialize `M_G` for the trellis. `O(C·E)` memory — test scale only.
-    pub fn materialize(t: &Trellis) -> Self {
-        let (c, e) = (t.c as usize, t.num_edges());
+    /// Materialize `M_G` for any topology (width-2 or wide). `O(C·E)`
+    /// memory — test scale only.
+    pub fn materialize<T: Topology>(t: &T) -> Self {
+        let (c, e) = (Topology::c(t) as usize, t.num_edges());
         let mut data = vec![0.0f32; c * e];
+        let mut edges = Vec::new();
         for l in 0..c {
-            let p = path_of_label(t, l as u64);
-            for edge in p.edges(t) {
+            t.edges_of_label_into(l as u64, &mut edges);
+            for &edge in &edges {
                 data[l * e + edge as usize] = 1.0;
             }
         }

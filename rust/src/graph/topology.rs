@@ -1,0 +1,315 @@
+//! The [`Topology`] trait: the structural interface shared by every
+//! trellis-shaped graph the system can decode, train and serve over.
+//!
+//! LTLS fixes the trellis at 2 states per step; W-LTLS (Evron et al., 2018)
+//! widens it to `W` states, trading a modest parameter increase for large
+//! accuracy gains. Everything above graph construction — the dynamic-
+//! programming decoders, the separation loss, the §5.1 assignment policy,
+//! the serial and Hogwild trainers, model persistence and the prediction
+//! server — only needs the *shape* of the graph, never its width. This
+//! trait captures that shape:
+//!
+//! * mixed-radix layout (`width`, `steps`, aux-sink multiplicity, early-exit
+//!   groups) with O(1) edge-index arithmetic, and
+//! * the label ↔ edge-set codec (`edges_of_label`).
+//!
+//! Two implementations exist: the paper's width-2 [`Trellis`] (with its
+//! hand-specialized register-based decoders — see
+//! [`Topology::as_binary`]) and the width-parameterized
+//! [`WideTrellis`](super::wide::WideTrellis), which runs on the generic
+//! W-ary decoders in [`crate::decode::generic`]. `WideTrellis` at `W = 2`
+//! is edge-for-edge and label-for-label identical to `Trellis` — pinned by
+//! `rust/tests/wide_parity.rs`.
+
+use super::trellis::{Edge, Trellis};
+
+/// One early-exit group: for digit `d_i > 0` at mixed-radix position
+/// `i = step − 1` of `C`, states `1..=d_i` of `step` each get a direct
+/// edge to the sink, adding `d_i · W^i` paths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExitGroup {
+    /// The trellis step the exits leave (exits leave states `1..=digit`).
+    pub step: u32,
+    /// The mixed-radix digit `d_i` — how many exit states/edges this group
+    /// has.
+    pub digit: u32,
+    /// Edge index of the exit leaving state `s` is `edge_base + (s − 1)`.
+    pub edge_base: u32,
+    /// First canonical label routed through this group. The exit at state
+    /// `s` with prefix code `p ∈ [0, paths_per_state)` has label
+    /// `label_base + (s − 1)·paths_per_state + p`.
+    pub label_base: u64,
+    /// Source→(step, state) path count: `W^(step−1)` prefix choices.
+    pub paths_per_state: u64,
+}
+
+impl ExitGroup {
+    /// Total paths routed through this group: `digit · paths_per_state`.
+    #[inline]
+    pub fn path_count(&self) -> u64 {
+        self.digit as u64 * self.paths_per_state
+    }
+}
+
+/// The structural interface of a trellis-shaped topology with `C`
+/// source→sink paths: `steps` fully-connected layers of `width` states,
+/// an auxiliary collector with `n_aux_sinks` parallel aux→sink edges
+/// (carrying `n_aux_sinks · width^steps` "full" paths), and early-exit
+/// groups for the lower mixed-radix digits of `C`.
+///
+/// Canonical label space: labels `[0, full_label_count())` are full paths
+/// (`label = m·W^b + Σ_j z_j·W^(j−1)` for aux copy `m` and state choices
+/// `z`); exit-group labels follow in ascending-step order.
+pub trait Topology: Clone + Send + Sync + std::fmt::Debug + 'static {
+    /// Build the topology for `c ≥ 2` classes at trellis width `width`.
+    /// Implementations reject widths they cannot represent (the width-2
+    /// [`Trellis`] errors on anything but 2; `WideTrellis` clamps
+    /// `width > c` down to `c`).
+    fn build(c: u64, width: u32) -> Result<Self, String>;
+
+    /// Number of classes / source→sink paths.
+    fn c(&self) -> u64;
+
+    /// States per trellis step.
+    fn width(&self) -> u32;
+
+    /// Number of trellis steps `b = ⌊log_W C⌋`.
+    fn steps(&self) -> u32;
+
+    /// Number of learnable edges `E`.
+    fn num_edges(&self) -> usize;
+
+    /// Number of vertices (source + W·steps + auxiliary + sink).
+    fn num_vertices(&self) -> usize {
+        3 + self.width() as usize * self.steps() as usize
+    }
+
+    /// All edges in index order.
+    fn edge_list(&self) -> &[Edge];
+
+    /// Edge index: source → (step 1, state s).
+    fn source(&self, s: u32) -> u32;
+
+    /// Edge index: (step j−1, a) → (step j, t), for `2 ≤ j ≤ steps`.
+    fn transition(&self, j: u32, a: u32, t: u32) -> u32;
+
+    /// Edge index: (step b, state s) → auxiliary.
+    fn aux(&self, s: u32) -> u32;
+
+    /// Number of parallel auxiliary→sink edges (`d_b`, the leading
+    /// mixed-radix digit of C; 1 for the width-2 trellis).
+    fn n_aux_sinks(&self) -> u32;
+
+    /// Edge index of auxiliary→sink copy `m < n_aux_sinks()`.
+    fn aux_sink(&self, m: u32) -> u32;
+
+    /// Early-exit groups in ascending-step (= ascending label-base) order.
+    fn exit_groups(&self) -> &[ExitGroup];
+
+    /// Number of labels decoded through the auxiliary collector:
+    /// `n_aux_sinks · width^steps`. Labels at or above this index route
+    /// through an exit group.
+    fn full_label_count(&self) -> u64;
+
+    /// Edge indices of label `l`'s path, source→sink order, into `out`.
+    fn edges_of_label_into(&self, label: u64, out: &mut Vec<u32>);
+
+    /// Allocating wrapper over [`Self::edges_of_label_into`].
+    fn edges_of_label(&self, label: u64) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.steps() as usize + 2);
+        self.edges_of_label_into(label, &mut out);
+        out
+    }
+
+    /// Learnable parameters for a linear edge model with `d` features
+    /// (the paper's "model size [M]" accounting).
+    fn linear_param_count(&self, d: usize) -> usize {
+        self.num_edges() * d
+    }
+
+    /// Downcast to the canonical width-2 [`Trellis`], if that is what this
+    /// topology is. The decoders use this to dispatch to the
+    /// register-specialized width-2 kernels; every other topology runs the
+    /// generic W-ary implementations in [`crate::decode::generic`].
+    fn as_binary(&self) -> Option<&Trellis> {
+        None
+    }
+}
+
+impl Topology for Trellis {
+    fn build(c: u64, width: u32) -> Result<Self, String> {
+        if width != 2 {
+            return Err(format!(
+                "the width-2 Trellis cannot represent width {width}; use WideTrellis (--width)"
+            ));
+        }
+        Trellis::try_new(c)
+    }
+
+    fn c(&self) -> u64 {
+        self.c
+    }
+
+    fn width(&self) -> u32 {
+        2
+    }
+
+    fn steps(&self) -> u32 {
+        self.steps
+    }
+
+    fn num_edges(&self) -> usize {
+        Trellis::num_edges(self)
+    }
+
+    fn num_vertices(&self) -> usize {
+        Trellis::num_vertices(self)
+    }
+
+    fn edge_list(&self) -> &[Edge] {
+        self.edges()
+    }
+
+    fn source(&self, s: u32) -> u32 {
+        self.source_edge(s as u8)
+    }
+
+    fn transition(&self, j: u32, a: u32, t: u32) -> u32 {
+        self.transition_edge(j, a as u8, t as u8)
+    }
+
+    fn aux(&self, s: u32) -> u32 {
+        self.aux_edge(s as u8)
+    }
+
+    fn n_aux_sinks(&self) -> u32 {
+        1
+    }
+
+    fn aux_sink(&self, _m: u32) -> u32 {
+        self.aux_sink_edge()
+    }
+
+    fn exit_groups(&self) -> &[ExitGroup] {
+        Trellis::exit_groups(self)
+    }
+
+    fn full_label_count(&self) -> u64 {
+        1u64 << self.steps
+    }
+
+    /// Direct edge-index walk (no intermediate `Path`), bit-identical to
+    /// [`super::codec::edges_of_label`] — the training hot loops call this
+    /// through caller-owned scratch buffers, so it must not allocate.
+    fn edges_of_label_into(&self, label: u64, out: &mut Vec<u32>) {
+        debug_assert!(label < self.c, "label {label} out of range C={}", self.c);
+        out.clear();
+        let full = 1u64 << self.steps;
+        if label < full {
+            out.push(self.source_edge((label & 1) as u8));
+            for j in 2..=self.steps {
+                let a = ((label >> (j - 2)) & 1) as u8;
+                let t = ((label >> (j - 1)) & 1) as u8;
+                out.push(self.transition_edge(j, a, t));
+            }
+            out.push(self.aux_edge(((label >> (self.steps - 1)) & 1) as u8));
+            out.push(self.aux_sink_edge());
+            return;
+        }
+        let mut r = label - full;
+        for (k, &bit) in self.exit_bits().iter().enumerate() {
+            let cnt = 1u64 << bit;
+            if r < cnt {
+                // State bits: the free prefix `r` (bits < bit) with the
+                // forced state 1 at step bit+1.
+                let code = r | (1u64 << bit);
+                out.push(self.source_edge((code & 1) as u8));
+                for j in 2..=bit + 1 {
+                    let a = ((code >> (j - 2)) & 1) as u8;
+                    let t = ((code >> (j - 1)) & 1) as u8;
+                    out.push(self.transition_edge(j, a, t));
+                }
+                out.push(self.exit_edge(k));
+                return;
+            }
+            r -= cnt;
+        }
+        unreachable!("label {label} not covered; C={}", self.c)
+    }
+
+    fn as_binary(&self) -> Option<&Trellis> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The Trellis Topology view agrees with its inherent accessors.
+    #[test]
+    fn trellis_topology_view_is_consistent() {
+        for c in [2u64, 3, 22, 105, 159, 1000, 12294] {
+            let t = Trellis::new(c);
+            assert_eq!(Topology::c(&t), c);
+            assert_eq!(t.width(), 2);
+            assert_eq!(Topology::steps(&t), t.steps);
+            assert_eq!(Topology::num_edges(&t), t.edges().len());
+            assert_eq!(t.n_aux_sinks(), 1);
+            assert_eq!(t.aux_sink(0), t.aux_sink_edge());
+            assert_eq!(t.full_label_count(), 1u64 << t.steps);
+            for s in 0..2u32 {
+                assert_eq!(t.source(s), t.source_edge(s as u8));
+                assert_eq!(t.aux(s), t.aux_edge(s as u8));
+            }
+            for l in (0..c).step_by(1 + c as usize / 50) {
+                assert_eq!(
+                    Topology::edges_of_label(&t, l),
+                    super::super::codec::edges_of_label(&t, l),
+                    "C={c} l={l}"
+                );
+            }
+        }
+    }
+
+    /// Exit groups mirror the exit-bit view: one group per set bit, digit 1,
+    /// bases matching `exit_label_base`.
+    #[test]
+    fn trellis_exit_groups_match_exit_bits() {
+        for c in [22u64, 105, 159, 3956, 12294] {
+            let t = Trellis::new(c);
+            let groups = Topology::exit_groups(&t);
+            assert_eq!(groups.len(), t.exit_bits().len());
+            for (k, (&bit, g)) in t.exit_bits().iter().zip(groups).enumerate() {
+                assert_eq!(g.step, bit + 1);
+                assert_eq!(g.digit, 1);
+                assert_eq!(g.edge_base, t.exit_edge(k));
+                assert_eq!(g.label_base, t.exit_label_base(k));
+                assert_eq!(g.paths_per_state, 1u64 << bit);
+                assert_eq!(g.path_count(), t.exit_path_count(k));
+            }
+        }
+    }
+
+    /// Exit-group label bases partition [full_label_count, C).
+    #[test]
+    fn exit_groups_partition_label_space() {
+        for c in [22u64, 105, 159, 1000, 12294] {
+            let t = Trellis::new(c);
+            let mut next = t.full_label_count();
+            for g in Topology::exit_groups(&t) {
+                assert_eq!(g.label_base, next, "C={c}");
+                next += g.path_count();
+            }
+            assert_eq!(next, c, "C={c}");
+        }
+    }
+
+    /// build() enforces the width and the C floor as errors, not panics.
+    #[test]
+    fn build_validates() {
+        assert!(<Trellis as Topology>::build(22, 2).is_ok());
+        assert!(<Trellis as Topology>::build(22, 4).is_err());
+        assert!(<Trellis as Topology>::build(1, 2).is_err());
+    }
+}

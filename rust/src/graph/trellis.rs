@@ -44,12 +44,23 @@ pub struct Trellis {
     exit_bits: Vec<u32>,
     /// exit_edge_index[k] = edge index of the early exit for `exit_bits[k]`.
     exit_edge_base: u32,
+    /// The exit structure in the width-generic [`super::topology::ExitGroup`]
+    /// form (each bit is a digit-1 group).
+    exit_groups: Vec<super::topology::ExitGroup>,
 }
 
 impl Trellis {
-    /// Build the trellis for `c ≥ 2` classes.
+    /// Build the trellis for `c ≥ 2` classes. Panics on `c < 2`; callers
+    /// that must not panic (the CLI) use [`Self::try_new`].
     pub fn new(c: u64) -> Self {
-        assert!(c >= 2, "LTLS needs at least 2 classes, got {c}");
+        Self::try_new(c).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Build the trellis for `c` classes, rejecting `c < 2` as an error.
+    pub fn try_new(c: u64) -> Result<Self, String> {
+        if c < 2 {
+            return Err(format!("LTLS needs at least 2 classes, got {c}"));
+        }
         let b = crate::util::floor_log2(c);
         let mut edges = Vec::new();
         let vsource = 0u32;
@@ -104,7 +115,17 @@ impl Trellis {
                 exit_bits.push(i);
             }
         }
-        Trellis { c, steps: b, edges, exit_bits, exit_edge_base }
+        let mut t = Trellis { c, steps: b, edges, exit_bits, exit_edge_base, exit_groups: Vec::new() };
+        t.exit_groups = (0..t.exit_bits.len())
+            .map(|k| super::topology::ExitGroup {
+                step: t.exit_bits[k] + 1,
+                digit: 1,
+                edge_base: t.exit_edge(k),
+                label_base: t.exit_label_base(k),
+                paths_per_state: t.exit_path_count(k),
+            })
+            .collect();
+        Ok(t)
     }
 
     /// Number of learnable edges `E = 4·⌊log₂C⌋ + popcount(C)`.
@@ -129,6 +150,13 @@ impl Trellis {
     #[inline]
     pub fn exit_bits(&self) -> &[u32] {
         &self.exit_bits
+    }
+
+    /// The exit structure as width-generic digit-1 groups (the form the
+    /// [`super::topology::Topology`] consumers use).
+    #[inline]
+    pub fn exit_groups(&self) -> &[super::topology::ExitGroup] {
+        &self.exit_groups
     }
 
     // ---- O(1) edge-index arithmetic (the decoder hot path uses these; ----
@@ -318,6 +346,16 @@ mod tests {
     #[should_panic]
     fn c_below_two_panics() {
         Trellis::new(1);
+    }
+
+    /// try_new reports the same condition as a proper error (the CLI path).
+    #[test]
+    fn try_new_rejects_c_below_two() {
+        for c in [0u64, 1] {
+            let err = Trellis::try_new(c).unwrap_err();
+            assert!(err.contains("at least 2 classes"), "{err}");
+        }
+        assert!(Trellis::try_new(2).is_ok());
     }
 
     /// Edges are topologically ordered (from-vertex < to-vertex in id order

@@ -1,0 +1,521 @@
+//! The width-parameterized W-LTLS trellis (Evron et al., 2018: *Efficient
+//! Loss-Based Decoding on Graphs for Extreme Classification*).
+//!
+//! Generalizes the paper's width-2 construction to `W` states per step by
+//! writing `C` in mixed radix `W`:
+//!
+//! ```text
+//! C = d_b·W^b + Σ_{i<b} d_i·W^i,   b = ⌊log_W C⌋, 1 ≤ d_b ≤ W−1
+//! ```
+//!
+//! * `b` trellis *steps* of `W` states; the source connects to all states
+//!   of step 1 (`W` edges) and consecutive steps are completely connected
+//!   (`W²` edges per gap);
+//! * every state of step `b` connects to an auxiliary vertex (`W` edges),
+//!   and the auxiliary connects to the sink through `d_b` **parallel**
+//!   edges — this subgraph carries exactly `d_b·W^b` paths;
+//! * for every non-zero lower digit `d_i`, states `1..=d_i` of step `i+1`
+//!   get a direct *early-exit* edge to the sink, adding `d_i·W^i` paths.
+//!
+//! Total: exactly `C` source→sink paths over
+//! `E = 2W + (b−1)·W² + d_b + Σ_{i<b} d_i` learnable edges — the width
+//! dial between the paper's `O(log C)` point (`W = 2`, where this
+//! construction is edge-for-edge identical to [`Trellis`] — pinned by
+//! `rust/tests/wide_parity.rs`) and flat one-vs-all (`W = C`).
+
+use super::topology::{ExitGroup, Topology};
+use super::trellis::{Edge, EdgeKind};
+
+/// Maximum supported trellis width (states are stored as `u8` in
+/// [`EdgeKind`]; realistic W-LTLS widths are ≤ 64).
+pub const MAX_WIDTH: u32 = 256;
+
+/// A W-state-per-step trellis with exactly `c` source→sink paths.
+#[derive(Clone, Debug)]
+pub struct WideTrellis {
+    c: u64,
+    /// Effective width (the requested width clamped to `c`).
+    width: u32,
+    /// Number of steps `b = ⌊log_W C⌋ ≥ 1`.
+    steps: u32,
+    /// All edges in index order.
+    edges: Vec<Edge>,
+    /// Parallel aux→sink edges (`d_b`).
+    n_aux_sinks: u32,
+    /// Early-exit groups, ascending step.
+    exit_groups: Vec<ExitGroup>,
+    /// `W^b` — paths per aux-sink copy.
+    paths_per_sink: u64,
+    /// Edge index of the first aux-collector edge.
+    aux_base: u32,
+}
+
+impl WideTrellis {
+    /// Build the width-`w` trellis for `c ≥ 2` classes. `w` must be in
+    /// `2..=MAX_WIDTH`; a width above `c` is clamped to `c` (callers that
+    /// care warn — see the CLI).
+    pub fn new(c: u64, w: u32) -> Result<Self, String> {
+        if c < 2 {
+            return Err(format!("LTLS needs at least 2 classes, got {c}"));
+        }
+        if w < 2 {
+            return Err(format!("trellis width must be at least 2, got {w}"));
+        }
+        if w > MAX_WIDTH {
+            return Err(format!("trellis width must be at most {MAX_WIDTH}, got {w}"));
+        }
+        let width = (w as u64).min(c) as u32;
+        let wu = width as u64;
+
+        // b = ⌊log_W c⌋ (≥ 1 since width ≤ c), and W^b without overflow.
+        let mut steps = 1u32;
+        let mut paths_per_sink = wu;
+        while paths_per_sink <= c / wu {
+            paths_per_sink *= wu;
+            steps += 1;
+        }
+        let n_aux_sinks = (c / paths_per_sink) as u32; // d_b ∈ 1..=W−1
+        let mut rem = c - n_aux_sinks as u64 * paths_per_sink;
+
+        // Lower mixed-radix digits d_0..d_{b-1} of the remainder.
+        let mut digits = vec![0u32; steps as usize];
+        for d in digits.iter_mut() {
+            *d = (rem % wu) as u32;
+            rem /= wu;
+        }
+        debug_assert_eq!(rem, 0);
+
+        let vsource = 0u32;
+        let vstate = |j: u32, s: u32| 1 + width * (j - 1) + s;
+        let vaux = 1 + width * steps;
+        let vsink = 2 + width * steps;
+
+        let mut edges = Vec::new();
+        for s in 0..width {
+            edges.push(Edge {
+                index: edges.len() as u32,
+                from: vsource,
+                to: vstate(1, s),
+                kind: EdgeKind::Source { state: s as u8 },
+            });
+        }
+        for j in 2..=steps {
+            for a in 0..width {
+                for t in 0..width {
+                    edges.push(Edge {
+                        index: edges.len() as u32,
+                        from: vstate(j - 1, a),
+                        to: vstate(j, t),
+                        kind: EdgeKind::Transition { step: j, from: a as u8, to: t as u8 },
+                    });
+                }
+            }
+        }
+        let aux_base = edges.len() as u32;
+        for s in 0..width {
+            edges.push(Edge {
+                index: edges.len() as u32,
+                from: vstate(steps, s),
+                to: vaux,
+                kind: EdgeKind::Aux { state: s as u8 },
+            });
+        }
+        for _m in 0..n_aux_sinks {
+            edges.push(Edge { index: edges.len() as u32, from: vaux, to: vsink, kind: EdgeKind::AuxSink });
+        }
+
+        let mut exit_groups = Vec::new();
+        let mut label_base = n_aux_sinks as u64 * paths_per_sink;
+        let mut paths_per_state = 1u64;
+        for (i, &d) in digits.iter().enumerate() {
+            if d > 0 {
+                let step = i as u32 + 1;
+                let edge_base = edges.len() as u32;
+                for s in 1..=d {
+                    edges.push(Edge {
+                        index: edges.len() as u32,
+                        from: vstate(step, s),
+                        to: vsink,
+                        kind: EdgeKind::EarlyExit { bit: i as u32 },
+                    });
+                }
+                exit_groups.push(ExitGroup {
+                    step,
+                    digit: d,
+                    edge_base,
+                    label_base,
+                    paths_per_state,
+                });
+                label_base += d as u64 * paths_per_state;
+            }
+            paths_per_state *= wu;
+        }
+        debug_assert_eq!(label_base, c, "label groups must partition [0, C)");
+
+        Ok(WideTrellis {
+            c,
+            width,
+            steps,
+            edges,
+            n_aux_sinks,
+            exit_groups,
+            paths_per_sink,
+            aux_base,
+        })
+    }
+
+    /// Decode label `l` into its path: state choices + terminal.
+    pub fn path_of_label(&self, l: u64) -> WidePath {
+        debug_assert!(l < self.c, "label {l} out of range C={}", self.c);
+        let wu = self.width as u64;
+        let full = self.full_label_count();
+        if l < full {
+            let aux_copy = (l / self.paths_per_sink) as u32;
+            let mut code = l % self.paths_per_sink;
+            let states = (0..self.steps)
+                .map(|_| {
+                    let z = (code % wu) as u32;
+                    code /= wu;
+                    z
+                })
+                .collect();
+            return WidePath { states, exit_step: None, aux_copy };
+        }
+        let mut r = l - full;
+        for g in &self.exit_groups {
+            let cap = g.path_count();
+            if r < cap {
+                let exit_state = 1 + (r / g.paths_per_state) as u32;
+                let mut prefix = r % g.paths_per_state;
+                let mut states: Vec<u32> = (1..g.step)
+                    .map(|_| {
+                        let z = (prefix % wu) as u32;
+                        prefix /= wu;
+                        z
+                    })
+                    .collect();
+                states.push(exit_state);
+                return WidePath { states, exit_step: Some(g.step), aux_copy: 0 };
+            }
+            r -= cap;
+        }
+        unreachable!("label {l} not covered; C={}", self.c)
+    }
+
+    /// Encode a path back into its canonical label (inverse of
+    /// [`Self::path_of_label`]).
+    pub fn label_of_path(&self, p: &WidePath) -> u64 {
+        let wu = self.width as u64;
+        match p.exit_step {
+            None => {
+                debug_assert_eq!(p.states.len() as u32, self.steps);
+                let mut code = 0u64;
+                for &z in p.states.iter().rev() {
+                    code = code * wu + z as u64;
+                }
+                p.aux_copy as u64 * self.paths_per_sink + code
+            }
+            Some(step) => {
+                debug_assert_eq!(p.states.len() as u32, step);
+                let g = self
+                    .exit_groups
+                    .iter()
+                    .find(|g| g.step == step)
+                    .expect("step has an exit group");
+                let s = *p.states.last().unwrap();
+                debug_assert!(s >= 1 && s <= g.digit, "exit state {s} out of 1..={}", g.digit);
+                let mut prefix = 0u64;
+                for &z in p.states[..step as usize - 1].iter().rev() {
+                    prefix = prefix * wu + z as u64;
+                }
+                g.label_base + (s as u64 - 1) * g.paths_per_state + prefix
+            }
+        }
+    }
+}
+
+/// A decoded path through a [`WideTrellis`]: the state choice per visited
+/// step plus which terminal it takes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WidePath {
+    /// State per visited step (length `steps`, or `step` when exiting).
+    pub states: Vec<u32>,
+    /// `Some(step)` if the path leaves via the early exit at `step`
+    /// (then `states.len() == step` and the last state is in
+    /// `1..=digit`); `None` for full paths.
+    pub exit_step: Option<u32>,
+    /// Which parallel aux→sink edge a full path takes (0 when exiting).
+    pub aux_copy: u32,
+}
+
+impl Topology for WideTrellis {
+    fn build(c: u64, width: u32) -> Result<Self, String> {
+        WideTrellis::new(c, width)
+    }
+
+    fn c(&self) -> u64 {
+        self.c
+    }
+
+    fn width(&self) -> u32 {
+        self.width
+    }
+
+    fn steps(&self) -> u32 {
+        self.steps
+    }
+
+    fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    fn edge_list(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    #[inline]
+    fn source(&self, s: u32) -> u32 {
+        s
+    }
+
+    #[inline]
+    fn transition(&self, j: u32, a: u32, t: u32) -> u32 {
+        debug_assert!((2..=self.steps).contains(&j));
+        self.width + self.width * self.width * (j - 2) + self.width * a + t
+    }
+
+    #[inline]
+    fn aux(&self, s: u32) -> u32 {
+        self.aux_base + s
+    }
+
+    #[inline]
+    fn n_aux_sinks(&self) -> u32 {
+        self.n_aux_sinks
+    }
+
+    #[inline]
+    fn aux_sink(&self, m: u32) -> u32 {
+        debug_assert!(m < self.n_aux_sinks);
+        self.aux_base + self.width + m
+    }
+
+    fn exit_groups(&self) -> &[ExitGroup] {
+        &self.exit_groups
+    }
+
+    #[inline]
+    fn full_label_count(&self) -> u64 {
+        self.n_aux_sinks as u64 * self.paths_per_sink
+    }
+
+    fn edges_of_label_into(&self, label: u64, out: &mut Vec<u32>) {
+        out.clear();
+        let p = self.path_of_label(label);
+        out.push(self.source(p.states[0]));
+        for j in 2..=p.states.len() as u32 {
+            out.push(self.transition(j, p.states[j as usize - 2], p.states[j as usize - 1]));
+        }
+        match p.exit_step {
+            Some(step) => {
+                let g = self
+                    .exit_groups
+                    .iter()
+                    .find(|g| g.step == step)
+                    .expect("step has an exit group");
+                out.push(g.edge_base + p.states[step as usize - 1] - 1);
+            }
+            None => {
+                out.push(self.aux(p.states[self.steps as usize - 1]));
+                out.push(self.aux_sink(p.aux_copy));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Trellis;
+
+    /// Path counts: DP over the edge list sums to exactly C, for many (C, W).
+    #[test]
+    fn path_count_is_c() {
+        for w in [2u32, 3, 4, 7, 8, 16, 30] {
+            for c in [2u64, 3, 22, 105, 159, 255, 256, 257, 1000, 1024, 12294] {
+                let t = WideTrellis::new(c, w).unwrap();
+                let mut count = vec![0u64; t.num_vertices()];
+                count[0] = 1;
+                for e in t.edge_list() {
+                    count[e.to as usize] += count[e.from as usize];
+                }
+                assert_eq!(count[t.num_vertices() - 1], c, "C={c} W={w}");
+            }
+        }
+    }
+
+    /// At W=2 the construction is edge-for-edge identical to `Trellis`
+    /// (index, endpoints, and kind all match).
+    #[test]
+    fn width_two_matches_trellis_edges() {
+        for c in [2u64, 3, 22, 105, 159, 1000, 1024, 12294] {
+            let narrow = Trellis::new(c);
+            let wide = WideTrellis::new(c, 2).unwrap();
+            assert_eq!(wide.num_edges(), narrow.num_edges(), "C={c}");
+            assert_eq!(Topology::num_vertices(&wide), narrow.num_vertices());
+            for (a, b) in wide.edge_list().iter().zip(narrow.edges()) {
+                assert_eq!((a.index, a.from, a.to), (b.index, b.from, b.to), "C={c}");
+            }
+            for l in 0..c.min(600) {
+                assert_eq!(
+                    Topology::edges_of_label(&wide, l),
+                    super::super::codec::edges_of_label(&narrow, l),
+                    "C={c} l={l}"
+                );
+            }
+        }
+    }
+
+    /// Codec bijection: label → path → label is the identity on [0, C).
+    #[test]
+    fn codec_roundtrip_exhaustive() {
+        for w in [2u32, 3, 4, 5, 8, 16] {
+            for c in (2u64..80).chain([105, 256, 1000, 1024]) {
+                let t = WideTrellis::new(c, w).unwrap();
+                let mut seen = vec![false; c as usize];
+                for l in 0..c {
+                    let p = t.path_of_label(l);
+                    assert_eq!(t.label_of_path(&p), l, "C={c} W={w}");
+                    assert!(!seen[l as usize]);
+                    seen[l as usize] = true;
+                }
+            }
+        }
+    }
+
+    /// Every label's edge set is a connected source→sink walk.
+    #[test]
+    fn label_edges_form_connected_walk() {
+        for (c, w) in [(22u64, 4u32), (105, 3), (1000, 8), (12294, 16), (4096, 4)] {
+            let t = WideTrellis::new(c, w).unwrap();
+            let elist = t.edge_list();
+            for l in (0..c).step_by(1 + c as usize / 200) {
+                let edges = Topology::edges_of_label(&t, l);
+                assert_eq!(elist[edges[0] as usize].from, 0, "starts at source");
+                for pair in edges.windows(2) {
+                    assert_eq!(
+                        elist[pair[0] as usize].to,
+                        elist[pair[1] as usize].from,
+                        "C={c} W={w} l={l} disconnected"
+                    );
+                }
+                let last = elist[*edges.last().unwrap() as usize];
+                assert_eq!(last.to as usize, t.num_vertices() - 1, "ends at sink");
+            }
+        }
+    }
+
+    /// Edge-index arithmetic matches the materialized edge list.
+    #[test]
+    fn edge_index_arithmetic_consistent() {
+        for (c, w) in [(22u64, 2u32), (105, 4), (1000, 8), (3956, 3), (12294, 16)] {
+            let t = WideTrellis::new(c, w).unwrap();
+            let width = Topology::width(&t);
+            for e in t.edge_list() {
+                let computed = match e.kind {
+                    EdgeKind::Source { state } => t.source(state as u32),
+                    EdgeKind::Transition { step, from, to } => {
+                        t.transition(step, from as u32, to as u32)
+                    }
+                    EdgeKind::Aux { state } => t.aux(state as u32),
+                    EdgeKind::AuxSink => {
+                        // Parallel copies share a kind; recover m from index.
+                        let m = e.index - t.aux_sink(0);
+                        t.aux_sink(m)
+                    }
+                    EdgeKind::EarlyExit { bit } => {
+                        let g = t
+                            .exit_groups()
+                            .iter()
+                            .find(|g| g.step == bit + 1)
+                            .unwrap();
+                        // Recover the exit state from the source vertex:
+                        // (step, state s) = 1 + W·(step−1) + s.
+                        let s = e.from - (1 + width as u32 * bit);
+                        assert!(s >= 1 && s <= g.digit);
+                        g.edge_base + s - 1
+                    }
+                };
+                assert_eq!(computed, e.index, "C={c} W={w} kind={:?}", e.kind);
+            }
+            assert!(width >= 2);
+        }
+    }
+
+    /// Edge-count formula: E = 2W + (b−1)W² + d_b + Σ d_i.
+    #[test]
+    fn edge_count_formula() {
+        for w in [2u32, 3, 4, 8, 16] {
+            for c in [5u64, 22, 105, 256, 1000, 12294] {
+                let t = WideTrellis::new(c, w).unwrap();
+                let width = Topology::width(&t) as usize;
+                let b = Topology::steps(&t) as usize;
+                let exits: usize = t.exit_groups().iter().map(|g| g.digit as usize).sum();
+                let expect =
+                    2 * width + (b - 1) * width * width + t.n_aux_sinks() as usize + exits;
+                assert_eq!(t.num_edges(), expect, "C={c} W={w}");
+            }
+        }
+    }
+
+    /// Exact powers of W have zero early exits and one aux→sink edge.
+    #[test]
+    fn power_of_width_has_no_exits() {
+        for w in [2u32, 4, 8, 16] {
+            let mut c = w as u64;
+            for _ in 0..4 {
+                let t = WideTrellis::new(c, w).unwrap();
+                assert!(t.exit_groups().is_empty(), "C={c} W={w}");
+                assert_eq!(t.n_aux_sinks(), 1);
+                assert_eq!(t.full_label_count(), c);
+                c *= w as u64;
+            }
+        }
+    }
+
+    /// Width above C clamps to C: a 1-step fan-out with C paths.
+    #[test]
+    fn width_above_c_clamps() {
+        let t = WideTrellis::new(10, 64).unwrap();
+        assert_eq!(Topology::width(&t), 10);
+        assert_eq!(Topology::steps(&t), 1);
+        assert_eq!(t.n_aux_sinks(), 1);
+        assert!(t.exit_groups().is_empty());
+        assert_eq!(t.num_edges(), 21); // 10 source + 10 aux + 1 sink
+    }
+
+    /// Construction rejects bad parameters with errors, not panics.
+    #[test]
+    fn invalid_parameters_are_errors() {
+        assert!(WideTrellis::new(1, 2).is_err());
+        assert!(WideTrellis::new(100, 1).is_err());
+        assert!(WideTrellis::new(100, 0).is_err());
+        assert!(WideTrellis::new(100, MAX_WIDTH + 1).is_err());
+        assert!(WideTrellis::new(100, MAX_WIDTH).is_ok());
+    }
+
+    /// Wider is (weakly) shallower and has more parameters on real sizes.
+    #[test]
+    fn width_trades_depth_for_parameters() {
+        let c = 12294u64;
+        let mut prev_edges = 0usize;
+        let mut prev_steps = u32::MAX;
+        for w in [2u32, 4, 8, 16] {
+            let t = WideTrellis::new(c, w).unwrap();
+            assert!(t.num_edges() > prev_edges, "W={w} edges {}", t.num_edges());
+            assert!(Topology::steps(&t) <= prev_steps, "W={w}");
+            prev_edges = t.num_edges();
+            prev_steps = Topology::steps(&t);
+        }
+    }
+}

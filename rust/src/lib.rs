@@ -17,6 +17,10 @@
 //!   against ([`baselines`]), evaluation harnesses ([`eval`]), a PJRT
 //!   runtime that executes AOT-compiled JAX/Pallas artifacts ([`runtime`]),
 //!   and a batching multi-worker prediction server ([`coordinator`]).
+//!   The graph layer is width-parameterized (W-LTLS): everything above it
+//!   is generic over [`graph::Topology`], with the paper's width-2
+//!   [`graph::Trellis`] as the default and [`graph::WideTrellis`] turning
+//!   the accuracy/size tradeoff into a runtime dial (`--width`).
 //! * **Inference engine** ([`engine`]) — the zero-allocation spine under
 //!   all prediction consumers: reusable decode workspaces
 //!   ([`engine::DecodeWorkspace`]) backing the `_into` decoder variants,

@@ -10,7 +10,7 @@
 
 use crate::decode::{list_viterbi_into, score_label, Scored};
 use crate::engine::DecodeWorkspace;
-use crate::graph::Trellis;
+use crate::graph::Topology;
 
 /// What the loss computation found.
 #[derive(Clone, Debug)]
@@ -30,8 +30,8 @@ pub struct SeparationOutcome {
 ///
 /// `h` is the edge-score vector for the example. Returns `None` when every
 /// path in the top-(|P|+1) list is positive (can only happen if |P| = C).
-pub fn separation_loss(
-    t: &Trellis,
+pub fn separation_loss<T: Topology>(
+    t: &T,
     h: &[f32],
     positive_paths: &[u64],
 ) -> Option<SeparationOutcome> {
@@ -47,8 +47,8 @@ pub fn separation_loss(
 /// `rust/tests/engine_parity.rs`). This is the form the training hot loops
 /// — serial and Hogwild — call with their per-worker
 /// [`crate::engine::TrainScratch`] buffers.
-pub fn separation_loss_ws(
-    t: &Trellis,
+pub fn separation_loss_ws<T: Topology>(
+    t: &T,
     h: &[f32],
     positive_paths: &[u64],
     ws: &mut DecodeWorkspace,
@@ -83,6 +83,7 @@ mod tests {
     use super::*;
     use crate::decode::list_viterbi;
     use crate::graph::pathmat::PathMatrix;
+    use crate::graph::Trellis;
     use crate::util::rng::Rng;
 
     /// Against brute force over all (ℓp, ℓn) pairs.

@@ -6,18 +6,18 @@
 //! backpropagation ("forward–backward in this context") produces.
 
 use crate::decode::{log_partition, posterior_marginals, score_label};
-use crate::graph::codec::edges_of_label;
-use crate::graph::Trellis;
+use crate::graph::Topology;
 
-/// Negative log-likelihood of path `y` under the trellis softmax.
-pub fn trellis_softmax_loss(t: &Trellis, h: &[f32], y: u64) -> f32 {
+/// Negative log-likelihood of path `y` under the trellis softmax, over any
+/// [`Topology`].
+pub fn trellis_softmax_loss<T: Topology>(t: &T, h: &[f32], y: u64) -> f32 {
     log_partition(t, h) - score_label(t, h, y)
 }
 
 /// Gradient of the loss w.r.t. the edge-score vector `h` (length E).
-pub fn trellis_softmax_grad(t: &Trellis, h: &[f32], y: u64) -> Vec<f32> {
+pub fn trellis_softmax_grad<T: Topology>(t: &T, h: &[f32], y: u64) -> Vec<f32> {
     let mut g = posterior_marginals(t, h);
-    for e in edges_of_label(t, y) {
+    for e in t.edges_of_label(y) {
         g[e as usize] -= 1.0;
     }
     g
@@ -26,6 +26,8 @@ pub fn trellis_softmax_grad(t: &Trellis, h: &[f32], y: u64) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::codec::edges_of_label;
+    use crate::graph::Trellis;
     use crate::util::rng::Rng;
 
     /// Loss is a proper NLL: ≥ 0, and → 0 when y's path dominates.

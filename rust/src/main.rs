@@ -3,12 +3,16 @@
 //! Subcommands:
 //!
 //! * `trellis --c N [--dot]` — print the trellis structure (paper Fig. 1).
+//! * `graph [--c N] [--width W] [--dot] [--trace P,N]` — print any-width
+//!   trellis structure (`to_ascii`), optionally the Graphviz DOT and a
+//!   Figure-2-style update trace for a (positive, negative) label pair.
 //! * `gen-data --dataset <analog> [--scale S] [--out F]` — emit a synthetic
 //!   analog in libsvm format.
 //! * `train --dataset <analog|path.svm> [--epochs N] [--lr η] [--policy
-//!   top|random] [--l1 λ] [--threads N] [--batch B] [--checkpoint-dir D]
-//!   [--resume]` — train linear LTLS (serially, or Hogwild-parallel with
-//!   `--threads`; `--batch` scores B examples per feature-strip sweep),
+//!   top|random] [--l1 λ] [--width W] [--threads N] [--batch B]
+//!   [--checkpoint-dir D] [--resume]` — train linear LTLS (serially, or
+//!   Hogwild-parallel with `--threads`; `--batch` scores B examples per
+//!   feature-strip sweep; `--width` trains the W-LTLS wide trellis),
 //!   report precision@1, prediction time and model size. With
 //!   `--checkpoint-dir` a checkpoint is written after every epoch and
 //!   `--resume` continues from the latest one.
@@ -16,12 +20,14 @@
 //!   paper's tables on the synthetic analogs.
 //! * `deep [--epochs N] [--steps N]` — the §6 deep-network ImageNet
 //!   experiment through the AOT PJRT runtime.
-//! * `serve [--requests N] [--batch B] [--workers W]` — run the batching
-//!   multi-worker prediction server on a trained model (W=0 → one worker
-//!   per core) and print latency/throughput metrics incl. per-worker.
+//! * `serve [--requests N] [--batch B] [--workers W] [--width N]` — run
+//!   the batching multi-worker prediction server on a trained model (W=0 →
+//!   one worker per core) and print latency/throughput metrics incl.
+//!   per-worker.
 //! * `scaling [--kmax K]` — prediction-time scaling in C (the log-time
 //!   claim).
 
+use ltls::graph::Topology;
 use ltls::util::args::Args;
 
 fn main() {
@@ -29,6 +35,7 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "trellis" => cmd_trellis(&args),
+        "graph" => cmd_graph(&args),
         "gen-data" => cmd_gen_data(&args),
         "train" => cmd_train(&args),
         "tables" => cmd_tables(&args),
@@ -47,9 +54,38 @@ fn main() {
 const HELP: &str = "\
 ltls — Log-time and Log-space Extreme Classification (reproduction)
 
-USAGE: ltls <trellis|gen-data|train|eval|tables|deep|serve|scaling> [--flags]
+USAGE: ltls <trellis|graph|gen-data|train|eval|tables|deep|serve|scaling> [--flags]
 Run with a subcommand; see the crate docs / README for flag details.
 ";
+
+/// Validated `--width` (default 2): rejects anything below 2 or above the
+/// supported maximum with a usage error instead of a panic.
+fn parse_width(args: &Args) -> Result<u32, String> {
+    let raw = args.get_str("width", "2");
+    let w: u64 = raw
+        .parse()
+        .map_err(|_| format!("--width {raw:?} is not a number"))?;
+    if w < 2 {
+        return Err(format!("--width must be at least 2, got {w}"));
+    }
+    if w > ltls::graph::wide::MAX_WIDTH as u64 {
+        return Err(format!(
+            "--width must be at most {}, got {w}",
+            ltls::graph::wide::MAX_WIDTH
+        ));
+    }
+    Ok(w as u32)
+}
+
+/// Warn (stderr) when the width is degenerate for this class count.
+fn warn_width_vs_classes(width: u32, c: u64) {
+    if (width as u64) >= c {
+        eprintln!(
+            "warning: --width {width} ≥ C={c}; clamping to a 1-step fan-out \
+             (one-vs-all shape, no log-space savings)"
+        );
+    }
+}
 
 fn load_dataset(args: &Args) -> Result<(ltls::data::Dataset, ltls::data::Dataset), String> {
     let name = args.get_str("dataset", "sector");
@@ -67,7 +103,13 @@ fn load_dataset(args: &Args) -> Result<(ltls::data::Dataset, ltls::data::Dataset
 
 fn cmd_trellis(args: &Args) -> i32 {
     let c = args.get_u64("c", 22);
-    let t = ltls::graph::Trellis::new(c);
+    let t = match ltls::graph::Trellis::try_new(c) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
     print!("{}", ltls::graph::dot::to_ascii(&t));
     if args.get_bool("dot") {
         print!("{}", ltls::graph::dot::to_dot(&t, &[]));
@@ -75,8 +117,71 @@ fn cmd_trellis(args: &Args) -> i32 {
     println!(
         "paths={} edges={} (4·⌊log₂C⌋+popcount) upper bound 5⌈log₂C⌉+1 = {}",
         c,
-        t.num_edges(),
+        Topology::num_edges(&t),
         5 * ltls::util::ceil_log2(c) + 1
+    );
+    0
+}
+
+/// `ltls graph [--c N] [--width W] [--dot] [--trace POS,NEG]`: dump the
+/// (possibly wide) trellis structure for inspection — the `to_ascii` /
+/// `to_dot` / `update_trace` renderers, reachable from the binary.
+fn cmd_graph(args: &Args) -> i32 {
+    let c = args.get_u64("c", 22);
+    let width = match parse_width(args) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    warn_width_vs_classes(width, c);
+    if width == 2 {
+        match ltls::graph::Trellis::try_new(c) {
+            Ok(t) => print_graph(args, &t),
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        }
+    } else {
+        match ltls::graph::WideTrellis::new(c, width) {
+            Ok(t) => print_graph(args, &t),
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        }
+    }
+}
+
+fn print_graph<T: Topology>(args: &Args, t: &T) -> i32 {
+    print!("{}", ltls::graph::dot::to_ascii(t));
+    if args.get_bool("dot") {
+        print!("{}", ltls::graph::dot::to_dot(t, &[]));
+    }
+    if let Some(pair) = args.get("trace") {
+        let labels: Vec<u64> = pair.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+        match labels.as_slice() {
+            [p, n] if *p < t.c() && *n < t.c() && p != n => {
+                print!("{}", ltls::graph::dot::update_trace(t, *p, *n));
+            }
+            _ => {
+                eprintln!("error: --trace wants two distinct labels below C, e.g. --trace 3,17");
+                return 1;
+            }
+        }
+    }
+    let exits: u32 = t.exit_groups().iter().map(|g| g.digit).sum();
+    println!(
+        "C={} W={} steps={} edges={} (aux-sink copies={}, exit edges={}); linear model = E·D = {}·D params",
+        t.c(),
+        t.width(),
+        t.steps(),
+        t.num_edges(),
+        t.n_aux_sinks(),
+        exits,
+        t.num_edges()
     );
     0
 }
@@ -108,6 +213,18 @@ fn cmd_train(args: &Args) -> i32 {
         }
     };
     println!("{}", ltls::data::stats::stats(&train));
+    if train.n_labels < 2 {
+        eprintln!("error: LTLS needs at least 2 classes, dataset has {}", train.n_labels);
+        return 1;
+    }
+    let width = match parse_width(args) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    warn_width_vs_classes(width, train.n_labels as u64);
     let policy = match args.get_str("policy", "top") {
         "random" => ltls::assign::AssignPolicy::Random,
         _ => ltls::assign::AssignPolicy::TopRanked,
@@ -120,12 +237,32 @@ fn cmd_train(args: &Args) -> i32 {
         log_every: args.get_usize("log-every", 0),
         threads: args.get_usize("threads", 1),
         batch: args.get_usize("batch", 1),
+        width,
         ..Default::default()
     };
+    // The stored width picks the topology: 2 runs the register-specialized
+    // width-2 kernels, anything else the generic wide path. Training,
+    // checkpointing and evaluation below are one generic body.
+    if width == 2 {
+        run_train::<ltls::graph::Trellis>(args, &train, &test, cfg)
+    } else {
+        run_train::<ltls::graph::WideTrellis>(args, &train, &test, cfg)
+    }
+}
+
+fn run_train<T: Topology>(
+    args: &Args,
+    train: &ltls::data::Dataset,
+    test: &ltls::data::Dataset,
+    cfg: ltls::train::TrainConfig,
+) -> i32 {
     let epochs = args.get_usize("epochs", 5);
     let ckpt_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
     let timer = ltls::util::timer::Timer::new();
 
+    let fresh = |cfg: ltls::train::TrainConfig| {
+        ltls::train::ParallelTrainer::<T>::with_topology(cfg, train.n_features, train.n_labels)
+    };
     // Fresh trainer, or resume from the latest checkpoint in the dir. An
     // empty or not-yet-created directory starts fresh, so rerunning the
     // same command after a crash is always safe.
@@ -140,8 +277,8 @@ fn cmd_train(args: &Args) -> i32 {
             Ok(None)
         };
         match latest {
-            Ok(Some((epoch, path))) => match ltls::model::io::load_checkpoint(&path)
-                .and_then(|ck| ltls::train::ParallelTrainer::resume(cfg.clone(), ck))
+            Ok(Some((epoch, path))) => match ltls::model::io::load_checkpoint::<T>(&path)
+                .and_then(|ck| ltls::train::ParallelTrainer::<T>::resume(cfg.clone(), ck))
             {
                 Ok(tr) => {
                     println!(
@@ -158,7 +295,13 @@ fn cmd_train(args: &Args) -> i32 {
             },
             Ok(None) => {
                 println!("no checkpoint in {}; starting fresh", dir.display());
-                ltls::train::ParallelTrainer::new(cfg, train.n_features, train.n_labels)
+                match fresh(cfg) {
+                    Ok(tr) => tr,
+                    Err(e) => {
+                        eprintln!("error: {e}");
+                        return 1;
+                    }
+                }
             }
             Err(e) => {
                 eprintln!("error scanning {}: {e}", dir.display());
@@ -180,7 +323,13 @@ fn cmd_train(args: &Args) -> i32 {
                 }
             }
         }
-        ltls::train::ParallelTrainer::new(cfg, train.n_features, train.n_labels)
+        match fresh(cfg) {
+            Ok(tr) => tr,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
     };
     println!(
         "training: {} thread(s), batch {}",
@@ -200,33 +349,34 @@ fn cmd_train(args: &Args) -> i32 {
         println!("{epoch_offset} epoch(s) already trained; {remaining} remaining of {epochs}");
     }
     let ms = match &ckpt_dir {
-        Some(dir) => match tr.fit_with_checkpoints(&train, remaining, dir) {
+        Some(dir) => match tr.fit_with_checkpoints(train, remaining, dir) {
             Ok(ms) => ms,
             Err(e) => {
                 eprintln!("error writing checkpoint: {e}");
                 return 1;
             }
         },
-        None => tr.fit(&train, remaining),
+        None => tr.fit(train, remaining),
     };
     for (i, m) in ms.iter().enumerate() {
         println!("epoch {}: {}", epoch_offset + i + 1, m);
     }
     let train_s = timer.elapsed_s();
     let model = tr.into_model();
-    let p1 = ltls::eval::precision_at_1(&model, &test);
-    let t = ltls::eval::time_predictions(&model, &test, 1);
+    let p1 = ltls::eval::precision_at_1(&model, test);
+    let t = ltls::eval::time_predictions(&model, test, 1);
     println!(
-        "precision@1 = {:.4}   train {:.2}s   predict {:.3}s ({:.1} µs/ex)   model {:.2} MB (E={})",
+        "precision@1 = {:.4}   train {:.2}s   predict {:.3}s ({:.1} µs/ex)   model {:.2} MB (W={}, E={})",
         p1,
         train_s,
         t.total_s,
         t.per_example_us,
         model.bytes() as f64 / 1e6,
+        model.trellis.width(),
         model.trellis.num_edges(),
     );
     // Full XC metric sweep + optional model persistence.
-    let metrics = ltls::eval::metrics::evaluate(&model, &test, &[1, 3, 5]);
+    let metrics = ltls::eval::metrics::evaluate(&model, test, &[1, 3, 5]);
     println!("{metrics}");
     if let Some(path) = args.get("save") {
         match ltls::model::io::save(&model, std::path::Path::new(path)) {
@@ -241,13 +391,14 @@ fn cmd_train(args: &Args) -> i32 {
 }
 
 /// `ltls eval --model m.ltls --dataset <analog|file.svm>`: load a saved
-/// model and report the full XC metric suite on the test split.
+/// model (any width — the file records it) and report the full XC metric
+/// suite on the test split.
 fn cmd_eval(args: &Args) -> i32 {
     let Some(path) = args.get("model") else {
         eprintln!("error: --model <file> is required");
         return 1;
     };
-    let model = match ltls::model::io::load(std::path::Path::new(path)) {
+    let model = match ltls::model::io::load_any(std::path::Path::new(path)) {
         Ok(m) => m,
         Err(e) => {
             eprintln!("error: {e}");
@@ -261,8 +412,26 @@ fn cmd_eval(args: &Args) -> i32 {
             return 1;
         }
     };
-    let m = ltls::eval::metrics::evaluate(&model, &test, &[1, 3, 5]);
-    println!("{} (C={}, E={})", m, model.trellis.c, model.trellis.num_edges());
+    println!(
+        "loaded {path}: C={} W={} E={}",
+        model.c(),
+        model.width(),
+        model.num_edges()
+    );
+    fn report<T: Topology>(m: &ltls::train::TrainedModel<T>, test: &ltls::data::Dataset) {
+        let r = ltls::eval::metrics::evaluate(m, test, &[1, 3, 5]);
+        println!(
+            "{} (C={}, W={}, E={})",
+            r,
+            m.trellis.c(),
+            m.trellis.width(),
+            m.trellis.num_edges()
+        );
+    }
+    match &model {
+        ltls::model::io::AnyModel::Binary(m) => report(m, &test),
+        ltls::model::io::AnyModel::Wide(m) => report(m, &test),
+    }
     0
 }
 
@@ -342,7 +511,6 @@ fn run_deep(epochs: usize, step_cap: usize, lr: f32, scale: f64) -> Result<(), S
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    use ltls::coordinator::{BatchedLtls, PredictServer, ServerConfig};
     let (train, test) = match load_dataset(args) {
         Ok(x) => x,
         Err(e) => {
@@ -350,12 +518,38 @@ fn cmd_serve(args: &Args) -> i32 {
             return 1;
         }
     };
-    let mut tr = ltls::train::Trainer::new(
-        ltls::train::TrainConfig::default(),
-        train.n_features,
-        train.n_labels,
-    );
-    tr.fit(&train, args.get_usize("epochs", 3));
+    let width = match parse_width(args) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    warn_width_vs_classes(width, train.n_labels as u64);
+    if width == 2 {
+        run_serve::<ltls::graph::Trellis>(args, &train, &test, width)
+    } else {
+        run_serve::<ltls::graph::WideTrellis>(args, &train, &test, width)
+    }
+}
+
+fn run_serve<T: Topology>(
+    args: &Args,
+    train: &ltls::data::Dataset,
+    test: &ltls::data::Dataset,
+    width: u32,
+) -> i32 {
+    use ltls::coordinator::{BatchedLtls, PredictServer, ServerConfig};
+    let tcfg = ltls::train::TrainConfig { width, ..Default::default() };
+    let mut tr =
+        match ltls::train::Trainer::<T>::with_topology(tcfg, train.n_features, train.n_labels) {
+            Ok(tr) => tr,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+    tr.fit(train, args.get_usize("epochs", 3));
     let model = tr.into_model();
     let cfg = ServerConfig {
         batcher: ltls::coordinator::BatcherConfig {

@@ -6,10 +6,17 @@
 //!
 //! Model format (little-endian):
 //! ```text
-//! magic "LTLS" | version u32 | C u64 | D u64 | E u64 | n_labels u64
+//! magic "LTLS" | version u32 | C u64 | width u32 | D u64 | E u64 | n_labels u64
 //! bias  [E f32] | weights [D*E f32, feature-major]
 //! n_pairs u64 | (label u32, path u64) * n_pairs
 //! ```
+//!
+//! Version 2 added the `width u32` field (the W-LTLS trellis width);
+//! version-1 files have no width field and load as width 2. The loader is
+//! generic over [`Topology`] — `deserialize::<Trellis>` rejects wide
+//! files, `deserialize::<WideTrellis>` accepts any width — and
+//! [`load_any`] dispatches on the stored width for callers (the CLI) that
+//! learn the topology from the file.
 //!
 //! Checkpoint format (little-endian, versioned independently):
 //! ```text
@@ -25,7 +32,7 @@
 //! weight-averager state and the assigner's random-fallback RNG.
 
 use crate::assign::{AssignPolicy, Assigner};
-use crate::graph::Trellis;
+use crate::graph::{Topology, Trellis, WideTrellis};
 use crate::model::LinearEdgeModel;
 use crate::train::metrics::EpochMetrics;
 use crate::train::TrainedModel;
@@ -33,7 +40,8 @@ use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"LTLS";
-const VERSION: u32 = 1;
+/// v1: no width field (implicitly 2). v2: width u32 after C.
+const VERSION: u32 = 2;
 const CKPT_MAGIC: &[u8; 4] = b"LTCK";
 const CKPT_VERSION: u32 = 1;
 
@@ -70,18 +78,23 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Serialize a trained model.
-pub fn serialize(m: &TrainedModel) -> Vec<u8> {
+/// Serialize a trained model (any topology; the file records the width).
+pub fn serialize<T: Topology>(m: &TrainedModel<T>) -> Vec<u8> {
     serialize_parts(&m.trellis, &m.model, &m.assigner)
 }
 
 /// Borrowing variant of [`serialize`]: write a model straight from live
 /// trainer state, without assembling (or cloning into) a `TrainedModel`.
-pub fn serialize_parts(trellis: &Trellis, model: &LinearEdgeModel, assigner: &Assigner) -> Vec<u8> {
+pub fn serialize_parts<T: Topology>(
+    trellis: &T,
+    model: &LinearEdgeModel,
+    assigner: &Assigner,
+) -> Vec<u8> {
     let mut out = Vec::with_capacity(16 + model.w.len() * 4);
     out.extend_from_slice(MAGIC);
     put_u32(&mut out, VERSION);
-    put_u64(&mut out, trellis.c);
+    put_u64(&mut out, trellis.c());
+    put_u32(&mut out, trellis.width());
     put_u64(&mut out, model.n_features as u64);
     put_u64(&mut out, model.n_edges as u64);
     let pairs: Vec<(u32, u64)> = assigner.table.pairs().collect();
@@ -101,21 +114,25 @@ pub fn serialize_parts(trellis: &Trellis, model: &LinearEdgeModel, assigner: &As
     out
 }
 
-/// Deserialize a trained model.
-pub fn deserialize(bytes: &[u8]) -> Result<TrainedModel, String> {
+/// Deserialize a trained model as topology `T`. Errors if the file's
+/// stored width is one `T` cannot represent (e.g. a wide file into
+/// `TrainedModel<Trellis>`); use [`deserialize_any`] to dispatch on the
+/// stored width instead.
+pub fn deserialize<T: Topology>(bytes: &[u8]) -> Result<TrainedModel<T>, String> {
     let mut r = Reader { b: bytes, i: 0 };
     if r.take(4)? != MAGIC {
         return Err("not an LTLS model file (bad magic)".into());
     }
     let version = r.u32()?;
-    if version != VERSION {
+    if version == 0 || version > VERSION {
         return Err(format!("unsupported model version {version}"));
     }
     let c = r.u64()?;
+    let width = if version >= 2 { r.u32()? } else { 2 };
     let d = r.u64()? as usize;
     let e = r.u64()? as usize;
     let n_labels = r.u64()? as usize;
-    let trellis = Trellis::new(c);
+    let trellis = T::build(c, width)?;
     if trellis.num_edges() != e {
         return Err(format!("edge count mismatch: file {e}, trellis {}", trellis.num_edges()));
     }
@@ -138,14 +155,14 @@ pub fn deserialize(bytes: &[u8]) -> Result<TrainedModel, String> {
 }
 
 /// Save to a file.
-pub fn save(m: &TrainedModel, path: &Path) -> Result<(), String> {
+pub fn save<T: Topology>(m: &TrainedModel<T>, path: &Path) -> Result<(), String> {
     let bytes = serialize(m);
     let mut f = std::fs::File::create(path).map_err(|e| format!("{}: {e}", path.display()))?;
     f.write_all(&bytes).map_err(|e| e.to_string())
 }
 
-/// Load from a file.
-pub fn load(path: &Path) -> Result<TrainedModel, String> {
+/// Load from a file as topology `T`.
+pub fn load<T: Topology>(path: &Path) -> Result<TrainedModel<T>, String> {
     let mut bytes = Vec::new();
     std::fs::File::open(path)
         .map_err(|e| format!("{}: {e}", path.display()))?
@@ -154,10 +171,77 @@ pub fn load(path: &Path) -> Result<TrainedModel, String> {
     deserialize(&bytes)
 }
 
+/// A loaded model whose topology was chosen by the file's stored width:
+/// width 2 gets the canonical [`Trellis`] (register-specialized decode
+/// kernels), anything else a [`WideTrellis`]. This is how the CLI serves
+/// and evaluates model files of any width.
+pub enum AnyModel {
+    Binary(TrainedModel<Trellis>),
+    Wide(TrainedModel<WideTrellis>),
+}
+
+impl AnyModel {
+    /// Number of classes.
+    pub fn c(&self) -> u64 {
+        match self {
+            AnyModel::Binary(m) => m.trellis.c(),
+            AnyModel::Wide(m) => m.trellis.c(),
+        }
+    }
+
+    /// Trellis width.
+    pub fn width(&self) -> u32 {
+        match self {
+            AnyModel::Binary(m) => m.trellis.width(),
+            AnyModel::Wide(m) => m.trellis.width(),
+        }
+    }
+
+    /// Number of learnable edges.
+    pub fn num_edges(&self) -> usize {
+        match self {
+            AnyModel::Binary(m) => m.trellis.num_edges(),
+            AnyModel::Wide(m) => m.trellis.num_edges(),
+        }
+    }
+}
+
+/// Peek a model file's header: `(C, width)` without building anything.
+pub fn peek_meta(bytes: &[u8]) -> Result<(u64, u32), String> {
+    let mut r = Reader { b: bytes, i: 0 };
+    if r.take(4)? != MAGIC {
+        return Err("not an LTLS model file (bad magic)".into());
+    }
+    let version = r.u32()?;
+    if version == 0 || version > VERSION {
+        return Err(format!("unsupported model version {version}"));
+    }
+    let c = r.u64()?;
+    let width = if version >= 2 { r.u32()? } else { 2 };
+    Ok((c, width))
+}
+
+/// Deserialize dispatching on the stored width (see [`AnyModel`]).
+pub fn deserialize_any(bytes: &[u8]) -> Result<AnyModel, String> {
+    let (_, width) = peek_meta(bytes)?;
+    if width == 2 {
+        Ok(AnyModel::Binary(deserialize::<Trellis>(bytes)?))
+    } else {
+        Ok(AnyModel::Wide(deserialize::<WideTrellis>(bytes)?))
+    }
+}
+
+/// Load from a file dispatching on the stored width (see [`AnyModel`]).
+pub fn load_any(path: &Path) -> Result<AnyModel, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    deserialize_any(&bytes)
+}
+
 /// An epoch-boundary training checkpoint (see the module docs for the
-/// on-disk format and what is / is not restored).
+/// on-disk format and what is / is not restored). Generic over the
+/// topology — the embedded model bytes carry the width.
 #[derive(Clone)]
-pub struct Checkpoint {
+pub struct Checkpoint<T: Topology = Trellis> {
     /// Epochs completed when this checkpoint was taken.
     pub epoch: u32,
     /// Global SGD step (examples seen), driving the lr schedule and the
@@ -168,11 +252,11 @@ pub struct Checkpoint {
     /// Per-epoch metrics, oldest first.
     pub history: Vec<EpochMetrics>,
     /// Raw (unaveraged) weights + trellis + label↔path table.
-    pub model: TrainedModel,
+    pub model: TrainedModel<T>,
 }
 
 /// Serialize a checkpoint.
-pub fn serialize_checkpoint(ck: &Checkpoint) -> Vec<u8> {
+pub fn serialize_checkpoint<T: Topology>(ck: &Checkpoint<T>) -> Vec<u8> {
     serialize_checkpoint_with(ck.epoch, ck.step, ck.seed, &ck.history, &serialize(&ck.model))
 }
 
@@ -204,8 +288,9 @@ pub fn serialize_checkpoint_with(
     out
 }
 
-/// Deserialize a checkpoint.
-pub fn deserialize_checkpoint(bytes: &[u8]) -> Result<Checkpoint, String> {
+/// Deserialize a checkpoint as topology `T` (errors if the embedded model
+/// was trained at a width `T` cannot represent).
+pub fn deserialize_checkpoint<T: Topology>(bytes: &[u8]) -> Result<Checkpoint<T>, String> {
     let mut r = Reader { b: bytes, i: 0 };
     if r.take(4)? != CKPT_MAGIC {
         return Err("not an LTLS checkpoint file (bad magic)".into());
@@ -239,7 +324,7 @@ pub fn deserialize_checkpoint(bytes: &[u8]) -> Result<Checkpoint, String> {
 
 /// Save a checkpoint, atomically: write to `<path>.tmp`, then rename, so a
 /// crash mid-write never clobbers the previous checkpoint.
-pub fn save_checkpoint(ck: &Checkpoint, path: &Path) -> Result<(), String> {
+pub fn save_checkpoint<T: Topology>(ck: &Checkpoint<T>, path: &Path) -> Result<(), String> {
     write_atomic(&serialize_checkpoint(ck), path)
 }
 
@@ -250,8 +335,8 @@ pub fn write_atomic(bytes: &[u8], path: &Path) -> Result<(), String> {
     std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
 }
 
-/// Load a checkpoint from a file.
-pub fn load_checkpoint(path: &Path) -> Result<Checkpoint, String> {
+/// Load a checkpoint from a file as topology `T`.
+pub fn load_checkpoint<T: Topology>(path: &Path) -> Result<Checkpoint<T>, String> {
     let bytes =
         std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
     deserialize_checkpoint(&bytes)
@@ -325,7 +410,7 @@ mod tests {
     fn roundtrip_preserves_predictions() {
         let (m, ds) = trained();
         let bytes = serialize(&m);
-        let m2 = deserialize(&bytes).unwrap();
+        let m2 = deserialize::<Trellis>(&bytes).unwrap();
         assert_eq!(m2.trellis.c, m.trellis.c);
         assert_eq!(m2.model.w, m.model.w);
         for i in 0..50 {
@@ -338,9 +423,65 @@ mod tests {
         let (m, _) = trained();
         let path = std::env::temp_dir().join("ltls_model_io_test.bin");
         save(&m, &path).unwrap();
-        let m2 = load(&path).unwrap();
+        let m2 = load::<Trellis>(&path).unwrap();
         assert_eq!(m2.model.bias, m.model.bias);
         std::fs::remove_file(&path).ok();
+    }
+
+    /// A wide model round-trips: the file carries its width, `load_any`
+    /// dispatches on it, and `deserialize::<Trellis>` rejects it.
+    #[test]
+    fn wide_model_roundtrip_and_dispatch() {
+        let ds = SyntheticSpec::multiclass(500, 300, 24).seed(62).generate();
+        let cfg = TrainConfig { width: 4, ..TrainConfig::default() };
+        let mut tr = crate::train::Trainer::<crate::graph::WideTrellis>::with_topology(
+            cfg,
+            ds.n_features,
+            ds.n_labels,
+        )
+        .unwrap();
+        tr.fit(&ds, 2);
+        let m = tr.into_model();
+        let bytes = serialize(&m);
+        assert_eq!(peek_meta(&bytes).unwrap(), (24, 4));
+
+        let m2 = deserialize::<WideTrellis>(&bytes).unwrap();
+        assert_eq!(m2.model.w, m.model.w);
+        for i in 0..30 {
+            assert_eq!(m.topk(ds.row(i), 3), m2.topk(ds.row(i), 3), "row {i}");
+        }
+        match deserialize_any(&bytes).unwrap() {
+            AnyModel::Wide(w) => assert_eq!(w.trellis.width(), 4),
+            AnyModel::Binary(_) => panic!("width-4 file dispatched to the binary trellis"),
+        }
+        let err = deserialize::<Trellis>(&bytes).unwrap_err();
+        assert!(err.contains("width"), "{err}");
+        // Width-2 files still dispatch to the specialized Trellis.
+        let (m2w, _) = trained();
+        match deserialize_any(&serialize(&m2w)).unwrap() {
+            AnyModel::Binary(b) => assert_eq!(b.trellis.width(), 2),
+            AnyModel::Wide(_) => panic!("width-2 file dispatched wide"),
+        }
+    }
+
+    /// Version-1 files (no width field) still load, as width 2.
+    #[test]
+    fn version1_files_load_as_width_two() {
+        let (m, ds) = trained();
+        let v2 = serialize(&m);
+        // Rewrite the header to v1: patch the version field and remove the
+        // width u32 at bytes 16..20 (after magic+version+C).
+        let mut v1 = Vec::with_capacity(v2.len() - 4);
+        v1.extend_from_slice(&v2[..4]);
+        v1.extend_from_slice(&1u32.to_le_bytes());
+        v1.extend_from_slice(&v2[8..16]);
+        v1.extend_from_slice(&v2[20..]);
+        assert_eq!(peek_meta(&v1).unwrap(), (m.trellis.c, 2));
+        let m2 = deserialize::<Trellis>(&v1).unwrap();
+        assert_eq!(m2.model.w, m.model.w);
+        for i in 0..20 {
+            assert_eq!(m.topk(ds.row(i), 3), m2.topk(ds.row(i), 3), "row {i}");
+        }
     }
 
     #[test]
@@ -357,7 +498,7 @@ mod tests {
             model: m,
         };
         let bytes = serialize_checkpoint(&ck);
-        let ck2 = deserialize_checkpoint(&bytes).unwrap();
+        let ck2 = deserialize_checkpoint::<Trellis>(&bytes).unwrap();
         assert_eq!(ck2.epoch, 3);
         assert_eq!(ck2.step, 1234);
         assert_eq!(ck2.seed, 42);
@@ -377,17 +518,17 @@ mod tests {
         let (m, _) = trained();
         let ck = Checkpoint { epoch: 1, step: 10, seed: 7, history: vec![], model: m };
         let mut bytes = serialize_checkpoint(&ck);
-        assert!(deserialize_checkpoint(&bytes[..16]).is_err()); // truncated
+        assert!(deserialize_checkpoint::<Trellis>(&bytes[..16]).is_err()); // truncated
         bytes.push(0);
-        assert!(deserialize_checkpoint(&bytes).is_err()); // trailing garbage
+        assert!(deserialize_checkpoint::<Trellis>(&bytes).is_err()); // trailing garbage
         bytes.pop();
         bytes[0] = b'X';
-        assert!(deserialize_checkpoint(&bytes).is_err()); // bad magic
+        assert!(deserialize_checkpoint::<Trellis>(&bytes).is_err()); // bad magic
         // A plain model file is not a checkpoint (and vice versa).
         let (m2, _) = trained();
-        assert!(deserialize_checkpoint(&serialize(&m2)).is_err());
+        assert!(deserialize_checkpoint::<Trellis>(&serialize(&m2)).is_err());
         let ck2 = Checkpoint { epoch: 1, step: 10, seed: 7, history: vec![], model: m2 };
-        assert!(deserialize(&serialize_checkpoint(&ck2)).is_err());
+        assert!(deserialize::<Trellis>(&serialize_checkpoint(&ck2)).is_err());
     }
 
     #[test]
@@ -407,7 +548,7 @@ mod tests {
         }
         let (epoch, path) = latest_checkpoint(&dir).unwrap().expect("checkpoints exist");
         assert_eq!(epoch, 10);
-        let ck = load_checkpoint(&path).unwrap();
+        let ck = load_checkpoint::<Trellis>(&path).unwrap();
         assert_eq!(ck.epoch, 10);
         assert_eq!(ck.step, 1000);
         // No tmp files left behind by the atomic writes.
@@ -447,12 +588,12 @@ mod tests {
     fn rejects_corrupt_files() {
         let (m, _) = trained();
         let mut bytes = serialize(&m);
-        assert!(deserialize(&bytes[..10]).is_err()); // truncated
+        assert!(deserialize::<Trellis>(&bytes[..10]).is_err()); // truncated
         bytes[0] = b'X';
-        assert!(deserialize(&bytes).is_err()); // bad magic
+        assert!(deserialize::<Trellis>(&bytes).is_err()); // bad magic
         let (m2, _) = trained();
         let mut ok = serialize(&m2);
         ok.push(0); // trailing garbage
-        assert!(deserialize(&ok).is_err());
+        assert!(deserialize::<Trellis>(&ok).is_err());
     }
 }

@@ -33,6 +33,16 @@ impl LinearEdgeModel {
         }
     }
 
+    /// Zero-initialized model sized for a topology: one weight row per
+    /// learnable edge. This is where the width dial shows up in parameter
+    /// count — `E` grows from `4⌊log₂C⌋ + popcount(C)` at `W = 2` to
+    /// `2W + (b−1)W² + …` for a wide trellis (the accuracy/size tradeoff
+    /// of the width sweep bench).
+    pub fn for_topology<T: crate::graph::Topology>(t: &T, n_features: usize) -> Self {
+        debug_assert_eq!(t.linear_param_count(n_features), t.num_edges() * n_features);
+        Self::new(t.num_edges(), n_features)
+    }
+
     /// Weight of (edge `e`, feature `i`).
     #[inline]
     pub fn weight(&self, e: usize, i: usize) -> f32 {

@@ -29,6 +29,11 @@ pub struct TrainConfig {
     /// B > 1 scores B examples per feature-strip sweep, see
     /// [`crate::model::LinearEdgeModel::edge_scores_batch`]).
     pub batch: usize,
+    /// Trellis width `W` — states per step (paper: 2; W-LTLS widens the
+    /// accuracy/size dial, see [`crate::graph::WideTrellis`]). The
+    /// topology type must be able to represent it: a
+    /// [`Trainer<Trellis>`](super::Trainer) only accepts 2.
+    pub width: u32,
 }
 
 impl Default for TrainConfig {
@@ -45,6 +50,7 @@ impl Default for TrainConfig {
             log_every: 0,
             threads: 1,
             batch: 1,
+            width: 2,
         }
     }
 }
@@ -98,11 +104,13 @@ mod tests {
         assert!((c1.lr_at(10_000) - 0.25).abs() < 1e-6);
     }
 
-    /// The parallel knobs default to the serial configuration.
+    /// The parallel knobs default to the serial configuration, and the
+    /// width defaults to the paper's trellis.
     #[test]
     fn parallel_knobs_default_serial() {
         let c = TrainConfig::default();
         assert_eq!(c.threads, 1);
         assert_eq!(c.batch, 1);
+        assert_eq!(c.width, 2);
     }
 }

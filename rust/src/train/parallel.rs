@@ -51,8 +51,7 @@ use super::trainer::{TrainedModel, Trainer};
 use crate::assign::Assigner;
 use crate::data::Dataset;
 use crate::engine::TrainScratch;
-use crate::graph::codec::edges_of_label;
-use crate::graph::Trellis;
+use crate::graph::{Topology, Trellis};
 use crate::loss::separation_loss_ws;
 use crate::model::io::{self, Checkpoint};
 use crate::model::LinearEdgeModel;
@@ -171,11 +170,13 @@ impl<'a> SharedWeights<'a> {
 
 /// One worker's epoch over its shard. Runs the full SGD step pipeline on
 /// worker-owned [`TrainScratch`] buffers against the shared weights.
+/// Generic over the graph [`Topology`] — the wide and width-2 trellises
+/// share the whole Hogwild pipeline.
 #[allow(clippy::too_many_arguments)]
-fn run_worker(
+fn run_worker<T: Topology>(
     shard: &[usize],
     ds: &Dataset,
-    trellis: &Trellis,
+    trellis: &T,
     config: &TrainConfig,
     weights: &SharedWeights<'_>,
     assigner: &RwLock<&mut Assigner>,
@@ -184,6 +185,10 @@ fn run_worker(
 ) -> EpochMetrics {
     let mut metrics = EpochMetrics::default();
     let mut scratch = TrainScratch::new();
+    if trellis.as_binary().is_none() {
+        // Pre-size the generic W-ary decode buffers (see Trainer::with_topology).
+        scratch.ws.reserve_wide(trellis.width() as usize, trellis.steps() as usize, 64);
+    }
     let mut rows: Vec<SparseVec<'_>> = Vec::with_capacity(batch);
     let e = weights.n_edges;
     for block in shard.chunks(batch.max(1)) {
@@ -248,8 +253,9 @@ fn run_worker(
                 if out.loss > 0.0 {
                     metrics.active_hinge += 1;
                     let lr = config.lr_at(t);
-                    let pos_edges = edges_of_label(trellis, out.pos);
-                    let neg_edges = edges_of_label(trellis, out.neg);
+                    trellis.edges_of_label_into(out.pos, &mut scratch.pos_edges);
+                    trellis.edges_of_label_into(out.neg, &mut scratch.neg_edges);
+                    let (pos_edges, neg_edges) = (&scratch.pos_edges, &scratch.neg_edges);
                     scratch.pos_only.clear();
                     scratch.neg_only.clear();
                     scratch.pos_only.extend(pos_edges.iter().filter(|ed| !neg_edges.contains(ed)));
@@ -263,28 +269,48 @@ fn run_worker(
     metrics
 }
 
-/// Multi-threaded Hogwild trainer wrapping the serial [`Trainer`].
+/// Multi-threaded Hogwild trainer wrapping the serial [`Trainer`], generic
+/// over the graph [`Topology`] (width-2 [`Trellis`] by default).
 ///
 /// `config.threads` picks the worker count (0 → one per core, 1 → the
 /// serial path); `config.batch` picks the mini-batch scoring width. See
 /// the module docs for the execution model.
 #[derive(Clone)]
-pub struct ParallelTrainer {
-    inner: Trainer,
+pub struct ParallelTrainer<T: Topology = Trellis> {
+    inner: Trainer<T>,
     /// Epochs completed, including epochs restored from a checkpoint.
     epochs_done: u32,
     /// Per-epoch metrics history (checkpointed alongside the model).
     history: Vec<EpochMetrics>,
 }
 
-impl ParallelTrainer {
-    /// New trainer for `n_features`-dim inputs and `n_labels` classes.
+impl ParallelTrainer<Trellis> {
+    /// New width-2 trainer for `n_features`-dim inputs and `n_labels`
+    /// classes (panics on invalid shapes — the CLI goes through
+    /// [`ParallelTrainer::with_topology`]).
     pub fn new(config: TrainConfig, n_features: usize, n_labels: usize) -> Self {
         ParallelTrainer {
             inner: Trainer::new(config, n_features, n_labels),
             epochs_done: 0,
             history: Vec::new(),
         }
+    }
+}
+
+impl<T: Topology> ParallelTrainer<T> {
+    /// New trainer whose topology is built by `T::build(n_labels,
+    /// config.width)`; errors instead of panicking on shapes the topology
+    /// rejects (the CLI entry point for `--width`).
+    pub fn with_topology(
+        config: TrainConfig,
+        n_features: usize,
+        n_labels: usize,
+    ) -> Result<Self, String> {
+        Ok(ParallelTrainer {
+            inner: Trainer::with_topology(config, n_features, n_labels)?,
+            epochs_done: 0,
+            history: Vec::new(),
+        })
     }
 
     /// Resume training from a checkpoint: restores the raw weights, the
@@ -294,13 +320,24 @@ impl ParallelTrainer {
     /// — the "reproducible from the config alone" guarantee would silently
     /// break otherwise. Not restored (documented): the weight-averager
     /// state and the assigner's random-fallback RNG — both restart fresh.
-    pub fn resume(config: TrainConfig, ck: Checkpoint) -> Result<ParallelTrainer, String> {
+    pub fn resume(config: TrainConfig, ck: Checkpoint<T>) -> Result<ParallelTrainer<T>, String> {
         let Checkpoint { epoch, step, seed, history, model } = ck;
         if seed != config.seed {
             return Err(format!(
                 "checkpoint was trained with seed {seed}, config has seed {} — \
                  resume with the same seed (or retrain)",
                 config.seed
+            ));
+        }
+        // Same clamp the builder applies (a width above C is capped to C),
+        // so a resume of a clamped run with the original flag still works.
+        let effective = (config.width as u64).min(model.trellis.c()) as u32;
+        if model.trellis.width() != effective {
+            return Err(format!(
+                "checkpoint was trained at trellis width {}, config has width {} — \
+                 resume with the same --width (or retrain)",
+                model.trellis.width(),
+                config.width
             ));
         }
         let TrainedModel { trellis, model, mut assigner } = model;
@@ -346,7 +383,7 @@ impl ParallelTrainer {
     }
 
     /// Snapshot the current training state (raw, unaveraged weights).
-    pub fn checkpoint(&self) -> Checkpoint {
+    pub fn checkpoint(&self) -> Checkpoint<T> {
         Checkpoint {
             epoch: self.epochs_done,
             step: self.inner.step,
@@ -480,7 +517,7 @@ impl ParallelTrainer {
 
     /// Finalize into a predictor (averaging/L1 exactly as the serial
     /// [`Trainer::into_model`]; Hogwild-trained weights are raw).
-    pub fn into_model(self) -> TrainedModel {
+    pub fn into_model(self) -> TrainedModel<T> {
         self.inner.into_model()
     }
 }

@@ -4,23 +4,25 @@ use super::config::TrainConfig;
 use super::metrics::EpochMetrics;
 use crate::assign::Assigner;
 use crate::data::Dataset;
-use crate::decode::{list_viterbi_into, viterbi, Scored};
+use crate::decode::{list_viterbi_into, viterbi_ws, Scored};
 use crate::engine::{PredictScratch, TrainScratch};
-use crate::graph::codec::edges_of_label;
-use crate::graph::Trellis;
+use crate::graph::{Topology, Trellis};
 use crate::loss::separation_loss_ws;
 use crate::model::averaged::Averager;
 use crate::model::LinearEdgeModel;
 use crate::sparse::SparseVec;
 
-/// Online LTLS trainer (separation ranking loss + averaged sparse SGD).
+/// Online LTLS trainer (separation ranking loss + averaged sparse SGD),
+/// generic over the graph [`Topology`] — the paper's width-2 [`Trellis`]
+/// by default, or a [`crate::graph::WideTrellis`] at any width
+/// (`config.width`).
 ///
 /// This is the strictly-serial engine; [`super::ParallelTrainer`] wraps it
 /// and runs it directly as the `threads = 1` special case.
 #[derive(Clone)]
-pub struct Trainer {
+pub struct Trainer<T: Topology = Trellis> {
     pub config: TrainConfig,
-    pub trellis: Trellis,
+    pub trellis: T,
     pub model: LinearEdgeModel,
     pub assigner: Assigner,
     pub(crate) averager: Option<Averager>,
@@ -29,24 +31,47 @@ pub struct Trainer {
     pub(crate) scratch: TrainScratch,
 }
 
-impl Trainer {
-    /// New trainer for `n_features`-dim inputs and `n_labels` classes.
+impl Trainer<Trellis> {
+    /// New width-2 trainer for `n_features`-dim inputs and `n_labels`
+    /// classes (the paper's configuration; panics on invalid shapes — the
+    /// CLI goes through [`Trainer::with_topology`]).
     pub fn new(config: TrainConfig, n_features: usize, n_labels: usize) -> Self {
-        let trellis = Trellis::new(n_labels as u64);
-        let model = LinearEdgeModel::new(trellis.num_edges(), n_features);
+        Trainer::with_topology(config, n_features, n_labels).unwrap_or_else(|e| panic!("{e}"))
+    }
+}
+
+impl<T: Topology> Trainer<T> {
+    /// New trainer whose topology is built by `T::build(n_labels,
+    /// config.width)`; errors (instead of panicking) on shapes the
+    /// topology rejects — too few classes, or a width `T` cannot
+    /// represent.
+    pub fn with_topology(
+        config: TrainConfig,
+        n_features: usize,
+        n_labels: usize,
+    ) -> Result<Self, String> {
+        let trellis = T::build(n_labels as u64, config.width)?;
+        let model = LinearEdgeModel::for_topology(&trellis, n_features);
         let assigner = Assigner::new(config.policy, n_labels, &trellis, config.seed);
         let averager = config
             .averaging
             .then(|| Averager::new(trellis.num_edges(), n_features));
-        Trainer {
+        let mut scratch = TrainScratch::new();
+        if trellis.as_binary().is_none() {
+            // Pre-size the generic W-ary decode buffers so even the first
+            // wide training step is allocation-free (the assignment policy
+            // list-Viterbis up to 64 paths).
+            scratch.ws.reserve_wide(trellis.width() as usize, trellis.steps() as usize, 64);
+        }
+        Ok(Trainer {
             config,
             trellis,
             model,
             assigner,
             averager,
             step: 0,
-            scratch: TrainScratch::new(),
-        }
+            scratch,
+        })
     }
 
     /// Rebuild a trainer from checkpointed parts (see
@@ -55,7 +80,7 @@ impl Trainer {
     /// final average covers post-resume steps only.
     pub(crate) fn from_parts(
         config: TrainConfig,
-        trellis: Trellis,
+        trellis: T,
         model: LinearEdgeModel,
         assigner: Assigner,
         step: u64,
@@ -103,9 +128,11 @@ impl Trainer {
                 metrics.active_hinge += 1;
                 let lr = self.config.lr_at(self.step);
                 // Update only the symmetric difference of the two paths
-                // (fused, feature-major — see model::linear perf notes).
-                let pos_edges = edges_of_label(&self.trellis, out.pos);
-                let neg_edges = edges_of_label(&self.trellis, out.neg);
+                // (fused, feature-major — see model::linear perf notes),
+                // resolved into the engine scratch: no allocation here.
+                self.trellis.edges_of_label_into(out.pos, &mut self.scratch.pos_edges);
+                self.trellis.edges_of_label_into(out.neg, &mut self.scratch.neg_edges);
+                let (pos_edges, neg_edges) = (&self.scratch.pos_edges, &self.scratch.neg_edges);
                 self.scratch.pos_only.clear();
                 self.scratch.neg_only.clear();
                 self.scratch.pos_only.extend(pos_edges.iter().filter(|e| !neg_edges.contains(e)));
@@ -145,7 +172,7 @@ impl Trainer {
 
     /// Finalize into a predictor: applies weight averaging and the L1
     /// soft-threshold (if configured).
-    pub fn into_model(self) -> TrainedModel {
+    pub fn into_model(self) -> TrainedModel<T> {
         let mut model = self.model;
         if let Some(a) = &self.averager {
             let (w, b) = a.averaged(&model.w, &model.bias);
@@ -159,15 +186,16 @@ impl Trainer {
     }
 }
 
-/// A trained LTLS predictor: model + trellis + label↔path table.
+/// A trained LTLS predictor: model + trellis + label↔path table. Generic
+/// over the graph [`Topology`] (width-2 [`Trellis`] by default).
 #[derive(Clone)]
-pub struct TrainedModel {
-    pub trellis: Trellis,
+pub struct TrainedModel<T: Topology = Trellis> {
+    pub trellis: T,
     pub model: LinearEdgeModel,
     pub assigner: Assigner,
 }
 
-impl TrainedModel {
+impl<T: Topology> TrainedModel<T> {
     /// Top-1 dataset label for `x` (`O(E·nnz + log C)`).
     pub fn predict(&self, x: SparseVec) -> u32 {
         self.predict_with(x, &mut PredictScratch::new())
@@ -177,13 +205,13 @@ impl TrainedModel {
     /// zero-allocation hot path of the serving engine.
     pub fn predict_with(&self, x: SparseVec, scratch: &mut PredictScratch) -> u32 {
         self.model.edge_scores(x, &mut scratch.h);
-        let Scored { label: path, .. } = viterbi(&self.trellis, &scratch.h);
+        let Scored { label: path, .. } = viterbi_ws(&self.trellis, &scratch.h, &mut scratch.ws);
         if let Some(l) = self.assigner.table.label_of(path) {
             return l;
         }
         // The best path is unassigned: fall back to the best *assigned*
         // path in the top-m list.
-        let m = 64.min(self.trellis.c as usize);
+        let m = 64.min(self.trellis.c() as usize);
         list_viterbi_into(&self.trellis, &scratch.h, m, &mut scratch.ws, &mut scratch.paths);
         for s in &scratch.paths {
             if let Some(l) = self.assigner.table.label_of(s.label) {
@@ -214,7 +242,7 @@ impl TrainedModel {
         out.clear();
         self.model.edge_scores(x, &mut scratch.h);
         // Over-fetch so unassigned paths can be skipped.
-        let fetch = (k + 8).min(self.trellis.c as usize);
+        let fetch = (k + 8).min(self.trellis.c() as usize);
         list_viterbi_into(&self.trellis, &scratch.h, fetch, &mut scratch.ws, &mut scratch.paths);
         self.resolve_topk(k, &scratch.paths, out);
     }

@@ -6,7 +6,7 @@
 use ltls::data::synthetic::SyntheticSpec;
 use ltls::decode::{list_viterbi, log_partition, posterior_marginals, score_label, viterbi};
 use ltls::graph::codec::{edges_of_label, label_of_path, path_of_label};
-use ltls::graph::Trellis;
+use ltls::graph::{Topology, Trellis, WideTrellis};
 use ltls::util::json::Json;
 use ltls::util::rng::Rng;
 
@@ -77,6 +77,69 @@ fn codec_bijection_sampled_extreme_c() {
             t.num_edges(),
             4 * ltls::util::floor_log2(c) as usize + c.count_ones() as usize
         );
+    }
+}
+
+/// Width-parameterized codec bijection: for random (C, W), every label
+/// round-trips path → label → path, the per-group path counts sum to C,
+/// and the DP path count over the edge list is exactly C — including the
+/// power-of-two / power-of-W cases with zero early exits.
+#[test]
+fn wide_codec_bijection_random_c_w() {
+    let mut rng = Rng::new(7010);
+    fn check(c: u64, w: u32, rng: &mut Rng) {
+        let t = WideTrellis::new(c, w).unwrap();
+        // Terminal groups partition the label space: full + exits == C.
+        let exits: u64 = t.exit_groups().iter().map(|g| g.path_count()).sum();
+        assert_eq!(t.full_label_count() + exits, c, "C={c} W={w}");
+        // DP path count over the edge list is exactly C.
+        let mut count = vec![0u64; t.num_vertices()];
+        count[0] = 1;
+        for e in t.edge_list() {
+            count[e.to as usize] += count[e.from as usize];
+        }
+        assert_eq!(count[t.num_vertices() - 1], c, "C={c} W={w}");
+        // Bijection: exhaustive for small C, sampled for large C.
+        if c <= 3000 {
+            let mut seen = vec![false; c as usize];
+            for l in 0..c {
+                let p = t.path_of_label(l);
+                assert_eq!(t.label_of_path(&p), l, "C={c} W={w} l={l}");
+                assert!(!seen[l as usize], "C={c} W={w}: duplicate label {l}");
+                seen[l as usize] = true;
+            }
+        } else {
+            for _ in 0..300 {
+                let l = rng.below(c);
+                let p = t.path_of_label(l);
+                assert_eq!(t.label_of_path(&p), l, "C={c} W={w} l={l}");
+                let edges = t.edges_of_label(l);
+                assert!(edges.iter().all(|&e| (e as usize) < t.num_edges()));
+            }
+        }
+    }
+    for _ in 0..80 {
+        let c = 2 + rng.below(2000);
+        let w = 2 + rng.index(31) as u32;
+        check(c, w, &mut rng);
+    }
+    // Large-C samples.
+    for _ in 0..10 {
+        let c = 2 + rng.below((1u64 << 30) - 2);
+        let w = 2 + rng.index(15) as u32;
+        check(c, w, &mut rng);
+    }
+    // Exact powers: zero early exits, single aux→sink edge (the width-2
+    // power-of-two case of the paper, and its W-ary generalization).
+    for w in [2u32, 4, 8, 16] {
+        let mut c = w as u64;
+        for _ in 0..3 {
+            let t = WideTrellis::new(c, w).unwrap();
+            assert!(t.exit_groups().is_empty(), "C={c} W={w}");
+            assert_eq!(t.n_aux_sinks(), 1, "C={c} W={w}");
+            check(c, w, &mut rng);
+            c *= w as u64;
+        }
     }
 }
 

@@ -1,0 +1,306 @@
+//! W-LTLS parity suite:
+//!
+//! (a) `WideTrellis` at `W = 2` is **path-for-path identical** to the
+//!     canonical `Trellis` — same edge layout, and (although the two run
+//!     different decoder implementations: generic W-ary vs the
+//!     register-specialized width-2 kernels) the same edge scores produce
+//!     the same top-k labels from every decoder;
+//! (b) the generic wide decoders match the dense `PathMatrix` oracle at
+//!     widths > 2;
+//! (c) the whole training → checkpoint → resume → serve stack works at
+//!     width 4 through the same generic machinery, and a wider trellis
+//!     (more parameters) does not lose accuracy against width 2.
+
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::decode::{list_viterbi, log_partition, posterior_marginals, score_label, viterbi};
+use ltls::engine::DecodeWorkspace;
+use ltls::eval::{precision_at_1, Predictor};
+use ltls::graph::pathmat::PathMatrix;
+use ltls::graph::{Topology, Trellis, WideTrellis};
+use ltls::model::io;
+use ltls::train::{ParallelTrainer, TrainConfig, Trainer};
+use ltls::util::rng::Rng;
+
+/// (a) Same scores into both implementations → identical labels from
+/// Viterbi and list-Viterbi (k ∈ {1, 5, C}), matching partition function
+/// and marginals, identical per-label edge sets.
+#[test]
+fn width2_wide_trellis_is_path_for_path_identical() {
+    let mut rng = Rng::new(5001);
+    for c in [2u64, 3, 5, 22, 105, 159, 255, 256, 1000] {
+        let narrow = Trellis::new(c);
+        let wide = WideTrellis::new(c, 2).unwrap();
+        assert_eq!(wide.num_edges(), Topology::num_edges(&narrow), "C={c}");
+        for l in 0..c {
+            assert_eq!(
+                Topology::edges_of_label(&wide, l),
+                Topology::edges_of_label(&narrow, l),
+                "C={c} l={l}"
+            );
+        }
+        for trial in 0..10 {
+            let h: Vec<f32> = (0..wide.num_edges()).map(|_| rng.normal()).collect();
+
+            let vn = viterbi(&narrow, &h);
+            let vw = viterbi(&wide, &h);
+            assert_eq!(vn.label, vw.label, "C={c} trial={trial}");
+            assert!((vn.score - vw.score).abs() < 1e-4, "C={c} trial={trial}");
+
+            for k in [1usize, 5, c as usize] {
+                let tn = list_viterbi(&narrow, &h, k);
+                let tw = list_viterbi(&wide, &h, k);
+                assert_eq!(tn.len(), tw.len(), "C={c} k={k}");
+                for (a, b) in tn.iter().zip(&tw) {
+                    assert_eq!(a.label, b.label, "C={c} k={k} trial={trial}");
+                    assert!((a.score - b.score).abs() < 1e-4, "C={c} k={k}");
+                }
+            }
+
+            let zn = log_partition(&narrow, &h);
+            let zw = log_partition(&wide, &h);
+            assert!((zn - zw).abs() < 1e-3, "C={c}: logZ {zn} vs {zw}");
+
+            let mn = posterior_marginals(&narrow, &h);
+            let mw = posterior_marginals(&wide, &h);
+            assert_eq!(mn.len(), mw.len());
+            for (e, (a, b)) in mn.iter().zip(&mw).enumerate() {
+                assert!((a - b).abs() < 1e-3, "C={c} edge {e}: {a} vs {b}");
+            }
+
+            for _ in 0..10 {
+                let l = rng.below(c);
+                let sn = score_label(&narrow, &h, l);
+                let sw = score_label(&wide, &h, l);
+                assert!((sn - sw).abs() < 1e-4, "C={c} l={l}");
+            }
+        }
+    }
+}
+
+/// (b) Wide decoders match the dense oracle: viterbi == argmax, list-
+/// viterbi == sorted top-k (labels and scores), logZ == brute-force
+/// log-sum-exp, marginals == probability-weighted edge indicators.
+#[test]
+fn wide_decoders_match_dense_oracle() {
+    let mut rng = Rng::new(5002);
+    for (c, w) in [
+        (2u64, 3u32),
+        (7, 3),
+        (22, 4),
+        (105, 4),
+        (159, 8),
+        (256, 4),
+        (300, 16),
+        (1000, 8),
+    ] {
+        let t = WideTrellis::new(c, w).unwrap();
+        let m = PathMatrix::materialize(&t);
+        for trial in 0..12 {
+            let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+
+            let got = viterbi(&t, &h);
+            let want = m.topk(&h, 1)[0];
+            assert_eq!(got.label, want.0, "C={c} W={w} trial={trial}");
+            assert!((got.score - want.1).abs() < 1e-4);
+
+            for k in [1usize, 2, 5, 16, c as usize] {
+                let got = list_viterbi(&t, &h, k);
+                let want = m.topk(&h, k);
+                assert_eq!(got.len(), want.len(), "C={c} W={w} k={k}");
+                for (g, o) in got.iter().zip(&want) {
+                    assert_eq!(g.label, o.0, "C={c} W={w} k={k} trial={trial}");
+                    assert!((g.score - o.1).abs() < 1e-4, "C={c} W={w} k={k}");
+                }
+            }
+
+            let scores = m.decode(&h);
+            let want_z = ltls::util::logsumexp(&scores);
+            let got_z = log_partition(&t, &h);
+            assert!((got_z - want_z).abs() < 1e-3, "C={c} W={w}: {got_z} vs {want_z}");
+
+            if trial % 4 == 0 {
+                let logz = want_z;
+                let probs: Vec<f32> = scores.iter().map(|s| (s - logz).exp()).collect();
+                let mut want_m = vec![0.0f32; t.num_edges()];
+                for l in 0..c {
+                    for e in t.edges_of_label(l) {
+                        want_m[e as usize] += probs[l as usize];
+                    }
+                }
+                let got_m = posterior_marginals(&t, &h);
+                for e in 0..t.num_edges() {
+                    assert!(
+                        (got_m[e] - want_m[e]).abs() < 1e-3,
+                        "C={c} W={w} edge {e}: {} vs {}",
+                        got_m[e],
+                        want_m[e]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Generic decoders with a reused workspace are identical to fresh calls,
+/// across interleaved (C, W, k) shapes.
+#[test]
+fn wide_reused_workspace_matches_fresh() {
+    let mut rng = Rng::new(5003);
+    let mut ws = DecodeWorkspace::new();
+    let mut out = Vec::new();
+    for _ in 0..40 {
+        let c = 2 + rng.below(3000);
+        let w = 2 + rng.index(15) as u32;
+        let t = WideTrellis::new(c, w).unwrap();
+        let k = 1 + rng.index(20);
+        let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+        ltls::decode::list_viterbi_into(&t, &h, k, &mut ws, &mut out);
+        assert_eq!(out, list_viterbi(&t, &h, k), "C={c} W={w} k={k}");
+        assert_eq!(
+            ltls::decode::log_partition_ws(&t, &h, &mut ws),
+            log_partition(&t, &h),
+            "C={c} W={w}"
+        );
+        assert_eq!(
+            ltls::decode::viterbi_ws(&t, &h, &mut ws),
+            viterbi(&t, &h),
+            "C={c} W={w}"
+        );
+    }
+}
+
+/// Boosting one label's path makes it the wide-Viterbi winner.
+#[test]
+fn wide_boosted_label_wins() {
+    let mut rng = Rng::new(5004);
+    for _ in 0..100 {
+        let c = 2 + rng.below(50_000);
+        let w = 2 + rng.index(15) as u32;
+        let t = WideTrellis::new(c, w).unwrap();
+        let mut h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+        let target = rng.below(c);
+        for e in t.edges_of_label(target) {
+            h[e as usize] += 1000.0;
+        }
+        assert_eq!(viterbi(&t, &h).label, target, "C={c} W={w}");
+    }
+}
+
+/// (c) The full stack at width 4: serial ≡ 1-worker Hogwild metrics,
+/// training learns, checkpoint → resume reproduces the uninterrupted run
+/// exactly, and the saved model file round-trips through `load_any`.
+#[test]
+fn wide_train_checkpoint_resume_roundtrip() {
+    let ds = SyntheticSpec::multiclass(1200, 500, 48).seed(5005).generate();
+    let cfg = TrainConfig { width: 4, averaging: false, ..TrainConfig::default() };
+
+    // Uninterrupted 3 epochs.
+    let mut full =
+        ParallelTrainer::<WideTrellis>::with_topology(cfg.clone(), ds.n_features, ds.n_labels)
+            .unwrap();
+    let mf = full.fit(&ds, 3);
+    assert!(
+        mf.last().unwrap().mean_loss() < mf[0].mean_loss(),
+        "wide training did not learn: {:?}",
+        mf.iter().map(|m| m.mean_loss()).collect::<Vec<_>>()
+    );
+
+    // Interrupted at 2 epochs + resume for 1 == uninterrupted, exactly.
+    let dir = std::env::temp_dir().join(format!("ltls_wide_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut first =
+        ParallelTrainer::<WideTrellis>::with_topology(cfg.clone(), ds.n_features, ds.n_labels)
+            .unwrap();
+    first.fit_with_checkpoints(&ds, 2, &dir).unwrap();
+    drop(first);
+    let (epoch, path) = io::latest_checkpoint(&dir).unwrap().expect("checkpoint written");
+    assert_eq!(epoch, 2);
+    // The checkpoint records width 4: the width-2 loader must reject it.
+    assert!(io::load_checkpoint::<Trellis>(&path).is_err());
+    let ck = io::load_checkpoint::<WideTrellis>(&path).unwrap();
+    assert_eq!(ck.model.trellis.width(), 4);
+    let mut resumed = ParallelTrainer::<WideTrellis>::resume(cfg, ck).unwrap();
+    let m3 = resumed.epoch(&ds);
+    assert_eq!(m3.loss_sum.to_bits(), mf[2].loss_sum.to_bits());
+    let a = full.into_model();
+    let b = resumed.into_model();
+    assert_eq!(a.model.w, b.model.w);
+
+    // Model file round-trip through the width dispatcher.
+    let mpath = dir.join("wide.ltls");
+    io::save(&a, &mpath).unwrap();
+    match io::load_any(&mpath).unwrap() {
+        io::AnyModel::Wide(m) => {
+            for i in 0..50 {
+                assert_eq!(m.topk(ds.row(i), 3), a.topk(ds.row(i), 3), "row {i}");
+            }
+        }
+        io::AnyModel::Binary(_) => panic!("width-4 model dispatched to binary"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// (c) Multi-worker Hogwild training works at width 4 and counts every
+/// example; the batched multi-worker server is bit-identical to inline
+/// wide prediction.
+#[test]
+fn wide_hogwild_and_server_smoke() {
+    use ltls::coordinator::{BatchedLtls, BatcherConfig, PredictServer, ServerConfig};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let ds = SyntheticSpec::multiclass(900, 400, 32).seed(5006).generate();
+    let cfg = TrainConfig { width: 4, threads: 3, averaging: false, ..TrainConfig::default() };
+    let mut tr =
+        ParallelTrainer::<WideTrellis>::with_topology(cfg, ds.n_features, ds.n_labels).unwrap();
+    let m1 = tr.epoch(&ds);
+    assert_eq!(m1.examples, 900);
+    tr.fit(&ds, 2);
+    let model = tr.into_model();
+    let inline: Vec<Vec<(u32, f32)>> = (0..150).map(|i| model.topk(ds.row(i), 3)).collect();
+
+    let server = Arc::new(PredictServer::start(
+        BatchedLtls(model),
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_micros(200) },
+            queue_depth: 256,
+            workers: 2,
+        },
+    ));
+    let rxs: Vec<_> = (0..150)
+        .map(|i| {
+            let row = ds.row(i);
+            server.submit(row.indices.to_vec(), row.values.to_vec(), 3)
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        assert_eq!(rx.recv().unwrap().topk, inline[i], "row {i}");
+    }
+    Arc::try_unwrap(server).ok().unwrap().shutdown();
+}
+
+/// (c) The width dial: a wider trellis has strictly more parameters and
+/// does not lose accuracy against width 2 on the synthetic teacher (the
+/// strict accuracy-gain claim is asserted by `benches/width_sweep.rs`,
+/// which trains longer).
+#[test]
+fn wider_trellis_more_params_no_accuracy_loss() {
+    let ds = SyntheticSpec::multiclass(3000, 800, 128)
+        .teacher(ltls::data::synthetic::TeacherKind::Cluster)
+        .seed(5007)
+        .generate();
+    let (train, test) = ltls::data::split::random_split(&ds, 0.2, 5);
+    let mut results = Vec::new();
+    for width in [2u32, 8] {
+        let cfg = TrainConfig { width, ..TrainConfig::default() };
+        let mut tr =
+            Trainer::<WideTrellis>::with_topology(cfg, ds.n_features, ds.n_labels).unwrap();
+        tr.fit(&train, 6);
+        let model = tr.into_model();
+        results.push((width, model.model.param_count(), precision_at_1(&model, &test)));
+    }
+    let (_, p2, a2) = results[0];
+    let (_, p8, a8) = results[1];
+    assert!(p8 > p2, "W=8 params {p8} not > W=2 params {p2}");
+    assert!(a8 > a2 - 0.03, "W=8 p@1 {a8} collapsed vs W=2 {a2}");
+}

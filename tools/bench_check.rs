@@ -44,7 +44,7 @@ use ltls::util::json::Json;
 use std::collections::BTreeMap;
 
 /// Result-array keys that name a configuration rather than a measurement.
-const DISCRIMINATORS: [&str; 4] = ["workers", "threads", "batch", "k"];
+const DISCRIMINATORS: [&str; 5] = ["workers", "threads", "batch", "k", "width"];
 
 fn main() {
     let args = Args::from_env();
@@ -228,9 +228,13 @@ fn check_against_baseline(
             }
         }
     }
+    // Metrics a bench produced that the baseline does not know about are
+    // record-only (never failed on): printed here and included in --write,
+    // so new bench rows (e.g. a new width) surface instead of vanishing.
+    // Promote one to a gated entry by adding it to the baseline file.
     for (name, v) in current {
         if !metrics.contains_key(name) {
-            let _ = writeln!(text, "new        {name} = {v:.4} (not in baseline)");
+            let _ = writeln!(text, "record new {name} = {v:.4} (not in baseline; record-only)");
         }
     }
     Ok(Report { text, gated, failures })
@@ -286,6 +290,22 @@ trailing noise
         let r = check_against_baseline(base, &c).unwrap();
         assert_eq!(r.failures, 1);
         assert!(r.text.contains("GATE FAIL"));
+    }
+
+    #[test]
+    fn width_rows_flatten_and_new_metrics_are_record_only() {
+        let c = current_from(
+            "json: {\"bench\":\"width_sweep\",\"p1_gain_8v2\":0.1,\"results\":[{\"width\":2,\"p1\":0.5,\"params\":49500},{\"width\":8,\"p1\":0.7,\"params\":126000}]}\n",
+        );
+        assert_eq!(c["width_sweep.width=2.p1"], 0.5);
+        assert_eq!(c["width_sweep.width=8.params"], 126000.0);
+        assert_eq!(c["width_sweep.p1_gain_8v2"], 0.1);
+        // Unknown-but-present metrics never fail the gate — they are
+        // reported as record-only lines.
+        let base = r#"{"metrics":{"width_sweep.width=2.p1":null}}"#;
+        let r = check_against_baseline(base, &c).unwrap();
+        assert_eq!(r.failures, 0);
+        assert!(r.text.contains("record new width_sweep.width=8.p1"), "{}", r.text);
     }
 
     #[test]
