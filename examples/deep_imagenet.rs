@@ -40,7 +40,8 @@ fn main() -> Result<(), String> {
 
     // The imageNet analog: dense features (30.8% like the real thing),
     // nonlinear teacher — exactly the regime where linear LTLS fails.
-    let analog = datasets::by_name("imageNet").unwrap();
+    let analog = datasets::by_name("imageNet")
+        .ok_or("unknown dataset \"imageNet\" (dataset registry renamed?)")?;
     let (train, test) = analog.generate(scale, 7);
     println!("data: {}", ltls::data::stats::stats(&train));
 

@@ -22,7 +22,10 @@ fn main() {
     let clients = args.get_usize("clients", 4);
     let workers = args.get_usize("workers", 0);
 
-    let analog = datasets::by_name("aloi.bin").unwrap();
+    let analog = datasets::by_name("aloi.bin").unwrap_or_else(|| {
+        eprintln!("error: unknown dataset \"aloi.bin\" (dataset registry renamed?)");
+        std::process::exit(1);
+    });
     let (train, test) = analog.generate(0.2, 5);
     println!("data: {}", ltls::data::stats::stats(&train));
 

@@ -1,0 +1,183 @@
+//! Memory-footprint sweep across the weight-storage backends: dense vs
+//! hashed vs q8 on the synthetic dataset — the third axis of the
+//! accuracy / speed / **memory** tradeoff, next to `--width`.
+//!
+//! Prints a human table and a machine-readable `json:` line compatible
+//! with `tools/bench_check.rs` (`backend` / `hash_bits` are result
+//! discriminators → `memory_footprint.backend=1.hash_bits=9.p1` etc.).
+//! `BENCH_FAST=1` trims examples and epochs for CI smoke runs.
+//!
+//! Hard-asserted shapes (the acceptance claims of the storage subsystem,
+//! mirrored as gates in `BENCH_BASELINE.json`):
+//!
+//! * q8 serving precision@1 within 0.5% (absolute) of the f32 model, at
+//!   >3.5× weight-block compression;
+//! * hashed training at ≥4× fewer parameters still beats the paper's
+//!   naive top-E baseline on the same data.
+
+use ltls::baselines::naive_topk::NaiveTopK;
+use ltls::eval::{precision_at_1, time_predictions};
+use ltls::graph::{Topology, Trellis};
+use ltls::model::{HashedStore, WeightStore};
+use ltls::train::{TrainConfig, Trainer};
+use ltls::util::json::Json;
+use ltls::util::timer::Timer;
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let n = if fast { 5_000 } else { 12_000 };
+    let epochs = if fast { 4usize } else { 8 };
+    let c = 256usize;
+    // D chosen so 2^9 hash buckets are a ≥4x parameter cut (2080/512).
+    let d = 2_080usize;
+    let hash_bits = 9u32;
+
+    let ds = ltls::data::synthetic::SyntheticSpec::multiclass(n, d, c)
+        .teacher(ltls::data::synthetic::TeacherKind::Cluster)
+        .seed(41)
+        .generate();
+    let (train, test) = ltls::data::split::random_split(&ds, 0.2, 7);
+    println!(
+        "== weight-storage footprint sweep (C={c}, D={d}, {} train / {} test, {epochs} epochs) ==",
+        train.n_examples(),
+        test.n_examples()
+    );
+
+    // ---- dense (the paper's model) ----
+    let timer = Timer::new();
+    let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    tr.fit(&train, epochs);
+    let dense = tr.into_model();
+    let dense_train_s = timer.elapsed_s();
+    let p1_dense = precision_at_1(&dense, &test);
+    let t_dense = time_predictions(&dense, &test, 1);
+
+    // ---- q8 (serve-only, quantized offline from the dense model) ----
+    let q8 = dense.quantized();
+    let p1_q8 = precision_at_1(&q8, &test);
+    let t_q8 = time_predictions(&q8, &test, 1);
+
+    // ---- hashed (trained at 2^bits buckets, independent of D) ----
+    let timer = Timer::new();
+    let hcfg = TrainConfig { hash_bits, ..TrainConfig::default() };
+    let mut htr = Trainer::<Trellis, HashedStore>::with_topology(hcfg, ds.n_features, ds.n_labels)
+        .expect("hash-bits config is valid");
+    htr.fit(&train, epochs);
+    let hashed = htr.into_model();
+    let hashed_train_s = timer.elapsed_s();
+    let p1_hashed = precision_at_1(&hashed, &test);
+    let t_hashed = time_predictions(&hashed, &test, 1);
+
+    // ---- the paper's naive top-E baseline on the same data ----
+    let e = Topology::num_edges(&dense.trellis);
+    let naive = NaiveTopK::train(&train, e, epochs.min(3), &[1e-5, 1e-3]);
+    let p1_naive = precision_at_1(&naive, &test);
+
+    println!(
+        "{:<10}{:>10}{:>14}{:>14}{:>10}{:>12}{:>12}",
+        "backend", "params", "bytes", "file bytes", "p@1", "train s", "predict µs"
+    );
+    struct Row {
+        backend: u32,
+        hash_bits: u32,
+        params: usize,
+        bytes: usize,
+        file_bytes: usize,
+        p1: f64,
+        train_s: f64,
+        predict_us: f64,
+    }
+    let rows = [
+        Row {
+            backend: dense.model.backend().tag(),
+            hash_bits: 0,
+            params: dense.model.param_count(),
+            bytes: dense.bytes(),
+            file_bytes: ltls::model::io::serialize(&dense).len(),
+            p1: p1_dense,
+            train_s: dense_train_s,
+            predict_us: t_dense.per_example_us,
+        },
+        Row {
+            backend: hashed.model.backend().tag(),
+            hash_bits,
+            params: hashed.model.param_count(),
+            bytes: hashed.bytes(),
+            file_bytes: ltls::model::io::serialize(&hashed).len(),
+            p1: p1_hashed,
+            train_s: hashed_train_s,
+            predict_us: t_hashed.per_example_us,
+        },
+        Row {
+            backend: q8.model.backend().tag(),
+            hash_bits: 0,
+            params: q8.model.param_count(),
+            bytes: q8.bytes(),
+            file_bytes: ltls::model::io::serialize(&q8).len(),
+            p1: p1_q8,
+            train_s: 0.0,
+            predict_us: t_q8.per_example_us,
+        },
+    ];
+    for (name, r) in ["dense", "hashed", "q8"].iter().zip(&rows) {
+        println!(
+            "{name:<10}{:>10}{:>14}{:>14}{:>10.4}{:>12.2}{:>12.1}",
+            r.params, r.bytes, r.file_bytes, r.p1, r.train_s, r.predict_us
+        );
+    }
+    println!("naive top-{e} LR baseline p@1 = {p1_naive:.4}");
+
+    // The acceptance shapes this subsystem exists for.
+    let q8_delta = (p1_dense - p1_q8).abs();
+    assert!(
+        q8_delta <= 0.005,
+        "q8 p@1 {p1_q8:.4} drifted {q8_delta:.4} (> 0.5%) from f32 {p1_dense:.4}"
+    );
+    let q8_compression = dense.bytes() as f64 / q8.bytes() as f64;
+    assert!(q8_compression > 3.5, "q8 compression only {q8_compression:.2}x");
+    let param_ratio = dense.model.param_count() as f64 / hashed.model.param_count() as f64;
+    assert!(
+        param_ratio >= 4.0,
+        "hashed store is only {param_ratio:.2}x smaller in parameters (need ≥4x)"
+    );
+    assert!(
+        p1_hashed > p1_naive,
+        "hashed LTLS p@1 {p1_hashed:.4} does not beat the naive baseline {p1_naive:.4}"
+    );
+    println!(
+        "\nq8: {q8_compression:.2}x smaller, p@1 delta {q8_delta:+.4}; \
+         hashed: {param_ratio:.2}x fewer params, p@1 {p1_hashed:.4} vs naive {p1_naive:.4}"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("memory_footprint")),
+        ("classes", Json::from(c)),
+        ("features", Json::from(d)),
+        ("epochs", Json::from(epochs)),
+        ("q8_p1_delta", Json::Num(q8_delta)),
+        ("q8_compression", Json::Num(q8_compression)),
+        ("hashed_param_ratio", Json::Num(param_ratio)),
+        ("hashed_minus_naive_p1", Json::Num(p1_hashed - p1_naive)),
+        ("naive_p1", Json::Num(p1_naive)),
+        (
+            "results",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("backend", Json::from(r.backend as usize)),
+                            ("hash_bits", Json::from(r.hash_bits as usize)),
+                            ("params", Json::from(r.params)),
+                            ("model_bytes", Json::from(r.bytes)),
+                            ("file_bytes", Json::from(r.file_bytes)),
+                            ("p1", Json::Num(r.p1)),
+                            ("train_s", Json::Num(r.train_s)),
+                            ("predict_us", Json::Num(r.predict_us)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    println!("json: {}", json.dump());
+}

@@ -104,17 +104,19 @@ impl<P: crate::eval::Predictor + Send + Sync + 'static> BatchModel for SparsePat
     }
 }
 
-/// The batched LTLS path: one feature-strip sweep scores the *whole*
-/// micro-batch ([`crate::model::LinearEdgeModel::edge_scores_batch`]),
+/// The batched LTLS path: one weight-strip sweep scores the *whole*
+/// micro-batch ([`crate::model::WeightStore::edge_scores_batch`]),
 /// then each row is list-Viterbi-decoded from the shared score matrix —
 /// all on the worker's scratch. Bit-identical to the per-example path.
-/// Generic over the graph topology, so wide (W-LTLS) models serve through
-/// the same multi-worker pool.
-pub struct BatchedLtls<T: crate::graph::Topology = crate::graph::Trellis>(
-    pub crate::train::TrainedModel<T>,
-);
+/// Generic over the graph topology **and the weight store**, so wide
+/// (W-LTLS) models and the hashed / quantized / memory-mapped backends
+/// all serve through the same multi-worker pool.
+pub struct BatchedLtls<
+    T: crate::graph::Topology = crate::graph::Trellis,
+    S: crate::model::WeightStore = crate::model::DenseStore,
+>(pub crate::train::TrainedModel<T, S>);
 
-impl<T: crate::graph::Topology> BatchModel for BatchedLtls<T> {
+impl<T: crate::graph::Topology, S: crate::model::WeightStore> BatchModel for BatchedLtls<T, S> {
     fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
         let mut out = Vec::with_capacity(batch.len());
         self.predict_batch_into(batch, &mut PredictScratch::new(), &mut out);
@@ -128,7 +130,7 @@ impl<T: crate::graph::Topology> BatchModel for BatchedLtls<T> {
         out: &mut Vec<Response>,
     ) {
         out.clear();
-        let e = self.0.model.n_edges;
+        let e = crate::model::WeightStore::n_edges(&self.0.model);
         let rows: Vec<crate::sparse::SparseVec> = batch
             .iter()
             .map(|r| crate::sparse::SparseVec::new(&r.indices, &r.values))

@@ -37,7 +37,9 @@ pub trait Predictor {
     fn name(&self) -> &str;
 }
 
-impl<T: crate::graph::Topology> Predictor for crate::train::TrainedModel<T> {
+impl<T: crate::graph::Topology, S: crate::model::WeightStore> Predictor
+    for crate::train::TrainedModel<T, S>
+{
     fn topk(&self, x: SparseVec, k: usize) -> Vec<(u32, f32)> {
         self.predict_topk(x, k)
     }

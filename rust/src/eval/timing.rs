@@ -52,8 +52,8 @@ pub struct EpochTiming {
 /// Hogwild multi-worker, or mini-batch — and the topology decides the
 /// width, so this one harness measures them all comparably
 /// (`benches/train_parallel.rs`, `benches/width_sweep.rs`).
-pub fn time_epoch<T: crate::graph::Topology>(
-    tr: &mut ParallelTrainer<T>,
+pub fn time_epoch<T: crate::graph::Topology, S: crate::model::TrainableStore>(
+    tr: &mut ParallelTrainer<T, S>,
     ds: &Dataset,
 ) -> EpochTiming {
     let t = Timer::new();

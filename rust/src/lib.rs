@@ -20,7 +20,13 @@
 //!   The graph layer is width-parameterized (W-LTLS): everything above it
 //!   is generic over [`graph::Topology`], with the paper's width-2
 //!   [`graph::Trellis`] as the default and [`graph::WideTrellis`] turning
-//!   the accuracy/size tradeoff into a runtime dial (`--width`).
+//!   the accuracy/size tradeoff into a runtime dial (`--width`). Weight
+//!   **storage** is the third dial ([`model::store`]): the training and
+//!   serving stacks are generic over [`model::WeightStore`] /
+//!   [`model::TrainableStore`] — dense (default), signed-feature-hashed
+//!   (`--hash-bits`, memory bounded independently of D), and serve-only
+//!   i8 quantization (`ltls quantize`), with zero-copy mmap serving of v3
+//!   model files (`ltls serve --mmap`).
 //! * **Inference engine** ([`engine`]) — the zero-allocation spine under
 //!   all prediction consumers: reusable decode workspaces
 //!   ([`engine::DecodeWorkspace`]) backing the `_into` decoder variants,

@@ -9,25 +9,34 @@
 //! * `gen-data --dataset <analog> [--scale S] [--out F]` — emit a synthetic
 //!   analog in libsvm format.
 //! * `train --dataset <analog|path.svm> [--epochs N] [--lr η] [--policy
-//!   top|random] [--l1 λ] [--width W] [--threads N] [--batch B]
-//!   [--checkpoint-dir D] [--resume]` — train linear LTLS (serially, or
-//!   Hogwild-parallel with `--threads`; `--batch` scores B examples per
-//!   feature-strip sweep; `--width` trains the W-LTLS wide trellis),
-//!   report precision@1, prediction time and model size. With
-//!   `--checkpoint-dir` a checkpoint is written after every epoch and
-//!   `--resume` continues from the latest one.
+//!   top|random] [--l1 λ] [--width W] [--hash-bits B] [--threads N]
+//!   [--batch B] [--checkpoint-dir D] [--resume]` — train linear LTLS
+//!   (serially, or Hogwild-parallel with `--threads`; `--batch` scores B
+//!   examples per strip sweep; `--width` trains the W-LTLS wide trellis;
+//!   `--hash-bits` trains the feature-hashed weight store, bounding model
+//!   memory at `2^B·E` floats independently of D), report precision@1,
+//!   prediction time and model size. With `--checkpoint-dir` a checkpoint
+//!   is written after every epoch and `--resume` continues from the latest
+//!   one (same width / hash-bits / seed).
+//! * `quantize --model in.ltls --out out.ltls` — convert a trained dense
+//!   model file to the serve-only q8 backend (per-edge i8 weights, ~4×
+//!   smaller; format v3 carries the backend tag).
 //! * `tables --which 1|2|3 [--scale S] [--epochs N]` — regenerate the
 //!   paper's tables on the synthetic analogs.
 //! * `deep [--epochs N] [--steps N]` — the §6 deep-network ImageNet
 //!   experiment through the AOT PJRT runtime.
-//! * `serve [--requests N] [--batch B] [--workers W] [--width N]` — run
-//!   the batching multi-worker prediction server on a trained model (W=0 →
-//!   one worker per core) and print latency/throughput metrics incl.
-//!   per-worker.
+//! * `serve [--model m.ltls [--mmap]] [--requests N] [--batch B]
+//!   [--workers W] [--width N]` — run the batching multi-worker prediction
+//!   server and print latency/throughput metrics incl. per-worker. With
+//!   `--model` it serves a saved model of any width/backend (dense,
+//!   hashed, q8); `--mmap` memory-maps the weight block zero-copy instead
+//!   of materializing it. Without `--model` it trains a fresh model on
+//!   `--dataset` first (the original smoke path).
 //! * `scaling [--kmax K]` — prediction-time scaling in C (the log-time
 //!   claim).
 
 use ltls::graph::Topology;
+use ltls::model::{TrainableStore, WeightStore};
 use ltls::util::args::Args;
 
 fn main() {
@@ -38,6 +47,7 @@ fn main() {
         "graph" => cmd_graph(&args),
         "gen-data" => cmd_gen_data(&args),
         "train" => cmd_train(&args),
+        "quantize" => cmd_quantize(&args),
         "tables" => cmd_tables(&args),
         "deep" => cmd_deep(&args),
         "serve" => cmd_serve(&args),
@@ -54,7 +64,7 @@ fn main() {
 const HELP: &str = "\
 ltls — Log-time and Log-space Extreme Classification (reproduction)
 
-USAGE: ltls <trellis|graph|gen-data|train|eval|tables|deep|serve|scaling> [--flags]
+USAGE: ltls <trellis|graph|gen-data|train|quantize|eval|tables|deep|serve|scaling> [--flags]
 Run with a subcommand; see the crate docs / README for flag details.
 ";
 
@@ -75,6 +85,26 @@ fn parse_width(args: &Args) -> Result<u32, String> {
         ));
     }
     Ok(w as u32)
+}
+
+/// Validated `--hash-bits` (default 0 = dense storage): 0 or the hashed
+/// store's supported bucket-exponent range.
+fn parse_hash_bits(args: &Args) -> Result<u32, String> {
+    let raw = args.get_str("hash-bits", "0");
+    let b: u64 = raw
+        .parse()
+        .map_err(|_| format!("--hash-bits {raw:?} is not a number"))?;
+    if b == 0 {
+        return Ok(0);
+    }
+    let (lo, hi) = (
+        ltls::model::hashed::MIN_HASH_BITS as u64,
+        ltls::model::hashed::MAX_HASH_BITS as u64,
+    );
+    if !(lo..=hi).contains(&b) {
+        return Err(format!("--hash-bits must be 0 (dense) or in {lo}..={hi}, got {b}"));
+    }
+    Ok(b as u32)
 }
 
 /// Warn (stderr) when the width is degenerate for this class count.
@@ -225,6 +255,21 @@ fn cmd_train(args: &Args) -> i32 {
         }
     };
     warn_width_vs_classes(width, train.n_labels as u64);
+    let hash_bits = match parse_hash_bits(args) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    if hash_bits > 0 && (1usize << hash_bits) >= train.n_features {
+        eprintln!(
+            "warning: --hash-bits {hash_bits} gives {} buckets ≥ D={}; no memory saving \
+             over the dense store",
+            1usize << hash_bits,
+            train.n_features
+        );
+    }
     let policy = match args.get_str("policy", "top") {
         "random" => ltls::assign::AssignPolicy::Random,
         _ => ltls::assign::AssignPolicy::TopRanked,
@@ -238,30 +283,42 @@ fn cmd_train(args: &Args) -> i32 {
         threads: args.get_usize("threads", 1),
         batch: args.get_usize("batch", 1),
         width,
+        hash_bits,
         ..Default::default()
     };
-    // The stored width picks the topology: 2 runs the register-specialized
-    // width-2 kernels, anything else the generic wide path. Training,
-    // checkpointing and evaluation below are one generic body.
-    if width == 2 {
-        run_train::<ltls::graph::Trellis>(args, &train, &test, cfg)
-    } else {
-        run_train::<ltls::graph::WideTrellis>(args, &train, &test, cfg)
+    // The stored width picks the topology (2 runs the register-specialized
+    // width-2 kernels, anything else the generic wide path) and the
+    // hash-bits flag picks the weight store. Training, checkpointing and
+    // evaluation below are one generic body over both.
+    match (width == 2, hash_bits == 0) {
+        (true, true) => {
+            run_train::<ltls::graph::Trellis, ltls::model::DenseStore>(args, &train, &test, cfg)
+        }
+        (true, false) => {
+            run_train::<ltls::graph::Trellis, ltls::model::HashedStore>(args, &train, &test, cfg)
+        }
+        (false, true) => {
+            run_train::<ltls::graph::WideTrellis, ltls::model::DenseStore>(args, &train, &test, cfg)
+        }
+        (false, false) => run_train::<ltls::graph::WideTrellis, ltls::model::HashedStore>(
+            args, &train, &test, cfg,
+        ),
     }
 }
 
-fn run_train<T: Topology>(
+fn run_train<T: Topology, S: TrainableStore>(
     args: &Args,
     train: &ltls::data::Dataset,
     test: &ltls::data::Dataset,
     cfg: ltls::train::TrainConfig,
 ) -> i32 {
     let epochs = args.get_usize("epochs", 5);
+    let l1_lambda = cfg.l1_lambda;
     let ckpt_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
     let timer = ltls::util::timer::Timer::new();
 
     let fresh = |cfg: ltls::train::TrainConfig| {
-        ltls::train::ParallelTrainer::<T>::with_topology(cfg, train.n_features, train.n_labels)
+        ltls::train::ParallelTrainer::<T, S>::with_topology(cfg, train.n_features, train.n_labels)
     };
     // Fresh trainer, or resume from the latest checkpoint in the dir. An
     // empty or not-yet-created directory starts fresh, so rerunning the
@@ -277,8 +334,8 @@ fn run_train<T: Topology>(
             Ok(None)
         };
         match latest {
-            Ok(Some((epoch, path))) => match ltls::model::io::load_checkpoint::<T>(&path)
-                .and_then(|ck| ltls::train::ParallelTrainer::<T>::resume(cfg.clone(), ck))
+            Ok(Some((epoch, path))) => match ltls::model::io::load_checkpoint::<T, S>(&path)
+                .and_then(|ck| ltls::train::ParallelTrainer::<T, S>::resume(cfg.clone(), ck))
             {
                 Ok(tr) => {
                     println!(
@@ -366,7 +423,7 @@ fn run_train<T: Topology>(
     let p1 = ltls::eval::precision_at_1(&model, test);
     let t = ltls::eval::time_predictions(&model, test, 1);
     println!(
-        "precision@1 = {:.4}   train {:.2}s   predict {:.3}s ({:.1} µs/ex)   model {:.2} MB (W={}, E={})",
+        "precision@1 = {:.4}   train {:.2}s   predict {:.3}s ({:.1} µs/ex)   model {:.2} MB (W={}, E={}, backend={})",
         p1,
         train_s,
         t.total_s,
@@ -374,7 +431,30 @@ fn run_train<T: Topology>(
         model.bytes() as f64 / 1e6,
         model.trellis.width(),
         model.trellis.num_edges(),
+        model.model.backend().name(),
     );
+    if model.model.hash_bits() > 0 {
+        let e = model.trellis.num_edges();
+        let dense_equiv_bytes = ((model.model.n_features() * e + e) * 4) as f64;
+        println!(
+            "hashed storage: 2^{} buckets, {:.2} MB vs dense-equivalent {:.2} MB ({:.1}x smaller)",
+            model.model.hash_bits(),
+            model.bytes() as f64 / 1e6,
+            dense_equiv_bytes / 1e6,
+            dense_equiv_bytes / model.bytes() as f64,
+        );
+    }
+    if l1_lambda > 0.0 {
+        // One weight scan feeds both derived metrics.
+        let zeros = model.model.zero_weights();
+        let zf = zeros as f64 / model.model.weight_count().max(1) as f64;
+        let eff = model.bytes() - zeros * model.model.weight_elem_bytes();
+        println!(
+            "l1 (λ={l1_lambda}): zero-fraction {zf:.4} → effective {:.2} MB of {:.2} MB stored",
+            eff as f64 / 1e6,
+            model.bytes() as f64 / 1e6,
+        );
+    }
     // Full XC metric sweep + optional model persistence.
     let metrics = ltls::eval::metrics::evaluate(&model, test, &[1, 3, 5]);
     println!("{metrics}");
@@ -390,49 +470,53 @@ fn run_train<T: Topology>(
     0
 }
 
-/// `ltls eval --model m.ltls --dataset <analog|file.svm>`: load a saved
-/// model (any width — the file records it) and report the full XC metric
-/// suite on the test split.
-fn cmd_eval(args: &Args) -> i32 {
-    let Some(path) = args.get("model") else {
+/// `ltls quantize --model in.ltls --out out.ltls`: convert a trained dense
+/// model file to the serve-only q8 backend (~4× smaller weight block).
+fn cmd_quantize(args: &Args) -> i32 {
+    let Some(input) = args.get("model") else {
         eprintln!("error: --model <file> is required");
         return 1;
     };
-    let model = match ltls::model::io::load_any(std::path::Path::new(path)) {
+    let out = args.get_str("out", "model.q8.ltls");
+    let loaded = match ltls::model::io::load_any(std::path::Path::new(input)) {
         Ok(m) => m,
         Err(e) => {
             eprintln!("error: {e}");
             return 1;
         }
     };
-    let (_, test) = match load_dataset(args) {
-        Ok(x) => x,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 1;
+    fn write_q8<T: Topology>(
+        q8: ltls::train::TrainedModel<T, ltls::model::Q8Store>,
+        dense_bytes: usize,
+        out: &str,
+    ) -> i32 {
+        match ltls::model::io::save(&q8, std::path::Path::new(out)) {
+            Ok(()) => {
+                println!(
+                    "quantized: {:.2} MB (f32) → {:.2} MB (q8), {:.2}x smaller; wrote {out}",
+                    dense_bytes as f64 / 1e6,
+                    q8.bytes() as f64 / 1e6,
+                    dense_bytes as f64 / q8.bytes() as f64,
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("error saving quantized model: {e}");
+                1
+            }
         }
-    };
-    println!(
-        "loaded {path}: C={} W={} E={}",
-        model.c(),
-        model.width(),
-        model.num_edges()
-    );
-    fn report<T: Topology>(m: &ltls::train::TrainedModel<T>, test: &ltls::data::Dataset) {
-        let r = ltls::eval::metrics::evaluate(m, test, &[1, 3, 5]);
-        println!(
-            "{} (C={}, W={}, E={})",
-            r,
-            m.trellis.c(),
-            m.trellis.width(),
-            m.trellis.num_edges()
-        );
     }
-    match &model {
-        ltls::model::io::AnyModel::Binary(m) => report(m, &test),
-        ltls::model::io::AnyModel::Wide(m) => report(m, &test),
+    match loaded {
+        ltls::model::io::AnyModel::Binary(m) => write_q8(m.quantized(), m.bytes(), out),
+        ltls::model::io::AnyModel::Wide(m) => write_q8(m.quantized(), m.bytes(), out),
+        other => {
+            eprintln!(
+                "error: quantize expects a dense model file, {input} stores backend={}",
+                other.backend().name()
+            );
+            1
+        }
     }
-    0
 }
 
 fn cmd_tables(args: &Args) -> i32 {
@@ -476,8 +560,12 @@ fn run_deep(epochs: usize, step_cap: usize, lr: f32, scale: f64) -> Result<(), S
     println!("PJRT platform: {}", engine.platform());
     let mut deep = DeepLtls::load(&engine, meta.clone())?;
 
-    // The imageNet analog at the artifact's dimensions.
-    let analog = ltls::data::datasets::by_name("imageNet").unwrap();
+    // The imageNet analog at the artifact's dimensions. Routed through the
+    // CLI error path (no unwrap): a registry rename must print a usage
+    // error, not panic.
+    let analog = ltls::data::datasets::by_name("imageNet")
+        .ok_or("unknown dataset \"imageNet\" (the deep path needs the imageNet analog; \
+                was the dataset registry renamed?)")?;
     let (train, test) = analog.generate(scale, 7);
     let b = meta.batch;
     let n = train.n_examples();
@@ -511,6 +599,14 @@ fn run_deep(epochs: usize, step_cap: usize, lr: f32, scale: f64) -> Result<(), S
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    if let Some(path) = args.get("model") {
+        let path = path.to_string();
+        return serve_saved(args, &path);
+    }
+    if args.get_bool("mmap") {
+        eprintln!("error: --mmap requires --model <file> (a saved v3 model to map)");
+        return 1;
+    }
     let (train, test) = match load_dataset(args) {
         Ok(x) => x,
         Err(e) => {
@@ -533,13 +629,59 @@ fn cmd_serve(args: &Args) -> i32 {
     }
 }
 
+/// `ltls serve --model m.ltls [--mmap]`: serve a saved model of any
+/// (width, backend) pair; `--mmap` borrows the weight block zero-copy
+/// from the mapped file instead of materializing it on the heap.
+fn serve_saved(args: &Args, path: &str) -> i32 {
+    let mmap = args.get_bool("mmap");
+    let p = std::path::Path::new(path);
+    let loaded = if mmap {
+        ltls::model::io::load_any_mmap(p)
+    } else {
+        ltls::model::io::load_any(p)
+    };
+    let loaded = match loaded {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "serving model {path}: C={} W={} E={} backend={} size={:.2} MB mmap={}",
+        loaded.c(),
+        loaded.width(),
+        loaded.num_edges(),
+        loaded.backend().name(),
+        loaded.bytes() as f64 / 1e6,
+        if loaded.is_mapped() { "yes" } else { "no" },
+    );
+    // Request traffic comes from the dataset's test split.
+    let (_, test) = match load_dataset(args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    if test.n_features > loaded.n_features() {
+        eprintln!(
+            "error: dataset has {} features but the model was trained on {} — serve the \
+             dataset the model was trained for",
+            test.n_features,
+            loaded.n_features()
+        );
+        return 1;
+    }
+    ltls::with_any_model!(loaded, m => drive_server(args, ltls::coordinator::BatchedLtls(m), &test))
+}
+
 fn run_serve<T: Topology>(
     args: &Args,
     train: &ltls::data::Dataset,
     test: &ltls::data::Dataset,
     width: u32,
 ) -> i32 {
-    use ltls::coordinator::{BatchedLtls, PredictServer, ServerConfig};
     let tcfg = ltls::train::TrainConfig { width, ..Default::default() };
     let mut tr =
         match ltls::train::Trainer::<T>::with_topology(tcfg, train.n_features, train.n_labels) {
@@ -551,6 +693,17 @@ fn run_serve<T: Topology>(
         };
     tr.fit(train, args.get_usize("epochs", 3));
     let model = tr.into_model();
+    drive_server(args, ltls::coordinator::BatchedLtls(model), test)
+}
+
+/// Start the worker pool on `model`, pump `--requests` requests from the
+/// test split through it, and print the serving metrics.
+fn drive_server<M: ltls::coordinator::server::BatchModel>(
+    args: &Args,
+    model: M,
+    test: &ltls::data::Dataset,
+) -> i32 {
+    use ltls::coordinator::{PredictServer, ServerConfig};
     let cfg = ServerConfig {
         batcher: ltls::coordinator::BatcherConfig {
             max_batch: args.get_usize("batch", 64),
@@ -560,7 +713,7 @@ fn run_serve<T: Topology>(
         // 0 → one worker per available core.
         workers: args.get_usize("workers", 0),
     };
-    let server = PredictServer::start(BatchedLtls(model), cfg);
+    let server = PredictServer::start(model, cfg);
     println!("serving with {} workers (batched LTLS path)", server.n_workers());
     let n_req = args.get_usize("requests", 20_000);
     let timer = ltls::util::timer::Timer::new();
@@ -579,6 +732,56 @@ fn run_serve<T: Topology>(
     println!("{}", server.metrics.summary());
     println!("throughput: {:.0} req/s", n_req as f64 / secs);
     server.shutdown();
+    0
+}
+
+/// `ltls eval --model m.ltls --dataset <analog|file.svm>`: load a saved
+/// model (any width and backend — the file records both) and report the
+/// full XC metric suite on the test split, plus the memory footprint.
+fn cmd_eval(args: &Args) -> i32 {
+    let Some(path) = args.get("model") else {
+        eprintln!("error: --model <file> is required");
+        return 1;
+    };
+    let model = match ltls::model::io::load_any(std::path::Path::new(path)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let (_, test) = match load_dataset(args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "loaded {path}: C={} W={} E={} backend={} size={:.2} MB (effective {:.2} MB, zero-fraction {:.4})",
+        model.c(),
+        model.width(),
+        model.num_edges(),
+        model.backend().name(),
+        model.bytes() as f64 / 1e6,
+        model.effective_bytes() as f64 / 1e6,
+        model.zero_fraction(),
+    );
+    fn report<T: Topology, S: WeightStore>(
+        m: &ltls::train::TrainedModel<T, S>,
+        test: &ltls::data::Dataset,
+    ) {
+        let r = ltls::eval::metrics::evaluate(m, test, &[1, 3, 5]);
+        println!(
+            "{} (C={}, W={}, E={}, backend={})",
+            r,
+            m.trellis.c(),
+            m.trellis.width(),
+            m.trellis.num_edges(),
+            m.model.backend().name()
+        );
+    }
+    ltls::with_any_model!(&model, m => report(m, &test));
     0
 }
 

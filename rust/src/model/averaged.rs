@@ -6,16 +6,20 @@
 //! each sparse update, `(1/T) Σ_t w_t = w_T − u/T` exactly (each `Δ_τ`
 //! appears in the `T−τ+1` iterates `w_τ … w_T`).
 //!
-//! Storage mirrors [`super::linear::LinearEdgeModel`]'s feature-major
-//! layout, and [`Averager::record_edges`] fuses a separation-loss update
-//! the same way.
+//! Storage mirrors the model's strip-major layout (`n_strips × E` — `D`
+//! strips for the dense store, `2^b` for the hashed store), and every
+//! record goes through the store's [`StripCodec`] so the shadow
+//! accumulators land exactly where the model's own update landed. With the
+//! dense [`IdentityCodec`](super::store::IdentityCodec) the arithmetic is
+//! bit-identical to the pre-codec code (sign `+1.0` multiplies out).
 
+use super::store::StripCodec;
 use crate::sparse::SparseVec;
 
-/// Averaging companion for a feature-major `D × E` weight matrix.
+/// Averaging companion for a strip-major `n_strips × E` weight matrix.
 #[derive(Clone, Debug)]
 pub struct Averager {
-    /// Shadow accumulators, feature-major like the model.
+    /// Shadow accumulators, strip-major like the model.
     u: Vec<f32>,
     u_bias: Vec<f32>,
     /// Current step counter (1-based after the first `tick`).
@@ -24,8 +28,11 @@ pub struct Averager {
 }
 
 impl Averager {
-    pub fn new(n_edges: usize, n_features: usize) -> Self {
-        Averager { u: vec![0.0; n_edges * n_features], u_bias: vec![0.0; n_edges], t: 0, n_edges }
+    /// Shadow storage for `n_edges` edges × `n_strips` weight strips
+    /// (`n_strips` = the store's physical strip count, see
+    /// [`super::store::TrainableStore::n_strips`]).
+    pub fn new(n_edges: usize, n_strips: usize) -> Self {
+        Averager { u: vec![0.0; n_edges * n_strips], u_bias: vec![0.0; n_edges], t: 0, n_edges }
     }
 
     /// Advance the step counter; call once per SGD example.
@@ -36,22 +43,31 @@ impl Averager {
 
     /// Record a sparse update `w_e += scale·x` made at the current step.
     #[inline]
-    pub fn record(&mut self, e: usize, x: SparseVec, scale: f32) {
+    pub fn record<C: StripCodec>(&mut self, codec: C, e: usize, x: SparseVec, scale: f32) {
         let ne = self.n_edges;
         let ts = (self.t - 1) as f32 * scale;
         for (&i, &v) in x.indices.iter().zip(x.values) {
-            self.u[i as usize * ne + e] += ts * v;
+            let (s, sign) = codec.strip_of(i);
+            self.u[s as usize * ne + e] += (ts * v) * sign;
         }
         self.u_bias[e] += ts * 0.1;
     }
 
-    /// Fused twin of [`crate::model::LinearEdgeModel::update_edges`].
-    pub fn record_edges(&mut self, pos: &[u32], neg: &[u32], x: SparseVec, scale: f32) {
+    /// Fused twin of [`super::store::TrainableStore::update_edges`].
+    pub fn record_edges<C: StripCodec>(
+        &mut self,
+        codec: C,
+        pos: &[u32],
+        neg: &[u32],
+        x: SparseVec,
+        scale: f32,
+    ) {
         let ne = self.n_edges;
         let ts = (self.t - 1) as f32 * scale;
         for (&i, &v) in x.indices.iter().zip(x.values) {
-            let strip = &mut self.u[i as usize * ne..(i as usize + 1) * ne];
-            let sv = ts * v;
+            let (s, sign) = codec.strip_of(i);
+            let strip = &mut self.u[s as usize * ne..(s as usize + 1) * ne];
+            let sv = (ts * v) * sign;
             for &e in pos {
                 strip[e as usize] += sv;
             }
@@ -87,6 +103,7 @@ impl Averager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::store::{IdentityCodec, TrainableStore};
     use crate::model::LinearEdgeModel;
     use crate::util::rng::Rng;
 
@@ -118,8 +135,8 @@ mod tests {
             let edge = rng.index(e);
             let scale = rng.normal() * 0.1;
             m.update_edge(edge, x, scale);
-            avg.record(edge, x, scale);
-            for (s, w) in sum_w.iter_mut().zip(&m.w) {
+            avg.record(IdentityCodec, edge, x, scale);
+            for (s, w) in sum_w.iter_mut().zip(m.w.iter()) {
                 *s += *w as f64;
             }
         }
@@ -142,10 +159,10 @@ mod tests {
         for _ in 0..3 {
             a.tick();
             b.tick();
-            a.record_edges(&[1, 2], &[5], x, 0.7);
-            b.record(1, x, 0.7);
-            b.record(2, x, 0.7);
-            b.record(5, x, -0.7);
+            a.record_edges(IdentityCodec, &[1, 2], &[5], x, 0.7);
+            b.record(IdentityCodec, 1, x, 0.7);
+            b.record(IdentityCodec, 2, x, 0.7);
+            b.record(IdentityCodec, 5, x, -0.7);
         }
         assert_eq!(a.u, b.u);
         assert_eq!(a.u_bias, b.u_bias);
@@ -159,5 +176,33 @@ mod tests {
         let (aw, ab) = avg.averaged(&w, &b);
         assert_eq!(aw, w);
         assert_eq!(ab, b);
+    }
+
+    /// The averager shadows a hashed store exactly: recording through the
+    /// hash codec lands where the model's own update landed, so averaged
+    /// weights equal the brute-force mean of hashed iterates too.
+    #[test]
+    fn shadows_hashed_store() {
+        use crate::model::hashed::HashedStore;
+        let mut m = HashedStore::new(4, 300, 4, 9).unwrap();
+        let mut avg = Averager::new(4, m.n_strips());
+        let mut sum_w = vec![0.0f64; m.raw_w().len()];
+        let idx = [3u32, 120, 299];
+        let val = [1.0f32, -0.5, 2.0];
+        let x = SparseVec::new(&idx, &val);
+        for step in 0..9 {
+            avg.tick();
+            let scale = 0.1 * (step as f32 + 1.0);
+            m.update_edges(&[0, 2], &[3], x, scale);
+            avg.record_edges(m.codec(), &[0, 2], &[3], x, scale);
+            for (s, w) in sum_w.iter_mut().zip(m.raw_w()) {
+                *s += *w as f64;
+            }
+        }
+        let (aw, _) = avg.averaged(m.raw_w(), &m.bias);
+        for i in 0..aw.len() {
+            let brute = (sum_w[i] / 9.0) as f32;
+            assert!((aw[i] - brute).abs() < 1e-4, "i={i}: {} vs {brute}", aw[i]);
+        }
     }
 }

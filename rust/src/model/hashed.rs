@@ -1,0 +1,323 @@
+//! Signed feature hashing ("hashing trick", Weinberger et al. 2009) as a
+//! [`WeightStore`] backend: feature `i`'s weight strip lives in bucket
+//! `hash(i) mod 2^b`, and its value enters every score/update multiplied
+//! by a pseudo-random sign `ξ(i) ∈ {−1, +1}`.
+//!
+//! Memory is `2^b · E` floats — **bounded independently of D** — so on
+//! extreme datasets (D in the millions) the model shrinks by `D / 2^b`
+//! while collisions act as mild regularizing noise; the sign hash makes
+//! colliding contributions cancel in expectation instead of biasing
+//! scores upward. The store is fully trainable: the serial and Hogwild
+//! trainers drive it through the same [`StripCodec`] kernels as the dense
+//! store (`ltls train --hash-bits b`), and checkpoints/model files carry
+//! the `(bits, seed)` pair so resume and serving rebuild the identical
+//! hash function.
+
+use super::mmap::F32Buf;
+use super::store::{
+    codec_edge_scores, codec_edge_scores_batch, Backend, StripCodec, TrainableStore, WeightBlock,
+    WeightStore,
+};
+use crate::sparse::SparseVec;
+
+/// Valid `--hash-bits` range: below 4 every feature collides into a
+/// handful of buckets; above 30 the table exceeds any dense model worth
+/// hashing.
+pub const MIN_HASH_BITS: u32 = 4;
+pub const MAX_HASH_BITS: u32 = 30;
+
+/// splitmix64 finalizer — full-avalanche 64-bit mix.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The feature → (bucket, sign) hash, shared by every kernel that touches
+/// a hashed store (plain, batched, Hogwild-atomic, averaging).
+#[derive(Clone, Copy, Debug)]
+pub struct HashCodec {
+    mask: u32,
+    seed: u64,
+}
+
+impl HashCodec {
+    pub fn new(bits: u32, seed: u64) -> HashCodec {
+        debug_assert!((MIN_HASH_BITS..=MAX_HASH_BITS).contains(&bits));
+        HashCodec { mask: (1u32 << bits) - 1, seed }
+    }
+}
+
+impl StripCodec for HashCodec {
+    #[inline]
+    fn strip_of(&self, i: u32) -> (u32, f32) {
+        let h = mix64(self.seed ^ (i as u64));
+        // Low bits pick the bucket, the (independent) top bit the sign.
+        let bucket = (h as u32) & self.mask;
+        let sign = if h & (1 << 63) == 0 { 1.0 } else { -1.0 };
+        (bucket, sign)
+    }
+}
+
+/// Feature-hashed linear edge model: `2^bits` strips of `E` floats.
+#[derive(Clone, Debug)]
+pub struct HashedStore {
+    pub n_edges: usize,
+    /// Logical feature dimensionality `D` (what the dataset indexes with).
+    pub n_features: usize,
+    /// Bucket count exponent: `2^bits` physical strips.
+    pub bits: u32,
+    /// Hash seed (persisted — serving must rebuild the same function).
+    pub seed: u64,
+    /// Bucket-major `2^bits × E` weights.
+    pub w: F32Buf,
+    /// Per-edge bias.
+    pub bias: Vec<f32>,
+}
+
+impl HashedStore {
+    /// Zero-initialized hashed model.
+    pub fn new(n_edges: usize, n_features: usize, bits: u32, seed: u64) -> Result<Self, String> {
+        if !(MIN_HASH_BITS..=MAX_HASH_BITS).contains(&bits) {
+            return Err(format!(
+                "--hash-bits must be in {MIN_HASH_BITS}..={MAX_HASH_BITS}, got {bits}"
+            ));
+        }
+        let strips = 1usize << bits;
+        Ok(HashedStore {
+            n_edges,
+            n_features,
+            bits,
+            seed,
+            w: F32Buf::from(vec![0.0; strips * n_edges]),
+            bias: vec![0.0; n_edges],
+        })
+    }
+
+    /// Dense-equivalent parameter count this store replaces (`E·D + E`) —
+    /// the compression headline is `dense_params / param_count`.
+    pub fn dense_equivalent_params(&self) -> usize {
+        self.n_edges * self.n_features + self.n_edges
+    }
+}
+
+impl WeightStore for HashedStore {
+    const BACKEND: Backend = Backend::Hashed;
+
+    fn n_edges(&self) -> usize {
+        self.n_edges
+    }
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+    fn bias(&self) -> &[f32] {
+        &self.bias
+    }
+    fn edge_scores(&self, x: SparseVec, out: &mut Vec<f32>) {
+        codec_edge_scores(&self.w, &self.bias, self.n_edges, self.codec(), x, out);
+    }
+    fn edge_scores_batch(
+        &self,
+        rows: &[SparseVec],
+        scratch: &mut Vec<(u32, u32, f32)>,
+        out: &mut Vec<f32>,
+    ) {
+        codec_edge_scores_batch(
+            &self.w,
+            &self.bias,
+            self.n_edges,
+            self.codec(),
+            rows,
+            scratch,
+            out,
+        );
+    }
+    fn param_count(&self) -> usize {
+        self.w.len() + self.bias.len()
+    }
+    fn bytes(&self) -> usize {
+        self.param_count() * std::mem::size_of::<f32>()
+    }
+    fn weight_count(&self) -> usize {
+        self.w.len()
+    }
+    fn weight_elem_bytes(&self) -> usize {
+        std::mem::size_of::<f32>()
+    }
+    fn zero_weights(&self) -> usize {
+        self.w.iter().filter(|&&v| v == 0.0).count()
+    }
+    fn is_mapped(&self) -> bool {
+        self.w.is_mapped()
+    }
+
+    fn write_meta(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.bits.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+    }
+    fn weight_block_len(&self) -> usize {
+        self.w.len() * 4
+    }
+    fn write_weights(&self, out: &mut Vec<u8>) {
+        for &w in self.w.iter() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    fn read_store(
+        n_edges: usize,
+        n_features: usize,
+        meta: &[u8],
+        bias: Vec<f32>,
+        weights: WeightBlock<'_>,
+    ) -> Result<Self, String> {
+        if meta.len() != 12 {
+            return Err(format!("hashed model meta is {} bytes, expected 12", meta.len()));
+        }
+        let bits = u32::from_le_bytes(meta[0..4].try_into().unwrap());
+        let seed = u64::from_le_bytes(meta[4..12].try_into().unwrap());
+        if !(MIN_HASH_BITS..=MAX_HASH_BITS).contains(&bits) {
+            return Err(format!("hashed model has invalid hash-bits {bits}"));
+        }
+        if bias.len() != n_edges {
+            return Err(format!("bias is {} entries, expected {n_edges}", bias.len()));
+        }
+        let w = weights.into_f32((1usize << bits) * n_edges)?;
+        Ok(HashedStore { n_edges, n_features, bits, seed, w, bias })
+    }
+}
+
+impl TrainableStore for HashedStore {
+    type Codec = HashCodec;
+
+    fn codec(&self) -> HashCodec {
+        HashCodec::new(self.bits, self.seed)
+    }
+    fn n_strips(&self) -> usize {
+        1usize << self.bits
+    }
+    fn raw_w(&self) -> &[f32] {
+        &self.w
+    }
+    fn raw_parts_mut(&mut self) -> (&mut [f32], &mut [f32]) {
+        (self.w.as_mut_slice(), self.bias.as_mut_slice())
+    }
+    fn hash_bits(&self) -> u32 {
+        self.bits
+    }
+    fn for_topology_cfg<T: crate::graph::Topology>(
+        t: &T,
+        n_features: usize,
+        hash_bits: u32,
+        seed: u64,
+    ) -> Result<Self, String> {
+        Self::new(t.num_edges(), n_features, hash_bits, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_is_deterministic_and_in_range() {
+        let c = HashCodec::new(8, 42);
+        for i in 0..10_000u32 {
+            let (b1, s1) = c.strip_of(i);
+            let (b2, s2) = c.strip_of(i);
+            assert_eq!((b1, s1), (b2, s2));
+            assert!(b1 < 256);
+            assert!(s1 == 1.0 || s1 == -1.0);
+        }
+    }
+
+    #[test]
+    fn codec_spreads_buckets_and_signs() {
+        let c = HashCodec::new(8, 7);
+        let mut counts = [0usize; 256];
+        let mut neg = 0usize;
+        let n = 50_000u32;
+        for i in 0..n {
+            let (b, s) = c.strip_of(i);
+            counts[b as usize] += 1;
+            if s < 0.0 {
+                neg += 1;
+            }
+        }
+        // Every bucket used; occupancy within 3x of uniform.
+        let expect = n as usize / 256;
+        for (b, &cnt) in counts.iter().enumerate() {
+            assert!(cnt > expect / 3 && cnt < expect * 3, "bucket {b}: {cnt}");
+        }
+        // Signs near-balanced.
+        let frac = neg as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.02, "negative-sign fraction {frac}");
+        // Different seeds give different functions.
+        let c2 = HashCodec::new(8, 8);
+        let same = (0..1000u32).filter(|&i| c.strip_of(i) == c2.strip_of(i)).count();
+        assert!(same < 100, "{same}/1000 collisions across seeds");
+    }
+
+    #[test]
+    fn scores_match_manual_signed_accumulation() {
+        let mut m = HashedStore::new(4, 1000, 6, 3).unwrap();
+        let idx = [5u32, 700, 999];
+        let val = [1.0f32, -2.0, 0.5];
+        let x = SparseVec::new(&idx, &val);
+        m.update_edge(2, x, 0.5);
+        let mut h = Vec::new();
+        WeightStore::edge_scores(&m, x, &mut h);
+        // Manual: h_e = bias_e + Σ_i sign_i·v_i · w[bucket_i·E + e].
+        let codec = m.codec();
+        let mut want = m.bias.clone();
+        for (&i, &v) in idx.iter().zip(&val) {
+            let (b, s) = codec.strip_of(i);
+            for (e, w) in want.iter_mut().enumerate() {
+                *w += (v * s) * m.w[b as usize * 4 + e];
+            }
+        }
+        for (a, b) in h.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // The self-product is positive regardless of signs: the update
+        // wrote sign·v and the score reads sign·v again.
+        assert!(h[2] > 0.0);
+    }
+
+    #[test]
+    fn batch_matches_per_row_bitwise() {
+        let mut m = HashedStore::new(6, 500, 5, 11).unwrap();
+        let xa = SparseVec::new(&[0, 77, 499], &[1.0, 2.0, -1.0]);
+        let xb = SparseVec::new(&[3, 77], &[0.5, -0.5]);
+        m.update_edge(1, xa, 0.3);
+        m.update_edges(&[0, 2], &[5], xb, -0.7);
+        let rows = [xa, xb, SparseVec::new(&[], &[])];
+        let (mut gather, mut batch) = (Vec::new(), Vec::new());
+        WeightStore::edge_scores_batch(&m, &rows, &mut gather, &mut batch);
+        for (r, x) in rows.iter().enumerate() {
+            let mut single = Vec::new();
+            WeightStore::edge_scores(&m, *x, &mut single);
+            assert_eq!(&batch[r * 6..(r + 1) * 6], single.as_slice(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn memory_is_bounded_by_bits_not_d() {
+        let small_d = HashedStore::new(10, 1_000, 8, 1).unwrap();
+        let huge_d = HashedStore::new(10, 10_000_000, 8, 1).unwrap();
+        assert_eq!(small_d.bytes(), huge_d.bytes());
+        assert_eq!(huge_d.param_count(), 256 * 10 + 10);
+        assert!(huge_d.dense_equivalent_params() > 100 * huge_d.param_count());
+        assert_eq!(huge_d.hash_bits(), 8);
+        assert_eq!(huge_d.backend(), Backend::Hashed);
+    }
+
+    #[test]
+    fn rejects_out_of_range_bits() {
+        assert!(HashedStore::new(4, 100, 3, 0).is_err());
+        assert!(HashedStore::new(4, 100, 31, 0).is_err());
+        assert!(HashedStore::new(4, 100, 4, 0).is_ok());
+        assert!(HashedStore::new(4, 100, 30, 0).is_ok());
+    }
+}

@@ -4,19 +4,33 @@
 //! processes — plus the epoch-boundary training **checkpoint** format used
 //! by [`crate::train::ParallelTrainer`] for crash-safe resume.
 //!
-//! Model format (little-endian):
+//! Model format **v3** (little-endian):
 //! ```text
 //! magic "LTLS" | version u32 | C u64 | width u32 | D u64 | E u64 | n_labels u64
-//! bias  [E f32] | weights [D*E f32, feature-major]
+//! backend u32 | meta_len u64 | meta[meta_len]
+//! bias  [E f32]
 //! n_pairs u64 | (label u32, path u64) * n_pairs
+//! wlen u64 | zero padding to the next 64-byte file offset
+//! weights [wlen bytes]                                         (EOF)
 //! ```
 //!
-//! Version 2 added the `width u32` field (the W-LTLS trellis width);
-//! version-1 files have no width field and load as width 2. The loader is
-//! generic over [`Topology`] — `deserialize::<Trellis>` rejects wide
-//! files, `deserialize::<WideTrellis>` accepts any width — and
-//! [`load_any`] dispatches on the stored width for callers (the CLI) that
-//! learn the topology from the file.
+//! * `backend` tags the weight representation ([`Backend`]): dense (0),
+//!   hashed (1) or q8 (2). `meta` is the store-specific fixed section —
+//!   empty for dense, `(bits u32, seed u64)` for hashed, `E` f32 scales
+//!   for q8.
+//! * The weight block is the **last** section and starts at a 64-byte file
+//!   offset, so a page-aligned `mmap` of the file yields an aligned,
+//!   zero-copy `&[f32]`/`&[i8]` view: [`load_any_mmap`] /
+//!   [`deserialize_mapped`] parse only the small sections onto the heap
+//!   and borrow the weights from the mapping ([`crate::model::mmap`]).
+//!
+//! Version history: v1 had no width field (loads as width 2); v2 added
+//! `width u32` and stored `bias | weights | pairs` with no backend
+//! framing. Both load as **dense** through the current reader. The loader
+//! is generic over [`Topology`] and the [`WeightStore`] —
+//! `deserialize::<Trellis, DenseStore>` rejects wide or non-dense files —
+//! and [`load_any`] dispatches on the stored (width, backend) pair for
+//! callers (the CLI) that learn both from the file.
 //!
 //! Checkpoint format (little-endian, versioned independently):
 //! ```text
@@ -28,22 +42,34 @@
 //!
 //! A checkpoint stores the *raw* (unaveraged, un-thresholded) weights plus
 //! the global SGD step, so a resumed run continues the lr schedule and the
-//! per-epoch shuffles exactly. Not stored (restarts fresh at resume): the
-//! weight-averager state and the assigner's random-fallback RNG.
+//! per-epoch shuffles exactly. The embedded model bytes carry the backend
+//! tag, so a checkpoint of a hashed run resumes as hashed (and refuses to
+//! resume under a different backend). Not stored (restarts fresh at
+//! resume): the weight-averager state and the assigner's random-fallback
+//! RNG.
 
 use crate::assign::{AssignPolicy, Assigner};
 use crate::graph::{Topology, Trellis, WideTrellis};
-use crate::model::LinearEdgeModel;
+use crate::model::hashed::HashedStore;
+use crate::model::linear::DenseStore;
+use crate::model::mmap::MmapRegion;
+use crate::model::quant::Q8Store;
+use crate::model::store::{parse_f32s, Backend, WeightBlock, WeightStore};
 use crate::train::metrics::EpochMetrics;
 use crate::train::TrainedModel;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 const MAGIC: &[u8; 4] = b"LTLS";
 /// v1: no width field (implicitly 2). v2: width u32 after C.
-const VERSION: u32 = 2;
+/// v3: backend tag + meta section + 64-byte-aligned trailing weight block.
+const VERSION: u32 = 3;
 const CKPT_MAGIC: &[u8; 4] = b"LTCK";
 const CKPT_VERSION: u32 = 1;
+/// File alignment of the v3 weight block (cache-line sized; any mmap page
+/// base is a multiple of it).
+const WEIGHT_ALIGN: usize = 64;
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -59,7 +85,10 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
-        if self.i + n > self.b.len() {
+        // `n` may come straight from an untrusted 64-bit length field, so
+        // compare against the *remaining* bytes (`i ≤ len` always) — the
+        // `i + n` form would overflow and panic on corrupt files.
+        if n > self.b.len() - self.i {
             return Err(format!("truncated model file at byte {}", self.i));
         }
         let s = &self.b[self.i..self.i + n];
@@ -73,53 +102,74 @@ impl<'a> Reader<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
-        let raw = self.take(n * 4)?;
-        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(parse_f32s(self.take(n * 4)?))
+    }
+    /// Skip to the next multiple-of-`a` offset (the v3 weight padding).
+    fn align(&mut self, a: usize) -> Result<(), String> {
+        let rem = self.i % a;
+        if rem != 0 {
+            self.take(a - rem)?;
+        }
+        Ok(())
     }
 }
 
-/// Serialize a trained model (any topology; the file records the width).
-pub fn serialize<T: Topology>(m: &TrainedModel<T>) -> Vec<u8> {
+/// Serialize a trained model (any topology and weight backend; the file
+/// records both).
+pub fn serialize<T: Topology, S: WeightStore>(m: &TrainedModel<T, S>) -> Vec<u8> {
     serialize_parts(&m.trellis, &m.model, &m.assigner)
 }
 
 /// Borrowing variant of [`serialize`]: write a model straight from live
 /// trainer state, without assembling (or cloning into) a `TrainedModel`.
-pub fn serialize_parts<T: Topology>(
+pub fn serialize_parts<T: Topology, S: WeightStore>(
     trellis: &T,
-    model: &LinearEdgeModel,
+    model: &S,
     assigner: &Assigner,
 ) -> Vec<u8> {
-    let mut out = Vec::with_capacity(16 + model.w.len() * 4);
+    let mut out = Vec::with_capacity(model.weight_block_len() + 4096);
     out.extend_from_slice(MAGIC);
     put_u32(&mut out, VERSION);
     put_u64(&mut out, trellis.c());
     put_u32(&mut out, trellis.width());
-    put_u64(&mut out, model.n_features as u64);
-    put_u64(&mut out, model.n_edges as u64);
+    put_u64(&mut out, model.n_features() as u64);
+    put_u64(&mut out, model.n_edges() as u64);
     let pairs: Vec<(u32, u64)> = assigner.table.pairs().collect();
     let n_labels = pairs.iter().map(|&(l, _)| l as u64 + 1).max().unwrap_or(0);
     put_u64(&mut out, n_labels);
-    for &b in &model.bias {
+    put_u32(&mut out, model.backend().tag());
+    let mut meta = Vec::new();
+    model.write_meta(&mut meta);
+    put_u64(&mut out, meta.len() as u64);
+    out.extend_from_slice(&meta);
+    for &b in model.bias() {
         out.extend_from_slice(&b.to_le_bytes());
-    }
-    for &w in &model.w {
-        out.extend_from_slice(&w.to_le_bytes());
     }
     put_u64(&mut out, pairs.len() as u64);
     for (l, p) in pairs {
         put_u32(&mut out, l);
         put_u64(&mut out, p);
     }
+    put_u64(&mut out, model.weight_block_len() as u64);
+    while out.len() % WEIGHT_ALIGN != 0 {
+        out.push(0);
+    }
+    model.write_weights(&mut out);
     out
 }
 
-/// Deserialize a trained model as topology `T`. Errors if the file's
-/// stored width is one `T` cannot represent (e.g. a wide file into
-/// `TrainedModel<Trellis>`); use [`deserialize_any`] to dispatch on the
-/// stored width instead.
-pub fn deserialize<T: Topology>(bytes: &[u8]) -> Result<TrainedModel<T>, String> {
-    let mut r = Reader { b: bytes, i: 0 };
+/// The header fields shared by every version, plus where the body starts.
+struct FileHeader {
+    version: u32,
+    c: u64,
+    width: u32,
+    d: usize,
+    e: usize,
+    n_labels: usize,
+    backend: Backend,
+}
+
+fn read_header(r: &mut Reader) -> Result<FileHeader, String> {
     if r.take(4)? != MAGIC {
         return Err("not an LTLS model file (bad magic)".into());
     }
@@ -132,116 +182,271 @@ pub fn deserialize<T: Topology>(bytes: &[u8]) -> Result<TrainedModel<T>, String>
     let d = r.u64()? as usize;
     let e = r.u64()? as usize;
     let n_labels = r.u64()? as usize;
-    let trellis = T::build(c, width)?;
-    if trellis.num_edges() != e {
-        return Err(format!("edge count mismatch: file {e}, trellis {}", trellis.num_edges()));
+    let backend = if version >= 3 { Backend::from_tag(r.u32()?)? } else { Backend::Dense };
+    Ok(FileHeader { version, c, width, d, e, n_labels, backend })
+}
+
+/// Core deserializer: parses `bytes`, taking the weight block as a borrow
+/// of `region` when mapped loading is requested (then `bytes` must be
+/// `region.bytes()`).
+fn deserialize_impl<T: Topology, S: WeightStore>(
+    bytes: &[u8],
+    region: Option<&Arc<MmapRegion>>,
+) -> Result<TrainedModel<T, S>, String> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let hdr = read_header(&mut r)?;
+    if hdr.backend != S::BACKEND {
+        return Err(format!(
+            "file stores a {} model, expected {} (load with `deserialize_any`/`load_any` \
+             to dispatch on the stored backend)",
+            hdr.backend.name(),
+            S::BACKEND.name()
+        ));
     }
-    let bias = r.f32s(e)?;
-    let w = r.f32s(d * e)?;
-    let mut model = LinearEdgeModel::new(e, d);
-    model.bias = bias;
-    model.w = w;
-    let mut assigner = Assigner::new(AssignPolicy::Identity, n_labels.max(1), &trellis, 0);
-    let n_pairs = r.u64()? as usize;
-    for _ in 0..n_pairs {
-        let l = r.u32()?;
-        let p = r.u64()?;
-        assigner.table.bind(l, p);
+    let trellis = T::build(hdr.c, hdr.width)?;
+    if trellis.num_edges() != hdr.e {
+        return Err(format!(
+            "edge count mismatch: file {}, trellis {}",
+            hdr.e,
+            trellis.num_edges()
+        ));
     }
-    if r.i != bytes.len() {
-        return Err(format!("{} trailing bytes", bytes.len() - r.i));
+    let (e, d) = (hdr.e, hdr.d);
+    // The D×E products below come from untrusted file fields: reject
+    // anything that cannot even be sized before multiplying.
+    if d.checked_mul(e).and_then(|n| n.checked_mul(4)).is_none() {
+        return Err(format!("implausible model dimensions D={d} E={e}"));
     }
+    let mut assigner = Assigner::new(AssignPolicy::Identity, hdr.n_labels.max(1), &trellis, 0);
+
+    let model = if hdr.version <= 2 {
+        // Old layout: bias | weights (dense f32) | pairs | EOF.
+        let bias = r.f32s(e)?;
+        let woff = r.i;
+        let wlen = d * e * 4;
+        r.take(wlen)?;
+        let model = S::read_store(e, d, &[], bias, block_of(bytes, region, woff, wlen))?;
+        let n_pairs = r.u64()? as usize;
+        for _ in 0..n_pairs {
+            let l = r.u32()?;
+            let p = r.u64()?;
+            assigner.table.bind(l, p);
+        }
+        if r.i != bytes.len() {
+            return Err(format!("{} trailing bytes", bytes.len() - r.i));
+        }
+        model
+    } else {
+        // v3 layout: meta | bias | pairs | wlen | pad | weights | EOF.
+        let meta_len = r.u64()? as usize;
+        if meta_len > bytes.len() {
+            return Err("truncated model file (meta)".into());
+        }
+        let meta = r.take(meta_len)?.to_vec();
+        let bias = r.f32s(e)?;
+        let n_pairs = r.u64()? as usize;
+        if n_pairs.saturating_mul(12) > bytes.len() {
+            return Err("truncated model file (pairs)".into());
+        }
+        for _ in 0..n_pairs {
+            let l = r.u32()?;
+            let p = r.u64()?;
+            assigner.table.bind(l, p);
+        }
+        let wlen = r.u64()? as usize;
+        r.align(WEIGHT_ALIGN)?;
+        let woff = r.i;
+        r.take(wlen)?;
+        if r.i != bytes.len() {
+            return Err(format!("{} trailing bytes", bytes.len() - r.i));
+        }
+        S::read_store(e, d, &meta, bias, block_of(bytes, region, woff, wlen))?
+    };
     Ok(TrainedModel { trellis, model, assigner })
 }
 
+/// The weight block as a parse-copy borrow of `bytes`, or a zero-copy
+/// borrow of the mapped `region` (when present, `bytes` is
+/// `region.bytes()`, so `off`/`len` index both identically).
+fn block_of<'a>(
+    bytes: &'a [u8],
+    region: Option<&Arc<MmapRegion>>,
+    off: usize,
+    len: usize,
+) -> WeightBlock<'a> {
+    match region {
+        Some(reg) => WeightBlock::Mapped { region: Arc::clone(reg), offset: off, len },
+        None => WeightBlock::Owned(&bytes[off..off + len]),
+    }
+}
+
+/// Deserialize a trained model as topology `T` and weight store `S`.
+/// Errors if the file's stored width or backend is one `(T, S)` cannot
+/// represent; use [`deserialize_any`] to dispatch on the stored pair.
+pub fn deserialize<T: Topology, S: WeightStore>(
+    bytes: &[u8],
+) -> Result<TrainedModel<T, S>, String> {
+    deserialize_impl(bytes, None)
+}
+
+/// Deserialize borrowing the weight block from a mapped file region
+/// (zero-copy: only header, bias, meta and the label↔path table are
+/// materialized on the heap).
+pub fn deserialize_mapped<T: Topology, S: WeightStore>(
+    region: &Arc<MmapRegion>,
+) -> Result<TrainedModel<T, S>, String> {
+    deserialize_impl(region.bytes(), Some(region))
+}
+
 /// Save to a file.
-pub fn save<T: Topology>(m: &TrainedModel<T>, path: &Path) -> Result<(), String> {
+pub fn save<T: Topology, S: WeightStore>(
+    m: &TrainedModel<T, S>,
+    path: &Path,
+) -> Result<(), String> {
     let bytes = serialize(m);
     let mut f = std::fs::File::create(path).map_err(|e| format!("{}: {e}", path.display()))?;
     f.write_all(&bytes).map_err(|e| e.to_string())
 }
 
-/// Load from a file as topology `T`.
-pub fn load<T: Topology>(path: &Path) -> Result<TrainedModel<T>, String> {
-    let mut bytes = Vec::new();
-    std::fs::File::open(path)
-        .map_err(|e| format!("{}: {e}", path.display()))?
-        .read_to_end(&mut bytes)
-        .map_err(|e| e.to_string())?;
+/// Load from a file as topology `T` and store `S`.
+pub fn load<T: Topology, S: WeightStore>(path: &Path) -> Result<TrainedModel<T, S>, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
     deserialize(&bytes)
 }
 
-/// A loaded model whose topology was chosen by the file's stored width:
-/// width 2 gets the canonical [`Trellis`] (register-specialized decode
-/// kernels), anything else a [`WideTrellis`]. This is how the CLI serves
-/// and evaluates model files of any width.
+/// A loaded model whose topology **and weight backend** were chosen by the
+/// file: width 2 gets the canonical [`Trellis`] (register-specialized
+/// decode kernels), anything else a [`WideTrellis`]; the backend tag picks
+/// dense / hashed / q8. This is how the CLI serves and evaluates model
+/// files of any shape.
 pub enum AnyModel {
-    Binary(TrainedModel<Trellis>),
-    Wide(TrainedModel<WideTrellis>),
+    Binary(TrainedModel<Trellis, DenseStore>),
+    Wide(TrainedModel<WideTrellis, DenseStore>),
+    BinaryHashed(TrainedModel<Trellis, HashedStore>),
+    WideHashed(TrainedModel<WideTrellis, HashedStore>),
+    BinaryQ8(TrainedModel<Trellis, Q8Store>),
+    WideQ8(TrainedModel<WideTrellis, Q8Store>),
+}
+
+/// Run `$body` with `$m` bound to the concrete [`AnyModel`] variant — the
+/// 6-way (width × backend) dispatch in one place.
+#[macro_export]
+macro_rules! with_any_model {
+    ($any:expr, $m:ident => $body:expr) => {
+        match $any {
+            $crate::model::io::AnyModel::Binary($m) => $body,
+            $crate::model::io::AnyModel::Wide($m) => $body,
+            $crate::model::io::AnyModel::BinaryHashed($m) => $body,
+            $crate::model::io::AnyModel::WideHashed($m) => $body,
+            $crate::model::io::AnyModel::BinaryQ8($m) => $body,
+            $crate::model::io::AnyModel::WideQ8($m) => $body,
+        }
+    };
 }
 
 impl AnyModel {
     /// Number of classes.
     pub fn c(&self) -> u64 {
-        match self {
-            AnyModel::Binary(m) => m.trellis.c(),
-            AnyModel::Wide(m) => m.trellis.c(),
-        }
+        crate::with_any_model!(self, m => m.trellis.c())
     }
 
     /// Trellis width.
     pub fn width(&self) -> u32 {
-        match self {
-            AnyModel::Binary(m) => m.trellis.width(),
-            AnyModel::Wide(m) => m.trellis.width(),
-        }
+        crate::with_any_model!(self, m => m.trellis.width())
     }
 
     /// Number of learnable edges.
     pub fn num_edges(&self) -> usize {
-        match self {
-            AnyModel::Binary(m) => m.trellis.num_edges(),
-            AnyModel::Wide(m) => m.trellis.num_edges(),
-        }
+        crate::with_any_model!(self, m => m.trellis.num_edges())
+    }
+
+    /// Logical feature dimensionality `D`.
+    pub fn n_features(&self) -> usize {
+        crate::with_any_model!(self, m => m.model.n_features())
+    }
+
+    /// Weight-storage backend.
+    pub fn backend(&self) -> Backend {
+        crate::with_any_model!(self, m => m.model.backend())
+    }
+
+    /// Stored model size in bytes.
+    pub fn bytes(&self) -> usize {
+        crate::with_any_model!(self, m => m.model.bytes())
+    }
+
+    /// Size after dropping exactly-zero weights.
+    pub fn effective_bytes(&self) -> usize {
+        crate::with_any_model!(self, m => m.model.effective_bytes())
+    }
+
+    /// Fraction of exactly-zero stored weights.
+    pub fn zero_fraction(&self) -> f64 {
+        crate::with_any_model!(self, m => m.model.zero_fraction())
+    }
+
+    /// True when the weights borrow a mapped file region.
+    pub fn is_mapped(&self) -> bool {
+        crate::with_any_model!(self, m => m.model.is_mapped())
     }
 }
 
 /// Peek a model file's header: `(C, width)` without building anything.
 pub fn peek_meta(bytes: &[u8]) -> Result<(u64, u32), String> {
     let mut r = Reader { b: bytes, i: 0 };
-    if r.take(4)? != MAGIC {
-        return Err("not an LTLS model file (bad magic)".into());
-    }
-    let version = r.u32()?;
-    if version == 0 || version > VERSION {
-        return Err(format!("unsupported model version {version}"));
-    }
-    let c = r.u64()?;
-    let width = if version >= 2 { r.u32()? } else { 2 };
-    Ok((c, width))
+    let hdr = read_header(&mut r)?;
+    Ok((hdr.c, hdr.width))
 }
 
-/// Deserialize dispatching on the stored width (see [`AnyModel`]).
+/// Peek a model file's weight backend (v1/v2 files are dense).
+pub fn peek_backend(bytes: &[u8]) -> Result<Backend, String> {
+    let mut r = Reader { b: bytes, i: 0 };
+    Ok(read_header(&mut r)?.backend)
+}
+
+fn dispatch_any(
+    bytes: &[u8],
+    region: Option<&Arc<MmapRegion>>,
+) -> Result<AnyModel, String> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let hdr = read_header(&mut r)?;
+    let binary = hdr.width == 2;
+    Ok(match (binary, hdr.backend) {
+        (true, Backend::Dense) => AnyModel::Binary(deserialize_impl(bytes, region)?),
+        (false, Backend::Dense) => AnyModel::Wide(deserialize_impl(bytes, region)?),
+        (true, Backend::Hashed) => AnyModel::BinaryHashed(deserialize_impl(bytes, region)?),
+        (false, Backend::Hashed) => AnyModel::WideHashed(deserialize_impl(bytes, region)?),
+        (true, Backend::Q8) => AnyModel::BinaryQ8(deserialize_impl(bytes, region)?),
+        (false, Backend::Q8) => AnyModel::WideQ8(deserialize_impl(bytes, region)?),
+    })
+}
+
+/// Deserialize dispatching on the stored (width, backend) pair (see
+/// [`AnyModel`]).
 pub fn deserialize_any(bytes: &[u8]) -> Result<AnyModel, String> {
-    let (_, width) = peek_meta(bytes)?;
-    if width == 2 {
-        Ok(AnyModel::Binary(deserialize::<Trellis>(bytes)?))
-    } else {
-        Ok(AnyModel::Wide(deserialize::<WideTrellis>(bytes)?))
-    }
+    dispatch_any(bytes, None)
 }
 
-/// Load from a file dispatching on the stored width (see [`AnyModel`]).
+/// Load from a file dispatching on the stored (width, backend) pair.
 pub fn load_any(path: &Path) -> Result<AnyModel, String> {
     let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
     deserialize_any(&bytes)
 }
 
+/// Memory-mapped [`load_any`]: the weight block is borrowed zero-copy from
+/// the mapping — serving starts without materializing it (`ltls serve
+/// --mmap`).
+pub fn load_any_mmap(path: &Path) -> Result<AnyModel, String> {
+    let region = Arc::new(MmapRegion::map(path)?);
+    dispatch_any(region.bytes(), Some(&region))
+}
+
 /// An epoch-boundary training checkpoint (see the module docs for the
 /// on-disk format and what is / is not restored). Generic over the
-/// topology — the embedded model bytes carry the width.
+/// topology and weight store — the embedded model bytes carry the width
+/// and the backend tag.
 #[derive(Clone)]
-pub struct Checkpoint<T: Topology = Trellis> {
+pub struct Checkpoint<T: Topology = Trellis, S: WeightStore = DenseStore> {
     /// Epochs completed when this checkpoint was taken.
     pub epoch: u32,
     /// Global SGD step (examples seen), driving the lr schedule and the
@@ -252,11 +457,11 @@ pub struct Checkpoint<T: Topology = Trellis> {
     /// Per-epoch metrics, oldest first.
     pub history: Vec<EpochMetrics>,
     /// Raw (unaveraged) weights + trellis + label↔path table.
-    pub model: TrainedModel<T>,
+    pub model: TrainedModel<T, S>,
 }
 
 /// Serialize a checkpoint.
-pub fn serialize_checkpoint<T: Topology>(ck: &Checkpoint<T>) -> Vec<u8> {
+pub fn serialize_checkpoint<T: Topology, S: WeightStore>(ck: &Checkpoint<T, S>) -> Vec<u8> {
     serialize_checkpoint_with(ck.epoch, ck.step, ck.seed, &ck.history, &serialize(&ck.model))
 }
 
@@ -288,9 +493,12 @@ pub fn serialize_checkpoint_with(
     out
 }
 
-/// Deserialize a checkpoint as topology `T` (errors if the embedded model
-/// was trained at a width `T` cannot represent).
-pub fn deserialize_checkpoint<T: Topology>(bytes: &[u8]) -> Result<Checkpoint<T>, String> {
+/// Deserialize a checkpoint as topology `T` and store `S` (errors if the
+/// embedded model was trained at a width or backend `(T, S)` cannot
+/// represent).
+pub fn deserialize_checkpoint<T: Topology, S: WeightStore>(
+    bytes: &[u8],
+) -> Result<Checkpoint<T, S>, String> {
     let mut r = Reader { b: bytes, i: 0 };
     if r.take(4)? != CKPT_MAGIC {
         return Err("not an LTLS checkpoint file (bad magic)".into());
@@ -322,9 +530,35 @@ pub fn deserialize_checkpoint<T: Topology>(bytes: &[u8]) -> Result<Checkpoint<T>
     Ok(Checkpoint { epoch, step, seed, history, model })
 }
 
+/// Peek the backend tag of the model embedded in a checkpoint file's
+/// bytes (for CLI dispatch before committing to a store type).
+pub fn peek_checkpoint_backend(bytes: &[u8]) -> Result<Backend, String> {
+    let mut r = Reader { b: bytes, i: 0 };
+    if r.take(4)? != CKPT_MAGIC {
+        return Err("not an LTLS checkpoint file (bad magic)".into());
+    }
+    let version = r.u32()?;
+    if version != CKPT_VERSION {
+        return Err(format!("unsupported checkpoint version {version}"));
+    }
+    let _ = r.u32()?; // epoch
+    let _ = r.u64()?; // step
+    let _ = r.u64()?; // seed
+    let n_history = r.u64()? as usize;
+    if n_history.saturating_mul(32) > bytes.len() {
+        return Err("truncated checkpoint (history)".into());
+    }
+    r.take(n_history * 32)?;
+    let model_len = r.u64()? as usize;
+    peek_backend(r.take(model_len)?)
+}
+
 /// Save a checkpoint, atomically: write to `<path>.tmp`, then rename, so a
 /// crash mid-write never clobbers the previous checkpoint.
-pub fn save_checkpoint<T: Topology>(ck: &Checkpoint<T>, path: &Path) -> Result<(), String> {
+pub fn save_checkpoint<T: Topology, S: WeightStore>(
+    ck: &Checkpoint<T, S>,
+    path: &Path,
+) -> Result<(), String> {
     write_atomic(&serialize_checkpoint(ck), path)
 }
 
@@ -335,10 +569,11 @@ pub fn write_atomic(bytes: &[u8], path: &Path) -> Result<(), String> {
     std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
 }
 
-/// Load a checkpoint from a file as topology `T`.
-pub fn load_checkpoint<T: Topology>(path: &Path) -> Result<Checkpoint<T>, String> {
-    let bytes =
-        std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+/// Load a checkpoint from a file as topology `T` and store `S`.
+pub fn load_checkpoint<T: Topology, S: WeightStore>(
+    path: &Path,
+) -> Result<Checkpoint<T, S>, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
     deserialize_checkpoint(&bytes)
 }
 
@@ -406,11 +641,38 @@ mod tests {
         (tr.into_model(), ds)
     }
 
+    /// Re-create the retired v2 layout (header | bias | weights | pairs)
+    /// for the back-compat tests: the current serializer only emits v3.
+    fn write_v2(m: &TrainedModel) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        put_u32(&mut out, 2);
+        put_u64(&mut out, m.trellis.c);
+        put_u32(&mut out, 2);
+        put_u64(&mut out, m.model.n_features as u64);
+        put_u64(&mut out, m.model.n_edges as u64);
+        let pairs: Vec<(u32, u64)> = m.assigner.table.pairs().collect();
+        let n_labels = pairs.iter().map(|&(l, _)| l as u64 + 1).max().unwrap_or(0);
+        put_u64(&mut out, n_labels);
+        for &b in &m.model.bias {
+            out.extend_from_slice(&b.to_le_bytes());
+        }
+        for &w in m.model.w.iter() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        put_u64(&mut out, pairs.len() as u64);
+        for (l, p) in pairs {
+            put_u32(&mut out, l);
+            put_u64(&mut out, p);
+        }
+        out
+    }
+
     #[test]
     fn roundtrip_preserves_predictions() {
         let (m, ds) = trained();
         let bytes = serialize(&m);
-        let m2 = deserialize::<Trellis>(&bytes).unwrap();
+        let m2 = deserialize::<Trellis, DenseStore>(&bytes).unwrap();
         assert_eq!(m2.trellis.c, m.trellis.c);
         assert_eq!(m2.model.w, m.model.w);
         for i in 0..50 {
@@ -419,17 +681,35 @@ mod tests {
     }
 
     #[test]
+    fn v3_weight_block_is_64_byte_aligned_and_last() {
+        let (m, _) = trained();
+        let bytes = serialize(&m);
+        let wlen = m.model.w.len() * 4;
+        assert!(bytes.len() >= wlen);
+        // The weight block closes the file and starts at a 64-byte offset.
+        assert_eq!(
+            (bytes.len() - wlen) % WEIGHT_ALIGN,
+            0,
+            "weight block must start 64-byte aligned"
+        );
+        let tail = &bytes[bytes.len() - wlen..];
+        let parsed = parse_f32s(tail);
+        assert_eq!(parsed.as_slice(), &m.model.w[..]);
+        assert_eq!(peek_backend(&bytes).unwrap(), Backend::Dense);
+    }
+
+    #[test]
     fn file_roundtrip() {
         let (m, _) = trained();
         let path = std::env::temp_dir().join("ltls_model_io_test.bin");
         save(&m, &path).unwrap();
-        let m2 = load::<Trellis>(&path).unwrap();
+        let m2 = load::<Trellis, DenseStore>(&path).unwrap();
         assert_eq!(m2.model.bias, m.model.bias);
         std::fs::remove_file(&path).ok();
     }
 
     /// A wide model round-trips: the file carries its width, `load_any`
-    /// dispatches on it, and `deserialize::<Trellis>` rejects it.
+    /// dispatches on it, and `deserialize::<Trellis, _>` rejects it.
     #[test]
     fn wide_model_roundtrip_and_dispatch() {
         let ds = SyntheticSpec::multiclass(500, 300, 24).seed(62).generate();
@@ -445,30 +725,35 @@ mod tests {
         let bytes = serialize(&m);
         assert_eq!(peek_meta(&bytes).unwrap(), (24, 4));
 
-        let m2 = deserialize::<WideTrellis>(&bytes).unwrap();
+        let m2 = deserialize::<WideTrellis, DenseStore>(&bytes).unwrap();
         assert_eq!(m2.model.w, m.model.w);
         for i in 0..30 {
             assert_eq!(m.topk(ds.row(i), 3), m2.topk(ds.row(i), 3), "row {i}");
         }
         match deserialize_any(&bytes).unwrap() {
             AnyModel::Wide(w) => assert_eq!(w.trellis.width(), 4),
-            AnyModel::Binary(_) => panic!("width-4 file dispatched to the binary trellis"),
+            _ => panic!("width-4 dense file dispatched to the wrong variant"),
         }
-        let err = deserialize::<Trellis>(&bytes).unwrap_err();
+        let err = deserialize::<Trellis, DenseStore>(&bytes).unwrap_err();
         assert!(err.contains("width"), "{err}");
         // Width-2 files still dispatch to the specialized Trellis.
         let (m2w, _) = trained();
         match deserialize_any(&serialize(&m2w)).unwrap() {
             AnyModel::Binary(b) => assert_eq!(b.trellis.width(), 2),
-            AnyModel::Wide(_) => panic!("width-2 file dispatched wide"),
+            _ => panic!("width-2 dense file dispatched to the wrong variant"),
         }
     }
 
-    /// Version-1 files (no width field) still load, as width 2.
+    /// Version-2 files (pre-backend layout) and version-1 files (no width
+    /// field) still load, as dense.
     #[test]
-    fn version1_files_load_as_width_two() {
+    fn v1_and_v2_layouts_load_as_dense() {
         let (m, ds) = trained();
-        let v2 = serialize(&m);
+        let v2 = write_v2(&m);
+        assert_eq!(peek_meta(&v2).unwrap(), (m.trellis.c, 2));
+        assert_eq!(peek_backend(&v2).unwrap(), Backend::Dense);
+        let m2 = deserialize::<Trellis, DenseStore>(&v2).unwrap();
+        assert_eq!(m2.model.w, m.model.w);
         // Rewrite the header to v1: patch the version field and remove the
         // width u32 at bytes 16..20 (after magic+version+C).
         let mut v1 = Vec::with_capacity(v2.len() - 4);
@@ -477,11 +762,15 @@ mod tests {
         v1.extend_from_slice(&v2[8..16]);
         v1.extend_from_slice(&v2[20..]);
         assert_eq!(peek_meta(&v1).unwrap(), (m.trellis.c, 2));
-        let m2 = deserialize::<Trellis>(&v1).unwrap();
-        assert_eq!(m2.model.w, m.model.w);
+        let m1 = deserialize::<Trellis, DenseStore>(&v1).unwrap();
+        assert_eq!(m1.model.w, m.model.w);
         for i in 0..20 {
+            assert_eq!(m.topk(ds.row(i), 3), m1.topk(ds.row(i), 3), "row {i}");
             assert_eq!(m.topk(ds.row(i), 3), m2.topk(ds.row(i), 3), "row {i}");
         }
+        // Old layouts load as dense only: a hashed-typed load must refuse.
+        let err = deserialize::<Trellis, HashedStore>(&v2).unwrap_err();
+        assert!(err.contains("dense"), "{err}");
     }
 
     #[test]
@@ -498,7 +787,7 @@ mod tests {
             model: m,
         };
         let bytes = serialize_checkpoint(&ck);
-        let ck2 = deserialize_checkpoint::<Trellis>(&bytes).unwrap();
+        let ck2 = deserialize_checkpoint::<Trellis, DenseStore>(&bytes).unwrap();
         assert_eq!(ck2.epoch, 3);
         assert_eq!(ck2.step, 1234);
         assert_eq!(ck2.seed, 42);
@@ -507,6 +796,8 @@ mod tests {
         assert_eq!(ck2.history[1].loss_sum, 31.25);
         assert_eq!(ck2.model.model.w, ck.model.model.w);
         assert_eq!(ck2.model.model.bias, ck.model.model.bias);
+        // The embedded model carries the dense backend tag.
+        assert_eq!(peek_checkpoint_backend(&bytes).unwrap(), Backend::Dense);
         // The embedded assignment table round-trips.
         let a: Vec<_> = ck.model.assigner.table.pairs().collect();
         let b: Vec<_> = ck2.model.assigner.table.pairs().collect();
@@ -518,17 +809,17 @@ mod tests {
         let (m, _) = trained();
         let ck = Checkpoint { epoch: 1, step: 10, seed: 7, history: vec![], model: m };
         let mut bytes = serialize_checkpoint(&ck);
-        assert!(deserialize_checkpoint::<Trellis>(&bytes[..16]).is_err()); // truncated
+        assert!(deserialize_checkpoint::<Trellis, DenseStore>(&bytes[..16]).is_err()); // truncated
         bytes.push(0);
-        assert!(deserialize_checkpoint::<Trellis>(&bytes).is_err()); // trailing garbage
+        assert!(deserialize_checkpoint::<Trellis, DenseStore>(&bytes).is_err()); // trailing garbage
         bytes.pop();
         bytes[0] = b'X';
-        assert!(deserialize_checkpoint::<Trellis>(&bytes).is_err()); // bad magic
+        assert!(deserialize_checkpoint::<Trellis, DenseStore>(&bytes).is_err()); // bad magic
         // A plain model file is not a checkpoint (and vice versa).
         let (m2, _) = trained();
-        assert!(deserialize_checkpoint::<Trellis>(&serialize(&m2)).is_err());
+        assert!(deserialize_checkpoint::<Trellis, DenseStore>(&serialize(&m2)).is_err());
         let ck2 = Checkpoint { epoch: 1, step: 10, seed: 7, history: vec![], model: m2 };
-        assert!(deserialize::<Trellis>(&serialize_checkpoint(&ck2)).is_err());
+        assert!(deserialize::<Trellis, DenseStore>(&serialize_checkpoint(&ck2)).is_err());
     }
 
     #[test]
@@ -548,7 +839,7 @@ mod tests {
         }
         let (epoch, path) = latest_checkpoint(&dir).unwrap().expect("checkpoints exist");
         assert_eq!(epoch, 10);
-        let ck = load_checkpoint::<Trellis>(&path).unwrap();
+        let ck = load_checkpoint::<Trellis, DenseStore>(&path).unwrap();
         assert_eq!(ck.epoch, 10);
         assert_eq!(ck.step, 1000);
         // No tmp files left behind by the atomic writes.
@@ -588,12 +879,25 @@ mod tests {
     fn rejects_corrupt_files() {
         let (m, _) = trained();
         let mut bytes = serialize(&m);
-        assert!(deserialize::<Trellis>(&bytes[..10]).is_err()); // truncated
+        assert!(deserialize::<Trellis, DenseStore>(&bytes[..10]).is_err()); // truncated
         bytes[0] = b'X';
-        assert!(deserialize::<Trellis>(&bytes).is_err()); // bad magic
+        assert!(deserialize::<Trellis, DenseStore>(&bytes).is_err()); // bad magic
         let (m2, _) = trained();
         let mut ok = serialize(&m2);
         ok.push(0); // trailing garbage
-        assert!(deserialize::<Trellis>(&ok).is_err());
+        assert!(deserialize::<Trellis, DenseStore>(&ok).is_err());
+        // Unknown backend tag errors cleanly.
+        let mut bad_tag = serialize(&m2);
+        // backend u32 sits right after the 44-byte v3 header prefix
+        // (magic 4 | version 4 | C 8 | width 4 | D 8 | E 8 | n_labels 8).
+        bad_tag[44] = 9;
+        let err = deserialize_any(&bad_tag).unwrap_err();
+        assert!(err.contains("backend tag"), "{err}");
+        // A hostile D field (u64::MAX) errors instead of overflowing the
+        // D·E·4 size arithmetic.
+        let mut bad_d = serialize(&m2);
+        bad_d[20..28].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = deserialize_any(&bad_d).unwrap_err();
+        assert!(err.contains("implausible"), "{err}");
     }
 }

@@ -8,8 +8,16 @@
 //!            w + λ   if w < −λ
 //!            0       otherwise
 //! ```
+//!
+//! The thresholding operates on the raw f32 strips of any
+//! [`TrainableStore`] — dense or hashed — and the resulting sparsity shows
+//! up in [`super::store::WeightStore::zero_fraction`] /
+//! [`super::store::WeightStore::effective_bytes`] (printed by the
+//! train/eval summaries, so the memory effect of `--l1` is visible end to
+//! end).
 
 use super::linear::LinearEdgeModel;
+use super::store::TrainableStore;
 
 /// Soft-threshold a single weight.
 #[inline]
@@ -23,25 +31,32 @@ pub fn soft_threshold(w: f32, lambda: f32) -> f32 {
     }
 }
 
-/// Return a copy of the model with soft-thresholded weights.
-pub fn soft_threshold_model(m: &LinearEdgeModel, lambda: f32) -> LinearEdgeModel {
+/// Return a copy of the store with soft-thresholded weights (bias is left
+/// untouched, as in the paper).
+pub fn soft_threshold_store<S: TrainableStore>(m: &S, lambda: f32) -> S {
     let mut out = m.clone();
-    for w in &mut out.w {
-        *w = soft_threshold(*w, lambda);
+    let (w, _) = out.raw_parts_mut();
+    for v in w.iter_mut() {
+        *v = soft_threshold(*v, lambda);
     }
     out
 }
 
+/// Dense-typed convenience wrapper (the historical entry point).
+pub fn soft_threshold_model(m: &LinearEdgeModel, lambda: f32) -> LinearEdgeModel {
+    soft_threshold_store(m, lambda)
+}
+
 /// Pick λ on held-out data: evaluates `eval` (higher = better) for each
 /// candidate and returns (best λ, best score).
-pub fn tune_lambda<F: FnMut(&LinearEdgeModel) -> f64>(
-    m: &LinearEdgeModel,
+pub fn tune_lambda<S: TrainableStore, F: FnMut(&S) -> f64>(
+    m: &S,
     candidates: &[f32],
     mut eval: F,
 ) -> (f32, f64) {
     let mut best = (0.0f32, f64::NEG_INFINITY);
     for &lam in candidates {
-        let thresholded = soft_threshold_model(m, lam);
+        let thresholded = soft_threshold_store(m, lam);
         let score = eval(&thresholded);
         if score > best.1 {
             best = (lam, score);
@@ -53,6 +68,7 @@ pub fn tune_lambda<F: FnMut(&LinearEdgeModel) -> f64>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::store::WeightStore;
 
     #[test]
     fn soft_threshold_cases() {
@@ -66,12 +82,14 @@ mod tests {
     #[test]
     fn thresholding_sparsifies_model() {
         let mut m = LinearEdgeModel::new(2, 4);
-        m.w = vec![0.5, -0.1, 0.05, -0.9, 0.2, 0.0, 1.5, -0.05];
+        m.w = vec![0.5, -0.1, 0.05, -0.9, 0.2, 0.0, 1.5, -0.05].into();
         let t = soft_threshold_model(&m, 0.15);
         assert!(t.zero_fraction() > m.zero_fraction());
         assert!((t.w[0] - 0.35).abs() < 1e-6);
         assert_eq!(t.w[1], 0.0);
         assert!((t.w[6] - 1.35).abs() < 1e-6);
+        // Sparsity shrinks the effective (nonzero) byte count.
+        assert!(WeightStore::effective_bytes(&t) < WeightStore::effective_bytes(&m));
     }
 
     #[test]
@@ -82,5 +100,21 @@ mod tests {
         // zero model: both give all-zero; first candidate kept on ties → 0.0
         assert_eq!(lam, 0.0);
         assert_eq!(score, 1.0);
+    }
+
+    /// Hashed stores threshold the same way (the L1 memory story composes
+    /// with hashing).
+    #[test]
+    fn thresholds_hashed_store() {
+        use crate::model::hashed::HashedStore;
+        use crate::sparse::SparseVec;
+        let mut m = HashedStore::new(3, 100, 4, 1).unwrap();
+        let idx = [0u32, 50, 99];
+        let val = [1.0f32, 2.0, -1.0];
+        m.update_edges(&[0], &[2], SparseVec::new(&idx, &val), 0.05);
+        let t = soft_threshold_store(&m, 0.08);
+        assert!(t.zero_fraction() >= m.zero_fraction());
+        assert_eq!(t.bits, m.bits);
+        assert_eq!(t.seed, m.seed);
     }
 }

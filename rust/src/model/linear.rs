@@ -1,34 +1,51 @@
-//! Linear edge-score model `W ∈ R^{E×D}` with sparse updates.
+//! Dense linear edge-score model `W ∈ R^{E×D}` with sparse updates — the
+//! default [`WeightStore`] backend (the paper's exact model).
 //!
 //! Storage is **feature-major** (`D` strips of `E` contiguous floats):
 //! computing `h = Wx` for a sparse `x` then reads one contiguous E-strip
 //! per active feature (`E ≤ ~80` floats ≈ 1–2 cache lines) instead of
 //! `nnz` random positions per edge — measured ~8× faster at nnz≈160
 //! (EXPERIMENTS.md §Perf). Updates on a path's edge set touch the same
-//! strips, so the fused [`LinearEdgeModel::update_edges`] is equally
+//! strips, so the fused [`DenseStore::update_edges`] is equally
 //! cache-friendly. Model size is exactly `E·D` f32s — the log-space claim
 //! (the paper also observes the trained weights are dense).
+//!
+//! All f32 kernels run through the shared [`StripCodec`] machinery of
+//! [`super::store`] with the [`IdentityCodec`] (strip `i`, sign `+1.0`),
+//! which multiplies out **bit-identically** to the pre-trait direct
+//! indexing — pinned by `rust/tests/engine_parity.rs`. The weight block is
+//! an [`F32Buf`], so a served model can borrow it zero-copy from an
+//! mmapped v3 file (training always owns it).
 
+use super::mmap::F32Buf;
+use super::store::{
+    codec_edge_scores, codec_edge_scores_batch, Backend, IdentityCodec, TrainableStore,
+    WeightBlock, WeightStore,
+};
 use crate::sparse::SparseVec;
 
-/// Feature-major linear edge model.
+/// Feature-major dense linear edge model.
 #[derive(Clone, Debug)]
-pub struct LinearEdgeModel {
+pub struct DenseStore {
     pub n_edges: usize,
     pub n_features: usize,
     /// Feature-major `D × E` weights: `w[i*E + e]` is feature `i`, edge `e`.
-    pub w: Vec<f32>,
+    pub w: F32Buf,
     /// Per-edge bias (helps the early-exit edges whose paths are short).
     pub bias: Vec<f32>,
 }
 
-impl LinearEdgeModel {
+/// The historical name of the dense store, kept as an alias — the default
+/// backend everywhere a store type is not spelled out.
+pub type LinearEdgeModel = DenseStore;
+
+impl DenseStore {
     /// Zero-initialized model.
     pub fn new(n_edges: usize, n_features: usize) -> Self {
-        LinearEdgeModel {
+        DenseStore {
             n_edges,
             n_features,
-            w: vec![0.0; n_edges * n_features],
+            w: F32Buf::from(vec![0.0; n_edges * n_features]),
             bias: vec![0.0; n_edges],
         }
     }
@@ -56,15 +73,7 @@ impl LinearEdgeModel {
 
     /// Edge-score vector `h = Wx + b` — one contiguous E-strip per nnz.
     pub fn edge_scores(&self, x: SparseVec, out: &mut Vec<f32>) {
-        let e = self.n_edges;
-        out.clear();
-        out.extend_from_slice(&self.bias);
-        for (&i, &v) in x.indices.iter().zip(x.values) {
-            let strip = &self.w[i as usize * e..(i as usize + 1) * e];
-            for (o, &w) in out.iter_mut().zip(strip) {
-                *o += v * w;
-            }
-        }
+        codec_edge_scores(&self.w, &self.bias, self.n_edges, IdentityCodec, x, out);
     }
 
     /// Allocating convenience wrapper over [`Self::edge_scores`].
@@ -94,58 +103,27 @@ impl LinearEdgeModel {
         scratch: &mut Vec<(u32, u32, f32)>,
         out: &mut Vec<f32>,
     ) {
-        let e = self.n_edges;
-        out.clear();
-        out.reserve(rows.len() * e);
-        for _ in 0..rows.len() {
-            out.extend_from_slice(&self.bias);
-        }
-        scratch.clear();
-        for (r, x) in rows.iter().enumerate() {
-            for (&i, &v) in x.indices.iter().zip(x.values) {
-                scratch.push((i, r as u32, v));
-            }
-        }
-        scratch.sort_unstable_by_key(|t| t.0);
-        for &(i, r, v) in scratch.iter() {
-            let strip = &self.w[i as usize * e..(i as usize + 1) * e];
-            let dst = &mut out[r as usize * e..(r as usize + 1) * e];
-            for (o, &w) in dst.iter_mut().zip(strip) {
-                *o += v * w;
-            }
-        }
+        codec_edge_scores_batch(
+            &self.w,
+            &self.bias,
+            self.n_edges,
+            IdentityCodec,
+            rows,
+            scratch,
+            out,
+        );
     }
 
     /// Sparse SGD update on one edge: `w_e += scale · x`, `b_e += scale·0.1`.
     #[inline]
     pub fn update_edge(&mut self, e: usize, x: SparseVec, scale: f32) {
-        let ne = self.n_edges;
-        for (&i, &v) in x.indices.iter().zip(x.values) {
-            self.w[i as usize * ne + e] += scale * v;
-        }
-        self.bias[e] += scale * 0.1;
+        TrainableStore::update_edge(self, e, x, scale);
     }
 
     /// Fused separation-loss update (`+scale·x` on `pos` edges, `−scale·x`
     /// on `neg` edges): walks each active feature's strip once.
     pub fn update_edges(&mut self, pos: &[u32], neg: &[u32], x: SparseVec, scale: f32) {
-        let ne = self.n_edges;
-        for (&i, &v) in x.indices.iter().zip(x.values) {
-            let strip = &mut self.w[i as usize * ne..(i as usize + 1) * ne];
-            let sv = scale * v;
-            for &e in pos {
-                strip[e as usize] += sv;
-            }
-            for &e in neg {
-                strip[e as usize] -= sv;
-            }
-        }
-        for &e in pos {
-            self.bias[e as usize] += scale * 0.1;
-        }
-        for &e in neg {
-            self.bias[e as usize] -= scale * 0.1;
-        }
+        TrainableStore::update_edges(self, pos, neg, x, scale);
     }
 
     /// Parameter count (model-size reporting).
@@ -161,8 +139,106 @@ impl LinearEdgeModel {
     /// Fraction of exactly-zero weights (the paper notes trained LTLS
     /// weights end up dense; the L1 mode re-sparsifies).
     pub fn zero_fraction(&self) -> f64 {
-        let zeros = self.w.iter().filter(|&&v| v == 0.0).count();
-        zeros as f64 / self.w.len().max(1) as f64
+        WeightStore::zero_fraction(self)
+    }
+}
+
+impl WeightStore for DenseStore {
+    const BACKEND: Backend = Backend::Dense;
+
+    fn n_edges(&self) -> usize {
+        self.n_edges
+    }
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+    fn bias(&self) -> &[f32] {
+        &self.bias
+    }
+    fn edge_scores(&self, x: SparseVec, out: &mut Vec<f32>) {
+        DenseStore::edge_scores(self, x, out);
+    }
+    fn edge_scores_batch(
+        &self,
+        rows: &[SparseVec],
+        scratch: &mut Vec<(u32, u32, f32)>,
+        out: &mut Vec<f32>,
+    ) {
+        DenseStore::edge_scores_batch(self, rows, scratch, out);
+    }
+    fn param_count(&self) -> usize {
+        DenseStore::param_count(self)
+    }
+    fn bytes(&self) -> usize {
+        DenseStore::bytes(self)
+    }
+    fn weight_count(&self) -> usize {
+        self.w.len()
+    }
+    fn weight_elem_bytes(&self) -> usize {
+        std::mem::size_of::<f32>()
+    }
+    fn zero_weights(&self) -> usize {
+        self.w.iter().filter(|&&v| v == 0.0).count()
+    }
+    fn is_mapped(&self) -> bool {
+        self.w.is_mapped()
+    }
+
+    fn weight_block_len(&self) -> usize {
+        self.w.len() * 4
+    }
+    fn write_weights(&self, out: &mut Vec<u8>) {
+        for &w in self.w.iter() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    fn read_store(
+        n_edges: usize,
+        n_features: usize,
+        meta: &[u8],
+        bias: Vec<f32>,
+        weights: WeightBlock<'_>,
+    ) -> Result<Self, String> {
+        if !meta.is_empty() {
+            return Err(format!("dense model carries {} unexpected meta bytes", meta.len()));
+        }
+        if bias.len() != n_edges {
+            return Err(format!("bias is {} entries, expected {n_edges}", bias.len()));
+        }
+        let w = weights.into_f32(n_edges * n_features)?;
+        Ok(DenseStore { n_edges, n_features, w, bias })
+    }
+}
+
+impl TrainableStore for DenseStore {
+    type Codec = IdentityCodec;
+
+    fn codec(&self) -> IdentityCodec {
+        IdentityCodec
+    }
+    fn n_strips(&self) -> usize {
+        self.n_features
+    }
+    fn raw_w(&self) -> &[f32] {
+        &self.w
+    }
+    fn raw_parts_mut(&mut self) -> (&mut [f32], &mut [f32]) {
+        (self.w.as_mut_slice(), self.bias.as_mut_slice())
+    }
+    fn for_topology_cfg<T: crate::graph::Topology>(
+        t: &T,
+        n_features: usize,
+        hash_bits: u32,
+        _seed: u64,
+    ) -> Result<Self, String> {
+        if hash_bits != 0 {
+            return Err(format!(
+                "--hash-bits {hash_bits} requires the hashed backend, not dense \
+                 (internal dispatch error)"
+            ));
+        }
+        Ok(Self::for_topology(t, n_features))
     }
 }
 
@@ -228,6 +304,10 @@ mod tests {
         assert_eq!(m.param_count(), 42 * 1000 + 42);
         assert_eq!(m.bytes(), (42 * 1000 + 42) * 4);
         assert_eq!(m.zero_fraction(), 1.0);
+        // All-zero weights compress to the bias-only floor.
+        assert_eq!(WeightStore::effective_bytes(&m), 42 * 4);
+        assert_eq!(m.backend(), Backend::Dense);
+        assert!(!WeightStore::is_mapped(&m));
     }
 
     #[test]
@@ -238,5 +318,24 @@ mod tests {
         assert_eq!(m.edge_row(0), vec![0.0, 7.0, 0.0]);
         assert_eq!(m.edge_row(1), vec![0.0, 0.0, 0.0]);
         assert_eq!(m.weight(0, 1), 7.0);
+    }
+
+    /// The WeightStore trait surface delegates to the inherent kernels.
+    #[test]
+    fn trait_surface_matches_inherent() {
+        let mut m = LinearEdgeModel::new(3, 5);
+        let x = xvec(&[0, 4], &[1.5, -2.0]);
+        m.update_edge(2, x, 0.5);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        WeightStore::edge_scores(&m, x, &mut a);
+        m.edge_scores(x, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(WeightStore::n_edges(&m), 3);
+        assert_eq!(WeightStore::n_features(&m), 5);
+        assert_eq!(WeightStore::bias(&m), m.bias.as_slice());
+        assert_eq!(m.n_strips(), 5);
+        assert_eq!(m.raw_w(), &m.w[..]);
+        assert_eq!(m.hash_bits(), 0);
     }
 }

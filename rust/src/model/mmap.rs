@@ -1,0 +1,332 @@
+//! Zero-copy weight buffers: heap-owned, or borrowed from a memory-mapped
+//! model file.
+//!
+//! The v3 model format (see [`super::io`]) pads its weight section to a
+//! 64-byte file offset, so a page-aligned `mmap` of the whole file yields a
+//! correctly-aligned `&[f32]` / `&[i8]` view of the weights with **no copy
+//! and no allocation proportional to the model**: `ltls serve --mmap`
+//! starts after parsing only the (small) header, bias and label↔path
+//! table, and the kernel pages weights in on demand and shares them across
+//! processes serving the same file.
+//!
+//! [`F32Buf`]/[`I8Buf`] are the storage type every weight store uses for
+//! its big block: `Owned` (a plain `Vec`, the training representation) or
+//! `Mapped` (an offset view into an [`MmapRegion`], serve-only —
+//! `DerefMut` panics). Byte order: files are little-endian, and the mapped
+//! view reinterprets bytes in place, so mapped loading is gated to
+//! little-endian hosts (every supported target; the loader errors rather
+//! than misreads elsewhere).
+
+use std::path::Path;
+use std::sync::Arc;
+
+/// A read-only memory-mapped file (unix `mmap(PROT_READ, MAP_PRIVATE)`;
+/// on non-unix targets a heap read with the same interface, so callers
+/// stay portable and only lose the zero-copy property).
+pub struct MmapRegion {
+    ptr: *const u8,
+    len: usize,
+    /// Non-unix fallback storage; `ptr` points into it when `Some`.
+    _fallback: Option<Vec<u8>>,
+}
+
+// SAFETY: the mapping is read-only for its whole lifetime (PROT_READ and
+// no `&mut` API), so shared access from any thread is safe.
+unsafe impl Send for MmapRegion {}
+unsafe impl Sync for MmapRegion {}
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+}
+
+impl MmapRegion {
+    /// Map `path` read-only. The file descriptor is closed on return; the
+    /// mapping stays valid until drop.
+    #[cfg(unix)]
+    pub fn map(path: &Path) -> Result<MmapRegion, String> {
+        use std::os::unix::io::AsRawFd;
+        if cfg!(target_endian = "big") {
+            return Err("memory-mapped model loading requires a little-endian host".into());
+        }
+        let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let len = f.metadata().map_err(|e| format!("{}: {e}", path.display()))?.len() as usize;
+        if len == 0 {
+            return Err(format!("{}: empty file", path.display()));
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(format!("{}: mmap failed", path.display()));
+        }
+        Ok(MmapRegion { ptr: ptr as *const u8, len, _fallback: None })
+    }
+
+    /// Portable fallback: read the file onto the heap (same interface, no
+    /// zero-copy property).
+    #[cfg(not(unix))]
+    pub fn map(path: &Path) -> Result<MmapRegion, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        if bytes.is_empty() {
+            return Err(format!("{}: empty file", path.display()));
+        }
+        let ptr = bytes.as_ptr();
+        let len = bytes.len();
+        Ok(MmapRegion { ptr, len, _fallback: Some(bytes) })
+    }
+
+    /// The whole mapped file.
+    pub fn bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if self._fallback.is_none() {
+            unsafe {
+                sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for MmapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MmapRegion({} bytes)", self.len)
+    }
+}
+
+/// Declare an owned-or-mapped weight buffer deref-ing to `[$elem]`.
+macro_rules! weight_buf {
+    ($(#[$doc:meta])* $name:ident, $elem:ty) => {
+        $(#[$doc])*
+        #[derive(Clone)]
+        pub enum $name {
+            Owned(Vec<$elem>),
+            Mapped {
+                region: Arc<MmapRegion>,
+                /// Byte offset of the element block inside the region.
+                offset: usize,
+                /// Element (not byte) count.
+                len: usize,
+            },
+        }
+
+        impl $name {
+            /// Borrow `len` elements at byte `offset` of `region`.
+            /// Validates bounds and element alignment.
+            pub fn mapped(
+                region: Arc<MmapRegion>,
+                offset: usize,
+                len: usize,
+            ) -> Result<$name, String> {
+                let bytes = len
+                    .checked_mul(std::mem::size_of::<$elem>())
+                    .and_then(|b| b.checked_add(offset))
+                    .ok_or("weight section size overflows")?;
+                if bytes > region.len() {
+                    return Err(format!(
+                        "weight section [{offset}..{bytes}) exceeds mapped file ({} bytes)",
+                        region.len()
+                    ));
+                }
+                let addr = region.bytes().as_ptr() as usize + offset;
+                if addr % std::mem::align_of::<$elem>() != 0 {
+                    return Err(format!(
+                        "weight section at byte {offset} is not {}-byte aligned",
+                        std::mem::align_of::<$elem>()
+                    ));
+                }
+                Ok($name::Mapped { region, offset, len })
+            }
+
+            /// True when the elements borrow a mapped file region.
+            pub fn is_mapped(&self) -> bool {
+                matches!(self, $name::Mapped { .. })
+            }
+
+            /// Mutable element view; panics on mapped buffers (mapped
+            /// stores are serve-only by construction).
+            pub fn as_mut_slice(&mut self) -> &mut [$elem] {
+                match self {
+                    $name::Owned(v) => v.as_mut_slice(),
+                    $name::Mapped { .. } => {
+                        panic!("memory-mapped weights are read-only (serve-only store)")
+                    }
+                }
+            }
+        }
+
+        impl std::ops::Deref for $name {
+            type Target = [$elem];
+            #[inline]
+            fn deref(&self) -> &[$elem] {
+                match self {
+                    $name::Owned(v) => v.as_slice(),
+                    $name::Mapped { region, offset, len } => unsafe {
+                        // SAFETY: bounds and alignment checked in `mapped`;
+                        // the region is immutable and outlives the borrow
+                        // via the Arc.
+                        std::slice::from_raw_parts(
+                            region.bytes().as_ptr().add(*offset) as *const $elem,
+                            *len,
+                        )
+                    },
+                }
+            }
+        }
+
+        impl std::ops::DerefMut for $name {
+            #[inline]
+            fn deref_mut(&mut self) -> &mut [$elem] {
+                self.as_mut_slice()
+            }
+        }
+
+        impl From<Vec<$elem>> for $name {
+            fn from(v: Vec<$elem>) -> $name {
+                $name::Owned(v)
+            }
+        }
+
+        impl<'a> IntoIterator for &'a $name {
+            type Item = &'a $elem;
+            type IntoIter = std::slice::Iter<'a, $elem>;
+            fn into_iter(self) -> Self::IntoIter {
+                self.iter()
+            }
+        }
+
+        impl<'a> IntoIterator for &'a mut $name {
+            type Item = &'a mut $elem;
+            type IntoIter = std::slice::IterMut<'a, $elem>;
+            fn into_iter(self) -> Self::IntoIter {
+                self.as_mut_slice().iter_mut()
+            }
+        }
+
+        impl PartialEq for $name {
+            fn eq(&self, other: &$name) -> bool {
+                self[..] == other[..]
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(
+                    f,
+                    "{}([{} x {}]{})",
+                    stringify!($name),
+                    self.len(),
+                    stringify!($elem),
+                    if self.is_mapped() { ", mapped" } else { "" }
+                )
+            }
+        }
+    };
+}
+
+weight_buf!(
+    /// The f32 weight block of a dense or hashed store.
+    F32Buf,
+    f32
+);
+weight_buf!(
+    /// The i8 quantized weight block of a [`super::quant::Q8Store`].
+    I8Buf,
+    i8
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_buf_derefs_and_mutates() {
+        let mut b = F32Buf::from(vec![1.0f32, 2.0, 3.0]);
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_mapped());
+        b[1] = 5.0;
+        assert_eq!(&b[..], &[1.0, 5.0, 3.0]);
+        assert_eq!(b, F32Buf::from(vec![1.0, 5.0, 3.0]));
+    }
+
+    #[test]
+    fn mapped_buf_reads_file_bytes() {
+        let path = std::env::temp_dir().join(format!("ltls_mmap_test_{}", std::process::id()));
+        let vals = [1.5f32, -2.25, 0.0, 42.0];
+        let mut bytes = vec![0u8; 8]; // 8-byte prefix, keeps f32 alignment
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let region = Arc::new(MmapRegion::map(&path).unwrap());
+        assert_eq!(region.len(), bytes.len());
+        assert_eq!(region.bytes(), &bytes[..]);
+        let buf = F32Buf::mapped(region.clone(), 8, 4).unwrap();
+        assert!(buf.is_mapped());
+        assert_eq!(&buf[..], &vals[..]);
+        // Clones share the region.
+        let c = buf.clone();
+        assert_eq!(&c[..], &vals[..]);
+        // Out-of-bounds and misaligned views are rejected.
+        assert!(F32Buf::mapped(region.clone(), 8, 5).is_err());
+        assert!(F32Buf::mapped(region.clone(), 7, 4).is_err());
+        // i8 views have no alignment constraint.
+        let ib = I8Buf::mapped(region.clone(), 1, 3).unwrap();
+        assert_eq!(ib.len(), 3);
+        drop(ib);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "read-only")]
+    fn mapped_buf_rejects_mutation() {
+        let path = std::env::temp_dir().join(format!("ltls_mmap_mut_{}", std::process::id()));
+        std::fs::write(&path, 1.0f32.to_le_bytes()).unwrap();
+        let region = Arc::new(MmapRegion::map(&path).unwrap());
+        let mut buf = F32Buf::mapped(region, 0, 1).unwrap();
+        std::fs::remove_file(&path).ok();
+        buf.as_mut_slice()[0] = 2.0;
+    }
+
+    #[test]
+    fn map_missing_and_empty_files_error() {
+        assert!(MmapRegion::map(Path::new("/nonexistent/ltls_model")).is_err());
+        let path = std::env::temp_dir().join(format!("ltls_mmap_empty_{}", std::process::id()));
+        std::fs::write(&path, b"").unwrap();
+        assert!(MmapRegion::map(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

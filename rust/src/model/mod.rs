@@ -5,14 +5,30 @@
 //! sparse averaged SGD (§5): an update touches only the edges in the
 //! symmetric difference of two paths and only the active features of `x`.
 //!
-//! The deep variant (the ImageNet fix of §6) lives in `python/compile` and
-//! is executed via [`crate::runtime`]; this module also hosts the L1
+//! Weight **storage** is pluggable behind the [`store::WeightStore`] /
+//! [`store::TrainableStore`] traits (see [`store`]): the default
+//! [`linear::DenseStore`] is the paper's exact `D×E` f32 matrix, the
+//! [`hashed::HashedStore`] bounds memory independently of `D` by signed
+//! feature hashing, and the serve-only [`quant::Q8Store`] holds a trained
+//! dense model as per-edge-scaled i8. Model files (format v3, [`io`])
+//! carry the backend tag and can be served zero-copy from an mmap
+//! ([`mmap`]).
+//!
+//! The deep variant (the ImageNet fix of §6) lives in `python/compile`
+//! and is executed via [`crate::runtime`]; this module also hosts the L1
 //! soft-thresholding predictor of §6.
 
 pub mod averaged;
+pub mod hashed;
 pub mod io;
 pub mod l1;
 pub mod linear;
+pub mod mmap;
+pub mod quant;
+pub mod store;
 
+pub use hashed::HashedStore;
 pub use io::Checkpoint;
-pub use linear::LinearEdgeModel;
+pub use linear::{DenseStore, LinearEdgeModel};
+pub use quant::Q8Store;
+pub use store::{Backend, StripCodec, TrainableStore, WeightStore};

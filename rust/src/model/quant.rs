@@ -1,0 +1,328 @@
+//! Serve-only 8-bit weight quantization: a [`Q8Store`] holds the dense
+//! model's feature-major weight block as `i8` with one f32 scale **per
+//! edge**, cutting serving memory ~4× (weights dominate; bias and scales
+//! stay f32).
+//!
+//! Per-edge scaling is what makes integer scoring possible: with
+//! `w[i,e] ≈ s_e · q[i,e]` the edge score factors as
+//! `h_e = b_e + s_e · Σ_i x_i · q[i,e]`, so after quantizing the *input*
+//! per example (`x_i ≈ s_x · qx_i`, symmetric ±127) the inner sum
+//! `Σ qx_i · q[i,e]` is pure **i32 accumulation** — no dequantized f32
+//! copy of the weights is ever materialized, and the fp work per edge is
+//! one fused `b_e + (s_e·s_x)·acc` at the end. The i32 accumulator lives
+//! in the caller's `f32` output buffer via bit-casting, so the scoring
+//! path allocates nothing (overflow would need `Σ|qx·q| > 2³¹` ≈ 133k
+//! active features at worst-case magnitudes — far beyond any XC dataset).
+//!
+//! A `Q8Store` is built offline from a trained dense model
+//! ([`Q8Store::quantize`], the `ltls quantize` subcommand) and implements
+//! only [`WeightStore`]: quantized weights cannot absorb sparse SGD
+//! deltas, so the type system keeps it out of the trainers.
+
+use super::linear::DenseStore;
+use super::mmap::I8Buf;
+use super::store::{parse_f32s, Backend, WeightBlock, WeightStore};
+use crate::sparse::SparseVec;
+
+/// Per-edge-scaled i8 quantization of a dense model (serve-only).
+#[derive(Clone, Debug)]
+pub struct Q8Store {
+    pub n_edges: usize,
+    pub n_features: usize,
+    /// Feature-major `D × E` quantized weights: `q[i*E + e]`.
+    pub q: I8Buf,
+    /// Per-edge dequantization scale `s_e` (`w[i,e] ≈ s_e · q[i,e]`).
+    pub scale: Vec<f32>,
+    /// Per-edge bias, kept at full precision.
+    pub bias: Vec<f32>,
+}
+
+impl Q8Store {
+    /// Quantize a trained dense model: symmetric per-edge scales
+    /// `s_e = max_i |w[i,e]| / 127`, weights rounded to the nearest i8.
+    pub fn quantize(dense: &DenseStore) -> Q8Store {
+        let e = dense.n_edges;
+        let d = dense.n_features;
+        let mut maxw = vec![0.0f32; e];
+        for strip in dense.w.chunks_exact(e) {
+            for (m, &w) in maxw.iter_mut().zip(strip) {
+                *m = m.max(w.abs());
+            }
+        }
+        let scale: Vec<f32> = maxw.iter().map(|&m| if m > 0.0 { m / 127.0 } else { 0.0 }).collect();
+        let inv: Vec<f32> = scale.iter().map(|&s| if s > 0.0 { 1.0 / s } else { 0.0 }).collect();
+        let mut q = Vec::with_capacity(d * e);
+        for strip in dense.w.chunks_exact(e) {
+            for (j, &w) in strip.iter().enumerate() {
+                q.push((w * inv[j]).round().clamp(-127.0, 127.0) as i8);
+            }
+        }
+        Q8Store {
+            n_edges: e,
+            n_features: d,
+            q: I8Buf::from(q),
+            scale,
+            bias: dense.bias.clone(),
+        }
+    }
+
+    /// Quantize one example's value to i8 range: returns `(inv, s_x)` with
+    /// `qx_i = round(x_i · inv)` and `x_i ≈ s_x · qx_i`.
+    #[inline]
+    fn input_scale(values: &[f32]) -> (f32, f32) {
+        let mut maxv = 0.0f32;
+        for &v in values {
+            maxv = maxv.max(v.abs());
+        }
+        if maxv > 0.0 {
+            (127.0 / maxv, maxv / 127.0)
+        } else {
+            (0.0, 0.0)
+        }
+    }
+
+    #[inline]
+    fn acc_add(o: &mut f32, delta: i32) {
+        *o = f32::from_bits(((*o).to_bits() as i32).wrapping_add(delta) as u32);
+    }
+
+    #[inline]
+    fn acc_read(o: f32) -> i32 {
+        o.to_bits() as i32
+    }
+}
+
+impl WeightStore for Q8Store {
+    const BACKEND: Backend = Backend::Q8;
+
+    fn n_edges(&self) -> usize {
+        self.n_edges
+    }
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+    fn bias(&self) -> &[f32] {
+        &self.bias
+    }
+
+    /// `h_e = b_e + (s_e·s_x) · Σ_i qx_i·q[i,e]` — i32 accumulation in the
+    /// bit pattern of `out`, one f32 fma-shaped finish per edge.
+    fn edge_scores(&self, x: SparseVec, out: &mut Vec<f32>) {
+        let e = self.n_edges;
+        out.clear();
+        out.resize(e, 0.0); // all-zero bits: i32 accumulators at 0
+        let (inv, sx) = Self::input_scale(x.values);
+        if inv > 0.0 {
+            for (&i, &v) in x.indices.iter().zip(x.values) {
+                let qv = (v * inv).round() as i32;
+                if qv == 0 {
+                    continue;
+                }
+                let strip = &self.q[i as usize * e..(i as usize + 1) * e];
+                for (o, &qw) in out.iter_mut().zip(strip) {
+                    Self::acc_add(o, qv * qw as i32);
+                }
+            }
+        }
+        for (j, o) in out.iter_mut().enumerate() {
+            let acc = Self::acc_read(*o);
+            *o = self.bias[j] + (self.scale[j] * sx) * acc as f32;
+        }
+    }
+
+    /// Batched variant: gathers `(feature, row, qx)` triples (the integer
+    /// level stored exactly in the f32 slot), sorts by feature, and sweeps
+    /// each i8 strip once per block. Bit-identical to per-row
+    /// [`Self::edge_scores`] — integer accumulation is order-independent.
+    fn edge_scores_batch(
+        &self,
+        rows: &[SparseVec],
+        scratch: &mut Vec<(u32, u32, f32)>,
+        out: &mut Vec<f32>,
+    ) {
+        let e = self.n_edges;
+        out.clear();
+        out.resize(rows.len() * e, 0.0);
+        scratch.clear();
+        for (r, x) in rows.iter().enumerate() {
+            let (inv, _) = Self::input_scale(x.values);
+            if inv == 0.0 {
+                continue;
+            }
+            for (&i, &v) in x.indices.iter().zip(x.values) {
+                let qv = (v * inv).round();
+                if qv != 0.0 {
+                    scratch.push((i, r as u32, qv));
+                }
+            }
+        }
+        scratch.sort_unstable_by_key(|t| t.0);
+        for &(i, r, qv) in scratch.iter() {
+            let qv = qv as i32;
+            let strip = &self.q[i as usize * e..(i as usize + 1) * e];
+            let dst = &mut out[r as usize * e..(r as usize + 1) * e];
+            for (o, &qw) in dst.iter_mut().zip(strip) {
+                Self::acc_add(o, qv * qw as i32);
+            }
+        }
+        for (r, x) in rows.iter().enumerate() {
+            let (_, sx) = Self::input_scale(x.values);
+            let dst = &mut out[r * e..(r + 1) * e];
+            for (j, o) in dst.iter_mut().enumerate() {
+                let acc = Self::acc_read(*o);
+                *o = self.bias[j] + (self.scale[j] * sx) * acc as f32;
+            }
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        self.q.len() + self.scale.len() + self.bias.len()
+    }
+    fn bytes(&self) -> usize {
+        self.q.len() + (self.scale.len() + self.bias.len()) * std::mem::size_of::<f32>()
+    }
+    fn weight_count(&self) -> usize {
+        self.q.len()
+    }
+    fn weight_elem_bytes(&self) -> usize {
+        1
+    }
+    fn zero_weights(&self) -> usize {
+        self.q.iter().filter(|&&v| v == 0).count()
+    }
+    fn is_mapped(&self) -> bool {
+        self.q.is_mapped()
+    }
+
+    fn write_meta(&self, out: &mut Vec<u8>) {
+        for &s in &self.scale {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+    }
+    fn weight_block_len(&self) -> usize {
+        self.q.len()
+    }
+    fn write_weights(&self, out: &mut Vec<u8>) {
+        out.extend(self.q.iter().map(|&v| v as u8));
+    }
+    fn read_store(
+        n_edges: usize,
+        n_features: usize,
+        meta: &[u8],
+        bias: Vec<f32>,
+        weights: WeightBlock<'_>,
+    ) -> Result<Self, String> {
+        if meta.len() != n_edges * 4 {
+            return Err(format!(
+                "q8 model meta is {} bytes, expected {} (E scales)",
+                meta.len(),
+                n_edges * 4
+            ));
+        }
+        if bias.len() != n_edges {
+            return Err(format!("bias is {} entries, expected {n_edges}", bias.len()));
+        }
+        let scale = parse_f32s(meta);
+        let q = weights.into_i8(n_edges * n_features)?;
+        Ok(Q8Store { n_edges, n_features, q, scale, bias })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_dense(e: usize, d: usize, seed: u64) -> DenseStore {
+        let mut m = DenseStore::new(e, d);
+        let mut rng = Rng::new(seed);
+        for w in m.w.as_mut_slice() {
+            *w = rng.normal() * 0.3;
+        }
+        for b in &mut m.bias {
+            *b = rng.normal() * 0.05;
+        }
+        m
+    }
+
+    #[test]
+    fn quantized_scores_approximate_dense() {
+        let dense = random_dense(8, 200, 5);
+        let q8 = Q8Store::quantize(&dense);
+        assert_eq!(q8.n_edges, 8);
+        assert_eq!(q8.n_features, 200);
+        let mut rng = Rng::new(6);
+        for _ in 0..50 {
+            let mut idx: Vec<u32> = (0..20).map(|_| rng.index(200) as u32).collect();
+            idx.sort_unstable();
+            idx.dedup();
+            let val: Vec<f32> = idx.iter().map(|_| rng.normal()).collect();
+            let x = SparseVec::new(&idx, &val);
+            let hd = dense.edge_scores_vec(x);
+            let mut hq = Vec::new();
+            q8.edge_scores(x, &mut hq);
+            // Score magnitudes are O(1); two-sided 8-bit rounding keeps
+            // absolute error a couple of levels at worst.
+            for (a, b) in hd.iter().zip(&hq) {
+                assert!((a - b).abs() < 0.15, "dense {a} vs q8 {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_single_bitwise() {
+        let dense = random_dense(6, 100, 7);
+        let q8 = Q8Store::quantize(&dense);
+        let xa = SparseVec::new(&[0, 7, 99], &[1.0, -0.25, 2.0]);
+        let xb = SparseVec::new(&[7, 50], &[0.125, 0.5]);
+        let xempty = SparseVec::new(&[], &[]);
+        let rows = [xa, xb, xempty];
+        let (mut gather, mut batch) = (Vec::new(), Vec::new());
+        q8.edge_scores_batch(&rows, &mut gather, &mut batch);
+        assert_eq!(batch.len(), 3 * 6);
+        for (r, x) in rows.iter().enumerate() {
+            let mut single = Vec::new();
+            q8.edge_scores(*x, &mut single);
+            assert_eq!(&batch[r * 6..(r + 1) * 6], single.as_slice(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_inputs_give_bias() {
+        let dense = random_dense(5, 50, 8);
+        let q8 = Q8Store::quantize(&dense);
+        let mut h = Vec::new();
+        q8.edge_scores(SparseVec::new(&[], &[]), &mut h);
+        for (a, b) in h.iter().zip(&q8.bias) {
+            assert_eq!(a, b);
+        }
+        let idx = [3u32];
+        let val = [0.0f32];
+        q8.edge_scores(SparseVec::new(&idx, &val), &mut h);
+        for (a, b) in h.iter().zip(&q8.bias) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn accounting_shows_4x_compression() {
+        let dense = random_dense(10, 1000, 9);
+        let q8 = Q8Store::quantize(&dense);
+        // i8 weights + f32 scales/bias vs f32 everything.
+        assert!(dense.bytes() as f64 / q8.bytes() as f64 > 3.5);
+        assert_eq!(q8.param_count(), 10 * 1000 + 10 + 10);
+        assert_eq!(q8.backend(), Backend::Q8);
+        assert!(!q8.is_mapped());
+    }
+
+    #[test]
+    fn zero_model_quantizes_to_zero() {
+        let dense = DenseStore::new(4, 20);
+        let q8 = Q8Store::quantize(&dense);
+        assert!(q8.scale.iter().all(|&s| s == 0.0));
+        assert_eq!(q8.zero_fraction(), 1.0);
+        let mut h = Vec::new();
+        q8.edge_scores(SparseVec::new(&[0, 5], &[1.0, 2.0]), &mut h);
+        assert_eq!(h, vec![0.0; 4]);
+    }
+}

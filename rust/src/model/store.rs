@@ -1,0 +1,393 @@
+//! Pluggable weight storage for the linear edge model.
+//!
+//! LTLS's log-space claim lives in the weight matrix: the model is exactly
+//! `E·D` floats, so at extreme `D` (and at the wider trellises, where `E`
+//! grows as `W²·log_W C`) memory — not graph size — becomes the serving
+//! and training bottleneck. This module turns the storage decision into a
+//! runtime dial, like `--width` already is:
+//!
+//! * [`WeightStore`] — what *serving* needs: strip-wise
+//!   `edge_scores`/`edge_scores_batch`, size accounting
+//!   (`param_count`/`bytes`), and the v3 file-format hooks. Implemented by
+//!   [`super::linear::DenseStore`] (the paper's exact `D×E` layout),
+//!   [`super::hashed::HashedStore`] (signed feature hashing into `2^b`
+//!   buckets — memory bounded independently of `D`) and
+//!   [`super::quant::Q8Store`] (serve-only per-edge i8 quantization).
+//! * [`TrainableStore`] — what *training* additionally needs: the fused
+//!   `update_edges` SGD kernel, raw `f32` storage for the Hogwild atomic
+//!   view and the weight averager, and the [`StripCodec`] — the
+//!   feature → (strip, sign) mapping that is the *entire* difference
+//!   between the dense and hashed layouts. Every f32 kernel (serial,
+//!   batched, Hogwild-atomic, averaging) is written once over the codec;
+//!   the dense [`IdentityCodec`] maps feature `i` to strip `i` with sign
+//!   `+1.0`, which multiplies out bit-identically to the pre-trait code
+//!   (pinned by `rust/tests/engine_parity.rs` and `train_parallel.rs`).
+//!
+//! [`Q8Store`] implements only [`WeightStore`]: quantized weights cannot
+//! take sparse SGD deltas, so the type system — not a runtime check —
+//! keeps it out of the trainers.
+//!
+//! [`Q8Store`]: super::quant::Q8Store
+
+use super::mmap::{F32Buf, I8Buf, MmapRegion};
+use crate::sparse::SparseVec;
+use std::sync::Arc;
+
+/// Which weight representation a store (or a model file) uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Feature-major `D × E` f32 matrix (the paper's model).
+    Dense,
+    /// Signed feature hashing into `2^b × E` f32 buckets.
+    Hashed,
+    /// Per-edge-scaled i8 quantization of a dense model (serve-only).
+    Q8,
+}
+
+impl Backend {
+    /// On-disk tag (model format v3).
+    pub fn tag(self) -> u32 {
+        match self {
+            Backend::Dense => 0,
+            Backend::Hashed => 1,
+            Backend::Q8 => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u32) -> Result<Backend, String> {
+        match tag {
+            0 => Ok(Backend::Dense),
+            1 => Ok(Backend::Hashed),
+            2 => Ok(Backend::Q8),
+            t => Err(format!("unknown weight-storage backend tag {t}")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Dense => "dense",
+            Backend::Hashed => "hashed",
+            Backend::Q8 => "q8",
+        }
+    }
+}
+
+/// The source of a weight block during deserialization: heap bytes to
+/// parse, or a borrowed range of a memory-mapped file.
+pub enum WeightBlock<'a> {
+    Owned(&'a [u8]),
+    Mapped { region: Arc<MmapRegion>, offset: usize, len: usize },
+}
+
+impl WeightBlock<'_> {
+    /// Byte length of the block.
+    pub fn len(&self) -> usize {
+        match self {
+            WeightBlock::Owned(b) => b.len(),
+            WeightBlock::Mapped { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Realize as `n` f32 elements (parse-copy if owned, borrow if mapped).
+    pub fn into_f32(self, n: usize) -> Result<F32Buf, String> {
+        if self.len() != n * 4 {
+            return Err(format!("weight block is {} bytes, expected {}", self.len(), n * 4));
+        }
+        match self {
+            WeightBlock::Owned(b) => Ok(F32Buf::from(parse_f32s(b))),
+            WeightBlock::Mapped { region, offset, .. } => F32Buf::mapped(region, offset, n),
+        }
+    }
+
+    /// Realize as `n` i8 elements.
+    pub fn into_i8(self, n: usize) -> Result<I8Buf, String> {
+        if self.len() != n {
+            return Err(format!("weight block is {} bytes, expected {n}", self.len()));
+        }
+        match self {
+            WeightBlock::Owned(b) => {
+                Ok(I8Buf::from(b.iter().map(|&x| x as i8).collect::<Vec<i8>>()))
+            }
+            WeightBlock::Mapped { region, offset, .. } => I8Buf::mapped(region, offset, n),
+        }
+    }
+}
+
+/// Parse a little-endian f32 array.
+pub(crate) fn parse_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+/// Weight storage a *serving* stack can score against. See the module
+/// docs; [`TrainableStore`] adds what training needs.
+pub trait WeightStore: Clone + Send + Sync + 'static {
+    /// The representation this type stores (also its v3 file tag).
+    const BACKEND: Backend;
+
+    /// Number of learnable edges `E` (strip length).
+    fn n_edges(&self) -> usize;
+    /// Logical feature dimensionality `D` (what datasets index with —
+    /// a hashed store's physical strip count is smaller).
+    fn n_features(&self) -> usize;
+    /// Per-edge bias.
+    fn bias(&self) -> &[f32];
+
+    /// Edge-score vector `h = Wx + b` into `out` (cleared first).
+    fn edge_scores(&self, x: SparseVec, out: &mut Vec<f32>);
+
+    /// Batched edge scores for a block of sparse rows: `out` receives the
+    /// `B × E` row-major score matrix. Must produce exactly what per-row
+    /// [`Self::edge_scores`] produces; `scratch` is the gather buffer of
+    /// the one-sweep-per-feature-strip schedule.
+    fn edge_scores_batch(
+        &self,
+        rows: &[SparseVec],
+        scratch: &mut Vec<(u32, u32, f32)>,
+        out: &mut Vec<f32>,
+    );
+
+    /// Stored parameter count (weights + bias + per-store extras).
+    fn param_count(&self) -> usize;
+    /// Model size in bytes as stored (the paper's "model size" columns).
+    fn bytes(&self) -> usize;
+    /// Number of stored weight elements (bias/scales excluded).
+    fn weight_count(&self) -> usize;
+    /// Bytes per stored weight element (4 for the f32 backends, 1 for q8).
+    fn weight_elem_bytes(&self) -> usize;
+    /// Number of exactly-zero stored weight elements — one full scan;
+    /// callers needing both derived metrics below should call this once.
+    fn zero_weights(&self) -> usize;
+    /// Size in bytes after dropping exactly-zero weights (the L1 /
+    /// sparse-serving floor reported by the train/eval summaries).
+    fn effective_bytes(&self) -> usize {
+        self.bytes() - self.zero_weights() * self.weight_elem_bytes()
+    }
+    /// Fraction of exactly-zero stored weights.
+    fn zero_fraction(&self) -> f64 {
+        self.zero_weights() as f64 / self.weight_count().max(1) as f64
+    }
+
+    fn backend(&self) -> Backend {
+        Self::BACKEND
+    }
+
+    /// True when the weight block borrows a mapped file region.
+    fn is_mapped(&self) -> bool {
+        false
+    }
+
+    // ---- model format v3 hooks (see `super::io` for the layout) ----
+
+    /// Append the store-specific fixed metadata (hash bits/seed, q8
+    /// scales…). Dense stores write nothing.
+    fn write_meta(&self, out: &mut Vec<u8>) {
+        let _ = out;
+    }
+    /// Byte length of the weight block [`Self::write_weights`] appends.
+    fn weight_block_len(&self) -> usize;
+    /// Append the (64-byte-aligned by the caller) weight block.
+    fn write_weights(&self, out: &mut Vec<u8>);
+    /// Rebuild from the parsed file sections.
+    fn read_store(
+        n_edges: usize,
+        n_features: usize,
+        meta: &[u8],
+        bias: Vec<f32>,
+        weights: WeightBlock<'_>,
+    ) -> Result<Self, String>
+    where
+        Self: Sized;
+}
+
+/// The feature → (strip index, sign) mapping of an f32 store: the entire
+/// difference between the dense and hashed layouts, shared by every f32
+/// kernel (plain, batched, Hogwild-atomic, averaging). `Copy` so the
+/// Hogwild workers can hold it by value next to the atomic weight view.
+pub trait StripCodec: Copy + Send + Sync + 'static {
+    /// Where feature `i`'s weight strip lives and with which sign its
+    /// value enters the score/update.
+    fn strip_of(&self, i: u32) -> (u32, f32);
+}
+
+/// Dense codec: feature `i` → strip `i`, sign `+1.0` (multiplies out
+/// bit-identically to unsigned arithmetic).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IdentityCodec;
+
+impl StripCodec for IdentityCodec {
+    #[inline]
+    fn strip_of(&self, i: u32) -> (u32, f32) {
+        (i, 1.0)
+    }
+}
+
+/// Weight storage the SGD trainers (serial and Hogwild) can update.
+pub trait TrainableStore: WeightStore {
+    /// This store's feature → strip mapping.
+    type Codec: StripCodec;
+
+    fn codec(&self) -> Self::Codec;
+    /// Number of physical weight strips (`D` for dense, `2^b` for hashed).
+    fn n_strips(&self) -> usize;
+    /// The strip-major f32 weight block (`n_strips × E`).
+    fn raw_w(&self) -> &[f32];
+    /// `(weights, bias)` mutable views — the Hogwild trainer rebinds these
+    /// as `&[AtomicU32]`. Panics for mapped (serve-only) storage.
+    fn raw_parts_mut(&mut self) -> (&mut [f32], &mut [f32]);
+    /// Hash bucket bits (0 for non-hashed stores) — resume compatibility
+    /// checks compare this against the configured `--hash-bits`.
+    fn hash_bits(&self) -> u32 {
+        0
+    }
+
+    /// Zero-initialized store sized for a topology. `hash_bits`/`seed`
+    /// configure the hashed layout; the dense store rejects a non-zero
+    /// `hash_bits` so a mis-dispatched config fails loudly.
+    fn for_topology_cfg<T: crate::graph::Topology>(
+        t: &T,
+        n_features: usize,
+        hash_bits: u32,
+        seed: u64,
+    ) -> Result<Self, String>
+    where
+        Self: Sized;
+
+    /// Sparse SGD update on one edge: `w_e += scale · x`, `b_e += scale·0.1`.
+    #[inline]
+    fn update_edge(&mut self, e: usize, x: SparseVec, scale: f32) {
+        let ne = self.n_edges();
+        let codec = self.codec();
+        let (w, bias) = self.raw_parts_mut();
+        for (&i, &v) in x.indices.iter().zip(x.values) {
+            let (s, sign) = codec.strip_of(i);
+            w[s as usize * ne + e] += (scale * v) * sign;
+        }
+        bias[e] += scale * 0.1;
+    }
+
+    /// Fused separation-loss update (`+scale·x` on `pos` edges, `−scale·x`
+    /// on `neg` edges): walks each active feature's strip once.
+    fn update_edges(&mut self, pos: &[u32], neg: &[u32], x: SparseVec, scale: f32) {
+        let ne = self.n_edges();
+        let codec = self.codec();
+        let (w, bias) = self.raw_parts_mut();
+        for (&i, &v) in x.indices.iter().zip(x.values) {
+            let (s, sign) = codec.strip_of(i);
+            let strip = &mut w[s as usize * ne..(s as usize + 1) * ne];
+            let sv = (scale * v) * sign;
+            for &e in pos {
+                strip[e as usize] += sv;
+            }
+            for &e in neg {
+                strip[e as usize] -= sv;
+            }
+        }
+        for &e in pos {
+            bias[e as usize] += scale * 0.1;
+        }
+        for &e in neg {
+            bias[e as usize] -= scale * 0.1;
+        }
+    }
+}
+
+/// Shared f32 scoring kernel: `h = Wx + b` through a [`StripCodec`] — one
+/// contiguous E-strip read per active feature.
+pub(crate) fn codec_edge_scores<C: StripCodec>(
+    w: &[f32],
+    bias: &[f32],
+    n_edges: usize,
+    codec: C,
+    x: SparseVec,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.extend_from_slice(bias);
+    for (&i, &v) in x.indices.iter().zip(x.values) {
+        let (s, sign) = codec.strip_of(i);
+        let strip = &w[s as usize * n_edges..(s as usize + 1) * n_edges];
+        let sv = v * sign;
+        for (o, &wv) in out.iter_mut().zip(strip) {
+            *o += sv * wv;
+        }
+    }
+}
+
+/// Shared f32 batched scoring kernel: the block's `(feature, row, value)`
+/// triples are gathered and sorted by feature, so each distinct feature's
+/// strip is swept once for all rows while cache-hot. Bit-identical to
+/// per-row [`codec_edge_scores`] (ascending-feature accumulation order per
+/// output cell, like the single-row path).
+pub(crate) fn codec_edge_scores_batch<C: StripCodec>(
+    w: &[f32],
+    bias: &[f32],
+    n_edges: usize,
+    codec: C,
+    rows: &[SparseVec],
+    scratch: &mut Vec<(u32, u32, f32)>,
+    out: &mut Vec<f32>,
+) {
+    let e = n_edges;
+    out.clear();
+    out.reserve(rows.len() * e);
+    for _ in 0..rows.len() {
+        out.extend_from_slice(bias);
+    }
+    scratch.clear();
+    for (r, x) in rows.iter().enumerate() {
+        for (&i, &v) in x.indices.iter().zip(x.values) {
+            scratch.push((i, r as u32, v));
+        }
+    }
+    scratch.sort_unstable_by_key(|t| t.0);
+    for &(i, r, v) in scratch.iter() {
+        let (s, sign) = codec.strip_of(i);
+        let strip = &w[s as usize * e..(s as usize + 1) * e];
+        let dst = &mut out[r as usize * e..(r as usize + 1) * e];
+        let sv = v * sign;
+        for (o, &wv) in dst.iter_mut().zip(strip) {
+            *o += sv * wv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_tags_roundtrip() {
+        for b in [Backend::Dense, Backend::Hashed, Backend::Q8] {
+            assert_eq!(Backend::from_tag(b.tag()).unwrap(), b);
+        }
+        assert!(Backend::from_tag(3).is_err());
+        assert_eq!(Backend::Dense.name(), "dense");
+        assert_eq!(Backend::Hashed.name(), "hashed");
+        assert_eq!(Backend::Q8.name(), "q8");
+    }
+
+    #[test]
+    fn identity_codec_is_identity() {
+        for i in [0u32, 1, 7, 1_000_000] {
+            assert_eq!(IdentityCodec.strip_of(i), (i, 1.0));
+        }
+    }
+
+    #[test]
+    fn weight_block_owned_f32_roundtrip() {
+        let vals = [1.0f32, -0.5, 3.25];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let buf = WeightBlock::Owned(&bytes).into_f32(3).unwrap();
+        assert_eq!(&buf[..], &vals[..]);
+        assert!(WeightBlock::Owned(&bytes).into_f32(4).is_err());
+        let ib = WeightBlock::Owned(&[0xFFu8, 1, 0x80]).into_i8(3).unwrap();
+        assert_eq!(&ib[..], &[-1i8, 1, -128]);
+    }
+}

@@ -34,6 +34,11 @@ pub struct TrainConfig {
     /// topology type must be able to represent it: a
     /// [`Trainer<Trellis>`](super::Trainer) only accepts 2.
     pub width: u32,
+    /// Weight-storage dial: 0 trains the dense `D×E` store; `b > 0`
+    /// trains a [`crate::model::HashedStore`] with `2^b` signed-hash
+    /// buckets (memory bounded independently of D). The store type must
+    /// match: a dense-typed trainer rejects a non-zero value.
+    pub hash_bits: u32,
 }
 
 impl Default for TrainConfig {
@@ -51,6 +56,7 @@ impl Default for TrainConfig {
             threads: 1,
             batch: 1,
             width: 2,
+            hash_bits: 0,
         }
     }
 }
@@ -112,5 +118,6 @@ mod tests {
         assert_eq!(c.threads, 1);
         assert_eq!(c.batch, 1);
         assert_eq!(c.width, 2);
+        assert_eq!(c.hash_bits, 0, "dense storage is the default backend");
     }
 }

@@ -5,29 +5,31 @@
 //! example's active features. Sparse updates are exactly the regime where
 //! lock-free ("Hogwild") SGD converges despite racy writes, so the
 //! parallel trainer runs `N` scoped workers over one shared
-//! [`LinearEdgeModel`]:
+//! [`TrainableStore`]:
 //!
 //! * **Sharding** — every epoch's deterministic permutation (the same
 //!   `seed ^ step` permutation the serial trainer uses, see
 //!   [`super::shard`]) is split into one contiguous chunk per worker, so a
 //!   1-worker Hogwild epoch is *bit-identical* to the serial epoch
 //!   (pinned by `rust/tests/train_parallel.rs`).
-//! * **Shared weights** — workers read and write the weight matrix through
-//!   [`SharedWeights`], a `&[AtomicU32]` view over the model's `f32`
-//!   storage (same size/alignment/bit-validity). All accesses are
-//!   `Relaxed` atomic loads/stores: plain machine loads/stores on x86/ARM,
-//!   formally race-free, with the classic Hogwild semantics that
-//!   concurrent read-modify-writes may occasionally drop an update.
+//! * **Shared weights** — workers read and write the weight strips through
+//!   [`SharedWeights`], a `&[AtomicU32]` view over the store's raw `f32`
+//!   storage (same size/alignment/bit-validity) plus the store's
+//!   [`StripCodec`] held by value — so the dense *and* hashed backends
+//!   share one set of atomic kernels. All accesses are `Relaxed` atomic
+//!   loads/stores: plain machine loads/stores on x86/ARM, formally
+//!   race-free, with the classic Hogwild semantics that concurrent
+//!   read-modify-writes may occasionally drop an update.
 //! * **Per-worker engine scratch** — each worker owns a
 //!   [`TrainScratch`] (edge-score buffer, loss decode workspace,
 //!   symmetric-difference sets, mini-batch buffers), so the steady-state
 //!   epoch performs no heap allocation in the hot loop.
 //! * **Mini-batch scoring** — with `config.batch > 1` a worker scores `B`
-//!   examples per feature-strip sweep using the same gather-sort schedule
-//!   as the serving kernel [`LinearEdgeModel::edge_scores_batch`], then
-//!   applies the per-example hinge updates from the shared score matrix
-//!   (scores within a block are computed before the block's updates —
-//!   standard mini-batch staleness).
+//!   examples per strip sweep using the same gather-sort schedule as the
+//!   serving kernel (`edge_scores_batch`), then applies the per-example
+//!   hinge updates from the shared score matrix (scores within a block
+//!   are computed before the block's updates — standard mini-batch
+//!   staleness).
 //! * **Assignment** — the online label→path table (paper §5.1) is the one
 //!   piece that cannot be racy (it is a bijection), so it sits behind an
 //!   `RwLock`: the steady-state path is a read-lock lookup; only unseen
@@ -54,7 +56,7 @@ use crate::engine::TrainScratch;
 use crate::graph::{Topology, Trellis};
 use crate::loss::separation_loss_ws;
 use crate::model::io::{self, Checkpoint};
-use crate::model::LinearEdgeModel;
+use crate::model::{DenseStore, StripCodec, TrainableStore};
 use crate::sparse::SparseVec;
 use std::path::Path;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
@@ -70,23 +72,27 @@ fn atomic_view(v: &mut [f32]) -> &[AtomicU32] {
     unsafe { std::slice::from_raw_parts(v.as_mut_ptr() as *const AtomicU32, v.len()) }
 }
 
-/// The shared Hogwild view over one [`LinearEdgeModel`]'s storage.
+/// The shared Hogwild view over one [`TrainableStore`]'s storage.
 ///
-/// Mirrors the model's scoring/update kernels 1:1 (same loop structure,
+/// Mirrors the store's scoring/update kernels 1:1 (same loop structure,
 /// same float-op order — `shared_kernels_match_model` pins the parity)
-/// with relaxed atomic element access instead of plain loads/stores.
-struct SharedWeights<'a> {
-    /// Feature-major `D × E` weights (see [`LinearEdgeModel::w`]).
+/// with relaxed atomic element access instead of plain loads/stores, and
+/// the store's feature→(strip, sign) codec applied identically.
+struct SharedWeights<'a, C: StripCodec> {
+    /// Strip-major `n_strips × E` weights.
     w: &'a [AtomicU32],
     /// Per-edge bias.
     bias: &'a [AtomicU32],
     n_edges: usize,
+    codec: C,
 }
 
-impl<'a> SharedWeights<'a> {
-    fn new(m: &'a mut LinearEdgeModel) -> SharedWeights<'a> {
-        let n_edges = m.n_edges;
-        SharedWeights { w: atomic_view(&mut m.w), bias: atomic_view(&mut m.bias), n_edges }
+impl<'a, C: StripCodec> SharedWeights<'a, C> {
+    fn new<S: TrainableStore<Codec = C>>(m: &'a mut S) -> SharedWeights<'a, C> {
+        let n_edges = m.n_edges();
+        let codec = m.codec();
+        let (w, bias) = m.raw_parts_mut();
+        SharedWeights { w: atomic_view(w), bias: atomic_view(bias), n_edges, codec }
     }
 
     #[inline]
@@ -102,21 +108,23 @@ impl<'a> SharedWeights<'a> {
         a.store(v.to_bits(), Ordering::Relaxed);
     }
 
-    /// Mirrors [`LinearEdgeModel::edge_scores`].
+    /// Mirrors [`crate::model::store::codec_edge_scores`].
     fn edge_scores(&self, x: SparseVec, out: &mut Vec<f32>) {
         let e = self.n_edges;
         out.clear();
         out.extend(self.bias.iter().map(Self::get));
         for (&i, &v) in x.indices.iter().zip(x.values) {
-            let strip = &self.w[i as usize * e..(i as usize + 1) * e];
+            let (s, sign) = self.codec.strip_of(i);
+            let strip = &self.w[s as usize * e..(s as usize + 1) * e];
+            let sv = v * sign;
             for (o, wv) in out.iter_mut().zip(strip) {
-                *o += v * Self::get(wv);
+                *o += sv * Self::get(wv);
             }
         }
     }
 
-    /// Mirrors [`LinearEdgeModel::edge_scores_batch`] (same gather-sort
-    /// schedule: one feature-strip sweep per block).
+    /// Mirrors [`crate::model::store::codec_edge_scores_batch`] (same
+    /// gather-sort schedule: one strip sweep per block).
     fn edge_scores_batch(
         &self,
         rows: &[SparseVec],
@@ -137,21 +145,24 @@ impl<'a> SharedWeights<'a> {
         }
         scratch.sort_unstable_by_key(|t| t.0);
         for &(i, r, v) in scratch.iter() {
-            let strip = &self.w[i as usize * e..(i as usize + 1) * e];
+            let (s, sign) = self.codec.strip_of(i);
+            let strip = &self.w[s as usize * e..(s as usize + 1) * e];
             let dst = &mut out[r as usize * e..(r as usize + 1) * e];
+            let sv = v * sign;
             for (o, wv) in dst.iter_mut().zip(strip) {
-                *o += v * Self::get(wv);
+                *o += sv * Self::get(wv);
             }
         }
     }
 
-    /// Mirrors [`LinearEdgeModel::update_edges`] (fused symmetric-difference
-    /// update, feature-major strips, bias after weights).
+    /// Mirrors [`TrainableStore::update_edges`] (fused symmetric-difference
+    /// update, strip-major, bias after weights).
     fn update_edges(&self, pos: &[u32], neg: &[u32], x: SparseVec, scale: f32) {
         let e = self.n_edges;
         for (&i, &v) in x.indices.iter().zip(x.values) {
-            let strip = &self.w[i as usize * e..(i as usize + 1) * e];
-            let sv = scale * v;
+            let (s, sign) = self.codec.strip_of(i);
+            let strip = &self.w[s as usize * e..(s as usize + 1) * e];
+            let sv = (scale * v) * sign;
             for &edge in pos {
                 Self::add(&strip[edge as usize], sv);
             }
@@ -170,15 +181,16 @@ impl<'a> SharedWeights<'a> {
 
 /// One worker's epoch over its shard. Runs the full SGD step pipeline on
 /// worker-owned [`TrainScratch`] buffers against the shared weights.
-/// Generic over the graph [`Topology`] — the wide and width-2 trellises
-/// share the whole Hogwild pipeline.
+/// Generic over the graph [`Topology`] and the store's [`StripCodec`] —
+/// the wide/width-2 trellises and the dense/hashed backends all share the
+/// whole Hogwild pipeline.
 #[allow(clippy::too_many_arguments)]
-fn run_worker<T: Topology>(
+fn run_worker<T: Topology, C: StripCodec>(
     shard: &[usize],
     ds: &Dataset,
     trellis: &T,
     config: &TrainConfig,
-    weights: &SharedWeights<'_>,
+    weights: &SharedWeights<'_, C>,
     assigner: &RwLock<&mut Assigner>,
     step_ctr: &AtomicU64,
     batch: usize,
@@ -196,7 +208,7 @@ fn run_worker<T: Topology>(
         rows.extend(block.iter().map(|&r| ds.row(r)));
         let batched = rows.len() > 1;
         if batched {
-            // One feature-strip sweep scores the whole block (the serving
+            // One strip sweep scores the whole block (the serving
             // kernel's schedule); updates apply per example below.
             weights.edge_scores_batch(&rows, &mut scratch.batch_gather, &mut scratch.batch_h);
         }
@@ -270,23 +282,26 @@ fn run_worker<T: Topology>(
 }
 
 /// Multi-threaded Hogwild trainer wrapping the serial [`Trainer`], generic
-/// over the graph [`Topology`] (width-2 [`Trellis`] by default).
+/// over the graph [`Topology`] (width-2 [`Trellis`] by default) and the
+/// weight storage [`TrainableStore`] ([`DenseStore`] by default).
 ///
 /// `config.threads` picks the worker count (0 → one per core, 1 → the
-/// serial path); `config.batch` picks the mini-batch scoring width. See
-/// the module docs for the execution model.
+/// serial path); `config.batch` picks the mini-batch scoring width;
+/// `config.hash_bits` picks the hashed backend when the store type is
+/// [`crate::model::HashedStore`]. See the module docs for the execution
+/// model.
 #[derive(Clone)]
-pub struct ParallelTrainer<T: Topology = Trellis> {
-    inner: Trainer<T>,
+pub struct ParallelTrainer<T: Topology = Trellis, S: TrainableStore = DenseStore> {
+    inner: Trainer<T, S>,
     /// Epochs completed, including epochs restored from a checkpoint.
     epochs_done: u32,
     /// Per-epoch metrics history (checkpointed alongside the model).
     history: Vec<EpochMetrics>,
 }
 
-impl ParallelTrainer<Trellis> {
-    /// New width-2 trainer for `n_features`-dim inputs and `n_labels`
-    /// classes (panics on invalid shapes — the CLI goes through
+impl ParallelTrainer<Trellis, DenseStore> {
+    /// New width-2 dense trainer for `n_features`-dim inputs and
+    /// `n_labels` classes (panics on invalid shapes — the CLI goes through
     /// [`ParallelTrainer::with_topology`]).
     pub fn new(config: TrainConfig, n_features: usize, n_labels: usize) -> Self {
         ParallelTrainer {
@@ -297,10 +312,11 @@ impl ParallelTrainer<Trellis> {
     }
 }
 
-impl<T: Topology> ParallelTrainer<T> {
+impl<T: Topology, S: TrainableStore> ParallelTrainer<T, S> {
     /// New trainer whose topology is built by `T::build(n_labels,
-    /// config.width)`; errors instead of panicking on shapes the topology
-    /// rejects (the CLI entry point for `--width`).
+    /// config.width)` and store by `S::for_topology_cfg`; errors instead
+    /// of panicking on shapes either rejects (the CLI entry point for
+    /// `--width` / `--hash-bits`).
     pub fn with_topology(
         config: TrainConfig,
         n_features: usize,
@@ -318,9 +334,14 @@ impl<T: Topology> ParallelTrainer<T> {
     /// permutations continue exactly), the epoch counter and the metrics
     /// history. Errors if `config.seed` differs from the checkpoint's seed
     /// — the "reproducible from the config alone" guarantee would silently
-    /// break otherwise. Not restored (documented): the weight-averager
-    /// state and the assigner's random-fallback RNG — both restart fresh.
-    pub fn resume(config: TrainConfig, ck: Checkpoint<T>) -> Result<ParallelTrainer<T>, String> {
+    /// break otherwise — or if the checkpoint's trellis width or weight
+    /// backend differs from the config's. Not restored (documented): the
+    /// weight-averager state and the assigner's random-fallback RNG — both
+    /// restart fresh.
+    pub fn resume(
+        config: TrainConfig,
+        ck: Checkpoint<T, S>,
+    ) -> Result<ParallelTrainer<T, S>, String> {
         let Checkpoint { epoch, step, seed, history, model } = ck;
         if seed != config.seed {
             return Err(format!(
@@ -338,6 +359,14 @@ impl<T: Topology> ParallelTrainer<T> {
                  resume with the same --width (or retrain)",
                 model.trellis.width(),
                 config.width
+            ));
+        }
+        if model.model.hash_bits() != config.hash_bits {
+            return Err(format!(
+                "checkpoint was trained with hash-bits {}, config has {} — \
+                 resume with the same --hash-bits (or retrain)",
+                model.model.hash_bits(),
+                config.hash_bits
             ));
         }
         let TrainedModel { trellis, model, mut assigner } = model;
@@ -383,7 +412,7 @@ impl<T: Topology> ParallelTrainer<T> {
     }
 
     /// Snapshot the current training state (raw, unaveraged weights).
-    pub fn checkpoint(&self) -> Checkpoint<T> {
+    pub fn checkpoint(&self) -> Checkpoint<T, S> {
         Checkpoint {
             epoch: self.epochs_done,
             step: self.inner.step,
@@ -402,9 +431,11 @@ impl<T: Topology> ParallelTrainer<T> {
     /// included); anything else runs the Hogwild worker pool.
     pub fn epoch(&mut self, ds: &Dataset) -> EpochMetrics {
         assert_eq!(
-            ds.n_features, self.inner.model.n_features,
+            ds.n_features,
+            self.inner.model.n_features(),
             "dataset feature dim {} != model feature dim {} (resumed against a different dataset?)",
-            ds.n_features, self.inner.model.n_features
+            ds.n_features,
+            self.inner.model.n_features()
         );
         // A checkpointed model records only bound (label, path) pairs;
         // make sure the label side covers this dataset.
@@ -517,7 +548,7 @@ impl<T: Topology> ParallelTrainer<T> {
 
     /// Finalize into a predictor (averaging/L1 exactly as the serial
     /// [`Trainer::into_model`]; Hogwild-trained weights are raw).
-    pub fn into_model(self) -> TrainedModel<T> {
+    pub fn into_model(self) -> TrainedModel<T, S> {
         self.inner.into_model()
     }
 }
@@ -526,6 +557,7 @@ impl<T: Topology> ParallelTrainer<T> {
 mod tests {
     use super::*;
     use crate::data::synthetic::SyntheticSpec;
+    use crate::model::{LinearEdgeModel, WeightStore};
     use crate::util::rng::Rng;
 
     /// The SharedWeights kernels are bit-identical to the LinearEdgeModel
@@ -565,6 +597,32 @@ mod tests {
         assert_eq!(a.bias, b.bias);
     }
 
+    /// The same parity holds for the hashed backend: the atomic kernels
+    /// apply the hash codec exactly like the plain store kernels.
+    #[test]
+    fn shared_kernels_match_hashed_store() {
+        use crate::model::HashedStore;
+        let mut a = HashedStore::new(5, 400, 5, 13).unwrap();
+        let idx = [2u32, 133, 399];
+        let val = [0.5f32, -1.5, 2.0];
+        let x = SparseVec::new(&idx, &val);
+        a.update_edges(&[0, 4], &[2], x, 0.9);
+        let mut b = a.clone();
+
+        let mut want = Vec::new();
+        WeightStore::edge_scores(&a, x, &mut want);
+        let shared = SharedWeights::new(&mut b);
+        let mut got = Vec::new();
+        shared.edge_scores(x, &mut got);
+        assert_eq!(want, got);
+
+        shared.update_edges(&[1], &[3], x, 0.25);
+        drop(shared);
+        a.update_edges(&[1], &[3], x, 0.25);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.bias, b.bias);
+    }
+
     /// Smoke: a 3-worker Hogwild epoch trains (loss decreases) and counts
     /// every example exactly once.
     #[test]
@@ -599,5 +657,34 @@ mod tests {
         let model = tr.into_model();
         let p1 = crate::eval::precision_at_1(&model, &ds);
         assert!(p1 > 0.3, "precision@1 = {p1}");
+    }
+
+    /// The hashed backend trains through the full Hogwild pipeline:
+    /// multi-worker + mini-batch, loss decreases, memory stays 2^bits.
+    #[test]
+    fn hashed_hogwild_trains() {
+        use crate::model::HashedStore;
+        let ds = SyntheticSpec::multiclass(900, 600, 32).seed(93).generate();
+        let cfg = TrainConfig {
+            threads: 3,
+            batch: 8,
+            averaging: false,
+            hash_bits: 8,
+            ..TrainConfig::default()
+        };
+        let mut tr = ParallelTrainer::<Trellis, HashedStore>::with_topology(
+            cfg,
+            ds.n_features,
+            ds.n_labels,
+        )
+        .unwrap();
+        let m1 = tr.epoch(&ds);
+        assert_eq!(m1.examples, 900);
+        let m2 = tr.epoch(&ds);
+        assert!(m2.mean_loss() < m1.mean_loss());
+        let model = tr.into_model();
+        assert_eq!(model.model.n_strips(), 256);
+        let p1 = crate::eval::precision_at_1(&model, &ds);
+        assert!(p1 > 0.2, "hashed hogwild precision@1 = {p1}");
     }
 }

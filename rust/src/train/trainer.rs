@@ -9,21 +9,23 @@ use crate::engine::{PredictScratch, TrainScratch};
 use crate::graph::{Topology, Trellis};
 use crate::loss::separation_loss_ws;
 use crate::model::averaged::Averager;
-use crate::model::LinearEdgeModel;
+use crate::model::{DenseStore, TrainableStore, WeightStore};
 use crate::sparse::SparseVec;
 
 /// Online LTLS trainer (separation ranking loss + averaged sparse SGD),
 /// generic over the graph [`Topology`] — the paper's width-2 [`Trellis`]
 /// by default, or a [`crate::graph::WideTrellis`] at any width
-/// (`config.width`).
+/// (`config.width`) — and over the weight storage [`TrainableStore`]:
+/// the dense [`DenseStore`] by default, or a
+/// [`crate::model::HashedStore`] when `config.hash_bits > 0`.
 ///
 /// This is the strictly-serial engine; [`super::ParallelTrainer`] wraps it
 /// and runs it directly as the `threads = 1` special case.
 #[derive(Clone)]
-pub struct Trainer<T: Topology = Trellis> {
+pub struct Trainer<T: Topology = Trellis, S: TrainableStore = DenseStore> {
     pub config: TrainConfig,
     pub trellis: T,
-    pub model: LinearEdgeModel,
+    pub model: S,
     pub assigner: Assigner,
     pub(crate) averager: Option<Averager>,
     pub(crate) step: u64,
@@ -31,31 +33,33 @@ pub struct Trainer<T: Topology = Trellis> {
     pub(crate) scratch: TrainScratch,
 }
 
-impl Trainer<Trellis> {
-    /// New width-2 trainer for `n_features`-dim inputs and `n_labels`
-    /// classes (the paper's configuration; panics on invalid shapes — the
-    /// CLI goes through [`Trainer::with_topology`]).
+impl Trainer<Trellis, DenseStore> {
+    /// New width-2 dense trainer for `n_features`-dim inputs and
+    /// `n_labels` classes (the paper's configuration; panics on invalid
+    /// shapes — the CLI goes through [`Trainer::with_topology`]).
     pub fn new(config: TrainConfig, n_features: usize, n_labels: usize) -> Self {
         Trainer::with_topology(config, n_features, n_labels).unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
-impl<T: Topology> Trainer<T> {
+impl<T: Topology, S: TrainableStore> Trainer<T, S> {
     /// New trainer whose topology is built by `T::build(n_labels,
-    /// config.width)`; errors (instead of panicking) on shapes the
-    /// topology rejects — too few classes, or a width `T` cannot
-    /// represent.
+    /// config.width)` and whose store is built by
+    /// `S::for_topology_cfg(…, config.hash_bits, config.seed)`; errors
+    /// (instead of panicking) on shapes the topology or the store rejects
+    /// — too few classes, a width `T` cannot represent, or hash bits out
+    /// of range.
     pub fn with_topology(
         config: TrainConfig,
         n_features: usize,
         n_labels: usize,
     ) -> Result<Self, String> {
         let trellis = T::build(n_labels as u64, config.width)?;
-        let model = LinearEdgeModel::for_topology(&trellis, n_features);
+        let model = S::for_topology_cfg(&trellis, n_features, config.hash_bits, config.seed)?;
         let assigner = Assigner::new(config.policy, n_labels, &trellis, config.seed);
         let averager = config
             .averaging
-            .then(|| Averager::new(trellis.num_edges(), n_features));
+            .then(|| Averager::new(trellis.num_edges(), model.n_strips()));
         let mut scratch = TrainScratch::new();
         if trellis.as_binary().is_none() {
             // Pre-size the generic W-ary decode buffers so even the first
@@ -81,13 +85,13 @@ impl<T: Topology> Trainer<T> {
     pub(crate) fn from_parts(
         config: TrainConfig,
         trellis: T,
-        model: LinearEdgeModel,
+        model: S,
         assigner: Assigner,
         step: u64,
     ) -> Self {
         let averager = config
             .averaging
-            .then(|| Averager::new(trellis.num_edges(), model.n_features));
+            .then(|| Averager::new(trellis.num_edges(), model.n_strips()));
         Trainer { config, trellis, model, assigner, averager, step, scratch: TrainScratch::new() }
     }
 
@@ -128,7 +132,7 @@ impl<T: Topology> Trainer<T> {
                 metrics.active_hinge += 1;
                 let lr = self.config.lr_at(self.step);
                 // Update only the symmetric difference of the two paths
-                // (fused, feature-major — see model::linear perf notes),
+                // (fused, strip-major — see model::store perf notes),
                 // resolved into the engine scratch: no allocation here.
                 self.trellis.edges_of_label_into(out.pos, &mut self.scratch.pos_edges);
                 self.trellis.edges_of_label_into(out.neg, &mut self.scratch.neg_edges);
@@ -139,7 +143,13 @@ impl<T: Topology> Trainer<T> {
                 self.scratch.neg_only.extend(neg_edges.iter().filter(|e| !pos_edges.contains(e)));
                 self.model.update_edges(&self.scratch.pos_only, &self.scratch.neg_only, x, lr);
                 if let Some(a) = &mut self.averager {
-                    a.record_edges(&self.scratch.pos_only, &self.scratch.neg_only, x, lr);
+                    a.record_edges(
+                        self.model.codec(),
+                        &self.scratch.pos_only,
+                        &self.scratch.neg_only,
+                        x,
+                        lr,
+                    );
                 }
             }
         }
@@ -172,30 +182,33 @@ impl<T: Topology> Trainer<T> {
 
     /// Finalize into a predictor: applies weight averaging and the L1
     /// soft-threshold (if configured).
-    pub fn into_model(self) -> TrainedModel<T> {
+    pub fn into_model(self) -> TrainedModel<T, S> {
         let mut model = self.model;
         if let Some(a) = &self.averager {
-            let (w, b) = a.averaged(&model.w, &model.bias);
-            model.w = w;
-            model.bias = b;
+            let (w, b) = a.averaged(model.raw_w(), model.bias());
+            let (wm, bm) = model.raw_parts_mut();
+            wm.copy_from_slice(&w);
+            bm.copy_from_slice(&b);
         }
         if self.config.l1_lambda > 0.0 {
-            model = crate::model::l1::soft_threshold_model(&model, self.config.l1_lambda);
+            model = crate::model::l1::soft_threshold_store(&model, self.config.l1_lambda);
         }
         TrainedModel { trellis: self.trellis, model, assigner: self.assigner }
     }
 }
 
 /// A trained LTLS predictor: model + trellis + label↔path table. Generic
-/// over the graph [`Topology`] (width-2 [`Trellis`] by default).
+/// over the graph [`Topology`] (width-2 [`Trellis`] by default) and the
+/// weight storage [`WeightStore`] ([`DenseStore`] by default; the hashed
+/// and serve-only q8 backends run the same decode stack).
 #[derive(Clone)]
-pub struct TrainedModel<T: Topology = Trellis> {
+pub struct TrainedModel<T: Topology = Trellis, S: WeightStore = DenseStore> {
     pub trellis: T,
-    pub model: LinearEdgeModel,
+    pub model: S,
     pub assigner: Assigner,
 }
 
-impl<T: Topology> TrainedModel<T> {
+impl<T: Topology, S: WeightStore> TrainedModel<T, S> {
     /// Top-1 dataset label for `x` (`O(E·nnz + log C)`).
     pub fn predict(&self, x: SparseVec) -> u32 {
         self.predict_with(x, &mut PredictScratch::new())
@@ -263,6 +276,19 @@ impl<T: Topology> TrainedModel<T> {
     /// Model size in bytes.
     pub fn bytes(&self) -> usize {
         self.model.bytes()
+    }
+}
+
+impl<T: Topology> TrainedModel<T, DenseStore> {
+    /// Serve-only 8-bit quantization of this model (see
+    /// [`crate::model::Q8Store`] and the `ltls quantize` subcommand):
+    /// same trellis and label↔path table, ~4× smaller weights.
+    pub fn quantized(&self) -> TrainedModel<T, crate::model::Q8Store> {
+        TrainedModel {
+            trellis: self.trellis.clone(),
+            model: crate::model::Q8Store::quantize(&self.model),
+            assigner: self.assigner.clone(),
+        }
     }
 }
 
@@ -371,5 +397,27 @@ mod tests {
         for (l, _) in &top {
             assert!((*l as usize) < ds.n_labels);
         }
+    }
+
+    /// The hashed store trains through the same serial engine and learns
+    /// the same synthetic task (collisions cost a little accuracy, not
+    /// learnability), with memory bounded by 2^bits instead of D.
+    #[test]
+    fn hashed_store_trains_serially() {
+        use crate::model::HashedStore;
+        let ds = SyntheticSpec::multiclass(2500, 1200, 64)
+            .teacher(TeacherKind::Cluster)
+            .seed(23)
+            .generate();
+        let (train, test) = crate::data::split::random_split(&ds, 0.2, 5);
+        let cfg = TrainConfig { hash_bits: 9, ..TrainConfig::default() };
+        let mut tr = Trainer::<Trellis, HashedStore>::with_topology(cfg, ds.n_features, ds.n_labels)
+            .unwrap();
+        tr.fit(&train, 8);
+        let model = tr.into_model();
+        assert_eq!(model.model.hash_bits(), 9);
+        assert!(model.model.param_count() < model.model.dense_equivalent_params() / 2);
+        let p1 = precision_at_1(&model, &test);
+        assert!(p1 > 0.4, "hashed precision@1 = {p1}");
     }
 }

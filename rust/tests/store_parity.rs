@@ -1,0 +1,340 @@
+//! Pluggable weight-storage contracts:
+//!
+//! 1. **Back-compat** — the checked-in v1/v2 byte fixtures
+//!    (`tests/fixtures/model_v{1,2}.ltls`, written by the pre-backend
+//!    serializer's layout) still load as dense under the v3 reader, both
+//!    heap and memory-mapped.
+//! 2. **Hashed parity** — the hashed store rides the identical training
+//!    pipeline: a 1-worker Hogwild epoch is bit-identical to the serial
+//!    epoch, exactly as pinned for dense in `train_parallel.rs`.
+//! 3. **Hashed persistence** — model files and checkpoints carry the
+//!    backend tag: loads dispatch on it, mistyped loads refuse, resume
+//!    checks `--hash-bits` like it checks seed and width.
+//! 4. **Q8 serving** — quantized precision@1 stays within 0.5% of the f32
+//!    model; q8 files round-trip; the batched server path over a q8 store
+//!    matches inline prediction.
+//! 5. **Mmap serving** — `load_any_mmap` borrows weights zero-copy and
+//!    predicts identically to the heap loader, for every backend.
+
+use ltls::assign::{AssignPolicy, Assigner};
+use ltls::data::synthetic::{SyntheticSpec, TeacherKind};
+use ltls::eval::{precision_at_1, Predictor};
+use ltls::graph::Trellis;
+use ltls::model::{io, DenseStore, HashedStore, LinearEdgeModel, TrainableStore, WeightStore};
+use ltls::sparse::SparseVec;
+use ltls::train::{ParallelTrainer, TrainConfig, TrainedModel, Trainer};
+
+const FIXTURE_V1: &[u8] = include_bytes!("fixtures/model_v1.ltls");
+const FIXTURE_V2: &[u8] = include_bytes!("fixtures/model_v2.ltls");
+
+/// Rebuild the exact model the fixtures were generated from: C=6 trellis
+/// (10 edges), D=5, deterministic hand-written updates, label l bound to
+/// path (5l mod 6).
+fn fixture_model() -> TrainedModel {
+    let trellis = Trellis::new(6);
+    let e = ltls::graph::Topology::num_edges(&trellis);
+    assert_eq!(e, 10, "fixture recipe assumes the C=6 trellis has 10 edges");
+    let mut model = LinearEdgeModel::new(e, 5);
+    for edge in 0..e {
+        let idx = [edge as u32 % 5];
+        let val = [0.25 + edge as f32 * 0.125];
+        model.update_edge(edge, SparseVec::new(&idx, &val), 1.0);
+    }
+    let mut assigner = Assigner::new(AssignPolicy::Identity, 6, &trellis, 0);
+    for l in 0..6u32 {
+        assigner.table.bind(l, (l as u64 * 5) % 6);
+    }
+    TrainedModel { trellis, model, assigner }
+}
+
+fn fixture_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// Contract 1: the committed v1/v2 fixtures load as dense through the v3
+/// reader, bit-for-bit equal to the reference reconstruction.
+#[test]
+fn v1_v2_fixtures_load_as_dense_under_v3_reader() {
+    let want = fixture_model();
+    for (name, bytes, version_width) in
+        [("v1", FIXTURE_V1, (6u64, 2u32)), ("v2", FIXTURE_V2, (6, 2))]
+    {
+        assert_eq!(io::peek_meta(bytes).unwrap(), version_width, "{name}");
+        assert_eq!(io::peek_backend(bytes).unwrap(), ltls::model::Backend::Dense, "{name}");
+        let got = io::deserialize::<Trellis, DenseStore>(bytes).unwrap();
+        assert_eq!(got.model.w, want.model.w, "{name} weights");
+        assert_eq!(got.model.bias, want.model.bias, "{name} bias");
+        let gp: Vec<_> = got.assigner.table.pairs().collect();
+        let wp: Vec<_> = want.assigner.table.pairs().collect();
+        assert_eq!(gp, wp, "{name} pairs");
+        // The width×backend dispatcher sends old files to the dense
+        // binary-trellis variant.
+        match io::deserialize_any(bytes).unwrap() {
+            io::AnyModel::Binary(m) => {
+                for x in [
+                    SparseVec::new(&[0, 3], &[1.0, -1.0]),
+                    SparseVec::new(&[1, 2, 4], &[0.5, 2.0, 0.25]),
+                    SparseVec::new(&[], &[]),
+                ] {
+                    assert_eq!(m.predict_topk(x, 3), want.predict_topk(x, 3), "{name}");
+                }
+            }
+            _ => panic!("{name} fixture dispatched to a non-dense variant"),
+        }
+        // Old layouts are dense-only: a hashed-typed load refuses.
+        assert!(io::deserialize::<Trellis, HashedStore>(bytes).is_err(), "{name}");
+    }
+}
+
+/// Contract 1b: old files also serve through the mmap loader (their f32
+/// block is 4-byte aligned even without the v3 64-byte padding).
+#[test]
+fn v2_fixture_loads_memory_mapped() {
+    let want = fixture_model();
+    let loaded = io::load_any_mmap(&fixture_path("model_v2.ltls")).unwrap();
+    assert!(loaded.is_mapped());
+    assert_eq!(loaded.c(), 6);
+    match loaded {
+        io::AnyModel::Binary(m) => {
+            assert!(m.model.is_mapped());
+            let x = SparseVec::new(&[0, 4], &[2.0, -0.5]);
+            assert_eq!(m.predict_topk(x, 4), want.predict_topk(x, 4));
+        }
+        _ => panic!("v2 fixture dispatched to a non-dense variant"),
+    }
+}
+
+/// Re-serializing the fixture model as v3 preserves everything the v2
+/// bytes carried (the upgrade path is lossless).
+#[test]
+fn fixture_model_upgrades_to_v3_losslessly() {
+    let want = fixture_model();
+    let v3 = io::serialize(&want);
+    assert_ne!(v3.as_slice(), FIXTURE_V2, "v3 layout differs from v2 on disk");
+    let got = io::deserialize::<Trellis, DenseStore>(&v3).unwrap();
+    assert_eq!(got.model.w, want.model.w);
+    assert_eq!(got.model.bias, want.model.bias);
+}
+
+fn small_dataset(seed: u64) -> ltls::data::Dataset {
+    SyntheticSpec::multiclass(1200, 500, 48).teacher(TeacherKind::Cluster).seed(seed).generate()
+}
+
+/// Contract 2: a 1-worker Hogwild epoch on the hashed store is
+/// bit-identical to the serial hashed epoch (same permutation, same step
+/// counter, same float-op order through the atomic view + hash codec).
+#[test]
+fn hashed_one_worker_hogwild_is_bit_identical_to_serial() {
+    let ds = small_dataset(301);
+    let cfg = TrainConfig { averaging: false, hash_bits: 8, ..TrainConfig::default() };
+    let mut serial =
+        Trainer::<Trellis, HashedStore>::with_topology(cfg.clone(), ds.n_features, ds.n_labels)
+            .unwrap();
+    let mut hog =
+        ParallelTrainer::<Trellis, HashedStore>::with_topology(cfg, ds.n_features, ds.n_labels)
+            .unwrap();
+    for _ in 0..2 {
+        let ms = serial.epoch(&ds);
+        let mh = hog.hogwild_epoch(&ds);
+        assert_eq!(ms.examples, mh.examples);
+        assert_eq!(ms.active_hinge, mh.active_hinge);
+        assert_eq!(ms.loss_sum.to_bits(), mh.loss_sum.to_bits());
+    }
+    assert_eq!(serial.global_step(), hog.global_step());
+    let a = serial.into_model();
+    let b = hog.into_model();
+    assert_eq!(a.model.w, b.model.w);
+    assert_eq!(a.model.bias, b.model.bias);
+}
+
+/// Contract 3: hashed model files round-trip with the backend tag, and
+/// checkpoints resume only under the matching store type and hash-bits.
+#[test]
+fn hashed_files_and_checkpoints_carry_backend_tag() {
+    let ds = small_dataset(302);
+    let cfg = TrainConfig { averaging: false, hash_bits: 7, ..TrainConfig::default() };
+    let dir = std::env::temp_dir().join(format!("ltls_hashed_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Uninterrupted 3 epochs vs interrupted 2 + resume 1: identical.
+    let mut full =
+        ParallelTrainer::<Trellis, HashedStore>::with_topology(
+            cfg.clone(),
+            ds.n_features,
+            ds.n_labels,
+        )
+        .unwrap();
+    let mf = full.fit(&ds, 3);
+    let mut first =
+        ParallelTrainer::<Trellis, HashedStore>::with_topology(
+            cfg.clone(),
+            ds.n_features,
+            ds.n_labels,
+        )
+        .unwrap();
+    first.fit_with_checkpoints(&ds, 2, &dir).unwrap();
+    drop(first);
+    let (_, path) = io::latest_checkpoint(&dir).unwrap().expect("checkpoint written");
+    let raw = std::fs::read(&path).unwrap();
+    assert_eq!(io::peek_checkpoint_backend(&raw).unwrap(), ltls::model::Backend::Hashed);
+    // A dense-typed load refuses the hashed checkpoint.
+    let err = io::load_checkpoint::<Trellis, DenseStore>(&path).unwrap_err();
+    assert!(err.contains("hashed"), "{err}");
+    let ck = io::load_checkpoint::<Trellis, HashedStore>(&path).unwrap();
+    assert_eq!(ck.model.model.hash_bits(), 7);
+    // Resume with mismatched --hash-bits refuses…
+    let wrong = TrainConfig { hash_bits: 8, ..cfg.clone() };
+    let err = ParallelTrainer::<Trellis, HashedStore>::resume(wrong, ck.clone()).unwrap_err();
+    assert!(err.contains("hash-bits"), "{err}");
+    // …and the matching config reproduces the uninterrupted run exactly.
+    let mut resumed = ParallelTrainer::<Trellis, HashedStore>::resume(cfg, ck).unwrap();
+    let m3 = resumed.epoch(&ds);
+    assert_eq!(m3.loss_sum.to_bits(), mf[2].loss_sum.to_bits());
+    let a = full.into_model();
+    let b = resumed.into_model();
+    assert_eq!(a.model.w, b.model.w);
+
+    // Model file round-trip through the backend dispatcher.
+    let mpath = dir.join("hashed.ltls");
+    io::save(&a, &mpath).unwrap();
+    match io::load_any(&mpath).unwrap() {
+        io::AnyModel::BinaryHashed(m) => {
+            assert_eq!(m.model.bits, 7);
+            assert_eq!(m.model.w, a.model.w);
+            for i in 0..30 {
+                assert_eq!(m.topk(ds.row(i), 3), a.topk(ds.row(i), 3), "row {i}");
+            }
+        }
+        _ => panic!("hashed file dispatched to the wrong variant"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Contract 4: q8 quantization serves within 0.5% precision@1 of the f32
+/// model, files round-trip, and the store stays ~4x smaller.
+#[test]
+fn q8_serves_within_half_a_percent() {
+    let ds = SyntheticSpec::multiclass(4000, 900, 64)
+        .teacher(TeacherKind::Cluster)
+        .seed(303)
+        .generate();
+    let (train, test) = ltls::data::split::random_split(&ds, 0.25, 4);
+    let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    tr.fit(&train, 8);
+    let dense = tr.into_model();
+    let q8 = dense.quantized();
+    let p_dense = precision_at_1(&dense, &test);
+    let p_q8 = precision_at_1(&q8, &test);
+    assert!(
+        (p_dense - p_q8).abs() <= 0.005,
+        "q8 p@1 {p_q8} drifted more than 0.5% from f32 {p_dense}"
+    );
+    assert!(
+        dense.bytes() as f64 / q8.bytes() as f64 > 3.5,
+        "q8 {} bytes vs dense {} bytes",
+        q8.bytes(),
+        dense.bytes()
+    );
+
+    // File round-trip dispatches to the q8 variant and predicts the same.
+    let path = std::env::temp_dir().join(format!("ltls_q8_{}.ltls", std::process::id()));
+    io::save(&q8, &path).unwrap();
+    match io::load_any(&path).unwrap() {
+        io::AnyModel::BinaryQ8(m) => {
+            assert_eq!(m.model.q, q8.model.q);
+            assert_eq!(m.model.scale, q8.model.scale);
+            for i in 0..30 {
+                assert_eq!(m.topk(test.row(i), 3), q8.topk(test.row(i), 3), "row {i}");
+            }
+        }
+        _ => panic!("q8 file dispatched to the wrong variant"),
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Contract 4b: the multi-worker batched server over a q8 store answers
+/// exactly what inline q8 prediction answers.
+#[test]
+fn q8_batched_server_matches_inline() {
+    use ltls::coordinator::{BatchedLtls, BatcherConfig, PredictServer, ServerConfig};
+    let ds = SyntheticSpec::multiclass(600, 400, 24).seed(304).generate();
+    let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    tr.fit(&ds, 3);
+    let q8 = tr.into_model().quantized();
+    let inline: Vec<_> = (0..40).map(|i| q8.topk(ds.row(i), 3)).collect();
+    let server = PredictServer::start(
+        BatchedLtls(q8),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_wait: std::time::Duration::from_micros(300),
+            },
+            queue_depth: 64,
+            workers: 2,
+        },
+    );
+    let receivers: Vec<_> = (0..40)
+        .map(|i| {
+            let row = ds.row(i);
+            server.submit(row.indices.to_vec(), row.values.to_vec(), 3)
+        })
+        .collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        assert_eq!(rx.recv().unwrap().topk, inline[i], "request {i}");
+    }
+    server.shutdown();
+}
+
+/// Contract 5: mmap loading is zero-copy (weights borrow the mapping) and
+/// predicts identically to heap loading, for dense, hashed and q8 files.
+#[test]
+fn mmap_loading_matches_heap_loading_for_every_backend() {
+    let ds = small_dataset(305);
+    let dir = std::env::temp_dir().join(format!("ltls_mmap_any_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Dense + q8 from one training run; hashed from another.
+    let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    tr.fit(&ds, 3);
+    let dense = tr.into_model();
+    io::save(&dense, &dir.join("dense.ltls")).unwrap();
+    io::save(&dense.quantized(), &dir.join("q8.ltls")).unwrap();
+    let hcfg = TrainConfig { hash_bits: 8, averaging: false, ..TrainConfig::default() };
+    let mut htr =
+        Trainer::<Trellis, HashedStore>::with_topology(hcfg, ds.n_features, ds.n_labels).unwrap();
+    htr.fit(&ds, 2);
+    io::save(&htr.into_model(), &dir.join("hashed.ltls")).unwrap();
+
+    for name in ["dense.ltls", "q8.ltls", "hashed.ltls"] {
+        let path = dir.join(name);
+        let heap = io::load_any(&path).unwrap();
+        let mapped = io::load_any_mmap(&path).unwrap();
+        assert!(!heap.is_mapped(), "{name}");
+        assert!(mapped.is_mapped(), "{name}");
+        assert_eq!(heap.backend(), mapped.backend(), "{name}");
+        assert_eq!(heap.bytes(), mapped.bytes(), "{name}");
+        let want = ltls::with_any_model!(&heap, m => {
+            (0..30).map(|i| m.topk(ds.row(i), 3)).collect::<Vec<_>>()
+        });
+        let got = ltls::with_any_model!(&mapped, m => {
+            (0..30).map(|i| m.topk(ds.row(i), 3)).collect::<Vec<_>>()
+        });
+        assert_eq!(want, got, "{name}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The dense store still reports the paper's exact accounting after the
+/// storage refactor (the log-space headline is untouched).
+#[test]
+fn dense_store_accounting_is_unchanged() {
+    let ds = SyntheticSpec::multiclass(200, 300, 16).seed(306).generate();
+    let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    tr.fit(&ds, 1);
+    let m = tr.into_model();
+    let e = ltls::graph::Topology::num_edges(&m.trellis);
+    assert_eq!(m.model.param_count(), e * 300 + e);
+    assert_eq!(m.bytes(), (e * 300 + e) * 4);
+    assert_eq!(m.model.backend(), ltls::model::Backend::Dense);
+    assert_eq!(m.model.n_strips(), 300);
+}

@@ -156,7 +156,7 @@ fn checkpoint_resume_reproduces_uninterrupted_run() {
 
     let (epoch, path) = io::latest_checkpoint(&dir).unwrap().expect("checkpoints written");
     assert_eq!(epoch, 2);
-    let ck = io::load_checkpoint::<ltls::graph::Trellis>(&path).unwrap();
+    let ck = io::load_checkpoint::<ltls::graph::Trellis, ltls::model::DenseStore>(&path).unwrap();
     assert_eq!(ck.epoch, 2);
     assert_eq!(ck.step, 2 * ds.n_examples() as u64);
     assert_eq!(ck.history.len(), 2);
@@ -193,7 +193,7 @@ fn hogwild_checkpoint_is_a_valid_model() {
     let mut tr = ParallelTrainer::new(cfg(4, 8), ds.n_features, ds.n_labels);
     tr.fit_with_checkpoints(&ds, 2, &dir).unwrap();
     let (_, path) = io::latest_checkpoint(&dir).unwrap().unwrap();
-    let ck = io::load_checkpoint::<ltls::graph::Trellis>(&path).unwrap();
+    let ck = io::load_checkpoint::<ltls::graph::Trellis, ltls::model::DenseStore>(&path).unwrap();
     assert_eq!(ck.step, 2 * ds.n_examples() as u64);
 
     let live = tr.into_model();

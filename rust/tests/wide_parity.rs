@@ -216,8 +216,8 @@ fn wide_train_checkpoint_resume_roundtrip() {
     let (epoch, path) = io::latest_checkpoint(&dir).unwrap().expect("checkpoint written");
     assert_eq!(epoch, 2);
     // The checkpoint records width 4: the width-2 loader must reject it.
-    assert!(io::load_checkpoint::<Trellis>(&path).is_err());
-    let ck = io::load_checkpoint::<WideTrellis>(&path).unwrap();
+    assert!(io::load_checkpoint::<Trellis, ltls::model::DenseStore>(&path).is_err());
+    let ck = io::load_checkpoint::<WideTrellis, ltls::model::DenseStore>(&path).unwrap();
     assert_eq!(ck.model.trellis.width(), 4);
     let mut resumed = ParallelTrainer::<WideTrellis>::resume(cfg, ck).unwrap();
     let m3 = resumed.epoch(&ds);
@@ -235,7 +235,7 @@ fn wide_train_checkpoint_resume_roundtrip() {
                 assert_eq!(m.topk(ds.row(i), 3), a.topk(ds.row(i), 3), "row {i}");
             }
         }
-        io::AnyModel::Binary(_) => panic!("width-4 model dispatched to binary"),
+        _ => panic!("width-4 dense model dispatched to the wrong variant"),
     }
     std::fs::remove_dir_all(&dir).ok();
 }

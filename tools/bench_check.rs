@@ -44,7 +44,8 @@ use ltls::util::json::Json;
 use std::collections::BTreeMap;
 
 /// Result-array keys that name a configuration rather than a measurement.
-const DISCRIMINATORS: [&str; 5] = ["workers", "threads", "batch", "k", "width"];
+const DISCRIMINATORS: [&str; 7] =
+    ["workers", "threads", "batch", "k", "width", "backend", "hash_bits"];
 
 fn main() {
     let args = Args::from_env();
@@ -306,6 +307,23 @@ trailing noise
         let r = check_against_baseline(base, &c).unwrap();
         assert_eq!(r.failures, 0);
         assert!(r.text.contains("record new width_sweep.width=8.p1"), "{}", r.text);
+    }
+
+    #[test]
+    fn backend_and_hash_bits_discriminate_footprint_rows() {
+        let c = current_from(
+            "json: {\"bench\":\"memory_footprint\",\"q8_p1_delta\":0.002,\"results\":[{\"backend\":0,\"hash_bits\":0,\"model_bytes\":270000.0,\"p1\":0.7},{\"backend\":1,\"hash_bits\":9,\"model_bytes\":67000.0,\"p1\":0.65},{\"backend\":2,\"hash_bits\":0,\"model_bytes\":68000.0,\"p1\":0.699}]}\n",
+        );
+        assert_eq!(c["memory_footprint.q8_p1_delta"], 0.002);
+        assert_eq!(c["memory_footprint.backend=0.hash_bits=0.model_bytes"], 270000.0);
+        assert_eq!(c["memory_footprint.backend=1.hash_bits=9.p1"], 0.65);
+        assert_eq!(c["memory_footprint.backend=2.hash_bits=0.model_bytes"], 68000.0);
+        // The delta gate: fails only when the q8 drift exceeds the bound.
+        let base = r#"{"metrics":{"memory_footprint.q8_p1_delta":{"baseline":0.005,"higher_is_better":false,"tolerance":0.0}}}"#;
+        assert_eq!(check_against_baseline(base, &c).unwrap().failures, 0);
+        let mut worse = c.clone();
+        worse.insert("memory_footprint.q8_p1_delta".into(), 0.02);
+        assert_eq!(check_against_baseline(base, &worse).unwrap().failures, 1);
     }
 
     #[test]
