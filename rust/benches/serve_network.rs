@@ -1,0 +1,199 @@
+//! Network-serving bench: requests/sec of the TCP frontend
+//! (`coordinator::transport`) with closed-loop loopback clients, with and
+//! without hot-reload churn, vs the in-process worker pool (the transport
+//! tax). Emits a machine-readable JSON line for the CI perf gate
+//! (EXPERIMENTS.md §Network serving).
+//!
+//! The gated metric is `reload_ratio` = throughput with a model reload
+//! every ~25 ms over undisturbed throughput: the epoch-handoff design
+//! claims reloads land between micro-batches without stalling the
+//! pipeline, so the ratio should sit near 1.0 on any machine. Absolute
+//! req/s are recorded but not gated (machine-dependent).
+//!
+//! `BENCH_FAST=1` trims the request count for smoke runs.
+
+use ltls::coordinator::{
+    BatchedLtls, BatcherConfig, NetConfig, NetServer, PredictServer, ReloadableLtls,
+    ServerConfig,
+};
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::train::{TrainConfig, Trainer};
+use ltls::util::json::Json;
+use ltls::util::timer::Timer;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn pool_cfg() -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(200) },
+        queue_depth: 2048,
+        workers: 2,
+    }
+}
+
+/// Drive `n_requests` through the TCP frontend with `clients` closed-loop
+/// connections (window of 16 pipelined requests each); returns req/s.
+fn drive_tcp(addr: SocketAddr, ds: &Arc<ltls::data::Dataset>, clients: usize, n: usize) -> f64 {
+    let timer = Timer::new();
+    let per_client = n / clients;
+    let handles: Vec<_> = (0..clients)
+        .map(|cid| {
+            let ds = Arc::clone(ds);
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("connect");
+                stream.set_nodelay(true).ok();
+                let mut r = BufReader::new(stream.try_clone().expect("clone"));
+                let mut w = stream;
+                let mut line = String::new();
+                let mut pending = 0usize;
+                for i in 0..per_client {
+                    let row = ds.row((cid * per_client + i) % ds.n_examples());
+                    let mut req = String::with_capacity(16 * row.indices.len() + 2);
+                    req.push('1');
+                    for (&j, &v) in row.indices.iter().zip(row.values) {
+                        req.push_str(&format!(" {j}:{v}"));
+                    }
+                    req.push('\n');
+                    w.write_all(req.as_bytes()).unwrap();
+                    pending += 1;
+                    while pending >= 16 {
+                        line.clear();
+                        r.read_line(&mut line).unwrap();
+                        pending -= 1;
+                    }
+                }
+                while pending > 0 {
+                    line.clear();
+                    r.read_line(&mut line).unwrap();
+                    pending -= 1;
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (per_client * clients) as f64 / timer.elapsed_s()
+}
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let n_requests: usize = if fast { 6_000 } else { 40_000 };
+    let clients = 4usize;
+
+    // aloi-like shape: C=1000, sparse rows.
+    let ds = SyntheticSpec::multiclass(if fast { 1_500 } else { 4_000 }, 3_000, 1000)
+        .seed(5)
+        .generate();
+    let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    tr.fit(&ds, 2);
+    let model = tr.into_model();
+    let dir = std::env::temp_dir().join(format!("ltls_bench_net_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model_path = dir.join("model.ltls");
+    ltls::model::io::save(&model, &model_path).unwrap();
+
+    println!(
+        "== network serve throughput (C=1000, E={}, {clients} closed-loop TCP clients) ==",
+        model.trellis.num_edges()
+    );
+    let ds = Arc::new(ds);
+
+    // Reference: the in-process pool, no network hop (same pool shape).
+    let inproc = {
+        let server = Arc::new(PredictServer::start(BatchedLtls(model.clone()), pool_cfg()));
+        let timer = Timer::new();
+        let per_client = n_requests / clients;
+        let handles: Vec<_> = (0..clients)
+            .map(|cid| {
+                let server = Arc::clone(&server);
+                let ds = Arc::clone(&ds);
+                std::thread::spawn(move || {
+                    let mut pending = std::collections::VecDeque::new();
+                    for i in 0..per_client {
+                        let row = ds.row((cid * per_client + i) % ds.n_examples());
+                        pending.push_back(server.submit(
+                            row.indices.to_vec(),
+                            row.values.to_vec(),
+                            1,
+                        ));
+                        if pending.len() >= 16 {
+                            pending.pop_front().unwrap().recv().unwrap();
+                        }
+                    }
+                    for rx in pending {
+                        rx.recv().unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let rps = n_requests as f64 / timer.elapsed_s();
+        let server = Arc::try_unwrap(server).ok().expect("all clients joined");
+        server.shutdown();
+        rps
+    };
+    println!("in-process pool        {inproc:>10.0} req/s");
+
+    // Phase 1: plain TCP serving.
+    let reloadable = Arc::new(ReloadableLtls::from_path(&model_path, false).unwrap());
+    let server = NetServer::start_reloadable(
+        "127.0.0.1:0",
+        Arc::clone(&reloadable),
+        NetConfig { server: pool_cfg(), ..NetConfig::default() },
+    )
+    .expect("start net server");
+    let addr = server.addr();
+    let tcp_plain = drive_tcp(addr, &ds, clients, n_requests);
+    let p99_us = server.metrics().request_quantile_ns(0.99) / 1e3;
+    println!("tcp frontend           {tcp_plain:>10.0} req/s   p99 {p99_us:>7.0}us");
+
+    // Phase 2: same traffic under hot-reload churn (a swap every ~25 ms).
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let churn = {
+        let reloadable = Arc::clone(&reloadable);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut swaps = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                reloadable.reload().expect("reload valid model");
+                swaps += 1;
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            swaps
+        })
+    };
+    let tcp_reload = drive_tcp(addr, &ds, clients, n_requests);
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let swaps = churn.join().unwrap();
+    println!("tcp + reload churn     {tcp_reload:>10.0} req/s   ({swaps} hot swaps)");
+    assert!(swaps >= 1, "churn thread never swapped");
+    assert_eq!(reloadable.epoch(), swaps, "every swap must bump the epoch");
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let reload_ratio = tcp_reload / tcp_plain;
+    let net_overhead = tcp_plain / inproc;
+    println!(
+        "\nreload_ratio (churn/plain) = {reload_ratio:.2}   transport ratio (tcp/in-process) = {net_overhead:.2}"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::from("serve_network")),
+        ("requests", Json::from(n_requests)),
+        ("clients", Json::from(clients)),
+        ("reload_swaps", Json::from(swaps as usize)),
+        ("reload_ratio", Json::Num(reload_ratio)),
+        ("net_vs_inproc_ratio", Json::Num(net_overhead)),
+        ("inproc_req_per_s", Json::Num(inproc)),
+        ("tcp_req_per_s", Json::Num(tcp_plain)),
+        ("tcp_reload_req_per_s", Json::Num(tcp_reload)),
+        ("p99_us", Json::Num(p99_us)),
+    ]);
+    println!("json: {}", json.dump());
+}

@@ -2,7 +2,7 @@
 //! `max_wait` elapses, whichever first — the standard latency/throughput
 //! dial of serving systems.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// Batching policy.
@@ -37,12 +37,34 @@ pub struct Batch<T> {
 /// and is empty. `oldest` is the earliest enqueue stamp in the batch —
 /// taking it after `recv` returned would under-report the first
 /// request's queueing time.
+///
+/// The `max_wait` deadline is measured from `oldest` (the batch's
+/// earliest *enqueue* stamp), not from when `recv` happened to return:
+/// a request that already sat in the queue for `max_wait` while the
+/// worker was busy must flush immediately, not pay the wait twice.
+///
+/// The deadline only governs *waiting*: items already sitting in the
+/// channel always join the batch (up to `max_batch`), so under backlog
+/// a stale batch still flushes at full size instead of degenerating to
+/// per-request singletons.
 pub fn next_batch<T: Stamped>(rx: &Receiver<T>, cfg: &BatcherConfig) -> Option<Batch<T>> {
     let first = rx.recv().ok()?;
     let mut oldest = first.enqueued_at();
-    let deadline = Instant::now() + cfg.max_wait;
     let mut items = vec![first];
     while items.len() < cfg.max_batch {
+        // Ready items are free — take them regardless of the deadline.
+        match rx.try_recv() {
+            Ok(item) => {
+                oldest = oldest.min(item.enqueued_at());
+                items.push(item);
+                continue;
+            }
+            Err(TryRecvError::Empty) => {}
+            Err(TryRecvError::Disconnected) => break,
+        }
+        // Recomputed each iteration: a drained item with an even older
+        // stamp pulls the deadline earlier.
+        let deadline = oldest + cfg.max_wait;
         let now = Instant::now();
         if now >= deadline {
             break;
@@ -139,6 +161,51 @@ mod tests {
         let b = next_batch(&rx, &cfg).unwrap();
         assert_eq!(b.oldest, stamp);
         assert!(b.oldest.elapsed() >= Duration::from_millis(10));
+    }
+
+    /// The double-wait regression this module's deadline fix pins down: a
+    /// request that already sat in the queue for longer than `max_wait`
+    /// must flush immediately — the deadline runs from its *enqueue*
+    /// stamp, so it must not pay (up to) `max_wait` a second time just
+    /// because the worker picked it up late.
+    #[test]
+    fn stale_first_request_flushes_immediately() {
+        let (tx, rx) = channel();
+        // Enqueued `max_wait`+ ago: the deadline is already in the past.
+        let stale = Instant::now() - Duration::from_millis(200);
+        tx.send(Item(1, stale)).unwrap();
+        let cfg = BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(100) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &cfg).unwrap();
+        // Well under max_wait: the old code would have waited ~100ms more
+        // for the channel to go quiet before flushing this batch.
+        assert!(
+            t0.elapsed() < Duration::from_millis(50),
+            "stale request waited again: {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(ids(&b), vec![1]);
+        assert_eq!(b.oldest, stale);
+    }
+
+    /// Under backlog a stale batch still fills up from ready items: the
+    /// enqueue-stamp deadline bounds *waiting*, never the free drain of
+    /// what is already queued (otherwise overload would degenerate into
+    /// size-1 batches exactly when batching matters most).
+    #[test]
+    fn stale_batch_takes_ready_backlog_without_waiting() {
+        let (tx, rx) = channel();
+        let stale = Instant::now() - Duration::from_millis(50);
+        for i in 0..6 {
+            tx.send(Item(i, stale)).unwrap();
+        }
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(ids(&b), vec![0, 1, 2, 3], "stale batch must still fill from the backlog");
+        assert!(t0.elapsed() < Duration::from_millis(10), "backlog drain must not wait");
+        let b2 = next_batch(&rx, &cfg).unwrap();
+        assert_eq!(ids(&b2), vec![4, 5]);
     }
 
     /// `oldest` is the minimum stamp across the whole batch.

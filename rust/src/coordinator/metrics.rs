@@ -117,6 +117,32 @@ impl ServingMetrics {
     pub fn request_quantile_ns(&self, q: f64) -> f64 {
         self.inner.lock().unwrap().request_latency.quantile_ns(q)
     }
+
+    /// Prometheus-style plaintext rendering — the body of the network
+    /// frontend's `METRICS` endpoint ([`super::transport`]): one
+    /// `name value` gauge per line, per-worker counters carrying a
+    /// `{worker="i"}` label. Scrape-friendly and greppable.
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let g = self.inner.lock().unwrap();
+        let mut s = String::new();
+        let _ = writeln!(s, "ltls_requests_total {}", g.requests);
+        let _ = writeln!(s, "ltls_batches_total {}", g.batches);
+        let mean = if g.batches == 0 { 0.0 } else { g.requests as f64 / g.batches as f64 };
+        let _ = writeln!(s, "ltls_mean_batch_size {mean:.3}");
+        let _ =
+            writeln!(s, "ltls_request_latency_p50_ns {:.0}", g.request_latency.quantile_ns(0.5));
+        let _ =
+            writeln!(s, "ltls_request_latency_p99_ns {:.0}", g.request_latency.quantile_ns(0.99));
+        let _ = writeln!(s, "ltls_queue_latency_p99_ns {:.0}", g.queue_latency.quantile_ns(0.99));
+        let _ = writeln!(s, "ltls_exec_latency_p99_ns {:.0}", g.exec_latency.quantile_ns(0.99));
+        for (i, w) in g.per_worker.iter().enumerate() {
+            let _ = writeln!(s, "ltls_worker_requests{{worker=\"{i}\"}} {}", w.requests);
+            let _ = writeln!(s, "ltls_worker_batches{{worker=\"{i}\"}} {}", w.batches);
+            let _ = writeln!(s, "ltls_worker_busy_ns{{worker=\"{i}\"}} {}", w.busy_ns);
+        }
+        s
+    }
 }
 
 #[cfg(test)]
@@ -157,6 +183,23 @@ mod tests {
         let (reqs, batches, _) = m.counts();
         assert_eq!((reqs, batches), (9, 3));
         assert!(m.summary().contains("worker 2"));
+    }
+
+    #[test]
+    fn prometheus_rendering_lists_aggregates_and_workers() {
+        let m = ServingMetrics::with_workers(2);
+        m.record_batch(1, 6, 2_000, 9_000);
+        m.record_request_latency(11_000);
+        let text = m.prometheus();
+        assert!(text.contains("ltls_requests_total 6"), "{text}");
+        assert!(text.contains("ltls_batches_total 1"), "{text}");
+        assert!(text.contains("ltls_worker_requests{worker=\"0\"} 0"), "{text}");
+        assert!(text.contains("ltls_worker_requests{worker=\"1\"} 6"), "{text}");
+        assert!(text.contains("ltls_worker_busy_ns{worker=\"1\"} 9000"), "{text}");
+        // Every line is `name value`.
+        for line in text.lines() {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line {line:?}");
+        }
     }
 
     #[test]

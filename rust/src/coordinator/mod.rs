@@ -18,11 +18,29 @@
 //! Everything is std-only (threads + channels): tokio is not vendored in
 //! this offline build, and the workload is CPU-bound anyway — a small
 //! fixed worker pool over a bounded queue is the right shape.
+//!
+//! Two further layers make the pool a deployable service:
+//!
+//! * [`transport`] — the TCP frontend (`ltls serve --listen HOST:PORT`):
+//!   a newline-delimited request protocol with JSON-line replies, bounded
+//!   admission (backpressure errors instead of unbounded queueing), a
+//!   plaintext `METRICS` endpoint and graceful drain on shutdown.
+//! * [`reload`] — hot model reload: an epoch-counted `Mutex<Arc<_>>`
+//!   model slot ([`reload::ModelSlot`]) swapped atomically between
+//!   micro-batches by the `RELOAD` control command or the
+//!   `--watch-model` file poller, with zero dropped or misrouted
+//!   in-flight requests.
 
 pub mod batcher;
 pub mod metrics;
+pub mod reload;
 pub mod server;
+pub mod transport;
 
 pub use batcher::{Batch, BatcherConfig, Stamped};
 pub use metrics::{ServingMetrics, WorkerStats};
-pub use server::{BatchedLtls, PredictServer, Request, Response, ServerConfig};
+pub use reload::{ModelSlot, ModelWatcher, ReloadableLtls};
+pub use server::{
+    BatchedLtls, PredictServer, Request, Response, ServerConfig, SubmitError, Submitter,
+};
+pub use transport::{NetConfig, NetServer};

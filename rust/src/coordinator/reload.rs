@@ -1,0 +1,456 @@
+//! Hot model reload: swap a newly trained (or `ltls quantize`d) model
+//! into a live server with zero dropped or misrouted in-flight requests.
+//!
+//! The mechanism is a hand-rolled `ArcSwap`: a [`ModelSlot`] holds the
+//! current model behind `Mutex<Arc<_>>`, readers clone the `Arc` (a
+//! refcount bump under a lock held for nanoseconds — never across a
+//! decode), and a reload replaces the `Arc` and bumps a generation
+//! counter (the *epoch*). Every micro-batch loads the slot **once** at
+//! batch start, so a swap lands cleanly *between* micro-batches: requests
+//! already in a batch finish on the generation they started on, requests
+//! batched afterwards run on the new one, and nothing is dropped.
+//!
+//! [`ReloadableLtls`] wraps the slot around an [`AnyModel`] — the
+//! (width × backend)-dispatched loaded model — and implements
+//! [`BatchModel`], so the existing batcher/worker pool serves through it
+//! unchanged. Reloads go through [`crate::model::io::load_any`] /
+//! [`load_any_mmap`]: a truncated, bad-magic or otherwise corrupt file
+//! (e.g. one caught mid-write) surfaces as `Err` and the old model stays
+//! live.
+//!
+//! [`ModelWatcher`] is the `ltls serve --watch-model F` poller: it stats
+//! the file (std-only — no inotify offline), waits for (mtime, len) to
+//! hold still for one poll interval, then attempts a reload. Writers
+//! should replace the file atomically (write to a temp path, then
+//! rename — [`crate::model::io::write_atomic`]).
+//!
+//! **Heap loading** (`load_any`) makes even a torn read safe: the bytes
+//! are copied once and validated, so a half-written file is an `Err` and
+//! nothing else. **`--mmap` mode is different**: a mapped file that a
+//! writer later *truncates in place* can fault (SIGBUS) on access, and
+//! an in-place rewrite can mutate pages of the *currently served*
+//! generation — neither is survivable by validation, because the kernel
+//! mapping tracks the inode, not a snapshot. Atomic rename replacement
+//! is therefore **required** (not merely recommended) for `--mmap`
+//! serving with reload or `--watch-model`: a rename leaves the mapped
+//! old inode untouched for as long as the old generation serves, and
+//! the reload maps the new inode. This is inherent to mmap serving (it
+//! applies equally to a file mapped by `ltls serve --mmap` with no
+//! reload at all), not a property of the reload path.
+
+use super::server::{batched_predict_into, BatchModel, Request, Response};
+use crate::engine::PredictScratch;
+use crate::model::io::{load_any, load_any_mmap, AnyModel};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, SystemTime};
+
+/// (mtime, len) fingerprint of a model file; `None` when unreadable.
+/// Taken *before* a load so a write racing the read changes the
+/// fingerprint and gets picked up by the watcher afterwards.
+fn fingerprint(path: &Path) -> Option<(SystemTime, u64)> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.modified().unwrap_or(SystemTime::UNIX_EPOCH), meta.len()))
+}
+
+/// A swappable model slot: `Mutex<Arc<M>>` with an epoch counter.
+///
+/// `load` is what every micro-batch pays: one mutex lock around an
+/// `Arc::clone`. `store` is what a reload pays: one allocation plus the
+/// same lock. No reader ever blocks on model construction, and an old
+/// generation is freed exactly when its last in-flight batch finishes.
+pub struct ModelSlot<M> {
+    current: Mutex<Arc<M>>,
+    epoch: AtomicU64,
+}
+
+impl<M> ModelSlot<M> {
+    pub fn new(model: M) -> ModelSlot<M> {
+        ModelSlot { current: Mutex::new(Arc::new(model)), epoch: AtomicU64::new(0) }
+    }
+
+    /// The current generation's model (cheap: refcount bump).
+    pub fn load(&self) -> Arc<M> {
+        Arc::clone(&self.current.lock().unwrap())
+    }
+
+    /// Install a new generation; returns its epoch (monotonic from 1).
+    pub fn store(&self, model: M) -> u64 {
+        self.store_with(model, || {})
+    }
+
+    /// [`Self::store`] running `bookkeeping` inside the slot's critical
+    /// section, so metadata describing the new generation (cached
+    /// dimensions, source path, file fingerprint) can never interleave
+    /// across two racing swaps and end up attached to the wrong model.
+    pub fn store_with(&self, model: M, bookkeeping: impl FnOnce()) -> u64 {
+        let next = Arc::new(model);
+        let mut g = self.current.lock().unwrap();
+        *g = next;
+        bookkeeping();
+        // Bumped under the slot lock, so epochs observed by `load` +
+        // `epoch` pairs are consistent.
+        self.epoch.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Number of swaps performed so far (0 → still the initial model).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+}
+
+/// Summary of a completed reload, for logs and the `RELOAD` reply.
+#[derive(Clone, Debug)]
+pub struct ReloadInfo {
+    /// Generation just installed (1 = first swap after startup).
+    pub epoch: u64,
+    pub c: u64,
+    pub width: u32,
+    pub backend: &'static str,
+    pub bytes: usize,
+    pub mapped: bool,
+}
+
+/// A [`BatchModel`] whose underlying [`AnyModel`] can be swapped while
+/// the worker pool keeps serving (see the module docs for the handoff
+/// semantics). Holds the path reloads re-read by default, so both the
+/// `RELOAD` control command (with no argument) and the `--watch-model`
+/// poller target the file the server was started from.
+pub struct ReloadableLtls {
+    slot: ModelSlot<AnyModel>,
+    /// Default source for path-less reloads; updated on every successful
+    /// path reload.
+    path: Mutex<Option<PathBuf>>,
+    /// Load weights via mmap (zero-copy) instead of the heap.
+    mmap: bool,
+    /// Cached `D` of the current generation, so the transport's
+    /// per-request feature validation is one atomic load instead of a
+    /// slot lock + `Arc` churn.
+    n_features_hint: AtomicUsize,
+    /// (mtime, len) of the file the current generation was loaded from,
+    /// stat'ed *before* the read — the watcher's baseline, so a write
+    /// that races the initial load still registers as a change.
+    file_fingerprint: Mutex<Option<(SystemTime, u64)>>,
+}
+
+impl ReloadableLtls {
+    /// Wrap an already-loaded model (no reload path configured yet:
+    /// `RELOAD` then requires an explicit path argument).
+    pub fn new(model: AnyModel) -> ReloadableLtls {
+        let d = model.n_features();
+        ReloadableLtls {
+            slot: ModelSlot::new(model),
+            path: Mutex::new(None),
+            mmap: false,
+            n_features_hint: AtomicUsize::new(d),
+            file_fingerprint: Mutex::new(None),
+        }
+    }
+
+    /// Load the initial model from `path` (heap, or zero-copy `mmap`) and
+    /// remember the path for later reloads.
+    pub fn from_path(path: &Path, mmap: bool) -> Result<ReloadableLtls, String> {
+        let fp = fingerprint(path);
+        let model = if mmap { load_any_mmap(path) } else { load_any(path) }?;
+        let d = model.n_features();
+        Ok(ReloadableLtls {
+            slot: ModelSlot::new(model),
+            path: Mutex::new(Some(path.to_path_buf())),
+            mmap,
+            n_features_hint: AtomicUsize::new(d),
+            file_fingerprint: Mutex::new(fp),
+        })
+    }
+
+    /// The current generation's model.
+    pub fn snapshot(&self) -> Arc<AnyModel> {
+        self.slot.load()
+    }
+
+    /// Number of successful reloads so far.
+    pub fn epoch(&self) -> u64 {
+        self.slot.epoch()
+    }
+
+    /// The path a path-less `RELOAD` (or the watcher) re-reads.
+    pub fn default_path(&self) -> Option<PathBuf> {
+        self.path.lock().unwrap().clone()
+    }
+
+    /// Feature dimensionality `D` of the current generation (atomic read;
+    /// the transport validates every request's indices against it).
+    pub fn current_n_features(&self) -> usize {
+        self.n_features_hint.load(Ordering::Acquire)
+    }
+
+    /// The (mtime, len) the current generation was loaded under, if it
+    /// came from a file — the watcher's change-detection baseline.
+    fn loaded_fingerprint(&self) -> Option<(SystemTime, u64)> {
+        *self.file_fingerprint.lock().unwrap()
+    }
+
+    /// Atomically swap in the model stored at `path`. On *any* load error
+    /// — missing file, truncation, bad magic, backend/width the build
+    /// cannot represent — the current model stays live and `Err` is
+    /// returned; a swap only happens after the new model fully validated.
+    pub fn reload_from(&self, path: &Path) -> Result<ReloadInfo, String> {
+        let fp = fingerprint(path);
+        let model = if self.mmap { load_any_mmap(path) } else { load_any(path) }?;
+        let info = ReloadInfo {
+            epoch: 0, // patched below once the swap happened
+            c: model.c(),
+            width: model.width(),
+            backend: model.backend().name(),
+            bytes: model.bytes(),
+            mapped: model.is_mapped(),
+        };
+        let d = model.n_features();
+        // All generation metadata commits inside the slot's critical
+        // section: two racing reloads serialize completely, so the
+        // winning model can never carry the loser's D / path /
+        // fingerprint.
+        let epoch = self.slot.store_with(model, || {
+            self.n_features_hint.store(d, Ordering::Release);
+            *self.path.lock().unwrap() = Some(path.to_path_buf());
+            *self.file_fingerprint.lock().unwrap() = fp;
+        });
+        Ok(ReloadInfo { epoch, ..info })
+    }
+
+    /// Reload from the remembered default path.
+    pub fn reload(&self) -> Result<ReloadInfo, String> {
+        let Some(path) = self.default_path() else {
+            return Err(
+                "no model path configured for reload (serve was started from an in-memory \
+                 model; use RELOAD <path>)"
+                    .into(),
+            );
+        };
+        self.reload_from(&path)
+    }
+}
+
+impl BatchModel for ReloadableLtls {
+    fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
+        let mut out = Vec::with_capacity(batch.len());
+        self.predict_batch_into(batch, &mut PredictScratch::new(), &mut out);
+        out
+    }
+
+    fn predict_batch_into(
+        &self,
+        batch: &[Request],
+        scratch: &mut PredictScratch,
+        out: &mut Vec<Response>,
+    ) {
+        // One slot load per micro-batch: the whole batch executes on a
+        // single generation, so a concurrent swap cannot misroute any
+        // request inside it.
+        let model = self.slot.load();
+        crate::with_any_model!(&*model, m => batched_predict_into(m, batch, scratch, out));
+    }
+
+    fn n_features(&self) -> Option<usize> {
+        Some(self.current_n_features())
+    }
+
+    fn name(&self) -> &str {
+        "LTLS-reloadable"
+    }
+}
+
+/// The `--watch-model` poller (see the module docs): stats the watched
+/// file every `poll` interval and hot-reloads `model` when the file's
+/// (mtime, len) changed *and* held still for one further interval. A
+/// rejected load (half-written file) keeps the current model and is
+/// retried when the file changes again.
+pub struct ModelWatcher {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ModelWatcher {
+    pub fn spawn(model: Arc<ReloadableLtls>, path: PathBuf, poll: Duration) -> ModelWatcher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("ltls-watch-model".to_string())
+            .spawn(move || watch_loop(&model, &path, poll, &stop_flag))
+            .expect("spawn model watcher");
+        ModelWatcher { stop, handle: Some(handle) }
+    }
+
+    /// Stop polling and join the watcher thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ModelWatcher {
+    fn drop(&mut self) {
+        // Signal without joining: the loop exits within one poll interval.
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn watch_loop(model: &ReloadableLtls, path: &Path, poll: Duration, stop: &AtomicBool) {
+    // Baseline on the fingerprint the *loaded* model was read under, not
+    // on the file as it looks now: a write that raced the initial load
+    // (or happened before the watcher started) differs from the loaded
+    // fingerprint and is picked up on the first polls instead of being
+    // treated as already handled.
+    let mut last_handled = model.loaded_fingerprint();
+    let mut pending: Option<(SystemTime, u64)> = None;
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(poll);
+        let now = fingerprint(path);
+        if now.is_none() || now == last_handled {
+            pending = None;
+            continue;
+        }
+        if pending != now {
+            // First sight of this fingerprint: require one stable interval
+            // before loading, so non-atomic writers usually finish first.
+            pending = now;
+            continue;
+        }
+        pending = None;
+        // Whatever happens below, this fingerprint is handled: a rejected
+        // file is not re-tried until it changes again.
+        last_handled = now;
+        match model.reload_from(path) {
+            Ok(info) => eprintln!(
+                "[watch-model] reloaded {} (epoch {}, C={} W={} backend={} {:.2} MB)",
+                path.display(),
+                info.epoch,
+                info.c,
+                info.width,
+                info.backend,
+                info.bytes as f64 / 1e6,
+            ),
+            Err(e) => eprintln!(
+                "[watch-model] reload of {} rejected (keeping current model): {e}",
+                path.display()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::eval::Predictor;
+    use crate::train::{TrainConfig, Trainer};
+
+    fn trained(epochs: usize) -> (crate::train::TrainedModel, crate::data::Dataset) {
+        let ds = SyntheticSpec::multiclass(400, 300, 16).seed(77).generate();
+        let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+        tr.fit(&ds, epochs);
+        (tr.into_model(), ds)
+    }
+
+    #[test]
+    fn slot_swaps_and_counts_epochs() {
+        let slot = ModelSlot::new(1u32);
+        assert_eq!(*slot.load(), 1);
+        assert_eq!(slot.epoch(), 0);
+        assert_eq!(slot.store(2), 1);
+        assert_eq!(*slot.load(), 2);
+        assert_eq!(slot.epoch(), 1);
+        // An old generation handed out before the swap stays valid.
+        let old = slot.load();
+        slot.store(3);
+        assert_eq!(*old, 2);
+        assert_eq!(*slot.load(), 3);
+    }
+
+    #[test]
+    fn reload_swaps_model_and_rejects_corrupt_keeping_old() {
+        let dir = std::env::temp_dir().join(format!("ltls_reload_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (m1, ds) = trained(1);
+        let (m2, _) = trained(4);
+        let p = dir.join("model.ltls");
+        crate::model::io::save(&m1, &p).unwrap();
+        let r = ReloadableLtls::from_path(&p, false).unwrap();
+        assert_eq!(r.epoch(), 0);
+        assert_eq!(r.n_features(), Some(ds.n_features));
+
+        // Serve through the BatchModel face: answers match m1.
+        let row = ds.row(0);
+        let req = || Request::detached(row.indices.to_vec(), row.values.to_vec(), 3);
+        let resp = r.predict_batch(&[req()]);
+        assert_eq!(resp[0].topk, m1.topk(row, 3));
+
+        // Swap in m2: answers now match m2.
+        crate::model::io::save(&m2, &p).unwrap();
+        let info = r.reload().unwrap();
+        assert_eq!(info.epoch, 1);
+        assert_eq!(info.backend, "dense");
+        let resp = r.predict_batch(&[req()]);
+        assert_eq!(resp[0].topk, m2.topk(row, 3));
+
+        // A truncated file is rejected and m2 stays live.
+        let bytes = crate::model::io::serialize(&m1);
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(r.reload().is_err());
+        assert_eq!(r.epoch(), 1);
+        let resp = r.predict_batch(&[req()]);
+        assert_eq!(resp[0].topk, m2.topk(row, 3));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reload_without_path_errors() {
+        let (m1, _) = trained(1);
+        let r = ReloadableLtls::new(crate::model::io::AnyModel::Binary(m1));
+        assert!(r.default_path().is_none());
+        let err = r.reload().unwrap_err();
+        assert!(err.contains("no model path"), "{err}");
+    }
+
+    #[test]
+    fn watcher_picks_up_valid_write_and_ignores_garbage() {
+        let dir = std::env::temp_dir().join(format!("ltls_watch_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (m1, ds) = trained(1);
+        let (m2, _) = trained(4);
+        let p = dir.join("watched.ltls");
+        crate::model::io::save(&m1, &p).unwrap();
+        let r = Arc::new(ReloadableLtls::from_path(&p, false).unwrap());
+        let watcher = ModelWatcher::spawn(Arc::clone(&r), p.clone(), Duration::from_millis(15));
+
+        // Garbage lands in the file (a half-written model): the watcher
+        // must reject it and keep m1 live.
+        let bytes = crate::model::io::serialize(&m2);
+        std::fs::write(&p, &bytes[..100]).unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+        assert_eq!(r.epoch(), 0, "half-written file must not be swapped in");
+        assert_eq!(r.snapshot().c(), m1.trellis.c);
+
+        // The full model replaces it (atomically, as real writers should):
+        // picked up within a few poll intervals.
+        crate::model::io::write_atomic(&bytes, &p).unwrap();
+        let mut ok = false;
+        for _ in 0..200 {
+            if r.epoch() >= 1 {
+                ok = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        assert!(ok, "watcher never picked up the valid model");
+        let row = ds.row(3);
+        let resp =
+            r.predict_batch(&[Request::detached(row.indices.to_vec(), row.values.to_vec(), 1)]);
+        assert_eq!(resp[0].topk, m2.topk(row, 1));
+        watcher.stop();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -34,6 +34,16 @@ pub struct Request {
     reply: Sender<Response>,
 }
 
+impl Request {
+    /// A request whose reply channel is disconnected — for exercising
+    /// [`BatchModel`] implementations directly (tests, benches) without
+    /// going through a worker pool.
+    #[cfg(test)]
+    pub(crate) fn detached(indices: Vec<u32>, values: Vec<f32>, k: usize) -> Request {
+        Request { indices, values, k, enqueued: Instant::now(), reply: channel().0 }
+    }
+}
+
 impl Stamped for Request {
     fn enqueued_at(&self) -> Instant {
         self.enqueued
@@ -65,7 +75,40 @@ pub trait BatchModel: Send + Sync + 'static {
         out.extend(self.predict_batch(batch));
     }
 
+    /// Feature dimensionality `D` requests may index, when the model knows
+    /// it (`None` → unbounded / unknown). The network frontend
+    /// ([`super::transport`]) uses this to reject out-of-range feature
+    /// indices with a protocol error before they reach a scoring kernel.
+    fn n_features(&self) -> Option<usize> {
+        None
+    }
+
     fn name(&self) -> &str;
+}
+
+/// Delegating impl so a shared handle (e.g. the hot-reloadable model,
+/// which the reload path must also hold) can be installed in the pool.
+impl<M: BatchModel> BatchModel for Arc<M> {
+    fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
+        (**self).predict_batch(batch)
+    }
+
+    fn predict_batch_into(
+        &self,
+        batch: &[Request],
+        scratch: &mut PredictScratch,
+        out: &mut Vec<Response>,
+    ) {
+        (**self).predict_batch_into(batch, scratch, out)
+    }
+
+    fn n_features(&self) -> Option<usize> {
+        (**self).n_features()
+    }
+
+    fn name(&self) -> &str {
+        (**self).name()
+    }
 }
 
 /// Adapter: any [`crate::eval::Predictor`] serves per-example through its
@@ -116,6 +159,63 @@ pub struct BatchedLtls<
     S: crate::model::WeightStore = crate::model::DenseStore,
 >(pub crate::train::TrainedModel<T, S>);
 
+/// The batched scoring body shared by [`BatchedLtls`] and the
+/// hot-reloadable wrapper ([`super::reload::ReloadableLtls`]): one
+/// strip-sweep scores the whole micro-batch, then each row is
+/// list-Viterbi-decoded from the shared score matrix, all on `scratch`.
+///
+/// Requests carrying a feature index `>= D` cannot be scored by this
+/// model (the strip kernels index weights by feature) and are answered
+/// with an empty top-k instead of reaching a kernel. The network
+/// transport already rejects such requests with a protocol error; this
+/// guard covers the hot-reload race where a request was admitted against
+/// one model generation and executes against the next.
+pub(crate) fn batched_predict_into<T: crate::graph::Topology, S: crate::model::WeightStore>(
+    model: &crate::train::TrainedModel<T, S>,
+    batch: &[Request],
+    scratch: &mut PredictScratch,
+    out: &mut Vec<Response>,
+) {
+    out.clear();
+    let e = crate::model::WeightStore::n_edges(&model.model);
+    // Compared in usize: D can legitimately be 2^32 (feature ids are
+    // u32, D = max id + 1), which a u32 cast would wrap to 0.
+    let d = crate::model::WeightStore::n_features(&model.model);
+    let scorable = |r: &Request| r.indices.iter().all(|&i| (i as usize) < d);
+    let all_scorable = batch.iter().all(scorable);
+    static EMPTY_U32: [u32; 0] = [];
+    static EMPTY_F32: [f32; 0] = [];
+    let rows: Vec<crate::sparse::SparseVec> = batch
+        .iter()
+        .map(|r| {
+            if all_scorable || scorable(r) {
+                crate::sparse::SparseVec::new(&r.indices, &r.values)
+            } else {
+                crate::sparse::SparseVec::new(&EMPTY_U32, &EMPTY_F32)
+            }
+        })
+        .collect();
+    model.model.edge_scores_batch(&rows, &mut scratch.batch_gather, &mut scratch.batch_h);
+    for (i, r) in batch.iter().enumerate() {
+        if !all_scorable && !scorable(r) {
+            out.push(Response { topk: Vec::new() });
+            continue;
+        }
+        let h = &scratch.batch_h[i * e..(i + 1) * e];
+        let fetch = (r.k + 8).min(crate::graph::Topology::c(&model.trellis) as usize);
+        crate::decode::list_viterbi_into(
+            &model.trellis,
+            h,
+            fetch,
+            &mut scratch.ws,
+            &mut scratch.paths,
+        );
+        let mut topk = Vec::with_capacity(r.k);
+        model.resolve_topk(r.k, &scratch.paths, &mut topk);
+        out.push(Response { topk });
+    }
+}
+
 impl<T: crate::graph::Topology, S: crate::model::WeightStore> BatchModel for BatchedLtls<T, S> {
     fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
         let mut out = Vec::with_capacity(batch.len());
@@ -129,27 +229,11 @@ impl<T: crate::graph::Topology, S: crate::model::WeightStore> BatchModel for Bat
         scratch: &mut PredictScratch,
         out: &mut Vec<Response>,
     ) {
-        out.clear();
-        let e = crate::model::WeightStore::n_edges(&self.0.model);
-        let rows: Vec<crate::sparse::SparseVec> = batch
-            .iter()
-            .map(|r| crate::sparse::SparseVec::new(&r.indices, &r.values))
-            .collect();
-        self.0.model.edge_scores_batch(&rows, &mut scratch.batch_gather, &mut scratch.batch_h);
-        for (i, r) in batch.iter().enumerate() {
-            let h = &scratch.batch_h[i * e..(i + 1) * e];
-            let fetch = (r.k + 8).min(crate::graph::Topology::c(&self.0.trellis) as usize);
-            crate::decode::list_viterbi_into(
-                &self.0.trellis,
-                h,
-                fetch,
-                &mut scratch.ws,
-                &mut scratch.paths,
-            );
-            let mut topk = Vec::with_capacity(r.k);
-            self.0.resolve_topk(r.k, &scratch.paths, &mut topk);
-            out.push(Response { topk });
-        }
+        batched_predict_into(&self.0, batch, scratch, out)
+    }
+
+    fn n_features(&self) -> Option<usize> {
+        Some(crate::model::WeightStore::n_features(&self.0.model))
     }
 
     fn name(&self) -> &str {
@@ -167,6 +251,72 @@ pub struct ServerConfig {
     pub workers: usize,
 }
 
+impl ServerConfig {
+    /// The queue depth actually used (resolves the `0 → 1024` default) —
+    /// the single source of truth for anything derived from it, e.g. the
+    /// network frontend's default admission bound.
+    pub fn effective_queue_depth(&self) -> usize {
+        if self.queue_depth == 0 {
+            1024
+        } else {
+            self.queue_depth
+        }
+    }
+}
+
+/// Why a non-blocking submission was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded request queue is full — backpressure; callers should
+    /// reject or retry later rather than queue unboundedly.
+    QueueFull,
+    /// The worker pool has shut down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "request queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "prediction server has shut down"),
+        }
+    }
+}
+
+/// A cloneable, lock-free submission handle onto a [`PredictServer`]'s
+/// bounded queue (see [`PredictServer::submitter`]).
+#[derive(Clone)]
+pub struct Submitter {
+    tx: SyncSender<Request>,
+}
+
+impl Submitter {
+    /// Same contract as [`PredictServer::try_submit`].
+    pub fn try_submit(
+        &self,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+        k: usize,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        try_submit_on(&self.tx, indices, values, k)
+    }
+}
+
+fn try_submit_on(
+    tx: &SyncSender<Request>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    k: usize,
+) -> Result<Receiver<Response>, SubmitError> {
+    let (reply, rx) = channel();
+    let req = Request { indices, values, k, enqueued: Instant::now(), reply };
+    match tx.try_send(req) {
+        Ok(()) => Ok(rx),
+        Err(mpsc::TrySendError::Full(_)) => Err(SubmitError::QueueFull),
+        Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+    }
+}
+
 /// Handle to a running server.
 pub struct PredictServer {
     tx: SyncSender<Request>,
@@ -177,7 +327,7 @@ pub struct PredictServer {
 impl PredictServer {
     /// Spawn the worker pool.
     pub fn start<M: BatchModel>(model: M, cfg: ServerConfig) -> PredictServer {
-        let depth = if cfg.queue_depth == 0 { 1024 } else { cfg.queue_depth };
+        let depth = cfg.effective_queue_depth();
         let n_workers = if cfg.workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
@@ -237,6 +387,29 @@ impl PredictServer {
         rx
     }
 
+    /// Non-blocking [`Self::submit`]: when the bounded queue is full the
+    /// request is refused with [`SubmitError::QueueFull`] instead of
+    /// blocking the caller — the admission path of the network frontend,
+    /// which must answer with a backpressure error rather than queue
+    /// unboundedly.
+    pub fn try_submit(
+        &self,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+        k: usize,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        try_submit_on(&self.tx, indices, values, k)
+    }
+
+    /// A cloneable submission handle. The network frontend hands one to
+    /// each connection so per-request submission contends only on the
+    /// queue channel itself, not on any lock around the server handle.
+    /// Holders keep the request channel alive: drop them before
+    /// expecting [`Self::shutdown`]'s worker join to complete.
+    pub fn submitter(&self) -> Submitter {
+        Submitter { tx: self.tx.clone() }
+    }
+
     /// Blocking convenience call.
     pub fn predict(&self, indices: Vec<u32>, values: Vec<f32>, k: usize) -> Response {
         self.submit(indices, values, k).recv().expect("server dropped reply")
@@ -293,6 +466,46 @@ mod tests {
         let (reqs, batches, _) = server.metrics.counts();
         assert_eq!(reqs, 50);
         assert!(batches >= 7, "batches={batches}"); // 50/8 → at least 7
+        server.shutdown();
+    }
+
+    /// A full bounded queue refuses (backpressure) instead of blocking.
+    #[test]
+    fn try_submit_backpressure_when_queue_full() {
+        struct Slow;
+        impl BatchModel for Slow {
+            fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
+                std::thread::sleep(Duration::from_millis(100));
+                batch.iter().map(|_| Response { topk: Vec::new() }).collect()
+            }
+            fn name(&self) -> &str {
+                "slow"
+            }
+        }
+        let server = PredictServer::start(
+            Slow,
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(1) },
+                queue_depth: 2,
+                workers: 1,
+            },
+        );
+        let mut pending = Vec::new();
+        let mut saw_full = false;
+        for _ in 0..64 {
+            match server.try_submit(vec![0], vec![1.0], 1) {
+                Ok(rx) => pending.push(rx),
+                Err(SubmitError::QueueFull) => {
+                    saw_full = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(saw_full, "64 rapid submissions never hit the bounded queue");
+        for rx in pending {
+            rx.recv().unwrap();
+        }
         server.shutdown();
     }
 

@@ -1,0 +1,752 @@
+//! The network serving frontend: a std-only TCP transport in front of the
+//! batching multi-worker prediction pool (`ltls serve --listen HOST:PORT`).
+//!
+//! ## Wire protocol (newline-delimited)
+//!
+//! Requests are single text lines; every line gets exactly one reply line,
+//! in request order per connection (pipelining is encouraged):
+//!
+//! ```text
+//! <k> <i:v> <i:v> ...     top-k prediction for a sparse feature vector
+//!                         → {"topk":[[label,score],...]}
+//! PING                    → {"ok":true}
+//! METRICS                 → plaintext metrics block (multi-line,
+//!                           prometheus-style `name value` gauges,
+//!                           terminated by a `# end` line)
+//! RELOAD [path]           hot-swap the model from `path` (or the path
+//!                         the server was started from)
+//!                         → {"ok":true,"epoch":N,...} or {"error":...}
+//! SHUTDOWN                → {"ok":true,"draining":true}, then the server
+//!                           drains gracefully and exits
+//! ```
+//!
+//! Malformed lines (bad `k`, bad `i:v` tokens, non-finite values,
+//! duplicate or out-of-range feature indices, over-long lines) are
+//! answered with `{"error":...}` — the connection stays usable except
+//! after an over-long line, which cannot be resynchronized safely.
+//!
+//! ## Admission control (backpressure)
+//!
+//! The transport bounds the number of requests that are *admitted* —
+//! submitted to the worker pool but not yet answered — across all
+//! connections. Over the bound (or when the pool's own bounded queue is
+//! full) a request is answered immediately with
+//! `{"error":"backpressure: ...","backpressure":true}` instead of being
+//! queued unboundedly; clients should back off and retry. Control
+//! commands are never subject to admission control.
+//!
+//! ## Threading and graceful drain
+//!
+//! One accept thread (non-blocking listener polled every few ms), two
+//! threads per connection: a reader that parses lines and submits to the
+//! pool, and a writer that emits replies in submission order (so a batch
+//! answered out of order across connections can never misroute within
+//! one). [`NetServer::shutdown`] — triggered programmatically or by the
+//! `SHUTDOWN` command via [`NetServer::wait_for_shutdown_request`] —
+//! stops accepting, half-closes every connection's read side, lets each
+//! writer flush all in-flight responses, joins the connection threads and
+//! only then stops the worker pool: zero admitted requests are dropped.
+
+use super::metrics::ServingMetrics;
+use super::reload::ReloadableLtls;
+use super::server::{BatchModel, PredictServer, Response, ServerConfig, SubmitError, Submitter};
+use crate::util::json::Json;
+use std::io::{BufRead, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Longest accepted request line (defends the per-connection read buffer
+/// against a peer that never sends a newline).
+const MAX_LINE: u64 = 1 << 20;
+/// Largest accepted top-k (defends the per-request output allocation).
+const MAX_K: usize = 4096;
+/// Accept-loop poll interval (the listener is non-blocking so shutdown
+/// can interrupt it without a wake-up connection).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Network frontend configuration.
+#[derive(Clone, Debug, Default)]
+pub struct NetConfig {
+    /// The worker pool under the transport.
+    pub server: ServerConfig,
+    /// Admission bound: max requests submitted-but-unanswered across all
+    /// connections (0 → 4 × the pool's queue depth). Over it, requests
+    /// get an immediate backpressure error.
+    pub max_inflight: usize,
+    /// Per-connection share of the admission bound (0 → `max_inflight`
+    /// / 4, at least 1). Bounds how much of the global budget one
+    /// pipelining-but-not-reading client can pin while its writer sits
+    /// in the write timeout, so a single bad client cannot backpressure
+    /// everyone else.
+    pub max_inflight_per_conn: usize,
+}
+
+/// State shared by the accept loop, every connection thread and the
+/// server handle.
+struct Shared {
+    /// The worker pool; taken (once) by the graceful drain.
+    pool: Mutex<Option<PredictServer>>,
+    /// The pool's metrics, kept reachable after the pool is taken.
+    metrics: Arc<ServingMetrics>,
+    /// Hot-reload handle when the served model is swappable.
+    reload: Option<Arc<ReloadableLtls>>,
+    /// Feature bound of a non-reloadable model (reloadable models are
+    /// queried live, since a reload may change D).
+    static_features: Option<usize>,
+    max_inflight: usize,
+    /// Per-connection admission share (see [`NetConfig`]).
+    per_conn_cap: usize,
+    /// Requests admitted to the pool whose reply has not been written.
+    inflight: AtomicUsize,
+    /// Requests refused with a backpressure error.
+    rejected: AtomicU64,
+    /// Connections accepted over the server's lifetime.
+    accepted_conns: AtomicU64,
+    /// Set once the drain began: stop accepting, readers wind down.
+    draining: AtomicBool,
+    /// Set by the `SHUTDOWN` command; observed by
+    /// [`NetServer::wait_for_shutdown_request`].
+    shutdown_requested: Mutex<bool>,
+    shutdown_cv: Condvar,
+    /// Live connections (id → stream clone) so the drain can half-close
+    /// blocked readers.
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+    /// Count of live connection threads, for the drain barrier.
+    live_conns: Mutex<usize>,
+    conn_cv: Condvar,
+}
+
+impl Shared {
+    /// The feature-index bound requests are validated against (live for
+    /// reloadable models — a reload may change D).
+    fn feature_bound(&self) -> Option<usize> {
+        match &self.reload {
+            Some(r) => Some(r.current_n_features()),
+            None => self.static_features,
+        }
+    }
+
+    fn request_shutdown(&self) {
+        let mut g = self.shutdown_requested.lock().unwrap();
+        *g = true;
+        self.shutdown_cv.notify_all();
+    }
+}
+
+/// Handle to a running network server (see the module docs).
+pub struct NetServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:7878"`; port 0 picks a free port —
+    /// read it back from [`Self::addr`]) and serve `model` through a
+    /// worker pool. `RELOAD` is refused on this server — use
+    /// [`Self::start_reloadable`] for hot-swappable models.
+    pub fn start<M: BatchModel>(
+        listen: &str,
+        model: M,
+        cfg: NetConfig,
+    ) -> Result<NetServer, String> {
+        let static_features = model.n_features();
+        NetServer::start_inner(listen, model, None, static_features, cfg)
+    }
+
+    /// [`Self::start`] over a hot-reloadable model: the same handle is
+    /// installed in the worker pool and kept for the `RELOAD` command /
+    /// `--watch-model` watcher.
+    pub fn start_reloadable(
+        listen: &str,
+        model: Arc<ReloadableLtls>,
+        cfg: NetConfig,
+    ) -> Result<NetServer, String> {
+        NetServer::start_inner(listen, Arc::clone(&model), Some(model), None, cfg)
+    }
+
+    fn start_inner<M: BatchModel>(
+        listen: &str,
+        model: M,
+        reload: Option<Arc<ReloadableLtls>>,
+        static_features: Option<usize>,
+        cfg: NetConfig,
+    ) -> Result<NetServer, String> {
+        let listener = TcpListener::bind(listen).map_err(|e| format!("bind {listen}: {e}"))?;
+        listener.set_nonblocking(true).map_err(|e| format!("listener: {e}"))?;
+        let addr = listener.local_addr().map_err(|e| format!("listener: {e}"))?;
+        let queue_depth = cfg.server.effective_queue_depth();
+        let max_inflight = if cfg.max_inflight == 0 { queue_depth * 4 } else { cfg.max_inflight };
+        let per_conn_cap = if cfg.max_inflight_per_conn == 0 {
+            (max_inflight / 4).max(1)
+        } else {
+            cfg.max_inflight_per_conn
+        };
+        let pool = PredictServer::start(model, cfg.server.clone());
+        let metrics = Arc::clone(&pool.metrics);
+        let shared = Arc::new(Shared {
+            pool: Mutex::new(Some(pool)),
+            metrics,
+            reload,
+            static_features,
+            max_inflight,
+            per_conn_cap,
+            inflight: AtomicUsize::new(0),
+            rejected: AtomicU64::new(0),
+            accepted_conns: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+            shutdown_requested: Mutex::new(false),
+            shutdown_cv: Condvar::new(),
+            conns: Mutex::new(Vec::new()),
+            live_conns: Mutex::new(0),
+            conn_cv: Condvar::new(),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("ltls-net-accept".to_string())
+            .spawn(move || accept_loop(&listener, &accept_shared))
+            .map_err(|e| format!("spawn accept thread: {e}"))?;
+        Ok(NetServer { addr, shared, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The worker pool's serving metrics.
+    pub fn metrics(&self) -> Arc<ServingMetrics> {
+        Arc::clone(&self.shared.metrics)
+    }
+
+    /// Worker threads in the pool (0 after the pool was drained).
+    pub fn n_workers(&self) -> usize {
+        self.shared.pool.lock().unwrap().as_ref().map(|p| p.n_workers()).unwrap_or(0)
+    }
+
+    /// Requests refused with a backpressure error so far.
+    pub fn rejected(&self) -> u64 {
+        self.shared.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Connections accepted so far.
+    pub fn accepted_connections(&self) -> u64 {
+        self.shared.accepted_conns.load(Ordering::Relaxed)
+    }
+
+    /// True once a client issued `SHUTDOWN`.
+    pub fn shutdown_requested(&self) -> bool {
+        *self.shared.shutdown_requested.lock().unwrap()
+    }
+
+    /// Block until a client issues `SHUTDOWN` (the CLI's serve loop),
+    /// then return — the caller performs the actual [`Self::shutdown`].
+    pub fn wait_for_shutdown_request(&self) {
+        let mut g = self.shared.shutdown_requested.lock().unwrap();
+        while !*g {
+            g = self.shared.shutdown_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Graceful drain: stop accepting, half-close every connection's read
+    /// side (no new requests), let the writers flush every in-flight
+    /// response, join all connection threads, then stop the worker pool.
+    pub fn shutdown(mut self) {
+        let shared = Arc::clone(&self.shared);
+        shared.draining.store(true, Ordering::SeqCst);
+        // Unblock readers stuck in read_line: no more requests come in,
+        // but each connection's write side stays open until its writer
+        // has flushed everything already admitted.
+        for (_, s) in shared.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Read);
+        }
+        {
+            let mut live = shared.live_conns.lock().unwrap();
+            while *live > 0 {
+                let (g, _) =
+                    shared.conn_cv.wait_timeout(live, Duration::from_millis(50)).unwrap();
+                live = g;
+            }
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(pool) = shared.pool.lock().unwrap().take() {
+            pool.shutdown();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        // Best-effort unwind for a handle dropped without `shutdown()`:
+        // signal the accept loop and kick every connection loose. (After
+        // a graceful `shutdown()` both are no-ops.)
+        self.shared.draining.store(true, Ordering::SeqCst);
+        if let Ok(conns) = self.shared.conns.lock() {
+            for (_, s) in conns.iter() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    let mut next_id = 0u64;
+    loop {
+        if shared.draining.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                next_id += 1;
+                // The stream may inherit the listener's non-blocking mode.
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                spawn_connection(shared, stream, next_id);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// A reply the writer thread must emit, in submission order.
+enum Reply {
+    /// Response pending from the worker pool.
+    Pending(Receiver<Response>),
+    /// Pre-rendered line (protocol errors, command replies, metrics).
+    Immediate(String),
+}
+
+fn spawn_connection(shared: &Arc<Shared>, stream: TcpStream, id: u64) {
+    let (write_stream, registry_stream) = match (stream.try_clone(), stream.try_clone()) {
+        (Ok(a), Ok(b)) => (a, b),
+        _ => return,
+    };
+    // One submission handle per connection: per-request admission then
+    // contends only on the pool's queue channel, never on the shared
+    // pool lock (that lock is taken once here and for control commands).
+    let Some(submitter) = shared.pool.lock().unwrap().as_ref().map(|p| p.submitter()) else {
+        return; // draining: the pool is already gone
+    };
+    // A peer that stops reading must not pin the writer (and with it the
+    // graceful drain) on a full send buffer forever: time the write out,
+    // mark the connection broken, and keep draining its replies.
+    let _ = write_stream.set_write_timeout(Some(Duration::from_secs(10)));
+    *shared.live_conns.lock().unwrap() += 1;
+    shared.conns.lock().unwrap().push((id, registry_stream));
+    shared.accepted_conns.fetch_add(1, Ordering::Relaxed);
+    let conn_shared = Arc::clone(shared);
+    let spawned = std::thread::Builder::new()
+        .name(format!("ltls-net-conn-{id}"))
+        .spawn(move || {
+            let (tx, rx) = channel::<Reply>();
+            // This connection's share of the admission budget: bumped at
+            // admission (reader), released as replies are handed to the
+            // writer — same window as the global counter.
+            let conn_inflight = Arc::new(AtomicUsize::new(0));
+            let writer_shared = Arc::clone(&conn_shared);
+            let writer_inflight = Arc::clone(&conn_inflight);
+            let writer = std::thread::Builder::new()
+                .name(format!("ltls-net-write-{id}"))
+                .spawn(move || writer_loop(&writer_shared, write_stream, &rx, &writer_inflight));
+            if let Ok(writer) = writer {
+                reader_loop(&conn_shared, stream, &tx, &submitter, &conn_inflight);
+                // Closing the channel lets the writer finish flushing
+                // everything already admitted, then exit.
+                drop(tx);
+                let _ = writer.join();
+            }
+            // Release the queue-keepalive before reporting this
+            // connection gone, so the drain's worker join cannot observe
+            // a dangling sender.
+            drop(submitter);
+            conn_shared.conns.lock().unwrap().retain(|(cid, _)| *cid != id);
+            let mut live = conn_shared.live_conns.lock().unwrap();
+            *live -= 1;
+            conn_shared.conn_cv.notify_all();
+        });
+    if spawned.is_err() {
+        shared.conns.lock().unwrap().retain(|(cid, _)| *cid != id);
+        let mut live = shared.live_conns.lock().unwrap();
+        *live -= 1;
+        shared.conn_cv.notify_all();
+    }
+}
+
+fn reader_loop(
+    shared: &Arc<Shared>,
+    stream: TcpStream,
+    tx: &Sender<Reply>,
+    submitter: &Submitter,
+    conn_inflight: &AtomicUsize,
+) {
+    let mut reader = std::io::BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if shared.draining.load(Ordering::SeqCst) {
+            break;
+        }
+        line.clear();
+        // A fresh `take` each line re-arms the length budget.
+        let n = match (&mut reader).take(MAX_LINE).read_line(&mut line) {
+            Ok(0) => break, // EOF (client closed, or drain half-closed us)
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        if n as u64 >= MAX_LINE && !line.ends_with('\n') {
+            let _ = tx.send(Reply::Immediate(err_json(&format!(
+                "request line exceeds {MAX_LINE} bytes"
+            ))));
+            break; // cannot resynchronize mid-line
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if !handle_line(shared, trimmed, tx, submitter, conn_inflight) {
+            break;
+        }
+    }
+}
+
+/// Handle one protocol line; returns `false` when the connection should
+/// close (server shutting down).
+fn handle_line(
+    shared: &Arc<Shared>,
+    line: &str,
+    tx: &Sender<Reply>,
+    submitter: &Submitter,
+    conn_inflight: &AtomicUsize,
+) -> bool {
+    let mut words = line.split_whitespace();
+    let head = words.next().unwrap_or("");
+    match head {
+        "PING" => {
+            let _ = tx.send(Reply::Immediate("{\"ok\":true}".to_string()));
+            return true;
+        }
+        "METRICS" => {
+            let _ = tx.send(Reply::Immediate(render_metrics(shared)));
+            return true;
+        }
+        "RELOAD" => {
+            let _ = tx.send(Reply::Immediate(handle_reload(shared, words.next())));
+            return true;
+        }
+        "SHUTDOWN" => {
+            let _ = tx.send(Reply::Immediate("{\"ok\":true,\"draining\":true}".to_string()));
+            shared.request_shutdown();
+            return true;
+        }
+        _ => {}
+    }
+    match parse_request(line, shared.feature_bound()) {
+        Err(e) => {
+            let _ = tx.send(Reply::Immediate(err_json(&e)));
+            true
+        }
+        Ok((k, indices, values)) => {
+            // Admission control: this connection's share first (one
+            // greedy pipelining client must not pin the whole budget),
+            // then the global bound.
+            let mine = conn_inflight.fetch_add(1, Ordering::SeqCst);
+            if mine >= shared.per_conn_cap {
+                conn_inflight.fetch_sub(1, Ordering::SeqCst);
+                shared.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Reply::Immediate(backpressure_json(
+                    mine,
+                    shared.per_conn_cap,
+                    "on this connection",
+                )));
+                return true;
+            }
+            let admitted = shared.inflight.fetch_add(1, Ordering::SeqCst);
+            if admitted >= shared.max_inflight {
+                shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                conn_inflight.fetch_sub(1, Ordering::SeqCst);
+                shared.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Reply::Immediate(backpressure_json(
+                    admitted,
+                    shared.max_inflight,
+                    "in flight",
+                )));
+                return true;
+            }
+            match submitter.try_submit(indices, values, k) {
+                Ok(rx) => {
+                    let _ = tx.send(Reply::Pending(rx));
+                    true
+                }
+                Err(SubmitError::QueueFull) => {
+                    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                    conn_inflight.fetch_sub(1, Ordering::SeqCst);
+                    shared.rejected.fetch_add(1, Ordering::Relaxed);
+                    // Distinct from the admission-bound rejection: here
+                    // the limit hit was the pool's --queue-depth, not
+                    // --max-inflight.
+                    let _ = tx.send(Reply::Immediate(queue_full_json()));
+                    true
+                }
+                Err(SubmitError::Closed) => {
+                    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                    conn_inflight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = tx.send(Reply::Immediate(err_json("server is shutting down")));
+                    false
+                }
+            }
+        }
+    }
+}
+
+fn handle_reload(shared: &Arc<Shared>, arg: Option<&str>) -> String {
+    let Some(reload) = &shared.reload else {
+        return err_json(
+            "this server has no reloadable model (start `ltls serve --listen` with --model)",
+        );
+    };
+    let result = match arg {
+        Some(path) => reload.reload_from(Path::new(path)),
+        None => reload.reload(),
+    };
+    match result {
+        Ok(info) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("epoch", Json::from(info.epoch as usize)),
+            ("c", Json::from(info.c as usize)),
+            ("width", Json::from(info.width as usize)),
+            ("backend", Json::from(info.backend)),
+            ("bytes", Json::from(info.bytes)),
+            ("mapped", Json::Bool(info.mapped)),
+        ])
+        .dump(),
+        Err(e) => err_json(&format!("reload failed (current model kept): {e}")),
+    }
+}
+
+/// Parse `<k> <i:v> <i:v> ...` into a validated sparse request: features
+/// sorted ascending, duplicates / non-finite values / out-of-range
+/// indices rejected (the scoring kernels index weights by feature, so an
+/// unchecked index would be an out-of-bounds access).
+fn parse_request(
+    line: &str,
+    max_features: Option<usize>,
+) -> Result<(usize, Vec<u32>, Vec<f32>), String> {
+    let mut parts = line.split_whitespace();
+    let ktok = parts.next().ok_or_else(|| "empty request".to_string())?;
+    let k: usize = ktok
+        .parse()
+        .map_err(|_| format!("bad k {ktok:?} (want `<k> <i:v> <i:v> ...` or a command)"))?;
+    if k == 0 {
+        return Err("k must be at least 1".into());
+    }
+    if k > MAX_K {
+        return Err(format!("k={k} exceeds the maximum {MAX_K}"));
+    }
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    for tok in parts {
+        let (i, v) =
+            tok.split_once(':').ok_or_else(|| format!("bad feature token {tok:?} (want i:v)"))?;
+        let i: u32 = i.parse().map_err(|_| format!("bad feature index in {tok:?}"))?;
+        let v: f32 = v.parse().map_err(|_| format!("bad feature value in {tok:?}"))?;
+        if !v.is_finite() {
+            return Err(format!("non-finite feature value in {tok:?}"));
+        }
+        indices.push(i);
+        values.push(v);
+    }
+    // The kernels expect ascending, distinct feature indices per example.
+    let mut order: Vec<usize> = (0..indices.len()).collect();
+    order.sort_by_key(|&j| indices[j]);
+    if order.windows(2).any(|w| indices[w[0]] == indices[w[1]]) {
+        return Err("duplicate feature index".into());
+    }
+    if order.iter().enumerate().any(|(pos, &j)| pos != j) {
+        indices = order.iter().map(|&j| indices[j]).collect();
+        values = order.iter().map(|&j| values[j]).collect();
+    }
+    if let (Some(d), Some(&top)) = (max_features, indices.last()) {
+        if top as usize >= d {
+            return Err(format!(
+                "feature index {top} out of range (model expects indices below {d})"
+            ));
+        }
+    }
+    Ok((k, indices, values))
+}
+
+fn writer_loop(
+    shared: &Arc<Shared>,
+    stream: TcpStream,
+    rx: &Receiver<Reply>,
+    conn_inflight: &AtomicUsize,
+) {
+    use std::sync::mpsc::TryRecvError;
+    let mut w = std::io::BufWriter::new(stream);
+    let mut broken = false;
+    // Burst batching: replies already queued (pipelined traffic) are
+    // written back-to-back and flushed once per burst; the buffer is also
+    // flushed before blocking on anything — the next queued reply or a
+    // not-yet-computed response — so an unpipelined client never waits on
+    // unflushed bytes.
+    while let Ok(first) = rx.recv() {
+        let mut next = Some(first);
+        while let Some(reply) = next.take() {
+            let line = match reply {
+                Reply::Immediate(s) => s,
+                Reply::Pending(resp) => {
+                    let got = match resp.try_recv() {
+                        Ok(r) => Ok(r),
+                        Err(TryRecvError::Empty) => {
+                            // About to block on the pool: flush what the
+                            // client is already owed.
+                            if !broken && w.flush().is_err() {
+                                broken = true;
+                            }
+                            resp.recv()
+                        }
+                        Err(TryRecvError::Disconnected) => resp.recv(),
+                    };
+                    // The in-flight window closes when the reply is
+                    // handed to the writer, whether or not the client is
+                    // still there.
+                    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                    conn_inflight.fetch_sub(1, Ordering::SeqCst);
+                    match got {
+                        Ok(r) => render_response(&r),
+                        Err(_) => err_json("server dropped the request (shutting down)"),
+                    }
+                }
+            };
+            if !broken {
+                let ok = w.write_all(line.as_bytes()).and_then(|_| w.write_all(b"\n"));
+                if ok.is_err() {
+                    broken = true; // client gone: keep draining for accounting
+                }
+            }
+            if let Ok(more) = rx.try_recv() {
+                next = Some(more);
+            }
+        }
+        if !broken && w.flush().is_err() {
+            broken = true;
+        }
+    }
+}
+
+fn render_response(resp: &Response) -> String {
+    Json::obj(vec![(
+        "topk",
+        Json::Arr(
+            resp.topk
+                .iter()
+                .map(|&(l, s)| Json::Arr(vec![Json::Num(l as f64), Json::Num(s as f64)]))
+                .collect(),
+        ),
+    )])
+    .dump()
+}
+
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::from(msg))]).dump()
+}
+
+fn backpressure_json(inflight: usize, max: usize, scope: &str) -> String {
+    Json::obj(vec![
+        (
+            "error",
+            Json::Str(format!("backpressure: {inflight} requests {scope} (max {max})")),
+        ),
+        ("backpressure", Json::Bool(true)),
+    ])
+    .dump()
+}
+
+fn queue_full_json() -> String {
+    Json::obj(vec![
+        ("error", Json::from("backpressure: worker queue full, retry later")),
+        ("backpressure", Json::Bool(true)),
+    ])
+    .dump()
+}
+
+/// The `METRICS` reply: the pool's prometheus block plus the transport's
+/// own gauges, closed by a `# end` marker line.
+fn render_metrics(shared: &Shared) -> String {
+    use std::fmt::Write as _;
+    let mut s = shared.metrics.prometheus();
+    let _ = writeln!(s, "ltls_net_inflight {}", shared.inflight.load(Ordering::SeqCst));
+    let _ = writeln!(s, "ltls_net_max_inflight {}", shared.max_inflight);
+    let _ = writeln!(s, "ltls_net_max_inflight_per_conn {}", shared.per_conn_cap);
+    let _ = writeln!(s, "ltls_net_rejected_total {}", shared.rejected.load(Ordering::Relaxed));
+    let _ = writeln!(
+        s,
+        "ltls_net_connections_total {}",
+        shared.accepted_conns.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(s, "ltls_net_live_connections {}", *shared.live_conns.lock().unwrap());
+    if let Some(r) = &shared.reload {
+        let _ = writeln!(s, "ltls_model_epoch {}", r.epoch());
+    }
+    s.push_str("# end");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_accepts_and_sorts() {
+        let (k, idx, val) = parse_request("3 5:1.5 2:2 7:0.25", Some(100)).unwrap();
+        assert_eq!(k, 3);
+        assert_eq!(idx, vec![2, 5, 7]);
+        assert_eq!(val, vec![2.0, 1.5, 0.25]);
+        // Featureless requests are legal (bias-only scoring).
+        let (k, idx, _) = parse_request("1", None).unwrap();
+        assert_eq!((k, idx.len()), (1, 0));
+    }
+
+    #[test]
+    fn parse_request_rejects_malformed() {
+        assert!(parse_request("", Some(10)).is_err());
+        assert!(parse_request("0 1:1", Some(10)).is_err()); // k = 0
+        assert!(parse_request("x 1:1", Some(10)).is_err()); // bad k
+        assert!(parse_request("1 nocolon", Some(10)).is_err());
+        assert!(parse_request("1 a:1", Some(10)).is_err());
+        assert!(parse_request("1 1:abc", Some(10)).is_err());
+        assert!(parse_request("1 1:NaN", Some(10)).is_err());
+        assert!(parse_request("1 1:inf", Some(10)).is_err());
+        assert!(parse_request("1 3:1 3:2", Some(10)).is_err()); // duplicate
+        assert!(parse_request("1 10:1", Some(10)).is_err()); // out of range
+        assert!(parse_request("1 9:1", Some(10)).is_ok()); // boundary
+        let big_k = format!("{} 1:1", MAX_K + 1);
+        assert!(parse_request(&big_k, Some(10)).is_err());
+    }
+
+    #[test]
+    fn response_and_error_rendering_is_parseable_json() {
+        let r = Response { topk: vec![(7, 1.5), (2, -0.25)] };
+        let doc = Json::parse(&render_response(&r)).unwrap();
+        let topk = doc.get("topk").unwrap().as_arr().unwrap();
+        assert_eq!(topk.len(), 2);
+        assert_eq!(topk[0].as_arr().unwrap()[0].as_f64(), Some(7.0));
+        assert_eq!(topk[1].as_arr().unwrap()[1].as_f64(), Some(-0.25));
+        let e = Json::parse(&err_json("boom \"quoted\"")).unwrap();
+        assert_eq!(e.get("error").unwrap().as_str(), Some("boom \"quoted\""));
+        let b = Json::parse(&backpressure_json(9, 8, "in flight")).unwrap();
+        assert_eq!(b.get("backpressure"), Some(&Json::Bool(true)));
+        assert!(b.get("error").unwrap().as_str().unwrap().contains("9"));
+        let q = Json::parse(&queue_full_json()).unwrap();
+        assert_eq!(q.get("backpressure"), Some(&Json::Bool(true)));
+    }
+}

@@ -3,8 +3,16 @@
 //! Lines look like `l1,l2,... f1:v1 f2:v2 ...` (multilabel) or
 //! `l f1:v1 ...` (multiclass). An optional header line `n d c` (three bare
 //! integers, the XMLC repository convention) is auto-detected and used to
-//! size the dataset. Feature ids may be 0- or 1-based; the loader keeps
-//! them as-is and sizes `n_features` to the max seen (or header value).
+//! size the dataset; when present, the stated example count `n` is
+//! validated against the rows actually read (a mismatch is an error — it
+//! means rows were lost or the file was truncated). Feature ids may be 0-
+//! or 1-based; the loader keeps them as-is and sizes `n_features` to the
+//! max seen (or header value).
+//!
+//! Unlabeled examples are legal (XMLC allows them): a row may start with
+//! a bare `,` (no labels), and [`dump`] writes unlabeled rows that way so
+//! even a featureless, unlabeled example survives a dump→parse roundtrip
+//! instead of collapsing into a blank line that [`parse`] would skip.
 
 use super::Dataset;
 use crate::sparse::CsrMatrix;
@@ -92,6 +100,16 @@ pub fn parse<R: Read>(name: &str, reader: R) -> Result<Dataset, String> {
         handle(&line.map_err(|e| e.to_string())?, lineno)?;
     }
 
+    // The header's example count is a checksum against silent row loss
+    // (truncated files, blank-line-collapsed rows): reject a mismatch.
+    if let Some((n, _, _)) = header {
+        if n != rows.len() {
+            return Err(format!(
+                "header says {n} examples but {} row(s) were read",
+                rows.len()
+            ));
+        }
+    }
     let (n_features, n_labels) = match header {
         Some((_, d, c)) => (d.max(max_feat as usize + 1), c.max(max_label as usize + 1)),
         None => (max_feat as usize + 1, max_label as usize + 1),
@@ -129,7 +147,14 @@ pub fn dump(ds: &Dataset) -> String {
     out.push_str(&format!("{} {} {}\n", ds.n_examples(), ds.n_features, ds.n_labels));
     for i in 0..ds.n_examples() {
         let ls: Vec<String> = ds.labels_of(i).iter().map(|l| l.to_string()).collect();
-        out.push_str(&ls.join(","));
+        if ls.is_empty() {
+            // A bare `,` marks "no labels": without it a featureless
+            // unlabeled row would dump as a blank line, which `parse`
+            // skips — silently changing n_examples on roundtrip.
+            out.push(',');
+        } else {
+            out.push_str(&ls.join(","));
+        }
         let row = ds.row(i);
         for (&j, &v) in row.indices.iter().zip(row.values) {
             out.push_str(&format!(" {j}:{v}"));
@@ -191,6 +216,48 @@ mod tests {
             assert_eq!(again.labels_of(i), ds.labels_of(i));
             assert_eq!(again.row(i).indices, ds.row(i).indices);
         }
+    }
+
+    /// The row-loss regression: unlabeled rows — even ones with no
+    /// features at all — must survive a dump→parse roundtrip. The old
+    /// dump emitted such a row as a blank line, which parse skipped,
+    /// silently shrinking `n_examples`.
+    #[test]
+    fn dump_parse_roundtrip_preserves_unlabeled_and_empty_rows() {
+        // Row 0: labeled+features; row 1: unlabeled with features;
+        // row 2: unlabeled AND featureless; row 3: labeled, featureless.
+        let text = "1 0:1.5\n, 2:0.5\n,\n3\n";
+        let ds = parse("er", text.as_bytes()).unwrap();
+        assert_eq!(ds.n_examples(), 4);
+        assert_eq!(ds.labels_of(1), &[] as &[u32]);
+        assert_eq!(ds.labels_of(2), &[] as &[u32]);
+        assert_eq!(ds.row(2).indices.len(), 0);
+        assert_eq!(ds.labels_of(3), &[3]);
+        let dumped = dump(&ds);
+        let again = parse("er2", dumped.as_bytes()).unwrap();
+        assert_eq!(again.n_examples(), ds.n_examples(), "roundtrip dropped rows:\n{dumped}");
+        for i in 0..ds.n_examples() {
+            assert_eq!(again.labels_of(i), ds.labels_of(i), "row {i}");
+            assert_eq!(again.row(i).indices, ds.row(i).indices, "row {i}");
+            assert_eq!(again.row(i).values, ds.row(i).values, "row {i}");
+        }
+        // The unlabeled-but-featured form without the comma still parses
+        // (first token containing ':' means "no labels").
+        let ds2 = parse("nf", "0:1 1:2\n".as_bytes()).unwrap();
+        assert_eq!(ds2.n_examples(), 1);
+        assert_eq!(ds2.labels_of(0), &[] as &[u32]);
+    }
+
+    /// The header's example count is validated against the rows read.
+    #[test]
+    fn header_row_count_mismatch_is_an_error() {
+        // Header claims 3 examples, file has 2.
+        let err = parse("hc", "3 6 10\n1 0:1\n2 1:1\n".as_bytes()).unwrap_err();
+        assert!(err.contains("3 examples"), "{err}");
+        assert!(err.contains("2 row(s)"), "{err}");
+        // Exact count parses fine; blank lines don't count as rows.
+        let ds = parse("hc2", "2 6 10\n1 0:1\n\n2 1:1\n".as_bytes()).unwrap();
+        assert_eq!(ds.n_examples(), 2);
     }
 
     #[test]

@@ -61,14 +61,23 @@ impl<T: crate::graph::Topology, S: crate::model::WeightStore> Predictor
 }
 
 /// precision@k over a dataset.
+///
+/// Routed through the engine path (`topk_into` with one reused
+/// [`PredictScratch`] and output buffer) — the exact code the serving
+/// workers run — so the headline metric measures what production
+/// executes, not a parallel allocating path. `topk_into` is contractually
+/// bit-identical to `topk` (pinned by `engine_parity.rs` and the parity
+/// test below), so the numbers are unchanged.
 pub fn precision_at_k<P: Predictor + ?Sized>(model: &P, ds: &Dataset, k: usize) -> f64 {
     if ds.n_examples() == 0 {
         return 0.0;
     }
+    let mut scratch = PredictScratch::new();
+    let mut top: Vec<(u32, f32)> = Vec::new();
     let mut total = 0.0f64;
     for i in 0..ds.n_examples() {
         let labels = ds.labels_of(i);
-        let top = model.topk(ds.row(i), k);
+        model.topk_into(ds.row(i), k, &mut scratch, &mut top);
         let hits = top.iter().filter(|(l, _)| labels.contains(l)).count();
         total += hits as f64 / k as f64;
     }
@@ -131,6 +140,30 @@ mod tests {
         let p1 = precision_at_1(&Constant(best), &ds);
         let want = freq[best as usize] as f64 / 400.0;
         assert!((p1 - want).abs() < 1e-9);
+    }
+
+    /// The engine-path metric is bit-identical to the old allocating
+    /// path: recompute precision@k with per-example `model.topk` (fresh
+    /// allocations, the pre-fix code) and require exact equality on a
+    /// real trained LTLS model at several k.
+    #[test]
+    fn engine_path_matches_allocating_path_exactly() {
+        use crate::train::{TrainConfig, Trainer};
+        let ds = SyntheticSpec::multiclass(500, 300, 24).seed(9).generate();
+        let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+        tr.fit(&ds, 3);
+        let model = tr.into_model();
+        for k in [1usize, 3, 5] {
+            let engine = precision_at_k(&model, &ds, k);
+            let mut total = 0.0f64;
+            for i in 0..ds.n_examples() {
+                let labels = ds.labels_of(i);
+                let top = model.topk(ds.row(i), k); // old allocating path
+                total += top.iter().filter(|(l, _)| labels.contains(l)).count() as f64 / k as f64;
+            }
+            let allocating = total / ds.n_examples() as f64;
+            assert_eq!(engine.to_bits(), allocating.to_bits(), "k={k}");
+        }
     }
 
     #[test]

@@ -16,7 +16,12 @@
 //!   dataset substrates ([`data`]), every baseline the paper compares
 //!   against ([`baselines`]), evaluation harnesses ([`eval`]), a PJRT
 //!   runtime that executes AOT-compiled JAX/Pallas artifacts ([`runtime`]),
-//!   and a batching multi-worker prediction server ([`coordinator`]).
+//!   and a batching multi-worker prediction server ([`coordinator`])
+//!   with a std-only TCP frontend ([`coordinator::transport`]: newline
+//!   protocol, bounded admission with backpressure, plaintext metrics,
+//!   graceful drain) and hot model reload ([`coordinator::reload`]:
+//!   epoch-counted atomic swap between micro-batches — `RELOAD` command
+//!   or `--watch-model` file polling — with zero dropped requests).
 //!   The graph layer is width-parameterized (W-LTLS): everything above it
 //!   is generic over [`graph::Topology`], with the paper's width-2
 //!   [`graph::Trellis`] as the default and [`graph::WideTrellis`] turning

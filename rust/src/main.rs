@@ -32,6 +32,19 @@
 //!   hashed, q8); `--mmap` memory-maps the weight block zero-copy instead
 //!   of materializing it. Without `--model` it trains a fresh model on
 //!   `--dataset` first (the original smoke path).
+//! * `serve --listen HOST:PORT [--model m.ltls [--mmap]] [--watch-model F]
+//!   [--max-inflight N] [--queue-depth N] [--batch B] [--workers W]
+//!   [--max-wait-us U]` — the **network** frontend: newline-delimited
+//!   requests (`<k> <i:v> <i:v> ...`) answered with JSON lines, plus the
+//!   `PING` / `METRICS` / `RELOAD [path]` / `SHUTDOWN` control commands.
+//!   With `--model` the model is hot-reloadable (atomic swap between
+//!   micro-batches, zero dropped requests); `--watch-model F` polls `F`
+//!   and swaps it in whenever the file changes and validates. Admission
+//!   is bounded globally (`--max-inflight`) and per connection
+//!   (`--max-inflight-per-conn`, so one greedy client cannot pin the
+//!   whole budget): overload returns a backpressure error instead of
+//!   queueing unboundedly. Runs until a client sends `SHUTDOWN`, then
+//!   drains gracefully.
 //! * `scaling [--kmax K]` — prediction-time scaling in C (the log-time
 //!   claim).
 
@@ -599,6 +612,9 @@ fn run_deep(epochs: usize, step_cap: usize, lr: f32, scale: f64) -> Result<(), S
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    if args.get("listen").is_some() {
+        return serve_network(args);
+    }
     if let Some(path) = args.get("model") {
         let path = path.to_string();
         return serve_saved(args, &path);
@@ -627,6 +643,138 @@ fn cmd_serve(args: &Args) -> i32 {
     } else {
         run_serve::<ltls::graph::WideTrellis>(args, &train, &test, width)
     }
+}
+
+/// `ltls serve --listen HOST:PORT ...`: the network frontend (see the
+/// crate docs at the top of this file for the flag set and the module
+/// docs of `ltls::coordinator::transport` for the wire protocol). With
+/// `--model` the served model is hot-reloadable — by the `RELOAD`
+/// control command, and by `--watch-model F` which polls `F` and swaps
+/// it in when it changes and validates. Runs until a client sends
+/// `SHUTDOWN`, then drains gracefully and prints the serving metrics.
+fn serve_network(args: &Args) -> i32 {
+    use ltls::coordinator::{ModelWatcher, NetConfig, NetServer, ReloadableLtls};
+    let listen = args.get_str("listen", "127.0.0.1:7878").to_string();
+    let cfg = NetConfig {
+        server: ltls::coordinator::ServerConfig {
+            batcher: ltls::coordinator::BatcherConfig {
+                max_batch: args.get_usize("batch", 64),
+                max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 500)),
+            },
+            queue_depth: args.get_usize("queue-depth", 1024),
+            workers: args.get_usize("workers", 0),
+        },
+        max_inflight: args.get_usize("max-inflight", 0),
+        max_inflight_per_conn: args.get_usize("max-inflight-per-conn", 0),
+    };
+    // The served model: a saved file (hot-reloadable from its path), or a
+    // fresh train on --dataset (reloadable only via `RELOAD <path>`).
+    let reloadable = if let Some(path) = args.get("model") {
+        match ReloadableLtls::from_path(std::path::Path::new(path), args.get_bool("mmap")) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    } else {
+        if args.get_bool("mmap") {
+            eprintln!("error: --mmap requires --model <file> (a saved v3 model to map)");
+            return 1;
+        }
+        let (train, _) = match load_dataset(args) {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        let width = match parse_width(args) {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        warn_width_vs_classes(width, train.n_labels as u64);
+        let epochs = args.get_usize("epochs", 3);
+        let tcfg = ltls::train::TrainConfig { width, ..Default::default() };
+        let any = if width == 2 {
+            let mut tr = match ltls::train::Trainer::<ltls::graph::Trellis>::with_topology(
+                tcfg,
+                train.n_features,
+                train.n_labels,
+            ) {
+                Ok(tr) => tr,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            };
+            tr.fit(&train, epochs);
+            ltls::model::io::AnyModel::Binary(tr.into_model())
+        } else {
+            let mut tr = match ltls::train::Trainer::<ltls::graph::WideTrellis>::with_topology(
+                tcfg,
+                train.n_features,
+                train.n_labels,
+            ) {
+                Ok(tr) => tr,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 1;
+                }
+            };
+            tr.fit(&train, epochs);
+            ltls::model::io::AnyModel::Wide(tr.into_model())
+        };
+        ReloadableLtls::new(any)
+    };
+    let reloadable = std::sync::Arc::new(reloadable);
+    {
+        let snap = reloadable.snapshot();
+        println!(
+            "serving model: C={} W={} E={} backend={} size={:.2} MB mmap={}",
+            snap.c(),
+            snap.width(),
+            snap.num_edges(),
+            snap.backend().name(),
+            snap.bytes() as f64 / 1e6,
+            if snap.is_mapped() { "yes" } else { "no" },
+        );
+    }
+    let watcher = args.get("watch-model").map(|p| {
+        println!("watching {p} for model updates");
+        ModelWatcher::spawn(
+            std::sync::Arc::clone(&reloadable),
+            std::path::PathBuf::from(p),
+            std::time::Duration::from_millis(args.get_u64("watch-poll-ms", 500)),
+        )
+    });
+    let server =
+        match NetServer::start_reloadable(&listen, std::sync::Arc::clone(&reloadable), cfg) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+    println!(
+        "listening on {} with {} worker(s) — protocol: `<k> <i:v> <i:v> ...` | PING | METRICS \
+         | RELOAD [path] | SHUTDOWN",
+        server.addr(),
+        server.n_workers(),
+    );
+    server.wait_for_shutdown_request();
+    println!("SHUTDOWN received; draining in-flight requests...");
+    let metrics = server.metrics();
+    server.shutdown();
+    if let Some(w) = watcher {
+        w.stop();
+    }
+    println!("{}", metrics.summary());
+    println!("drained cleanly");
+    0
 }
 
 /// `ltls serve --model m.ltls [--mmap]`: serve a saved model of any

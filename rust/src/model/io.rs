@@ -217,7 +217,18 @@ fn deserialize_impl<T: Topology, S: WeightStore>(
     if d.checked_mul(e).and_then(|n| n.checked_mul(4)).is_none() {
         return Err(format!("implausible model dimensions D={d} E={e}"));
     }
-    let mut assigner = Assigner::new(AssignPolicy::Identity, hdr.n_labels.max(1), &trellis, 0);
+    // Every label maps to one of the C paths, so a label count beyond C
+    // is corrupt — and would otherwise *panic* the assignment-table
+    // constructor (reload safety: a bad file must never take down a
+    // serving process holding the old model).
+    let n_labels = hdr.n_labels.max(1);
+    if n_labels as u64 > hdr.c {
+        return Err(format!(
+            "corrupt model file: {n_labels} labels exceed C={} paths",
+            hdr.c
+        ));
+    }
+    let mut assigner = Assigner::new(AssignPolicy::Identity, n_labels, &trellis, 0);
 
     let model = if hdr.version <= 2 {
         // Old layout: bias | weights (dense f32) | pairs | EOF.
@@ -230,7 +241,7 @@ fn deserialize_impl<T: Topology, S: WeightStore>(
         for _ in 0..n_pairs {
             let l = r.u32()?;
             let p = r.u64()?;
-            assigner.table.bind(l, p);
+            bind_pair(&mut assigner, l, p, n_labels, hdr.c)?;
         }
         if r.i != bytes.len() {
             return Err(format!("{} trailing bytes", bytes.len() - r.i));
@@ -251,7 +262,7 @@ fn deserialize_impl<T: Topology, S: WeightStore>(
         for _ in 0..n_pairs {
             let l = r.u32()?;
             let p = r.u64()?;
-            assigner.table.bind(l, p);
+            bind_pair(&mut assigner, l, p, n_labels, hdr.c)?;
         }
         let wlen = r.u64()? as usize;
         r.align(WEIGHT_ALIGN)?;
@@ -263,6 +274,35 @@ fn deserialize_impl<T: Topology, S: WeightStore>(
         S::read_store(e, d, &meta, bias, block_of(bytes, region, woff, wlen))?
     };
     Ok(TrainedModel { trellis, model, assigner })
+}
+
+/// Bind a (label, path) pair read from an untrusted file, converting the
+/// assignment table's panicking invariants (range, double binds) into
+/// load errors — a corrupt file must never panic a process that is
+/// hot-reloading it while serving the previous model.
+fn bind_pair(
+    assigner: &mut Assigner,
+    l: u32,
+    p: u64,
+    n_labels: usize,
+    c: u64,
+) -> Result<(), String> {
+    if l as usize >= n_labels {
+        return Err(format!(
+            "corrupt model file: label {l} out of range (n_labels {n_labels})"
+        ));
+    }
+    if p >= c {
+        return Err(format!("corrupt model file: path {p} out of range (C={c})"));
+    }
+    if assigner.table.path_of(l).is_some() {
+        return Err(format!("corrupt model file: label {l} bound twice"));
+    }
+    if !assigner.table.is_free(p) {
+        return Err(format!("corrupt model file: path {p} bound twice"));
+    }
+    assigner.table.bind(l, p);
+    Ok(())
 }
 
 /// The weight block as a parse-copy borrow of `bytes`, or a zero-copy

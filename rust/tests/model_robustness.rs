@@ -1,0 +1,160 @@
+//! Loader robustness: corrupt model files — truncated, bad-magic,
+//! bit-flipped headers — must surface as `Err` through every load path
+//! (`deserialize_any`, `load_any`, `load_any_mmap`), never as a panic or
+//! an out-of-bounds read of the mapped region. This is what makes hot
+//! reload safe: `--watch-model` can race a writer and observe a
+//! half-written file, and the contract tested here is what guarantees the
+//! old model stays live (`rust/src/coordinator/reload.rs` pins the
+//! keep-old-model half; `rust/tests/serve_network.rs` pins it end-to-end
+//! over TCP).
+//!
+//! Fixtures: `model_v2_truncated.ltls` (the committed v2 fixture cut mid
+//! weight block) and `model_badmagic.ltls` (first magic byte flipped) are
+//! checked in alongside the v1/v2 fixtures; v3 corruption is exercised
+//! programmatically over *every* strict prefix of a freshly serialized
+//! model, heap and mmap both.
+
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::model::io::{deserialize_any, load_any, load_any_mmap, serialize};
+use ltls::train::{TrainConfig, Trainer};
+
+const FIXTURE_TRUNCATED: &[u8] = include_bytes!("fixtures/model_v2_truncated.ltls");
+const FIXTURE_BADMAGIC: &[u8] = include_bytes!("fixtures/model_badmagic.ltls");
+
+fn trained_bytes() -> Vec<u8> {
+    let ds = SyntheticSpec::multiclass(300, 200, 12).seed(41).generate();
+    let mut tr = Trainer::new(TrainConfig::default(), ds.n_features, ds.n_labels);
+    tr.fit(&ds, 2);
+    serialize(&tr.into_model())
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ltls_robust_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The checked-in corrupt fixtures error cleanly.
+#[test]
+fn corrupt_fixtures_error_cleanly() {
+    let err = deserialize_any(FIXTURE_TRUNCATED).unwrap_err();
+    assert!(err.contains("truncated"), "{err}");
+    let err = deserialize_any(FIXTURE_BADMAGIC).unwrap_err();
+    assert!(err.contains("magic"), "{err}");
+}
+
+/// Every strict prefix of a valid v3 file is rejected — no cut point
+/// (header, meta, bias, pairs, alignment padding, weight block) panics or
+/// loads.
+#[test]
+fn every_v3_prefix_is_rejected() {
+    let bytes = trained_bytes();
+    assert!(deserialize_any(&bytes).is_ok(), "the untruncated file must load");
+    for len in 0..bytes.len() {
+        let r = deserialize_any(&bytes[..len]);
+        assert!(r.is_err(), "prefix of {len}/{} bytes unexpectedly loaded", bytes.len());
+    }
+    // Trailing garbage is rejected too.
+    let mut long = bytes.clone();
+    long.extend_from_slice(&[0u8; 7]);
+    assert!(deserialize_any(&long).is_err());
+}
+
+/// Header-field corruption (magic, version, backend tag, hostile D) is
+/// rejected; `load_any` from disk behaves identically to in-memory
+/// deserialization.
+#[test]
+fn corrupt_headers_error_through_load_any() {
+    let dir = tmp_dir("hdr");
+    let bytes = trained_bytes();
+    // v3 header layout: magic [0..4) | version [4..8) | C [8..16) |
+    // width [16..20) | D [20..28) | E [28..36) | n_labels [36..44) |
+    // backend [44..48).
+    let mut badmagic = bytes.clone();
+    badmagic[0] = b'X';
+    let mut badversion = bytes.clone();
+    badversion[4..8].copy_from_slice(&99u32.to_le_bytes());
+    let mut badbackend = bytes.clone();
+    badbackend[44] = 9;
+    let mut hostile_d = bytes.clone();
+    hostile_d[20..28].copy_from_slice(&u64::MAX.to_le_bytes());
+    for (tag, bad) in [
+        ("badmagic", badmagic),
+        ("badversion", badversion),
+        ("badbackend", badbackend),
+        ("hostile_d", hostile_d),
+    ] {
+        assert!(deserialize_any(&bad).is_err(), "{tag}: loaded in memory");
+        let p = dir.join(format!("{tag}.ltls"));
+        std::fs::write(&p, &bad).unwrap();
+        assert!(load_any(&p).is_err(), "{tag}: loaded from disk");
+        assert!(load_any_mmap(&p).is_err(), "{tag}: loaded via mmap");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Corrupt label↔path pairs — the section that used to hit *panicking*
+/// assignment-table asserts (out-of-range labels/paths, double binds,
+/// label counts beyond C) — now surface as load errors.
+#[test]
+fn corrupt_assignment_pairs_error_instead_of_panicking() {
+    let bytes = trained_bytes();
+    // Hostile n_labels (header offset 36..44): more labels than paths.
+    let mut bad = bytes.clone();
+    bad[36..44].copy_from_slice(&1_000_000u64.to_le_bytes());
+    let err = deserialize_any(&bad).unwrap_err();
+    assert!(err.contains("exceed"), "{err}");
+
+    // v3 dense layout: header 48 | meta_len u64 | bias e*4 | n_pairs u64
+    // | pairs (label u32, path u64)* — so pair 0's label sits at 64+4e.
+    let e = deserialize_any(&bytes).unwrap().num_edges();
+    let pair0 = 64 + 4 * e;
+
+    // Out-of-range label in pair 0.
+    let mut bad = bytes.clone();
+    bad[pair0..pair0 + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    let err = deserialize_any(&bad).unwrap_err();
+    assert!(err.contains("out of range"), "{err}");
+
+    // Duplicate binding: overwrite pair 1 with a copy of pair 0.
+    let mut bad = bytes.clone();
+    let src: Vec<u8> = bad[pair0..pair0 + 12].to_vec();
+    bad[pair0 + 12..pair0 + 24].copy_from_slice(&src);
+    let err = deserialize_any(&bad).unwrap_err();
+    assert!(err.contains("twice"), "{err}");
+}
+
+/// Truncated files on disk are rejected by the heap loader AND the
+/// zero-copy mmap loader at representative cut points (including cuts
+/// inside the 64-byte-aligned trailing weight block, where a stale
+/// length field could otherwise map out of bounds).
+#[test]
+fn truncated_files_error_through_both_disk_loaders() {
+    let dir = tmp_dir("trunc");
+    let bytes = trained_bytes();
+    let n = bytes.len();
+    // Cut points: empty, mid-header, just after the header, mid-pairs,
+    // one byte into the weight block, one byte short of EOF.
+    for cut in [0usize, 10, 44, 60, n / 2, n * 3 / 4, n - 1] {
+        let p = dir.join(format!("cut_{cut}.ltls"));
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        assert!(load_any(&p).is_err(), "heap loader accepted a {cut}-byte prefix");
+        assert!(load_any_mmap(&p).is_err(), "mmap loader accepted a {cut}-byte prefix");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The CLI's serve path surfaces a corrupt `--model` as a clean error:
+/// `load_any` is exactly what `ltls serve --model` calls, so this pins
+/// the non-panic contract the binary relies on.
+#[test]
+fn missing_and_empty_files_error() {
+    assert!(load_any(std::path::Path::new("/nonexistent/ltls.model")).is_err());
+    assert!(load_any_mmap(std::path::Path::new("/nonexistent/ltls.model")).is_err());
+    let dir = tmp_dir("empty");
+    let p = dir.join("empty.ltls");
+    std::fs::write(&p, b"").unwrap();
+    assert!(load_any(&p).is_err());
+    assert!(load_any_mmap(&p).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,382 @@
+//! End-to-end contract of the network serving frontend
+//! (`rust/src/coordinator/transport.rs` + `reload.rs`), over real TCP on
+//! loopback:
+//!
+//! 1. **Parity** — N concurrent TCP clients receive bit-identical answers
+//!    to the in-process `BatchedLtls` path (the wire format uses
+//!    shortest-roundtrip float printing, so scores survive the text hop
+//!    exactly).
+//! 2. **Hot reload** — a mid-traffic `RELOAD` loses zero in-flight
+//!    requests: every pipelined request is answered, each by exactly the
+//!    old or the new model generation; a corrupt replacement file is
+//!    rejected over the wire and the live model keeps serving.
+//! 3. **Backpressure** — over-admission returns
+//!    `{"error":...,"backpressure":true}` immediately instead of queueing
+//!    unboundedly, and admitted requests still complete.
+//! 4. **Drain** — `SHUTDOWN` is acknowledged, flushes everything
+//!    in-flight and stops the server cleanly.
+
+use ltls::coordinator::{
+    BatchedLtls, BatcherConfig, NetConfig, NetServer, ReloadableLtls, ServerConfig,
+};
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::data::Dataset;
+use ltls::eval::Predictor;
+use ltls::train::{TrainConfig, TrainedModel, Trainer};
+use ltls::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn trained(epochs: usize, seed: u64) -> (TrainedModel, Dataset) {
+    let ds = SyntheticSpec::multiclass(500, 300, 20).seed(55).generate();
+    let cfg = TrainConfig { seed, ..TrainConfig::default() };
+    let mut tr = Trainer::new(cfg, ds.n_features, ds.n_labels);
+    tr.fit(&ds, epochs);
+    (tr.into_model(), ds)
+}
+
+/// A line-oriented test client over one TCP connection.
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let s = TcpStream::connect(addr).expect("connect");
+        s.set_nodelay(true).ok();
+        let r = BufReader::new(s.try_clone().expect("clone stream"));
+        Client { w: s, r }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.w.write_all(line.as_bytes()).unwrap();
+        self.w.write_all(b"\n").unwrap();
+    }
+
+    fn recv(&mut self) -> String {
+        let mut l = String::new();
+        let n = self.r.read_line(&mut l).expect("read reply");
+        assert!(n > 0, "server closed the connection before replying");
+        l.trim().to_string()
+    }
+}
+
+/// `<k> <i:v> <i:v> ...` for a dataset row ({} float printing is
+/// shortest-roundtrip, so the parsed f32 is bit-identical).
+fn req_line(k: usize, row: ltls::sparse::SparseVec) -> String {
+    let mut s = format!("{k}");
+    for (&i, &v) in row.indices.iter().zip(row.values) {
+        s.push_str(&format!(" {i}:{v}"));
+    }
+    s
+}
+
+fn parse_topk(line: &str) -> Vec<(u32, f32)> {
+    let doc = Json::parse(line).unwrap_or_else(|e| panic!("bad json {line:?}: {e}"));
+    assert!(doc.get("error").is_none(), "unexpected error reply: {line}");
+    doc.get("topk")
+        .unwrap_or_else(|| panic!("no topk in {line:?}"))
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|pair| {
+            let a = pair.as_arr().unwrap();
+            (a[0].as_f64().unwrap() as u32, a[1].as_f64().unwrap() as f32)
+        })
+        .collect()
+}
+
+fn small_pool() -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_micros(300) },
+        queue_depth: 256,
+        workers: 2,
+    }
+}
+
+/// Contract 1 + 4: concurrent TCP clients are bit-identical to the
+/// in-process path; METRICS/PING answer; SHUTDOWN drains cleanly.
+#[test]
+fn concurrent_tcp_clients_match_in_process_batched_path() {
+    let (model, ds) = trained(3, 42);
+    let n_clients = 4usize;
+    let per_client = 30usize;
+    // In-process ground truth (the engine-parity-pinned path).
+    let expected: Vec<Vec<(u32, f32)>> =
+        (0..n_clients * per_client).map(|i| model.topk(ds.row(i % ds.n_examples()), 3)).collect();
+
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        BatchedLtls(model),
+        NetConfig { server: small_pool(), ..NetConfig::default() },
+    )
+    .expect("start server");
+    let addr = server.addr();
+
+    let ds = Arc::new(ds);
+    let handles: Vec<_> = (0..n_clients)
+        .map(|cid| {
+            let ds = Arc::clone(&ds);
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                // Pipeline every request, then read every reply: replies
+                // come back in submission order per connection.
+                for j in 0..per_client {
+                    let i = (cid * per_client + j) % ds.n_examples();
+                    c.send(&req_line(3, ds.row(i)));
+                }
+                (0..per_client).map(|_| parse_topk(&c.recv())).collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    for (cid, h) in handles.into_iter().enumerate() {
+        let got = h.join().expect("client thread");
+        for (j, topk) in got.into_iter().enumerate() {
+            assert_eq!(
+                topk,
+                expected[cid * per_client + j],
+                "client {cid} request {j} diverged from the in-process path"
+            );
+        }
+    }
+
+    // Control commands on a fresh connection.
+    let mut c = Client::connect(addr);
+    c.send("PING");
+    assert_eq!(c.recv(), "{\"ok\":true}");
+    c.send("METRICS");
+    let mut metrics_text = String::new();
+    loop {
+        let line = c.recv();
+        if line == "# end" {
+            break;
+        }
+        metrics_text.push_str(&line);
+        metrics_text.push('\n');
+    }
+    assert!(metrics_text.contains("ltls_requests_total"), "{metrics_text}");
+    assert!(metrics_text.contains("ltls_net_live_connections"), "{metrics_text}");
+    // This server has no reloadable model: RELOAD must refuse, not panic.
+    c.send("RELOAD");
+    let reply = c.recv();
+    assert!(reply.contains("error"), "{reply}");
+    // Malformed requests error without killing the connection.
+    c.send("nonsense line");
+    assert!(c.recv().contains("error"));
+    c.send("1 999999:1.0"); // out of the model's feature range
+    let reply = c.recv();
+    assert!(reply.contains("out of range"), "{reply}");
+    c.send("1 0:1.0");
+    parse_topk(&c.recv()); // still serving
+
+    // Drain via the control command.
+    c.send("SHUTDOWN");
+    assert_eq!(c.recv(), "{\"ok\":true,\"draining\":true}");
+    for _ in 0..100 {
+        if server.shutdown_requested() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(server.shutdown_requested());
+    let (reqs, _, _) = server.metrics().counts();
+    assert!(reqs as usize >= n_clients * per_client);
+    server.shutdown(); // joins everything; deadlock here fails the test
+}
+
+/// Contract 2: a mid-traffic hot reload loses zero in-flight requests,
+/// every answer comes from exactly one model generation, and a corrupt
+/// replacement is rejected over the wire with the old model kept live.
+#[test]
+fn hot_reload_mid_traffic_loses_no_requests() {
+    let dir = std::env::temp_dir().join(format!("ltls_net_reload_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let (m1, ds) = trained(1, 42);
+    let (m2, _) = trained(5, 43);
+    let p1 = dir.join("gen1.ltls");
+    let p2 = dir.join("gen2.ltls");
+    ltls::model::io::save(&m1, &p1).unwrap();
+    ltls::model::io::save(&m2, &p2).unwrap();
+
+    let n_req = 200usize;
+    let expect1: Vec<Vec<(u32, f32)>> =
+        (0..n_req).map(|i| m1.topk(ds.row(i % ds.n_examples()), 3)).collect();
+    let expect2: Vec<Vec<(u32, f32)>> =
+        (0..n_req).map(|i| m2.topk(ds.row(i % ds.n_examples()), 3)).collect();
+
+    let reloadable = Arc::new(ReloadableLtls::from_path(&p1, false).unwrap());
+    let server = NetServer::start_reloadable(
+        "127.0.0.1:0",
+        Arc::clone(&reloadable),
+        NetConfig { server: small_pool(), ..NetConfig::default() },
+    )
+    .expect("start server");
+    let addr = server.addr();
+
+    // Traffic client: pipeline all requests, then read all replies.
+    let ds2 = ds.clone();
+    let traffic = std::thread::spawn(move || {
+        let mut c = Client::connect(addr);
+        for i in 0..n_req {
+            c.send(&req_line(3, ds2.row(i % ds2.n_examples())));
+        }
+        (0..n_req).map(|_| parse_topk(&c.recv())).collect::<Vec<_>>()
+    });
+
+    // Mid-traffic: swap generation 1 → 2 on a control connection.
+    std::thread::sleep(Duration::from_millis(5));
+    let mut ctl = Client::connect(addr);
+    ctl.send(&format!("RELOAD {}", p2.display()));
+    let reply = ctl.recv();
+    let doc = Json::parse(&reply).unwrap();
+    assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    assert_eq!(doc.get("epoch").and_then(|e| e.as_f64()), Some(1.0), "{reply}");
+
+    // Zero dropped: every request got an answer, and every answer is
+    // exactly one generation's output (old before the swap, new after —
+    // never a mixture within one answer, never an error).
+    let got = traffic.join().expect("traffic client");
+    assert_eq!(got.len(), n_req);
+    let mut new_gen = 0usize;
+    for (i, topk) in got.iter().enumerate() {
+        let is1 = *topk == expect1[i];
+        let is2 = *topk == expect2[i];
+        assert!(is1 || is2, "request {i} matches neither generation: {topk:?}");
+        if is2 {
+            new_gen += 1;
+        }
+    }
+    println!("{}/{} answers from the new generation", new_gen, n_req);
+
+    // Post-swap requests come from generation 2 exactly.
+    assert_eq!(reloadable.epoch(), 1);
+    ctl.send(&req_line(3, ds.row(7)));
+    assert_eq!(parse_topk(&ctl.recv()), m2.topk(ds.row(7), 3));
+
+    // A half-written (truncated) file is rejected over the wire; the
+    // live model keeps serving.
+    let bytes = ltls::model::io::serialize(&m1);
+    let p3 = dir.join("halfwritten.ltls");
+    std::fs::write(&p3, &bytes[..bytes.len() / 3]).unwrap();
+    ctl.send(&format!("RELOAD {}", p3.display()));
+    let reply = ctl.recv();
+    assert!(reply.contains("reload failed"), "{reply}");
+    assert!(reply.contains("current model kept"), "{reply}");
+    assert_eq!(reloadable.epoch(), 1, "corrupt file must not bump the generation");
+    ctl.send(&req_line(3, ds.row(7)));
+    assert_eq!(parse_topk(&ctl.recv()), m2.topk(ds.row(7), 3));
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Contract 3: over-admission answers with a backpressure error instead
+/// of queueing unboundedly; admitted requests still complete.
+#[test]
+fn over_admission_returns_backpressure_error() {
+    let (model, ds) = trained(1, 42);
+    // One slow-batching worker: the first batch collects for 300ms (from
+    // the first request's enqueue), so rapid pipelined requests pile into
+    // the in-flight window and overflow the tiny admission bound.
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        BatchedLtls(model),
+        NetConfig {
+            server: ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch: 1024,
+                    max_wait: Duration::from_millis(300),
+                },
+                queue_depth: 1024,
+                workers: 1,
+            },
+            max_inflight: 4,
+            max_inflight_per_conn: 4,
+        },
+    )
+    .expect("start server");
+    let mut c = Client::connect(server.addr());
+    let n_req = 40usize;
+    for i in 0..n_req {
+        c.send(&req_line(1, ds.row(i % ds.n_examples())));
+    }
+    let mut served = 0usize;
+    let mut backpressured = 0usize;
+    for _ in 0..n_req {
+        let line = c.recv();
+        let doc = Json::parse(&line).unwrap();
+        if doc.get("backpressure") == Some(&Json::Bool(true)) {
+            assert!(doc.get("error").unwrap().as_str().unwrap().contains("backpressure"));
+            backpressured += 1;
+        } else {
+            parse_topk(&line);
+            served += 1;
+        }
+    }
+    assert_eq!(served + backpressured, n_req);
+    assert!(served >= 1, "nothing was admitted");
+    assert!(
+        backpressured >= 1,
+        "40 rapid requests against max_inflight=4 never saw backpressure"
+    );
+    assert!(server.rejected() as usize >= backpressured);
+    server.shutdown();
+}
+
+/// One greedy pipelining client is contained by its per-connection
+/// admission share: it gets backpressured while a second connection is
+/// still admitted and served from the remaining global budget.
+#[test]
+fn per_connection_cap_contains_one_greedy_client() {
+    let (model, ds) = trained(1, 42);
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        BatchedLtls(model),
+        NetConfig {
+            server: ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch: 1024,
+                    max_wait: Duration::from_millis(300),
+                },
+                queue_depth: 1024,
+                workers: 1,
+            },
+            max_inflight: 1024,
+            max_inflight_per_conn: 2,
+        },
+    )
+    .expect("start server");
+    let mut greedy = Client::connect(server.addr());
+    let n_req = 20usize;
+    for i in 0..n_req {
+        greedy.send(&req_line(1, ds.row(i % ds.n_examples())));
+    }
+    // While the greedy client's batch is still collecting (300ms window),
+    // a polite client on a fresh connection must still be admitted.
+    let mut polite = Client::connect(server.addr());
+    polite.send(&req_line(1, ds.row(0)));
+    let polite_reply = polite.recv();
+    assert!(
+        !polite_reply.contains("backpressure"),
+        "polite client was backpressured by someone else's pipeline: {polite_reply}"
+    );
+    parse_topk(&polite_reply);
+    let mut served = 0usize;
+    let mut backpressured = 0usize;
+    for _ in 0..n_req {
+        let line = greedy.recv();
+        if line.contains("backpressure") {
+            backpressured += 1;
+        } else {
+            parse_topk(&line);
+            served += 1;
+        }
+    }
+    assert_eq!(served + backpressured, n_req);
+    assert!(served >= 1 && served <= 4, "per-conn cap 2 should admit ~2, got {served}");
+    assert!(backpressured >= n_req - 4, "greedy client was not contained: {backpressured}");
+    server.shutdown();
+}
