@@ -105,12 +105,38 @@ fn main() {
         wide_rows.push((w, v.mean_ns, lv.mean_ns));
     }
 
+    // Strip-sweep kernel microbench: the pinned scalar oracle vs the
+    // dispatched fast path (portable 8-lane sweep, or AVX2/NEON under
+    // `--features simd`). One long strip so the sweep dominates; the
+    // speedup ratio is the gated acceptance metric, absolutes are
+    // record-only.
+    Bench::header("strip-sweep kernel: scalar oracle vs dispatched axpy");
+    let e_strip = 4096usize;
+    let strip: Vec<f32> = (0..e_strip).map(|_| rng.normal()).collect();
+    let mut acc = vec![0.0f32; e_strip];
+    let k_scalar = bench.run("axpy scalar oracle E=4096", || {
+        ltls::kernel::scalar::axpy(&mut acc, std::hint::black_box(&strip), 0.37);
+        acc.len()
+    });
+    let k_fast = bench.run("axpy dispatched    E=4096", || {
+        ltls::kernel::axpy(&mut acc, std::hint::black_box(&strip), 0.37);
+        acc.len()
+    });
+    let kernel_speedup = k_scalar.mean_ns / k_fast.mean_ns;
+    println!(
+        "\naxpy kernel speedup = {kernel_speedup:.2}x over the scalar oracle \
+         (simd intrinsics active: {})",
+        ltls::kernel::simd_active()
+    );
+
     // Machine-readable line for the CI perf gate (tools/bench_check.rs).
     let mut fields = vec![
         ("bench".to_string(), Json::from("decode")),
         ("viterbi_ratio".to_string(), Json::Num(ratio)),
         ("viterbi_small_ns".to_string(), Json::Num(small.mean_ns)),
         ("viterbi_big_ns".to_string(), Json::Num(big.mean_ns)),
+        ("kernel_axpy_speedup".to_string(), Json::Num(kernel_speedup)),
+        ("simd_active".to_string(), Json::from(ltls::kernel::simd_active() as usize)),
     ];
     for (k, alloc, reused) in &pairs {
         fields.push((
@@ -120,21 +146,27 @@ fn main() {
     }
     let mut json = Json::Obj(fields.into_iter().collect());
     if let Json::Obj(map) = &mut json {
-        map.insert(
-            "results".to_string(),
-            Json::Arr(
-                wide_rows
-                    .iter()
-                    .map(|&(w, v_ns, lv_ns)| {
-                        Json::obj(vec![
-                            ("width", Json::from(w as usize)),
-                            ("viterbi_ns", Json::Num(v_ns)),
-                            ("list_viterbi_k5_ns", Json::Num(lv_ns)),
-                        ])
-                    })
-                    .collect(),
-            ),
-        );
+        let mut results: Vec<Json> = wide_rows
+            .iter()
+            .map(|&(w, v_ns, lv_ns)| {
+                Json::obj(vec![
+                    ("width", Json::from(w as usize)),
+                    ("viterbi_ns", Json::Num(v_ns)),
+                    ("list_viterbi_k5_ns", Json::Num(lv_ns)),
+                ])
+            })
+            .collect();
+        // Kernel rows: 0 = scalar oracle, 1 = dispatched fast path
+        // (record-only absolutes; the speedup ratio above is gated).
+        results.push(Json::obj(vec![
+            ("kernel", Json::from(0usize)),
+            ("axpy_ns", Json::Num(k_scalar.mean_ns)),
+        ]));
+        results.push(Json::obj(vec![
+            ("kernel", Json::from(1usize)),
+            ("axpy_ns", Json::Num(k_fast.mean_ns)),
+        ]));
+        map.insert("results".to_string(), Json::Arr(results));
     }
     println!("json: {}", json.dump());
 }

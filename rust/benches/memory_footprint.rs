@@ -20,6 +20,7 @@ use ltls::eval::{precision_at_1, time_predictions};
 use ltls::graph::{Topology, Trellis};
 use ltls::model::{HashedStore, WeightStore};
 use ltls::train::{TrainConfig, Trainer};
+use ltls::util::bench::Bench;
 use ltls::util::json::Json;
 use ltls::util::timer::Timer;
 
@@ -149,6 +150,29 @@ fn main() {
          hashed: {param_ratio:.2}x fewer params, p@1 {p1_hashed:.4} vs naive {p1_naive:.4}"
     );
 
+    // q8 widening-dot kernel microbench: the pinned element-at-a-time
+    // scalar oracle vs the dispatched i8→i16→i32 sweep. The speedup ratio
+    // is gated; absolutes are record-only.
+    let mut kbench = Bench::new();
+    Bench::header("q8 widening-dot kernel: scalar oracle vs dispatched i8_axpy");
+    let e_strip = 4096usize;
+    let qstrip: Vec<i8> = (0..e_strip).map(|i| (((i * 37) % 255) as i32 - 127) as i8).collect();
+    let mut acc = vec![0i32; e_strip];
+    let k_scalar = kbench.run("i8_axpy scalar oracle E=4096", || {
+        ltls::kernel::scalar::i8_axpy(&mut acc, std::hint::black_box(&qstrip), 42);
+        acc.len()
+    });
+    let k_fast = kbench.run("i8_axpy dispatched    E=4096", || {
+        ltls::kernel::i8_axpy(&mut acc, std::hint::black_box(&qstrip), 42);
+        acc.len()
+    });
+    let q8_kernel_speedup = k_scalar.mean_ns / k_fast.mean_ns;
+    println!(
+        "\ni8_axpy kernel speedup = {q8_kernel_speedup:.2}x over the scalar oracle \
+         (simd intrinsics active: {})",
+        ltls::kernel::simd_active()
+    );
+
     let json = Json::obj(vec![
         ("bench", Json::from("memory_footprint")),
         ("classes", Json::from(c)),
@@ -159,6 +183,8 @@ fn main() {
         ("hashed_param_ratio", Json::Num(param_ratio)),
         ("hashed_minus_naive_p1", Json::Num(p1_hashed - p1_naive)),
         ("naive_p1", Json::Num(p1_naive)),
+        ("q8_kernel_speedup", Json::Num(q8_kernel_speedup)),
+        ("simd_active", Json::from(ltls::kernel::simd_active() as usize)),
         (
             "results",
             Json::Arr(
@@ -175,6 +201,18 @@ fn main() {
                             ("predict_us", Json::Num(r.predict_us)),
                         ])
                     })
+                    .chain([
+                        // Kernel rows: 0 = scalar oracle, 1 = dispatched
+                        // fast path (record-only absolutes).
+                        Json::obj(vec![
+                            ("kernel", Json::from(0usize)),
+                            ("i8_axpy_ns", Json::Num(k_scalar.mean_ns)),
+                        ]),
+                        Json::obj(vec![
+                            ("kernel", Json::from(1usize)),
+                            ("i8_axpy_ns", Json::Num(k_fast.mean_ns)),
+                        ]),
+                    ])
                     .collect(),
             ),
         ),

@@ -195,7 +195,7 @@ pub(crate) fn batched_predict_into<T: crate::graph::Topology, S: crate::model::W
             }
         })
         .collect();
-    model.model.edge_scores_batch(&rows, &mut scratch.batch_gather, &mut scratch.batch_h);
+    model.model.edge_scores_batch(&rows, &mut scratch.score, &mut scratch.batch_h);
     for (i, r) in batch.iter().enumerate() {
         if !all_scorable && !scorable(r) {
             out.push(Response { topk: Vec::new() });

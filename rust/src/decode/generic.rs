@@ -71,22 +71,29 @@ pub fn viterbi_generic<T: Topology>(t: &T, h: &[f32], ws: &mut DecodeWorkspace) 
 
     for j in 2..=b {
         pv *= wu;
+        // Vectorized max+argmax: instead of, per target state, scanning W
+        // strided predecessor edges, fold one predecessor at a time across
+        // its contiguous target row `h[row..row + W]`
+        // ([`Topology::transition_row`] layout contract). Folding
+        // predecessors in ascending order with a strict `>` reproduces the
+        // scalar loop's tie-break (earliest predecessor wins) exactly.
         ws.wscore_next.clear();
+        ws.wscore_next.resize(w, f32::NEG_INFINITY);
         ws.wcode_next.clear();
-        for ts in 0..w {
-            // Max over predecessors; strict > keeps the earliest state on
-            // ties (the width-2 kernel's tie-break).
-            let mut bs = f32::NEG_INFINITY;
-            let mut bc = 0u64;
-            for a in 0..w {
-                let v = ws.wscore[a] + h[t.transition(j, a as u32, ts as u32) as usize];
-                if v > bs {
-                    bs = v;
-                    bc = ws.wcode[a];
-                }
-            }
-            ws.wscore_next.push(bs);
-            ws.wcode_next.push(bc + ts as u64 * pv);
+        ws.wcode_next.resize(w, 0);
+        for a in 0..w {
+            let row = t.transition_row(j, a as u32) as usize;
+            debug_assert_eq!(t.transition(j, a as u32, (w - 1) as u32) as usize, row + w - 1);
+            crate::kernel::viterbi_fold(
+                &mut ws.wscore_next,
+                &mut ws.wcode_next,
+                ws.wscore[a],
+                ws.wcode[a],
+                &h[row..row + w],
+            );
+        }
+        for (ts, c) in ws.wcode_next.iter_mut().enumerate() {
+            *c += ts as u64 * pv;
         }
         std::mem::swap(&mut ws.wscore, &mut ws.wscore_next);
         std::mem::swap(&mut ws.wcode, &mut ws.wcode_next);

@@ -35,7 +35,7 @@ pub use forward_backward::{
     log_partition, log_partition_ws, posterior_marginals, posterior_marginals_into,
 };
 pub use list_viterbi::{list_viterbi, list_viterbi_into};
-pub use score::{score_label, score_labels};
+pub use score::{score_label, score_labels, score_labels_into};
 pub use viterbi::{viterbi, viterbi_into, viterbi_ws};
 
 /// A decoded prediction: label (canonical path id) and its path score.

@@ -14,10 +14,28 @@ pub fn score_labels<T: Topology>(t: &T, h: &[f32], labels: &[u64]) -> Vec<f32> {
     labels.iter().map(|&l| score_label(t, h, l)).collect()
 }
 
+/// Out-parameter twin of [`score_labels`]: resolves each label's edge set
+/// through the caller-owned `edges` scratch, so repeated calls perform no
+/// steady-state allocation (the per-call pattern of the serving loop).
+pub fn score_labels_into<T: Topology>(
+    t: &T,
+    h: &[f32],
+    labels: &[u64],
+    edges: &mut Vec<u32>,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    for &l in labels {
+        t.edges_of_label_into(l, edges);
+        out.push(edges.iter().map(|&e| h[e as usize]).sum());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::pathmat::PathMatrix;
+    use crate::graph::Trellis;
     use crate::util::rng::Rng;
 
     #[test]
@@ -44,5 +62,22 @@ mod tests {
         for (i, &l) in labels.iter().enumerate() {
             assert_eq!(batch[i], score_label(&t, &h, l));
         }
+    }
+
+    /// The `_into` variant is bit-identical to the allocating one and
+    /// reuses the caller's scratch.
+    #[test]
+    fn into_variant_matches_allocating() {
+        let mut rng = Rng::new(33);
+        let t = Trellis::new(12294);
+        let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+        let labels = [0u64, 1, 4095, 4096, 12293];
+        let want = score_labels(&t, &h, &labels);
+        let (mut edges, mut got) = (Vec::new(), Vec::new());
+        score_labels_into(&t, &h, &labels, &mut edges, &mut got);
+        assert_eq!(got, want);
+        // Second call reuses capacity; results stay identical.
+        score_labels_into(&t, &h, &labels, &mut edges, &mut got);
+        assert_eq!(got, want);
     }
 }

@@ -67,24 +67,24 @@ pub(crate) fn viterbi_binary(t: &Trellis, h: &[f32]) -> Scored {
     }
 
     for j in 2..=b {
-        let e00 = h[t.transition_edge(j, 0, 0) as usize];
-        let e01 = h[t.transition_edge(j, 0, 1) as usize];
-        let e10 = h[t.transition_edge(j, 1, 0) as usize];
-        let e11 = h[t.transition_edge(j, 1, 1) as usize];
-        // To state 0.
-        let (s0, c0) = if score[0] + e00 >= score[1] + e10 {
-            (score[0] + e00, code[0])
-        } else {
-            (score[1] + e10, code[1])
-        };
-        // To state 1.
-        let (s1, c1) = if score[0] + e01 >= score[1] + e11 {
-            (score[0] + e01, code[0] | (1 << (j - 1)))
-        } else {
-            (score[1] + e11, code[1] | (1 << (j - 1)))
-        };
-        score = [s0, s1];
-        code = [c0, c1];
+        // The gap's four edges are contiguous and target-ordered
+        // ([`Topology::transition_row`] layout contract): one 4-wide load
+        // instead of four strided gathers. tr = [e00, e01, e10, e11].
+        let base = t.transition_edge(j, 0, 0) as usize;
+        debug_assert_eq!(t.transition_edge(j, 1, 1) as usize, base + 3);
+        let tr: &[f32; 4] = h[base..base + 4].try_into().unwrap();
+        // Branchless selects: `>=` keeps predecessor 0 on ties (the
+        // smaller-label tie-break).
+        let (v00, v01, v10, v11) =
+            (score[0] + tr[0], score[0] + tr[1], score[1] + tr[2], score[1] + tr[3]);
+        let take0 = v00 >= v10;
+        let take1 = v01 >= v11;
+        let hi = 1u64 << (j - 1);
+        score = [if take0 { v00 } else { v10 }, if take1 { v01 } else { v11 }];
+        code = [
+            if take0 { code[0] } else { code[1] },
+            if take1 { code[0] } else { code[1] } | hi,
+        ];
 
         // Early exit leaving (step j, state 1) == exit bit j-1.
         if exit_rank < t.exit_bits().len() && t.exit_bits()[exit_rank] == j - 1 {

@@ -1,6 +1,7 @@
 //! Reusable decode/predict buffers (see module docs in [`super`]).
 
 use crate::decode::Scored;
+use crate::model::ScoreScratch;
 
 /// Buffers for the trellis dynamic-programming decoders.
 ///
@@ -106,9 +107,9 @@ pub struct PredictScratch {
     /// Batched edge scores (`B × E`, row-major), written by
     /// [`crate::model::LinearEdgeModel::edge_scores_batch`].
     pub batch_h: Vec<f32>,
-    /// Gather buffer `(feature, row, value)` for the batched scorer's
-    /// one-sweep-per-feature-strip schedule.
-    pub batch_gather: Vec<(u32, u32, f32)>,
+    /// Scoring-kernel scratch: the batched scorer's `(feature, row,
+    /// value)` gather buffer and the q8 backend's typed i32 accumulator.
+    pub score: ScoreScratch,
 }
 
 impl PredictScratch {
@@ -143,8 +144,8 @@ pub struct TrainScratch {
     pub neg_only: Vec<u32>,
     /// Batched edge scores (`B × E`, row-major) for the mini-batch path.
     pub batch_h: Vec<f32>,
-    /// Gather buffer `(feature, row, value)` for the batched scorer.
-    pub batch_gather: Vec<(u32, u32, f32)>,
+    /// Scoring-kernel scratch (gather triples + q8 i32 accumulator).
+    pub score: ScoreScratch,
 }
 
 impl TrainScratch {

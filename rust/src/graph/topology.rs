@@ -93,6 +93,24 @@ pub trait Topology: Clone + Send + Sync + std::fmt::Debug + 'static {
     /// Edge index: (step j−1, a) → (step j, t), for `2 ≤ j ≤ steps`.
     fn transition(&self, j: u32, a: u32, t: u32) -> u32;
 
+    /// Edge index of `transition(j, a, 0)`, with the layout contract that
+    /// predecessor `a`'s `width()` outgoing transition edges at step `j`
+    /// are contiguous and target-ordered:
+    /// `transition(j, a, t) == transition_row(j, a) + t` for all `t`.
+    ///
+    /// Both concrete topologies lay edges out this way (`Trellis`:
+    /// `2 + 4(j−2) + 2a + t`; `WideTrellis`: `W + W²(j−2) + W·a + t`), and
+    /// the vectorized Viterbi inner step ([`crate::kernel::viterbi_fold`])
+    /// relies on it to sweep one predecessor's whole target row as a
+    /// contiguous `&h[row..row + W]` slice. Implementations with a
+    /// non-contiguous layout must not override this without also avoiding
+    /// the row-sliced decoders; the generic decoder debug-asserts the
+    /// contract on every row.
+    #[inline]
+    fn transition_row(&self, j: u32, a: u32) -> u32 {
+        self.transition(j, a, 0)
+    }
+
     /// Edge index: (step b, state s) → auxiliary.
     fn aux(&self, s: u32) -> u32;
 
@@ -302,6 +320,24 @@ mod tests {
                 next += g.path_count();
             }
             assert_eq!(next, c, "C={c}");
+        }
+    }
+
+    /// Transition rows are contiguous and target-ordered:
+    /// `transition(j, a, t) == transition_row(j, a) + t` (the layout
+    /// contract the row-sliced Viterbi kernels rely on).
+    #[test]
+    fn transition_rows_are_contiguous() {
+        for c in [4u64, 22, 105, 1000, 12294] {
+            let t = Trellis::new(c);
+            for j in 2..=Topology::steps(&t) {
+                for a in 0..2u32 {
+                    let row = t.transition_row(j, a);
+                    for s in 0..2u32 {
+                        assert_eq!(t.transition(j, a, s), row + s, "C={c} j={j} a={a}");
+                    }
+                }
+            }
         }
     }
 

@@ -1,0 +1,244 @@
+//! Lane-width-generic scoring kernels for the edge-score hot path.
+//!
+//! LTLS serving cost is dominated by the strip sweep: each active feature
+//! adds `v · sign` times one contiguous `E`-length weight strip into the
+//! edge-score accumulator (`h += sv * w[strip]`), and `Q8Store` does the
+//! same in i8/i32. W-LTLS widens the trellis so `E` grows as `W²·log C /
+//! log W` — the sweep, not the Viterbi DP, is the bottleneck. This module
+//! hosts that sweep exactly once, behind three interchangeable
+//! implementations:
+//!
+//! * [`scalar`] — the pinned **bit-identity oracle**: the pre-vectorization
+//!   element-at-a-time loops, with `std::hint::black_box` on every element
+//!   so release-mode LLVM cannot autovectorize them away. Benches measure
+//!   SIMD speedups against this, and `rust/tests/kernel_parity.rs` pins
+//!   every other path bit-identical to it.
+//! * [`sweep`] — portable 8-lane sweeps over fixed-size array chunks,
+//!   written so LLVM reliably emits AVX2/NEON vector code on its own.
+//!   This is the default fast path (no feature flag needed).
+//! * [`simd`] — hand-written `core::arch` intrinsics behind the `simd`
+//!   cargo feature: AVX2 on x86_64 (runtime-detected, falls back to
+//!   [`sweep`] on older CPUs) and NEON on aarch64.
+//!
+//! **Bit-identity contract.** Every f32 kernel computes, per element,
+//! `out[j] + sv * strip[j]` — one f32 multiply then one f32 add, never an
+//! FMA, never a reassociated horizontal sum. The element-wise axpy has no
+//! reduction, so chunking or vectorizing it cannot change results: all
+//! three implementations are bit-identical on every input, including NaN
+//! and infinity propagation. The i32 kernels are exact integer arithmetic
+//! (products of i8-range values fit i16; accumulation wraps identically).
+//! This is why the kernels can sit *under* `StripCodec` without weakening
+//! the batch≡single and engine-parity guarantees elsewhere in the repo.
+//!
+//! The dispatchers in this module try [`simd`] first (a no-op returning
+//! `false` when the feature is off or the CPU lacks AVX2) and fall back to
+//! [`sweep`].
+
+pub mod scalar;
+pub mod simd;
+pub mod sweep;
+
+/// `out[j] += sv * strip[j]` over the paired prefix — the f32 strip sweep.
+///
+/// Bit-identical to [`scalar::axpy`] on every input (see module docs).
+#[inline]
+pub fn axpy(out: &mut [f32], strip: &[f32], sv: f32) {
+    debug_assert_eq!(out.len(), strip.len());
+    if simd::axpy(out, strip, sv) {
+        return;
+    }
+    sweep::axpy(out, strip, sv);
+}
+
+/// `acc[j] += qv * strip[j] as i32` — the widening i8→i32 strip sweep used
+/// by `Q8Store`. Exact: `|qv| ≤ 127` and `|strip[j]| ≤ 127`, so every
+/// product fits i16 and the i32 accumulation wraps identically to
+/// [`scalar::i8_axpy`].
+#[inline]
+pub fn i8_axpy(acc: &mut [i32], strip: &[i8], qv: i32) {
+    debug_assert_eq!(acc.len(), strip.len());
+    debug_assert!((-127..=127).contains(&qv));
+    if simd::i8_axpy(acc, strip, qv) {
+        return;
+    }
+    sweep::i8_axpy(acc, strip, qv);
+}
+
+/// Dequantize accumulated i32 dots into final edge scores:
+/// `out[j] = bias[j] + (scale[j] * sx) * acc[j] as f32`.
+///
+/// The expression shape (scale·sx first, then the widened product) is part
+/// of the `Q8Store` format contract — changing it would change served
+/// scores. Element-wise with no reduction, so the vectorized form is
+/// bit-identical to [`scalar::q8_finish`].
+#[inline]
+pub fn q8_finish(out: &mut [f32], acc: &[i32], bias: &[f32], scale: &[f32], sx: f32) {
+    debug_assert_eq!(out.len(), acc.len());
+    debug_assert_eq!(out.len(), bias.len());
+    debug_assert_eq!(out.len(), scale.len());
+    sweep::q8_finish(out, acc, bias, scale, sx);
+}
+
+/// One Viterbi relaxation row: for each target state `t`,
+/// `if sa + row[t] > score[t] { score[t] = sa + row[t]; code[t] = ca }`.
+///
+/// `row` is the contiguous `W`-edge slice `h[transition(j, a, 0..W)]`
+/// (see `Topology::transition_row`), `sa`/`ca` the predecessor's running
+/// score and path code. Strict `>` preserves the decoder's tie-breaking
+/// (first/smallest predecessor wins), so folding predecessors in ascending
+/// order reproduces the original scalar max+argmax bit-for-bit. Written as
+/// branchless selects so LLVM vectorizes the compare/blend.
+#[inline]
+pub fn viterbi_fold(score: &mut [f32], code: &mut [u64], sa: f32, ca: u64, row: &[f32]) {
+    debug_assert_eq!(score.len(), code.len());
+    debug_assert_eq!(score.len(), row.len());
+    for ((s, c), &e) in score.iter_mut().zip(code.iter_mut()).zip(row) {
+        let v = sa + e;
+        let take = v > *s;
+        *s = if take { v } else { *s };
+        *c = if take { ca } else { *c };
+    }
+}
+
+/// Hint the next strip into cache while the current one is being swept.
+/// Touches the first line of `slice`; a no-op on empty slices and on
+/// targets without a stable prefetch intrinsic.
+#[inline]
+pub fn prefetch<T>(slice: &[T]) {
+    if slice.is_empty() {
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch is a pure cache hint — it cannot fault, and the
+    // pointer comes from a live slice. `_mm_prefetch` needs only SSE,
+    // which is part of the x86_64 baseline.
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(
+            slice.as_ptr() as *const i8,
+        );
+    }
+}
+
+/// Whether the hand-written intrinsics path is compiled in *and* usable on
+/// this CPU (benches report it so recorded numbers are attributable).
+#[inline]
+pub fn simd_active() -> bool {
+    simd::active()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Lengths that exercise full lanes, tails of every residue, and the
+    /// degenerate empty/single cases.
+    const LENS: [usize; 13] = [0, 1, 2, 3, 7, 8, 9, 15, 16, 17, 31, 33, 77];
+
+    #[test]
+    fn axpy_matches_scalar_bitwise() {
+        let mut rng = Rng::new(61);
+        for &n in &LENS {
+            for trial in 0..4 {
+                let strip: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+                let base: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+                let sv = rng.normal();
+                let mut fast = base.clone();
+                let mut slow = base.clone();
+                axpy(&mut fast, &strip, sv);
+                scalar::axpy(&mut slow, &strip, sv);
+                for (j, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                    assert_eq!(
+                        f.to_bits(),
+                        s.to_bits(),
+                        "n={n} trial={trial} j={j}: {f} vs {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i8_axpy_matches_scalar_exactly() {
+        let mut rng = Rng::new(62);
+        for &n in &LENS {
+            for qv in [-127i32, -3, 1, 42, 127] {
+                let strip: Vec<i8> = (0..n).map(|_| (rng.index(255) as i32 - 127) as i8).collect();
+                let base: Vec<i32> = (0..n).map(|_| rng.index(1000) as i32 - 500).collect();
+                let mut fast = base.clone();
+                let mut slow = base;
+                i8_axpy(&mut fast, &strip, qv);
+                scalar::i8_axpy(&mut slow, &strip, qv);
+                assert_eq!(fast, slow, "n={n} qv={qv}");
+            }
+        }
+    }
+
+    #[test]
+    fn q8_finish_matches_scalar_bitwise() {
+        let mut rng = Rng::new(63);
+        for &n in &LENS {
+            let acc: Vec<i32> = (0..n).map(|_| rng.index(60_000) as i32 - 30_000).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let scale: Vec<f32> = (0..n).map(|_| rng.normal().abs() * 0.01).collect();
+            let sx = rng.normal().abs() * 0.1;
+            let mut fast = vec![0.0f32; n];
+            let mut slow = vec![0.0f32; n];
+            q8_finish(&mut fast, &acc, &bias, &scale, sx);
+            scalar::q8_finish(&mut slow, &acc, &bias, &scale, sx);
+            for (f, s) in fast.iter().zip(&slow) {
+                assert_eq!(f.to_bits(), s.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn viterbi_fold_matches_naive_max_argmax() {
+        let mut rng = Rng::new(64);
+        for &w in &[2usize, 3, 4, 8, 16, 17] {
+            // Fold a few predecessors in ascending order and compare with
+            // the straightforward per-target max+argmax with strict >.
+            let preds: Vec<(f32, u64)> =
+                (0..5).map(|a| (rng.normal(), a as u64 * 11)).collect();
+            let rows: Vec<Vec<f32>> =
+                (0..5).map(|_| (0..w).map(|_| rng.normal()).collect()).collect();
+
+            let mut score = vec![f32::NEG_INFINITY; w];
+            let mut code = vec![0u64; w];
+            for (a, &(sa, ca)) in preds.iter().enumerate() {
+                viterbi_fold(&mut score, &mut code, sa, ca, &rows[a]);
+            }
+
+            for t in 0..w {
+                let mut bs = f32::NEG_INFINITY;
+                let mut bc = 0u64;
+                for (a, &(sa, ca)) in preds.iter().enumerate() {
+                    let v = sa + rows[a][t];
+                    if v > bs {
+                        bs = v;
+                        bc = ca;
+                    }
+                }
+                assert_eq!(score[t].to_bits(), bs.to_bits(), "w={w} t={t}");
+                assert_eq!(code[t], bc, "w={w} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_is_safe_on_any_slice() {
+        prefetch::<f32>(&[]);
+        prefetch(&[1.0f32, 2.0]);
+        prefetch(&[0i8; 3]);
+    }
+
+    #[test]
+    fn simd_active_is_consistent_with_feature() {
+        // Without the feature this must be false; with it, whatever the
+        // CPU supports — either way it must not panic.
+        let active = simd_active();
+        if cfg!(not(feature = "simd")) {
+            assert!(!active);
+        }
+    }
+}

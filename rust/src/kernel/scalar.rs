@@ -1,0 +1,45 @@
+//! Pinned scalar oracles for the strip-sweep kernels.
+//!
+//! These are the pre-vectorization element-at-a-time loops, kept verbatim
+//! as the bit-identity reference: `rust/tests/kernel_parity.rs` asserts the
+//! portable-sweep and intrinsics paths match them bit-for-bit (f32) /
+//! exactly (i32), and the decode/memory benches report SIMD speedup
+//! relative to them.
+//!
+//! Every element passes through [`std::hint::black_box`] so release-mode
+//! LLVM cannot autovectorize the oracle — otherwise the "scalar" baseline
+//! would silently become the same vector code it is meant to calibrate.
+//! `black_box` is a value identity: it never changes bits, only blocks the
+//! optimizer from reasoning across it.
+
+use std::hint::black_box;
+
+/// `out[j] += sv * strip[j]`, one element at a time. The per-element
+/// expression (f32 multiply, then f32 add — no FMA) defines the result
+/// every fast path must reproduce bit-for-bit.
+pub fn axpy(out: &mut [f32], strip: &[f32], sv: f32) {
+    debug_assert_eq!(out.len(), strip.len());
+    for (o, &w) in out.iter_mut().zip(strip) {
+        *o = black_box(*o + sv * w);
+    }
+}
+
+/// `acc[j] += qv * strip[j] as i32`, one element at a time, with wrapping
+/// i32 accumulation (matching the vector adds, which always wrap).
+pub fn i8_axpy(acc: &mut [i32], strip: &[i8], qv: i32) {
+    debug_assert_eq!(acc.len(), strip.len());
+    for (a, &q) in acc.iter_mut().zip(strip) {
+        *a = black_box(a.wrapping_add(qv * q as i32));
+    }
+}
+
+/// `out[j] = bias[j] + (scale[j] * sx) * acc[j] as f32`, one element at a
+/// time. The expression shape is the `Q8Store` dequantization contract.
+pub fn q8_finish(out: &mut [f32], acc: &[i32], bias: &[f32], scale: &[f32], sx: f32) {
+    debug_assert_eq!(out.len(), acc.len());
+    debug_assert_eq!(out.len(), bias.len());
+    debug_assert_eq!(out.len(), scale.len());
+    for (((o, &a), &b), &s) in out.iter_mut().zip(acc).zip(bias).zip(scale) {
+        *o = black_box(b + (s * sx) * a as f32);
+    }
+}

@@ -1,0 +1,186 @@
+//! Hand-written `core::arch` intrinsics sweeps, behind the `simd` feature.
+//!
+//! Each entry point returns `bool`: `true` means the intrinsics path ran
+//! (including its scalar tail), `false` means the caller must fall back to
+//! the portable sweep. This keeps the dispatcher in [`super`] free of
+//! `cfg` ladders and lets the x86_64 path bail out at runtime on CPUs
+//! without AVX2.
+//!
+//! Bit-identity (see module docs in [`super`]): every vector lane computes
+//! the oracle's `o + sv * w` as a separate multiply then add —
+//! `_mm256_mul_ps`/`_mm256_add_ps` and `vmulq_f32`/`vaddq_f32`, never an
+//! FMA — and the i8 path widens i8→i16, multiplies exactly in i16 (both
+//! operands are in `[-127, 127]`, so products fit), widens to i32 and adds
+//! with the same wrapping semantics as the scalar loop.
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod imp {
+    use core::arch::x86_64::*;
+
+    /// AVX2 f32 strip sweep; `false` (no-op) if the CPU lacks AVX2.
+    #[inline]
+    pub fn axpy(out: &mut [f32], strip: &[f32], sv: f32) -> bool {
+        if !is_x86_feature_detected!("avx2") {
+            return false;
+        }
+        // SAFETY: AVX2 support was just verified at runtime.
+        unsafe { axpy_avx2(out, strip, sv) };
+        true
+    }
+
+    /// AVX2 widening i8 strip sweep; `false` (no-op) if the CPU lacks AVX2.
+    #[inline]
+    pub fn i8_axpy(acc: &mut [i32], strip: &[i8], qv: i32) -> bool {
+        if !is_x86_feature_detected!("avx2") {
+            return false;
+        }
+        // SAFETY: AVX2 support was just verified at runtime.
+        unsafe { i8_axpy_avx2(acc, strip, qv) };
+        true
+    }
+
+    #[inline]
+    pub fn active() -> bool {
+        is_x86_feature_detected!("avx2")
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_avx2(out: &mut [f32], strip: &[f32], sv: f32) {
+        let n = out.len().min(strip.len());
+        let vs = _mm256_set1_ps(sv);
+        let mut i = 0;
+        while i + 8 <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            let w = _mm256_loadu_ps(strip.as_ptr().add(i));
+            // o + (sv * w): separate mul and add, matching the scalar
+            // oracle's operation order bit-for-bit (no FMA).
+            let r = _mm256_add_ps(o, _mm256_mul_ps(vs, w));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            let o = out.get_unchecked_mut(i);
+            *o += sv * *strip.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn i8_axpy_avx2(acc: &mut [i32], strip: &[i8], qv: i32) {
+        let n = acc.len().min(strip.len());
+        let vq = _mm256_set1_epi16(qv as i16);
+        let mut i = 0;
+        while i + 16 <= n {
+            // 16 × i8 → 16 × i16; multiply exactly in i16 (|qv|, |w| ≤ 127
+            // so |product| ≤ 16129 < 2^15); widen halves to i32 and add.
+            let q8 = _mm_loadu_si128(strip.as_ptr().add(i) as *const __m128i);
+            let p16 = _mm256_mullo_epi16(_mm256_cvtepi8_epi16(q8), vq);
+            let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(p16));
+            let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(p16));
+            let a0 = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let a1 = _mm256_loadu_si256(acc.as_ptr().add(i + 8) as *const __m256i);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut __m256i, _mm256_add_epi32(a0, lo));
+            _mm256_storeu_si256(
+                acc.as_mut_ptr().add(i + 8) as *mut __m256i,
+                _mm256_add_epi32(a1, hi),
+            );
+            i += 16;
+        }
+        while i < n {
+            let a = acc.get_unchecked_mut(i);
+            *a = a.wrapping_add(qv * *strip.get_unchecked(i) as i32);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod imp {
+    use core::arch::aarch64::*;
+
+    /// NEON f32 strip sweep (NEON is baseline on aarch64 — always taken).
+    #[inline]
+    pub fn axpy(out: &mut [f32], strip: &[f32], sv: f32) -> bool {
+        // SAFETY: NEON is mandatory in the aarch64 baseline target.
+        unsafe { axpy_neon(out, strip, sv) };
+        true
+    }
+
+    /// NEON widening i8 strip sweep.
+    #[inline]
+    pub fn i8_axpy(acc: &mut [i32], strip: &[i8], qv: i32) -> bool {
+        // SAFETY: NEON is mandatory in the aarch64 baseline target.
+        unsafe { i8_axpy_neon(acc, strip, qv) };
+        true
+    }
+
+    #[inline]
+    pub fn active() -> bool {
+        true
+    }
+
+    unsafe fn axpy_neon(out: &mut [f32], strip: &[f32], sv: f32) {
+        let n = out.len().min(strip.len());
+        let vs = vdupq_n_f32(sv);
+        let mut i = 0;
+        while i + 4 <= n {
+            let o = vld1q_f32(out.as_ptr().add(i));
+            let w = vld1q_f32(strip.as_ptr().add(i));
+            // vmulq + vaddq, NOT vfmaq: a fused multiply-add would break
+            // bit-identity with the scalar oracle.
+            let r = vaddq_f32(o, vmulq_f32(vs, w));
+            vst1q_f32(out.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        while i < n {
+            let o = out.get_unchecked_mut(i);
+            *o += sv * *strip.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    unsafe fn i8_axpy_neon(acc: &mut [i32], strip: &[i8], qv: i32) {
+        let n = acc.len().min(strip.len());
+        let vq = vdupq_n_s16(qv as i16);
+        let mut i = 0;
+        while i + 8 <= n {
+            // 8 × i8 → 8 × i16; exact i16 multiply (|qv|, |w| ≤ 127);
+            // widen halves to i32 and add.
+            let q16 = vmovl_s8(vld1_s8(strip.as_ptr().add(i)));
+            let p16 = vmulq_s16(q16, vq);
+            let lo = vmovl_s16(vget_low_s16(p16));
+            let hi = vmovl_s16(vget_high_s16(p16));
+            let a0 = vld1q_s32(acc.as_ptr().add(i));
+            let a1 = vld1q_s32(acc.as_ptr().add(i + 4));
+            vst1q_s32(acc.as_mut_ptr().add(i), vaddq_s32(a0, lo));
+            vst1q_s32(acc.as_mut_ptr().add(i + 4), vaddq_s32(a1, hi));
+            i += 8;
+        }
+        while i < n {
+            let a = acc.get_unchecked_mut(i);
+            *a = a.wrapping_add(qv * *strip.get_unchecked(i) as i32);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod imp {
+    /// Feature off (or unsupported arch): never handles the sweep.
+    #[inline]
+    pub fn axpy(_out: &mut [f32], _strip: &[f32], _sv: f32) -> bool {
+        false
+    }
+
+    #[inline]
+    pub fn i8_axpy(_acc: &mut [i32], _strip: &[i8], _qv: i32) -> bool {
+        false
+    }
+
+    #[inline]
+    pub fn active() -> bool {
+        false
+    }
+}
+
+pub use imp::{active, axpy, i8_axpy};

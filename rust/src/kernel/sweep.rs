@@ -1,0 +1,60 @@
+//! Portable lane-chunked sweeps — the default fast path.
+//!
+//! The loops below process fixed-size array chunks (`&[f32; 8]` /
+//! `&[i8; 8]`) obtained via `chunks_exact`, the shape LLVM's loop
+//! vectorizer recognizes unconditionally: on x86_64 it emits AVX/AVX2 when
+//! the target allows, on aarch64 NEON, with a scalar remainder for tails.
+//! No feature flags, no `unsafe`, and — because the per-element expression
+//! is exactly the oracle's mul-then-add with no reduction — bit-identical
+//! output to [`super::scalar`] regardless of how wide the emitted vectors
+//! are.
+
+/// Lane width of the chunked loops (elements per chunk, not necessarily
+/// the hardware vector width — LLVM may split or fuse chunks).
+pub const LANES: usize = 8;
+
+/// `out[j] += sv * strip[j]` over the paired prefix, 8 lanes per chunk.
+pub fn axpy(out: &mut [f32], strip: &[f32], sv: f32) {
+    debug_assert_eq!(out.len(), strip.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut sc = strip.chunks_exact(LANES);
+    for (o, s) in (&mut oc).zip(&mut sc) {
+        let o: &mut [f32; LANES] = o.try_into().unwrap();
+        let s: &[f32; LANES] = s.try_into().unwrap();
+        for l in 0..LANES {
+            o[l] += sv * s[l];
+        }
+    }
+    for (o, &w) in oc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *o += sv * w;
+    }
+}
+
+/// `acc[j] += qv * strip[j] as i32`, 8 lanes per chunk, wrapping adds.
+pub fn i8_axpy(acc: &mut [i32], strip: &[i8], qv: i32) {
+    debug_assert_eq!(acc.len(), strip.len());
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut sc = strip.chunks_exact(LANES);
+    for (a, s) in (&mut ac).zip(&mut sc) {
+        let a: &mut [i32; LANES] = a.try_into().unwrap();
+        let s: &[i8; LANES] = s.try_into().unwrap();
+        for l in 0..LANES {
+            a[l] = a[l].wrapping_add(qv * s[l] as i32);
+        }
+    }
+    for (a, &q) in ac.into_remainder().iter_mut().zip(sc.remainder()) {
+        *a = a.wrapping_add(qv * q as i32);
+    }
+}
+
+/// `out[j] = bias[j] + (scale[j] * sx) * acc[j] as f32` — element-wise
+/// dequantization; the zip chain vectorizes cleanly without manual
+/// chunking.
+pub fn q8_finish(out: &mut [f32], acc: &[i32], bias: &[f32], scale: &[f32], sx: f32) {
+    debug_assert_eq!(out.len(), acc.len());
+    debug_assert_eq!(out.len(), bias.len());
+    debug_assert_eq!(out.len(), scale.len());
+    for (((o, &a), &b), &s) in out.iter_mut().zip(acc).zip(bias).zip(scale) {
+        *o = b + (s * sx) * a as f32;
+    }
+}

@@ -59,6 +59,7 @@ pub mod decode;
 pub mod engine;
 pub mod eval;
 pub mod graph;
+pub mod kernel;
 pub mod loss;
 pub mod model;
 pub mod runtime;

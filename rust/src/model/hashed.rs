@@ -15,8 +15,8 @@
 
 use super::mmap::F32Buf;
 use super::store::{
-    codec_edge_scores, codec_edge_scores_batch, Backend, StripCodec, TrainableStore, WeightBlock,
-    WeightStore,
+    codec_edge_scores, codec_edge_scores_batch, Backend, ScoreScratch, StripCodec, TrainableStore,
+    WeightBlock, WeightStore,
 };
 use crate::sparse::SparseVec;
 
@@ -115,22 +115,17 @@ impl WeightStore for HashedStore {
     fn bias(&self) -> &[f32] {
         &self.bias
     }
-    fn edge_scores(&self, x: SparseVec, out: &mut Vec<f32>) {
+    fn edge_scores(&self, x: SparseVec, _scratch: &mut ScoreScratch, out: &mut Vec<f32>) {
         codec_edge_scores(&self.w, &self.bias, self.n_edges, self.codec(), x, out);
     }
-    fn edge_scores_batch(
-        &self,
-        rows: &[SparseVec],
-        scratch: &mut Vec<(u32, u32, f32)>,
-        out: &mut Vec<f32>,
-    ) {
+    fn edge_scores_batch(&self, rows: &[SparseVec], scratch: &mut ScoreScratch, out: &mut Vec<f32>) {
         codec_edge_scores_batch(
             &self.w,
             &self.bias,
             self.n_edges,
             self.codec(),
             rows,
-            scratch,
+            &mut scratch.gather,
             out,
         );
     }
@@ -267,7 +262,7 @@ mod tests {
         let x = SparseVec::new(&idx, &val);
         m.update_edge(2, x, 0.5);
         let mut h = Vec::new();
-        WeightStore::edge_scores(&m, x, &mut h);
+        WeightStore::edge_scores(&m, x, &mut ScoreScratch::new(), &mut h);
         // Manual: h_e = bias_e + Σ_i sign_i·v_i · w[bucket_i·E + e].
         let codec = m.codec();
         let mut want = m.bias.clone();
@@ -293,11 +288,11 @@ mod tests {
         m.update_edge(1, xa, 0.3);
         m.update_edges(&[0, 2], &[5], xb, -0.7);
         let rows = [xa, xb, SparseVec::new(&[], &[])];
-        let (mut gather, mut batch) = (Vec::new(), Vec::new());
-        WeightStore::edge_scores_batch(&m, &rows, &mut gather, &mut batch);
+        let (mut scratch, mut batch) = (ScoreScratch::new(), Vec::new());
+        WeightStore::edge_scores_batch(&m, &rows, &mut scratch, &mut batch);
         for (r, x) in rows.iter().enumerate() {
             let mut single = Vec::new();
-            WeightStore::edge_scores(&m, *x, &mut single);
+            WeightStore::edge_scores(&m, *x, &mut scratch, &mut single);
             assert_eq!(&batch[r * 6..(r + 1) * 6], single.as_slice(), "row {r}");
         }
     }

@@ -19,8 +19,8 @@
 
 use super::mmap::F32Buf;
 use super::store::{
-    codec_edge_scores, codec_edge_scores_batch, Backend, IdentityCodec, TrainableStore,
-    WeightBlock, WeightStore,
+    codec_edge_scores, codec_edge_scores_batch, Backend, IdentityCodec, ScoreScratch,
+    TrainableStore, WeightBlock, WeightStore,
 };
 use crate::sparse::SparseVec;
 
@@ -155,16 +155,11 @@ impl WeightStore for DenseStore {
     fn bias(&self) -> &[f32] {
         &self.bias
     }
-    fn edge_scores(&self, x: SparseVec, out: &mut Vec<f32>) {
+    fn edge_scores(&self, x: SparseVec, _scratch: &mut ScoreScratch, out: &mut Vec<f32>) {
         DenseStore::edge_scores(self, x, out);
     }
-    fn edge_scores_batch(
-        &self,
-        rows: &[SparseVec],
-        scratch: &mut Vec<(u32, u32, f32)>,
-        out: &mut Vec<f32>,
-    ) {
-        DenseStore::edge_scores_batch(self, rows, scratch, out);
+    fn edge_scores_batch(&self, rows: &[SparseVec], scratch: &mut ScoreScratch, out: &mut Vec<f32>) {
+        DenseStore::edge_scores_batch(self, rows, &mut scratch.gather, out);
     }
     fn param_count(&self) -> usize {
         DenseStore::param_count(self)
@@ -328,7 +323,7 @@ mod tests {
         m.update_edge(2, x, 0.5);
         let mut a = Vec::new();
         let mut b = Vec::new();
-        WeightStore::edge_scores(&m, x, &mut a);
+        WeightStore::edge_scores(&m, x, &mut ScoreScratch::new(), &mut a);
         m.edge_scores(x, &mut b);
         assert_eq!(a, b);
         assert_eq!(WeightStore::n_edges(&m), 3);

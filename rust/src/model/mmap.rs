@@ -10,7 +10,9 @@
 //! processes serving the same file.
 //!
 //! [`F32Buf`]/[`I8Buf`] are the storage type every weight store uses for
-//! its big block: `Owned` (a plain `Vec`, the training representation) or
+//! its big block: `Owned` (heap storage, 64-byte aligned via
+//! [`AlignedBuf`] so the kernels see the same alignment as a mapped
+//! weight section — the training representation) or
 //! `Mapped` (an offset view into an [`MmapRegion`], serve-only —
 //! `DerefMut` panics). Byte order: files are little-endian, and the mapped
 //! view reinterprets bytes in place, so mapped loading is gated to
@@ -127,13 +129,90 @@ impl std::fmt::Debug for MmapRegion {
     }
 }
 
+/// One cache line — the allocation unit of [`AlignedBuf`], so heap-owned
+/// weight blocks start on a 64-byte boundary exactly like the v3 file
+/// format's mmap path.
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+// The payload is only ever read through `AlignedBuf`'s pointer casts,
+// which dead-code analysis cannot see.
+struct CacheLine(#[allow(dead_code)] [u8; 64]);
+
+/// A heap buffer of plain-old-data elements backed by 64-byte-aligned
+/// cache-line storage.
+///
+/// The SIMD strip sweeps ([`crate::kernel`]) use unaligned loads for
+/// correctness, but aligned, cache-line-granular strips avoid split-line
+/// loads and make the heap (`--model`) and mmap (`--mmap`) serving paths
+/// behave identically; this type gives every `Owned` [`F32Buf`]/[`I8Buf`]
+/// the same 64-byte guarantee the mapped weight section already has.
+pub struct AlignedBuf<T: Copy> {
+    lines: Vec<CacheLine>,
+    len: usize,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: Copy> AlignedBuf<T> {
+    /// Copy `src` into fresh 64-byte-aligned storage (tail bytes of the
+    /// last line are zeroed so the buffer is fully initialized).
+    pub fn from_slice(src: &[T]) -> AlignedBuf<T> {
+        debug_assert!(std::mem::align_of::<T>() <= 64);
+        let bytes = std::mem::size_of_val(src);
+        let n_lines = bytes.div_ceil(64);
+        let mut lines = vec![CacheLine([0u8; 64]); n_lines];
+        // SAFETY: `lines` owns at least `bytes` initialized bytes, `src`
+        // provides exactly `bytes`, and the regions cannot overlap (fresh
+        // allocation). `T: Copy` has no drop glue.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                src.as_ptr() as *const u8,
+                lines.as_mut_ptr() as *mut u8,
+                bytes,
+            );
+        }
+        AlignedBuf { lines, len: src.len(), _marker: std::marker::PhantomData }
+    }
+
+    /// Element view. For empty buffers the dangling `Vec` pointer is still
+    /// 64-byte aligned (dangling pointers are aligned to the element type).
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        // SAFETY: storage holds `len * size_of::<T>()` initialized bytes
+        // at 64-byte alignment (≥ align_of::<T>()), and `T: Copy` accepts
+        // any initialized bit pattern written by `from_slice`.
+        unsafe { std::slice::from_raw_parts(self.lines.as_ptr() as *const T, self.len) }
+    }
+
+    /// Mutable element view.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        // SAFETY: as `as_slice`, plus unique access through `&mut self`.
+        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr() as *mut T, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl<T: Copy> Clone for AlignedBuf<T> {
+    fn clone(&self) -> Self {
+        AlignedBuf { lines: self.lines.clone(), len: self.len, _marker: std::marker::PhantomData }
+    }
+}
+
 /// Declare an owned-or-mapped weight buffer deref-ing to `[$elem]`.
 macro_rules! weight_buf {
     ($(#[$doc:meta])* $name:ident, $elem:ty) => {
         $(#[$doc])*
         #[derive(Clone)]
         pub enum $name {
-            Owned(Vec<$elem>),
+            /// Heap storage, 64-byte aligned (see [`AlignedBuf`]).
+            Owned(AlignedBuf<$elem>),
             Mapped {
                 region: Arc<MmapRegion>,
                 /// Byte offset of the element block inside the region.
@@ -215,8 +294,11 @@ macro_rules! weight_buf {
         }
 
         impl From<Vec<$elem>> for $name {
+            /// Copies into 64-byte-aligned storage (a one-time, load/init
+            /// cost) so owned and mapped buffers give the kernels the same
+            /// alignment guarantee.
             fn from(v: Vec<$elem>) -> $name {
-                $name::Owned(v)
+                $name::Owned(AlignedBuf::from_slice(&v))
             }
         }
 
@@ -280,6 +362,34 @@ mod tests {
         b[1] = 5.0;
         assert_eq!(&b[..], &[1.0, 5.0, 3.0]);
         assert_eq!(b, F32Buf::from(vec![1.0, 5.0, 3.0]));
+    }
+
+    #[test]
+    fn owned_bufs_are_64_byte_aligned() {
+        for n in [0usize, 1, 3, 16, 17, 100, 1024] {
+            let f = F32Buf::from(vec![0.5f32; n]);
+            assert_eq!(f.as_ptr() as usize % 64, 0, "F32Buf n={n}");
+            assert_eq!(f.len(), n);
+            let i = I8Buf::from(vec![-7i8; n]);
+            assert_eq!(i.as_ptr() as usize % 64, 0, "I8Buf n={n}");
+            assert_eq!(i.len(), n);
+        }
+    }
+
+    #[test]
+    fn aligned_buf_roundtrips_and_clones() {
+        let src: Vec<f32> = (0..77).map(|i| i as f32 * 0.25 - 9.0).collect();
+        let mut buf = AlignedBuf::from_slice(&src);
+        assert_eq!(buf.as_slice(), &src[..]);
+        assert_eq!(buf.len(), 77);
+        assert!(!buf.is_empty());
+        buf.as_mut_slice()[5] = 123.0;
+        let c = buf.clone();
+        assert_eq!(c.as_slice()[5], 123.0);
+        assert_eq!(c.as_slice()[6], src[6]);
+        let empty = AlignedBuf::<i8>::from_slice(&[]);
+        assert!(empty.is_empty());
+        assert_eq!(empty.as_slice(), &[] as &[i8]);
     }
 
     #[test]

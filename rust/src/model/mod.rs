@@ -31,4 +31,4 @@ pub use hashed::HashedStore;
 pub use io::Checkpoint;
 pub use linear::{DenseStore, LinearEdgeModel};
 pub use quant::Q8Store;
-pub use store::{Backend, StripCodec, TrainableStore, WeightStore};
+pub use store::{Backend, ScoreScratch, StripCodec, TrainableStore, WeightStore};

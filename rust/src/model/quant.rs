@@ -9,10 +9,13 @@
 //! per example (`x_i ≈ s_x · qx_i`, symmetric ±127) the inner sum
 //! `Σ qx_i · q[i,e]` is pure **i32 accumulation** — no dequantized f32
 //! copy of the weights is ever materialized, and the fp work per edge is
-//! one fused `b_e + (s_e·s_x)·acc` at the end. The i32 accumulator lives
-//! in the caller's `f32` output buffer via bit-casting, so the scoring
-//! path allocates nothing (overflow would need `Σ|qx·q| > 2³¹` ≈ 133k
-//! active features at worst-case magnitudes — far beyond any XC dataset).
+//! one fused `b_e + (s_e·s_x)·acc` at the end. The i32 accumulators live
+//! in the typed [`ScoreScratch::acc`] buffer (owned per worker inside
+//! `PredictScratch`, so the scoring path still allocates nothing in
+//! steady state) and each strip is swept by the widening i8→i16→i32
+//! kernel [`crate::kernel::i8_axpy`]. Overflow would need
+//! `Σ|qx·q| > 2³¹` ≈ 133k active features at worst-case magnitudes — far
+//! beyond any XC dataset.
 //!
 //! A `Q8Store` is built offline from a trained dense model
 //! ([`Q8Store::quantize`], the `ltls quantize` subcommand) and implements
@@ -21,7 +24,7 @@
 
 use super::linear::DenseStore;
 use super::mmap::I8Buf;
-use super::store::{parse_f32s, Backend, WeightBlock, WeightStore};
+use super::store::{parse_f32s, Backend, ScoreScratch, WeightBlock, WeightStore};
 use crate::sparse::SparseVec;
 
 /// Per-edge-scaled i8 quantization of a dense model (serve-only).
@@ -80,16 +83,6 @@ impl Q8Store {
             (0.0, 0.0)
         }
     }
-
-    #[inline]
-    fn acc_add(o: &mut f32, delta: i32) {
-        *o = f32::from_bits(((*o).to_bits() as i32).wrapping_add(delta) as u32);
-    }
-
-    #[inline]
-    fn acc_read(o: f32) -> i32 {
-        o.to_bits() as i32
-    }
 }
 
 impl WeightStore for Q8Store {
@@ -105,45 +98,43 @@ impl WeightStore for Q8Store {
         &self.bias
     }
 
-    /// `h_e = b_e + (s_e·s_x) · Σ_i qx_i·q[i,e]` — i32 accumulation in the
-    /// bit pattern of `out`, one f32 fma-shaped finish per edge.
-    fn edge_scores(&self, x: SparseVec, out: &mut Vec<f32>) {
+    /// `h_e = b_e + (s_e·s_x) · Σ_i qx_i·q[i,e]` — widening i8 SIMD
+    /// accumulation into `scratch.acc`, one f32 fma-shaped finish per edge.
+    fn edge_scores(&self, x: SparseVec, scratch: &mut ScoreScratch, out: &mut Vec<f32>) {
         let e = self.n_edges;
-        out.clear();
-        out.resize(e, 0.0); // all-zero bits: i32 accumulators at 0
+        let acc = &mut scratch.acc;
+        acc.clear();
+        acc.resize(e, 0);
         let (inv, sx) = Self::input_scale(x.values);
         if inv > 0.0 {
-            for (&i, &v) in x.indices.iter().zip(x.values) {
+            for (k, (&i, &v)) in x.indices.iter().zip(x.values).enumerate() {
+                if let Some(&ni) = x.indices.get(k + 1) {
+                    crate::kernel::prefetch(&self.q[ni as usize * e..]);
+                }
                 let qv = (v * inv).round() as i32;
                 if qv == 0 {
                     continue;
                 }
                 let strip = &self.q[i as usize * e..(i as usize + 1) * e];
-                for (o, &qw) in out.iter_mut().zip(strip) {
-                    Self::acc_add(o, qv * qw as i32);
-                }
+                crate::kernel::i8_axpy(acc, strip, qv);
             }
         }
-        for (j, o) in out.iter_mut().enumerate() {
-            let acc = Self::acc_read(*o);
-            *o = self.bias[j] + (self.scale[j] * sx) * acc as f32;
-        }
+        out.clear();
+        out.resize(e, 0.0);
+        crate::kernel::q8_finish(out, acc, &self.bias, &self.scale, sx);
     }
 
     /// Batched variant: gathers `(feature, row, qx)` triples (the integer
     /// level stored exactly in the f32 slot), sorts by feature, and sweeps
-    /// each i8 strip once per block. Bit-identical to per-row
-    /// [`Self::edge_scores`] — integer accumulation is order-independent.
-    fn edge_scores_batch(
-        &self,
-        rows: &[SparseVec],
-        scratch: &mut Vec<(u32, u32, f32)>,
-        out: &mut Vec<f32>,
-    ) {
+    /// each i8 strip once per block into the block-sized `scratch.acc`.
+    /// Bit-identical to per-row [`Self::edge_scores`] — integer
+    /// accumulation is order-independent.
+    fn edge_scores_batch(&self, rows: &[SparseVec], scratch: &mut ScoreScratch, out: &mut Vec<f32>) {
         let e = self.n_edges;
-        out.clear();
-        out.resize(rows.len() * e, 0.0);
-        scratch.clear();
+        let ScoreScratch { gather, acc } = scratch;
+        acc.clear();
+        acc.resize(rows.len() * e, 0);
+        gather.clear();
         for (r, x) in rows.iter().enumerate() {
             let (inv, _) = Self::input_scale(x.values);
             if inv == 0.0 {
@@ -152,26 +143,32 @@ impl WeightStore for Q8Store {
             for (&i, &v) in x.indices.iter().zip(x.values) {
                 let qv = (v * inv).round();
                 if qv != 0.0 {
-                    scratch.push((i, r as u32, qv));
+                    gather.push((i, r as u32, qv));
                 }
             }
         }
-        scratch.sort_unstable_by_key(|t| t.0);
-        for &(i, r, qv) in scratch.iter() {
-            let qv = qv as i32;
-            let strip = &self.q[i as usize * e..(i as usize + 1) * e];
-            let dst = &mut out[r as usize * e..(r as usize + 1) * e];
-            for (o, &qw) in dst.iter_mut().zip(strip) {
-                Self::acc_add(o, qv * qw as i32);
+        gather.sort_unstable_by_key(|t| t.0);
+        for (k, &(i, r, qv)) in gather.iter().enumerate() {
+            if let Some(&(ni, _, _)) = gather.get(k + 1) {
+                if ni != i {
+                    crate::kernel::prefetch(&self.q[ni as usize * e..]);
+                }
             }
+            let strip = &self.q[i as usize * e..(i as usize + 1) * e];
+            let dst = &mut acc[r as usize * e..(r as usize + 1) * e];
+            crate::kernel::i8_axpy(dst, strip, qv as i32);
         }
+        out.clear();
+        out.resize(rows.len() * e, 0.0);
         for (r, x) in rows.iter().enumerate() {
             let (_, sx) = Self::input_scale(x.values);
-            let dst = &mut out[r * e..(r + 1) * e];
-            for (j, o) in dst.iter_mut().enumerate() {
-                let acc = Self::acc_read(*o);
-                *o = self.bias[j] + (self.scale[j] * sx) * acc as f32;
-            }
+            crate::kernel::q8_finish(
+                &mut out[r * e..(r + 1) * e],
+                &acc[r * e..(r + 1) * e],
+                &self.bias,
+                &self.scale,
+                sx,
+            );
         }
     }
 
@@ -260,7 +257,7 @@ mod tests {
             let x = SparseVec::new(&idx, &val);
             let hd = dense.edge_scores_vec(x);
             let mut hq = Vec::new();
-            q8.edge_scores(x, &mut hq);
+            q8.edge_scores(x, &mut ScoreScratch::new(), &mut hq);
             // Score magnitudes are O(1); two-sided 8-bit rounding keeps
             // absolute error a couple of levels at worst.
             for (a, b) in hd.iter().zip(&hq) {
@@ -277,12 +274,12 @@ mod tests {
         let xb = SparseVec::new(&[7, 50], &[0.125, 0.5]);
         let xempty = SparseVec::new(&[], &[]);
         let rows = [xa, xb, xempty];
-        let (mut gather, mut batch) = (Vec::new(), Vec::new());
-        q8.edge_scores_batch(&rows, &mut gather, &mut batch);
+        let (mut scratch, mut batch) = (ScoreScratch::new(), Vec::new());
+        q8.edge_scores_batch(&rows, &mut scratch, &mut batch);
         assert_eq!(batch.len(), 3 * 6);
         for (r, x) in rows.iter().enumerate() {
             let mut single = Vec::new();
-            q8.edge_scores(*x, &mut single);
+            q8.edge_scores(*x, &mut scratch, &mut single);
             assert_eq!(&batch[r * 6..(r + 1) * 6], single.as_slice(), "row {r}");
         }
     }
@@ -291,14 +288,15 @@ mod tests {
     fn empty_and_zero_inputs_give_bias() {
         let dense = random_dense(5, 50, 8);
         let q8 = Q8Store::quantize(&dense);
+        let mut scratch = ScoreScratch::new();
         let mut h = Vec::new();
-        q8.edge_scores(SparseVec::new(&[], &[]), &mut h);
+        q8.edge_scores(SparseVec::new(&[], &[]), &mut scratch, &mut h);
         for (a, b) in h.iter().zip(&q8.bias) {
             assert_eq!(a, b);
         }
         let idx = [3u32];
         let val = [0.0f32];
-        q8.edge_scores(SparseVec::new(&idx, &val), &mut h);
+        q8.edge_scores(SparseVec::new(&idx, &val), &mut scratch, &mut h);
         for (a, b) in h.iter().zip(&q8.bias) {
             assert_eq!(a, b);
         }
@@ -322,7 +320,7 @@ mod tests {
         assert!(q8.scale.iter().all(|&s| s == 0.0));
         assert_eq!(q8.zero_fraction(), 1.0);
         let mut h = Vec::new();
-        q8.edge_scores(SparseVec::new(&[0, 5], &[1.0, 2.0]), &mut h);
+        q8.edge_scores(SparseVec::new(&[0, 5], &[1.0, 2.0]), &mut ScoreScratch::new(), &mut h);
         assert_eq!(h, vec![0.0; 4]);
     }
 }

@@ -22,6 +22,10 @@
 //!   the dense [`IdentityCodec`] maps feature `i` to strip `i` with sign
 //!   `+1.0`, which multiplies out bit-identically to the pre-trait code
 //!   (pinned by `rust/tests/engine_parity.rs` and `train_parallel.rs`).
+//!   The inner strip sweep itself lives in [`crate::kernel`] — vectorized
+//!   (portable 8-lane, or `core::arch` under `--features simd`) but pinned
+//!   bit-identical to the scalar oracle, so sharing it here costs no
+//!   reproducibility.
 //!
 //! [`Q8Store`] implements only [`WeightStore`]: quantized weights cannot
 //! take sparse SGD deltas, so the type system — not a runtime check —
@@ -122,6 +126,29 @@ pub(crate) fn parse_f32s(bytes: &[u8]) -> Vec<f32> {
     bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
 }
 
+/// Reusable scoring scratch, owned per worker (it lives inside
+/// [`crate::engine::PredictScratch`] and [`crate::engine::TrainScratch`])
+/// so the scoring hot path allocates nothing in steady state.
+///
+/// * `gather` — the batched schedule's `(feature, row, value)` triples,
+///   sorted by feature so each strip is swept once for all rows.
+/// * `acc` — the q8 backend's typed i32 dot accumulator. (Historically
+///   `Q8Store` accumulated i32 partial dots *inside the f32 output
+///   buffer* via `f32::from_bits` bit-punning; a typed buffer removes
+///   that footgun and lets the widening SIMD dot store i32 lanes
+///   directly.)
+#[derive(Clone, Debug, Default)]
+pub struct ScoreScratch {
+    pub gather: Vec<(u32, u32, f32)>,
+    pub acc: Vec<i32>,
+}
+
+impl ScoreScratch {
+    pub fn new() -> ScoreScratch {
+        ScoreScratch::default()
+    }
+}
+
 /// Weight storage a *serving* stack can score against. See the module
 /// docs; [`TrainableStore`] adds what training needs.
 pub trait WeightStore: Clone + Send + Sync + 'static {
@@ -137,18 +164,15 @@ pub trait WeightStore: Clone + Send + Sync + 'static {
     fn bias(&self) -> &[f32];
 
     /// Edge-score vector `h = Wx + b` into `out` (cleared first).
-    fn edge_scores(&self, x: SparseVec, out: &mut Vec<f32>);
+    /// `scratch` holds backend-specific accumulators (the q8 store's i32
+    /// dot buffer); the f32 backends leave it untouched.
+    fn edge_scores(&self, x: SparseVec, scratch: &mut ScoreScratch, out: &mut Vec<f32>);
 
     /// Batched edge scores for a block of sparse rows: `out` receives the
     /// `B × E` row-major score matrix. Must produce exactly what per-row
-    /// [`Self::edge_scores`] produces; `scratch` is the gather buffer of
-    /// the one-sweep-per-feature-strip schedule.
-    fn edge_scores_batch(
-        &self,
-        rows: &[SparseVec],
-        scratch: &mut Vec<(u32, u32, f32)>,
-        out: &mut Vec<f32>,
-    );
+    /// [`Self::edge_scores`] produces; `scratch.gather` is the gather
+    /// buffer of the one-sweep-per-feature-strip schedule.
+    fn edge_scores_batch(&self, rows: &[SparseVec], scratch: &mut ScoreScratch, out: &mut Vec<f32>);
 
     /// Stored parameter count (weights + bias + per-store extras).
     fn param_count(&self) -> usize;
@@ -296,7 +320,9 @@ pub trait TrainableStore: WeightStore {
 }
 
 /// Shared f32 scoring kernel: `h = Wx + b` through a [`StripCodec`] — one
-/// contiguous E-strip read per active feature.
+/// contiguous E-strip read per active feature, swept lane-wise by
+/// [`crate::kernel::axpy`] (bit-identical to the scalar loop; see the
+/// kernel module docs) while the next feature's strip is prefetched.
 pub(crate) fn codec_edge_scores<C: StripCodec>(
     w: &[f32],
     bias: &[f32],
@@ -307,13 +333,14 @@ pub(crate) fn codec_edge_scores<C: StripCodec>(
 ) {
     out.clear();
     out.extend_from_slice(bias);
-    for (&i, &v) in x.indices.iter().zip(x.values) {
+    for (k, (&i, &v)) in x.indices.iter().zip(x.values).enumerate() {
+        if let Some(&ni) = x.indices.get(k + 1) {
+            let (ns, _) = codec.strip_of(ni);
+            crate::kernel::prefetch(&w[ns as usize * n_edges..]);
+        }
         let (s, sign) = codec.strip_of(i);
         let strip = &w[s as usize * n_edges..(s as usize + 1) * n_edges];
-        let sv = v * sign;
-        for (o, &wv) in out.iter_mut().zip(strip) {
-            *o += sv * wv;
-        }
+        crate::kernel::axpy(out, strip, v * sign);
     }
 }
 
@@ -344,14 +371,20 @@ pub(crate) fn codec_edge_scores_batch<C: StripCodec>(
         }
     }
     scratch.sort_unstable_by_key(|t| t.0);
-    for &(i, r, v) in scratch.iter() {
+    for (k, &(i, r, v)) in scratch.iter().enumerate() {
+        // Hint the *next distinct* strip toward L1 while this one is swept
+        // (consecutive triples usually share a feature, whose strip is
+        // already hot from this very sweep).
+        if let Some(&(ni, _, _)) = scratch.get(k + 1) {
+            if ni != i {
+                let (ns, _) = codec.strip_of(ni);
+                crate::kernel::prefetch(&w[ns as usize * e..]);
+            }
+        }
         let (s, sign) = codec.strip_of(i);
         let strip = &w[s as usize * e..(s as usize + 1) * e];
         let dst = &mut out[r as usize * e..(r as usize + 1) * e];
-        let sv = v * sign;
-        for (o, &wv) in dst.iter_mut().zip(strip) {
-            *o += sv * wv;
-        }
+        crate::kernel::axpy(dst, strip, v * sign);
     }
 }
 

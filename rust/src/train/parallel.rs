@@ -210,7 +210,7 @@ fn run_worker<T: Topology, C: StripCodec>(
         if batched {
             // One strip sweep scores the whole block (the serving
             // kernel's schedule); updates apply per example below.
-            weights.edge_scores_batch(&rows, &mut scratch.batch_gather, &mut scratch.batch_h);
+            weights.edge_scores_batch(&rows, &mut scratch.score.gather, &mut scratch.batch_h);
         }
         for (bi, &r) in block.iter().enumerate() {
             let x = rows[bi];
@@ -610,7 +610,7 @@ mod tests {
         let mut b = a.clone();
 
         let mut want = Vec::new();
-        WeightStore::edge_scores(&a, x, &mut want);
+        WeightStore::edge_scores(&a, x, &mut crate::model::ScoreScratch::new(), &mut want);
         let shared = SharedWeights::new(&mut b);
         let mut got = Vec::new();
         shared.edge_scores(x, &mut got);

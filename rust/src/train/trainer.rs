@@ -108,7 +108,7 @@ impl<T: Topology, S: TrainableStore> Trainer<T, S> {
         }
         // h = Wx + b.
         let mut h = std::mem::take(&mut self.scratch.h);
-        self.model.edge_scores(x, &mut h);
+        self.model.edge_scores(x, &mut self.scratch.score, &mut h);
 
         // Resolve labels → paths (assigning unseen labels by policy §5.1).
         let before = self.assigner.table.n_assigned();
@@ -217,7 +217,7 @@ impl<T: Topology, S: WeightStore> TrainedModel<T, S> {
     /// Top-1 dataset label reusing a caller-owned scratch — the
     /// zero-allocation hot path of the serving engine.
     pub fn predict_with(&self, x: SparseVec, scratch: &mut PredictScratch) -> u32 {
-        self.model.edge_scores(x, &mut scratch.h);
+        self.model.edge_scores(x, &mut scratch.score, &mut scratch.h);
         let Scored { label: path, .. } = viterbi_ws(&self.trellis, &scratch.h, &mut scratch.ws);
         if let Some(l) = self.assigner.table.label_of(path) {
             return l;
@@ -253,7 +253,7 @@ impl<T: Topology, S: WeightStore> TrainedModel<T, S> {
         out: &mut Vec<(u32, f32)>,
     ) {
         out.clear();
-        self.model.edge_scores(x, &mut scratch.h);
+        self.model.edge_scores(x, &mut scratch.score, &mut scratch.h);
         // Over-fetch so unassigned paths can be skipped.
         let fetch = (k + 8).min(self.trellis.c() as usize);
         list_viterbi_into(&self.trellis, &scratch.h, fetch, &mut scratch.ws, &mut scratch.paths);

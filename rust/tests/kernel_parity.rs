@@ -1,0 +1,249 @@
+//! Scalar ↔ vectorized kernel parity — the `simd` feature's correctness
+//! pin. CI runs this suite with the feature both off (portable 8-lane
+//! sweeps) and on (AVX2/NEON intrinsics where available):
+//!
+//! 1. **Kernel level** — `kernel::axpy` / `kernel::q8_finish` are
+//!    bit-identical (f32 `to_bits`) and `kernel::i8_axpy` exactly equal
+//!    (i32) to the pinned scalar oracles in `kernel::scalar`, across
+//!    random strips, signs, and tail lengths where E is not a multiple of
+//!    any lane width.
+//! 2. **Store level** — every backend's trait `edge_scores` is
+//!    bit-identical to an independent naive reimplementation of its
+//!    contract (bias first, features in ascending order, one f32
+//!    mul-then-add per element; pure i32 accumulation for q8), and the
+//!    batched entry point is bit-identical to per-row scoring.
+//! 3. **Layout** — heap-built stores get the same 64-byte weight-strip
+//!    alignment the mmap path guarantees.
+
+use ltls::kernel;
+use ltls::model::{
+    DenseStore, HashedStore, Q8Store, ScoreScratch, StripCodec, TrainableStore, WeightStore,
+};
+use ltls::sparse::SparseVec;
+use ltls::util::rng::Rng;
+
+/// Strip lengths crossing every lane boundary: multiples of 8 (portable /
+/// AVX2 f32), 4 (NEON f32), 16 (AVX2 i8), and ragged tails around each.
+const LENS: [usize; 20] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 23, 31, 32, 33, 63, 64, 65, 100];
+
+#[test]
+fn axpy_is_bit_identical_to_scalar_oracle() {
+    let mut rng = Rng::new(9001);
+    for &n in &LENS {
+        for round in 0..8 {
+            let strip: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let init: Vec<f32> = (0..n).map(|_| rng.normal() * 3.0).collect();
+            for sv in [0.0f32, 1.0, -1.0, rng.normal(), 1.0e-30, -2.5e-3] {
+                let mut want = init.clone();
+                kernel::scalar::axpy(&mut want, &strip, sv);
+                let mut got = init.clone();
+                kernel::axpy(&mut got, &strip, sv);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "n={n} round={round} sv={sv}");
+            }
+        }
+    }
+}
+
+#[test]
+fn i8_axpy_is_exactly_equal_to_scalar_oracle() {
+    let mut rng = Rng::new(9002);
+    for &n in &LENS {
+        for round in 0..8 {
+            let strip: Vec<i8> = (0..n).map(|_| (rng.index(255) as i32 - 127) as i8).collect();
+            let init: Vec<i32> = (0..n).map(|_| rng.index(20001) as i32 - 10000).collect();
+            for qv in [-127i32, -3, 1, 42, 127] {
+                let mut want = init.clone();
+                kernel::scalar::i8_axpy(&mut want, &strip, qv);
+                let mut got = init.clone();
+                kernel::i8_axpy(&mut got, &strip, qv);
+                assert_eq!(got, want, "n={n} round={round} qv={qv}");
+            }
+        }
+    }
+}
+
+#[test]
+fn q8_finish_is_bit_identical_to_scalar_oracle() {
+    let mut rng = Rng::new(9003);
+    for &n in &LENS {
+        let acc: Vec<i32> = (0..n).map(|_| rng.index(65001) as i32 - 32500).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let scale: Vec<f32> = (0..n).map(|_| rng.f32() * 0.01).collect();
+        for sx in [0.0f32, 0.007, 1.5] {
+            let mut want = vec![0.0f32; n];
+            kernel::scalar::q8_finish(&mut want, &acc, &bias, &scale, sx);
+            let mut got = vec![0.0f32; n];
+            kernel::q8_finish(&mut got, &acc, &bias, &scale, sx);
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "n={n} sx={sx}");
+        }
+    }
+}
+
+/// A random sparse row over `d` features: ascending distinct indices,
+/// mixed-sign values, occasionally empty or all-zero.
+fn random_row(rng: &mut Rng, d: usize, max_nnz: usize) -> (Vec<u32>, Vec<f32>) {
+    let nnz = rng.index(max_nnz + 1);
+    let mut idx: Vec<u32> = (0..nnz).map(|_| rng.index(d) as u32).collect();
+    idx.sort_unstable();
+    idx.dedup();
+    let val: Vec<f32> = idx
+        .iter()
+        .map(|_| if rng.coin(0.1) { 0.0 } else { rng.normal() })
+        .collect();
+    (idx, val)
+}
+
+/// Naive dense contract: `h = bias; for each active feature (ascending),
+/// h[j] += v · w[i·E + j]` — one mul then one add per element, never FMA.
+fn naive_dense(m: &DenseStore, x: SparseVec) -> Vec<f32> {
+    let e = m.n_edges;
+    let mut out = m.bias.clone();
+    for (&i, &v) in x.indices.iter().zip(x.values) {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += v * m.w[i as usize * e + j];
+        }
+    }
+    out
+}
+
+/// Naive hashed contract: like dense, but through the (bucket, sign) hash
+/// with the signed value `v·ξ(i)` folded in before the per-element mul.
+fn naive_hashed(m: &HashedStore, x: SparseVec) -> Vec<f32> {
+    let e = m.n_edges;
+    let codec = m.codec();
+    let mut out = m.bias.clone();
+    for (&i, &v) in x.indices.iter().zip(x.values) {
+        let (b, s) = codec.strip_of(i);
+        let sv = v * s;
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += sv * m.w[b as usize * e + j];
+        }
+    }
+    out
+}
+
+/// Naive q8 contract: symmetric ±127 input quantization, skip-zero
+/// levels, pure i32 accumulation, one `b + (s·sx)·acc` finish per edge.
+fn naive_q8(m: &Q8Store, x: SparseVec) -> Vec<f32> {
+    let e = m.n_edges;
+    let mut maxv = 0.0f32;
+    for &v in x.values {
+        maxv = maxv.max(v.abs());
+    }
+    let (inv, sx) = if maxv > 0.0 { (127.0 / maxv, maxv / 127.0) } else { (0.0, 0.0) };
+    let mut acc = vec![0i32; e];
+    if inv > 0.0 {
+        for (&i, &v) in x.indices.iter().zip(x.values) {
+            let qv = (v * inv).round() as i32;
+            if qv == 0 {
+                continue;
+            }
+            for (j, a) in acc.iter_mut().enumerate() {
+                *a = a.wrapping_add(qv * m.q[i as usize * e + j] as i32);
+            }
+        }
+    }
+    let mut out = vec![0.0f32; e];
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = m.bias[j] + (m.scale[j] * sx) * acc[j] as f32;
+    }
+    out
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (j, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{ctx}: edge {j} ({g} vs {w})");
+    }
+}
+
+/// Every backend's kernel-routed `edge_scores` is bit-identical to the
+/// naive contract, and batching is bit-identical to per-row scoring —
+/// fuzzed across edge counts that straddle every lane boundary.
+#[test]
+fn store_scores_match_naive_contract_bitwise() {
+    let mut rng = Rng::new(9004);
+    for &e in &[1usize, 4, 7, 8, 17, 29, 64, 77] {
+        let d = 120usize;
+        let mut dense = DenseStore::new(e, d);
+        for w in dense.w.as_mut_slice() {
+            *w = rng.normal() * 0.3;
+        }
+        for b in &mut dense.bias {
+            *b = rng.normal() * 0.05;
+        }
+        let q8 = Q8Store::quantize(&dense);
+        let mut hashed = HashedStore::new(e, d, 5, 17).unwrap();
+        for w in hashed.w.as_mut_slice() {
+            *w = rng.normal() * 0.3;
+        }
+        for b in &mut hashed.bias {
+            *b = rng.normal() * 0.05;
+        }
+
+        let rows: Vec<(Vec<u32>, Vec<f32>)> =
+            (0..12).map(|_| random_row(&mut rng, d, 24)).collect();
+        let views: Vec<SparseVec> =
+            rows.iter().map(|(i, v)| SparseVec::new(i, v)).collect();
+
+        let mut scratch = ScoreScratch::new();
+        let (mut single, mut batch) = (Vec::new(), Vec::new());
+
+        for x in &views {
+            WeightStore::edge_scores(&dense, *x, &mut scratch, &mut single);
+            assert_bits_eq(&single, &naive_dense(&dense, *x), &format!("dense E={e}"));
+            WeightStore::edge_scores(&hashed, *x, &mut scratch, &mut single);
+            assert_bits_eq(&single, &naive_hashed(&hashed, *x), &format!("hashed E={e}"));
+            WeightStore::edge_scores(&q8, *x, &mut scratch, &mut single);
+            assert_bits_eq(&single, &naive_q8(&q8, *x), &format!("q8 E={e}"));
+        }
+
+        WeightStore::edge_scores_batch(&dense, &views, &mut scratch, &mut batch);
+        for (r, x) in views.iter().enumerate() {
+            WeightStore::edge_scores(&dense, *x, &mut scratch, &mut single);
+            assert_bits_eq(&batch[r * e..(r + 1) * e], &single, &format!("dense batch E={e}"));
+        }
+        WeightStore::edge_scores_batch(&hashed, &views, &mut scratch, &mut batch);
+        for (r, x) in views.iter().enumerate() {
+            WeightStore::edge_scores(&hashed, *x, &mut scratch, &mut single);
+            assert_bits_eq(&batch[r * e..(r + 1) * e], &single, &format!("hashed batch E={e}"));
+        }
+        WeightStore::edge_scores_batch(&q8, &views, &mut scratch, &mut batch);
+        for (r, x) in views.iter().enumerate() {
+            WeightStore::edge_scores(&q8, *x, &mut scratch, &mut single);
+            assert_bits_eq(&batch[r * e..(r + 1) * e], &single, &format!("q8 batch E={e}"));
+        }
+    }
+}
+
+/// Heap-built stores share the mmap path's 64-byte weight alignment.
+#[test]
+fn heap_store_weights_are_64_byte_aligned() {
+    let dense = DenseStore::new(13, 37);
+    assert_eq!(dense.w.as_ptr() as usize % 64, 0, "dense");
+    let hashed = HashedStore::new(13, 37, 5, 3).unwrap();
+    assert_eq!(hashed.w.as_ptr() as usize % 64, 0, "hashed");
+    let q8 = Q8Store::quantize(&dense);
+    assert_eq!(q8.q.as_ptr() as usize % 64, 0, "q8");
+}
+
+/// `simd_active()` reports what the build actually dispatches: it must be
+/// false when the feature is off (the portable sweep path), and on
+/// feature-on builds it may only be true on an arch with intrinsics.
+#[test]
+fn simd_active_is_consistent_with_build() {
+    let active = kernel::simd_active();
+    if cfg!(not(feature = "simd")) {
+        assert!(!active, "simd_active() must be false without the feature");
+    }
+    if active {
+        assert!(
+            cfg!(any(target_arch = "x86_64", target_arch = "aarch64")),
+            "intrinsics dispatch on an unexpected arch"
+        );
+    }
+}

@@ -44,8 +44,10 @@ use ltls::util::json::Json;
 use std::collections::BTreeMap;
 
 /// Result-array keys that name a configuration rather than a measurement.
-const DISCRIMINATORS: [&str; 7] =
-    ["workers", "threads", "batch", "k", "width", "backend", "hash_bits"];
+/// `kernel` discriminates scoring-kernel rows: 0 = pinned scalar oracle,
+/// 1 = dispatched fast path (portable sweep or SIMD intrinsics).
+const DISCRIMINATORS: [&str; 8] =
+    ["workers", "threads", "batch", "k", "width", "backend", "hash_bits", "kernel"];
 
 fn main() {
     let args = Args::from_env();
@@ -324,6 +326,16 @@ trailing noise
         let mut worse = c.clone();
         worse.insert("memory_footprint.q8_p1_delta".into(), 0.02);
         assert_eq!(check_against_baseline(base, &worse).unwrap().failures, 1);
+    }
+
+    #[test]
+    fn kernel_rows_discriminate_scalar_vs_dispatched() {
+        let c = current_from(
+            "json: {\"bench\":\"decode\",\"kernel_axpy_speedup\":3.1,\"results\":[{\"kernel\":0,\"axpy_ns\":800.0},{\"kernel\":1,\"axpy_ns\":260.0}]}\n",
+        );
+        assert_eq!(c["decode.kernel=0.axpy_ns"], 800.0);
+        assert_eq!(c["decode.kernel=1.axpy_ns"], 260.0);
+        assert_eq!(c["decode.kernel_axpy_speedup"], 3.1);
     }
 
     #[test]
