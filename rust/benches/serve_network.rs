@@ -1,20 +1,32 @@
 //! Network-serving bench: requests/sec of the TCP frontend
-//! (`coordinator::transport`) with closed-loop loopback clients, with and
-//! without hot-reload churn, vs the in-process worker pool (the transport
-//! tax). Emits a machine-readable JSON line for the CI perf gate
+//! (`coordinator::transport` + `coordinator::event_loop`) with closed-loop
+//! loopback clients, with and without hot-reload churn, vs the in-process
+//! worker pool (the transport tax) — plus a **connection sweep** across
+//! both transports (threads vs poll(2) event loop) up to 1000 concurrent
+//! connections. Emits a machine-readable JSON line for the CI perf gate
 //! (EXPERIMENTS.md §Network serving).
 //!
-//! The gated metric is `reload_ratio` = throughput with a model reload
-//! every ~25 ms over undisturbed throughput: the epoch-handoff design
-//! claims reloads land between micro-batches without stalling the
-//! pipeline, so the ratio should sit near 1.0 on any machine. Absolute
-//! req/s are recorded but not gated (machine-dependent).
+//! Gated metrics:
+//!
+//! * `reload_ratio` — throughput with a model reload every ~25 ms over
+//!   undisturbed throughput: the epoch-handoff design claims reloads land
+//!   between micro-batches without stalling the pipeline, so the ratio
+//!   should sit near 1.0 on any machine.
+//! * `many_conn_ratio` — event-loop throughput at 1000 concurrent
+//!   connections over threaded throughput at 100: the event loop claims
+//!   holding 10x the connections costs ~nothing (both runs are
+//!   pool-bound; connection setup is excluded by a start barrier). The
+//!   gate catches the event loop falling over at scale, not noise.
+//!
+//! Per-row absolute throughputs (`transport=T.clients=N.req_per_s`,
+//! transport 0 = threads, 1 = event-loop) are recorded but not gated
+//! (machine-dependent).
 //!
 //! `BENCH_FAST=1` trims the request count for smoke runs.
 
 use ltls::coordinator::{
     BatchedLtls, BatcherConfig, NetConfig, NetServer, PredictServer, ReloadableLtls,
-    ServerConfig,
+    ServerConfig, Transport,
 };
 use ltls::data::synthetic::SyntheticSpec;
 use ltls::train::{TrainConfig, Trainer};
@@ -22,7 +34,7 @@ use ltls::util::json::Json;
 use ltls::util::timer::Timer;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
 fn pool_cfg() -> ServerConfig {
@@ -33,45 +45,69 @@ fn pool_cfg() -> ServerConfig {
     }
 }
 
-/// Drive `n_requests` through the TCP frontend with `clients` closed-loop
-/// connections (window of 16 pipelined requests each); returns req/s.
-fn drive_tcp(addr: SocketAddr, ds: &Arc<ltls::data::Dataset>, clients: usize, n: usize) -> f64 {
-    let timer = Timer::new();
-    let per_client = n / clients;
+/// Drive `n` requests through the TCP frontend with `clients` closed-loop
+/// connections (window of `window` pipelined requests each); returns
+/// req/s. All connections are established **before** the clock starts (a
+/// barrier holds the clients), so the number measures steady-state
+/// serving, not connect/teardown — which is what makes rows at different
+/// connection counts comparable.
+fn drive_tcp(
+    addr: SocketAddr,
+    ds: &Arc<ltls::data::Dataset>,
+    clients: usize,
+    n: usize,
+    window: usize,
+) -> f64 {
+    let per_client = (n / clients).max(1);
+    let start = Arc::new(Barrier::new(clients + 1));
     let handles: Vec<_> = (0..clients)
         .map(|cid| {
             let ds = Arc::clone(ds);
-            std::thread::spawn(move || {
-                let stream = TcpStream::connect(addr).expect("connect");
-                stream.set_nodelay(true).ok();
-                let mut r = BufReader::new(stream.try_clone().expect("clone"));
-                let mut w = stream;
-                let mut line = String::new();
-                let mut pending = 0usize;
-                for i in 0..per_client {
-                    let row = ds.row((cid * per_client + i) % ds.n_examples());
-                    let mut req = String::with_capacity(16 * row.indices.len() + 2);
-                    req.push('1');
-                    for (&j, &v) in row.indices.iter().zip(row.values) {
-                        req.push_str(&format!(" {j}:{v}"));
-                    }
-                    req.push('\n');
-                    w.write_all(req.as_bytes()).unwrap();
-                    pending += 1;
-                    while pending >= 16 {
+            let start = Arc::clone(&start);
+            // Small stacks: at 1000 clients the driver itself must not be
+            // the thing that falls over.
+            std::thread::Builder::new()
+                .stack_size(256 << 10)
+                .spawn(move || {
+                    let stream = TcpStream::connect(addr).expect("connect");
+                    stream.set_nodelay(true).ok();
+                    let mut r = BufReader::new(stream.try_clone().expect("clone"));
+                    let mut w = stream;
+                    start.wait();
+                    let mut line = String::new();
+                    let mut pending = 0usize;
+                    let mut recv = |line: &mut String, pending: &mut usize| {
                         line.clear();
-                        r.read_line(&mut line).unwrap();
-                        pending -= 1;
+                        r.read_line(line).unwrap();
+                        assert!(
+                            !line.contains("\"backpressure\""),
+                            "bench misconfigured: admission rejected a windowed request"
+                        );
+                        *pending -= 1;
+                    };
+                    for i in 0..per_client {
+                        let row = ds.row((cid * per_client + i) % ds.n_examples());
+                        let mut req = String::with_capacity(16 * row.indices.len() + 2);
+                        req.push('1');
+                        for (&j, &v) in row.indices.iter().zip(row.values) {
+                            req.push_str(&format!(" {j}:{v}"));
+                        }
+                        req.push('\n');
+                        w.write_all(req.as_bytes()).unwrap();
+                        pending += 1;
+                        while pending >= window {
+                            recv(&mut line, &mut pending);
+                        }
                     }
-                }
-                while pending > 0 {
-                    line.clear();
-                    r.read_line(&mut line).unwrap();
-                    pending -= 1;
-                }
-            })
+                    while pending > 0 {
+                        recv(&mut line, &mut pending);
+                    }
+                })
+                .expect("spawn bench client")
         })
         .collect();
+    start.wait();
+    let timer = Timer::new();
     for h in handles {
         h.join().unwrap();
     }
@@ -139,7 +175,7 @@ fn main() {
     };
     println!("in-process pool        {inproc:>10.0} req/s");
 
-    // Phase 1: plain TCP serving.
+    // Phase 1: plain TCP serving (the default transport: the event loop).
     let reloadable = Arc::new(ReloadableLtls::from_path(&model_path, false).unwrap());
     let server = NetServer::start_reloadable(
         "127.0.0.1:0",
@@ -148,7 +184,7 @@ fn main() {
     )
     .expect("start net server");
     let addr = server.addr();
-    let tcp_plain = drive_tcp(addr, &ds, clients, n_requests);
+    let tcp_plain = drive_tcp(addr, &ds, clients, n_requests, 16);
     let p99_us = server.metrics().request_quantile_ns(0.99) / 1e3;
     println!("tcp frontend           {tcp_plain:>10.0} req/s   p99 {p99_us:>7.0}us");
 
@@ -167,7 +203,7 @@ fn main() {
             swaps
         })
     };
-    let tcp_reload = drive_tcp(addr, &ds, clients, n_requests);
+    let tcp_reload = drive_tcp(addr, &ds, clients, n_requests, 16);
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     let swaps = churn.join().unwrap();
     println!("tcp + reload churn     {tcp_reload:>10.0} req/s   ({swaps} hot swaps)");
@@ -175,13 +211,71 @@ fn main() {
     assert_eq!(reloadable.epoch(), swaps, "every swap must bump the epoch");
 
     server.shutdown();
+
+    // Phase 3: connection sweep — both transports, up to 1000 concurrent
+    // connections on the event loop (the threaded transport is capped at
+    // 100: two OS threads per connection does not scale past that, which
+    // is the point of the comparison).
+    println!("\n== connection sweep (window 4, connect excluded by barrier) ==");
+    let sweep_n: usize = if fast { 4_000 } else { 20_000 };
+    // Generous pool queue so windowed traffic is never backpressured:
+    // 1000 conns x window 4 stays far below both the queue depth and the
+    // derived admission bounds.
+    let sweep_pool = ServerConfig {
+        batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(200) },
+        queue_depth: 16_384,
+        workers: 2,
+    };
+    let sweep_points: &[(Transport, usize)] = &[
+        (Transport::Threads, 10),
+        (Transport::Threads, 100),
+        (Transport::EventLoop, 10),
+        (Transport::EventLoop, 100),
+        (Transport::EventLoop, 1000),
+    ];
+    let mut rows: Vec<Json> = Vec::new();
+    let mut threads_at_100 = 0.0f64;
+    let mut eventloop_at_1000 = 0.0f64;
+    for &(transport, n_conns) in sweep_points {
+        let server = NetServer::start(
+            "127.0.0.1:0",
+            BatchedLtls(model.clone()),
+            NetConfig { server: sweep_pool.clone(), transport, ..NetConfig::default() },
+        )
+        .expect("start sweep server");
+        let rps = drive_tcp(server.addr(), &ds, n_conns, sweep_n, 4);
+        assert_eq!(
+            server.accepted_connections(),
+            n_conns as u64,
+            "sweep server lost connections"
+        );
+        println!("{transport:<11} {n_conns:>5} conns   {rps:>10.0} req/s");
+        server.shutdown();
+        if transport == Transport::Threads && n_conns == 100 {
+            threads_at_100 = rps;
+        }
+        if transport == Transport::EventLoop && n_conns == 1000 {
+            eventloop_at_1000 = rps;
+        }
+        let tcode = match transport {
+            Transport::Threads => 0usize,
+            Transport::EventLoop => 1usize,
+        };
+        rows.push(Json::obj(vec![
+            ("transport", Json::from(tcode)),
+            ("clients", Json::from(n_conns)),
+            ("req_per_s", Json::Num(rps)),
+        ]));
+    }
     std::fs::remove_dir_all(&dir).ok();
 
     let reload_ratio = tcp_reload / tcp_plain;
     let net_overhead = tcp_plain / inproc;
+    let many_conn_ratio = eventloop_at_1000 / threads_at_100;
     println!(
         "\nreload_ratio (churn/plain) = {reload_ratio:.2}   transport ratio (tcp/in-process) = {net_overhead:.2}"
     );
+    println!("many_conn_ratio (event-loop@1000 / threads@100) = {many_conn_ratio:.2}");
 
     let json = Json::obj(vec![
         ("bench", Json::from("serve_network")),
@@ -190,10 +284,12 @@ fn main() {
         ("reload_swaps", Json::from(swaps as usize)),
         ("reload_ratio", Json::Num(reload_ratio)),
         ("net_vs_inproc_ratio", Json::Num(net_overhead)),
+        ("many_conn_ratio", Json::Num(many_conn_ratio)),
         ("inproc_req_per_s", Json::Num(inproc)),
         ("tcp_req_per_s", Json::Num(tcp_plain)),
         ("tcp_reload_req_per_s", Json::Num(tcp_reload)),
         ("p99_us", Json::Num(p99_us)),
+        ("results", Json::Arr(rows)),
     ]);
     println!("json: {}", json.dump());
 }

@@ -4,6 +4,7 @@
 
 use crate::util::bench::fmt_ns;
 use crate::util::timer::LatencyHistogram;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Per-worker counters (one slot per worker thread in the pool).
@@ -145,6 +146,70 @@ impl ServingMetrics {
     }
 }
 
+/// Lock-free transport-level gauges shared between the network frontend's
+/// accept path, its per-connection I/O, and the `METRICS` renderer.
+///
+/// Both transports ([`super::transport`]) update the same set, so a scrape
+/// reads identically whether the frontend runs thread-per-connection or
+/// the poll(2) event loop — only `poll_wakeups_total` stays at zero under
+/// the threaded transport (it has no poll threads to wake).
+#[derive(Debug, Default)]
+pub struct TransportGauges {
+    /// Connections currently open (accepted, not yet torn down).
+    open_connections: AtomicUsize,
+    /// Times a poll thread was woken by its self-pipe (event loop only).
+    poll_wakeups_total: AtomicU64,
+    /// High-water mark of any single connection's buffered reply bytes.
+    write_buf_peak: AtomicUsize,
+}
+
+impl TransportGauges {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn conn_opened(&self) {
+        self.open_connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn conn_closed(&self) {
+        self.open_connections.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn open_connections(&self) -> usize {
+        self.open_connections.load(Ordering::Relaxed)
+    }
+
+    pub fn record_poll_wakeup(&self) {
+        self.poll_wakeups_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn poll_wakeups(&self) -> u64 {
+        self.poll_wakeups_total.load(Ordering::Relaxed)
+    }
+
+    /// Raise the write-buffer high-water mark to `bytes` if it exceeds
+    /// the current peak (monotone; races only under-report transiently).
+    pub fn observe_write_buf(&self, bytes: usize) {
+        self.write_buf_peak.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    pub fn write_buf_peak(&self) -> usize {
+        self.write_buf_peak.load(Ordering::Relaxed)
+    }
+
+    /// The transport's gauge lines for the `METRICS` endpoint, matching
+    /// the `ltls_net_*` namespace of [`super::transport`]'s renderer.
+    pub fn prometheus(&self) -> String {
+        format!(
+            "ltls_net_open_connections {}\nltls_net_poll_wakeups_total {}\nltls_net_write_buf_peak_bytes {}\n",
+            self.open_connections(),
+            self.poll_wakeups(),
+            self.write_buf_peak(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,5 +274,26 @@ mod tests {
         let pw = m.per_worker();
         assert_eq!(pw.len(), 6);
         assert_eq!(pw[5].requests, 2);
+    }
+
+    #[test]
+    fn transport_gauges_track_and_render() {
+        let g = TransportGauges::new();
+        g.conn_opened();
+        g.conn_opened();
+        g.conn_closed();
+        g.record_poll_wakeup();
+        g.observe_write_buf(512);
+        g.observe_write_buf(128); // below peak: no change
+        assert_eq!(g.open_connections(), 1);
+        assert_eq!(g.poll_wakeups(), 1);
+        assert_eq!(g.write_buf_peak(), 512);
+        let text = g.prometheus();
+        assert!(text.contains("ltls_net_open_connections 1"), "{text}");
+        assert!(text.contains("ltls_net_poll_wakeups_total 1"), "{text}");
+        assert!(text.contains("ltls_net_write_buf_peak_bytes 512"), "{text}");
+        for line in text.lines() {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line {line:?}");
+        }
     }
 }

@@ -19,28 +19,41 @@
 //! this offline build, and the workload is CPU-bound anyway — a small
 //! fixed worker pool over a bounded queue is the right shape.
 //!
-//! Two further layers make the pool a deployable service:
+//! Three further layers make the pool a deployable service:
 //!
 //! * [`transport`] — the TCP frontend (`ltls serve --listen HOST:PORT`):
 //!   a newline-delimited request protocol with JSON-line replies, bounded
 //!   admission (backpressure errors instead of unbounded queueing), a
-//!   plaintext `METRICS` endpoint and graceful drain on shutdown.
+//!   plaintext `METRICS` endpoint and graceful drain on shutdown. The
+//!   wire contract is specified in `docs/PROTOCOL.md`.
+//! * [`event_loop`] — the default connection frontend behind
+//!   [`transport::NetServer`]: a poll(2) event loop multiplexing every
+//!   connection over a small fixed pool of poll threads
+//!   (`--transport event-loop`; the thread-per-connection oracle stays
+//!   available as `--transport threads`).
 //! * [`reload`] — hot model reload: an epoch-counted `Mutex<Arc<_>>`
 //!   model slot ([`reload::ModelSlot`]) swapped atomically between
 //!   micro-batches by the `RELOAD` control command or the
 //!   `--watch-model` file poller, with zero dropped or misrouted
 //!   in-flight requests.
+//!
+//! The crate-wide layer map, with the life of a request through this
+//! coordinator (accept → frame → batcher → worker pool → reload slot →
+//! reply), is `docs/ARCHITECTURE.md`.
 
 pub mod batcher;
+#[cfg(unix)]
+pub mod event_loop;
 pub mod metrics;
 pub mod reload;
 pub mod server;
 pub mod transport;
 
 pub use batcher::{Batch, BatcherConfig, Stamped};
-pub use metrics::{ServingMetrics, WorkerStats};
+pub use metrics::{ServingMetrics, TransportGauges, WorkerStats};
 pub use reload::{ModelSlot, ModelWatcher, ReloadableLtls};
 pub use server::{
-    BatchedLtls, PredictServer, Request, Response, ServerConfig, SubmitError, Submitter,
+    BatchedLtls, CompletionNotify, PredictServer, Request, Response, ServerConfig, SubmitError,
+    Submitter,
 };
-pub use transport::{NetConfig, NetServer};
+pub use transport::{NetConfig, NetServer, Transport};

@@ -25,6 +25,17 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+/// Readiness hook a worker fires after a request's response has been sent
+/// on its reply channel. The event-loop transport
+/// ([`super::event_loop`]) registers one per connection: the hook marks
+/// the connection reply-ready and wakes its poll thread, so completions
+/// are readiness-driven instead of each connection parking a thread on a
+/// blocking `recv`. Must be cheap and non-blocking — it runs on the
+/// worker's batch loop.
+pub trait CompletionNotify: Send + Sync {
+    fn completed(&self);
+}
+
 /// A prediction request: sparse feature vector + top-k + reply channel.
 pub struct Request {
     pub indices: Vec<u32>,
@@ -32,6 +43,9 @@ pub struct Request {
     pub k: usize,
     pub enqueued: Instant,
     reply: Sender<Response>,
+    /// Fired after `reply.send` (see [`CompletionNotify`]); `None` for
+    /// callers that block on the reply receiver instead.
+    notify: Option<Arc<dyn CompletionNotify>>,
 }
 
 impl Request {
@@ -40,7 +54,7 @@ impl Request {
     /// going through a worker pool.
     #[cfg(test)]
     pub(crate) fn detached(indices: Vec<u32>, values: Vec<f32>, k: usize) -> Request {
-        Request { indices, values, k, enqueued: Instant::now(), reply: channel().0 }
+        Request { indices, values, k, enqueued: Instant::now(), reply: channel().0, notify: None }
     }
 }
 
@@ -298,7 +312,21 @@ impl Submitter {
         values: Vec<f32>,
         k: usize,
     ) -> Result<Receiver<Response>, SubmitError> {
-        try_submit_on(&self.tx, indices, values, k)
+        try_submit_on(&self.tx, indices, values, k, None)
+    }
+
+    /// [`Self::try_submit`] with a completion hook: `notify.completed()`
+    /// fires after the worker sends the response, so the caller can poll
+    /// the returned receiver with `try_recv` on wake-up instead of
+    /// blocking a thread on it.
+    pub fn try_submit_with_notify(
+        &self,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+        k: usize,
+        notify: Arc<dyn CompletionNotify>,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        try_submit_on(&self.tx, indices, values, k, Some(notify))
     }
 }
 
@@ -307,9 +335,10 @@ fn try_submit_on(
     indices: Vec<u32>,
     values: Vec<f32>,
     k: usize,
+    notify: Option<Arc<dyn CompletionNotify>>,
 ) -> Result<Receiver<Response>, SubmitError> {
     let (reply, rx) = channel();
-    let req = Request { indices, values, k, enqueued: Instant::now(), reply };
+    let req = Request { indices, values, k, enqueued: Instant::now(), reply, notify };
     match tx.try_send(req) {
         Ok(()) => Ok(rx),
         Err(mpsc::TrySendError::Full(_)) => Err(SubmitError::QueueFull),
@@ -364,6 +393,11 @@ impl PredictServer {
                         for (req, resp) in batch.items.into_iter().zip(responses.drain(..)) {
                             m.record_request_latency(req.enqueued.elapsed().as_nanos() as u64);
                             let _ = req.reply.send(resp);
+                            // After the send: a notified poller's try_recv
+                            // must observe the response.
+                            if let Some(n) = &req.notify {
+                                n.completed();
+                            }
                         }
                     }
                 })
@@ -382,7 +416,7 @@ impl PredictServer {
     /// Blocks when the bounded queue is full (backpressure).
     pub fn submit(&self, indices: Vec<u32>, values: Vec<f32>, k: usize) -> Receiver<Response> {
         let (reply, rx) = channel();
-        let req = Request { indices, values, k, enqueued: Instant::now(), reply };
+        let req = Request { indices, values, k, enqueued: Instant::now(), reply, notify: None };
         self.tx.send(req).expect("server stopped");
         rx
     }
@@ -398,7 +432,7 @@ impl PredictServer {
         values: Vec<f32>,
         k: usize,
     ) -> Result<Receiver<Response>, SubmitError> {
-        try_submit_on(&self.tx, indices, values, k)
+        try_submit_on(&self.tx, indices, values, k, None)
     }
 
     /// A cloneable submission handle. The network frontend hands one to
@@ -506,6 +540,39 @@ mod tests {
         for rx in pending {
             rx.recv().unwrap();
         }
+        server.shutdown();
+    }
+
+    /// The worker fires the completion hook only after the reply channel
+    /// holds the response — a notified poller's `try_recv` must succeed.
+    #[test]
+    fn completion_notify_fires_after_reply_is_receivable() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct Count(AtomicUsize);
+        impl CompletionNotify for Count {
+            fn completed(&self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let server = PredictServer::start(
+            Echo,
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(50) },
+                queue_depth: 8,
+                workers: 1,
+            },
+        );
+        let sub = server.submitter();
+        let n = Arc::new(Count(AtomicUsize::new(0)));
+        let hook: Arc<dyn CompletionNotify> = Arc::clone(&n) as _;
+        let rx = sub.try_submit_with_notify(vec![7], vec![1.0], 1, hook).unwrap();
+        let t0 = Instant::now();
+        while n.0.load(Ordering::SeqCst) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "notify never fired");
+            std::thread::yield_now();
+        }
+        let resp = rx.try_recv().expect("response not receivable after notify fired");
+        assert_eq!(resp.topk[0].0, 7);
         server.shutdown();
     }
 

@@ -1,53 +1,31 @@
 //! The network serving frontend: a std-only TCP transport in front of the
 //! batching multi-worker prediction pool (`ltls serve --listen HOST:PORT`).
 //!
-//! ## Wire protocol (newline-delimited)
+//! The wire protocol (newline-delimited text; one reply line per request
+//! line, in submission order per connection) is specified normatively in
+//! `docs/PROTOCOL.md` — framing, the request/response grammar, the
+//! PING / METRICS / RELOAD / SHUTDOWN commands, the backpressure error
+//! shape and the drain semantics live there, not here. The crate-level
+//! picture (which layer does what, life of a request) is
+//! `docs/ARCHITECTURE.md`.
 //!
-//! Requests are single text lines; every line gets exactly one reply line,
-//! in request order per connection (pipelining is encouraged):
+//! Two interchangeable transports implement that contract behind one
+//! [`NetServer`] handle, selected by [`NetConfig::transport`]:
 //!
-//! ```text
-//! <k> <i:v> <i:v> ...     top-k prediction for a sparse feature vector
-//!                         → {"topk":[[label,score],...]}
-//! PING                    → {"ok":true}
-//! METRICS                 → plaintext metrics block (multi-line,
-//!                           prometheus-style `name value` gauges,
-//!                           terminated by a `# end` line)
-//! RELOAD [path]           hot-swap the model from `path` (or the path
-//!                         the server was started from)
-//!                         → {"ok":true,"epoch":N,...} or {"error":...}
-//! SHUTDOWN                → {"ok":true,"draining":true}, then the server
-//!                           drains gracefully and exits
-//! ```
+//! * [`Transport::EventLoop`] (default) — `O_NONBLOCK` sockets
+//!   multiplexed by a small fixed pool of poll(2) threads
+//!   ([`super::event_loop`]); scales to thousands of connections.
+//! * [`Transport::Threads`] — the original two-threads-per-connection
+//!   frontend, kept as the behavioral oracle (`--transport threads`);
+//!   simple and debuggable, but capped at a few hundred connections.
 //!
-//! Malformed lines (bad `k`, bad `i:v` tokens, non-finite values,
-//! duplicate or out-of-range feature indices, over-long lines) are
-//! answered with `{"error":...}` — the connection stays usable except
-//! after an over-long line, which cannot be resynchronized safely.
-//!
-//! ## Admission control (backpressure)
-//!
-//! The transport bounds the number of requests that are *admitted* —
-//! submitted to the worker pool but not yet answered — across all
-//! connections. Over the bound (or when the pool's own bounded queue is
-//! full) a request is answered immediately with
-//! `{"error":"backpressure: ...","backpressure":true}` instead of being
-//! queued unboundedly; clients should back off and retry. Control
-//! commands are never subject to admission control.
-//!
-//! ## Threading and graceful drain
-//!
-//! One accept thread (non-blocking listener polled every few ms), two
-//! threads per connection: a reader that parses lines and submits to the
-//! pool, and a writer that emits replies in submission order (so a batch
-//! answered out of order across connections can never misroute within
-//! one). [`NetServer::shutdown`] — triggered programmatically or by the
-//! `SHUTDOWN` command via [`NetServer::wait_for_shutdown_request`] —
-//! stops accepting, half-closes every connection's read side, lets each
-//! writer flush all in-flight responses, joins the connection threads and
-//! only then stops the worker pool: zero admitted requests are dropped.
+//! Both share this module's protocol core — [`handle_line`] (command
+//! dispatch, request validation, two-level admission control) and the
+//! render helpers — so a reply is byte-identical whichever transport
+//! produced it; `tests/serve_network.rs` pins that by running its whole
+//! suite against each transport.
 
-use super::metrics::ServingMetrics;
+use super::metrics::{ServingMetrics, TransportGauges};
 use super::reload::ReloadableLtls;
 use super::server::{BatchModel, PredictServer, Response, ServerConfig, SubmitError, Submitter};
 use crate::util::json::Json;
@@ -58,16 +36,58 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Longest accepted request line (defends the per-connection read buffer
 /// against a peer that never sends a newline).
-const MAX_LINE: u64 = 1 << 20;
+pub(crate) const MAX_LINE: u64 = 1 << 20;
 /// Largest accepted top-k (defends the per-request output allocation).
 const MAX_K: usize = 4096;
-/// Accept-loop poll interval (the listener is non-blocking so shutdown
-/// can interrupt it without a wake-up connection).
+/// Accept-loop poll interval of the threaded transport (its listener is
+/// non-blocking so shutdown can interrupt it without a wake-up
+/// connection; the event loop polls the listener fd instead).
 const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Which frontend multiplexes the connections (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// Two threads per connection (reader + writer). The pinned oracle.
+    Threads,
+    /// poll(2) event loop: a fixed pool of poll threads multiplexing
+    /// every connection through nonblocking sockets. Unix-only; other
+    /// platforms fall back to [`Transport::Threads`].
+    EventLoop,
+}
+
+impl Default for Transport {
+    fn default() -> Self {
+        if cfg!(unix) {
+            Transport::EventLoop
+        } else {
+            Transport::Threads
+        }
+    }
+}
+
+impl std::str::FromStr for Transport {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Transport, String> {
+        match s {
+            "threads" => Ok(Transport::Threads),
+            "event-loop" | "event_loop" | "eventloop" => Ok(Transport::EventLoop),
+            other => Err(format!("unknown transport {other:?} (want threads | event-loop)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Transport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Transport::Threads => write!(f, "threads"),
+            Transport::EventLoop => write!(f, "event-loop"),
+        }
+    }
+}
 
 /// Network frontend configuration.
 #[derive(Clone, Debug, Default)]
@@ -80,19 +100,63 @@ pub struct NetConfig {
     pub max_inflight: usize,
     /// Per-connection share of the admission bound (0 → `max_inflight`
     /// / 4, at least 1). Bounds how much of the global budget one
-    /// pipelining-but-not-reading client can pin while its writer sits
-    /// in the write timeout, so a single bad client cannot backpressure
+    /// pipelining-but-not-reading client can pin while its replies wait
+    /// on the write side, so a single bad client cannot backpressure
     /// everyone else.
     pub max_inflight_per_conn: usize,
+    /// Which connection frontend to run (default: event loop on unix).
+    pub transport: Transport,
+    /// Poll threads of the event-loop transport (0 → `min(4, cores)`).
+    /// Ignored by [`Transport::Threads`].
+    pub poll_threads: usize,
+    /// Per-connection buffered-reply high-water mark in bytes
+    /// (0 → 256 KiB). Over it the event loop stops *reading* that
+    /// connection — backpressure on the pipe — instead of buffering
+    /// replies unboundedly for a client that has stopped draining them.
+    pub conn_buf_bytes: usize,
+    /// How long a connection's write side may make zero progress before
+    /// it is declared dead and its buffered replies are discarded
+    /// (0 → 10 000 ms). Progress resets the clock, so an alive-but-slow
+    /// reader is never torn down mid-frame.
+    pub write_stall_ms: u64,
 }
 
-/// State shared by the accept loop, every connection thread and the
-/// server handle.
-struct Shared {
+impl NetConfig {
+    /// The resolved write-stall budget (`0 → 10s`).
+    pub fn write_stall(&self) -> Duration {
+        if self.write_stall_ms == 0 {
+            Duration::from_secs(10)
+        } else {
+            Duration::from_millis(self.write_stall_ms)
+        }
+    }
+
+    /// The resolved per-connection reply high-water mark (`0 → 256 KiB`).
+    pub fn wbuf_cap(&self) -> usize {
+        if self.conn_buf_bytes == 0 {
+            256 << 10
+        } else {
+            self.conn_buf_bytes
+        }
+    }
+
+    /// The resolved poll-thread count (`0 → min(4, cores)`).
+    pub fn n_poll_threads(&self) -> usize {
+        if self.poll_threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
+        } else {
+            self.poll_threads
+        }
+    }
+}
+
+/// State shared by both transports' connection handling and the server
+/// handle: the pool, admission bounds and counters, drain signaling.
+pub(crate) struct Shared {
     /// The worker pool; taken (once) by the graceful drain.
-    pool: Mutex<Option<PredictServer>>,
+    pub(crate) pool: Mutex<Option<PredictServer>>,
     /// The pool's metrics, kept reachable after the pool is taken.
-    metrics: Arc<ServingMetrics>,
+    pub(crate) metrics: Arc<ServingMetrics>,
     /// Hot-reload handle when the served model is swappable.
     reload: Option<Arc<ReloadableLtls>>,
     /// Feature bound of a non-reloadable model (reloadable models are
@@ -106,19 +170,26 @@ struct Shared {
     /// Requests refused with a backpressure error.
     rejected: AtomicU64,
     /// Connections accepted over the server's lifetime.
-    accepted_conns: AtomicU64,
+    pub(crate) accepted_conns: AtomicU64,
     /// Set once the drain began: stop accepting, readers wind down.
-    draining: AtomicBool,
+    pub(crate) draining: AtomicBool,
     /// Set by the `SHUTDOWN` command; observed by
     /// [`NetServer::wait_for_shutdown_request`].
     shutdown_requested: Mutex<bool>,
     shutdown_cv: Condvar,
-    /// Live connections (id → stream clone) so the drain can half-close
-    /// blocked readers.
+    /// Live connections (id → stream clone) so the threaded transport's
+    /// drain can half-close blocked readers. (The event loop owns its
+    /// streams directly and leaves this empty.)
     conns: Mutex<Vec<(u64, TcpStream)>>,
-    /// Count of live connection threads, for the drain barrier.
-    live_conns: Mutex<usize>,
-    conn_cv: Condvar,
+    /// Count of live connections, for the drain barrier and metrics.
+    pub(crate) live_conns: Mutex<usize>,
+    pub(crate) conn_cv: Condvar,
+    /// Transport-level gauges (open conns, poll wakeups, write-buf peak).
+    pub(crate) gauges: TransportGauges,
+    /// Write-stall budget (see [`NetConfig::write_stall_ms`]).
+    pub(crate) write_stall: Duration,
+    /// Per-connection reply high-water mark (event loop read pausing).
+    pub(crate) wbuf_cap: usize,
 }
 
 impl Shared {
@@ -136,13 +207,31 @@ impl Shared {
         *g = true;
         self.shutdown_cv.notify_all();
     }
+
+    /// Close one admitted request's in-flight window (reply handed to
+    /// the connection's write side, whether or not the client is still
+    /// there). Pairs with the admission bumps in [`handle_line`].
+    pub(crate) fn release_inflight(&self, conn_inflight: &AtomicUsize) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        conn_inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The per-transport machinery behind a [`NetServer`].
+enum Backend {
+    Threads {
+        accept: Option<JoinHandle<()>>,
+    },
+    #[cfg(unix)]
+    EventLoop(super::event_loop::EventLoopHandle),
 }
 
 /// Handle to a running network server (see the module docs).
 pub struct NetServer {
     addr: SocketAddr,
     shared: Arc<Shared>,
-    accept: Option<JoinHandle<()>>,
+    transport: Transport,
+    backend: Backend,
 }
 
 impl NetServer {
@@ -187,6 +276,9 @@ impl NetServer {
         } else {
             cfg.max_inflight_per_conn
         };
+        // The poll(2) shim is unix-only; elsewhere the threaded transport
+        // is the only one available.
+        let transport = if cfg!(unix) { cfg.transport } else { Transport::Threads };
         let pool = PredictServer::start(model, cfg.server.clone());
         let metrics = Arc::clone(&pool.metrics);
         let shared = Arc::new(Shared {
@@ -205,18 +297,43 @@ impl NetServer {
             conns: Mutex::new(Vec::new()),
             live_conns: Mutex::new(0),
             conn_cv: Condvar::new(),
+            gauges: TransportGauges::new(),
+            write_stall: cfg.write_stall(),
+            wbuf_cap: cfg.wbuf_cap(),
         });
-        let accept_shared = Arc::clone(&shared);
-        let accept = std::thread::Builder::new()
-            .name("ltls-net-accept".to_string())
-            .spawn(move || accept_loop(&listener, &accept_shared))
-            .map_err(|e| format!("spawn accept thread: {e}"))?;
-        Ok(NetServer { addr, shared, accept: Some(accept) })
+        let backend = match transport {
+            Transport::Threads => {
+                let accept_shared = Arc::clone(&shared);
+                let accept = std::thread::Builder::new()
+                    .name("ltls-net-accept".to_string())
+                    .spawn(move || accept_loop(&listener, &accept_shared))
+                    .map_err(|e| format!("spawn accept thread: {e}"))?;
+                Backend::Threads { accept: Some(accept) }
+            }
+            #[cfg(unix)]
+            Transport::EventLoop => Backend::EventLoop(
+                super::event_loop::EventLoopHandle::spawn(
+                    listener,
+                    Arc::clone(&shared),
+                    cfg.n_poll_threads(),
+                )
+                .map_err(|e| format!("spawn event loop: {e}"))?,
+            ),
+            #[cfg(not(unix))]
+            Transport::EventLoop => unreachable!("resolved to Threads above"),
+        };
+        Ok(NetServer { addr, shared, transport, backend })
     }
 
     /// The bound address (resolves port 0).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The transport actually running (the configured one, except on
+    /// non-unix platforms where the event loop falls back to threads).
+    pub fn transport(&self) -> Transport {
+        self.transport
     }
 
     /// The worker pool's serving metrics.
@@ -239,6 +356,11 @@ impl NetServer {
         self.shared.accepted_conns.load(Ordering::Relaxed)
     }
 
+    /// Peak buffered-reply bytes any single connection reached.
+    pub fn write_buf_peak(&self) -> usize {
+        self.shared.gauges.write_buf_peak()
+    }
+
     /// True once a client issued `SHUTDOWN`.
     pub fn shutdown_requested(&self) -> bool {
         *self.shared.shutdown_requested.lock().unwrap()
@@ -254,27 +376,41 @@ impl NetServer {
     }
 
     /// Graceful drain: stop accepting, half-close every connection's read
-    /// side (no new requests), let the writers flush every in-flight
-    /// response, join all connection threads, then stop the worker pool.
+    /// side (no new requests), let the write sides flush every in-flight
+    /// response, join the transport threads, then stop the worker pool.
     pub fn shutdown(mut self) {
         let shared = Arc::clone(&self.shared);
         shared.draining.store(true, Ordering::SeqCst);
-        // Unblock readers stuck in read_line: no more requests come in,
-        // but each connection's write side stays open until its writer
-        // has flushed everything already admitted.
-        for (_, s) in shared.conns.lock().unwrap().iter() {
-            let _ = s.shutdown(Shutdown::Read);
-        }
-        {
-            let mut live = shared.live_conns.lock().unwrap();
-            while *live > 0 {
-                let (g, _) =
-                    shared.conn_cv.wait_timeout(live, Duration::from_millis(50)).unwrap();
-                live = g;
+        match &mut self.backend {
+            Backend::Threads { accept } => {
+                // Unblock readers stuck in read_line: no more requests
+                // come in, but each connection's write side stays open
+                // until its writer has flushed everything admitted.
+                for (_, s) in shared.conns.lock().unwrap().iter() {
+                    let _ = s.shutdown(Shutdown::Read);
+                }
+                {
+                    let mut live = shared.live_conns.lock().unwrap();
+                    while *live > 0 {
+                        let (g, _) = shared
+                            .conn_cv
+                            .wait_timeout(live, Duration::from_millis(50))
+                            .unwrap();
+                        live = g;
+                    }
+                }
+                if let Some(h) = accept.take() {
+                    let _ = h.join();
+                }
             }
-        }
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
+            #[cfg(unix)]
+            Backend::EventLoop(h) => {
+                // Wake every poll thread; each half-closes its
+                // connections, flushes what is owed and exits once its
+                // set is empty. Joining them is the drain barrier.
+                h.kick();
+                h.join();
+            }
         }
         if let Some(pool) = shared.pool.lock().unwrap().take() {
             pool.shutdown();
@@ -285,13 +421,19 @@ impl NetServer {
 impl Drop for NetServer {
     fn drop(&mut self) {
         // Best-effort unwind for a handle dropped without `shutdown()`:
-        // signal the accept loop and kick every connection loose. (After
-        // a graceful `shutdown()` both are no-ops.)
+        // signal the transport threads and kick every connection loose.
+        // (After a graceful `shutdown()` this is a no-op.)
         self.shared.draining.store(true, Ordering::SeqCst);
-        if let Ok(conns) = self.shared.conns.lock() {
-            for (_, s) in conns.iter() {
-                let _ = s.shutdown(Shutdown::Both);
+        match &self.backend {
+            Backend::Threads { .. } => {
+                if let Ok(conns) = self.shared.conns.lock() {
+                    for (_, s) in conns.iter() {
+                        let _ = s.shutdown(Shutdown::Both);
+                    }
+                }
             }
+            #[cfg(unix)]
+            Backend::EventLoop(h) => h.kick(),
         }
     }
 }
@@ -337,13 +479,10 @@ fn spawn_connection(shared: &Arc<Shared>, stream: TcpStream, id: u64) {
     let Some(submitter) = shared.pool.lock().unwrap().as_ref().map(|p| p.submitter()) else {
         return; // draining: the pool is already gone
     };
-    // A peer that stops reading must not pin the writer (and with it the
-    // graceful drain) on a full send buffer forever: time the write out,
-    // mark the connection broken, and keep draining its replies.
-    let _ = write_stream.set_write_timeout(Some(Duration::from_secs(10)));
     *shared.live_conns.lock().unwrap() += 1;
     shared.conns.lock().unwrap().push((id, registry_stream));
     shared.accepted_conns.fetch_add(1, Ordering::Relaxed);
+    shared.gauges.conn_opened();
     let conn_shared = Arc::clone(shared);
     let spawned = std::thread::Builder::new()
         .name(format!("ltls-net-conn-{id}"))
@@ -370,12 +509,14 @@ fn spawn_connection(shared: &Arc<Shared>, stream: TcpStream, id: u64) {
             // a dangling sender.
             drop(submitter);
             conn_shared.conns.lock().unwrap().retain(|(cid, _)| *cid != id);
+            conn_shared.gauges.conn_closed();
             let mut live = conn_shared.live_conns.lock().unwrap();
             *live -= 1;
             conn_shared.conn_cv.notify_all();
         });
     if spawned.is_err() {
         shared.conns.lock().unwrap().retain(|(cid, _)| *cid != id);
+        shared.gauges.conn_closed();
         let mut live = shared.live_conns.lock().unwrap();
         *live -= 1;
         shared.conn_cv.notify_all();
@@ -403,57 +544,79 @@ fn reader_loop(
             Err(_) => break,
         };
         if n as u64 >= MAX_LINE && !line.ends_with('\n') {
-            let _ = tx.send(Reply::Immediate(err_json(&format!(
-                "request line exceeds {MAX_LINE} bytes"
-            ))));
+            let _ = tx.send(Reply::Immediate(oversized_line_json()));
             break; // cannot resynchronize mid-line
         }
         let trimmed = line.trim();
         if trimmed.is_empty() {
             continue;
         }
-        if !handle_line(shared, trimmed, tx, submitter, conn_inflight) {
+        let outcome = handle_line(shared, trimmed, conn_inflight, &mut |i, v, k| {
+            submitter.try_submit(i, v, k)
+        });
+        let close = outcome.close;
+        let _ = tx.send(match outcome.reply {
+            LineReply::Immediate(s) => Reply::Immediate(s),
+            LineReply::Pending(rx) => Reply::Pending(rx),
+        });
+        if close {
             break;
         }
     }
 }
 
-/// Handle one protocol line; returns `false` when the connection should
-/// close (server shutting down).
-fn handle_line(
-    shared: &Arc<Shared>,
+/// The reply to one protocol line, plus whether the connection must
+/// close after emitting it (server shutting down).
+pub(crate) struct LineOutcome {
+    pub(crate) reply: LineReply,
+    pub(crate) close: bool,
+}
+
+pub(crate) enum LineReply {
+    /// Pre-rendered line (protocol errors, command replies, metrics).
+    Immediate(String),
+    /// Response pending from the worker pool; emit it — in submission
+    /// order — once received, then release the admission window.
+    Pending(Receiver<Response>),
+}
+
+impl LineOutcome {
+    fn reply(s: String) -> LineOutcome {
+        LineOutcome { reply: LineReply::Immediate(s), close: false }
+    }
+}
+
+/// How a transport hands a validated `(indices, values, k)` request to
+/// the worker pool (the event loop submits with a completion hook, the
+/// threaded transport plainly).
+pub(crate) type SubmitFn<'a> =
+    &'a mut dyn FnMut(Vec<u32>, Vec<f32>, usize) -> Result<Receiver<Response>, SubmitError>;
+
+/// The transport-independent protocol core: command dispatch, request
+/// validation and the two-level admission control over one line.
+/// `submit` hands a validated request to the pool; admission accounting
+/// around it is identical for both transports — which is what keeps
+/// their replies byte-identical.
+pub(crate) fn handle_line(
+    shared: &Shared,
     line: &str,
-    tx: &Sender<Reply>,
-    submitter: &Submitter,
     conn_inflight: &AtomicUsize,
-) -> bool {
+    submit: SubmitFn<'_>,
+) -> LineOutcome {
     let mut words = line.split_whitespace();
     let head = words.next().unwrap_or("");
     match head {
-        "PING" => {
-            let _ = tx.send(Reply::Immediate("{\"ok\":true}".to_string()));
-            return true;
-        }
-        "METRICS" => {
-            let _ = tx.send(Reply::Immediate(render_metrics(shared)));
-            return true;
-        }
-        "RELOAD" => {
-            let _ = tx.send(Reply::Immediate(handle_reload(shared, words.next())));
-            return true;
-        }
+        "PING" => return LineOutcome::reply("{\"ok\":true}".to_string()),
+        "METRICS" => return LineOutcome::reply(render_metrics(shared)),
+        "RELOAD" => return LineOutcome::reply(handle_reload(shared, words.next())),
         "SHUTDOWN" => {
-            let _ = tx.send(Reply::Immediate("{\"ok\":true,\"draining\":true}".to_string()));
             shared.request_shutdown();
-            return true;
+            return LineOutcome::reply("{\"ok\":true,\"draining\":true}".to_string());
         }
         _ => {}
     }
     match parse_request(line, shared.feature_bound()) {
-        Err(e) => {
-            let _ = tx.send(Reply::Immediate(err_json(&e)));
-            true
-        }
+        Err(e) => LineOutcome::reply(err_json(&e)),
         Ok((k, indices, values)) => {
             // Admission control: this connection's share first (one
             // greedy pipelining client must not pin the whole budget),
@@ -462,30 +625,25 @@ fn handle_line(
             if mine >= shared.per_conn_cap {
                 conn_inflight.fetch_sub(1, Ordering::SeqCst);
                 shared.rejected.fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(Reply::Immediate(backpressure_json(
+                return LineOutcome::reply(backpressure_json(
                     mine,
                     shared.per_conn_cap,
                     "on this connection",
-                )));
-                return true;
+                ));
             }
             let admitted = shared.inflight.fetch_add(1, Ordering::SeqCst);
             if admitted >= shared.max_inflight {
                 shared.inflight.fetch_sub(1, Ordering::SeqCst);
                 conn_inflight.fetch_sub(1, Ordering::SeqCst);
                 shared.rejected.fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(Reply::Immediate(backpressure_json(
+                return LineOutcome::reply(backpressure_json(
                     admitted,
                     shared.max_inflight,
                     "in flight",
-                )));
-                return true;
+                ));
             }
-            match submitter.try_submit(indices, values, k) {
-                Ok(rx) => {
-                    let _ = tx.send(Reply::Pending(rx));
-                    true
-                }
+            match submit(indices, values, k) {
+                Ok(rx) => LineOutcome { reply: LineReply::Pending(rx), close: false },
                 Err(SubmitError::QueueFull) => {
                     shared.inflight.fetch_sub(1, Ordering::SeqCst);
                     conn_inflight.fetch_sub(1, Ordering::SeqCst);
@@ -493,21 +651,22 @@ fn handle_line(
                     // Distinct from the admission-bound rejection: here
                     // the limit hit was the pool's --queue-depth, not
                     // --max-inflight.
-                    let _ = tx.send(Reply::Immediate(queue_full_json()));
-                    true
+                    LineOutcome::reply(queue_full_json())
                 }
                 Err(SubmitError::Closed) => {
                     shared.inflight.fetch_sub(1, Ordering::SeqCst);
                     conn_inflight.fetch_sub(1, Ordering::SeqCst);
-                    let _ = tx.send(Reply::Immediate(err_json("server is shutting down")));
-                    false
+                    LineOutcome {
+                        reply: LineReply::Immediate(err_json("server is shutting down")),
+                        close: true,
+                    }
                 }
             }
         }
     }
 }
 
-fn handle_reload(shared: &Arc<Shared>, arg: Option<&str>) -> String {
+fn handle_reload(shared: &Shared, arg: Option<&str>) -> String {
     let Some(reload) = &shared.reload else {
         return err_json(
             "this server has no reloadable model (start `ltls serve --listen` with --model)",
@@ -584,14 +743,68 @@ fn parse_request(
     Ok((k, indices, values))
 }
 
+/// Write `buf` to `stream` in full, tolerating short writes and timeout
+/// slices as long as the peer keeps accepting bytes within `stall` of
+/// the last progress. Frames are never torn: either the whole buffer
+/// lands on the socket, or the connection is declared dead (hard error,
+/// peer closed, or zero progress for a full stall budget) and `broken`
+/// is set. The buffer is consumed either way.
+fn flush_frames(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    stall: Duration,
+    broken: &mut bool,
+) -> bool {
+    use std::io::ErrorKind;
+    if *broken || buf.is_empty() {
+        buf.clear();
+        return !*broken;
+    }
+    let mut off = 0usize;
+    let mut last_progress = Instant::now();
+    while off < buf.len() {
+        match stream.write(&buf[off..]) {
+            Ok(0) => {
+                *broken = true;
+                break;
+            }
+            Ok(n) => {
+                off += n;
+                last_progress = Instant::now();
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                // A stalled-but-alive reader gets the full stall budget
+                // from its *last* progress, not from the frame's start —
+                // slow is fine, stuck is not.
+                if last_progress.elapsed() >= stall {
+                    *broken = true;
+                    break;
+                }
+            }
+            Err(_) => {
+                *broken = true;
+                break;
+            }
+        }
+    }
+    buf.clear();
+    !*broken
+}
+
 fn writer_loop(
     shared: &Arc<Shared>,
-    stream: TcpStream,
+    mut stream: TcpStream,
     rx: &Receiver<Reply>,
     conn_inflight: &AtomicUsize,
 ) {
     use std::sync::mpsc::TryRecvError;
-    let mut w = std::io::BufWriter::new(stream);
+    let stall = shared.write_stall;
+    // Short blocking-write slices so the stall clock is checked a few
+    // times per budget; progress within a slice resets it.
+    let slice = (stall / 4).clamp(Duration::from_millis(10), Duration::from_secs(1));
+    let _ = stream.set_write_timeout(Some(slice));
+    let mut out: Vec<u8> = Vec::with_capacity(8 << 10);
     let mut broken = false;
     // Burst batching: replies already queued (pipelined traffic) are
     // written back-to-back and flushed once per burst; the buffer is also
@@ -609,18 +822,12 @@ fn writer_loop(
                         Err(TryRecvError::Empty) => {
                             // About to block on the pool: flush what the
                             // client is already owed.
-                            if !broken && w.flush().is_err() {
-                                broken = true;
-                            }
+                            flush_frames(&mut stream, &mut out, stall, &mut broken);
                             resp.recv()
                         }
                         Err(TryRecvError::Disconnected) => resp.recv(),
                     };
-                    // The in-flight window closes when the reply is
-                    // handed to the writer, whether or not the client is
-                    // still there.
-                    shared.inflight.fetch_sub(1, Ordering::SeqCst);
-                    conn_inflight.fetch_sub(1, Ordering::SeqCst);
+                    shared.release_inflight(conn_inflight);
                     match got {
                         Ok(r) => render_response(&r),
                         Err(_) => err_json("server dropped the request (shutting down)"),
@@ -628,22 +835,22 @@ fn writer_loop(
                 }
             };
             if !broken {
-                let ok = w.write_all(line.as_bytes()).and_then(|_| w.write_all(b"\n"));
-                if ok.is_err() {
-                    broken = true; // client gone: keep draining for accounting
-                }
+                out.extend_from_slice(line.as_bytes());
+                out.push(b'\n');
+                shared.gauges.observe_write_buf(out.len());
             }
             if let Ok(more) = rx.try_recv() {
                 next = Some(more);
             }
         }
-        if !broken && w.flush().is_err() {
-            broken = true;
-        }
+        flush_frames(&mut stream, &mut out, stall, &mut broken);
     }
+    // Channel closed (reader done — client EOF, half-close, or drain):
+    // everything already buffered is still owed to the client.
+    flush_frames(&mut stream, &mut out, stall, &mut broken);
 }
 
-fn render_response(resp: &Response) -> String {
+pub(crate) fn render_response(resp: &Response) -> String {
     Json::obj(vec![(
         "topk",
         Json::Arr(
@@ -656,8 +863,15 @@ fn render_response(resp: &Response) -> String {
     .dump()
 }
 
-fn err_json(msg: &str) -> String {
+pub(crate) fn err_json(msg: &str) -> String {
     Json::obj(vec![("error", Json::from(msg))]).dump()
+}
+
+/// The reply to a request line that hit [`MAX_LINE`] without a newline
+/// (both transports close the connection after it — a partially read
+/// line cannot be resynchronized).
+pub(crate) fn oversized_line_json() -> String {
+    err_json(&format!("request line exceeds {MAX_LINE} bytes"))
 }
 
 fn backpressure_json(inflight: usize, max: usize, scope: &str) -> String {
@@ -694,6 +908,7 @@ fn render_metrics(shared: &Shared) -> String {
         shared.accepted_conns.load(Ordering::Relaxed)
     );
     let _ = writeln!(s, "ltls_net_live_connections {}", *shared.live_conns.lock().unwrap());
+    s.push_str(&shared.gauges.prometheus());
     if let Some(r) = &shared.reload {
         let _ = writeln!(s, "ltls_model_epoch {}", r.epoch());
     }
@@ -748,5 +963,88 @@ mod tests {
         assert!(b.get("error").unwrap().as_str().unwrap().contains("9"));
         let q = Json::parse(&queue_full_json()).unwrap();
         assert_eq!(q.get("backpressure"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn transport_parses_and_displays() {
+        assert_eq!("threads".parse::<Transport>().unwrap(), Transport::Threads);
+        assert_eq!("event-loop".parse::<Transport>().unwrap(), Transport::EventLoop);
+        assert_eq!("event_loop".parse::<Transport>().unwrap(), Transport::EventLoop);
+        assert!("kqueue".parse::<Transport>().is_err());
+        assert_eq!(Transport::Threads.to_string(), "threads");
+        assert_eq!(Transport::EventLoop.to_string(), "event-loop");
+    }
+
+    /// Regression (writer tear-down bug): a reader that stalls longer
+    /// than one write-timeout slice but keeps making progress within the
+    /// stall budget must receive every buffered frame intact — the old
+    /// writer marked the connection broken on the first timed-out
+    /// `write_all`, tearing the frame mid-byte and discarding the rest.
+    #[test]
+    fn flush_frames_survives_slow_reader() {
+        use std::io::Read as _;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (mut server_side, _) = listener.accept().unwrap();
+        // Enough to overrun the kernel buffers so writes genuinely block.
+        let payload: Vec<u8> = (0..8 * 1024 * 1024).map(|i| (i % 251) as u8).collect();
+        let reader = std::thread::spawn(move || {
+            let mut c = client;
+            let mut got = Vec::new();
+            let mut chunk = [0u8; 64 << 10];
+            loop {
+                // Slow consumer: drains a chunk, then naps longer than a
+                // write-timeout slice.
+                std::thread::sleep(Duration::from_millis(20));
+                match c.read(&mut chunk) {
+                    Ok(0) => break,
+                    Ok(n) => got.extend_from_slice(&chunk[..n]),
+                    Err(_) => break,
+                }
+            }
+            got
+        });
+        let stall = Duration::from_secs(5);
+        let _ = server_side.set_write_timeout(Some(Duration::from_millis(20)));
+        let mut buf = payload.clone();
+        let mut broken = false;
+        assert!(
+            flush_frames(&mut server_side, &mut buf, stall, &mut broken),
+            "slow-but-alive reader was declared dead"
+        );
+        drop(server_side); // EOF for the reader
+        let got = reader.join().unwrap();
+        assert_eq!(got.len(), payload.len(), "frames were dropped");
+        assert_eq!(got, payload, "frames were torn or reordered");
+    }
+
+    /// A reader making zero progress for a full stall budget is declared
+    /// dead (the drain must not hang on it) and stays dead.
+    #[test]
+    fn flush_frames_gives_up_on_stuck_reader() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (mut server_side, _) = listener.accept().unwrap();
+        let _ = server_side.set_write_timeout(Some(Duration::from_millis(20)));
+        // Never read from `client`: after the kernel buffers fill, no
+        // progress is possible.
+        let mut buf = vec![0u8; 16 * 1024 * 1024];
+        let mut broken = false;
+        let t0 = Instant::now();
+        assert!(!flush_frames(
+            &mut server_side,
+            &mut buf,
+            Duration::from_millis(200),
+            &mut broken
+        ));
+        assert!(broken);
+        assert!(t0.elapsed() < Duration::from_secs(30), "stall detection took too long");
+        // Subsequent flushes on a broken connection discard immediately.
+        let mut buf = vec![1u8; 8];
+        assert!(!flush_frames(&mut server_side, &mut buf, Duration::from_secs(1), &mut broken));
+        assert!(buf.is_empty());
+        drop(client);
     }
 }

@@ -22,7 +22,7 @@ use crate::util::{logaddexp, logsumexp};
 struct ForwardTerms {
     /// Log-sum over complete paths.
     logz: f32,
-    /// full_terms[s] = alpha[b-1][s] + aux edge s + aux_sink.
+    /// `full_terms[s] = alpha[b-1][s]` + aux edge s + aux_sink.
     full_terms: [f32; 2],
 }
 

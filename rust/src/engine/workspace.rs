@@ -17,10 +17,10 @@ pub struct DecodeWorkspace {
     /// list-Viterbi: merge targets for the next step (swapped each step).
     pub(crate) next0: Vec<(f32, u64)>,
     pub(crate) next1: Vec<(f32, u64)>,
-    /// Forward pass: alpha[j-1][s] = log-sum of prefix scores into
+    /// Forward pass: `alpha[j-1][s]` = log-sum of prefix scores into
     /// (step j, state s).
     pub(crate) alpha: Vec<[f32; 2]>,
-    /// Backward pass: beta[j-1][s] = log-sum over suffixes from
+    /// Backward pass: `beta[j-1][s]` = log-sum over suffixes from
     /// (step j, state s) to the sink.
     pub(crate) beta: Vec<[f32; 2]>,
     /// Per-terminal forward contributions (one per early exit).

@@ -1,4 +1,4 @@
-//! Prediction-time measurement (the tables' "prediction time [s]" column:
+//! Prediction-time measurement (the tables' "prediction time `[s]`" column:
 //! total wall time to predict the whole test set), plus the
 //! training-epoch throughput harness used by the parallel-training bench
 //! and the CI perf gate.

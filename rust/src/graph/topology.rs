@@ -140,7 +140,7 @@ pub trait Topology: Clone + Send + Sync + std::fmt::Debug + 'static {
     }
 
     /// Learnable parameters for a linear edge model with `d` features
-    /// (the paper's "model size [M]" accounting).
+    /// (the paper's "model size `[M]`" accounting).
     fn linear_param_count(&self, d: usize) -> usize {
         self.num_edges() * d
     }

@@ -221,7 +221,7 @@ impl Trellis {
     }
 
     /// Model-size accounting: learnable parameters for a linear edge model
-    /// with `d` features (paper's "model size [M]" columns).
+    /// with `d` features (paper's "model size `[M]`" columns).
     pub fn linear_param_count(&self, d: usize) -> usize {
         self.num_edges() * d
     }

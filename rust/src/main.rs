@@ -33,18 +33,24 @@
 //!   of materializing it. Without `--model` it trains a fresh model on
 //!   `--dataset` first (the original smoke path).
 //! * `serve --listen HOST:PORT [--model m.ltls [--mmap]] [--watch-model F]
-//!   [--max-inflight N] [--queue-depth N] [--batch B] [--workers W]
-//!   [--max-wait-us U]` — the **network** frontend: newline-delimited
-//!   requests (`<k> <i:v> <i:v> ...`) answered with JSON lines, plus the
-//!   `PING` / `METRICS` / `RELOAD [path]` / `SHUTDOWN` control commands.
-//!   With `--model` the model is hot-reloadable (atomic swap between
-//!   micro-batches, zero dropped requests); `--watch-model F` polls `F`
-//!   and swaps it in whenever the file changes and validates. Admission
-//!   is bounded globally (`--max-inflight`) and per connection
-//!   (`--max-inflight-per-conn`, so one greedy client cannot pin the
-//!   whole budget): overload returns a backpressure error instead of
-//!   queueing unboundedly. Runs until a client sends `SHUTDOWN`, then
-//!   drains gracefully.
+//!   [--transport threads|event-loop] [--poll-threads N]
+//!   [--conn-buf-bytes N] [--write-stall-ms MS] [--max-inflight N]
+//!   [--queue-depth N] [--batch B] [--workers W] [--max-wait-us U]` —
+//!   the **network** frontend: newline-delimited requests
+//!   (`<k> <i:v> <i:v> ...`) answered with JSON lines, plus the
+//!   `PING` / `METRICS` / `RELOAD [path]` / `SHUTDOWN` control commands
+//!   (the wire contract is `docs/PROTOCOL.md`). Connections are
+//!   multiplexed by a poll(2) event loop over a fixed pool of
+//!   `--poll-threads` threads by default — thousands of concurrent
+//!   clients on a handful of threads; `--transport threads` selects the
+//!   two-threads-per-connection oracle instead. With `--model` the model
+//!   is hot-reloadable (atomic swap between micro-batches, zero dropped
+//!   requests); `--watch-model F` polls `F` and swaps it in whenever the
+//!   file changes and validates. Admission is bounded globally
+//!   (`--max-inflight`) and per connection (`--max-inflight-per-conn`,
+//!   so one greedy client cannot pin the whole budget): overload returns
+//!   a backpressure error instead of queueing unboundedly. Runs until a
+//!   client sends `SHUTDOWN`, then drains gracefully.
 //! * `scaling [--kmax K]` — prediction-time scaling in C (the log-time
 //!   claim).
 
@@ -653,8 +659,18 @@ fn cmd_serve(args: &Args) -> i32 {
 /// it in when it changes and validates. Runs until a client sends
 /// `SHUTDOWN`, then drains gracefully and prints the serving metrics.
 fn serve_network(args: &Args) -> i32 {
-    use ltls::coordinator::{ModelWatcher, NetConfig, NetServer, ReloadableLtls};
+    use ltls::coordinator::{ModelWatcher, NetConfig, NetServer, ReloadableLtls, Transport};
     let listen = args.get_str("listen", "127.0.0.1:7878").to_string();
+    let transport = match args.get("transport") {
+        None => Transport::default(),
+        Some(s) => match s.parse::<Transport>() {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        },
+    };
     let cfg = NetConfig {
         server: ltls::coordinator::ServerConfig {
             batcher: ltls::coordinator::BatcherConfig {
@@ -666,6 +682,10 @@ fn serve_network(args: &Args) -> i32 {
         },
         max_inflight: args.get_usize("max-inflight", 0),
         max_inflight_per_conn: args.get_usize("max-inflight-per-conn", 0),
+        transport,
+        poll_threads: args.get_usize("poll-threads", 0),
+        conn_buf_bytes: args.get_usize("conn-buf-bytes", 0),
+        write_stall_ms: args.get_u64("write-stall-ms", 0),
     };
     // The served model: a saved file (hot-reloadable from its path), or a
     // fresh train on --dataset (reloadable only via `RELOAD <path>`).
@@ -760,9 +780,10 @@ fn serve_network(args: &Args) -> i32 {
             }
         };
     println!(
-        "listening on {} with {} worker(s) — protocol: `<k> <i:v> <i:v> ...` | PING | METRICS \
-         | RELOAD [path] | SHUTDOWN",
+        "listening on {} ({} transport) with {} worker(s) — protocol: \
+         `<k> <i:v> <i:v> ...` | PING | METRICS | RELOAD [path] | SHUTDOWN",
         server.addr(),
+        server.transport(),
         server.n_workers(),
     );
     server.wait_for_shutdown_request();

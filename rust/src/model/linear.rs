@@ -10,7 +10,8 @@
 //! cache-friendly. Model size is exactly `E·D` f32s — the log-space claim
 //! (the paper also observes the trained weights are dense).
 //!
-//! All f32 kernels run through the shared [`StripCodec`] machinery of
+//! All f32 kernels run through the shared [`super::store::StripCodec`]
+//! machinery of
 //! [`super::store`] with the [`IdentityCodec`] (strip `i`, sign `+1.0`),
 //! which multiplies out **bit-identically** to the pre-trait direct
 //! indexing — pinned by `rust/tests/engine_parity.rs`. The weight block is
@@ -131,7 +132,7 @@ impl DenseStore {
         self.w.len() + self.bias.len()
     }
 
-    /// Model size in bytes (paper's "model size [M]" columns).
+    /// Model size in bytes (paper's "model size `[M]`" columns).
     pub fn bytes(&self) -> usize {
         self.param_count() * std::mem::size_of::<f32>()
     }

@@ -1,0 +1,242 @@
+//! A thin shim over `poll(2)` and `pipe(2)` — the readiness substrate of
+//! the event-loop network transport (`coordinator/event_loop.rs`).
+//!
+//! Mirrors the raw-syscall style of [`crate::model::mmap`]: the build is
+//! fully offline and std-only, so instead of vendoring `libc`/`mio` the
+//! handful of constants and `extern "C"` declarations the transport needs
+//! are written out here for the targets we support. Everything is
+//! unix-only (`#[cfg(unix)]`); on other platforms the event-loop
+//! transport is unavailable and the serving frontend falls back to the
+//! thread-per-connection transport (see `coordinator/transport.rs`).
+//!
+//! Two primitives are exported:
+//!
+//! * [`poll`] — readiness over a set of [`PollFd`]s with a millisecond
+//!   timeout, the single blocking point of each poll thread.
+//! * [`WakePipe`] — a nonblocking self-pipe used to interrupt a `poll`
+//!   from another thread (worker-pool completion notifications, new
+//!   connections handed to a poll thread, shutdown). Wakes are coalesced
+//!   by the caller; the pipe itself just carries "something changed".
+
+#![cfg(unix)]
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+/// Readable: data available (or EOF — a read returning 0 disambiguates).
+pub const POLLIN: i16 = 0x001;
+/// Writable without blocking.
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (revents only).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (revents only). Data may still be readable until EOF.
+pub const POLLHUP: i16 = 0x010;
+/// Invalid fd (revents only).
+pub const POLLNVAL: i16 = 0x020;
+
+/// `struct pollfd` — identical layout on every supported unix.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    pub fd: RawFd,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: RawFd, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    /// Any readable-ish readiness: data, error or hangup (the latter two
+    /// are reported so the owner can read to EOF / collect the error).
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0
+    }
+
+    /// Writable readiness (errors included — a write collects them).
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLERR | POLLHUP | POLLNVAL) != 0
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64", not(target_os = "macos")))]
+type NFds = u64; // nfds_t = unsigned long on linux
+#[cfg(any(not(target_pointer_width = "64"), target_os = "macos"))]
+type NFds = u32; // nfds_t = unsigned int on macOS / 32-bit
+
+mod sys {
+    use std::ffi::c_void;
+    extern "C" {
+        pub fn poll(fds: *mut super::PollFd, nfds: super::NFds, timeout: i32) -> i32;
+        pub fn pipe(fds: *mut i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+        pub fn read(fd: i32, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const c_void, count: usize) -> isize;
+        pub fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+    }
+    pub const F_GETFL: i32 = 3;
+    pub const F_SETFL: i32 = 4;
+    #[cfg(any(target_os = "macos", target_os = "ios", target_os = "freebsd"))]
+    pub const O_NONBLOCK: i32 = 0x0004;
+    #[cfg(not(any(target_os = "macos", target_os = "ios", target_os = "freebsd")))]
+    pub const O_NONBLOCK: i32 = 0x0800;
+}
+
+/// Block until a registered fd is ready, the timeout elapses, or a signal
+/// interrupts. Returns the number of entries with nonzero `revents`
+/// (0 on timeout). `EINTR` is reported as `Ok(0)` — poll loops always
+/// rescan their state on wake-up anyway, so a spurious zero is harmless.
+pub fn poll(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    let rc = unsafe { sys::poll(fds.as_mut_ptr(), fds.len() as NFds, timeout_ms) };
+    if rc >= 0 {
+        return Ok(rc as usize);
+    }
+    let err = io::Error::last_os_error();
+    if err.kind() == io::ErrorKind::Interrupted {
+        Ok(0)
+    } else {
+        Err(err)
+    }
+}
+
+fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+    let flags = unsafe { sys::fcntl(fd, sys::F_GETFL, 0) };
+    if flags < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if unsafe { sys::fcntl(fd, sys::F_SETFL, flags | sys::O_NONBLOCK) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+/// A nonblocking self-pipe: `wake` from any thread makes the read end
+/// `POLLIN`-ready; the poll loop `drain`s it and rescans its queues.
+///
+/// Both ends are nonblocking, so a full pipe never blocks a waker (the
+/// pending byte already guarantees a wake-up — additional wakes coalesce)
+/// and `drain` never blocks the poll thread.
+#[derive(Debug)]
+pub struct WakePipe {
+    read_fd: RawFd,
+    write_fd: RawFd,
+}
+
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        let mut fds = [0i32; 2];
+        if unsafe { sys::pipe(fds.as_mut_ptr()) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let (r, w) = (fds[0], fds[1]);
+        let pipe = WakePipe { read_fd: r, write_fd: w }; // closes on early-return drop
+        set_nonblocking(r)?;
+        set_nonblocking(w)?;
+        Ok(pipe)
+    }
+
+    /// The fd to register with [`POLLIN`] in the poll set.
+    pub fn poll_fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Make the read end readable. Never blocks: a full pipe (wake
+    /// already pending) is success by definition.
+    pub fn wake(&self) {
+        let b = 1u8;
+        unsafe { sys::write(self.write_fd, (&b as *const u8).cast(), 1) };
+    }
+
+    /// Consume every pending wake byte (until the pipe would block).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            let n = unsafe { sys::read(self.read_fd, buf.as_mut_ptr().cast(), buf.len()) };
+            if n <= 0 {
+                break;
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.read_fd);
+            sys::close(self.write_fd);
+        }
+    }
+}
+
+// SAFETY: both fds stay valid for the pipe's lifetime and the kernel
+// serializes pipe reads/writes; `wake` and `drain` are racing-safe by
+// design (a lost race only means an extra or a coalesced wake).
+unsafe impl Send for WakePipe {}
+unsafe impl Sync for WakePipe {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wake_pipe_roundtrip_and_poll_readiness() {
+        let p = WakePipe::new().unwrap();
+        // Nothing pending: poll times out immediately.
+        let mut fds = [PollFd::new(p.poll_fd(), POLLIN)];
+        assert_eq!(poll(&mut fds, 0).unwrap(), 0);
+        assert!(!fds[0].readable());
+        // A wake makes the read end ready.
+        p.wake();
+        let mut fds = [PollFd::new(p.poll_fd(), POLLIN)];
+        assert_eq!(poll(&mut fds, 1000).unwrap(), 1);
+        assert!(fds[0].readable());
+        // Drained: quiet again.
+        p.drain();
+        let mut fds = [PollFd::new(p.poll_fd(), POLLIN)];
+        assert_eq!(poll(&mut fds, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn wakes_coalesce_and_never_block() {
+        let p = WakePipe::new().unwrap();
+        // Far more wakes than the pipe buffer holds: all must return.
+        for _ in 0..100_000 {
+            p.wake();
+        }
+        let mut fds = [PollFd::new(p.poll_fd(), POLLIN)];
+        assert_eq!(poll(&mut fds, 1000).unwrap(), 1);
+        p.drain();
+        let mut fds = [PollFd::new(p.poll_fd(), POLLIN)];
+        assert_eq!(poll(&mut fds, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn poll_reports_writable_sockets() {
+        use std::net::{TcpListener, TcpStream};
+        use std::os::unix::io::AsRawFd;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let mut fds = [PollFd::new(stream.as_raw_fd(), POLLOUT)];
+        assert_eq!(poll(&mut fds, 1000).unwrap(), 1);
+        assert!(fds[0].writable());
+        assert!(!fds[0].readable(), "nothing was sent yet");
+    }
+
+    #[test]
+    fn wake_from_another_thread_interrupts_poll() {
+        use std::sync::Arc;
+        let p = Arc::new(WakePipe::new().unwrap());
+        let waker = Arc::clone(&p);
+        let t0 = std::time::Instant::now();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            waker.wake();
+        });
+        let mut fds = [PollFd::new(p.poll_fd(), POLLIN)];
+        let n = poll(&mut fds, 5_000).unwrap();
+        h.join().unwrap();
+        assert_eq!(n, 1);
+        assert!(t0.elapsed() < std::time::Duration::from_secs(4), "poll waited out the timeout");
+    }
+}

@@ -1,6 +1,8 @@
 //! End-to-end contract of the network serving frontend
-//! (`rust/src/coordinator/transport.rs` + `reload.rs`), over real TCP on
-//! loopback:
+//! (`rust/src/coordinator/transport.rs` + `event_loop.rs` + `reload.rs`),
+//! over real TCP on loopback — the whole suite runs against **both**
+//! transports (`Transport::Threads` and `Transport::EventLoop`), pinning
+//! that their observable behavior is identical:
 //!
 //! 1. **Parity** — N concurrent TCP clients receive bit-identical answers
 //!    to the in-process `BatchedLtls` path (the wire format uses
@@ -15,9 +17,15 @@
 //!    unboundedly, and admitted requests still complete.
 //! 4. **Drain** — `SHUTDOWN` is acknowledged, flushes everything
 //!    in-flight and stops the server cleanly.
+//! 5. **Half-close** — a client that pipelines a burst and then shuts
+//!    down its write side still receives every reply it is owed
+//!    (regression: the old writer tore down on reader exit).
+//! 6. **Write backpressure** (event loop) — a client that stops reading
+//!    has its reads paused at the buffer high-water mark instead of the
+//!    server buffering replies unboundedly.
 
 use ltls::coordinator::{
-    BatchedLtls, BatcherConfig, NetConfig, NetServer, ReloadableLtls, ServerConfig,
+    BatchedLtls, BatcherConfig, NetConfig, NetServer, ReloadableLtls, ServerConfig, Transport,
 };
 use ltls::data::synthetic::SyntheticSpec;
 use ltls::data::Dataset;
@@ -25,7 +33,7 @@ use ltls::eval::Predictor;
 use ltls::train::{TrainConfig, TrainedModel, Trainer};
 use ltls::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -99,8 +107,7 @@ fn small_pool() -> ServerConfig {
 
 /// Contract 1 + 4: concurrent TCP clients are bit-identical to the
 /// in-process path; METRICS/PING answer; SHUTDOWN drains cleanly.
-#[test]
-fn concurrent_tcp_clients_match_in_process_batched_path() {
+fn concurrent_tcp_clients_match_in_process_batched_path(transport: Transport) {
     let (model, ds) = trained(3, 42);
     let n_clients = 4usize;
     let per_client = 30usize;
@@ -111,9 +118,13 @@ fn concurrent_tcp_clients_match_in_process_batched_path() {
     let server = NetServer::start(
         "127.0.0.1:0",
         BatchedLtls(model),
-        NetConfig { server: small_pool(), ..NetConfig::default() },
+        NetConfig { server: small_pool(), transport, ..NetConfig::default() },
     )
     .expect("start server");
+    if cfg!(unix) {
+        // Elsewhere the event loop falls back to the threaded transport.
+        assert_eq!(server.transport(), transport);
+    }
     let addr = server.addr();
 
     let ds = Arc::new(ds);
@@ -159,6 +170,7 @@ fn concurrent_tcp_clients_match_in_process_batched_path() {
     }
     assert!(metrics_text.contains("ltls_requests_total"), "{metrics_text}");
     assert!(metrics_text.contains("ltls_net_live_connections"), "{metrics_text}");
+    assert!(metrics_text.contains("ltls_net_open_connections"), "{metrics_text}");
     // This server has no reloadable model: RELOAD must refuse, not panic.
     c.send("RELOAD");
     let reply = c.recv();
@@ -187,12 +199,22 @@ fn concurrent_tcp_clients_match_in_process_batched_path() {
     server.shutdown(); // joins everything; deadlock here fails the test
 }
 
+#[test]
+fn concurrent_clients_match_in_process_threads() {
+    concurrent_tcp_clients_match_in_process_batched_path(Transport::Threads);
+}
+
+#[test]
+fn concurrent_clients_match_in_process_event_loop() {
+    concurrent_tcp_clients_match_in_process_batched_path(Transport::EventLoop);
+}
+
 /// Contract 2: a mid-traffic hot reload loses zero in-flight requests,
 /// every answer comes from exactly one model generation, and a corrupt
 /// replacement is rejected over the wire with the old model kept live.
-#[test]
-fn hot_reload_mid_traffic_loses_no_requests() {
-    let dir = std::env::temp_dir().join(format!("ltls_net_reload_{}", std::process::id()));
+fn hot_reload_mid_traffic_loses_no_requests(transport: Transport) {
+    let dir = std::env::temp_dir()
+        .join(format!("ltls_net_reload_{}_{transport}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let (m1, ds) = trained(1, 42);
     let (m2, _) = trained(5, 43);
@@ -211,7 +233,7 @@ fn hot_reload_mid_traffic_loses_no_requests() {
     let server = NetServer::start_reloadable(
         "127.0.0.1:0",
         Arc::clone(&reloadable),
-        NetConfig { server: small_pool(), ..NetConfig::default() },
+        NetConfig { server: small_pool(), transport, ..NetConfig::default() },
     )
     .expect("start server");
     let addr = server.addr();
@@ -273,10 +295,19 @@ fn hot_reload_mid_traffic_loses_no_requests() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+#[test]
+fn hot_reload_loses_no_requests_threads() {
+    hot_reload_mid_traffic_loses_no_requests(Transport::Threads);
+}
+
+#[test]
+fn hot_reload_loses_no_requests_event_loop() {
+    hot_reload_mid_traffic_loses_no_requests(Transport::EventLoop);
+}
+
 /// Contract 3: over-admission answers with a backpressure error instead
 /// of queueing unboundedly; admitted requests still complete.
-#[test]
-fn over_admission_returns_backpressure_error() {
+fn over_admission_returns_backpressure_error(transport: Transport) {
     let (model, ds) = trained(1, 42);
     // One slow-batching worker: the first batch collects for 300ms (from
     // the first request's enqueue), so rapid pipelined requests pile into
@@ -295,6 +326,8 @@ fn over_admission_returns_backpressure_error() {
             },
             max_inflight: 4,
             max_inflight_per_conn: 4,
+            transport,
+            ..NetConfig::default()
         },
     )
     .expect("start server");
@@ -326,11 +359,20 @@ fn over_admission_returns_backpressure_error() {
     server.shutdown();
 }
 
+#[test]
+fn over_admission_backpressure_threads() {
+    over_admission_returns_backpressure_error(Transport::Threads);
+}
+
+#[test]
+fn over_admission_backpressure_event_loop() {
+    over_admission_returns_backpressure_error(Transport::EventLoop);
+}
+
 /// One greedy pipelining client is contained by its per-connection
 /// admission share: it gets backpressured while a second connection is
 /// still admitted and served from the remaining global budget.
-#[test]
-fn per_connection_cap_contains_one_greedy_client() {
+fn per_connection_cap_contains_one_greedy_client(transport: Transport) {
     let (model, ds) = trained(1, 42);
     let server = NetServer::start(
         "127.0.0.1:0",
@@ -346,6 +388,8 @@ fn per_connection_cap_contains_one_greedy_client() {
             },
             max_inflight: 1024,
             max_inflight_per_conn: 2,
+            transport,
+            ..NetConfig::default()
         },
     )
     .expect("start server");
@@ -378,5 +422,164 @@ fn per_connection_cap_contains_one_greedy_client() {
     assert_eq!(served + backpressured, n_req);
     assert!(served >= 1 && served <= 4, "per-conn cap 2 should admit ~2, got {served}");
     assert!(backpressured >= n_req - 4, "greedy client was not contained: {backpressured}");
+    server.shutdown();
+}
+
+#[test]
+fn per_conn_cap_contains_greedy_client_threads() {
+    per_connection_cap_contains_one_greedy_client(Transport::Threads);
+}
+
+#[test]
+fn per_conn_cap_contains_greedy_client_event_loop() {
+    per_connection_cap_contains_one_greedy_client(Transport::EventLoop);
+}
+
+/// Contract 5 (regression): a client that pipelines a burst and then
+/// half-closes its write side must still receive every reply — the old
+/// writer tore the connection down when the reader thread exited,
+/// dropping whatever the pool had not finished yet.
+fn half_close_after_burst_still_receives_every_reply(transport: Transport) {
+    let (model, ds) = trained(1, 42);
+    let n_req = 50usize;
+    let expected: Vec<Vec<(u32, f32)>> =
+        (0..n_req).map(|i| model.topk(ds.row(i % ds.n_examples()), 3)).collect();
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        BatchedLtls(model),
+        NetConfig {
+            server: ServerConfig {
+                // A sizeable batch window so the half-close lands while
+                // most of the burst is still in flight.
+                batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) },
+                queue_depth: 256,
+                workers: 2,
+            },
+            max_inflight: 256,
+            max_inflight_per_conn: 256,
+            transport,
+            ..NetConfig::default()
+        },
+    )
+    .expect("start server");
+    let mut c = Client::connect(server.addr());
+    for i in 0..n_req {
+        c.send(&req_line(3, ds.row(i % ds.n_examples())));
+    }
+    // EOF the server's read side while the burst is still being answered.
+    c.w.shutdown(Shutdown::Write).expect("half-close");
+    for (i, want) in expected.iter().enumerate() {
+        let got = parse_topk(&c.recv());
+        assert_eq!(&got, want, "reply {i} after half-close");
+    }
+    // After the owed replies: clean EOF, not more data.
+    let mut rest = String::new();
+    let n = c.r.read_line(&mut rest).expect("read EOF");
+    assert_eq!(n, 0, "unexpected extra reply after the burst: {rest:?}");
+    server.shutdown();
+}
+
+#[test]
+fn half_close_flushes_owed_replies_threads() {
+    half_close_after_burst_still_receives_every_reply(Transport::Threads);
+}
+
+#[test]
+fn half_close_flushes_owed_replies_event_loop() {
+    half_close_after_burst_still_receives_every_reply(Transport::EventLoop);
+}
+
+/// Contract 6 (event loop): a client that pipelines hard but stops
+/// reading is backpressured by read-pausing at the write-buffer
+/// high-water mark — the server's buffered replies stay bounded, and
+/// once the client starts draining everything still arrives in order.
+#[test]
+fn event_loop_bounds_reply_buffer_for_slow_reader() {
+    let (model, ds) = trained(1, 42);
+    let cap = 4096usize;
+    let n_req = 300usize;
+    let expected: Vec<Vec<(u32, f32)>> =
+        (0..n_req).map(|i| model.topk(ds.row(i % ds.n_examples()), 3)).collect();
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        BatchedLtls(model),
+        NetConfig {
+            server: small_pool(),
+            max_inflight: 4096,
+            max_inflight_per_conn: 4096,
+            transport: Transport::EventLoop,
+            conn_buf_bytes: cap,
+            ..NetConfig::default()
+        },
+    )
+    .expect("start server");
+    let mut c = Client::connect(server.addr());
+    for i in 0..n_req {
+        c.send(&req_line(3, ds.row(i % ds.n_examples())));
+    }
+    // Let replies pile up against a non-reading client: the loop must
+    // park at the high-water mark, not buffer all 300 replies.
+    std::thread::sleep(Duration::from_millis(400));
+    for (i, want) in expected.iter().enumerate() {
+        let got = parse_topk(&c.recv());
+        assert_eq!(&got, want, "reply {i} under write backpressure");
+    }
+    // Peak buffered bytes ≤ high-water mark + one reply line (a frame is
+    // appended whole once under the mark).
+    let peak = server.write_buf_peak();
+    assert!(peak >= 1, "gauge never observed a buffered reply");
+    assert!(
+        peak <= cap + 1024,
+        "write buffer exceeded the high-water mark: peak {peak} vs cap {cap}"
+    );
+    server.shutdown();
+}
+
+/// Many concurrent connections on the event loop: far beyond what the
+/// threaded transport's two-threads-per-connection design is sized for,
+/// held open simultaneously with interleaved requests, on 2 poll
+/// threads. (The 1000-connection sweep lives in `benches/serve_network`;
+/// this is the correctness smoke at CI-friendly scale.)
+#[test]
+fn event_loop_serves_many_concurrent_connections() {
+    let (model, ds) = trained(1, 42);
+    let n_conns = 120usize;
+    let per_conn = 3usize;
+    let expected: Vec<Vec<(u32, f32)>> =
+        (0..n_conns).map(|i| model.topk(ds.row(i % ds.n_examples()), 3)).collect();
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        BatchedLtls(model),
+        NetConfig {
+            server: small_pool(),
+            max_inflight: 4096,
+            max_inflight_per_conn: 64,
+            transport: Transport::EventLoop,
+            poll_threads: 2,
+            ..NetConfig::default()
+        },
+    )
+    .expect("start server");
+    let addr = server.addr();
+    // Open every connection first — all live at once — then run traffic.
+    let mut clients: Vec<Client> = (0..n_conns).map(|_| Client::connect(addr)).collect();
+    for round in 0..per_conn {
+        for (i, c) in clients.iter_mut().enumerate() {
+            c.send(&req_line(3, ds.row(i % ds.n_examples())));
+            if round == 0 && i == 0 {
+                // Interleave a control command mid-traffic.
+                c.send("PING");
+            }
+        }
+        for (i, c) in clients.iter_mut().enumerate() {
+            let got = parse_topk(&c.recv());
+            assert_eq!(&got, &expected[i], "conn {i} round {round}");
+            if round == 0 && i == 0 {
+                assert_eq!(c.recv(), "{\"ok\":true}");
+            }
+        }
+    }
+    assert_eq!(server.accepted_connections(), n_conns as u64);
+    drop(clients);
     server.shutdown();
 }

@@ -46,8 +46,21 @@ use std::collections::BTreeMap;
 /// Result-array keys that name a configuration rather than a measurement.
 /// `kernel` discriminates scoring-kernel rows: 0 = pinned scalar oracle,
 /// 1 = dispatched fast path (portable sweep or SIMD intrinsics).
-const DISCRIMINATORS: [&str; 8] =
-    ["workers", "threads", "batch", "k", "width", "backend", "hash_bits", "kernel"];
+/// `transport` discriminates network-frontend rows: 0 = thread-per-
+/// connection, 1 = poll(2) event loop; `clients` is the concurrent
+/// connection count of a sweep row.
+const DISCRIMINATORS: [&str; 10] = [
+    "workers",
+    "threads",
+    "batch",
+    "k",
+    "width",
+    "backend",
+    "hash_bits",
+    "kernel",
+    "transport",
+    "clients",
+];
 
 fn main() {
     let args = Args::from_env();
@@ -336,6 +349,22 @@ trailing noise
         assert_eq!(c["decode.kernel=0.axpy_ns"], 800.0);
         assert_eq!(c["decode.kernel=1.axpy_ns"], 260.0);
         assert_eq!(c["decode.kernel_axpy_speedup"], 3.1);
+    }
+
+    #[test]
+    fn transport_and_clients_discriminate_connection_sweep_rows() {
+        let c = current_from(
+            "json: {\"bench\":\"serve_network\",\"many_conn_ratio\":1.1,\"clients\":4,\"results\":[{\"transport\":0,\"clients\":100,\"req_per_s\":9000.0},{\"transport\":1,\"clients\":100,\"req_per_s\":9100.0},{\"transport\":1,\"clients\":1000,\"req_per_s\":9050.0}]}\n",
+        );
+        // `clients` inside a results entry is a discriminator; the
+        // top-level `clients` field stays a plain recorded metric.
+        assert_eq!(c["serve_network.clients"], 4.0);
+        assert_eq!(c["serve_network.many_conn_ratio"], 1.1);
+        assert_eq!(c["serve_network.transport=0.clients=100.req_per_s"], 9000.0);
+        assert_eq!(c["serve_network.transport=1.clients=100.req_per_s"], 9100.0);
+        assert_eq!(c["serve_network.transport=1.clients=1000.req_per_s"], 9050.0);
+        let base = r#"{"metrics":{"serve_network.many_conn_ratio":{"baseline":1.0,"tolerance":0.25}}}"#;
+        assert_eq!(check_against_baseline(base, &c).unwrap().failures, 0);
     }
 
     #[test]
