@@ -17,10 +17,17 @@
 //!   holding 10x the connections costs ~nothing (both runs are
 //!   pool-bound; connection setup is excluded by a start barrier). The
 //!   gate catches the event loop falling over at scale, not noise.
+//! * `obs_overhead_ratio` — traced throughput (the default
+//!   `--trace-sample 64` plus the always-on slow-request ring) over the
+//!   same serving with tracing fully disabled: span stamping is a
+//!   handful of relaxed atomic stores, so the ratio should sit near 1.0
+//!   and the gate fails only if observability starts taxing the request
+//!   hot path.
 //!
 //! Per-row absolute throughputs (`transport=T.clients=N.req_per_s`,
 //! transport 0 = threads, 1 = event-loop) are recorded but not gated
-//! (machine-dependent).
+//! (machine-dependent); the two observability phases are also recorded
+//! as `transport=1.clients=4.trace={1,0}.req_per_s` rows.
 //!
 //! `BENCH_FAST=1` trims the request count for smoke runs.
 
@@ -212,6 +219,26 @@ fn main() {
 
     server.shutdown();
 
+    // Phase 2b: the same serving with request tracing fully disabled —
+    // the denominator of the observability-overhead gate. Same reloadable
+    // handle, same pool shape, same traffic; the only delta from phase 1
+    // is the per-request span stamping and ring-buffer capture, so
+    // traced/untraced isolates the tracing tax.
+    let notrace_server = NetServer::start_reloadable(
+        "127.0.0.1:0",
+        Arc::clone(&reloadable),
+        NetConfig {
+            server: pool_cfg(),
+            trace_sample: 0,
+            trace_slow_ms: 0,
+            ..NetConfig::default()
+        },
+    )
+    .expect("start notrace server");
+    let tcp_notrace = drive_tcp(notrace_server.addr(), &ds, clients, n_requests, 16);
+    notrace_server.shutdown();
+    println!("tcp, tracing off       {tcp_notrace:>10.0} req/s");
+
     // Phase 3: connection sweep — both transports, up to 1000 concurrent
     // connections on the event loop (the threaded transport is capped at
     // 100: two OS threads per connection does not scale past that, which
@@ -269,13 +296,31 @@ fn main() {
     }
     std::fs::remove_dir_all(&dir).ok();
 
+    // The two observability phases as trace-discriminated rows:
+    // event-loop transport, 4 clients, tracing on (default sampling) vs
+    // fully off.
+    rows.push(Json::obj(vec![
+        ("transport", Json::from(1usize)),
+        ("clients", Json::from(clients)),
+        ("trace", Json::from(1usize)),
+        ("req_per_s", Json::Num(tcp_plain)),
+    ]));
+    rows.push(Json::obj(vec![
+        ("transport", Json::from(1usize)),
+        ("clients", Json::from(clients)),
+        ("trace", Json::from(0usize)),
+        ("req_per_s", Json::Num(tcp_notrace)),
+    ]));
+
     let reload_ratio = tcp_reload / tcp_plain;
     let net_overhead = tcp_plain / inproc;
     let many_conn_ratio = eventloop_at_1000 / threads_at_100;
+    let obs_overhead_ratio = tcp_plain / tcp_notrace;
     println!(
         "\nreload_ratio (churn/plain) = {reload_ratio:.2}   transport ratio (tcp/in-process) = {net_overhead:.2}"
     );
     println!("many_conn_ratio (event-loop@1000 / threads@100) = {many_conn_ratio:.2}");
+    println!("obs_overhead_ratio (traced / tracing-off) = {obs_overhead_ratio:.2}");
 
     let json = Json::obj(vec![
         ("bench", Json::from("serve_network")),
@@ -285,8 +330,10 @@ fn main() {
         ("reload_ratio", Json::Num(reload_ratio)),
         ("net_vs_inproc_ratio", Json::Num(net_overhead)),
         ("many_conn_ratio", Json::Num(many_conn_ratio)),
+        ("obs_overhead_ratio", Json::Num(obs_overhead_ratio)),
         ("inproc_req_per_s", Json::Num(inproc)),
         ("tcp_req_per_s", Json::Num(tcp_plain)),
+        ("tcp_notrace_req_per_s", Json::Num(tcp_notrace)),
         ("tcp_reload_req_per_s", Json::Num(tcp_reload)),
         ("p99_us", Json::Num(p99_us)),
         ("results", Json::Arr(rows)),

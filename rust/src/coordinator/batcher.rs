@@ -30,6 +30,9 @@ pub struct Batch<T> {
     pub items: Vec<T>,
     /// When the oldest item was *enqueued* (queueing-latency metric).
     pub oldest: Instant,
+    /// When collection finished — the `batch_form` trace stamp, taken
+    /// once here so every item in the batch shares one clock reading.
+    pub formed: Instant,
 }
 
 /// Pull one batch from `rx`. Blocks for the first item, then drains until
@@ -78,7 +81,7 @@ pub fn next_batch<T: Stamped>(rx: &Receiver<T>, cfg: &BatcherConfig) -> Option<B
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    Some(Batch { items, oldest })
+    Some(Batch { items, oldest, formed: Instant::now() })
 }
 
 #[cfg(test)]
@@ -161,6 +164,8 @@ mod tests {
         let b = next_batch(&rx, &cfg).unwrap();
         assert_eq!(b.oldest, stamp);
         assert!(b.oldest.elapsed() >= Duration::from_millis(10));
+        // Formation happens strictly after the oldest enqueue.
+        assert!(b.formed >= b.oldest);
     }
 
     /// The double-wait regression this module's deadline fix pins down: a

@@ -37,6 +37,7 @@ use super::server::{CompletionNotify, Response, Submitter};
 use super::transport::{
     err_json, handle_line, oversized_line_json, render_response, LineReply, Shared, MAX_LINE,
 };
+use crate::obs::{Span, Stage};
 use crate::util::poll::{poll, PollFd, WakePipe, POLLIN, POLLOUT};
 use std::collections::VecDeque;
 use std::io;
@@ -87,7 +88,9 @@ enum Pending {
     /// Pre-rendered line (commands, protocol errors).
     Line(String),
     /// Awaiting the worker pool; holds an admission slot until popped.
-    Waiting(Receiver<Response>),
+    /// Carries the request's trace span (if any) for the `serialize` /
+    /// `write` stamps.
+    Waiting(Receiver<Response>, Option<Span>),
 }
 
 /// Incremental newline framing over a nonblocking byte stream.
@@ -232,26 +235,35 @@ impl Conn {
                 break;
             }
             let Some(front) = self.pending.pop_front() else { break };
-            let line = match front {
-                Pending::Line(s) => s,
-                Pending::Waiting(rx) => match rx.try_recv() {
+            let (line, span) = match front {
+                Pending::Line(s) => (s, None),
+                Pending::Waiting(rx, span) => match rx.try_recv() {
                     Ok(resp) => {
                         shared.release_inflight(&self.conn_inflight);
-                        render_response(&resp)
+                        let line = render_response(&resp);
+                        if let Some(sp) = &span {
+                            sp.stamp(Stage::Serialize);
+                        }
+                        (line, span)
                     }
                     Err(TryRecvError::Disconnected) => {
                         shared.release_inflight(&self.conn_inflight);
-                        err_json("server dropped the request (shutting down)")
+                        (err_json("server dropped the request (shutting down)"), span)
                     }
                     Err(TryRecvError::Empty) => {
                         // Not done yet: put it back and wait for the
                         // completion hook to kick us again.
-                        self.pending.push_front(Pending::Waiting(rx));
+                        self.pending.push_front(Pending::Waiting(rx, span));
                         break;
                     }
                 },
             };
             self.append_frame(shared, &line);
+            // `write` = frame handed to the socket write path.
+            if let Some(sp) = &span {
+                sp.stamp(Stage::Write);
+                shared.tracer.finish(sp);
+            }
         }
     }
 
@@ -322,17 +334,18 @@ impl Conn {
             }
             let notify = Arc::clone(&self.notify);
             let outcome =
-                handle_line(shared, trimmed, &self.conn_inflight, &mut |i, v, k| {
-                    submitter.try_submit_with_notify(
+                handle_line(shared, trimmed, &self.conn_inflight, &mut |i, v, k, sp| {
+                    submitter.try_submit_full(
                         i,
                         v,
                         k,
-                        Arc::clone(&notify) as Arc<dyn CompletionNotify>,
+                        sp,
+                        Some(Arc::clone(&notify) as Arc<dyn CompletionNotify>),
                     )
                 });
             self.pending.push_back(match outcome.reply {
                 LineReply::Immediate(s) => Pending::Line(s),
-                LineReply::Pending(rx) => Pending::Waiting(rx),
+                LineReply::Pending(rx, sp) => Pending::Waiting(rx, sp),
             });
             if outcome.close {
                 self.want_close = true;

@@ -1,11 +1,17 @@
 //! Serving metrics: shared latency/throughput counters the server workers
 //! update and the driver reads — including per-worker breakdowns so
 //! pool-imbalance is visible.
+//!
+//! Everything is built on the lock-free primitives in [`crate::obs`]: the
+//! per-request path ([`ServingMetrics::record_request_latency`]) is pure
+//! relaxed atomics into sharded histograms, and the per-micro-batch path
+//! takes only an uncontended `RwLock` read to find its worker slot (the
+//! write lock is taken solely when the worker table grows). The old
+//! `Mutex<Inner>` serialization point is gone.
 
+use crate::obs::{render_gauge, Counter, Gauge, Histogram, Registry};
 use crate::util::bench::fmt_ns;
-use crate::util::timer::LatencyHistogram;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, RwLock};
 
 /// Per-worker counters (one slot per worker thread in the pool).
 #[derive(Clone, Debug, Default)]
@@ -27,82 +33,146 @@ impl WorkerStats {
     }
 }
 
-/// Aggregated serving metrics (interior-mutable; one lock per record is
-/// fine at micro-batch granularity).
-#[derive(Default)]
-pub struct ServingMetrics {
-    inner: Mutex<Inner>,
+/// Live atomic counters behind one worker's `{worker="i"}` samples.
+struct WorkerSlot {
+    requests: Arc<Counter>,
+    batches: Arc<Counter>,
+    busy_ns: Counter,
 }
 
-#[derive(Default)]
-struct Inner {
+/// Aggregated serving metrics. Interior-mutable and cheap to record
+/// into from every worker concurrently; scraped by the `METRICS`
+/// endpoint through [`ServingMetrics::prometheus`].
+pub struct ServingMetrics {
+    registry: Registry,
+    requests: Arc<Counter>,
+    batches: Arc<Counter>,
     /// End-to-end per-request latency (enqueue → response).
-    request_latency: LatencyHistogram,
+    request_latency: Arc<Histogram>,
     /// Queueing time of the oldest item per batch.
-    queue_latency: LatencyHistogram,
+    queue_latency: Arc<Histogram>,
     /// Batch execution time.
-    exec_latency: LatencyHistogram,
-    requests: u64,
-    batches: u64,
-    per_worker: Vec<WorkerStats>,
+    exec_latency: Arc<Histogram>,
+    workers: RwLock<Vec<WorkerSlot>>,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl ServingMetrics {
     pub fn new() -> Self {
-        Self::default()
+        Self::with_workers(0)
     }
 
     /// Pre-size the per-worker table for an `n`-worker pool.
     pub fn with_workers(n: usize) -> Self {
-        let m = ServingMetrics::default();
-        m.inner.lock().unwrap().per_worker = vec![WorkerStats::default(); n];
+        let registry = Registry::new();
+        let requests =
+            registry.counter("ltls_requests_total", "prediction requests completed by the pool");
+        let batches = registry.counter("ltls_batches_total", "micro-batches executed");
+        let request_latency = registry.histogram(
+            "ltls_request_latency_seconds",
+            "end-to-end request latency, enqueue to reply",
+        );
+        let queue_latency = registry.histogram(
+            "ltls_queue_latency_seconds",
+            "queue wait of the oldest request in each micro-batch",
+        );
+        let exec_latency =
+            registry.histogram("ltls_exec_latency_seconds", "micro-batch execution time");
+        let m = ServingMetrics {
+            registry,
+            requests,
+            batches,
+            request_latency,
+            queue_latency,
+            exec_latency,
+            workers: RwLock::new(Vec::new()),
+        };
+        m.grow_workers(n);
         m
     }
 
-    pub fn record_batch(&self, worker: usize, batch_size: usize, queue_ns: u64, exec_ns: u64) {
-        let mut g = self.inner.lock().unwrap();
-        g.queue_latency.record_ns(queue_ns);
-        g.exec_latency.record_ns(exec_ns);
-        g.batches += 1;
-        g.requests += batch_size as u64;
-        if g.per_worker.len() <= worker {
-            g.per_worker.resize(worker + 1, WorkerStats::default());
+    /// Extend the worker table (and its registered `{worker="i"}` counter
+    /// families) to at least `n` slots.
+    fn grow_workers(&self, n: usize) {
+        let mut w = self.workers.write().unwrap();
+        while w.len() < n {
+            let label = format!("worker=\"{}\"", w.len());
+            w.push(WorkerSlot {
+                requests: self.registry.counter_labeled(
+                    "ltls_worker_requests",
+                    "requests completed per worker",
+                    label.clone(),
+                ),
+                batches: self.registry.counter_labeled(
+                    "ltls_worker_batches",
+                    "micro-batches executed per worker",
+                    label,
+                ),
+                busy_ns: Counter::new(),
+            });
         }
-        let w = &mut g.per_worker[worker];
-        w.requests += batch_size as u64;
-        w.batches += 1;
-        w.busy_ns += exec_ns;
+    }
+
+    pub fn record_batch(&self, worker: usize, batch_size: usize, queue_ns: u64, exec_ns: u64) {
+        self.queue_latency.record_ns(queue_ns);
+        self.exec_latency.record_ns(exec_ns);
+        self.batches.inc();
+        self.requests.add(batch_size as u64);
+        loop {
+            {
+                let w = self.workers.read().unwrap();
+                if let Some(slot) = w.get(worker) {
+                    slot.requests.add(batch_size as u64);
+                    slot.batches.inc();
+                    slot.busy_ns.add(exec_ns);
+                    return;
+                }
+            }
+            self.grow_workers(worker + 1);
+        }
     }
 
     pub fn record_request_latency(&self, ns: u64) {
-        self.inner.lock().unwrap().request_latency.record_ns(ns);
+        self.request_latency.record_ns(ns);
     }
 
     /// (requests, batches, mean batch size).
     pub fn counts(&self) -> (u64, u64, f64) {
-        let g = self.inner.lock().unwrap();
-        let mean = if g.batches == 0 { 0.0 } else { g.requests as f64 / g.batches as f64 };
-        (g.requests, g.batches, mean)
+        let requests = self.requests.get();
+        let batches = self.batches.get();
+        let mean = if batches == 0 { 0.0 } else { requests as f64 / batches as f64 };
+        (requests, batches, mean)
     }
 
     /// Snapshot of the per-worker counters.
     pub fn per_worker(&self) -> Vec<WorkerStats> {
-        self.inner.lock().unwrap().per_worker.clone()
+        self.workers
+            .read()
+            .unwrap()
+            .iter()
+            .map(|s| WorkerStats {
+                requests: s.requests.get(),
+                batches: s.batches.get(),
+                busy_ns: s.busy_ns.get(),
+            })
+            .collect()
     }
 
     /// Human-readable summary block (aggregate + per-worker lines).
     pub fn summary(&self) -> String {
-        let g = self.inner.lock().unwrap();
+        let (requests, batches, mean) = self.counts();
         let mut s = format!(
-            "requests={} batches={} mean_batch={:.1}\n  request latency: {}\n  queue  latency: {}\n  exec   latency: {}",
-            g.requests,
-            g.batches,
-            if g.batches == 0 { 0.0 } else { g.requests as f64 / g.batches as f64 },
-            g.request_latency.summary(),
-            g.queue_latency.summary(),
-            g.exec_latency.summary(),
+            "requests={requests} batches={batches} mean_batch={mean:.1}\n  request latency: {}\n  queue  latency: {}\n  exec   latency: {}",
+            self.request_latency.snapshot().summary(),
+            self.queue_latency.snapshot().summary(),
+            self.exec_latency.snapshot().summary(),
         );
-        for (i, w) in g.per_worker.iter().enumerate() {
+        for (i, w) in self.per_worker().iter().enumerate() {
             s.push_str(&format!(
                 "\n  worker {i}: requests={} batches={} mean_batch={:.1} busy={}",
                 w.requests,
@@ -116,31 +186,60 @@ impl ServingMetrics {
 
     /// Request-latency quantile in ns.
     pub fn request_quantile_ns(&self, q: f64) -> f64 {
-        self.inner.lock().unwrap().request_latency.quantile_ns(q)
+        self.request_latency.snapshot().quantile_ns(q)
     }
 
-    /// Prometheus-style plaintext rendering — the body of the network
-    /// frontend's `METRICS` endpoint ([`super::transport`]): one
-    /// `name value` gauge per line, per-worker counters carrying a
-    /// `{worker="i"}` label. Scrape-friendly and greppable.
+    /// Conformant Prometheus exposition — the body of the network
+    /// frontend's `METRICS` endpoint ([`super::transport`]): `# HELP` /
+    /// `# TYPE` headers, full cumulative `_bucket{le=...}`/`_sum`/`_count`
+    /// histogram series for request/queue/exec latency, counters, and
+    /// per-worker samples carrying a `{worker="i"}` label. The metric
+    /// catalog lives in `docs/OBSERVABILITY.md`.
     pub fn prometheus(&self) -> String {
         use std::fmt::Write as _;
-        let g = self.inner.lock().unwrap();
         let mut s = String::new();
-        let _ = writeln!(s, "ltls_requests_total {}", g.requests);
-        let _ = writeln!(s, "ltls_batches_total {}", g.batches);
-        let mean = if g.batches == 0 { 0.0 } else { g.requests as f64 / g.batches as f64 };
-        let _ = writeln!(s, "ltls_mean_batch_size {mean:.3}");
-        let _ =
-            writeln!(s, "ltls_request_latency_p50_ns {:.0}", g.request_latency.quantile_ns(0.5));
-        let _ =
-            writeln!(s, "ltls_request_latency_p99_ns {:.0}", g.request_latency.quantile_ns(0.99));
-        let _ = writeln!(s, "ltls_queue_latency_p99_ns {:.0}", g.queue_latency.quantile_ns(0.99));
-        let _ = writeln!(s, "ltls_exec_latency_p99_ns {:.0}", g.exec_latency.quantile_ns(0.99));
-        for (i, w) in g.per_worker.iter().enumerate() {
-            let _ = writeln!(s, "ltls_worker_requests{{worker=\"{i}\"}} {}", w.requests);
-            let _ = writeln!(s, "ltls_worker_batches{{worker=\"{i}\"}} {}", w.batches);
-            let _ = writeln!(s, "ltls_worker_busy_ns{{worker=\"{i}\"}} {}", w.busy_ns);
+        self.registry.render(&mut s);
+        let (_, _, mean) = self.counts();
+        render_gauge(&mut s, "ltls_mean_batch_size", "mean micro-batch size since start", mean);
+        let req = self.request_latency.snapshot();
+        render_gauge(
+            &mut s,
+            "ltls_request_latency_p50_seconds",
+            "approximate request-latency median (log2 buckets)",
+            req.quantile_ns(0.5) / 1e9,
+        );
+        render_gauge(
+            &mut s,
+            "ltls_request_latency_p99_seconds",
+            "approximate request-latency p99 (log2 buckets)",
+            req.quantile_ns(0.99) / 1e9,
+        );
+        render_gauge(
+            &mut s,
+            "ltls_queue_latency_p99_seconds",
+            "approximate queue-latency p99 (log2 buckets)",
+            self.queue_latency.snapshot().quantile_ns(0.99) / 1e9,
+        );
+        render_gauge(
+            &mut s,
+            "ltls_exec_latency_p99_seconds",
+            "approximate exec-latency p99 (log2 buckets)",
+            self.exec_latency.snapshot().quantile_ns(0.99) / 1e9,
+        );
+        let workers = self.per_worker();
+        if !workers.is_empty() {
+            let _ = writeln!(
+                s,
+                "# HELP ltls_worker_busy_seconds_total total batch-execution time per worker"
+            );
+            let _ = writeln!(s, "# TYPE ltls_worker_busy_seconds_total counter");
+            for (i, w) in workers.iter().enumerate() {
+                let _ = writeln!(
+                    s,
+                    "ltls_worker_busy_seconds_total{{worker=\"{i}\"}} {}",
+                    w.busy_ns as f64 / 1e9
+                );
+            }
         }
         s
     }
@@ -156,11 +255,11 @@ impl ServingMetrics {
 #[derive(Debug, Default)]
 pub struct TransportGauges {
     /// Connections currently open (accepted, not yet torn down).
-    open_connections: AtomicUsize,
+    open_connections: Gauge,
     /// Times a poll thread was woken by its self-pipe (event loop only).
-    poll_wakeups_total: AtomicU64,
+    poll_wakeups_total: Counter,
     /// High-water mark of any single connection's buffered reply bytes.
-    write_buf_peak: AtomicUsize,
+    write_buf_peak: Gauge,
 }
 
 impl TransportGauges {
@@ -169,44 +268,60 @@ impl TransportGauges {
     }
 
     pub fn conn_opened(&self) {
-        self.open_connections.fetch_add(1, Ordering::Relaxed);
+        self.open_connections.inc();
     }
 
+    /// Saturating: a teardown race that reports the same close twice
+    /// pins the gauge at zero instead of wrapping it to the maximum.
     pub fn conn_closed(&self) {
-        self.open_connections.fetch_sub(1, Ordering::Relaxed);
+        self.open_connections.dec_saturating();
     }
 
     pub fn open_connections(&self) -> usize {
-        self.open_connections.load(Ordering::Relaxed)
+        self.open_connections.get() as usize
     }
 
     pub fn record_poll_wakeup(&self) {
-        self.poll_wakeups_total.fetch_add(1, Ordering::Relaxed);
+        self.poll_wakeups_total.inc();
     }
 
     pub fn poll_wakeups(&self) -> u64 {
-        self.poll_wakeups_total.load(Ordering::Relaxed)
+        self.poll_wakeups_total.get()
     }
 
     /// Raise the write-buffer high-water mark to `bytes` if it exceeds
     /// the current peak (monotone; races only under-report transiently).
     pub fn observe_write_buf(&self, bytes: usize) {
-        self.write_buf_peak.fetch_max(bytes, Ordering::Relaxed);
+        self.write_buf_peak.set_max(bytes as u64);
     }
 
     pub fn write_buf_peak(&self) -> usize {
-        self.write_buf_peak.load(Ordering::Relaxed)
+        self.write_buf_peak.get() as usize
     }
 
     /// The transport's gauge lines for the `METRICS` endpoint, matching
     /// the `ltls_net_*` namespace of [`super::transport`]'s renderer.
     pub fn prometheus(&self) -> String {
-        format!(
-            "ltls_net_open_connections {}\nltls_net_poll_wakeups_total {}\nltls_net_write_buf_peak_bytes {}\n",
-            self.open_connections(),
+        let mut s = String::new();
+        render_gauge(
+            &mut s,
+            "ltls_net_open_connections",
+            "connections currently open (accepted, not yet torn down)",
+            self.open_connections() as f64,
+        );
+        crate::obs::render_counter(
+            &mut s,
+            "ltls_net_poll_wakeups_total",
+            "poll-thread self-pipe wakeups (event loop only)",
             self.poll_wakeups(),
-            self.write_buf_peak(),
-        )
+        );
+        render_gauge(
+            &mut s,
+            "ltls_net_write_buf_peak_bytes",
+            "high-water mark of any connection's buffered reply bytes",
+            self.write_buf_peak() as f64,
+        );
+        s
     }
 }
 
@@ -260,11 +375,41 @@ mod tests {
         assert!(text.contains("ltls_batches_total 1"), "{text}");
         assert!(text.contains("ltls_worker_requests{worker=\"0\"} 0"), "{text}");
         assert!(text.contains("ltls_worker_requests{worker=\"1\"} 6"), "{text}");
-        assert!(text.contains("ltls_worker_busy_ns{worker=\"1\"} 9000"), "{text}");
-        // Every line is `name value`.
+        assert!(text.contains("ltls_worker_busy_seconds_total{worker=\"1\"} 0.000009"), "{text}");
+        // Conformant exposition: every family carries HELP/TYPE headers.
+        assert!(text.contains("# HELP ltls_requests_total"), "{text}");
+        assert!(text.contains("# TYPE ltls_requests_total counter"), "{text}");
+        assert!(text.contains("# TYPE ltls_request_latency_seconds histogram"), "{text}");
+        // Full cumulative series present.
+        assert!(text.contains("ltls_request_latency_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("ltls_request_latency_seconds_count 1"), "{text}");
+        assert!(text.contains("ltls_queue_latency_seconds_sum"), "{text}");
+        // Every sample line is `name value`; comment lines start with #.
         for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
             assert_eq!(line.split_whitespace().count(), 2, "bad line {line:?}");
         }
+    }
+
+    #[test]
+    fn histogram_buckets_are_monotone_in_le() {
+        let m = ServingMetrics::new();
+        for ns in [500u64, 1_500, 1_500, 80_000, 2_000_000] {
+            m.record_request_latency(ns);
+        }
+        let text = m.prometheus();
+        let mut prev = 0u64;
+        let mut seen = 0;
+        for line in text.lines().filter(|l| l.starts_with("ltls_request_latency_seconds_bucket")) {
+            let v: u64 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+            assert!(v >= prev, "non-monotone bucket: {line}");
+            prev = v;
+            seen += 1;
+        }
+        assert_eq!(seen, crate::util::timer::LOG2_BUCKETS);
+        assert_eq!(prev, 5, "cumulative +Inf bucket must equal the count");
     }
 
     #[test]
@@ -292,8 +437,26 @@ mod tests {
         assert!(text.contains("ltls_net_open_connections 1"), "{text}");
         assert!(text.contains("ltls_net_poll_wakeups_total 1"), "{text}");
         assert!(text.contains("ltls_net_write_buf_peak_bytes 512"), "{text}");
+        assert!(text.contains("# TYPE ltls_net_open_connections gauge"), "{text}");
         for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
             assert_eq!(line.split_whitespace().count(), 2, "bad line {line:?}");
         }
+    }
+
+    #[test]
+    fn conn_closed_saturates_instead_of_wrapping() {
+        let g = TransportGauges::new();
+        g.conn_opened();
+        g.conn_closed();
+        // The double-close race: a second teardown path reports the same
+        // connection. The old fetch_sub wrapped to usize::MAX here.
+        g.conn_closed();
+        assert_eq!(g.open_connections(), 0);
+        g.conn_opened();
+        assert_eq!(g.open_connections(), 1, "gauge must stay usable after the race");
+        assert!(g.prometheus().contains("ltls_net_open_connections 1"));
     }
 }

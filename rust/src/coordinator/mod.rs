@@ -12,8 +12,11 @@
 //! [`server::BatchedLtls`] amortizes the feature-strip sweep over the
 //! whole batch) or on the dense deep path (one AOT PJRT program call per
 //! batch) — and completes the callers' futures. [`metrics`] aggregates
-//! latency histograms plus per-worker counters, reported by
-//! `examples/serve_batched.rs` and `benches/serve_throughput.rs`.
+//! latency histograms plus per-worker counters on the lock-free
+//! [`crate::obs`] registry (relaxed atomics on the record path, no mutex),
+//! reported by `examples/serve_batched.rs`, `benches/serve_throughput.rs`,
+//! and the network frontend's `METRICS` endpoint as conformant Prometheus
+//! exposition (metric catalog: `docs/OBSERVABILITY.md`).
 //!
 //! Everything is std-only (threads + channels): tokio is not vendored in
 //! this offline build, and the workload is CPU-bound anyway — a small
@@ -24,8 +27,10 @@
 //! * [`transport`] — the TCP frontend (`ltls serve --listen HOST:PORT`):
 //!   a newline-delimited request protocol with JSON-line replies, bounded
 //!   admission (backpressure errors instead of unbounded queueing), a
-//!   plaintext `METRICS` endpoint and graceful drain on shutdown. The
-//!   wire contract is specified in `docs/PROTOCOL.md`.
+//!   Prometheus `METRICS` endpoint, a `TRACE` endpoint dumping sampled
+//!   and slow-request stage timelines ([`crate::obs::trace`]) as JSON
+//!   lines, and graceful drain on shutdown. The wire contract is
+//!   specified in `docs/PROTOCOL.md`.
 //! * [`event_loop`] — the default connection frontend behind
 //!   [`transport::NetServer`]: a poll(2) event loop multiplexing every
 //!   connection over a small fixed pool of poll threads

@@ -41,6 +41,7 @@
 use super::server::{batched_predict_into, BatchModel, Request, Response};
 use crate::engine::PredictScratch;
 use crate::model::io::{load_any, load_any_mmap, AnyModel};
+use crate::obs::Counter;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -133,6 +134,10 @@ pub struct ReloadableLtls {
     /// stat'ed *before* the read — the watcher's baseline, so a write
     /// that races the initial load still registers as a change.
     file_fingerprint: Mutex<Option<(SystemTime, u64)>>,
+    /// Reload outcomes, scrape-visible on the `METRICS` endpoint
+    /// (`ltls_reload_success_total` / `ltls_reload_failure_total`).
+    reload_success: Counter,
+    reload_failure: Counter,
 }
 
 impl ReloadableLtls {
@@ -146,6 +151,8 @@ impl ReloadableLtls {
             mmap: false,
             n_features_hint: AtomicUsize::new(d),
             file_fingerprint: Mutex::new(None),
+            reload_success: Counter::new(),
+            reload_failure: Counter::new(),
         }
     }
 
@@ -161,6 +168,8 @@ impl ReloadableLtls {
             mmap,
             n_features_hint: AtomicUsize::new(d),
             file_fingerprint: Mutex::new(fp),
+            reload_success: Counter::new(),
+            reload_failure: Counter::new(),
         })
     }
 
@@ -191,11 +200,26 @@ impl ReloadableLtls {
         *self.file_fingerprint.lock().unwrap()
     }
 
+    /// `(successful, rejected)` reload counts so far — the transport
+    /// renders them on the `METRICS` endpoint.
+    pub fn reload_counts(&self) -> (u64, u64) {
+        (self.reload_success.get(), self.reload_failure.get())
+    }
+
     /// Atomically swap in the model stored at `path`. On *any* load error
     /// — missing file, truncation, bad magic, backend/width the build
     /// cannot represent — the current model stays live and `Err` is
     /// returned; a swap only happens after the new model fully validated.
     pub fn reload_from(&self, path: &Path) -> Result<ReloadInfo, String> {
+        let result = self.reload_from_inner(path);
+        match &result {
+            Ok(_) => self.reload_success.inc(),
+            Err(_) => self.reload_failure.inc(),
+        }
+        result
+    }
+
+    fn reload_from_inner(&self, path: &Path) -> Result<ReloadInfo, String> {
         let fp = fingerprint(path);
         let model = if self.mmap { load_any_mmap(path) } else { load_any(path) }?;
         let info = ReloadInfo {
@@ -401,6 +425,8 @@ mod tests {
         std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
         assert!(r.reload().is_err());
         assert_eq!(r.epoch(), 1);
+        // One successful swap, one rejected file — scrape-visible counts.
+        assert_eq!(r.reload_counts(), (1, 1));
         let resp = r.predict_batch(&[req()]);
         assert_eq!(resp[0].topk, m2.topk(row, 3));
         std::fs::remove_dir_all(&dir).ok();

@@ -20,6 +20,7 @@
 use super::batcher::{next_batch, BatcherConfig, Stamped};
 use super::metrics::ServingMetrics;
 use crate::engine::PredictScratch;
+use crate::obs::{Span, Stage};
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -46,6 +47,9 @@ pub struct Request {
     /// Fired after `reply.send` (see [`CompletionNotify`]); `None` for
     /// callers that block on the reply receiver instead.
     notify: Option<Arc<dyn CompletionNotify>>,
+    /// Trace span stamped as the request moves through the pipeline
+    /// (`None` unless the transport's tracer picked this request up).
+    pub(crate) span: Option<Span>,
 }
 
 impl Request {
@@ -54,7 +58,15 @@ impl Request {
     /// going through a worker pool.
     #[cfg(test)]
     pub(crate) fn detached(indices: Vec<u32>, values: Vec<f32>, k: usize) -> Request {
-        Request { indices, values, k, enqueued: Instant::now(), reply: channel().0, notify: None }
+        Request {
+            indices,
+            values,
+            k,
+            enqueued: Instant::now(),
+            reply: channel().0,
+            notify: None,
+            span: None,
+        }
     }
 }
 
@@ -210,6 +222,12 @@ pub(crate) fn batched_predict_into<T: crate::graph::Topology, S: crate::model::W
         })
         .collect();
     model.model.edge_scores_batch(&rows, &mut scratch.score, &mut scratch.batch_h);
+    let scored = Instant::now();
+    for r in batch {
+        if let Some(sp) = &r.span {
+            sp.stamp_at(Stage::Score, scored);
+        }
+    }
     for (i, r) in batch.iter().enumerate() {
         if !all_scorable && !scorable(r) {
             out.push(Response { topk: Vec::new() });
@@ -226,6 +244,9 @@ pub(crate) fn batched_predict_into<T: crate::graph::Topology, S: crate::model::W
         );
         let mut topk = Vec::with_capacity(r.k);
         model.resolve_topk(r.k, &scratch.paths, &mut topk);
+        if let Some(sp) = &r.span {
+            sp.stamp(Stage::Decode);
+        }
         out.push(Response { topk });
     }
 }
@@ -312,7 +333,7 @@ impl Submitter {
         values: Vec<f32>,
         k: usize,
     ) -> Result<Receiver<Response>, SubmitError> {
-        try_submit_on(&self.tx, indices, values, k, None)
+        try_submit_on(&self.tx, indices, values, k, None, None)
     }
 
     /// [`Self::try_submit`] with a completion hook: `notify.completed()`
@@ -326,7 +347,21 @@ impl Submitter {
         k: usize,
         notify: Arc<dyn CompletionNotify>,
     ) -> Result<Receiver<Response>, SubmitError> {
-        try_submit_on(&self.tx, indices, values, k, Some(notify))
+        try_submit_on(&self.tx, indices, values, k, None, Some(notify))
+    }
+
+    /// The full submission surface: an optional trace [`Span`] (stamped
+    /// `enqueue` here, then through the worker pipeline) and an optional
+    /// completion hook. Both transports submit through this.
+    pub fn try_submit_full(
+        &self,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+        k: usize,
+        span: Option<Span>,
+        notify: Option<Arc<dyn CompletionNotify>>,
+    ) -> Result<Receiver<Response>, SubmitError> {
+        try_submit_on(&self.tx, indices, values, k, span, notify)
     }
 }
 
@@ -335,10 +370,14 @@ fn try_submit_on(
     indices: Vec<u32>,
     values: Vec<f32>,
     k: usize,
+    span: Option<Span>,
     notify: Option<Arc<dyn CompletionNotify>>,
 ) -> Result<Receiver<Response>, SubmitError> {
     let (reply, rx) = channel();
-    let req = Request { indices, values, k, enqueued: Instant::now(), reply, notify };
+    if let Some(sp) = &span {
+        sp.stamp(Stage::Enqueue);
+    }
+    let req = Request { indices, values, k, enqueued: Instant::now(), reply, notify, span };
     match tx.try_send(req) {
         Ok(()) => Ok(rx),
         Err(mpsc::TrySendError::Full(_)) => Err(SubmitError::QueueFull),
@@ -385,6 +424,12 @@ impl PredictServer {
                             next_batch(&*rx, &bcfg)
                         };
                         let Some(batch) = batch else { break };
+                        // One clock reading stamps the whole micro-batch.
+                        for req in &batch.items {
+                            if let Some(sp) = &req.span {
+                                sp.stamp_at(Stage::BatchForm, batch.formed);
+                            }
+                        }
                         let queue_ns = batch.oldest.elapsed().as_nanos() as u64;
                         let t0 = Instant::now();
                         model.predict_batch_into(&batch.items, &mut scratch, &mut responses);
@@ -416,7 +461,15 @@ impl PredictServer {
     /// Blocks when the bounded queue is full (backpressure).
     pub fn submit(&self, indices: Vec<u32>, values: Vec<f32>, k: usize) -> Receiver<Response> {
         let (reply, rx) = channel();
-        let req = Request { indices, values, k, enqueued: Instant::now(), reply, notify: None };
+        let req = Request {
+            indices,
+            values,
+            k,
+            enqueued: Instant::now(),
+            reply,
+            notify: None,
+            span: None,
+        };
         self.tx.send(req).expect("server stopped");
         rx
     }
@@ -432,7 +485,7 @@ impl PredictServer {
         values: Vec<f32>,
         k: usize,
     ) -> Result<Receiver<Response>, SubmitError> {
-        try_submit_on(&self.tx, indices, values, k, None)
+        try_submit_on(&self.tx, indices, values, k, None, None)
     }
 
     /// A cloneable submission handle. The network frontend hands one to

@@ -4,10 +4,12 @@
 //! The wire protocol (newline-delimited text; one reply line per request
 //! line, in submission order per connection) is specified normatively in
 //! `docs/PROTOCOL.md` — framing, the request/response grammar, the
-//! PING / METRICS / RELOAD / SHUTDOWN commands, the backpressure error
-//! shape and the drain semantics live there, not here. The crate-level
-//! picture (which layer does what, life of a request) is
-//! `docs/ARCHITECTURE.md`.
+//! PING / METRICS / TRACE / RELOAD / SHUTDOWN commands, the backpressure
+//! error shape and the drain semantics live there, not here. The
+//! crate-level picture (which layer does what, life of a request) is
+//! `docs/ARCHITECTURE.md`. Request-lifecycle tracing (the spans behind
+//! the `TRACE` command, `--trace-sample` / `--trace-slow-ms`) is
+//! [`crate::obs::trace`], documented in `docs/OBSERVABILITY.md`.
 //!
 //! Two interchangeable transports implement that contract behind one
 //! [`NetServer`] handle, selected by [`NetConfig::transport`]:
@@ -28,6 +30,7 @@
 use super::metrics::{ServingMetrics, TransportGauges};
 use super::reload::ReloadableLtls;
 use super::server::{BatchModel, PredictServer, Response, ServerConfig, SubmitError, Submitter};
+use crate::obs::{render_counter, render_gauge, Span, Stage, Tracer};
 use crate::util::json::Json;
 use std::io::{BufRead, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -90,7 +93,7 @@ impl std::fmt::Display for Transport {
 }
 
 /// Network frontend configuration.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct NetConfig {
     /// The worker pool under the transport.
     pub server: ServerConfig,
@@ -119,9 +122,39 @@ pub struct NetConfig {
     /// (0 → 10 000 ms). Progress resets the clock, so an alive-but-slow
     /// reader is never torn down mid-frame.
     pub write_stall_ms: u64,
+    /// Record every Nth prediction request's span timeline into the
+    /// sampled trace ring (`--trace-sample`, drained by the `TRACE`
+    /// command). 0 disables sampling. Default: 64.
+    pub trace_sample: u64,
+    /// Capture *any* request slower than this many milliseconds into the
+    /// slow-trace ring, regardless of sampling (`--trace-slow-ms`).
+    /// 0 disables slow capture. Default: 100.
+    pub trace_slow_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            server: ServerConfig::default(),
+            max_inflight: 0,
+            max_inflight_per_conn: 0,
+            transport: Transport::default(),
+            poll_threads: 0,
+            conn_buf_bytes: 0,
+            write_stall_ms: 0,
+            trace_sample: 64,
+            trace_slow_ms: 100,
+        }
+    }
 }
 
 impl NetConfig {
+    /// The tracer this configuration asks for (`trace_sample: 0` and
+    /// `trace_slow_ms: 0` together mean tracing is fully off).
+    pub fn tracer(&self) -> Tracer {
+        Tracer::new(self.trace_sample, self.trace_slow_ms.saturating_mul(1_000_000))
+    }
+
     /// The resolved write-stall budget (`0 → 10s`).
     pub fn write_stall(&self) -> Duration {
         if self.write_stall_ms == 0 {
@@ -186,6 +219,9 @@ pub(crate) struct Shared {
     pub(crate) conn_cv: Condvar,
     /// Transport-level gauges (open conns, poll wakeups, write-buf peak).
     pub(crate) gauges: TransportGauges,
+    /// Request-lifecycle tracer: decides which requests carry a [`Span`],
+    /// owns the sampled / slow capture rings behind the `TRACE` command.
+    pub(crate) tracer: Arc<Tracer>,
     /// Write-stall budget (see [`NetConfig::write_stall_ms`]).
     pub(crate) write_stall: Duration,
     /// Per-connection reply high-water mark (event loop read pausing).
@@ -298,6 +334,7 @@ impl NetServer {
             live_conns: Mutex::new(0),
             conn_cv: Condvar::new(),
             gauges: TransportGauges::new(),
+            tracer: Arc::new(cfg.tracer()),
             write_stall: cfg.write_stall(),
             wbuf_cap: cfg.wbuf_cap(),
         });
@@ -462,8 +499,9 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
 
 /// A reply the writer thread must emit, in submission order.
 enum Reply {
-    /// Response pending from the worker pool.
-    Pending(Receiver<Response>),
+    /// Response pending from the worker pool, with the request's trace
+    /// span (if any) for the `serialize` / `write` stamps.
+    Pending(Receiver<Response>, Option<Span>),
     /// Pre-rendered line (protocol errors, command replies, metrics).
     Immediate(String),
 }
@@ -551,13 +589,13 @@ fn reader_loop(
         if trimmed.is_empty() {
             continue;
         }
-        let outcome = handle_line(shared, trimmed, conn_inflight, &mut |i, v, k| {
-            submitter.try_submit(i, v, k)
+        let outcome = handle_line(shared, trimmed, conn_inflight, &mut |i, v, k, sp| {
+            submitter.try_submit_full(i, v, k, sp, None)
         });
         let close = outcome.close;
         let _ = tx.send(match outcome.reply {
             LineReply::Immediate(s) => Reply::Immediate(s),
-            LineReply::Pending(rx) => Reply::Pending(rx),
+            LineReply::Pending(rx, sp) => Reply::Pending(rx, sp),
         });
         if close {
             break;
@@ -576,8 +614,11 @@ pub(crate) enum LineReply {
     /// Pre-rendered line (protocol errors, command replies, metrics).
     Immediate(String),
     /// Response pending from the worker pool; emit it — in submission
-    /// order — once received, then release the admission window.
-    Pending(Receiver<Response>),
+    /// order — once received, then release the admission window. The
+    /// span (if this request is traced) takes the `serialize` / `write`
+    /// stamps and is finished after the reply is handed to the socket
+    /// write path.
+    Pending(Receiver<Response>, Option<Span>),
 }
 
 impl LineOutcome {
@@ -586,11 +627,15 @@ impl LineOutcome {
     }
 }
 
-/// How a transport hands a validated `(indices, values, k)` request to
-/// the worker pool (the event loop submits with a completion hook, the
+/// How a transport hands a validated `(indices, values, k, span)` request
+/// to the worker pool (the event loop submits with a completion hook, the
 /// threaded transport plainly).
-pub(crate) type SubmitFn<'a> =
-    &'a mut dyn FnMut(Vec<u32>, Vec<f32>, usize) -> Result<Receiver<Response>, SubmitError>;
+pub(crate) type SubmitFn<'a> = &'a mut dyn FnMut(
+    Vec<u32>,
+    Vec<f32>,
+    usize,
+    Option<Span>,
+) -> Result<Receiver<Response>, SubmitError>;
 
 /// The transport-independent protocol core: command dispatch, request
 /// validation and the two-level admission control over one line.
@@ -608,6 +653,7 @@ pub(crate) fn handle_line(
     match head {
         "PING" => return LineOutcome::reply("{\"ok\":true}".to_string()),
         "METRICS" => return LineOutcome::reply(render_metrics(shared)),
+        "TRACE" => return LineOutcome::reply(render_trace(shared)),
         "RELOAD" => return LineOutcome::reply(handle_reload(shared, words.next())),
         "SHUTDOWN" => {
             shared.request_shutdown();
@@ -615,9 +661,16 @@ pub(crate) fn handle_line(
         }
         _ => {}
     }
+    // The span (if this request draws one) anchors at `accept`: the line
+    // is already off the socket, parsing has not begun. Requests that
+    // fail parsing or admission drop their span unrecorded.
+    let span = shared.tracer.begin();
     match parse_request(line, shared.feature_bound()) {
         Err(e) => LineOutcome::reply(err_json(&e)),
         Ok((k, indices, values)) => {
+            if let Some(sp) = &span {
+                sp.stamp(Stage::Parse);
+            }
             // Admission control: this connection's share first (one
             // greedy pipelining client must not pin the whole budget),
             // then the global bound.
@@ -642,8 +695,11 @@ pub(crate) fn handle_line(
                     "in flight",
                 ));
             }
-            match submit(indices, values, k) {
-                Ok(rx) => LineOutcome { reply: LineReply::Pending(rx), close: false },
+            if let Some(sp) = &span {
+                sp.stamp(Stage::Admit);
+            }
+            match submit(indices, values, k, span.clone()) {
+                Ok(rx) => LineOutcome { reply: LineReply::Pending(rx, span), close: false },
                 Err(SubmitError::QueueFull) => {
                     shared.inflight.fetch_sub(1, Ordering::SeqCst);
                     conn_inflight.fetch_sub(1, Ordering::SeqCst);
@@ -814,9 +870,9 @@ fn writer_loop(
     while let Ok(first) = rx.recv() {
         let mut next = Some(first);
         while let Some(reply) = next.take() {
-            let line = match reply {
-                Reply::Immediate(s) => s,
-                Reply::Pending(resp) => {
+            let (line, span) = match reply {
+                Reply::Immediate(s) => (s, None),
+                Reply::Pending(resp, span) => {
                     let got = match resp.try_recv() {
                         Ok(r) => Ok(r),
                         Err(TryRecvError::Empty) => {
@@ -828,16 +884,26 @@ fn writer_loop(
                         Err(TryRecvError::Disconnected) => resp.recv(),
                     };
                     shared.release_inflight(conn_inflight);
-                    match got {
+                    let line = match got {
                         Ok(r) => render_response(&r),
                         Err(_) => err_json("server dropped the request (shutting down)"),
+                    };
+                    if let Some(sp) = &span {
+                        sp.stamp(Stage::Serialize);
                     }
+                    (line, span)
                 }
             };
             if !broken {
                 out.extend_from_slice(line.as_bytes());
                 out.push(b'\n');
                 shared.gauges.observe_write_buf(out.len());
+            }
+            // `write` = reply handed to the socket write path (buffered
+            // for the next flush); the span is complete after it.
+            if let Some(sp) = &span {
+                sp.stamp(Stage::Write);
+                shared.tracer.finish(sp);
             }
             if let Ok(more) = rx.try_recv() {
                 next = Some(more);
@@ -894,24 +960,88 @@ fn queue_full_json() -> String {
 }
 
 /// The `METRICS` reply: the pool's prometheus block plus the transport's
-/// own gauges, closed by a `# end` marker line.
+/// own metrics — every family with `# HELP` / `# TYPE` headers — closed
+/// by a `# end` marker line. Both transports reply through this one
+/// function, so the exposition is byte-identical whichever produced it.
 fn render_metrics(shared: &Shared) -> String {
-    use std::fmt::Write as _;
     let mut s = shared.metrics.prometheus();
-    let _ = writeln!(s, "ltls_net_inflight {}", shared.inflight.load(Ordering::SeqCst));
-    let _ = writeln!(s, "ltls_net_max_inflight {}", shared.max_inflight);
-    let _ = writeln!(s, "ltls_net_max_inflight_per_conn {}", shared.per_conn_cap);
-    let _ = writeln!(s, "ltls_net_rejected_total {}", shared.rejected.load(Ordering::Relaxed));
-    let _ = writeln!(
-        s,
-        "ltls_net_connections_total {}",
-        shared.accepted_conns.load(Ordering::Relaxed)
+    render_gauge(
+        &mut s,
+        "ltls_net_inflight",
+        "requests admitted to the pool whose reply has not been written",
+        shared.inflight.load(Ordering::SeqCst) as f64,
     );
-    let _ = writeln!(s, "ltls_net_live_connections {}", *shared.live_conns.lock().unwrap());
+    render_gauge(
+        &mut s,
+        "ltls_net_max_inflight",
+        "global admission bound (--max-inflight, resolved)",
+        shared.max_inflight as f64,
+    );
+    render_gauge(
+        &mut s,
+        "ltls_net_max_inflight_per_conn",
+        "per-connection admission bound (--max-inflight-per-conn, resolved)",
+        shared.per_conn_cap as f64,
+    );
+    render_counter(
+        &mut s,
+        "ltls_net_rejected_total",
+        "requests refused with a backpressure error",
+        shared.rejected.load(Ordering::Relaxed),
+    );
+    render_counter(
+        &mut s,
+        "ltls_net_connections_total",
+        "connections accepted over the server's lifetime",
+        shared.accepted_conns.load(Ordering::Relaxed),
+    );
+    render_gauge(
+        &mut s,
+        "ltls_net_live_connections",
+        "connections currently open",
+        *shared.live_conns.lock().unwrap() as f64,
+    );
     s.push_str(&shared.gauges.prometheus());
+    render_counter(
+        &mut s,
+        "ltls_trace_sampled_total",
+        "request spans captured into the sampled trace ring",
+        shared.tracer.sampled_total.get(),
+    );
+    render_counter(
+        &mut s,
+        "ltls_trace_slow_total",
+        "request spans captured into the slow trace ring",
+        shared.tracer.slow_total.get(),
+    );
+    // Training counters (live when `serve` trained its model in-process;
+    // all-zero otherwise — always present so the name set is stable).
+    s.push_str(&crate::train::TrainStats::global().prometheus());
     if let Some(r) = &shared.reload {
-        let _ = writeln!(s, "ltls_model_epoch {}", r.epoch());
+        render_gauge(
+            &mut s,
+            "ltls_model_epoch",
+            "model generation (successful reloads since startup)",
+            r.epoch() as f64,
+        );
+        let (ok, failed) = r.reload_counts();
+        render_counter(&mut s, "ltls_reload_success_total", "successful model reloads", ok);
+        render_counter(
+            &mut s,
+            "ltls_reload_failure_total",
+            "rejected model reloads (current model kept)",
+            failed,
+        );
     }
+    s.push_str("# end");
+    s
+}
+
+/// The `TRACE` reply: drain both capture rings as JSON lines (sampled
+/// spans first, then slow ones), closed by the same `# end` marker as
+/// `METRICS`. An empty reply is just the marker.
+fn render_trace(shared: &Shared) -> String {
+    let mut s = shared.tracer.dump_json_lines();
     s.push_str("# end");
     s
 }

@@ -22,6 +22,12 @@
 //!   graceful drain) and hot model reload ([`coordinator::reload`]:
 //!   epoch-counted atomic swap between micro-batches — `RELOAD` command
 //!   or `--watch-model` file polling — with zero dropped requests).
+//!   The serving stack is instrumented end to end by the observability
+//!   layer ([`obs`]): a lock-free sharded metrics registry (relaxed
+//!   atomics, log2 latency histograms with full Prometheus export) and
+//!   request-lifecycle tracing ([`obs::trace`]: per-stage span
+//!   timelines, `--trace-sample` sampling plus an always-on
+//!   slow-request ring, dumped by the `TRACE` wire command).
 //!   The graph layer is width-parameterized (W-LTLS): everything above it
 //!   is generic over [`graph::Topology`], with the paper's width-2
 //!   [`graph::Trellis`] as the default and [`graph::WideTrellis`] turning
@@ -62,6 +68,7 @@ pub mod graph;
 pub mod kernel;
 pub mod loss;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sparse;
 pub mod train;

@@ -35,11 +35,16 @@
 //! * `serve --listen HOST:PORT [--model m.ltls [--mmap]] [--watch-model F]
 //!   [--transport threads|event-loop] [--poll-threads N]
 //!   [--conn-buf-bytes N] [--write-stall-ms MS] [--max-inflight N]
-//!   [--queue-depth N] [--batch B] [--workers W] [--max-wait-us U]` —
+//!   [--queue-depth N] [--batch B] [--workers W] [--max-wait-us U]
+//!   [--trace-sample N] [--trace-slow-ms MS]` —
 //!   the **network** frontend: newline-delimited requests
 //!   (`<k> <i:v> <i:v> ...`) answered with JSON lines, plus the
-//!   `PING` / `METRICS` / `RELOAD [path]` / `SHUTDOWN` control commands
-//!   (the wire contract is `docs/PROTOCOL.md`). Connections are
+//!   `PING` / `METRICS` / `TRACE` / `RELOAD [path]` / `SHUTDOWN` control
+//!   commands (the wire contract is `docs/PROTOCOL.md`). `METRICS` is a
+//!   conformant Prometheus scrape (full cumulative histograms); `TRACE`
+//!   dumps per-request stage timelines — every `--trace-sample`-th
+//!   request plus any slower than `--trace-slow-ms` — as JSON lines
+//!   (0 disables either; see `docs/OBSERVABILITY.md`). Connections are
 //!   multiplexed by a poll(2) event loop over a fixed pool of
 //!   `--poll-threads` threads by default — thousands of concurrent
 //!   clients on a handful of threads; `--transport threads` selects the
@@ -686,6 +691,8 @@ fn serve_network(args: &Args) -> i32 {
         poll_threads: args.get_usize("poll-threads", 0),
         conn_buf_bytes: args.get_usize("conn-buf-bytes", 0),
         write_stall_ms: args.get_u64("write-stall-ms", 0),
+        trace_sample: args.get_u64("trace-sample", 64),
+        trace_slow_ms: args.get_u64("trace-slow-ms", 100),
     };
     // The served model: a saved file (hot-reloadable from its path), or a
     // fresh train on --dataset (reloadable only via `RELOAD <path>`).
@@ -781,7 +788,7 @@ fn serve_network(args: &Args) -> i32 {
         };
     println!(
         "listening on {} ({} transport) with {} worker(s) — protocol: \
-         `<k> <i:v> <i:v> ...` | PING | METRICS | RELOAD [path] | SHUTDOWN",
+         `<k> <i:v> <i:v> ...` | PING | METRICS | TRACE | RELOAD [path] | SHUTDOWN",
         server.addr(),
         server.transport(),
         server.n_workers(),

@@ -1,0 +1,26 @@
+//! Observability: lock-free metrics and request-lifecycle tracing.
+//!
+//! This module is the single sink for everything the server measures
+//! about itself:
+//!
+//! * [`registry`] — relaxed-atomic [`Counter`]s, saturating [`Gauge`]s,
+//!   and sharded 64-bucket log2 latency [`Histogram`]s, grouped into a
+//!   [`Registry`] that renders the conformant Prometheus exposition
+//!   (`# HELP`/`# TYPE`, cumulative `_bucket{le=...}`/`_sum`/`_count`)
+//!   behind the `METRICS` wire command. Serving, transport, admission,
+//!   reload, and trainer-epoch metrics all flow through these
+//!   primitives; nothing on a hot path takes a lock.
+//! * [`trace`] — [`Span`]/[`Stage`] timelines stamped through the nine
+//!   request pipeline stages (accept → … → write), sampled every Nth
+//!   request plus an always-on slow-request ring, dumped over the wire
+//!   by the `TRACE` command as JSON lines.
+//!
+//! The metric catalog, span stages, and knobs are documented in
+//! `docs/OBSERVABILITY.md`.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{render_counter, render_gauge, render_histogram};
+pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, Registry};
+pub use trace::{Span, SpanState, Stage, TraceRecord, Tracer, N_STAGES, TRACE_RING_CAP};

@@ -1,0 +1,465 @@
+//! Lock-free metrics primitives and the registry that renders them.
+//!
+//! Everything on the hot path is a relaxed atomic: [`Counter`] and
+//! [`Gauge`] are single `AtomicU64`s, [`Histogram`] is a fixed
+//! 64-bucket log2 nanosecond scale sharded across cache-line-padded
+//! per-thread slots (writers never contend with readers; shards are
+//! merged only at scrape time). The [`Registry`] owns the metric
+//! families and renders the full Prometheus exposition — `# HELP` /
+//! `# TYPE` headers, cumulative `_bucket{le="..."}` series, `_sum` and
+//! `_count` — so every scrape surface in the repo (the `METRICS` wire
+//! command, trainer stats) emits the same conformant text.
+//!
+//! Registration takes a `Mutex` (it happens a handful of times at
+//! startup, or when the worker table grows); recording never does.
+
+use crate::util::bench::fmt_ns;
+use crate::util::timer::{log2_bucket_of, log2_bucket_upper_ns, LOG2_BUCKETS};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone event count. Relaxed atomics: per-metric totals are exact,
+/// cross-metric skew of a few events during a scrape is acceptable.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A value that can go up and down. Decrement is **saturating**: a
+/// double-decrement race (e.g. two teardown paths both reporting a
+/// connection close) pins the gauge at zero instead of wrapping to
+/// `u64::MAX`.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Saturating decrement: never drops below zero.
+    pub fn dec_saturating(&self) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        while cur != 0 {
+            match self.0.compare_exchange_weak(cur, cur - 1, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+    /// Ratchet the gauge up to `v` if `v` is larger (peak tracking).
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of write shards per histogram. Threads are dealt to shards
+/// round-robin at first touch; 8 shards keeps false sharing off the
+/// worker/poll threads without bloating the scrape merge.
+const HIST_SHARDS: usize = 8;
+
+static NEXT_THREAD_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static THREAD_SHARD: usize = NEXT_THREAD_SHARD.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One cache-line-aligned shard of a histogram: its own bucket array,
+/// sum, and count, so concurrent recorders on different threads never
+/// bounce a line between cores.
+#[repr(align(64))]
+struct HistShard {
+    buckets: [AtomicU64; LOG2_BUCKETS],
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl HistShard {
+    fn new() -> Self {
+        HistShard {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Lock-free latency histogram on the fixed 64-bucket log2 nanosecond
+/// scale (`util::timer::log2_bucket_of`): bucket `b` counts values in
+/// `(2^(b-1), 2^b]` ns, bucket 0 holds `[0, 1]`, the top bucket is the
+/// overflow catch-all. Recording is two relaxed `fetch_add`s on the
+/// calling thread's shard; [`Histogram::snapshot`] merges the shards.
+pub struct Histogram {
+    shards: Box<[HistShard]>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { shards: (0..HIST_SHARDS).map(|_| HistShard::new()).collect() }
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        let shard = &self.shards[THREAD_SHARD.with(|s| *s) % self.shards.len()];
+        shard.buckets[log2_bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        shard.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        shard.count.fetch_add(1, Ordering::Relaxed);
+        shard.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    /// Merge every shard into one consistent-enough view (relaxed loads:
+    /// counts recorded mid-scrape may or may not be included).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut snap = HistogramSnapshot::default();
+        for shard in self.shards.iter() {
+            for (acc, b) in snap.buckets.iter_mut().zip(shard.buckets.iter()) {
+                *acc += b.load(Ordering::Relaxed);
+            }
+            snap.sum_ns += shard.sum_ns.load(Ordering::Relaxed);
+            snap.count += shard.count.load(Ordering::Relaxed);
+            snap.max_ns = snap.max_ns.max(shard.max_ns.load(Ordering::Relaxed));
+        }
+        snap
+    }
+}
+
+/// Point-in-time merged view of a [`Histogram`].
+#[derive(Clone)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; LOG2_BUCKETS],
+    pub sum_ns: u64,
+    pub count: u64,
+    pub max_ns: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot { buckets: [0; LOG2_BUCKETS], sum_ns: 0, count: 0, max_ns: 0 }
+    }
+}
+
+impl HistogramSnapshot {
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (`q` in [0,1]) in nanoseconds: the geometric
+    /// midpoint of the bucket the quantile lands in (log2 buckets bound
+    /// the error to ~1.41x either way).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if c > 0 && acc >= target {
+                let upper = log2_bucket_upper_ns(b) as f64;
+                return if b == 0 { upper } else { upper / std::f64::consts::SQRT_2 };
+            }
+        }
+        log2_bucket_upper_ns(LOG2_BUCKETS - 1) as f64
+    }
+
+    /// One-line human summary (same shape as the pre-registry
+    /// `LatencyHistogram::summary`).
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p99={} max={}",
+            self.count,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.quantile_ns(0.50)),
+            fmt_ns(self.quantile_ns(0.99)),
+            fmt_ns(self.max_ns as f64),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exposition rendering
+// ---------------------------------------------------------------------------
+
+fn push_header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push('\n');
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+/// Render one `counter` sample with its headers.
+pub fn render_counter(out: &mut String, name: &str, help: &str, value: u64) {
+    push_header(out, name, help, "counter");
+    out.push_str(&format!("{name} {value}\n"));
+}
+
+/// Render one `gauge` sample with its headers. Whole numbers print
+/// without a decimal point (Rust's shortest `f64` display).
+pub fn render_gauge(out: &mut String, name: &str, help: &str, value: f64) {
+    push_header(out, name, help, "gauge");
+    out.push_str(&format!("{name} {value}\n"));
+}
+
+/// Upper edge of bucket `b` as a Prometheus `le` value in **seconds**.
+/// The top bucket is the overflow catch-all, so its edge is `+Inf`.
+fn le_seconds(b: usize) -> String {
+    if b == LOG2_BUCKETS - 1 {
+        "+Inf".to_string()
+    } else {
+        format!("{}", log2_bucket_upper_ns(b) as f64 / 1e9)
+    }
+}
+
+/// Render a full cumulative histogram — `_bucket{le="..."}` for every
+/// edge ending in `+Inf`, then `_sum` (seconds) and `_count`.
+pub fn render_histogram(out: &mut String, name: &str, help: &str, snap: &HistogramSnapshot) {
+    push_header(out, name, help, "histogram");
+    let mut cum = 0u64;
+    for (b, &c) in snap.buckets.iter().enumerate() {
+        cum += c;
+        out.push_str(&format!("{name}_bucket{{le=\"{}\"}} {cum}\n", le_seconds(b)));
+    }
+    out.push_str(&format!("{name}_sum {}\n", snap.sum_ns as f64 / 1e9));
+    out.push_str(&format!("{name}_count {}\n", snap.count));
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Family {
+    name: String,
+    help: String,
+    /// `(label, metric)` — the label is rendered verbatim inside the
+    /// braces (e.g. `worker="0"`); `None` renders a bare sample.
+    metrics: Vec<(Option<String>, Metric)>,
+}
+
+/// Named metric families in registration order. Handles returned by the
+/// `counter`/`gauge`/`histogram` constructors are plain `Arc`s — the
+/// hot path records through them without ever touching the registry
+/// lock, which is only taken to register and to render.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    fn register(&self, name: &str, help: &str, label: Option<String>, metric: Metric) {
+        let mut fams = self.families.lock().unwrap();
+        if let Some(f) = fams.iter_mut().find(|f| f.name == name) {
+            f.metrics.push((label, metric));
+        } else {
+            fams.push(Family {
+                name: name.to_string(),
+                help: help.to_string(),
+                metrics: vec![(label, metric)],
+            });
+        }
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        let c = Arc::new(Counter::new());
+        self.register(name, help, None, Metric::Counter(Arc::clone(&c)));
+        c
+    }
+
+    /// A counter sample inside a labeled family (`name{label} value`).
+    /// Repeated registrations under one `name` share the family header.
+    pub fn counter_labeled(&self, name: &str, help: &str, label: String) -> Arc<Counter> {
+        let c = Arc::new(Counter::new());
+        self.register(name, help, Some(label), Metric::Counter(Arc::clone(&c)));
+        c
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::new());
+        self.register(name, help, None, Metric::Gauge(Arc::clone(&g)));
+        g
+    }
+
+    pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::new());
+        self.register(name, help, None, Metric::Histogram(Arc::clone(&h)));
+        h
+    }
+
+    /// Render every family in registration order.
+    pub fn render(&self, out: &mut String) {
+        let fams = self.families.lock().unwrap();
+        for f in fams.iter() {
+            match &f.metrics[0].1 {
+                Metric::Histogram(_) => {
+                    // Histogram families are single-sample (no labels).
+                    for (_, m) in &f.metrics {
+                        if let Metric::Histogram(h) = m {
+                            render_histogram(out, &f.name, &f.help, &h.snapshot());
+                        }
+                    }
+                }
+                first => {
+                    push_header(out, &f.name, &f.help, first.kind());
+                    for (label, m) in &f.metrics {
+                        let v = match m {
+                            Metric::Counter(c) => c.get(),
+                            Metric::Gauge(g) => g.get(),
+                            Metric::Histogram(_) => continue,
+                        };
+                        match label {
+                            Some(l) => out.push_str(&format!("{}{{{l}}} {v}\n", f.name)),
+                            None => out.push_str(&format!("{} {v}\n", f.name)),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_decrement_saturates_at_zero() {
+        let g = Gauge::new();
+        g.inc();
+        g.dec_saturating();
+        g.dec_saturating(); // double-close race: must not wrap
+        assert_eq!(g.get(), 0);
+        g.inc();
+        assert_eq!(g.get(), 1);
+    }
+
+    #[test]
+    fn histogram_snapshot_merges_shards_and_orders_quantiles() {
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 1..=2_500u64 {
+                        h.record_ns((t * 2_500 + i) * 1_000); // 1us..10ms
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 10_000);
+        let p50 = snap.quantile_ns(0.5);
+        let p99 = snap.quantile_ns(0.99);
+        assert!(p50 < p99);
+        // log2 buckets: the estimate is within ~1.5x of the true value.
+        assert!(p50 > 5e6 / 2.0 && p50 < 5e6 * 2.0, "p50={p50}");
+        assert!((snap.mean_ns() - 5.0005e6).abs() < 1e3);
+    }
+
+    #[test]
+    fn histogram_export_is_cumulative_and_monotone() {
+        let h = Histogram::new();
+        for ns in [1u64, 100, 100, 5_000, 1 << 40] {
+            h.record_ns(ns);
+        }
+        let mut out = String::new();
+        render_histogram(&mut out, "t_seconds", "test", &h.snapshot());
+        let mut prev = 0u64;
+        let mut bucket_lines = 0;
+        for line in out.lines().filter(|l| l.starts_with("t_seconds_bucket")) {
+            let v: u64 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+            assert!(v >= prev, "non-monotone: {line}");
+            prev = v;
+            bucket_lines += 1;
+        }
+        assert_eq!(bucket_lines, LOG2_BUCKETS);
+        assert!(out.contains("le=\"+Inf\"} 5"));
+        assert!(out.contains("t_seconds_count 5"));
+        assert!(out.contains("# TYPE t_seconds histogram"));
+    }
+
+    #[test]
+    fn registry_renders_families_with_headers() {
+        let r = Registry::new();
+        let c = r.counter("t_total", "a counter");
+        let w0 = r.counter_labeled("t_worker_total", "per-worker", "worker=\"0\"".into());
+        let w1 = r.counter_labeled("t_worker_total", "per-worker", "worker=\"1\"".into());
+        let g = r.gauge("t_depth", "a gauge");
+        c.add(3);
+        w0.inc();
+        w1.add(2);
+        g.set(7);
+        let mut out = String::new();
+        r.render(&mut out);
+        assert!(out.contains("# HELP t_total a counter\n# TYPE t_total counter\nt_total 3\n"));
+        assert!(out.contains("t_worker_total{worker=\"0\"} 1\n"));
+        assert!(out.contains("t_worker_total{worker=\"1\"} 2\n"));
+        // One header per family even with several labeled samples.
+        assert_eq!(out.matches("# TYPE t_worker_total").count(), 1);
+        assert!(out.contains("t_depth 7\n"));
+    }
+}

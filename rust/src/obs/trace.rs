@@ -1,0 +1,348 @@
+//! Request-lifecycle tracing: per-stage span timelines, sampling, and
+//! the always-on slow-request ring buffer.
+//!
+//! A [`Span`] is born when a prediction line comes off the socket and is
+//! stamped at each pipeline [`Stage`] it passes through — accept →
+//! parse → admit → enqueue → batch_form → score → decode → serialize →
+//! write. Stamps are relaxed atomic stores of nanosecond offsets from
+//! the span's start, so a span can be stamped concurrently from the
+//! transport thread, the worker pool, and the writer without locks.
+//!
+//! The [`Tracer`] decides which spans are kept: every `sample_every`-th
+//! request is recorded unconditionally, and *any* request slower than
+//! `slow_ns` lands in a separate slow ring regardless of sampling. Both
+//! rings are bounded ([`TRACE_RING_CAP`]) and drained over the wire by
+//! the `TRACE` command as JSON lines (`docs/PROTOCOL.md`).
+
+use crate::obs::registry::Counter;
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Pipeline stages a request is stamped through, in causal order.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Stage {
+    /// Request line lifted off the socket — the span's anchor (offset 0).
+    Accept = 0,
+    /// Request text parsed and validated.
+    Parse = 1,
+    /// Admission control (global + per-connection bounds) passed.
+    Admit = 2,
+    /// Request handed to the worker pool's bounded queue.
+    Enqueue = 3,
+    /// Micro-batch containing this request formed by a worker.
+    BatchForm = 4,
+    /// Edge scores computed for the batch.
+    Score = 5,
+    /// Top-k paths decoded for this request.
+    Decode = 6,
+    /// Reply rendered to its JSON line.
+    Serialize = 7,
+    /// Reply bytes handed to the socket write path.
+    Write = 8,
+}
+
+pub const N_STAGES: usize = 9;
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Accept => "accept",
+            Stage::Parse => "parse",
+            Stage::Admit => "admit",
+            Stage::Enqueue => "enqueue",
+            Stage::BatchForm => "batch_form",
+            Stage::Score => "score",
+            Stage::Decode => "decode",
+            Stage::Serialize => "serialize",
+            Stage::Write => "write",
+        }
+    }
+
+    fn all() -> [Stage; N_STAGES] {
+        [
+            Stage::Accept,
+            Stage::Parse,
+            Stage::Admit,
+            Stage::Enqueue,
+            Stage::BatchForm,
+            Stage::Score,
+            Stage::Decode,
+            Stage::Serialize,
+            Stage::Write,
+        ]
+    }
+}
+
+/// Shared, concurrently-stampable span state. Stamps are stored as
+/// `offset_ns + 1` so zero means "stage never reached".
+pub struct SpanState {
+    id: u64,
+    sampled: bool,
+    start: Instant,
+    stamps: [AtomicU64; N_STAGES],
+}
+
+/// Handle threaded through `Request` and both transports.
+pub type Span = Arc<SpanState>;
+
+impl SpanState {
+    /// Stamp `stage` at "now".
+    pub fn stamp(&self, stage: Stage) {
+        self.stamp_at(stage, Instant::now());
+    }
+
+    /// Stamp `stage` at an already-taken instant (lets one clock reading
+    /// stamp a whole micro-batch).
+    pub fn stamp_at(&self, stage: Stage, at: Instant) {
+        let ns = at.checked_duration_since(self.start).unwrap_or_default().as_nanos() as u64;
+        self.stamps[stage as usize].store(ns + 1, Ordering::Relaxed);
+    }
+
+    /// Span length so far: the latest stamped offset.
+    fn total_ns(&self) -> u64 {
+        self.stamps
+            .iter()
+            .map(|s| s.load(Ordering::Relaxed).saturating_sub(1))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Stamped `(stage, offset_ns)` pairs in causal (offset) order.
+    fn timeline(&self) -> Vec<(&'static str, u64)> {
+        let mut v: Vec<(&'static str, u64)> = Stage::all()
+            .iter()
+            .filter_map(|&st| {
+                let raw = self.stamps[st as usize].load(Ordering::Relaxed);
+                if raw == 0 {
+                    None
+                } else {
+                    Some((st.name(), raw - 1))
+                }
+            })
+            .collect();
+        v.sort_by_key(|&(_, ns)| ns);
+        v
+    }
+}
+
+/// A finished span as captured into a ring buffer.
+pub struct TraceRecord {
+    pub id: u64,
+    pub kind: &'static str,
+    pub total_ns: u64,
+    pub stages: Vec<(&'static str, u64)>,
+}
+
+impl TraceRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::from(self.id as usize)),
+            ("kind", Json::from(self.kind)),
+            ("total_ns", Json::Num(self.total_ns as f64)),
+            (
+                "stages",
+                Json::Arr(
+                    self.stages
+                        .iter()
+                        .map(|&(name, ns)| {
+                            Json::obj(vec![
+                                ("stage", Json::from(name)),
+                                ("ns", Json::Num(ns as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Capacity of each capture ring (sampled and slow).
+pub const TRACE_RING_CAP: usize = 128;
+
+/// Decides which spans exist and which finished spans are kept.
+pub struct Tracer {
+    /// Record every Nth request unconditionally; 0 disables sampling.
+    sample_every: u64,
+    /// Record any request slower than this; 0 disables slow capture.
+    slow_ns: u64,
+    seq: AtomicU64,
+    next_id: AtomicU64,
+    /// Spans recorded via sampling (scrape-visible counter).
+    pub sampled_total: Counter,
+    /// Spans recorded via the slow threshold (scrape-visible counter).
+    pub slow_total: Counter,
+    sampled: Mutex<VecDeque<TraceRecord>>,
+    slow: Mutex<VecDeque<TraceRecord>>,
+}
+
+impl Tracer {
+    pub fn new(sample_every: u64, slow_ns: u64) -> Tracer {
+        Tracer {
+            sample_every,
+            slow_ns,
+            seq: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+            sampled_total: Counter::new(),
+            slow_total: Counter::new(),
+            sampled: Mutex::new(VecDeque::new()),
+            slow: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// A tracer that never produces spans (tracing fully off).
+    pub fn disabled() -> Tracer {
+        Tracer::new(0, 0)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sample_every > 0 || self.slow_ns > 0
+    }
+
+    /// Start a span for the next request, if this request needs one:
+    /// either it is the Nth sampled request, or slow capture is on (any
+    /// request might turn out slow, so all of them carry a span). The
+    /// `accept` stage is stamped at creation as the anchor.
+    pub fn begin(&self) -> Option<Span> {
+        if !self.enabled() {
+            return None;
+        }
+        let n = self.seq.fetch_add(1, Ordering::Relaxed);
+        let sampled = self.sample_every > 0 && n % self.sample_every == 0;
+        if !sampled && self.slow_ns == 0 {
+            return None;
+        }
+        let span = Arc::new(SpanState {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            sampled,
+            start: Instant::now(),
+            stamps: std::array::from_fn(|_| AtomicU64::new(0)),
+        });
+        span.stamps[Stage::Accept as usize].store(1, Ordering::Relaxed); // offset 0
+        Some(span)
+    }
+
+    /// Finish a span (call after the `write` stamp): captures it into
+    /// the sampled ring and/or — when it crossed the threshold — the
+    /// slow ring. Unrecorded spans cost nothing here.
+    pub fn finish(&self, span: &SpanState) {
+        let total = span.total_ns();
+        let slow = self.slow_ns > 0 && total >= self.slow_ns;
+        if !span.sampled && !slow {
+            return;
+        }
+        let stages = span.timeline();
+        if span.sampled {
+            self.sampled_total.inc();
+            push_ring(
+                &self.sampled,
+                TraceRecord {
+                    id: span.id,
+                    kind: "sampled",
+                    total_ns: total,
+                    stages: stages.clone(),
+                },
+            );
+        }
+        if slow {
+            self.slow_total.inc();
+            push_ring(
+                &self.slow,
+                TraceRecord { id: span.id, kind: "slow", total_ns: total, stages },
+            );
+        }
+    }
+
+    /// Drain both rings as newline-separated JSON objects (sampled
+    /// first, then slow). Returns an empty string when nothing was
+    /// captured since the last dump.
+    pub fn dump_json_lines(&self) -> String {
+        let mut out = String::new();
+        for ring in [&self.sampled, &self.slow] {
+            let drained: Vec<TraceRecord> = ring.lock().unwrap().drain(..).collect();
+            for rec in drained {
+                out.push_str(&rec.to_json().dump());
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+fn push_ring(ring: &Mutex<VecDeque<TraceRecord>>, rec: TraceRecord) {
+    let mut r = ring.lock().unwrap();
+    if r.len() >= TRACE_RING_CAP {
+        r.pop_front();
+    }
+    r.push_back(rec);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn sampling_keeps_every_nth_span() {
+        let t = Tracer::new(4, 0);
+        let spans: Vec<_> = (0..8).map(|_| t.begin()).collect();
+        let kept: Vec<bool> = spans.iter().map(|s| s.is_some()).collect();
+        assert_eq!(kept, [true, false, false, false, true, false, false, false]);
+        for s in spans.into_iter().flatten() {
+            s.stamp(Stage::Write);
+            t.finish(&s);
+        }
+        assert_eq!(t.sampled_total.get(), 2);
+        let dump = t.dump_json_lines();
+        assert_eq!(dump.lines().count(), 2);
+        // Drained: a second dump is empty.
+        assert!(t.dump_json_lines().is_empty());
+    }
+
+    #[test]
+    fn slow_ring_captures_only_over_threshold() {
+        let t = Tracer::new(0, 1_000_000); // 1ms threshold, no sampling
+        let fast = t.begin().expect("slow capture spans every request");
+        fast.stamp_at(Stage::Write, fast.start + Duration::from_micros(10));
+        t.finish(&fast);
+        let slow = t.begin().unwrap();
+        slow.stamp_at(Stage::Parse, slow.start + Duration::from_micros(5));
+        slow.stamp_at(Stage::Write, slow.start + Duration::from_millis(3));
+        t.finish(&slow);
+        assert_eq!(t.slow_total.get(), 1);
+        let dump = t.dump_json_lines();
+        assert_eq!(dump.lines().count(), 1);
+        let j = Json::parse(dump.lines().next().unwrap()).unwrap();
+        assert_eq!(j.get("kind").and_then(|k| k.as_str()), Some("slow"));
+        assert!(j.get("total_ns").and_then(|t| t.as_f64()).unwrap() >= 3e6);
+    }
+
+    #[test]
+    fn timeline_is_causal_and_json_parseable() {
+        let t = Tracer::new(1, 0);
+        let s = t.begin().unwrap();
+        // Stamp out of order; the timeline must come back sorted.
+        s.stamp_at(Stage::Decode, s.start + Duration::from_micros(30));
+        s.stamp_at(Stage::Parse, s.start + Duration::from_micros(1));
+        s.stamp_at(Stage::Write, s.start + Duration::from_micros(50));
+        t.finish(&s);
+        let dump = t.dump_json_lines();
+        let j = Json::parse(dump.trim()).unwrap();
+        let stages = j.get("stages").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(stages.len(), 4); // accept + the three stamps
+        let offs: Vec<f64> =
+            stages.iter().map(|e| e.get("ns").and_then(|n| n.as_f64()).unwrap()).collect();
+        assert!(offs.windows(2).all(|w| w[0] <= w[1]), "not causal: {offs:?}");
+        assert_eq!(stages[0].get("stage").and_then(|s| s.as_str()), Some("accept"));
+    }
+
+    #[test]
+    fn disabled_tracer_is_free() {
+        let t = Tracer::disabled();
+        assert!(t.begin().is_none());
+        assert!(t.dump_json_lines().is_empty());
+    }
+}

@@ -1,4 +1,12 @@
-//! Running training metrics.
+//! Running training metrics: the per-epoch [`EpochMetrics`] accumulator
+//! the SGD step fills in, plus the process-wide [`TrainStats`] sink —
+//! lock-free [`crate::obs`] counters folded in at every epoch boundary
+//! and rendered into the serving frontend's `METRICS` scrape as the
+//! `ltls_train_*` family (catalog: `docs/OBSERVABILITY.md`).
+
+use crate::obs::{render_counter, render_histogram, Counter, Histogram};
+use std::sync::OnceLock;
+use std::time::Duration;
 
 /// Accumulated over an epoch.
 #[derive(Clone, Debug, Default)]
@@ -50,6 +58,96 @@ impl std::fmt::Display for EpochMetrics {
     }
 }
 
+/// Process-wide training counters on the lock-free [`crate::obs`]
+/// primitives. Both execution engines ([`super::Trainer::epoch`] and the
+/// Hogwild epoch of [`super::ParallelTrainer`]) fold their merged
+/// [`EpochMetrics`] into the [`TrainStats::global`] sink exactly once per
+/// epoch — the serial engine is the `threads = 1` delegate of the
+/// parallel one, so nothing double-counts.
+pub struct TrainStats {
+    /// Epochs completed (any engine).
+    pub epochs: Counter,
+    /// Examples consumed across all epochs.
+    pub examples: Counter,
+    /// SGD steps whose hinge was active (an update happened).
+    pub updates: Counter,
+    /// Labels assigned to trellis paths on first sight (paper §5.1).
+    pub new_labels: Counter,
+    /// Wall-clock time per epoch.
+    pub epoch_time: Histogram,
+}
+
+impl Default for TrainStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TrainStats {
+    pub fn new() -> Self {
+        TrainStats {
+            epochs: Counter::new(),
+            examples: Counter::new(),
+            updates: Counter::new(),
+            new_labels: Counter::new(),
+            epoch_time: Histogram::new(),
+        }
+    }
+
+    /// The process-wide sink every trainer reports into.
+    pub fn global() -> &'static TrainStats {
+        static GLOBAL: OnceLock<TrainStats> = OnceLock::new();
+        GLOBAL.get_or_init(TrainStats::new)
+    }
+
+    /// Fold one completed epoch into the counters.
+    pub fn observe_epoch(&self, m: &EpochMetrics, elapsed: Duration) {
+        self.epochs.inc();
+        self.examples.add(m.examples);
+        self.updates.add(m.active_hinge);
+        self.new_labels.add(m.new_labels);
+        self.epoch_time.record_duration(elapsed);
+    }
+
+    /// The `ltls_train_*` block of the Prometheus scrape (all-zero until
+    /// the process trains something — `serve --listen` without `--model`
+    /// trains in-process, so the serving scrape carries these live).
+    pub fn prometheus(&self) -> String {
+        let mut s = String::new();
+        render_counter(
+            &mut s,
+            "ltls_train_epochs_total",
+            "training epochs completed",
+            self.epochs.get(),
+        );
+        render_counter(
+            &mut s,
+            "ltls_train_examples_total",
+            "training examples consumed",
+            self.examples.get(),
+        );
+        render_counter(
+            &mut s,
+            "ltls_train_updates_total",
+            "SGD steps with an active hinge (weights updated)",
+            self.updates.get(),
+        );
+        render_counter(
+            &mut s,
+            "ltls_train_new_labels_total",
+            "labels assigned to trellis paths on first sight",
+            self.new_labels.get(),
+        );
+        render_histogram(
+            &mut s,
+            "ltls_train_epoch_seconds",
+            "wall-clock time per training epoch",
+            &self.epoch_time.snapshot(),
+        );
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +189,47 @@ mod tests {
         a.merge(&EpochMetrics::default());
         assert_eq!(a.examples, snapshot.examples);
         assert_eq!(a.loss_sum, snapshot.loss_sum);
+    }
+
+    #[test]
+    fn train_stats_accumulate_across_epochs() {
+        let s = TrainStats::new();
+        let m = EpochMetrics { examples: 10, active_hinge: 4, loss_sum: 5.0, new_labels: 2 };
+        s.observe_epoch(&m, Duration::from_micros(50));
+        s.observe_epoch(&m, Duration::from_micros(70));
+        assert_eq!(s.epochs.get(), 2);
+        assert_eq!(s.examples.get(), 20);
+        assert_eq!(s.updates.get(), 8);
+        assert_eq!(s.new_labels.get(), 4);
+        assert_eq!(s.epoch_time.snapshot().count, 2);
+    }
+
+    #[test]
+    fn train_stats_prometheus_is_conformant() {
+        let s = TrainStats::new();
+        let m = EpochMetrics { examples: 3, active_hinge: 1, loss_sum: 1.0, new_labels: 0 };
+        s.observe_epoch(&m, Duration::from_millis(2));
+        let text = s.prometheus();
+        assert!(text.contains("# HELP ltls_train_epochs_total"), "{text}");
+        assert!(text.contains("# TYPE ltls_train_epochs_total counter"), "{text}");
+        assert!(text.contains("ltls_train_epochs_total 1"), "{text}");
+        assert!(text.contains("ltls_train_examples_total 3"), "{text}");
+        assert!(text.contains("# TYPE ltls_train_epoch_seconds histogram"), "{text}");
+        assert!(text.contains("ltls_train_epoch_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("ltls_train_epoch_seconds_count 1"), "{text}");
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            assert_eq!(line.split_whitespace().count(), 2, "bad line {line:?}");
+        }
+    }
+
+    /// The global sink is a singleton: every call sees the same counters.
+    #[test]
+    fn global_sink_is_shared() {
+        let before = TrainStats::global().epochs.get();
+        TrainStats::global().observe_epoch(&EpochMetrics::default(), Duration::ZERO);
+        assert!(TrainStats::global().epochs.get() > before);
     }
 }

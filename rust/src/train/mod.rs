@@ -24,6 +24,6 @@ pub mod shard;
 pub mod trainer;
 
 pub use config::TrainConfig;
-pub use metrics::EpochMetrics;
+pub use metrics::{EpochMetrics, TrainStats};
 pub use parallel::ParallelTrainer;
 pub use trainer::{TrainedModel, Trainer};

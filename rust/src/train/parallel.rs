@@ -502,6 +502,7 @@ impl<T: Topology, S: TrainableStore> ParallelTrainer<T, S> {
     }
 
     fn hogwild_epoch_inner(&mut self, ds: &Dataset) -> EpochMetrics {
+        let t0 = std::time::Instant::now();
         // Averaging is strictly serial (module docs); the Hogwild path
         // trains raw weights, and once any hogwild epoch has run the
         // average is gone for good (a restarted average over a suffix of
@@ -543,6 +544,9 @@ impl<T: Topology, S: TrainableStore> ParallelTrainer<T, S> {
             }
         });
         self.inner.step = step_ctr.load(Ordering::Relaxed);
+        // The serial engine records its own epochs (it is the threads = 1
+        // delegate of `Self::epoch`), so only the Hogwild path folds here.
+        super::TrainStats::global().observe_epoch(&merged, t0.elapsed());
         merged
     }
 

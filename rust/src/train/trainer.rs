@@ -158,8 +158,10 @@ impl<T: Topology, S: TrainableStore> Trainer<T, S> {
         loss_val
     }
 
-    /// Train one epoch over the dataset; returns epoch metrics.
+    /// Train one epoch over the dataset; returns epoch metrics (also
+    /// folded into the process-wide [`super::TrainStats`] sink).
     pub fn epoch(&mut self, ds: &Dataset) -> EpochMetrics {
+        let t0 = std::time::Instant::now();
         let mut metrics = EpochMetrics::default();
         let n = ds.n_examples();
         // Deterministic epoch permutation, shared with the parallel
@@ -172,6 +174,7 @@ impl<T: Topology, S: TrainableStore> Trainer<T, S> {
                 eprintln!("  [{}] {}/{} {}", ds.name, i + 1, n, metrics);
             }
         }
+        super::TrainStats::global().observe_epoch(&metrics, t0.elapsed());
         metrics
     }
 

@@ -1,7 +1,28 @@
 //! Wall-clock timing helpers and latency histograms for the coordinator's
-//! serving metrics (P50/P99 reporting in `examples/serve_batched.rs`).
+//! serving metrics (P50/P99 reporting in `examples/serve_batched.rs`),
+//! plus the fixed log2 bucket scale shared with the lock-free
+//! observability histograms in [`crate::obs`].
 
 use std::time::Instant;
+
+/// Number of buckets in the fixed log2 nanosecond scale used by the
+/// `obs` histograms and their Prometheus export.
+pub const LOG2_BUCKETS: usize = 64;
+
+/// Bucket index for `ns` on the fixed log2 scale: bucket `b` counts
+/// values in `(2^(b-1), 2^b]` ns, bucket 0 holds `[0, 1]`, and the top
+/// bucket is the overflow catch-all.
+pub fn log2_bucket_of(ns: u64) -> usize {
+    if ns <= 1 {
+        return 0;
+    }
+    ((64 - (ns - 1).leading_zeros()) as usize).min(LOG2_BUCKETS - 1)
+}
+
+/// Upper edge (inclusive) of log2 bucket `b` in nanoseconds.
+pub fn log2_bucket_upper_ns(b: usize) -> u64 {
+    1u64 << b.min(63)
+}
 
 /// Simple scope timer.
 pub struct Timer {
@@ -165,6 +186,25 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.quantile_ns(0.99), 0.0);
         assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn log2_buckets_partition_the_axis() {
+        assert_eq!(log2_bucket_of(0), 0);
+        assert_eq!(log2_bucket_of(1), 0);
+        assert_eq!(log2_bucket_of(2), 1);
+        assert_eq!(log2_bucket_of(3), 2);
+        assert_eq!(log2_bucket_of(4), 2);
+        assert_eq!(log2_bucket_of(5), 3);
+        assert_eq!(log2_bucket_of(u64::MAX), LOG2_BUCKETS - 1);
+        // Every value lands in the bucket whose edges bracket it.
+        for ns in [1u64, 7, 100, 1_000, 123_456, 1 << 33] {
+            let b = log2_bucket_of(ns);
+            assert!(ns <= log2_bucket_upper_ns(b), "ns={ns} b={b}");
+            if b > 0 {
+                assert!(ns > log2_bucket_upper_ns(b - 1), "ns={ns} b={b}");
+            }
+        }
     }
 
     #[test]

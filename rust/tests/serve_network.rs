@@ -583,3 +583,237 @@ fn event_loop_serves_many_concurrent_connections() {
     drop(clients);
     server.shutdown();
 }
+
+/// Read a multi-line block reply (`METRICS` / `TRACE`) up to its `# end`
+/// marker; returns the lines without the marker.
+fn scrape(c: &mut Client, cmd: &str) -> Vec<String> {
+    c.send(cmd);
+    let mut lines = Vec::new();
+    loop {
+        let line = c.recv();
+        if line == "# end" {
+            break;
+        }
+        lines.push(line);
+    }
+    lines
+}
+
+/// The metric names of a scrape's sample lines, labels stripped.
+fn metric_names(lines: &[String]) -> std::collections::BTreeSet<String> {
+    lines
+        .iter()
+        .filter(|l| !l.starts_with('#'))
+        .map(|l| {
+            let sample = l.split_whitespace().next().unwrap();
+            sample.split('{').next().unwrap().to_string()
+        })
+        .collect()
+}
+
+/// Drive `n` sequential prediction requests through `c`.
+fn drive(c: &mut Client, ds: &Dataset, n: usize) {
+    for i in 0..n {
+        c.send(&req_line(3, ds.row(i % ds.n_examples())));
+        parse_topk(&c.recv());
+    }
+}
+
+/// Observability contract: the `METRICS` scrape exposes the *same* set of
+/// metric names whichever transport served it (the scrape-diff test), and
+/// every sample line is well-formed `name value`.
+#[test]
+fn metrics_name_set_is_identical_across_transports() {
+    let mut sets = Vec::new();
+    for transport in [Transport::Threads, Transport::EventLoop] {
+        let (model, ds) = trained(1, 42);
+        let server = NetServer::start(
+            "127.0.0.1:0",
+            BatchedLtls(model),
+            NetConfig { server: small_pool(), transport, ..NetConfig::default() },
+        )
+        .expect("start server");
+        let mut c = Client::connect(server.addr());
+        drive(&mut c, &ds, 8);
+        let lines = scrape(&mut c, "METRICS");
+        for l in &lines {
+            if l.starts_with('#') {
+                assert!(
+                    l.starts_with("# HELP ") || l.starts_with("# TYPE "),
+                    "unexpected comment line {l:?}"
+                );
+            } else {
+                assert_eq!(l.split_whitespace().count(), 2, "bad sample line {l:?}");
+            }
+        }
+        let names = metric_names(&lines);
+        for want in [
+            "ltls_requests_total",
+            "ltls_batches_total",
+            "ltls_request_latency_seconds_bucket",
+            "ltls_request_latency_seconds_sum",
+            "ltls_request_latency_seconds_count",
+            "ltls_queue_latency_seconds_bucket",
+            "ltls_exec_latency_seconds_bucket",
+            "ltls_worker_requests",
+            "ltls_net_inflight",
+            "ltls_net_rejected_total",
+            "ltls_net_open_connections",
+            "ltls_trace_sampled_total",
+            "ltls_trace_slow_total",
+            "ltls_train_epochs_total",
+            "ltls_train_epoch_seconds_bucket",
+        ] {
+            assert!(names.contains(want), "{transport}: missing {want} in {names:?}");
+        }
+        sets.push((transport, names));
+        server.shutdown();
+    }
+    let (ta, a) = &sets[0];
+    let (tb, b) = &sets[1];
+    assert_eq!(a, b, "scrape-diff: {ta} vs {tb} expose different metric name sets");
+}
+
+/// Full cumulative histogram exposition over the wire: every `_bucket`
+/// series is monotone non-decreasing in `le`, ends at `+Inf`, and its
+/// final (cumulative) value equals the family's `_count`.
+#[test]
+fn histogram_buckets_are_monotone_and_cumulative_over_the_wire() {
+    use std::collections::BTreeMap;
+    let (model, ds) = trained(1, 42);
+    let n_req = 25usize;
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        BatchedLtls(model),
+        NetConfig { server: small_pool(), ..NetConfig::default() },
+    )
+    .expect("start server");
+    let mut c = Client::connect(server.addr());
+    drive(&mut c, &ds, n_req);
+    let lines = scrape(&mut c, "METRICS");
+
+    let mut buckets: BTreeMap<String, Vec<(String, u64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<String, u64> = BTreeMap::new();
+    let mut requests_total = 0u64;
+    for l in lines.iter().filter(|l| !l.starts_with('#')) {
+        let mut it = l.split_whitespace();
+        let (name_full, val) = (it.next().unwrap(), it.next().unwrap());
+        let base = name_full.split('{').next().unwrap();
+        if let Some(fam) = base.strip_suffix("_bucket") {
+            let le = name_full
+                .split("le=\"")
+                .nth(1)
+                .unwrap_or_else(|| panic!("bucket line without le label: {l}"))
+                .trim_end_matches("\"}")
+                .to_string();
+            let v: u64 = val.parse().unwrap_or_else(|_| panic!("bad bucket value: {l}"));
+            buckets.entry(fam.to_string()).or_default().push((le, v));
+        } else if let Some(fam) = base.strip_suffix("_count") {
+            counts.insert(fam.to_string(), val.parse().unwrap());
+        } else if base == "ltls_requests_total" {
+            requests_total = val.parse().unwrap();
+        }
+    }
+    assert!(requests_total >= n_req as u64, "requests_total = {requests_total}");
+    for fam in ["ltls_request_latency_seconds", "ltls_queue_latency_seconds"] {
+        assert!(buckets.contains_key(fam), "no bucket series for {fam}");
+    }
+    for (fam, series) in &buckets {
+        assert!(!series.is_empty());
+        assert_eq!(series.last().unwrap().0, "+Inf", "{fam} must close with +Inf");
+        let vals: Vec<u64> = series.iter().map(|&(_, v)| v).collect();
+        assert!(
+            vals.windows(2).all(|w| w[0] <= w[1]),
+            "{fam} buckets are not cumulative/monotone: {vals:?}"
+        );
+        // Strict cumulative == _count only for the serving families: they
+        // are quiescent once every reply arrived (recorded before the
+        // send), while the process-global train stats may be mid-record
+        // from a concurrently running test in this binary.
+        if !fam.starts_with("ltls_train_") {
+            assert_eq!(counts.get(fam), Some(vals.last().unwrap()), "{fam}: +Inf != _count");
+        }
+    }
+    assert_eq!(
+        counts.get("ltls_request_latency_seconds"),
+        Some(&requests_total),
+        "request-latency count must equal requests_total"
+    );
+    server.shutdown();
+}
+
+/// The `TRACE` endpoint contract, on both transports: with
+/// `--trace-sample 1` every request's span lands in the sampled ring;
+/// the dump parses as JSON lines whose stage timelines are causal
+/// (non-decreasing offsets), anchored at `accept`, and cover the full
+/// pipeline (well over the 7-stage floor); a second dump is empty.
+fn trace_dumps_causal_stage_timelines(transport: Transport) {
+    let (model, ds) = trained(1, 42);
+    let n_req = 20usize;
+    let server = NetServer::start(
+        "127.0.0.1:0",
+        BatchedLtls(model),
+        NetConfig {
+            server: small_pool(),
+            transport,
+            trace_sample: 1,
+            trace_slow_ms: 0,
+            ..NetConfig::default()
+        },
+    )
+    .expect("start server");
+    let mut c = Client::connect(server.addr());
+    drive(&mut c, &ds, n_req);
+    let lines = scrape(&mut c, "TRACE");
+    assert_eq!(lines.len(), n_req, "every request is sampled at --trace-sample 1");
+    let full: std::collections::BTreeSet<&str> = [
+        "accept",
+        "parse",
+        "admit",
+        "enqueue",
+        "batch_form",
+        "score",
+        "decode",
+        "serialize",
+        "write",
+    ]
+    .into_iter()
+    .collect();
+    for line in &lines {
+        let doc = Json::parse(line).unwrap_or_else(|e| panic!("bad trace json {line:?}: {e}"));
+        assert_eq!(doc.get("kind").and_then(|k| k.as_str()), Some("sampled"));
+        let total = doc.get("total_ns").and_then(|t| t.as_f64()).unwrap();
+        let stages = doc.get("stages").and_then(|s| s.as_arr()).unwrap();
+        let names: Vec<&str> =
+            stages.iter().map(|e| e.get("stage").unwrap().as_str().unwrap()).collect();
+        let offs: Vec<f64> =
+            stages.iter().map(|e| e.get("ns").and_then(|n| n.as_f64()).unwrap()).collect();
+        let got: std::collections::BTreeSet<&str> = names.iter().copied().collect();
+        assert_eq!(got, full, "incomplete pipeline timeline in {line}");
+        assert!(offs.windows(2).all(|w| w[0] <= w[1]), "not causal: {names:?} at {offs:?}");
+        assert_eq!((names[0], offs[0]), ("accept", 0.0), "span must anchor at accept");
+        assert!(total >= *offs.last().unwrap(), "total_ns below the last stamp: {line}");
+    }
+    // Trace capture is scrape-visible on METRICS too.
+    let metrics = scrape(&mut c, "METRICS");
+    let sampled = metrics
+        .iter()
+        .find_map(|l| l.strip_prefix("ltls_trace_sampled_total "))
+        .expect("ltls_trace_sampled_total missing")
+        .parse::<u64>()
+        .unwrap();
+    assert!(sampled >= n_req as u64, "sampled_total = {sampled}");
+    // The dump drains the ring: an immediate second TRACE is empty.
+    assert!(scrape(&mut c, "TRACE").is_empty(), "TRACE did not drain the ring");
+    server.shutdown();
+}
+
+#[test]
+fn trace_dumps_causal_stage_timelines_threads() {
+    trace_dumps_causal_stage_timelines(Transport::Threads);
+}
+
+#[test]
+fn trace_dumps_causal_stage_timelines_event_loop() {
+    trace_dumps_causal_stage_timelines(Transport::EventLoop);
+}

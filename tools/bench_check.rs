@@ -48,8 +48,10 @@ use std::collections::BTreeMap;
 /// 1 = dispatched fast path (portable sweep or SIMD intrinsics).
 /// `transport` discriminates network-frontend rows: 0 = thread-per-
 /// connection, 1 = poll(2) event loop; `clients` is the concurrent
-/// connection count of a sweep row.
-const DISCRIMINATORS: [&str; 10] = [
+/// connection count of a sweep row. `trace` discriminates observability
+/// rows: 0 = request tracing disabled, 1 = the default sampling plus the
+/// slow-request ring.
+const DISCRIMINATORS: [&str; 11] = [
     "workers",
     "threads",
     "batch",
@@ -60,6 +62,7 @@ const DISCRIMINATORS: [&str; 10] = [
     "kernel",
     "transport",
     "clients",
+    "trace",
 ];
 
 fn main() {
@@ -365,6 +368,23 @@ trailing noise
         assert_eq!(c["serve_network.transport=1.clients=1000.req_per_s"], 9050.0);
         let base = r#"{"metrics":{"serve_network.many_conn_ratio":{"baseline":1.0,"tolerance":0.25}}}"#;
         assert_eq!(check_against_baseline(base, &c).unwrap().failures, 0);
+    }
+
+    #[test]
+    fn trace_rows_discriminate_traced_vs_untraced_serving() {
+        let c = current_from(
+            "json: {\"bench\":\"serve_network\",\"obs_overhead_ratio\":0.99,\"results\":[{\"transport\":1,\"clients\":4,\"trace\":1,\"req_per_s\":9000.0},{\"transport\":1,\"clients\":4,\"trace\":0,\"req_per_s\":9090.0}]}\n",
+        );
+        assert_eq!(c["serve_network.obs_overhead_ratio"], 0.99);
+        assert_eq!(c["serve_network.transport=1.clients=4.trace=1.req_per_s"], 9000.0);
+        assert_eq!(c["serve_network.transport=1.clients=4.trace=0.req_per_s"], 9090.0);
+        // The observability gate: traced/untraced near 1.0 passes, a
+        // heavy tracing tax fails.
+        let base = r#"{"metrics":{"serve_network.obs_overhead_ratio":{"baseline":1.0,"tolerance":0.05}}}"#;
+        assert_eq!(check_against_baseline(base, &c).unwrap().failures, 0);
+        let mut worse = c.clone();
+        worse.insert("serve_network.obs_overhead_ratio".into(), 0.8);
+        assert_eq!(check_against_baseline(base, &worse).unwrap().failures, 1);
     }
 
     #[test]
