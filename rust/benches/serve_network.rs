@@ -23,19 +23,28 @@
 //!   handful of relaxed atomic stores, so the ratio should sit near 1.0
 //!   and the gate fails only if observability starts taxing the request
 //!   hot path.
+//! * `shard_scatter_ratio` — coordinator throughput fanning out over 2
+//!   label-space shards over the same coordinator proxying a single
+//!   shard: the scatter tier claims the fan-out itself (one extra
+//!   pooled hop per shard plus the k-way merge) costs ~nothing because
+//!   each shard scores fewer terminal edges. Machine-relative, so
+//!   gateable; fails only if fanning out starts collapsing throughput.
 //!
 //! Per-row absolute throughputs (`transport=T.clients=N.req_per_s`,
 //! transport 0 = threads, 1 = event-loop) are recorded but not gated
 //! (machine-dependent); the two observability phases are also recorded
-//! as `transport=1.clients=4.trace={1,0}.req_per_s` rows.
+//! as `transport=1.clients=4.trace={1,0}.req_per_s` rows, and the
+//! scatter phase as `shards={1,2,4}.req_per_s` rows.
 //!
 //! `BENCH_FAST=1` trims the request count for smoke runs.
 
 use ltls::coordinator::{
     BatchedLtls, BatcherConfig, NetConfig, NetServer, PredictServer, ReloadableLtls,
-    ServerConfig, Transport,
+    ScatterConfig, ScatterModel, ServerConfig, Transport,
 };
 use ltls::data::synthetic::SyntheticSpec;
+use ltls::graph::ShardPlan;
+use ltls::model::slice_model;
 use ltls::train::{TrainConfig, Trainer};
 use ltls::util::json::Json;
 use ltls::util::timer::Timer;
@@ -296,6 +305,56 @@ fn main() {
     }
     std::fs::remove_dir_all(&dir).ok();
 
+    // Phase 4: sharded scatter-gather — the coordinator fans each request
+    // out over N label-space shards (one in-process replica each) over
+    // persistent pooled connections and k-way-merges the partial top-k
+    // lists. shards=1 is the pure proxy cost (one coordinator hop, no
+    // fan-out); the gated ratio compares 2-shard fan-out against it.
+    println!("\n== sharded scatter-gather (coordinator fan-out, {clients} clients) ==");
+    let shard_n: usize = if fast { 4_000 } else { 20_000 };
+    let mut scatter_rps = [0.0f64; 3];
+    for (si, &n_shards) in [1usize, 2, 4].iter().enumerate() {
+        let plan = ShardPlan::new(&model.trellis, n_shards as u32).expect("shard plan");
+        let mut shard_servers = Vec::new();
+        let mut spec: Vec<Vec<String>> = Vec::new();
+        for s in 0..n_shards as u32 {
+            let slice = slice_model(&model, &plan, s).expect("slice model");
+            let srv = NetServer::start(
+                "127.0.0.1:0",
+                BatchedLtls(slice),
+                NetConfig { server: pool_cfg(), ..NetConfig::default() },
+            )
+            .expect("start shard server");
+            spec.push(vec![srv.addr().to_string()]);
+            shard_servers.push(srv);
+        }
+        let scatter = ScatterModel::new(
+            spec,
+            ScatterConfig { n_features: Some(ds.n_features), ..ScatterConfig::default() },
+        )
+        .expect("scatter model");
+        let stats = scatter.stats();
+        let coord = NetServer::start_scatter(
+            "127.0.0.1:0",
+            scatter,
+            NetConfig { server: pool_cfg(), ..NetConfig::default() },
+        )
+        .expect("start coordinator");
+        let rps = drive_tcp(coord.addr(), &ds, clients, shard_n, 16);
+        assert_eq!(stats.degraded(), 0, "healthy shards must never degrade a reply");
+        println!("coordinator {n_shards:>2} shard(s)   {rps:>10.0} req/s");
+        coord.shutdown();
+        for srv in shard_servers {
+            srv.shutdown();
+        }
+        scatter_rps[si] = rps;
+        rows.push(Json::obj(vec![
+            ("shards", Json::from(n_shards)),
+            ("req_per_s", Json::Num(rps)),
+        ]));
+    }
+    let shard_scatter_ratio = scatter_rps[1] / scatter_rps[0];
+
     // The two observability phases as trace-discriminated rows:
     // event-loop transport, 4 clients, tracing on (default sampling) vs
     // fully off.
@@ -321,6 +380,7 @@ fn main() {
     );
     println!("many_conn_ratio (event-loop@1000 / threads@100) = {many_conn_ratio:.2}");
     println!("obs_overhead_ratio (traced / tracing-off) = {obs_overhead_ratio:.2}");
+    println!("shard_scatter_ratio (2-shard fan-out / 1-shard proxy) = {shard_scatter_ratio:.2}");
 
     let json = Json::obj(vec![
         ("bench", Json::from("serve_network")),
@@ -331,6 +391,7 @@ fn main() {
         ("net_vs_inproc_ratio", Json::Num(net_overhead)),
         ("many_conn_ratio", Json::Num(many_conn_ratio)),
         ("obs_overhead_ratio", Json::Num(obs_overhead_ratio)),
+        ("shard_scatter_ratio", Json::Num(shard_scatter_ratio)),
         ("inproc_req_per_s", Json::Num(inproc)),
         ("tcp_req_per_s", Json::Num(tcp_plain)),
         ("tcp_notrace_req_per_s", Json::Num(tcp_notrace)),

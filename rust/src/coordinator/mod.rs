@@ -41,6 +41,12 @@
 //!   micro-batches by the `RELOAD` control command or the
 //!   `--watch-model` file poller, with zero dropped or misrouted
 //!   in-flight requests.
+//! * [`scatter`] — the sharded scatter-gather tier (`ltls coordinator`):
+//!   fans each micro-batch out over N label shards serving v4 model
+//!   slices (`ltls shard`), k-way-merges the partial top-k lists back
+//!   into the exact global top-k, and fails over between shard replicas —
+//!   replies carry `"partial":true` only while every replica of some
+//!   shard is down.
 //!
 //! The crate-wide layer map, with the life of a request through this
 //! coordinator (accept → frame → batcher → worker pool → reload slot →
@@ -51,12 +57,14 @@ pub mod batcher;
 pub mod event_loop;
 pub mod metrics;
 pub mod reload;
+pub mod scatter;
 pub mod server;
 pub mod transport;
 
 pub use batcher::{Batch, BatcherConfig, Stamped};
 pub use metrics::{ServingMetrics, TransportGauges, WorkerStats};
 pub use reload::{ModelSlot, ModelWatcher, ReloadableLtls};
+pub use scatter::{merge_topk, parse_shard_spec, ScatterConfig, ScatterModel, ScatterStats};
 pub use server::{
     BatchedLtls, CompletionNotify, PredictServer, Request, Response, ServerConfig, SubmitError,
     Submitter,

@@ -1,0 +1,716 @@
+//! Scatter-gather serving tier: fan each request batch out over N label
+//! shards, k-way-merge the partial top-k lists, fail over between shard
+//! replicas.
+//!
+//! Each shard process serves a **v4 model slice** (`ltls shard`, see
+//! [`crate::model::shard`]): the full trellis with every non-owned
+//! terminal edge masked to `-inf`, so a shard's top-k list contains
+//! exactly its owned labels with bit-identical scores. Label ownership
+//! partitions the label space ([`crate::graph::ShardPlan`]), so the
+//! global top-k is a subset of the union of per-shard top-k lists and
+//! [`merge_topk`] reconstructs it exactly.
+//!
+//! The coordinator ([`ScatterModel`]) plugs into the existing serving
+//! stack as just another [`BatchModel`]: the normal wire protocol,
+//! admission control, batcher and worker pool all apply unchanged —
+//! a worker's `predict_batch_into` pipelines the whole micro-batch to
+//! every shard over persistent pooled connections
+//! ([`crate::util::netclient::NetClient`], one per worker thread per
+//! replica), then gathers the replies multiplexed through `poll(2)`
+//! ([`crate::util::poll`]) so slow shards overlap instead of serializing.
+//!
+//! Failure handling, per attempt (one batch exchange with one replica):
+//! a connect error, I/O error, reply timeout
+//! ([`ScatterConfig::shard_timeout_ms`]) or backpressure reply fails the
+//! attempt; the batch is then retried on the shard's other replicas in
+//! round-robin order (plus one fresh-connection retry wrapping back, so
+//! a stale pooled connection never degrades a single-replica shard).
+//! Only when every replica of a shard is down is the shard omitted and
+//! the affected replies marked `"partial":true` (`docs/PROTOCOL.md`).
+//! Everything is observable: `ltls_shard_requests_total{shard="i"}`,
+//! `ltls_shard_retries_total`, `ltls_shard_degraded_total` and the
+//! `ltls_shard_rtt_seconds` histogram ([`ScatterStats`]) join the
+//! `METRICS` exposition on every server (zero-valued on unsharded ones,
+//! so the scrape name set is topology-independent).
+
+use super::server::{BatchModel, Request, Response};
+use crate::engine::PredictScratch;
+use crate::obs::{
+    render_counter, render_histogram, Counter, Histogram, HistogramSnapshot, Registry, Stage,
+};
+use crate::util::json::Json;
+use crate::util::netclient::NetClient;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Scatter-tier configuration (the shard topology itself is given to
+/// [`ScatterModel::from_spec`] as `host:port` lists).
+#[derive(Clone, Debug, Default)]
+pub struct ScatterConfig {
+    /// Budget for one batch exchange with one replica, milliseconds
+    /// (0 → 2000). On expiry the attempt fails and the batch is retried
+    /// on the shard's other replica.
+    pub shard_timeout_ms: u64,
+    /// TCP connect budget per replica, milliseconds (0 → 1000).
+    pub connect_timeout_ms: u64,
+    /// Feature dimensionality `D` of the sharded model, when known
+    /// (`--features`). The coordinator itself holds no weights, so
+    /// without this requests with out-of-range feature indices reach the
+    /// shards and come back as empty top-k lists instead of being
+    /// rejected with a protocol error up front.
+    pub n_features: Option<usize>,
+}
+
+impl ScatterConfig {
+    fn shard_timeout(&self) -> Duration {
+        if self.shard_timeout_ms == 0 {
+            Duration::from_millis(2000)
+        } else {
+            Duration::from_millis(self.shard_timeout_ms)
+        }
+    }
+
+    fn connect_timeout(&self) -> Duration {
+        if self.connect_timeout_ms == 0 {
+            Duration::from_millis(1000)
+        } else {
+            Duration::from_millis(self.connect_timeout_ms)
+        }
+    }
+}
+
+/// Parse a shard topology spec: shards separated by `;`, replicas of one
+/// shard separated by `,` — e.g. `"a:1,b:1;a:2,b:2"` is 2 shards × 2
+/// replicas. Every address must look like `host:port`.
+pub fn parse_shard_spec(spec: &str) -> Result<Vec<Vec<String>>, String> {
+    let mut shards = Vec::new();
+    for (si, shard) in spec.split(';').enumerate() {
+        let mut replicas = Vec::new();
+        for addr in shard.split(',') {
+            let a = addr.trim();
+            if a.is_empty() {
+                return Err(format!("shard {si}: empty replica address in {spec:?}"));
+            }
+            if !a.contains(':') {
+                return Err(format!("shard {si}: address {a:?} is not host:port"));
+            }
+            replicas.push(a.to_string());
+        }
+        shards.push(replicas);
+    }
+    if shards.is_empty() {
+        return Err("empty shard spec".into());
+    }
+    Ok(shards)
+}
+
+const REQ_HELP: &str = "requests fanned out to each shard (counted per completed attempt)";
+const DEG_HELP: &str = "replies answered partial because every replica of a shard was down";
+const RET_HELP: &str = "batch exchanges retried on another replica after a failed attempt";
+const RTT_HELP: &str = "round-trip time of one batch exchange with one shard replica";
+
+/// Scatter-tier metrics. Rendered into the `METRICS` exposition by the
+/// transport; [`ScatterStats::render_absent`] emits the same families
+/// zero-valued on servers with no scatter tier, keeping the scrape name
+/// set identical across topologies.
+pub struct ScatterStats {
+    registry: Registry,
+    shard_requests: Vec<Arc<Counter>>,
+    degraded: Arc<Counter>,
+    retries: Arc<Counter>,
+    rtt: Arc<Histogram>,
+}
+
+impl ScatterStats {
+    pub fn new(n_shards: usize) -> ScatterStats {
+        let registry = Registry::new();
+        let shard_requests = (0..n_shards)
+            .map(|i| {
+                registry.counter_labeled("ltls_shard_requests_total", REQ_HELP, format!("shard=\"{i}\""))
+            })
+            .collect();
+        let degraded = registry.counter("ltls_shard_degraded_total", DEG_HELP);
+        let retries = registry.counter("ltls_shard_retries_total", RET_HELP);
+        let rtt = registry.histogram("ltls_shard_rtt_seconds", RTT_HELP);
+        ScatterStats { registry, shard_requests, degraded, retries, rtt }
+    }
+
+    /// Append this tier's families to a `METRICS` exposition.
+    pub fn render_into(&self, out: &mut String) {
+        self.registry.render(out);
+    }
+
+    /// The same families, zero-valued, for servers with no scatter tier.
+    pub fn render_absent(out: &mut String) {
+        render_counter(out, "ltls_shard_requests_total", REQ_HELP, 0);
+        render_counter(out, "ltls_shard_degraded_total", DEG_HELP, 0);
+        render_counter(out, "ltls_shard_retries_total", RET_HELP, 0);
+        render_histogram(out, "ltls_shard_rtt_seconds", RTT_HELP, &HistogramSnapshot::default());
+    }
+
+    /// Requests fanned out to shard `i` so far.
+    pub fn shard_requests(&self, i: usize) -> u64 {
+        self.shard_requests.get(i).map(|c| c.get()).unwrap_or(0)
+    }
+
+    /// Replies answered `"partial":true` so far.
+    pub fn degraded(&self) -> u64 {
+        self.degraded.get()
+    }
+
+    /// Failover retries so far.
+    pub fn retries(&self) -> u64 {
+        self.retries.get()
+    }
+}
+
+/// K-way merge of per-shard top-k lists into the global top-k, ordered
+/// by score descending with ties broken toward the smaller label id.
+///
+/// Each part must be sorted by the same key (score descending, label
+/// ascending among exact ties) — shard servers emit descending scores;
+/// exact-tie order inside one shard follows its path-code decode order,
+/// which only matters for bitwise-equal scores.
+pub fn merge_topk(parts: &[&[(u32, f32)]], k: usize, out: &mut Vec<(u32, f32)>) {
+    use std::collections::BinaryHeap;
+
+    struct Head {
+        score: f32,
+        label: u32,
+        part: usize,
+        pos: usize,
+    }
+    impl PartialEq for Head {
+        fn eq(&self, other: &Self) -> bool {
+            self.cmp(other) == std::cmp::Ordering::Equal
+        }
+    }
+    impl Eq for Head {}
+    impl PartialOrd for Head {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Head {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            // Max-heap: higher score pops first; among equal scores the
+            // smaller label id pops first.
+            self.score.total_cmp(&other.score).then_with(|| other.label.cmp(&self.label))
+        }
+    }
+
+    out.clear();
+    let mut heap: BinaryHeap<Head> = parts
+        .iter()
+        .enumerate()
+        .filter_map(|(p, list)| {
+            list.first().map(|&(l, s)| Head { score: s, label: l, part: p, pos: 0 })
+        })
+        .collect();
+    while out.len() < k {
+        let Some(h) = heap.pop() else { break };
+        out.push((h.label, h.score));
+        if let Some(&(l, s)) = parts[h.part].get(h.pos + 1) {
+            heap.push(Head { score: s, label: l, part: h.part, pos: h.pos + 1 });
+        }
+    }
+}
+
+/// One parsed shard reply line.
+enum ShardLine {
+    /// Partial top-k over the shard's owned labels.
+    Topk(Vec<(u32, f32)>),
+    /// Deterministic per-request rejection (e.g. the shard's feature
+    /// validation). Every replica answers identically, so this
+    /// contributes an empty candidate list instead of triggering
+    /// failover.
+    Rejected,
+    /// Backpressure rejection — transient; fails the attempt so the
+    /// batch retries on the other replica.
+    Backpressure,
+}
+
+fn parse_shard_line(line: &str) -> Result<ShardLine, String> {
+    let doc = Json::parse(line).map_err(|e| format!("unparseable shard reply: {e}"))?;
+    if let Some(topk) = doc.get("topk").and_then(|t| t.as_arr()) {
+        let mut v = Vec::with_capacity(topk.len());
+        for pair in topk {
+            let p = pair.as_arr().ok_or("malformed topk entry")?;
+            let (Some(l), Some(s)) =
+                (p.first().and_then(|x| x.as_f64()), p.get(1).and_then(|x| x.as_f64()))
+            else {
+                return Err("malformed topk entry".into());
+            };
+            v.push((l as u32, s as f32));
+        }
+        return Ok(ShardLine::Topk(v));
+    }
+    if doc.get("backpressure") == Some(&Json::Bool(true)) {
+        return Ok(ShardLine::Backpressure);
+    }
+    if doc.get("error").is_some() {
+        return Ok(ShardLine::Rejected);
+    }
+    Err(format!("unrecognized shard reply {line:?}"))
+}
+
+/// Render one admitted request back into its wire line. `{}` on f32
+/// prints the shortest decimal that parses back to the same bits, so the
+/// shard scores exactly what the coordinator was asked.
+fn render_request_line(r: &Request) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(8 + r.indices.len() * 8);
+    let _ = write!(s, "{}", r.k);
+    for (i, v) in r.indices.iter().zip(&r.values) {
+        let _ = write!(s, " {i}:{v}");
+    }
+    s
+}
+
+/// One in-flight batch exchange with one replica.
+struct Attempt {
+    shard: usize,
+    replica: usize,
+    client: NetClient,
+    replies: Vec<ShardLine>,
+    /// EOF or hard read error observed; classified once buffered lines
+    /// are exhausted.
+    eof: bool,
+    t0: Instant,
+}
+
+enum DrainState {
+    Complete,
+    Failed,
+    NeedMore,
+}
+
+/// Consume buffered reply lines into `a.replies`; classify the attempt
+/// once it has every reply (or can no longer get them).
+fn drain_lines(a: &mut Attempt, n_lines: usize) -> DrainState {
+    while a.replies.len() < n_lines {
+        match a.client.take_line() {
+            Ok(Some(line)) => match parse_shard_line(&line) {
+                Ok(ShardLine::Backpressure) | Err(_) => return DrainState::Failed,
+                Ok(r) => a.replies.push(r),
+            },
+            Ok(None) => {
+                return if a.eof { DrainState::Failed } else { DrainState::NeedMore };
+            }
+            Err(_) => return DrainState::Failed, // oversized reply line
+        }
+    }
+    DrainState::Complete
+}
+
+/// Read every pending attempt to completion (or failure) before
+/// `deadline`. On unix the reads are multiplexed through one `poll(2)`
+/// set so a slow shard overlaps the others; elsewhere attempts are
+/// drained sequentially (replies buffer in the kernel meanwhile).
+fn gather_attempts(
+    mut pending: Vec<Attempt>,
+    n_lines: usize,
+    deadline: Instant,
+) -> Vec<(Attempt, bool)> {
+    let mut done: Vec<(Attempt, bool)> = Vec::new();
+    #[cfg(unix)]
+    {
+        use crate::util::poll::{poll, PollFd, POLLIN};
+        loop {
+            let mut i = 0;
+            while i < pending.len() {
+                match drain_lines(&mut pending[i], n_lines) {
+                    DrainState::Complete => {
+                        let a = pending.swap_remove(i);
+                        done.push((a, true));
+                    }
+                    DrainState::Failed => {
+                        let a = pending.swap_remove(i);
+                        done.push((a, false));
+                    }
+                    DrainState::NeedMore => i += 1,
+                }
+            }
+            if pending.is_empty() {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                done.extend(pending.drain(..).map(|a| (a, false)));
+                break;
+            }
+            let timeout_ms = ((deadline - now).as_millis() as i64).clamp(1, i32::MAX as i64) as i32;
+            let mut fds: Vec<PollFd> =
+                pending.iter().map(|a| PollFd::new(a.client.raw_fd(), POLLIN)).collect();
+            if poll(&mut fds, timeout_ms).is_err() {
+                done.extend(pending.drain(..).map(|a| (a, false)));
+                break;
+            }
+            for (i, fd) in fds.iter().enumerate() {
+                if !fd.readable() {
+                    continue;
+                }
+                match pending[i].client.fill_ready() {
+                    Ok(0) => pending[i].eof = true,
+                    Ok(_) => {}
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::Interrupted
+                                | std::io::ErrorKind::WouldBlock
+                                | std::io::ErrorKind::TimedOut
+                        ) => {}
+                    Err(_) => pending[i].eof = true,
+                }
+            }
+        }
+    }
+    #[cfg(not(unix))]
+    {
+        for mut a in pending.drain(..) {
+            let ok = loop {
+                match drain_lines(&mut a, n_lines) {
+                    DrainState::Complete => break true,
+                    DrainState::Failed => break false,
+                    DrainState::NeedMore => match a.client.recv_line(deadline) {
+                        Ok(line) => match parse_shard_line(&line) {
+                            Ok(ShardLine::Backpressure) | Err(_) => break false,
+                            Ok(r) => a.replies.push(r),
+                        },
+                        Err(_) => break false,
+                    },
+                }
+            };
+            done.push((a, ok));
+        }
+    }
+    done
+}
+
+/// One shard's replica set with its round-robin cursor.
+struct ShardSet {
+    replicas: Vec<String>,
+    rr: AtomicUsize,
+}
+
+// Persistent connections, one per (coordinator instance, shard, replica)
+// per worker thread. Checked out for the duration of an attempt and
+// returned on success; failed attempts drop theirs, so a reconnect is
+// the natural retry path.
+thread_local! {
+    static CONNS: RefCell<HashMap<(u64, usize, usize), NetClient>> = RefCell::new(HashMap::new());
+}
+
+static NEXT_SCATTER_ID: AtomicU64 = AtomicU64::new(0);
+
+/// The scatter-gather coordinator as a [`BatchModel`] — serves behind the
+/// ordinary [`super::transport::NetServer`] frontend (started via
+/// [`super::transport::NetServer::start_scatter`] so the shard metrics
+/// join the exposition).
+pub struct ScatterModel {
+    id: u64,
+    shards: Vec<ShardSet>,
+    stats: Arc<ScatterStats>,
+    timeout: Duration,
+    connect_timeout: Duration,
+    n_features: Option<usize>,
+}
+
+impl ScatterModel {
+    /// Build from a parsed topology: `shards[i]` lists shard `i`'s
+    /// replica addresses (at least one each).
+    pub fn new(shards: Vec<Vec<String>>, cfg: ScatterConfig) -> Result<ScatterModel, String> {
+        if shards.is_empty() {
+            return Err("scatter tier needs at least one shard".into());
+        }
+        if let Some(i) = shards.iter().position(|r| r.is_empty()) {
+            return Err(format!("shard {i} has no replica addresses"));
+        }
+        let stats = Arc::new(ScatterStats::new(shards.len()));
+        Ok(ScatterModel {
+            id: NEXT_SCATTER_ID.fetch_add(1, Ordering::Relaxed),
+            shards: shards
+                .into_iter()
+                .map(|replicas| ShardSet { replicas, rr: AtomicUsize::new(0) })
+                .collect(),
+            stats,
+            timeout: cfg.shard_timeout(),
+            connect_timeout: cfg.connect_timeout(),
+            n_features: cfg.n_features,
+        })
+    }
+
+    /// [`Self::new`] over a `"h:p,h:p;h:p,h:p"` spec ([`parse_shard_spec`]).
+    pub fn from_spec(spec: &str, cfg: ScatterConfig) -> Result<ScatterModel, String> {
+        ScatterModel::new(parse_shard_spec(spec)?, cfg)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn stats(&self) -> Arc<ScatterStats> {
+        Arc::clone(&self.stats)
+    }
+
+    fn checkout(&self, shard: usize, replica: usize) -> Option<NetClient> {
+        CONNS.with(|c| c.borrow_mut().remove(&(self.id, shard, replica)))
+    }
+
+    fn checkin(&self, shard: usize, replica: usize, client: NetClient) {
+        CONNS.with(|c| c.borrow_mut().insert((self.id, shard, replica), client));
+    }
+
+    /// Open (or reuse) the connection to one replica and pipeline the
+    /// whole batch onto it. `None` = the attempt already failed.
+    fn open_and_send(
+        &self,
+        shard: usize,
+        replica: usize,
+        lines: &[String],
+        deadline: Instant,
+    ) -> Option<Attempt> {
+        let t0 = Instant::now();
+        let mut client = match self.checkout(shard, replica) {
+            Some(c) => c,
+            None => {
+                let addr = self.shards[shard].replicas[replica].as_str();
+                NetClient::connect(addr, self.connect_timeout).ok()?
+            }
+        };
+        for line in lines {
+            if client.send_line(line, deadline).is_err() {
+                return None; // broken connection is dropped, not pooled
+            }
+        }
+        Some(Attempt {
+            shard,
+            replica,
+            client,
+            replies: Vec::with_capacity(lines.len()),
+            eof: false,
+            t0,
+        })
+    }
+
+    /// Record a finished attempt; returns its parsed replies on success.
+    fn settle(&self, a: Attempt, ok: bool, n_lines: usize) -> Option<Vec<ShardLine>> {
+        self.stats.rtt.record_duration(a.t0.elapsed());
+        if !ok {
+            return None;
+        }
+        self.stats.shard_requests[a.shard].add(n_lines as u64);
+        let Attempt { shard, replica, client, replies, .. } = a;
+        self.checkin(shard, replica, client);
+        Some(replies)
+    }
+
+    /// The scatter-gather core: fan the batch out, gather, fail over,
+    /// merge. See the module docs for the failure semantics.
+    fn exchange(&self, batch: &[Request], out: &mut Vec<Response>) {
+        out.clear();
+        if batch.is_empty() {
+            return;
+        }
+        let lines: Vec<String> = batch.iter().map(render_request_line).collect();
+        let n_shards = self.shards.len();
+        let mut results: Vec<Option<Vec<ShardLine>>> = (0..n_shards).map(|_| None).collect();
+
+        // Scatter: one primary attempt per shard, replicas rotated per
+        // batch (round-robin load balancing), gathered concurrently.
+        let deadline = Instant::now() + self.timeout;
+        let primaries: Vec<usize> = self
+            .shards
+            .iter()
+            .map(|s| s.rr.fetch_add(1, Ordering::Relaxed) % s.replicas.len())
+            .collect();
+        let mut pending = Vec::with_capacity(n_shards);
+        for (shard, &replica) in primaries.iter().enumerate() {
+            if let Some(a) = self.open_and_send(shard, replica, &lines, deadline) {
+                pending.push(a);
+            }
+        }
+        for (a, ok) in gather_attempts(pending, lines.len(), deadline) {
+            let shard = a.shard;
+            results[shard] = self.settle(a, ok, lines.len());
+        }
+
+        // Failover: retry failed shards on their other replicas (ending
+        // with a fresh connection to the primary, so a single stale
+        // pooled connection never degrades a reply).
+        for shard in 0..n_shards {
+            if results[shard].is_some() {
+                continue;
+            }
+            let n_rep = self.shards[shard].replicas.len();
+            for off in 1..=n_rep {
+                let replica = (primaries[shard] + off) % n_rep;
+                self.stats.retries.inc();
+                let deadline = Instant::now() + self.timeout;
+                let Some(a) = self.open_and_send(shard, replica, &lines, deadline) else {
+                    continue;
+                };
+                let mut finished = gather_attempts(vec![a], lines.len(), deadline);
+                let (a, ok) = finished.pop().expect("one attempt in, one out");
+                results[shard] = self.settle(a, ok, lines.len());
+                if results[shard].is_some() {
+                    break;
+                }
+            }
+        }
+
+        // Gather complete; stamp traced requests like the local scorer
+        // stamps its batch scoring pass.
+        let gathered = Instant::now();
+        for r in batch {
+            if let Some(sp) = &r.span {
+                sp.stamp_at(Stage::Score, gathered);
+            }
+        }
+
+        // Merge. A reply is partial iff some shard contributed nothing.
+        let degraded = results.iter().any(|r| r.is_none());
+        if degraded {
+            self.stats.degraded.add(batch.len() as u64);
+        }
+        let mut parts: Vec<&[(u32, f32)]> = Vec::with_capacity(n_shards);
+        for (ri, r) in batch.iter().enumerate() {
+            parts.clear();
+            for shard_replies in results.iter().flatten() {
+                if let ShardLine::Topk(list) = &shard_replies[ri] {
+                    parts.push(list);
+                }
+            }
+            let mut topk = Vec::with_capacity(r.k);
+            merge_topk(&parts, r.k, &mut topk);
+            if let Some(sp) = &r.span {
+                sp.stamp(Stage::Decode);
+            }
+            out.push(Response { topk, partial: degraded });
+        }
+    }
+}
+
+impl BatchModel for ScatterModel {
+    fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
+        let mut out = Vec::with_capacity(batch.len());
+        self.exchange(batch, &mut out);
+        out
+    }
+
+    fn predict_batch_into(
+        &self,
+        batch: &[Request],
+        _scratch: &mut PredictScratch,
+        out: &mut Vec<Response>,
+    ) {
+        self.exchange(batch, out);
+    }
+
+    fn n_features(&self) -> Option<usize> {
+        self.n_features
+    }
+
+    fn name(&self) -> &str {
+        "LTLS-scatter"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_shards_and_replicas() {
+        let s = parse_shard_spec("a:1,b:1;a:2,b:2").unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0], vec!["a:1".to_string(), "b:1".to_string()]);
+        assert_eq!(s[1], vec!["a:2".to_string(), "b:2".to_string()]);
+        let single = parse_shard_spec("127.0.0.1:7878").unwrap();
+        assert_eq!(single, vec![vec!["127.0.0.1:7878".to_string()]]);
+        let spaced = parse_shard_spec(" a:1 , b:1 ; c:1 ").unwrap();
+        assert_eq!(spaced[0], vec!["a:1".to_string(), "b:1".to_string()]);
+        assert_eq!(spaced[1], vec!["c:1".to_string()]);
+    }
+
+    #[test]
+    fn spec_rejects_malformed() {
+        assert!(parse_shard_spec("").is_err());
+        assert!(parse_shard_spec("a:1;;b:1").is_err()); // empty shard
+        assert!(parse_shard_spec("a:1,").is_err()); // empty replica
+        assert!(parse_shard_spec("localhost").is_err()); // no port
+    }
+
+    #[test]
+    fn merge_is_global_topk_with_label_tiebreak() {
+        // Disjoint label sets, deliberate score ties across parts.
+        let a: Vec<(u32, f32)> = vec![(10, 5.0), (12, 3.0), (14, 1.0)];
+        let b: Vec<(u32, f32)> = vec![(11, 5.0), (13, 3.0)];
+        let c: Vec<(u32, f32)> = vec![(2, 4.0)];
+        let mut out = Vec::new();
+        merge_topk(&[&a, &b, &c], 4, &mut out);
+        assert_eq!(out, vec![(10, 5.0), (11, 5.0), (2, 4.0), (12, 3.0)]);
+        // k larger than the union: everything, still ordered.
+        merge_topk(&[&a, &b, &c], 100, &mut out);
+        assert_eq!(out.len(), 6);
+        assert_eq!(out[4], (13, 3.0));
+        assert_eq!(out[5], (14, 1.0));
+        // Empty parts and empty part lists are fine.
+        merge_topk(&[], 3, &mut out);
+        assert!(out.is_empty());
+        let empty: Vec<(u32, f32)> = Vec::new();
+        merge_topk(&[&empty, &c], 3, &mut out);
+        assert_eq!(out, vec![(2, 4.0)]);
+    }
+
+    #[test]
+    fn shard_reply_lines_classify() {
+        match parse_shard_line("{\"topk\":[[7,1.5],[2,-0.25]]}").unwrap() {
+            ShardLine::Topk(v) => assert_eq!(v, vec![(7, 1.5), (2, -0.25)]),
+            _ => panic!("not topk"),
+        }
+        assert!(matches!(
+            parse_shard_line("{\"backpressure\":true,\"error\":\"busy\"}").unwrap(),
+            ShardLine::Backpressure
+        ));
+        assert!(matches!(
+            parse_shard_line("{\"error\":\"feature index 9 out of range\"}").unwrap(),
+            ShardLine::Rejected
+        ));
+        assert!(parse_shard_line("not json").is_err());
+        assert!(parse_shard_line("{\"unexpected\":1}").is_err());
+    }
+
+    #[test]
+    fn request_lines_roundtrip_through_the_wire_grammar() {
+        let r = Request::detached(vec![2, 5, 7], vec![2.0, 1.5, 0.25], 3);
+        assert_eq!(render_request_line(&r), "3 2:2 5:1.5 7:0.25");
+        let r = Request::detached(Vec::new(), Vec::new(), 1);
+        assert_eq!(render_request_line(&r), "1");
+    }
+
+    #[test]
+    fn absent_and_present_stats_expose_the_same_family_names() {
+        let mut absent = String::new();
+        ScatterStats::render_absent(&mut absent);
+        let stats = ScatterStats::new(3);
+        stats.shard_requests[1].add(5);
+        stats.degraded.inc();
+        let mut present = String::new();
+        stats.render_into(&mut present);
+        let names = |s: &str| -> std::collections::BTreeSet<String> {
+            s.lines()
+                .filter(|l| l.starts_with("# TYPE "))
+                .map(|l| l.split_whitespace().nth(2).unwrap().to_string())
+                .collect()
+        };
+        assert_eq!(names(&absent), names(&present));
+        assert!(present.contains("ltls_shard_requests_total{shard=\"1\"} 5"), "{present}");
+        assert!(present.contains("ltls_shard_degraded_total 1"), "{present}");
+        assert!(absent.contains("ltls_shard_requests_total 0"), "{absent}");
+        assert!(absent.contains("ltls_shard_rtt_seconds_count 0"), "{absent}");
+    }
+}

@@ -80,6 +80,11 @@ impl Stamped for Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub topk: Vec<(u32, f32)>,
+    /// Degraded scatter-gather answer: some label shard contributed no
+    /// candidates because every one of its replicas was down
+    /// ([`super::scatter`]). Always `false` from single-process models;
+    /// rendered on the wire as `"partial":true` only when set.
+    pub partial: bool,
 }
 
 /// Anything that can answer a batch of requests at once.
@@ -164,7 +169,7 @@ impl<P: crate::eval::Predictor + Send + Sync + 'static> BatchModel for SparsePat
                 scratch,
                 &mut topk,
             );
-            out.push(Response { topk });
+            out.push(Response { topk, partial: false });
         }
     }
 
@@ -230,7 +235,7 @@ pub(crate) fn batched_predict_into<T: crate::graph::Topology, S: crate::model::W
     }
     for (i, r) in batch.iter().enumerate() {
         if !all_scorable && !scorable(r) {
-            out.push(Response { topk: Vec::new() });
+            out.push(Response { topk: Vec::new(), partial: false });
             continue;
         }
         let h = &scratch.batch_h[i * e..(i + 1) * e];
@@ -247,7 +252,7 @@ pub(crate) fn batched_predict_into<T: crate::graph::Topology, S: crate::model::W
         if let Some(sp) = &r.span {
             sp.stamp(Stage::Decode);
         }
-        out.push(Response { topk });
+        out.push(Response { topk, partial: false });
     }
 }
 
@@ -524,7 +529,10 @@ mod tests {
         fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
             batch
                 .iter()
-                .map(|r| Response { topk: vec![(r.indices.first().copied().unwrap_or(0), 1.0)] })
+                .map(|r| Response {
+                    topk: vec![(r.indices.first().copied().unwrap_or(0), 1.0)],
+                    partial: false,
+                })
                 .collect()
         }
         fn name(&self) -> &str {
@@ -563,7 +571,7 @@ mod tests {
         impl BatchModel for Slow {
             fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
                 std::thread::sleep(Duration::from_millis(100));
-                batch.iter().map(|_| Response { topk: Vec::new() }).collect()
+                batch.iter().map(|_| Response { topk: Vec::new(), partial: false }).collect()
             }
             fn name(&self) -> &str {
                 "slow"

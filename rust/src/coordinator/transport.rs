@@ -219,6 +219,11 @@ pub(crate) struct Shared {
     pub(crate) conn_cv: Condvar,
     /// Transport-level gauges (open conns, poll wakeups, write-buf peak).
     pub(crate) gauges: TransportGauges,
+    /// Scatter-tier stats when this server fronts a sharded model
+    /// ([`NetServer::start_scatter`]); `None` on single-process servers
+    /// (the shard metric families render zero-valued so the scrape name
+    /// set is topology-independent).
+    scatter: Option<Arc<super::scatter::ScatterStats>>,
     /// Request-lifecycle tracer: decides which requests carry a [`Span`],
     /// owns the sampled / slow capture rings behind the `TRACE` command.
     pub(crate) tracer: Arc<Tracer>,
@@ -281,7 +286,7 @@ impl NetServer {
         cfg: NetConfig,
     ) -> Result<NetServer, String> {
         let static_features = model.n_features();
-        NetServer::start_inner(listen, model, None, static_features, cfg)
+        NetServer::start_inner(listen, model, None, static_features, None, cfg)
     }
 
     /// [`Self::start`] over a hot-reloadable model: the same handle is
@@ -292,7 +297,20 @@ impl NetServer {
         model: Arc<ReloadableLtls>,
         cfg: NetConfig,
     ) -> Result<NetServer, String> {
-        NetServer::start_inner(listen, Arc::clone(&model), Some(model), None, cfg)
+        NetServer::start_inner(listen, Arc::clone(&model), Some(model), None, None, cfg)
+    }
+
+    /// [`Self::start`] over the scatter-gather coordinator
+    /// ([`super::scatter::ScatterModel`]): same frontend and protocol,
+    /// plus live `ltls_shard_*` metric families in the exposition.
+    pub fn start_scatter(
+        listen: &str,
+        model: super::scatter::ScatterModel,
+        cfg: NetConfig,
+    ) -> Result<NetServer, String> {
+        let stats = model.stats();
+        let static_features = model.n_features();
+        NetServer::start_inner(listen, model, None, static_features, Some(stats), cfg)
     }
 
     fn start_inner<M: BatchModel>(
@@ -300,6 +318,7 @@ impl NetServer {
         model: M,
         reload: Option<Arc<ReloadableLtls>>,
         static_features: Option<usize>,
+        scatter: Option<Arc<super::scatter::ScatterStats>>,
         cfg: NetConfig,
     ) -> Result<NetServer, String> {
         let listener = TcpListener::bind(listen).map_err(|e| format!("bind {listen}: {e}"))?;
@@ -334,6 +353,7 @@ impl NetServer {
             live_conns: Mutex::new(0),
             conn_cv: Condvar::new(),
             gauges: TransportGauges::new(),
+            scatter,
             tracer: Arc::new(cfg.tracer()),
             write_stall: cfg.write_stall(),
             wbuf_cap: cfg.wbuf_cap(),
@@ -917,16 +937,20 @@ fn writer_loop(
 }
 
 pub(crate) fn render_response(resp: &Response) -> String {
-    Json::obj(vec![(
-        "topk",
-        Json::Arr(
-            resp.topk
-                .iter()
-                .map(|&(l, s)| Json::Arr(vec![Json::Num(l as f64), Json::Num(s as f64)]))
-                .collect(),
-        ),
-    )])
-    .dump()
+    let topk = Json::Arr(
+        resp.topk
+            .iter()
+            .map(|&(l, s)| Json::Arr(vec![Json::Num(l as f64), Json::Num(s as f64)]))
+            .collect(),
+    );
+    let mut fields = vec![("topk", topk)];
+    if resp.partial {
+        // Degraded scatter-gather answer: some label shard contributed
+        // nothing (every replica down). Omitted entirely when false —
+        // the common reply stays byte-identical to the unsharded server.
+        fields.push(("partial", Json::Bool(true)));
+    }
+    Json::obj(fields).dump()
 }
 
 pub(crate) fn err_json(msg: &str) -> String {
@@ -1014,6 +1038,12 @@ fn render_metrics(shared: &Shared) -> String {
         "request spans captured into the slow trace ring",
         shared.tracer.slow_total.get(),
     );
+    // Scatter-tier families (live on a coordinator, zero-valued
+    // otherwise — always present so the name set is topology-independent).
+    match &shared.scatter {
+        Some(st) => st.render_into(&mut s),
+        None => super::scatter::ScatterStats::render_absent(&mut s),
+    }
     // Training counters (live when `serve` trained its model in-process;
     // all-zero otherwise — always present so the name set is stable).
     s.push_str(&crate::train::TrainStats::global().prometheus());
@@ -1080,12 +1110,18 @@ mod tests {
 
     #[test]
     fn response_and_error_rendering_is_parseable_json() {
-        let r = Response { topk: vec![(7, 1.5), (2, -0.25)] };
-        let doc = Json::parse(&render_response(&r)).unwrap();
+        let r = Response { topk: vec![(7, 1.5), (2, -0.25)], partial: false };
+        let full = render_response(&r);
+        let doc = Json::parse(&full).unwrap();
         let topk = doc.get("topk").unwrap().as_arr().unwrap();
         assert_eq!(topk.len(), 2);
         assert_eq!(topk[0].as_arr().unwrap()[0].as_f64(), Some(7.0));
         assert_eq!(topk[1].as_arr().unwrap()[1].as_f64(), Some(-0.25));
+        // The partial flag renders ahead of topk (sorted object keys)
+        // and only when set — full replies carry no partial key at all.
+        assert!(!full.contains("partial"), "{full}");
+        let p = render_response(&Response { topk: vec![(7, 1.5)], partial: true });
+        assert_eq!(p, "{\"partial\":true,\"topk\":[[7,1.5]]}");
         let e = Json::parse(&err_json("boom \"quoted\"")).unwrap();
         assert_eq!(e.get("error").unwrap().as_str(), Some("boom \"quoted\""));
         let b = Json::parse(&backpressure_json(9, 8, "in flight")).unwrap();

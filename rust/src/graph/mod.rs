@@ -25,11 +25,13 @@
 pub mod codec;
 pub mod dot;
 pub mod pathmat;
+pub mod shardmap;
 pub mod topology;
 pub mod trellis;
 pub mod wide;
 
 pub use codec::Path;
+pub use shardmap::{ShardPlan, ShardUnit};
 pub use topology::{ExitGroup, Topology};
 pub use trellis::{Edge, EdgeKind, Trellis};
 pub use wide::{WidePath, WideTrellis};

@@ -1,0 +1,258 @@
+//! Label-space sharding: partition a topology's labels into `N` disjoint
+//! shards so that each shard can score and decode **exactly** its share of
+//! the label space while reusing the unmodified decoders.
+//!
+//! ## Why masking terminal edges is exact
+//!
+//! The list-Viterbi decoders build per-state k-best *prefix* lists from
+//! source and transition edges only; terminal edges — the exit edge of an
+//! [`ExitGroup`] state and the `aux(s)`/`aux_sink(m)` pair of a full path —
+//! are added once, at emission. Setting a terminal edge's score to `−∞`
+//! therefore removes precisely the labels routed through it, without
+//! perturbing any surviving path's score: prefix scores (and their
+//! tie-breaks) are computed over body edges, identically on every shard.
+//! A shard that owns a subset of terminal edges produces the global top-k
+//! *restricted to its labels*, bit-identical to the single-process model,
+//! so merging per-shard top-k lists reconstructs the global answer.
+//!
+//! ## Ownership units
+//!
+//! The finest ownership grain is one terminal edge:
+//!
+//! * **Full units** — one per last-step state `s < W`, discriminated by
+//!   `aux(s)`, covering the `n_aux_sinks · W^(b−1)` full-path labels whose
+//!   final state is `s` (the `aux_sink` edges are shared across all full
+//!   units and stay body edges);
+//! * **Exit units** — one per early-exit edge, i.e. per
+//!   (group, state `s ∈ 1..=digit`), discriminated by
+//!   `edge_base + (s−1)`, covering that state's `paths_per_state` labels.
+//!
+//! Units are enumerated in a canonical order (full units by state, then
+//! exit units in ascending-group, ascending-state order) and assigned to
+//! shards **contiguously**, greedily balanced by label count. The plan is
+//! a pure function of `(topology, n_shards)` — every process that builds
+//! it agrees on the partition.
+
+use super::topology::Topology;
+
+/// One indivisible ownership unit: a terminal edge and the labels routed
+/// through it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardUnit {
+    /// The terminal edge whose score is `−∞` on every shard that does not
+    /// own this unit (`aux(s)` for full units, an exit edge otherwise).
+    pub discriminator: u32,
+    /// Number of canonical labels routed through this unit.
+    pub labels: u64,
+}
+
+/// A deterministic, contiguous, label-balanced assignment of ownership
+/// units to `n_shards` shards.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    n_shards: u32,
+    num_edges: usize,
+    units: Vec<ShardUnit>,
+    /// `assignment[i]` = shard owning `units[i]`; non-decreasing.
+    assignment: Vec<u32>,
+}
+
+impl ShardPlan {
+    /// Build the plan for `t` over `n_shards` shards. Errors when
+    /// `n_shards` is zero or exceeds the number of ownership units (the
+    /// finest partition the topology supports).
+    pub fn new<T: Topology>(t: &T, n_shards: u32) -> Result<ShardPlan, String> {
+        if n_shards == 0 {
+            return Err("--shards must be at least 1".into());
+        }
+        let w = t.width();
+        let mut units = Vec::new();
+        // Full units: W^b full paths split by last-step state. `steps ≥ 1`
+        // and the W states partition them evenly.
+        let per_state = t.full_label_count() / w as u64;
+        for s in 0..w {
+            units.push(ShardUnit { discriminator: t.aux(s), labels: per_state });
+        }
+        // Exit units: one per exit edge, ascending groups then states.
+        for g in t.exit_groups() {
+            for s in 1..=g.digit {
+                units.push(ShardUnit {
+                    discriminator: g.edge_base + (s - 1),
+                    labels: g.paths_per_state,
+                });
+            }
+        }
+        if n_shards as usize > units.len() {
+            return Err(format!(
+                "--shards {n_shards} exceeds the {} ownership units of this topology \
+                 (C={}, width={w}); use at most {} shards",
+                units.len(),
+                t.c(),
+                units.len()
+            ));
+        }
+
+        // Greedy contiguous split balanced by label count. `must` keeps a
+        // unit for every remaining shard; `want` advances once the current
+        // shard reached its proportional share of the label space.
+        let total: u64 = units.iter().map(|u| u.labels).sum();
+        debug_assert_eq!(total, t.c());
+        let mut assignment = Vec::with_capacity(units.len());
+        let mut shard = 0u32;
+        let mut cum = 0u64;
+        for (i, u) in units.iter().enumerate() {
+            if shard + 1 < n_shards && i > 0 {
+                let units_left = units.len() - i;
+                let must = units_left <= (n_shards - 1 - shard) as usize;
+                let want = cum.saturating_mul(n_shards as u64)
+                    >= total.saturating_mul(shard as u64 + 1);
+                if must || want {
+                    shard += 1;
+                }
+            }
+            assignment.push(shard);
+            cum += u.labels;
+        }
+        debug_assert_eq!(*assignment.last().unwrap(), n_shards - 1);
+
+        Ok(ShardPlan { n_shards, num_edges: t.num_edges(), units, assignment })
+    }
+
+    /// Number of shards this plan partitions the label space into.
+    pub fn n_shards(&self) -> u32 {
+        self.n_shards
+    }
+
+    /// Number of ownership units (= the maximum shard count).
+    pub fn n_units(&self) -> usize {
+        self.units.len()
+    }
+
+    /// The ownership units in canonical order.
+    pub fn units(&self) -> &[ShardUnit] {
+        &self.units
+    }
+
+    /// Shard owning unit `i`.
+    pub fn shard_of_unit(&self, i: usize) -> u32 {
+        self.assignment[i]
+    }
+
+    /// Ascending edge indices `shard` owns: every body edge plus the
+    /// discriminators of its own units — i.e. all edges except foreign
+    /// discriminators.
+    pub fn owned_edges(&self, shard: u32) -> Vec<u32> {
+        assert!(shard < self.n_shards, "shard {shard} out of range");
+        let mut owned = vec![true; self.num_edges];
+        for (u, &s) in self.units.iter().zip(&self.assignment) {
+            if s != shard {
+                owned[u.discriminator as usize] = false;
+            }
+        }
+        (0..self.num_edges as u32).filter(|&e| owned[e as usize]).collect()
+    }
+
+    /// Number of canonical labels `shard` owns.
+    pub fn owned_label_count(&self, shard: u32) -> u64 {
+        assert!(shard < self.n_shards, "shard {shard} out of range");
+        self.units
+            .iter()
+            .zip(&self.assignment)
+            .filter(|&(_, &s)| s == shard)
+            .map(|(u, _)| u.labels)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Trellis, WideTrellis};
+
+    fn check_plan<T: Topology>(t: &T, n_shards: u32) {
+        let plan = ShardPlan::new(t, n_shards).unwrap();
+        assert_eq!(plan.n_shards(), n_shards);
+        // Unit label counts partition [0, C).
+        let total: u64 = plan.units().iter().map(|u| u.labels).sum();
+        assert_eq!(total, t.c());
+        // Assignment is contiguous, covers every shard, partitions C.
+        assert!(plan.assignment.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(plan.assignment[0], 0);
+        assert_eq!(*plan.assignment.last().unwrap(), n_shards - 1);
+        let label_sum: u64 = (0..n_shards).map(|s| plan.owned_label_count(s)).sum();
+        assert_eq!(label_sum, t.c());
+        for s in 0..n_shards {
+            assert!(plan.owned_label_count(s) > 0, "shard {s} owns no labels");
+        }
+        // Every discriminator is owned by exactly one shard; body edges by
+        // all of them.
+        let discs: std::collections::BTreeSet<u32> =
+            plan.units().iter().map(|u| u.discriminator).collect();
+        assert_eq!(discs.len(), plan.n_units(), "discriminators must be distinct");
+        let mut owners = vec![0usize; t.num_edges()];
+        for s in 0..n_shards {
+            for e in plan.owned_edges(s) {
+                owners[e as usize] += 1;
+            }
+        }
+        for e in 0..t.num_edges() as u32 {
+            let want = if discs.contains(&e) { 1 } else { n_shards as usize };
+            assert_eq!(owners[e as usize], want, "edge {e} owner count");
+        }
+    }
+
+    #[test]
+    fn plans_partition_labels_and_edges() {
+        for c in [22u64, 105, 159, 1000, 12294] {
+            let t = Trellis::new(c);
+            let max = ShardPlan::new(&t, 1).unwrap().n_units() as u32;
+            for n in [1u32, 2, 3, 4, max] {
+                check_plan(&t, n);
+            }
+        }
+        for (c, w) in [(105u64, 4u32), (1000, 8), (730, 3), (4096, 16)] {
+            let t = WideTrellis::new(c, w).unwrap();
+            let max = ShardPlan::new(&t, 1).unwrap().n_units() as u32;
+            for n in [1u32, 2, 4, max] {
+                check_plan(&t, n);
+            }
+        }
+    }
+
+    /// The greedy split is label-balanced: no shard exceeds twice its
+    /// proportional share plus the largest single unit.
+    #[test]
+    fn split_is_roughly_balanced() {
+        let t = Trellis::new(12294);
+        for n in [2u32, 3, 4] {
+            let plan = ShardPlan::new(&t, n).unwrap();
+            let largest = plan.units().iter().map(|u| u.labels).max().unwrap();
+            let share = t.c / n as u64;
+            for s in 0..n {
+                assert!(
+                    plan.owned_label_count(s) <= share + largest,
+                    "shard {s}/{n} owns {} labels (share {share}, largest unit {largest})",
+                    plan.owned_label_count(s)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let t = WideTrellis::new(3000, 4).unwrap();
+        let a = ShardPlan::new(&t, 3).unwrap();
+        let b = ShardPlan::new(&t, 3).unwrap();
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.units, b.units);
+    }
+
+    #[test]
+    fn rejects_invalid_shard_counts() {
+        let t = Trellis::new(105);
+        assert!(ShardPlan::new(&t, 0).is_err());
+        let max = ShardPlan::new(&t, 1).unwrap().n_units() as u32;
+        assert!(ShardPlan::new(&t, max).is_ok());
+        assert!(ShardPlan::new(&t, max + 1).is_err());
+    }
+}

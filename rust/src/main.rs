@@ -33,10 +33,11 @@
 //!   of materializing it. Without `--model` it trains a fresh model on
 //!   `--dataset` first (the original smoke path).
 //! * `serve --listen HOST:PORT [--model m.ltls [--mmap]] [--watch-model F]
-//!   [--transport threads|event-loop] [--poll-threads N]
-//!   [--conn-buf-bytes N] [--write-stall-ms MS] [--max-inflight N]
-//!   [--queue-depth N] [--batch B] [--workers W] [--max-wait-us U]
-//!   [--trace-sample N] [--trace-slow-ms MS]` —
+//!   [--watch-poll-ms MS] [--transport threads|event-loop]
+//!   [--poll-threads N] [--conn-buf-bytes N] [--write-stall-ms MS]
+//!   [--max-inflight N] [--max-inflight-per-conn N] [--queue-depth N]
+//!   [--batch B] [--workers W] [--max-wait-us U] [--trace-sample N]
+//!   [--trace-slow-ms MS]` (knob table: `docs/OBSERVABILITY.md`) —
 //!   the **network** frontend: newline-delimited requests
 //!   (`<k> <i:v> <i:v> ...`) answered with JSON lines, plus the
 //!   `PING` / `METRICS` / `TRACE` / `RELOAD [path]` / `SHUTDOWN` control
@@ -56,6 +57,20 @@
 //!   so one greedy client cannot pin the whole budget): overload returns
 //!   a backpressure error instead of queueing unboundedly. Runs until a
 //!   client sends `SHUTDOWN`, then drains gracefully.
+//! * `shard --model m.ltls --shards N [--out-prefix P]` — slice a trained
+//!   model into `N` label-space shard files (format v4, any backend,
+//!   mmap-servable) for the scatter tier: each slice keeps every body
+//!   edge plus its own share of terminal edges, so a shard answers the
+//!   exact global top-k restricted to its labels.
+//! * `coordinator --listen HOST:PORT --shards "h:p,h:p;h:p,h:p"
+//!   [--shard-timeout-ms MS] [--connect-timeout-ms MS] [--features D]` —
+//!   the scatter-gather frontend: speaks the same wire protocol as
+//!   `serve --listen`, fans each micro-batch out to every shard
+//!   (replicas comma-separated, shards semicolon-separated), k-way-merges
+//!   the partial top-k lists back into the global answer, and fails over
+//!   between replicas; replies carry `"partial":true` only while every
+//!   replica of some shard is down. All `serve --listen` transport /
+//!   admission / trace flags apply unchanged.
 //! * `scaling [--kmax K]` — prediction-time scaling in C (the log-time
 //!   claim).
 
@@ -75,6 +90,8 @@ fn main() {
         "tables" => cmd_tables(&args),
         "deep" => cmd_deep(&args),
         "serve" => cmd_serve(&args),
+        "shard" => cmd_shard(&args),
+        "coordinator" => cmd_coordinator(&args),
         "eval" => cmd_eval(&args),
         "scaling" => cmd_scaling(&args),
         _ => {
@@ -88,7 +105,7 @@ fn main() {
 const HELP: &str = "\
 ltls — Log-time and Log-space Extreme Classification (reproduction)
 
-USAGE: ltls <trellis|graph|gen-data|train|quantize|eval|tables|deep|serve|scaling> [--flags]
+USAGE: ltls <trellis|graph|gen-data|train|quantize|eval|tables|deep|serve|shard|coordinator|scaling> [--flags]
 Run with a subcommand; see the crate docs / README for flag details.
 ";
 
@@ -664,35 +681,14 @@ fn cmd_serve(args: &Args) -> i32 {
 /// it in when it changes and validates. Runs until a client sends
 /// `SHUTDOWN`, then drains gracefully and prints the serving metrics.
 fn serve_network(args: &Args) -> i32 {
-    use ltls::coordinator::{ModelWatcher, NetConfig, NetServer, ReloadableLtls, Transport};
+    use ltls::coordinator::{ModelWatcher, NetServer, ReloadableLtls};
     let listen = args.get_str("listen", "127.0.0.1:7878").to_string();
-    let transport = match args.get("transport") {
-        None => Transport::default(),
-        Some(s) => match s.parse::<Transport>() {
-            Ok(t) => t,
-            Err(e) => {
-                eprintln!("error: {e}");
-                return 1;
-            }
-        },
-    };
-    let cfg = NetConfig {
-        server: ltls::coordinator::ServerConfig {
-            batcher: ltls::coordinator::BatcherConfig {
-                max_batch: args.get_usize("batch", 64),
-                max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 500)),
-            },
-            queue_depth: args.get_usize("queue-depth", 1024),
-            workers: args.get_usize("workers", 0),
-        },
-        max_inflight: args.get_usize("max-inflight", 0),
-        max_inflight_per_conn: args.get_usize("max-inflight-per-conn", 0),
-        transport,
-        poll_threads: args.get_usize("poll-threads", 0),
-        conn_buf_bytes: args.get_usize("conn-buf-bytes", 0),
-        write_stall_ms: args.get_u64("write-stall-ms", 0),
-        trace_sample: args.get_u64("trace-sample", 64),
-        trace_slow_ms: args.get_u64("trace-slow-ms", 100),
+    let cfg = match net_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
     };
     // The served model: a saved file (hot-reloadable from its path), or a
     // fresh train on --dataset (reloadable only via `RELOAD <path>`).
@@ -800,6 +796,159 @@ fn serve_network(args: &Args) -> i32 {
     if let Some(w) = watcher {
         w.stop();
     }
+    println!("{}", metrics.summary());
+    println!("drained cleanly");
+    0
+}
+
+/// The `--listen` transport / admission / trace flag set, shared verbatim
+/// between `serve --listen` and `coordinator` (the knob table with
+/// defaults and interactions is `docs/OBSERVABILITY.md`).
+fn net_config(args: &Args) -> Result<ltls::coordinator::NetConfig, String> {
+    let transport = match args.get("transport") {
+        None => ltls::coordinator::Transport::default(),
+        Some(s) => s.parse::<ltls::coordinator::Transport>()?,
+    };
+    Ok(ltls::coordinator::NetConfig {
+        server: ltls::coordinator::ServerConfig {
+            batcher: ltls::coordinator::BatcherConfig {
+                max_batch: args.get_usize("batch", 64),
+                max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 500)),
+            },
+            queue_depth: args.get_usize("queue-depth", 1024),
+            workers: args.get_usize("workers", 0),
+        },
+        max_inflight: args.get_usize("max-inflight", 0),
+        max_inflight_per_conn: args.get_usize("max-inflight-per-conn", 0),
+        transport,
+        poll_threads: args.get_usize("poll-threads", 0),
+        conn_buf_bytes: args.get_usize("conn-buf-bytes", 0),
+        write_stall_ms: args.get_u64("write-stall-ms", 0),
+        trace_sample: args.get_u64("trace-sample", 64),
+        trace_slow_ms: args.get_u64("trace-slow-ms", 100),
+    })
+}
+
+/// `ltls shard --model m.ltls --shards N [--out-prefix P]`: slice a
+/// trained model into `N` v4 shard files for the scatter tier. The
+/// default output stem is the input path without its `.ltls` suffix, so
+/// `model.ltls` yields `model.shard0.ltls .. model.shard{N-1}.ltls`.
+fn cmd_shard(args: &Args) -> i32 {
+    let Some(input) = args.get("model") else {
+        eprintln!("error: --model <file> is required");
+        return 1;
+    };
+    let n_shards = args.get_u64("shards", 2);
+    if n_shards == 0 || n_shards > u32::MAX as u64 {
+        eprintln!("error: --shards must be a positive 32-bit count, got {n_shards}");
+        return 1;
+    }
+    let n_shards = n_shards as u32;
+    let stem = args.get_str("out-prefix", input.strip_suffix(".ltls").unwrap_or(input));
+    let loaded = match ltls::model::io::load_any(std::path::Path::new(input)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "slicing {input}: C={} W={} E={} backend={} into {n_shards} shard(s)",
+        loaded.c(),
+        loaded.width(),
+        loaded.num_edges(),
+        loaded.backend().name(),
+    );
+    fn write_slices<T: Topology, S: WeightStore>(
+        m: &ltls::train::TrainedModel<T, S>,
+        n_shards: u32,
+        stem: &str,
+    ) -> i32 {
+        let plan = match ltls::graph::ShardPlan::new(&m.trellis, n_shards) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        for shard in 0..n_shards {
+            let sliced = match ltls::model::slice_model(m, &plan, shard) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("error slicing shard {shard}: {e}");
+                    return 1;
+                }
+            };
+            let path = format!("{stem}.shard{shard}.ltls");
+            if let Err(e) = ltls::model::io::save_shard(&sliced, std::path::Path::new(&path)) {
+                eprintln!("error saving {path}: {e}");
+                return 1;
+            }
+            println!(
+                "shard {shard}/{n_shards}: {} labels, {} of {} edges, {:.2} MB → {path}",
+                plan.owned_label_count(shard),
+                sliced.model.owned_edges().len(),
+                m.trellis.num_edges(),
+                sliced.model.bytes() as f64 / 1e6,
+            );
+        }
+        0
+    }
+    ltls::with_any_model!(&loaded, m => write_slices(m, n_shards, stem))
+}
+
+/// `ltls coordinator --listen HOST:PORT --shards SPEC ...`: the
+/// scatter-gather frontend (see the crate docs at the top of this file).
+/// Runs until a client sends `SHUTDOWN`, then drains gracefully.
+fn cmd_coordinator(args: &Args) -> i32 {
+    use ltls::coordinator::{NetServer, ScatterConfig, ScatterModel};
+    let Some(spec) = args.get("shards") else {
+        eprintln!(
+            "error: --shards \"host:port,host:port;host:port,host:port\" is required \
+             (replicas of one shard comma-separated, shards semicolon-separated)"
+        );
+        return 1;
+    };
+    let listen = args.get_str("listen", "127.0.0.1:7979").to_string();
+    let cfg = match net_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let features = args.get_usize("features", 0);
+    let scfg = ScatterConfig {
+        shard_timeout_ms: args.get_u64("shard-timeout-ms", 0),
+        connect_timeout_ms: args.get_u64("connect-timeout-ms", 0),
+        n_features: if features == 0 { None } else { Some(features) },
+    };
+    let model = match ScatterModel::from_spec(spec, scfg) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let n_shards = model.n_shards();
+    let server = match NetServer::start_scatter(&listen, model, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "coordinator on {} ({} transport, {} worker(s)) fanning out over {n_shards} shard(s) — \
+         protocol: `<k> <i:v> <i:v> ...` | PING | METRICS | TRACE | SHUTDOWN",
+        server.addr(),
+        server.transport(),
+        server.n_workers(),
+    );
+    server.wait_for_shutdown_request();
+    println!("SHUTDOWN received; draining in-flight requests...");
+    let metrics = server.metrics();
+    server.shutdown();
     println!("{}", metrics.summary());
     println!("drained cleanly");
     0

@@ -24,13 +24,27 @@
 //!   [`deserialize_mapped`] parse only the small sections onto the heap
 //!   and borrow the weights from the mapping ([`crate::model::mmap`]).
 //!
+//! Format **v4** is a v3 file carrying a label-space **shard slice**
+//! ([`crate::model::shard::ShardStore`], written by [`serialize_shard`] /
+//! the `ltls shard` subcommand). It inserts, between the backend tag and
+//! `meta_len`:
+//! ```text
+//! n_shards u32 | shard_id u32 | n_owned u64 | owned[u32 × n_owned]
+//! ```
+//! `E` stays the **full** model's edge count; `bias` has `n_owned`
+//! entries, `meta` and `weights` are the sliced inner store's sections
+//! (the owned columns only), and the pairs table is the full label↔path
+//! table. The owned-edge list lives in the file, so a slice is
+//! self-describing — loading never recomputes the shard plan. Regular
+//! saves keep writing v3.
+//!
 //! Version history: v1 had no width field (loads as width 2); v2 added
 //! `width u32` and stored `bias | weights | pairs` with no backend
 //! framing. Both load as **dense** through the current reader. The loader
 //! is generic over [`Topology`] and the [`WeightStore`] —
 //! `deserialize::<Trellis, DenseStore>` rejects wide or non-dense files —
-//! and [`load_any`] dispatches on the stored (width, backend) pair for
-//! callers (the CLI) that learn both from the file.
+//! and [`load_any`] dispatches on the stored (width, backend, shard)
+//! triple for callers (the CLI) that learn all of it from the file.
 //!
 //! Checkpoint format (little-endian, versioned independently):
 //! ```text
@@ -54,6 +68,7 @@ use crate::model::hashed::HashedStore;
 use crate::model::linear::DenseStore;
 use crate::model::mmap::MmapRegion;
 use crate::model::quant::Q8Store;
+use crate::model::shard::ShardStore;
 use crate::model::store::{parse_f32s, Backend, WeightBlock, WeightStore};
 use crate::train::metrics::EpochMetrics;
 use crate::train::TrainedModel;
@@ -65,6 +80,9 @@ const MAGIC: &[u8; 4] = b"LTLS";
 /// v1: no width field (implicitly 2). v2: width u32 after C.
 /// v3: backend tag + meta section + 64-byte-aligned trailing weight block.
 const VERSION: u32 = 3;
+/// v4: a v3 layout carrying a shard slice (shard framing after the
+/// backend tag). Only [`serialize_shard`] writes it.
+const SHARD_VERSION: u32 = 4;
 const CKPT_MAGIC: &[u8; 4] = b"LTCK";
 const CKPT_VERSION: u32 = 1;
 /// File alignment of the v3 weight block (cache-line sized; any mmap page
@@ -127,6 +145,10 @@ pub fn serialize_parts<T: Topology, S: WeightStore>(
     model: &S,
     assigner: &Assigner,
 ) -> Vec<u8> {
+    assert!(
+        model.shard_part().is_none(),
+        "shard slices carry v4 framing; write them with `serialize_shard`"
+    );
     let mut out = Vec::with_capacity(model.weight_block_len() + 4096);
     out.extend_from_slice(MAGIC);
     put_u32(&mut out, VERSION);
@@ -158,6 +180,14 @@ pub fn serialize_parts<T: Topology, S: WeightStore>(
     out
 }
 
+/// The v4 shard framing: which slice this file is and which full-model
+/// edge columns it stores.
+struct ShardHeader {
+    n_shards: u32,
+    shard_id: u32,
+    owned: Vec<u32>,
+}
+
 /// The header fields shared by every version, plus where the body starts.
 struct FileHeader {
     version: u32,
@@ -167,6 +197,8 @@ struct FileHeader {
     e: usize,
     n_labels: usize,
     backend: Backend,
+    /// `Some` for v4 shard slices.
+    shard: Option<ShardHeader>,
 }
 
 fn read_header(r: &mut Reader) -> Result<FileHeader, String> {
@@ -174,7 +206,7 @@ fn read_header(r: &mut Reader) -> Result<FileHeader, String> {
         return Err("not an LTLS model file (bad magic)".into());
     }
     let version = r.u32()?;
-    if version == 0 || version > VERSION {
+    if version == 0 || version > SHARD_VERSION {
         return Err(format!("unsupported model version {version}"));
     }
     let c = r.u64()?;
@@ -183,7 +215,23 @@ fn read_header(r: &mut Reader) -> Result<FileHeader, String> {
     let e = r.u64()? as usize;
     let n_labels = r.u64()? as usize;
     let backend = if version >= 3 { Backend::from_tag(r.u32()?)? } else { Backend::Dense };
-    Ok(FileHeader { version, c, width, d, e, n_labels, backend })
+    let shard = if version >= SHARD_VERSION {
+        let n_shards = r.u32()?;
+        let shard_id = r.u32()?;
+        let n_owned = r.u64()? as usize;
+        if n_owned.saturating_mul(4) > r.b.len() {
+            return Err("truncated model file (owned edges)".into());
+        }
+        let owned = parse_u32s(r.take(n_owned * 4)?);
+        Some(ShardHeader { n_shards, shard_id, owned })
+    } else {
+        None
+    };
+    Ok(FileHeader { version, c, width, d, e, n_labels, backend, shard })
+}
+
+fn parse_u32s(bytes: &[u8]) -> Vec<u32> {
+    bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect()
 }
 
 /// Core deserializer: parses `bytes`, taking the weight block as a borrow
@@ -195,6 +243,12 @@ fn deserialize_impl<T: Topology, S: WeightStore>(
 ) -> Result<TrainedModel<T, S>, String> {
     let mut r = Reader { b: bytes, i: 0 };
     let hdr = read_header(&mut r)?;
+    if hdr.shard.is_some() {
+        return Err(
+            "file is a shard slice (model format v4); load it with `deserialize_any`/`load_any`"
+                .into(),
+        );
+    }
     if hdr.backend != S::BACKEND {
         return Err(format!(
             "file stores a {} model, expected {} (load with `deserialize_any`/`load_any` \
@@ -320,6 +374,131 @@ fn block_of<'a>(
     }
 }
 
+/// Serialize a shard slice as a v4 model file: the v3 layout with the
+/// shard framing (`n_shards | shard_id | owned edge list`) between the
+/// backend tag and the meta section; `E` stays the full model's edge
+/// count while bias/meta/weights are the sliced inner store's sections.
+pub fn serialize_shard<T: Topology, S: WeightStore>(
+    m: &TrainedModel<T, ShardStore<S>>,
+) -> Vec<u8> {
+    let store = &m.model;
+    let inner = store.inner();
+    let mut out = Vec::with_capacity(inner.weight_block_len() + 4096);
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, SHARD_VERSION);
+    put_u64(&mut out, m.trellis.c());
+    put_u32(&mut out, m.trellis.width());
+    put_u64(&mut out, inner.n_features() as u64);
+    put_u64(&mut out, store.n_edges() as u64);
+    let pairs: Vec<(u32, u64)> = m.assigner.table.pairs().collect();
+    let n_labels = pairs.iter().map(|&(l, _)| l as u64 + 1).max().unwrap_or(0);
+    put_u64(&mut out, n_labels);
+    put_u32(&mut out, S::BACKEND.tag());
+    put_u32(&mut out, store.n_shards());
+    put_u32(&mut out, store.shard_id());
+    put_u64(&mut out, store.owned_edges().len() as u64);
+    for &e in store.owned_edges() {
+        put_u32(&mut out, e);
+    }
+    let mut meta = Vec::new();
+    inner.write_meta(&mut meta);
+    put_u64(&mut out, meta.len() as u64);
+    out.extend_from_slice(&meta);
+    for &b in inner.bias() {
+        out.extend_from_slice(&b.to_le_bytes());
+    }
+    put_u64(&mut out, pairs.len() as u64);
+    for (l, p) in pairs {
+        put_u32(&mut out, l);
+        put_u64(&mut out, p);
+    }
+    put_u64(&mut out, inner.weight_block_len() as u64);
+    while out.len() % WEIGHT_ALIGN != 0 {
+        out.push(0);
+    }
+    inner.write_weights(&mut out);
+    out
+}
+
+/// Save a shard slice to a file (v4 format).
+pub fn save_shard<T: Topology, S: WeightStore>(
+    m: &TrainedModel<T, ShardStore<S>>,
+    path: &Path,
+) -> Result<(), String> {
+    let bytes = serialize_shard(m);
+    let mut f = std::fs::File::create(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    f.write_all(&bytes).map_err(|e| e.to_string())
+}
+
+/// v4 counterpart of [`deserialize_impl`]: parse a shard slice, rebuild
+/// the sliced inner store, and re-widen it behind a [`ShardStore`].
+fn deserialize_shard_impl<T: Topology, S: WeightStore>(
+    bytes: &[u8],
+    region: Option<&Arc<MmapRegion>>,
+) -> Result<TrainedModel<T, ShardStore<S>>, String> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let hdr = read_header(&mut r)?;
+    let Some(sh) = hdr.shard else {
+        return Err("not a shard slice; load whole models with `deserialize`/`load_any`".into());
+    };
+    if hdr.backend != S::BACKEND {
+        return Err(format!(
+            "file stores a {} model, expected {} (load with `deserialize_any`/`load_any` \
+             to dispatch on the stored backend)",
+            hdr.backend.name(),
+            S::BACKEND.name()
+        ));
+    }
+    let trellis = T::build(hdr.c, hdr.width)?;
+    if trellis.num_edges() != hdr.e {
+        return Err(format!(
+            "edge count mismatch: file {}, trellis {}",
+            hdr.e,
+            trellis.num_edges()
+        ));
+    }
+    let (e, d) = (hdr.e, hdr.d);
+    if d.checked_mul(e).and_then(|n| n.checked_mul(4)).is_none() {
+        return Err(format!("implausible model dimensions D={d} E={e}"));
+    }
+    let n_labels = hdr.n_labels.max(1);
+    if n_labels as u64 > hdr.c {
+        return Err(format!(
+            "corrupt model file: {n_labels} labels exceed C={} paths",
+            hdr.c
+        ));
+    }
+    let mut assigner = Assigner::new(AssignPolicy::Identity, n_labels, &trellis, 0);
+    // v3-style body over the sliced sections: bias/meta/weights are the
+    // owned columns, the pairs table is the full one.
+    let n_owned = sh.owned.len();
+    let meta_len = r.u64()? as usize;
+    if meta_len > bytes.len() {
+        return Err("truncated model file (meta)".into());
+    }
+    let meta = r.take(meta_len)?.to_vec();
+    let bias = r.f32s(n_owned)?;
+    let n_pairs = r.u64()? as usize;
+    if n_pairs.saturating_mul(12) > bytes.len() {
+        return Err("truncated model file (pairs)".into());
+    }
+    for _ in 0..n_pairs {
+        let l = r.u32()?;
+        let p = r.u64()?;
+        bind_pair(&mut assigner, l, p, n_labels, hdr.c)?;
+    }
+    let wlen = r.u64()? as usize;
+    r.align(WEIGHT_ALIGN)?;
+    let woff = r.i;
+    r.take(wlen)?;
+    if r.i != bytes.len() {
+        return Err(format!("{} trailing bytes", bytes.len() - r.i));
+    }
+    let inner = S::read_store(n_owned, d, &meta, bias, block_of(bytes, region, woff, wlen))?;
+    let store = ShardStore::from_parts(inner, sh.owned, e, sh.shard_id, sh.n_shards)?;
+    Ok(TrainedModel { trellis, model: store, assigner })
+}
+
 /// Deserialize a trained model as topology `T` and weight store `S`.
 /// Errors if the file's stored width or backend is one `(T, S)` cannot
 /// represent; use [`deserialize_any`] to dispatch on the stored pair.
@@ -366,10 +545,16 @@ pub enum AnyModel {
     WideHashed(TrainedModel<WideTrellis, HashedStore>),
     BinaryQ8(TrainedModel<Trellis, Q8Store>),
     WideQ8(TrainedModel<WideTrellis, Q8Store>),
+    BinaryShard(TrainedModel<Trellis, ShardStore<DenseStore>>),
+    WideShard(TrainedModel<WideTrellis, ShardStore<DenseStore>>),
+    BinaryHashedShard(TrainedModel<Trellis, ShardStore<HashedStore>>),
+    WideHashedShard(TrainedModel<WideTrellis, ShardStore<HashedStore>>),
+    BinaryQ8Shard(TrainedModel<Trellis, ShardStore<Q8Store>>),
+    WideQ8Shard(TrainedModel<WideTrellis, ShardStore<Q8Store>>),
 }
 
 /// Run `$body` with `$m` bound to the concrete [`AnyModel`] variant — the
-/// 6-way (width × backend) dispatch in one place.
+/// 12-way (width × backend × whole-or-shard) dispatch in one place.
 #[macro_export]
 macro_rules! with_any_model {
     ($any:expr, $m:ident => $body:expr) => {
@@ -380,6 +565,12 @@ macro_rules! with_any_model {
             $crate::model::io::AnyModel::WideHashed($m) => $body,
             $crate::model::io::AnyModel::BinaryQ8($m) => $body,
             $crate::model::io::AnyModel::WideQ8($m) => $body,
+            $crate::model::io::AnyModel::BinaryShard($m) => $body,
+            $crate::model::io::AnyModel::WideShard($m) => $body,
+            $crate::model::io::AnyModel::BinaryHashedShard($m) => $body,
+            $crate::model::io::AnyModel::WideHashedShard($m) => $body,
+            $crate::model::io::AnyModel::BinaryQ8Shard($m) => $body,
+            $crate::model::io::AnyModel::WideQ8Shard($m) => $body,
         }
     };
 }
@@ -429,6 +620,11 @@ impl AnyModel {
     pub fn is_mapped(&self) -> bool {
         crate::with_any_model!(self, m => m.model.is_mapped())
     }
+
+    /// `(shard_id, n_shards)` when this is a v4 shard slice.
+    pub fn shard_part(&self) -> Option<(u32, u32)> {
+        crate::with_any_model!(self, m => m.model.shard_part())
+    }
 }
 
 /// Peek a model file's header: `(C, width)` without building anything.
@@ -451,13 +647,36 @@ fn dispatch_any(
     let mut r = Reader { b: bytes, i: 0 };
     let hdr = read_header(&mut r)?;
     let binary = hdr.width == 2;
-    Ok(match (binary, hdr.backend) {
-        (true, Backend::Dense) => AnyModel::Binary(deserialize_impl(bytes, region)?),
-        (false, Backend::Dense) => AnyModel::Wide(deserialize_impl(bytes, region)?),
-        (true, Backend::Hashed) => AnyModel::BinaryHashed(deserialize_impl(bytes, region)?),
-        (false, Backend::Hashed) => AnyModel::WideHashed(deserialize_impl(bytes, region)?),
-        (true, Backend::Q8) => AnyModel::BinaryQ8(deserialize_impl(bytes, region)?),
-        (false, Backend::Q8) => AnyModel::WideQ8(deserialize_impl(bytes, region)?),
+    let sharded = hdr.shard.is_some();
+    Ok(match (binary, hdr.backend, sharded) {
+        (true, Backend::Dense, false) => AnyModel::Binary(deserialize_impl(bytes, region)?),
+        (false, Backend::Dense, false) => AnyModel::Wide(deserialize_impl(bytes, region)?),
+        (true, Backend::Hashed, false) => {
+            AnyModel::BinaryHashed(deserialize_impl(bytes, region)?)
+        }
+        (false, Backend::Hashed, false) => {
+            AnyModel::WideHashed(deserialize_impl(bytes, region)?)
+        }
+        (true, Backend::Q8, false) => AnyModel::BinaryQ8(deserialize_impl(bytes, region)?),
+        (false, Backend::Q8, false) => AnyModel::WideQ8(deserialize_impl(bytes, region)?),
+        (true, Backend::Dense, true) => {
+            AnyModel::BinaryShard(deserialize_shard_impl(bytes, region)?)
+        }
+        (false, Backend::Dense, true) => {
+            AnyModel::WideShard(deserialize_shard_impl(bytes, region)?)
+        }
+        (true, Backend::Hashed, true) => {
+            AnyModel::BinaryHashedShard(deserialize_shard_impl(bytes, region)?)
+        }
+        (false, Backend::Hashed, true) => {
+            AnyModel::WideHashedShard(deserialize_shard_impl(bytes, region)?)
+        }
+        (true, Backend::Q8, true) => {
+            AnyModel::BinaryQ8Shard(deserialize_shard_impl(bytes, region)?)
+        }
+        (false, Backend::Q8, true) => {
+            AnyModel::WideQ8Shard(deserialize_shard_impl(bytes, region)?)
+        }
     })
 }
 
@@ -913,6 +1132,51 @@ mod tests {
         assert!(dir.join("notes.txt").exists());
         assert!(dir.join("epoch-abc.ltck").exists());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A v4 shard slice round-trips through serialize/load (plain and
+    /// mmap), dispatches to the shard variant, and the typed v3 loaders
+    /// refuse it cleanly.
+    #[test]
+    fn shard_slice_v4_roundtrip_and_dispatch() {
+        use crate::graph::ShardPlan;
+        use crate::model::shard::slice_model;
+        let (m, ds) = trained();
+        let plan = ShardPlan::new(&m.trellis, 2).unwrap();
+        let sm = slice_model(&m, &plan, 1).unwrap();
+        let bytes = serialize_shard(&sm);
+        assert_eq!(peek_meta(&bytes).unwrap(), (m.trellis.c, 2));
+        assert_eq!(peek_backend(&bytes).unwrap(), Backend::Dense);
+
+        let any = deserialize_any(&bytes).unwrap();
+        assert_eq!(any.shard_part(), Some((1, 2)));
+        assert_eq!(any.num_edges(), m.trellis.num_edges());
+        let AnyModel::BinaryShard(loaded) = any else {
+            panic!("v4 width-2 dense slice dispatched to the wrong variant");
+        };
+        // The loaded slice predicts bit-identically to the in-memory one.
+        for i in 0..30 {
+            assert_eq!(sm.topk(ds.row(i), 3), loaded.topk(ds.row(i), 3), "row {i}");
+        }
+        // …including through the mmap path.
+        let path = std::env::temp_dir()
+            .join(format!("ltls_shard_v4_{}.ltls", std::process::id()));
+        save_shard(&sm, &path).unwrap();
+        let mapped = load_any_mmap(&path).unwrap();
+        assert!(mapped.is_mapped());
+        assert_eq!(mapped.shard_part(), Some((1, 2)));
+        crate::with_any_model!(&mapped, mm => {
+            for i in 0..10 {
+                assert_eq!(sm.topk(ds.row(i), 3), mm.topk(ds.row(i), 3), "mmap row {i}");
+            }
+        });
+        drop(mapped);
+        std::fs::remove_file(&path).ok();
+        // The typed v3 loader refuses a slice with a pointer to load_any.
+        let err = deserialize::<Trellis, DenseStore>(&bytes).unwrap_err();
+        assert!(err.contains("shard slice"), "{err}");
+        // A truncated slice errors instead of panicking.
+        assert!(deserialize_any(&bytes[..bytes.len() / 2]).is_err());
     }
 
     #[test]

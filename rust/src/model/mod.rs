@@ -25,10 +25,12 @@ pub mod l1;
 pub mod linear;
 pub mod mmap;
 pub mod quant;
+pub mod shard;
 pub mod store;
 
 pub use hashed::HashedStore;
 pub use io::Checkpoint;
 pub use linear::{DenseStore, LinearEdgeModel};
 pub use quant::Q8Store;
+pub use shard::{slice_model, slice_store, ShardStore};
 pub use store::{Backend, ScoreScratch, StripCodec, TrainableStore, WeightStore};

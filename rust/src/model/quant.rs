@@ -131,7 +131,7 @@ impl WeightStore for Q8Store {
     /// accumulation is order-independent.
     fn edge_scores_batch(&self, rows: &[SparseVec], scratch: &mut ScoreScratch, out: &mut Vec<f32>) {
         let e = self.n_edges;
-        let ScoreScratch { gather, acc } = scratch;
+        let ScoreScratch { gather, acc, .. } = scratch;
         acc.clear();
         acc.resize(rows.len() * e, 0);
         gather.clear();
@@ -194,6 +194,12 @@ impl WeightStore for Q8Store {
     fn write_meta(&self, out: &mut Vec<u8>) {
         for &s in &self.scale {
             out.extend_from_slice(&s.to_le_bytes());
+        }
+    }
+    /// The scales are per-edge: a column slice keeps the owned ones.
+    fn slice_meta(&self, owned: &[u32], out: &mut Vec<u8>) {
+        for &e in owned {
+            out.extend_from_slice(&self.scale[e as usize].to_le_bytes());
         }
     }
     fn weight_block_len(&self) -> usize {

@@ -1,0 +1,366 @@
+//! Label-space shard slices of a trained model: a [`ShardStore`] wraps a
+//! column slice of any [`WeightStore`] backend and presents it at the
+//! **full** edge width, with the terminal edges of foreign shards pinned
+//! to `−∞`.
+//!
+//! The point is exactness, not approximation. The list-Viterbi decoders
+//! add terminal-edge scores only at emission (see
+//! [`crate::graph::shardmap`]), so a decoder running over this store
+//! produces the global top-k *restricted to the shard's labels*, with
+//! scores bit-identical to the single-process model — every owned edge's
+//! weights and bias are untouched copies, and every body-edge computation
+//! happens in the same order over the same column subset? No: body edges
+//! are **owned by every shard**, so the inner store holds all of them and
+//! the per-edge dot products are the very same `Σ x_i·w[i,e] + b_e` sums.
+//! Masked foreign candidates sort after every finite candidate and are
+//! dropped by [`crate::train::TrainedModel::resolve_topk`]'s finite-score
+//! cutoff.
+//!
+//! A slice is built offline by [`slice_model`] (the `ltls shard`
+//! subcommand) from a [`ShardPlan`], persisted as a **v4** model file
+//! ([`crate::model::io::serialize_shard`]) and loaded back — mmap
+//! included — through the ordinary [`crate::model::io::load_any`] path.
+
+use super::store::{Backend, ScoreScratch, WeightBlock, WeightStore};
+use crate::graph::{ShardPlan, Topology};
+use crate::sparse::SparseVec;
+use crate::train::TrainedModel;
+use std::sync::Arc;
+
+/// A column slice of a weight store, re-widened to the full edge space
+/// with foreign terminal edges at `−∞`.
+#[derive(Clone)]
+pub struct ShardStore<S: WeightStore> {
+    /// The sliced store: `owned.len()` columns of the full model.
+    inner: S,
+    /// Ascending full-model edge indices the slice owns.
+    owned: Arc<Vec<u32>>,
+    /// Full-width score template: the inner bias at owned positions, `−∞`
+    /// at foreign terminal edges. Doubles as [`WeightStore::bias`], so a
+    /// bias-only score (empty input) is already correctly masked.
+    template: Arc<Vec<f32>>,
+    shard_id: u32,
+    n_shards: u32,
+}
+
+impl<S: WeightStore> std::fmt::Debug for ShardStore<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardStore")
+            .field("backend", &S::BACKEND.name())
+            .field("shard_id", &self.shard_id)
+            .field("n_shards", &self.n_shards)
+            .field("owned_edges", &self.owned.len())
+            .field("full_edges", &self.template.len())
+            .finish()
+    }
+}
+
+impl<S: WeightStore> ShardStore<S> {
+    /// Assemble a shard store from its parts, validating the invariants a
+    /// v4 file cannot be trusted to uphold.
+    pub fn from_parts(
+        inner: S,
+        owned: Vec<u32>,
+        full_edges: usize,
+        shard_id: u32,
+        n_shards: u32,
+    ) -> Result<ShardStore<S>, String> {
+        if n_shards == 0 || shard_id >= n_shards {
+            return Err(format!("shard id {shard_id} out of range (n_shards {n_shards})"));
+        }
+        if owned.is_empty() || owned.len() > full_edges {
+            return Err(format!(
+                "shard owns {} of {full_edges} edges — corrupt slice",
+                owned.len()
+            ));
+        }
+        if !owned.windows(2).all(|w| w[0] < w[1]) || owned.last().map(|&e| e as usize >= full_edges) == Some(true)
+        {
+            return Err("shard owned-edge list is not strictly ascending in range".into());
+        }
+        if inner.n_edges() != owned.len() {
+            return Err(format!(
+                "sliced store has {} edges, owned list {}",
+                inner.n_edges(),
+                owned.len()
+            ));
+        }
+        let mut template = vec![f32::NEG_INFINITY; full_edges];
+        for (j, &e) in owned.iter().enumerate() {
+            template[e as usize] = inner.bias()[j];
+        }
+        Ok(ShardStore {
+            inner,
+            owned: Arc::new(owned),
+            template: Arc::new(template),
+            shard_id,
+            n_shards,
+        })
+    }
+
+    /// The sliced inner store.
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    /// Ascending full-model edge indices this shard owns.
+    pub fn owned_edges(&self) -> &[u32] {
+        &self.owned
+    }
+
+    pub fn shard_id(&self) -> u32 {
+        self.shard_id
+    }
+
+    pub fn n_shards(&self) -> u32 {
+        self.n_shards
+    }
+
+    /// Scatter one row of inner scores over the masked template.
+    #[inline]
+    fn widen(&self, partial: &[f32], out: &mut Vec<f32>) {
+        let base = out.len();
+        out.extend_from_slice(&self.template);
+        let row = &mut out[base..];
+        for (j, &e) in self.owned.iter().enumerate() {
+            row[e as usize] = partial[j];
+        }
+    }
+}
+
+impl<S: WeightStore> WeightStore for ShardStore<S> {
+    const BACKEND: Backend = S::BACKEND;
+
+    /// The **full** model's edge count: decoders see the whole graph.
+    fn n_edges(&self) -> usize {
+        self.template.len()
+    }
+    fn n_features(&self) -> usize {
+        self.inner.n_features()
+    }
+    fn bias(&self) -> &[f32] {
+        &self.template
+    }
+
+    fn edge_scores(&self, x: SparseVec, scratch: &mut ScoreScratch, out: &mut Vec<f32>) {
+        let mut partial = std::mem::take(&mut scratch.partial);
+        self.inner.edge_scores(x, scratch, &mut partial);
+        out.clear();
+        self.widen(&partial, out);
+        scratch.partial = partial;
+    }
+
+    fn edge_scores_batch(&self, rows: &[SparseVec], scratch: &mut ScoreScratch, out: &mut Vec<f32>) {
+        let mut partial = std::mem::take(&mut scratch.partial);
+        self.inner.edge_scores_batch(rows, scratch, &mut partial);
+        let e_own = self.inner.n_edges();
+        out.clear();
+        out.reserve(rows.len() * self.template.len());
+        for r in 0..rows.len() {
+            self.widen(&partial[r * e_own..(r + 1) * e_own], out);
+        }
+        scratch.partial = partial;
+    }
+
+    fn param_count(&self) -> usize {
+        self.inner.param_count()
+    }
+    fn bytes(&self) -> usize {
+        self.inner.bytes()
+    }
+    fn weight_count(&self) -> usize {
+        self.inner.weight_count()
+    }
+    fn weight_elem_bytes(&self) -> usize {
+        self.inner.weight_elem_bytes()
+    }
+    fn zero_weights(&self) -> usize {
+        self.inner.zero_weights()
+    }
+    fn shard_part(&self) -> Option<(u32, u32)> {
+        Some((self.shard_id, self.n_shards))
+    }
+    fn is_mapped(&self) -> bool {
+        self.inner.is_mapped()
+    }
+
+    fn write_meta(&self, out: &mut Vec<u8>) {
+        self.inner.write_meta(out);
+    }
+    fn weight_block_len(&self) -> usize {
+        self.inner.weight_block_len()
+    }
+    fn write_weights(&self, out: &mut Vec<u8>) {
+        self.inner.write_weights(out);
+    }
+    fn read_store(
+        _n_edges: usize,
+        _n_features: usize,
+        _meta: &[u8],
+        _bias: Vec<f32>,
+        _weights: WeightBlock<'_>,
+    ) -> Result<Self, String> {
+        Err("shard slices carry extra framing; load them with `load_any` (model format v4)".into())
+    }
+}
+
+/// Column-slice any weight store to the `owned` edge subset (ascending
+/// full-model edge indices): each weight row keeps the owned columns,
+/// byte-for-byte; bias and per-edge metadata are sliced alongside.
+pub fn slice_store<S: WeightStore>(full: &S, owned: &[u32]) -> Result<S, String> {
+    let e_full = full.n_edges();
+    let elem = full.weight_elem_bytes();
+    let rows = full.weight_count() / e_full;
+    debug_assert_eq!(rows * e_full, full.weight_count(), "non-rectangular weight block");
+    let mut block = Vec::with_capacity(full.weight_block_len());
+    full.write_weights(&mut block);
+    if block.len() != rows * e_full * elem {
+        return Err(format!(
+            "weight block is {} bytes, expected {} — cannot column-slice this backend",
+            block.len(),
+            rows * e_full * elem
+        ));
+    }
+    let row_bytes = e_full * elem;
+    let mut sliced = Vec::with_capacity(rows * owned.len() * elem);
+    for r in 0..rows {
+        let row = &block[r * row_bytes..(r + 1) * row_bytes];
+        for &c in owned {
+            let c = c as usize * elem;
+            sliced.extend_from_slice(&row[c..c + elem]);
+        }
+    }
+    let bias: Vec<f32> = owned.iter().map(|&c| full.bias()[c as usize]).collect();
+    let mut meta = Vec::new();
+    full.slice_meta(owned, &mut meta);
+    S::read_store(owned.len(), full.n_features(), &meta, bias, WeightBlock::Owned(&sliced))
+}
+
+/// Slice a trained model down to `shard`'s share of `plan`: the owned
+/// weight columns plus the full label↔path table and topology, wrapped so
+/// the ordinary decode stack scores it at full edge width.
+pub fn slice_model<T: Topology, S: WeightStore>(
+    m: &TrainedModel<T, S>,
+    plan: &ShardPlan,
+    shard: u32,
+) -> Result<TrainedModel<T, ShardStore<S>>, String> {
+    if let Some((id, n)) = m.model.shard_part() {
+        return Err(format!("model is already shard {id}/{n}; slice the full model instead"));
+    }
+    if shard >= plan.n_shards() {
+        return Err(format!("shard {shard} out of range (plan has {})", plan.n_shards()));
+    }
+    let owned = plan.owned_edges(shard);
+    let inner = slice_store(&m.model, &owned)?;
+    let store =
+        ShardStore::from_parts(inner, owned, m.trellis.num_edges(), shard, plan.n_shards())?;
+    Ok(TrainedModel { trellis: m.trellis.clone(), model: store, assigner: m.assigner.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ShardPlan, Trellis};
+    use crate::model::linear::DenseStore;
+    use crate::model::quant::Q8Store;
+    use crate::util::rng::Rng;
+
+    fn random_dense(e: usize, d: usize, seed: u64) -> DenseStore {
+        let mut m = DenseStore::new(e, d);
+        let mut rng = Rng::new(seed);
+        for w in m.w.as_mut_slice() {
+            *w = rng.normal() * 0.3;
+        }
+        for b in &mut m.bias {
+            *b = rng.normal() * 0.05;
+        }
+        m
+    }
+
+    /// A sliced store scores exactly like the full store with foreign
+    /// columns forced to −∞ — owned scores bit-identical, per-row and
+    /// batched.
+    #[test]
+    fn sliced_scores_match_masked_full_scores() {
+        let t = Trellis::new(105);
+        let e = crate::graph::Topology::num_edges(&t);
+        let full = random_dense(e, 40, 11);
+        let plan = ShardPlan::new(&t, 2).unwrap();
+        let mut rng = Rng::new(12);
+        for shard in 0..2u32 {
+            let owned = plan.owned_edges(shard);
+            let inner = slice_store(&full, &owned).unwrap();
+            let store = ShardStore::from_parts(inner, owned.clone(), e, shard, 2).unwrap();
+            assert_eq!(store.n_edges(), e);
+            assert_eq!(store.shard_part(), Some((shard, 2)));
+            let rows: Vec<(Vec<u32>, Vec<f32>)> = (0..5)
+                .map(|_| {
+                    let mut idx: Vec<u32> = (0..8).map(|_| rng.index(40) as u32).collect();
+                    idx.sort_unstable();
+                    idx.dedup();
+                    let val: Vec<f32> = idx.iter().map(|_| rng.normal()).collect();
+                    (idx, val)
+                })
+                .collect();
+            let views: Vec<SparseVec> =
+                rows.iter().map(|(i, v)| SparseVec::new(i, v)).collect();
+            let mut scratch = ScoreScratch::new();
+            let (mut hs, mut hf) = (Vec::new(), Vec::new());
+            for x in &views {
+                store.edge_scores(*x, &mut scratch, &mut hs);
+                full.edge_scores(*x, &mut hf);
+                assert_eq!(hs.len(), e);
+                let owned_set: std::collections::BTreeSet<u32> = owned.iter().copied().collect();
+                for edge in 0..e {
+                    if owned_set.contains(&(edge as u32)) {
+                        assert_eq!(hs[edge].to_bits(), hf[edge].to_bits(), "edge {edge}");
+                    } else {
+                        assert_eq!(hs[edge], f32::NEG_INFINITY, "edge {edge}");
+                    }
+                }
+            }
+            // Batched path matches the per-row path bit-for-bit.
+            let mut batch = Vec::new();
+            store.edge_scores_batch(&views, &mut scratch, &mut batch);
+            assert_eq!(batch.len(), views.len() * e);
+            for (r, x) in views.iter().enumerate() {
+                store.edge_scores(*x, &mut scratch, &mut hs);
+                assert_eq!(&batch[r * e..(r + 1) * e], hs.as_slice(), "row {r}");
+            }
+        }
+    }
+
+    /// Q8 per-edge scales survive slicing (the `slice_meta` override).
+    #[test]
+    fn q8_slice_keeps_per_edge_scales() {
+        let t = Trellis::new(159);
+        let e = crate::graph::Topology::num_edges(&t);
+        let dense = random_dense(e, 30, 21);
+        let q8 = Q8Store::quantize(&dense);
+        let plan = ShardPlan::new(&t, 3).unwrap();
+        let owned = plan.owned_edges(1);
+        let sliced = slice_store(&q8, &owned).unwrap();
+        assert_eq!(sliced.n_edges, owned.len());
+        for (j, &c) in owned.iter().enumerate() {
+            assert_eq!(sliced.scale[j], q8.scale[c as usize]);
+            assert_eq!(sliced.bias[j], q8.bias[c as usize]);
+            for i in 0..30usize {
+                assert_eq!(sliced.q[i * owned.len() + j], q8.q[i * e + c as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        let inner = random_dense(3, 4, 5);
+        // Not ascending.
+        assert!(ShardStore::from_parts(inner.clone(), vec![2, 1, 0], 10, 0, 2).is_err());
+        // Out of range.
+        assert!(ShardStore::from_parts(inner.clone(), vec![0, 1, 10], 10, 0, 2).is_err());
+        // Shard id out of range.
+        assert!(ShardStore::from_parts(inner.clone(), vec![0, 1, 2], 10, 2, 2).is_err());
+        // Length mismatch against the inner store.
+        assert!(ShardStore::from_parts(inner.clone(), vec![0, 1], 10, 0, 2).is_err());
+        assert!(ShardStore::from_parts(inner, vec![0, 5, 9], 10, 1, 2).is_ok());
+    }
+}

@@ -137,10 +137,13 @@ pub(crate) fn parse_f32s(bytes: &[u8]) -> Vec<f32> {
 ///   buffer* via `f32::from_bits` bit-punning; a typed buffer removes
 ///   that footgun and lets the widening SIMD dot store i32 lanes
 ///   directly.)
+/// * `partial` — a shard store's inner-store output (`B × E_owned`),
+///   scattered into the full-width edge vector afterwards.
 #[derive(Clone, Debug, Default)]
 pub struct ScoreScratch {
     pub gather: Vec<(u32, u32, f32)>,
     pub acc: Vec<i32>,
+    pub partial: Vec<f32>,
 }
 
 impl ScoreScratch {
@@ -199,6 +202,12 @@ pub trait WeightStore: Clone + Send + Sync + 'static {
         Self::BACKEND
     }
 
+    /// `(shard_id, n_shards)` when this store is a label-space shard slice
+    /// (see [`super::shard::ShardStore`]); `None` for whole models.
+    fn shard_part(&self) -> Option<(u32, u32)> {
+        None
+    }
+
     /// True when the weight block borrows a mapped file region.
     fn is_mapped(&self) -> bool {
         false
@@ -210,6 +219,15 @@ pub trait WeightStore: Clone + Send + Sync + 'static {
     /// scales…). Dense stores write nothing.
     fn write_meta(&self, out: &mut Vec<u8>) {
         let _ = out;
+    }
+    /// Append the metadata a **column slice** of this store needs
+    /// (`owned` = ascending kept edge indices). Defaults to the unsliced
+    /// metadata, which is correct whenever the metadata is not per-edge
+    /// (dense: empty; hashed: `(bits, seed)`); per-edge metadata (the q8
+    /// scales) overrides this to write the kept columns only.
+    fn slice_meta(&self, owned: &[u32], out: &mut Vec<u8>) {
+        let _ = owned;
+        self.write_meta(out);
     }
     /// Byte length of the weight block [`Self::write_weights`] appends.
     fn weight_block_len(&self) -> usize;

@@ -264,9 +264,15 @@ impl<T: Topology, S: WeightStore> TrainedModel<T, S> {
     }
 
     /// Map decoded (path, score) pairs to assigned dataset labels,
-    /// keeping at most `k`.
+    /// keeping at most `k`. Non-finite scores end the scan: the decoders
+    /// sort them last, and a `−∞` only arises from a shard slice's masked
+    /// foreign edges ([`crate::model::ShardStore`]) — those paths belong
+    /// to other shards and must not appear in this model's answers.
     pub(crate) fn resolve_topk(&self, k: usize, paths: &[Scored], out: &mut Vec<(u32, f32)>) {
         for s in paths {
+            if !s.score.is_finite() {
+                break;
+            }
             if let Some(l) = self.assigner.table.label_of(s.label) {
                 out.push((l, s.score));
                 if out.len() == k {

@@ -10,6 +10,7 @@
 pub mod args;
 pub mod bench;
 pub mod json;
+pub mod netclient;
 pub mod poll;
 pub mod rng;
 pub mod timer;

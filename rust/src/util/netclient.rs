@@ -1,0 +1,317 @@
+//! A small pipelined newline-protocol TCP client with deadline support.
+//!
+//! The serving frontend (`coordinator/transport.rs`) speaks a line
+//! protocol: one JSON request per line in, one JSON reply per line out,
+//! replies in request order on each connection. Both the network tests
+//! and the scatter-gather coordinator (`coordinator/scatter.rs`) need the
+//! same client shape — connect, pipeline several lines, read replies back
+//! in order, never hang forever — so it lives here instead of being
+//! re-implemented ad hoc per call site.
+//!
+//! Design notes:
+//!
+//! * The stream stays in **blocking** mode; deadlines are enforced by
+//!   setting `SO_RCVTIMEO`/`SO_SNDTIMEO` to the remaining time before
+//!   every read/write. This keeps the client portable (no raw fds needed
+//!   for the common path) while still guaranteeing an upper bound on
+//!   every call.
+//! * Received bytes accumulate in an internal buffer and are handed out
+//!   line by line, so pipelining N requests then reading N replies works
+//!   even when the server coalesces replies into one TCP segment.
+//! * For multiplexed use the coordinator polls the [`raw_fd`] of several
+//!   clients at once (via [`crate::util::poll`]) and calls [`fill_ready`]
+//!   on whichever is readable — a blocking read after `POLLIN` cannot
+//!   block, so the event loop stays responsive without `O_NONBLOCK`
+//!   state juggling.
+//!
+//! [`raw_fd`]: NetClient::raw_fd
+//! [`fill_ready`]: NetClient::fill_ready
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// Upper bound on a single protocol line (request or reply), matching the
+/// server's own line cap. A peer that streams more than this without a
+/// newline is broken or hostile; fail the read instead of buffering
+/// without bound.
+pub const MAX_LINE: usize = 1 << 20;
+
+/// Compact the drained prefix away once it crosses this many bytes.
+const COMPACT_AT: usize = 64 * 1024;
+
+/// A pipelined line-protocol client over one TCP connection.
+#[derive(Debug)]
+pub struct NetClient {
+    stream: TcpStream,
+    /// Received-but-undelivered bytes; `[start..]` is live.
+    buf: Vec<u8>,
+    start: usize,
+}
+
+/// Remaining time before `deadline`, or a `TimedOut` error if it passed.
+fn remaining(deadline: Instant) -> io::Result<Duration> {
+    let now = Instant::now();
+    if now >= deadline {
+        return Err(io::Error::new(io::ErrorKind::TimedOut, "deadline elapsed"));
+    }
+    // `set_read_timeout(Some(ZERO))` is an error in std; clamp up.
+    Ok((deadline - now).max(Duration::from_millis(1)))
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+impl NetClient {
+    /// Connect to `addr` (first resolvable candidate) within `timeout`,
+    /// with `TCP_NODELAY` set — the protocol is request/response over
+    /// small lines, where Nagle only adds latency.
+    pub fn connect<A: ToSocketAddrs>(addr: A, timeout: Duration) -> io::Result<NetClient> {
+        let mut last = None;
+        for sa in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&sa, timeout) {
+                Ok(stream) => return NetClient::from_stream(stream),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidInput, "address resolved to nothing")
+        }))
+    }
+
+    /// Wrap an already-connected stream (sets `TCP_NODELAY`).
+    pub fn from_stream(stream: TcpStream) -> io::Result<NetClient> {
+        stream.set_nodelay(true)?;
+        Ok(NetClient { stream, buf: Vec::new(), start: 0 })
+    }
+
+    /// Send one line (terminating `\n` appended) before `deadline`.
+    ///
+    /// Lines may be pipelined: the server answers in order, so `N` sends
+    /// followed by `N` [`recv_line`]s is the canonical batched exchange.
+    ///
+    /// [`recv_line`]: NetClient::recv_line
+    pub fn send_line(&mut self, line: &str, deadline: Instant) -> io::Result<()> {
+        let mut msg = Vec::with_capacity(line.len() + 1);
+        msg.extend_from_slice(line.as_bytes());
+        msg.push(b'\n');
+        let mut sent = 0;
+        while sent < msg.len() {
+            self.stream.set_write_timeout(Some(remaining(deadline)?))?;
+            match self.stream.write(&msg[sent..]) {
+                Ok(0) => return Err(io::Error::new(io::ErrorKind::WriteZero, "peer closed")),
+                Ok(n) => sent += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) if is_timeout(&e) => {
+                    // Re-check the deadline (partial progress may have
+                    // reset the kernel timer) and retry what's left.
+                    remaining(deadline)?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive the next line (without its `\n`) before `deadline`.
+    ///
+    /// Errors with `TimedOut` when the deadline passes, `UnexpectedEof`
+    /// when the peer closes mid-line, and `InvalidData` when a line
+    /// exceeds [`MAX_LINE`].
+    pub fn recv_line(&mut self, deadline: Instant) -> io::Result<String> {
+        loop {
+            if let Some(line) = self.take_line()? {
+                return Ok(line);
+            }
+            self.stream.set_read_timeout(Some(remaining(deadline)?))?;
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "connection closed before a full line arrived",
+                    ))
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) if is_timeout(&e) => {
+                    remaining(deadline)?; // converts to TimedOut once elapsed
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Pop one complete buffered line, if any, without touching the
+    /// socket. `Ok(None)` means "need more bytes".
+    pub fn take_line(&mut self) -> io::Result<Option<String>> {
+        let live = &self.buf[self.start..];
+        match live.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                let line = String::from_utf8_lossy(&live[..pos]).into_owned();
+                self.start += pos + 1;
+                if self.start >= COMPACT_AT {
+                    self.buf.drain(..self.start);
+                    self.start = 0;
+                }
+                Ok(Some(line))
+            }
+            None => {
+                if live.len() > MAX_LINE {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "reply line exceeds MAX_LINE",
+                    ));
+                }
+                Ok(None)
+            }
+        }
+    }
+
+    /// One read into the line buffer, for callers that established
+    /// readiness externally (e.g. `poll(2)` said `POLLIN`, so this will
+    /// not block). Returns the byte count; `Ok(0)` is EOF.
+    pub fn fill_ready(&mut self) -> io::Result<usize> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(n) => {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    return Ok(n);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Half-close the write side; buffered replies keep flowing until the
+    /// server drains what it owes.
+    pub fn shutdown_write(&self) -> io::Result<()> {
+        self.stream.shutdown(Shutdown::Write)
+    }
+
+    /// The raw fd, for registering this client in a `poll(2)` set.
+    #[cfg(unix)]
+    pub fn raw_fd(&self) -> std::os::unix::io::RawFd {
+        use std::os::unix::io::AsRawFd;
+        self.stream.as_raw_fd()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+    use std::net::TcpListener;
+    use std::time::{Duration, Instant};
+
+    fn far() -> Instant {
+        Instant::now() + Duration::from_secs(30)
+    }
+
+    /// An echo server that reads `n` lines then replies to all of them in
+    /// one write — exercises pipelining and reply coalescing.
+    fn coalescing_echo(n: usize) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(stream.try_clone().unwrap());
+            let mut lines = Vec::new();
+            for _ in 0..n {
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                lines.push(line);
+            }
+            let mut out = String::new();
+            for l in &lines {
+                out.push_str("echo:");
+                out.push_str(l);
+            }
+            (&stream).write_all(out.as_bytes()).unwrap();
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn pipelined_lines_come_back_in_order() {
+        let (addr, h) = coalescing_echo(3);
+        let mut c = NetClient::connect(addr, Duration::from_secs(5)).unwrap();
+        for i in 0..3 {
+            c.send_line(&format!("req-{i}"), far()).unwrap();
+        }
+        for i in 0..3 {
+            assert_eq!(c.recv_line(far()).unwrap(), format!("echo:req-{i}"));
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_times_out_when_server_is_silent() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut c = NetClient::connect(addr, Duration::from_secs(5)).unwrap();
+        let t0 = Instant::now();
+        let err = c.recv_line(Instant::now() + Duration::from_millis(50)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+        assert!(t0.elapsed() < Duration::from_secs(5), "timeout not honored");
+        drop(listener);
+    }
+
+    #[test]
+    fn eof_mid_line_is_an_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            (&stream).write_all(b"no newline here").unwrap();
+            // drop → FIN
+        });
+        let mut c = NetClient::connect(addr, Duration::from_secs(5)).unwrap();
+        let err = c.recv_line(far()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn take_line_drains_buffered_replies_without_reading() {
+        let (addr, h) = coalescing_echo(2);
+        let mut c = NetClient::connect(addr, Duration::from_secs(5)).unwrap();
+        c.send_line("a", far()).unwrap();
+        c.send_line("b", far()).unwrap();
+        // First recv_line pulls whatever the kernel has; the second reply
+        // is usually already buffered and must come out via take_line.
+        assert_eq!(c.recv_line(far()).unwrap(), "echo:a");
+        let second = match c.take_line().unwrap() {
+            Some(line) => line,
+            None => c.recv_line(far()).unwrap(),
+        };
+        assert_eq!(second, "echo:b");
+        h.join().unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn poll_readiness_then_fill_ready_yields_lines() {
+        use crate::util::poll::{poll, PollFd, POLLIN};
+        let (addr, h) = coalescing_echo(1);
+        let mut c = NetClient::connect(addr, Duration::from_secs(5)).unwrap();
+        c.send_line("ping", far()).unwrap();
+        let deadline = far();
+        loop {
+            if let Some(line) = c.take_line().unwrap() {
+                assert_eq!(line, "echo:ping");
+                break;
+            }
+            let mut fds = [PollFd::new(c.raw_fd(), POLLIN)];
+            poll(&mut fds, 1000).unwrap();
+            if fds[0].readable() {
+                assert!(c.fill_ready().unwrap() > 0, "unexpected EOF");
+            }
+            assert!(Instant::now() < deadline, "no reply within deadline");
+        }
+        h.join().unwrap();
+    }
+}

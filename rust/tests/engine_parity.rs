@@ -138,7 +138,7 @@ impl BatchModel for Echo {
     fn predict_batch(&self, batch: &[Request]) -> Vec<Response> {
         batch
             .iter()
-            .map(|r| Response { topk: vec![(r.indices[0], r.values[0])] })
+            .map(|r| Response { topk: vec![(r.indices[0], r.values[0])], partial: false })
             .collect()
     }
     fn name(&self) -> &str {

@@ -32,10 +32,10 @@ use ltls::data::Dataset;
 use ltls::eval::Predictor;
 use ltls::train::{TrainConfig, TrainedModel, Trainer};
 use ltls::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{Shutdown, SocketAddr, TcpStream};
+use ltls::util::netclient::NetClient;
+use std::net::SocketAddr;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn trained(epochs: usize, seed: u64) -> (TrainedModel, Dataset) {
     let ds = SyntheticSpec::multiclass(500, 300, 20).seed(55).generate();
@@ -45,30 +45,28 @@ fn trained(epochs: usize, seed: u64) -> (TrainedModel, Dataset) {
     (tr.into_model(), ds)
 }
 
-/// A line-oriented test client over one TCP connection.
+/// Per-operation deadline for the test client: far beyond any healthy
+/// reply, so a hang fails the test instead of wedging the suite.
+const IO_DEADLINE: Duration = Duration::from_secs(30);
+
+/// A line-oriented test client over one TCP connection: the shared
+/// pipelined [`NetClient`] (also the coordinator's shard client) with
+/// panicking convenience wrappers.
 struct Client {
-    w: TcpStream,
-    r: BufReader<TcpStream>,
+    c: NetClient,
 }
 
 impl Client {
     fn connect(addr: SocketAddr) -> Client {
-        let s = TcpStream::connect(addr).expect("connect");
-        s.set_nodelay(true).ok();
-        let r = BufReader::new(s.try_clone().expect("clone stream"));
-        Client { w: s, r }
+        Client { c: NetClient::connect(addr, IO_DEADLINE).expect("connect") }
     }
 
     fn send(&mut self, line: &str) {
-        self.w.write_all(line.as_bytes()).unwrap();
-        self.w.write_all(b"\n").unwrap();
+        self.c.send_line(line, Instant::now() + IO_DEADLINE).expect("send request");
     }
 
     fn recv(&mut self) -> String {
-        let mut l = String::new();
-        let n = self.r.read_line(&mut l).expect("read reply");
-        assert!(n > 0, "server closed the connection before replying");
-        l.trim().to_string()
+        self.c.recv_line(Instant::now() + IO_DEADLINE).expect("read reply")
     }
 }
 
@@ -467,15 +465,18 @@ fn half_close_after_burst_still_receives_every_reply(transport: Transport) {
         c.send(&req_line(3, ds.row(i % ds.n_examples())));
     }
     // EOF the server's read side while the burst is still being answered.
-    c.w.shutdown(Shutdown::Write).expect("half-close");
+    c.c.shutdown_write().expect("half-close");
     for (i, want) in expected.iter().enumerate() {
         let got = parse_topk(&c.recv());
         assert_eq!(&got, want, "reply {i} after half-close");
     }
     // After the owed replies: clean EOF, not more data.
-    let mut rest = String::new();
-    let n = c.r.read_line(&mut rest).expect("read EOF");
-    assert_eq!(n, 0, "unexpected extra reply after the burst: {rest:?}");
+    let err = c.c.recv_line(Instant::now() + IO_DEADLINE).expect_err("expected EOF");
+    assert_eq!(
+        err.kind(),
+        std::io::ErrorKind::UnexpectedEof,
+        "unexpected extra data after the burst: {err}"
+    );
     server.shutdown();
 }
 
@@ -663,6 +664,12 @@ fn metrics_name_set_is_identical_across_transports() {
             "ltls_trace_slow_total",
             "ltls_train_epochs_total",
             "ltls_train_epoch_seconds_bucket",
+            // Scatter-tier families: rendered zero-valued on servers with
+            // no scatter tier, so the name set is topology-independent.
+            "ltls_shard_requests_total",
+            "ltls_shard_degraded_total",
+            "ltls_shard_retries_total",
+            "ltls_shard_rtt_seconds_bucket",
         ] {
             assert!(names.contains(want), "{transport}: missing {want} in {names:?}");
         }

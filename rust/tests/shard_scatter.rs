@@ -1,0 +1,331 @@
+//! End-to-end contract of the sharded scatter-gather serving tier
+//! (`graph/shardmap.rs` + `model/shard.rs` + `coordinator/scatter.rs`),
+//! over real TCP on loopback:
+//!
+//! 1. **Exactness** — a coordinator fanning out over 2 shards × 2
+//!    replicas (each serving a v4 slice written by `save_shard` and
+//!    loaded back through `load_any`) answers every request bit-identical
+//!    to the single-process model, and never marks a reply partial while
+//!    all shards are healthy.
+//! 2. **Failover** — killing one replica mid-traffic drops zero of ≥200
+//!    pipelined requests and still produces exact, non-partial answers:
+//!    the coordinator retries each failed batch exchange on the shard's
+//!    other replica.
+//! 3. **Degradation** — with *both* replicas of a shard down, replies
+//!    carry `"partial":true` and the top-k of the surviving shards; the
+//!    `ltls_shard_degraded_total` counter records every degraded reply.
+//! 4. **Recovery** — restarting a replica on its old address returns the
+//!    coordinator to exact, non-partial answers with no restart of its
+//!    own.
+//! 5. **Merge** — `merge_topk` equals the brute-force global top-k for
+//!    k ∈ {1, 5, 64}, including ties broken by smaller label id.
+//! 6. **Slicing parity** — per-shard top-k lists merge back into the full
+//!    model's top-k bit-for-bit across backends (dense, hashed, q8) and
+//!    widths (2 and 5), purely in-process.
+
+use ltls::coordinator::{
+    merge_topk, BatchedLtls, BatcherConfig, NetConfig, NetServer, ScatterConfig, ScatterModel,
+    ServerConfig,
+};
+use ltls::data::synthetic::SyntheticSpec;
+use ltls::data::Dataset;
+use ltls::eval::Predictor;
+use ltls::graph::{ShardPlan, Topology, Trellis, WideTrellis};
+use ltls::model::{slice_model, DenseStore, HashedStore, WeightStore};
+use ltls::train::{TrainConfig, TrainedModel, Trainer};
+use ltls::util::json::Json;
+use ltls::util::netclient::NetClient;
+use ltls::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+const IO_DEADLINE: Duration = Duration::from_secs(30);
+
+fn deadline() -> Instant {
+    Instant::now() + IO_DEADLINE
+}
+
+/// `<k> <i:v> <i:v> ...` — `{}` float printing is shortest-roundtrip, so
+/// the parsed f32 is bit-identical on the far side.
+fn req_line(k: usize, row: ltls::sparse::SparseVec) -> String {
+    let mut s = format!("{k}");
+    for (&i, &v) in row.indices.iter().zip(row.values) {
+        s.push_str(&format!(" {i}:{v}"));
+    }
+    s
+}
+
+/// Parse one coordinator reply into `(topk, partial)`.
+fn parse_reply(line: &str) -> (Vec<(u32, f32)>, bool) {
+    let doc = Json::parse(line).unwrap_or_else(|e| panic!("bad json {line:?}: {e}"));
+    assert!(doc.get("error").is_none(), "unexpected error reply: {line}");
+    let partial = doc.get("partial") == Some(&Json::Bool(true));
+    let topk = doc
+        .get("topk")
+        .unwrap_or_else(|| panic!("no topk in {line:?}"))
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|pair| {
+            let a = pair.as_arr().unwrap();
+            (a[0].as_f64().unwrap() as u32, a[1].as_f64().unwrap() as f32)
+        })
+        .collect();
+    (topk, partial)
+}
+
+fn net_cfg() -> NetConfig {
+    NetConfig {
+        server: ServerConfig {
+            batcher: BatcherConfig { max_batch: 16, max_wait: Duration::from_micros(300) },
+            queue_depth: 256,
+            workers: 2,
+        },
+        ..NetConfig::default()
+    }
+}
+
+/// Load a saved v4 slice and serve it on `listen` — the exact stack a
+/// production shard runs (`load_any` dispatch + `BatchedLtls` pool).
+fn try_start_shard(path: &std::path::Path, listen: &str) -> Result<NetServer, String> {
+    let loaded = ltls::model::io::load_any(path)?;
+    assert!(loaded.shard_part().is_some(), "expected a v4 shard slice at {}", path.display());
+    ltls::with_any_model!(loaded, m => NetServer::start(listen, BatchedLtls(m), net_cfg()))
+}
+
+fn start_shard(path: &std::path::Path) -> NetServer {
+    try_start_shard(path, "127.0.0.1:0").expect("start shard server")
+}
+
+/// Contracts 1–4: exact while healthy, failover on one dead replica,
+/// degraded-partial on a dead shard, recovery after restart.
+#[test]
+fn coordinator_is_exact_fails_over_and_degrades() {
+    let dir = std::env::temp_dir().join(format!("ltls_shard_scatter_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let ds = SyntheticSpec::multiclass(500, 300, 20).seed(55).generate();
+    let cfg = TrainConfig { seed: 42, ..TrainConfig::default() };
+    let mut tr = Trainer::new(cfg, ds.n_features, ds.n_labels);
+    tr.fit(&ds, 3);
+    let model = tr.into_model();
+
+    // Slice into 2 shards; keep in-process copies for expected answers.
+    let plan = ShardPlan::new(&model.trellis, 2).unwrap();
+    let slice1 = slice_model(&model, &plan, 1).unwrap();
+    let mut paths = Vec::new();
+    let mut servers: Vec<Vec<NetServer>> = Vec::new();
+    for shard in 0..2u32 {
+        let sliced = slice_model(&model, &plan, shard).unwrap();
+        let p = dir.join(format!("m.shard{shard}.ltls"));
+        ltls::model::io::save_shard(&sliced, &p).unwrap();
+        // 2 replicas per shard, each loading the slice through the v4
+        // file path.
+        servers.push(vec![start_shard(&p), start_shard(&p)]);
+        paths.push(p);
+    }
+    let spec: Vec<Vec<String>> = servers
+        .iter()
+        .map(|reps| reps.iter().map(|s| s.addr().to_string()).collect())
+        .collect();
+    let scatter = ScatterModel::new(
+        spec,
+        ScatterConfig { n_features: Some(ds.n_features), ..ScatterConfig::default() },
+    )
+    .unwrap();
+    let stats = scatter.stats();
+    let coord = NetServer::start_scatter("127.0.0.1:0", scatter, net_cfg()).expect("coordinator");
+    let mut c = NetClient::connect(coord.addr(), IO_DEADLINE).expect("connect coordinator");
+
+    // Phase 1 — healthy: every pipelined reply is bit-identical to the
+    // single-process model and never partial.
+    let n1 = 120usize;
+    for i in 0..n1 {
+        c.send_line(&req_line(3, ds.row(i % ds.n_examples())), deadline()).unwrap();
+    }
+    for i in 0..n1 {
+        let (topk, partial) = parse_reply(&c.recv_line(deadline()).unwrap());
+        assert!(!partial, "healthy reply {i} marked partial");
+        assert_eq!(topk, model.topk(ds.row(i % ds.n_examples()), 3), "healthy reply {i}");
+    }
+    assert_eq!(stats.degraded(), 0);
+    assert!(stats.shard_requests(0) > 0 && stats.shard_requests(1) > 0);
+
+    // Phase 2 — kill one replica of shard 0 mid-traffic: zero of ≥200
+    // pipelined requests dropped, all exact, none partial.
+    let n2 = 200usize;
+    for i in 0..n2 / 2 {
+        c.send_line(&req_line(3, ds.row(i % ds.n_examples())), deadline()).unwrap();
+    }
+    let mut replies = Vec::with_capacity(n2);
+    for _ in 0..10 {
+        replies.push(c.recv_line(deadline()).unwrap());
+    }
+    servers[0].remove(0).shutdown();
+    for i in n2 / 2..n2 {
+        c.send_line(&req_line(3, ds.row(i % ds.n_examples())), deadline()).unwrap();
+    }
+    while replies.len() < n2 {
+        replies.push(c.recv_line(deadline()).unwrap());
+    }
+    for (i, line) in replies.iter().enumerate() {
+        let (topk, partial) = parse_reply(line);
+        assert!(!partial, "reply {i} partial despite a live replica");
+        assert_eq!(topk, model.topk(ds.row(i % ds.n_examples()), 3), "failover reply {i}");
+    }
+    assert_eq!(stats.degraded(), 0, "failover must not degrade");
+
+    // Phase 3 — kill the remaining replica of shard 0: replies degrade to
+    // `"partial":true` with exactly the surviving shard's top-k.
+    let dead_addr = servers[0][0].addr();
+    servers[0].remove(0).shutdown();
+    let n3 = 20usize;
+    for i in 0..n3 {
+        c.send_line(&req_line(3, ds.row(i % ds.n_examples())), deadline()).unwrap();
+    }
+    for i in 0..n3 {
+        let (topk, partial) = parse_reply(&c.recv_line(deadline()).unwrap());
+        assert!(partial, "reply {i} not partial with shard 0 fully down");
+        assert_eq!(topk, slice1.topk(ds.row(i % ds.n_examples()), 3), "degraded reply {i}");
+    }
+    assert!(stats.degraded() >= n3 as u64, "degraded counter = {}", stats.degraded());
+    assert!(stats.retries() > 0, "failover never recorded a retry");
+
+    // The degradation is scrape-visible on the coordinator's METRICS.
+    c.send_line("METRICS", deadline()).unwrap();
+    let mut scrape_text = String::new();
+    loop {
+        let line = c.recv_line(deadline()).unwrap();
+        if line == "# end" {
+            break;
+        }
+        scrape_text.push_str(&line);
+        scrape_text.push('\n');
+    }
+    assert!(scrape_text.contains("ltls_shard_degraded_total"), "{scrape_text}");
+    assert!(scrape_text.contains("ltls_shard_requests_total{shard=\"1\"}"), "{scrape_text}");
+    assert!(scrape_text.contains("ltls_shard_rtt_seconds_bucket"), "{scrape_text}");
+
+    // Phase 4 — restart a replica of shard 0 on its old address: the
+    // coordinator recovers to exact, non-partial answers by itself.
+    // (std listeners set SO_REUSEADDR on unix, so the rebind is
+    // immediate; retry briefly to ride out platform lag.)
+    let mut revived = None;
+    for _ in 0..50 {
+        match try_start_shard(&paths[0], &dead_addr.to_string()) {
+            Ok(s) => {
+                revived = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    let revived = revived.expect("rebind the dead replica's address");
+    servers[0].push(revived);
+    let n4 = 40usize;
+    for i in 0..n4 {
+        c.send_line(&req_line(3, ds.row(i % ds.n_examples())), deadline()).unwrap();
+    }
+    for i in 0..n4 {
+        let (topk, partial) = parse_reply(&c.recv_line(deadline()).unwrap());
+        assert!(!partial, "reply {i} still partial after the replica came back");
+        assert_eq!(topk, model.topk(ds.row(i % ds.n_examples()), 3), "recovered reply {i}");
+    }
+
+    drop(c);
+    coord.shutdown();
+    for reps in servers {
+        for s in reps {
+            s.shutdown();
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Contract 5: the k-way heap merge equals the brute-force global top-k —
+/// same (score desc, label asc) order — for k ∈ {1, 5, 64}, on random
+/// part sets with quantized scores so cross-part ties are common.
+#[test]
+fn merge_topk_matches_brute_force_global_topk() {
+    let mut rng = Rng::new(77);
+    let mut merged = Vec::new();
+    for trial in 0..60 {
+        let n_parts = 1 + rng.index(5);
+        // Globally distinct labels, dealt randomly across parts (shards
+        // own disjoint label sets).
+        let labels = rng.sample_distinct(5000, 1 + rng.index(90));
+        let mut parts: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n_parts];
+        for &l in &labels {
+            // Quantized scores: collisions across parts are the norm.
+            let score = (rng.index(8) as f32) * 0.5 - 2.0;
+            parts[rng.index(n_parts)].push((l, score));
+        }
+        // Each part arrives sorted by the merge key, as a shard's
+        // list-Viterbi output is.
+        for p in &mut parts {
+            p.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        }
+        let mut brute: Vec<(u32, f32)> = parts.iter().flatten().copied().collect();
+        brute.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        let refs: Vec<&[(u32, f32)]> = parts.iter().map(|p| p.as_slice()).collect();
+        for k in [1usize, 5, 64] {
+            merge_topk(&refs, k, &mut merged);
+            let want = &brute[..k.min(brute.len())];
+            assert_eq!(merged, want, "trial {trial} k={k} parts={n_parts}");
+        }
+    }
+}
+
+/// Shared body of contract 6: slice `full` into `n_shards`, then for many
+/// rows and k check that merging the per-shard top-k lists reproduces the
+/// full model's top-k bit-for-bit.
+fn check_slices<T: Topology, S: WeightStore>(
+    full: &TrainedModel<T, S>,
+    ds: &Dataset,
+    n_shards: u32,
+) {
+    let plan = ShardPlan::new(&full.trellis, n_shards).unwrap();
+    let slices: Vec<_> = (0..n_shards).map(|s| slice_model(full, &plan, s).unwrap()).collect();
+    let mut merged = Vec::new();
+    for i in 0..60 {
+        let row = ds.row(i % ds.n_examples());
+        for k in [1usize, 5] {
+            let parts: Vec<Vec<(u32, f32)>> = slices.iter().map(|m| m.topk(row, k)).collect();
+            let refs: Vec<&[(u32, f32)]> = parts.iter().map(|p| p.as_slice()).collect();
+            merge_topk(&refs, k, &mut merged);
+            assert_eq!(
+                merged,
+                full.topk(row, k),
+                "row {i} k={k} n_shards={n_shards} backend={}",
+                full.model.backend().name()
+            );
+        }
+    }
+}
+
+/// Contract 6: slicing parity across backends and widths, in-process.
+#[test]
+fn shard_slices_merge_back_to_the_full_topk_across_backends_and_widths() {
+    let ds = SyntheticSpec::multiclass(400, 250, 24).seed(91).generate();
+
+    // Dense, width 2 — plus its q8 quantization.
+    let mut tr = Trainer::new(TrainConfig { seed: 3, ..TrainConfig::default() }, ds.n_features, ds.n_labels);
+    tr.fit(&ds, 3);
+    let dense2 = tr.into_model();
+    check_slices(&dense2, &ds, 2);
+    check_slices(&dense2, &ds, 3);
+    check_slices(&dense2.quantized(), &ds, 2);
+
+    // Hashed, width 2.
+    let cfg = TrainConfig { seed: 4, hash_bits: 9, ..TrainConfig::default() };
+    let mut tr = Trainer::<Trellis, HashedStore>::with_topology(cfg, ds.n_features, ds.n_labels)
+        .unwrap();
+    tr.fit(&ds, 3);
+    check_slices(&tr.into_model(), &ds, 2);
+
+    // Dense, width 5 (W-LTLS wide trellis).
+    let cfg = TrainConfig { seed: 5, width: 5, ..TrainConfig::default() };
+    let mut tr = Trainer::<WideTrellis, DenseStore>::with_topology(cfg, ds.n_features, ds.n_labels)
+        .unwrap();
+    tr.fit(&ds, 3);
+    check_slices(&tr.into_model(), &ds, 2);
+}

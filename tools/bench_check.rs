@@ -50,8 +50,9 @@ use std::collections::BTreeMap;
 /// connection, 1 = poll(2) event loop; `clients` is the concurrent
 /// connection count of a sweep row. `trace` discriminates observability
 /// rows: 0 = request tracing disabled, 1 = the default sampling plus the
-/// slow-request ring.
-const DISCRIMINATORS: [&str; 11] = [
+/// slow-request ring. `shards` discriminates scatter-gather rows: the
+/// number of label-space shards the coordinator fans out over.
+const DISCRIMINATORS: [&str; 12] = [
     "workers",
     "threads",
     "batch",
@@ -63,6 +64,7 @@ const DISCRIMINATORS: [&str; 11] = [
     "transport",
     "clients",
     "trace",
+    "shards",
 ];
 
 fn main() {
@@ -384,6 +386,24 @@ trailing noise
         assert_eq!(check_against_baseline(base, &c).unwrap().failures, 0);
         let mut worse = c.clone();
         worse.insert("serve_network.obs_overhead_ratio".into(), 0.8);
+        assert_eq!(check_against_baseline(base, &worse).unwrap().failures, 1);
+    }
+
+    #[test]
+    fn shard_rows_discriminate_scatter_gather_fanout() {
+        let c = current_from(
+            "json: {\"bench\":\"serve_network\",\"shard_scatter_ratio\":1.05,\"results\":[{\"shards\":1,\"req_per_s\":8000.0},{\"shards\":2,\"req_per_s\":8400.0},{\"shards\":4,\"req_per_s\":8300.0}]}\n",
+        );
+        assert_eq!(c["serve_network.shard_scatter_ratio"], 1.05);
+        assert_eq!(c["serve_network.shards=1.req_per_s"], 8000.0);
+        assert_eq!(c["serve_network.shards=2.req_per_s"], 8400.0);
+        assert_eq!(c["serve_network.shards=4.req_per_s"], 8300.0);
+        // The fan-out gate: 2-shard scatter throughput near the 1-shard
+        // proxy throughput passes; a fan-out collapse fails.
+        let base = r#"{"metrics":{"serve_network.shard_scatter_ratio":{"baseline":0.75}}}"#;
+        assert_eq!(check_against_baseline(base, &c).unwrap().failures, 0);
+        let mut worse = c.clone();
+        worse.insert("serve_network.shard_scatter_ratio".into(), 0.3);
         assert_eq!(check_against_baseline(base, &worse).unwrap().failures, 1);
     }
 

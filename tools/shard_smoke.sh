@@ -1,0 +1,140 @@
+#!/usr/bin/env bash
+# Multi-process scatter-gather smoke (see docs/ARCHITECTURE.md §Sharded
+# serving): train a tiny model, slice it into 2 label-space shards
+# (`ltls shard`), serve each shard from 2 replica processes
+# (`ltls serve --listen`), fan out through `ltls coordinator`, and then
+# exercise the failure ladder end-to-end:
+#
+#   1. 200 pipelined requests against the healthy 2x2 tier — every reply
+#      is a full top-k, no `"partial":true`, even though one replica of
+#      shard 0 is killed mid-traffic (failover must drop nothing);
+#   2. kill the remaining shard-0 replica — replies degrade to
+#      `"partial":true` (shard 1's candidates only) instead of erroring;
+#   3. restart a shard-0 replica — full replies resume;
+#   4. METRICS shows the per-shard counters and a nonzero degraded count;
+#   5. SHUTDOWN drains the coordinator and every shard server cleanly.
+#
+# Usage: tools/shard_smoke.sh [path-to-ltls-binary]
+# (defaults to target/release/ltls, as built by `cargo build --release`).
+set -euo pipefail
+
+LTLS="${1:-${LTLS:-target/release/ltls}}"
+DIR="$(mktemp -d /tmp/ltls-shard-smoke.XXXXXX)"
+trap 'kill $(jobs -p) 2>/dev/null || true; rm -rf "$DIR"' EXIT
+
+COORD_PORT=8100
+S0A=8101 S0B=8102 S1A=8103 S1B=8104
+
+wait_port() {
+  for _ in $(seq 1 100); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/$1") 2>/dev/null; then return 0; fi
+    sleep 0.2
+  done
+  echo "port $1 never came up" >&2
+  return 1
+}
+
+echo "== train + shard =="
+"$LTLS" train --dataset synthetic --epochs 1 --save "$DIR/model.ltls"
+"$LTLS" shard --model "$DIR/model.ltls" --shards 2 | tee "$DIR/shard.txt"
+grep -q "shard 0/2:" "$DIR/shard.txt"
+test -f "$DIR/model.shard0.ltls"
+test -f "$DIR/model.shard1.ltls"
+
+echo "== start 2x2 shard tier + coordinator =="
+"$LTLS" serve --listen 127.0.0.1:$S0A --model "$DIR/model.shard0.ltls" > "$DIR/s0a.log" 2>&1 &
+P0A=$!
+"$LTLS" serve --listen 127.0.0.1:$S0B --model "$DIR/model.shard0.ltls" > "$DIR/s0b.log" 2>&1 &
+P0B=$!
+"$LTLS" serve --listen 127.0.0.1:$S1A --model "$DIR/model.shard1.ltls" > "$DIR/s1a.log" 2>&1 &
+P1A=$!
+"$LTLS" serve --listen 127.0.0.1:$S1B --model "$DIR/model.shard1.ltls" > "$DIR/s1b.log" 2>&1 &
+P1B=$!
+for p in $S0A $S0B $S1A $S1B; do wait_port "$p"; done
+
+"$LTLS" coordinator --listen 127.0.0.1:$COORD_PORT \
+  --shards "127.0.0.1:$S0A,127.0.0.1:$S0B;127.0.0.1:$S1A,127.0.0.1:$S1B" \
+  > "$DIR/coord.log" 2>&1 &
+COORD_PID=$!
+wait_port $COORD_PORT
+
+# One persistent client connection for the whole ladder: the coordinator
+# must survive every phase on the same socket.
+exec 4<>/dev/tcp/127.0.0.1/$COORD_PORT
+
+# Pipeline a burst of $1 requests, then read the replies back into $2.
+burst() {
+  local n=$1 out=$2 i line
+  for ((i = 0; i < n; i++)); do echo "3 $((i % 7)):1.0 $((5 + i % 11)):0.5" >&4; done
+  for ((i = 0; i < n; i++)); do
+    read -r line <&4
+    echo "$line" >>"$out"
+  done
+}
+
+echo "== 200 pipelined requests, one replica killed mid-traffic =="
+: >"$DIR/replies.txt"
+burst 50 "$DIR/replies.txt"
+kill "$P0A"
+wait "$P0A" 2>/dev/null || true
+burst 50 "$DIR/replies.txt"
+burst 50 "$DIR/replies.txt"
+burst 50 "$DIR/replies.txt"
+[ "$(grep -c topk "$DIR/replies.txt")" -eq 200 ]
+! grep -q '"partial":true' "$DIR/replies.txt"
+echo "ok: 200/200 full replies across the replica kill"
+
+echo "== kill the last shard-0 replica: replies degrade, not error =="
+kill "$P0B"
+wait "$P0B" 2>/dev/null || true
+: >"$DIR/degraded.txt"
+for _ in $(seq 1 10); do
+  echo "3 0:1.0 5:0.5" >&4
+  read -r line <&4
+  echo "$line" >>"$DIR/degraded.txt"
+done
+[ "$(grep -c topk "$DIR/degraded.txt")" -eq 10 ]
+grep -q '"partial":true' "$DIR/degraded.txt"
+echo "ok: degraded replies carry \"partial\":true"
+
+echo "== metrics: per-shard counters + degraded count =="
+echo "METRICS" >&4
+while read -r line <&4; do [ "$line" = "# end" ] && break; echo "$line"; done >"$DIR/metrics.txt"
+grep -q 'ltls_shard_requests_total{shard="0"}' "$DIR/metrics.txt"
+grep -q 'ltls_shard_requests_total{shard="1"}' "$DIR/metrics.txt"
+grep -q 'ltls_shard_rtt_seconds_bucket' "$DIR/metrics.txt"
+deg=$(grep '^ltls_shard_degraded_total ' "$DIR/metrics.txt" | awk '{print $2}')
+[ "$deg" -ge 1 ]
+
+echo "== restart a shard-0 replica: full replies resume =="
+"$LTLS" serve --listen 127.0.0.1:$S0A --model "$DIR/model.shard0.ltls" > "$DIR/s0a2.log" 2>&1 &
+P0A=$!
+wait_port $S0A
+recovered=0
+for _ in $(seq 1 50); do
+  echo "3 0:1.0 5:0.5" >&4
+  read -r line <&4
+  if ! echo "$line" | grep -q '"partial":true'; then
+    recovered=1
+    break
+  fi
+  sleep 0.1
+done
+[ "$recovered" -eq 1 ]
+echo "ok: recovery observed after replica restart"
+
+echo "== clean drain =="
+echo "SHUTDOWN" >&4
+read -r bye <&4
+echo "$bye" | grep -q draining
+exec 4>&-
+wait "$COORD_PID"
+grep -q "drained cleanly" "$DIR/coord.log"
+for p in $S0A $S1A $S1B; do
+  exec 5<>"/dev/tcp/127.0.0.1/$p"
+  echo "SHUTDOWN" >&5
+  read -r bye <&5
+  exec 5>&-
+done
+wait "$P0A" "$P1A" "$P1B"
+echo "shard_smoke: all phases passed"
