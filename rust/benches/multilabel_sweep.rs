@@ -1,0 +1,177 @@
+//! Multilabel objective sweep: LTLS with the union-of-gold-paths loss
+//! (with and without PLT conditional weighting) against the same trellis
+//! trained single-gold-path, and against the equal-memory baselines the
+//! paper tables use — NaiveTopK restricted to E = #edges labels (the same
+//! parameter count as the dense LTLS model), PLT and FastXML.
+//!
+//! "Singleton-degenerate" (the `multilabel=0` row) trains the multilabel
+//! objective on the same rows truncated to their first label — the run a
+//! single-gold-path stack is forced into on multilabel data. The gap to
+//! the full-label-set run (`p1_gain_ml_vs_single`) is the payoff of the
+//! path-set refactor and is gated in BENCH_BASELINE.json; seeds and the
+//! training pipeline are deterministic, so the gain is machine-stable.
+//!
+//! Prints a human table and a `json:` line for `tools/bench_check.rs`
+//! (`multilabel` is a result discriminator: 0 = singleton-degenerate,
+//! 1 = union loss, 2 = union loss + PLT weighting). `BENCH_FAST=1` trims
+//! sizes and epochs for CI smoke runs.
+//!
+//! Hard-asserted acceptance shape: multilabel LTLS P@1 strictly beats
+//! both the singleton-degenerate run and equal-memory NaiveTopK.
+
+use ltls::baselines::fastxml::FastXmlConfig;
+use ltls::baselines::{FastXml, NaiveTopK, Plt};
+use ltls::data::synthetic::{SyntheticSpec, TeacherKind};
+use ltls::data::Dataset;
+use ltls::eval::{evaluate_with, Predictor, Propensities, XcMetrics};
+use ltls::graph::Trellis;
+use ltls::train::{Objective, TrainConfig, Trainer};
+use ltls::util::json::Json;
+use ltls::util::timer::Timer;
+
+/// Truncate every label set to its first (lowest-id) label.
+fn singleton_degenerate(ds: &Dataset) -> Dataset {
+    let mut out = ds.clone();
+    for ls in &mut out.labels {
+        ls.truncate(1);
+    }
+    out.detect_multiclass();
+    out
+}
+
+fn ltls_row(
+    train: &Dataset,
+    test: &Dataset,
+    props: &Propensities,
+    objective: Objective,
+    epochs: usize,
+) -> (XcMetrics, f64, usize) {
+    let cfg = TrainConfig { objective, ..TrainConfig::default() };
+    let mut tr = Trainer::new(cfg, train.n_features, train.n_labels);
+    let timer = Timer::new();
+    tr.fit(train, epochs);
+    let train_s = timer.elapsed_s();
+    let model = tr.into_model();
+    let bytes = model.bytes();
+    (evaluate_with(&model, test, &[1, 3, 5], Some(props)), train_s, bytes)
+}
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let (n, epochs) = if fast { (4_000, 4) } else { (12_000, 8) };
+    let (c, d, k) = (128usize, 1_500usize, 3usize);
+
+    let ds = SyntheticSpec::multilabel(n, d, c, k)
+        .teacher(TeacherKind::Cluster)
+        .seed(47)
+        .generate();
+    let (train, test) = ltls::data::split::random_split(&ds, 0.2, 11);
+    let props = Propensities::from_train(&train);
+    let e = Trellis::new(c as u64).num_edges();
+
+    println!(
+        "== multilabel sweep (C={c}, D={d}, {}/row, {} train / {} test, {epochs} epochs, E={e}) ==",
+        k,
+        train.n_examples(),
+        test.n_examples()
+    );
+    println!(
+        "{:<26}{:>8}{:>8}{:>8}{:>8}{:>10}{:>12}",
+        "method", "P@1", "P@3", "nDCG@3", "PSP@3", "MB", "train s"
+    );
+    let show = |name: &str, m: &XcMetrics, bytes: usize, train_s: f64| {
+        println!(
+            "{name:<26}{:>8.4}{:>8.4}{:>8.4}{:>8.4}{:>10.2}{:>12.2}",
+            m.precision[0],
+            m.precision[1],
+            m.ndcg[1],
+            m.psp.as_ref().map(|p| p[1]).unwrap_or(0.0),
+            bytes as f64 / 1e6,
+            train_s
+        );
+    };
+
+    // LTLS rows: singleton-degenerate (0), union loss (1), union+PLT (2).
+    let single_train = singleton_degenerate(&train);
+    let (m_single, s_single, b_single) =
+        ltls_row(&single_train, &test, &props, Objective::Multilabel { plt_weight: false }, epochs);
+    show("LTLS single-gold-path", &m_single, b_single, s_single);
+    let (m_ml, s_ml, b_ml) =
+        ltls_row(&train, &test, &props, Objective::Multilabel { plt_weight: false }, epochs);
+    show("LTLS multilabel", &m_ml, b_ml, s_ml);
+    let (m_plt, s_plt, b_plt) =
+        ltls_row(&train, &test, &props, Objective::Multilabel { plt_weight: true }, epochs);
+    show("LTLS multilabel+plt", &m_plt, b_plt, s_plt);
+
+    // Equal-memory NaiveTopK: E one-vs-all heads ≈ the dense E×D model.
+    let timer = Timer::new();
+    let naive = NaiveTopK::train(&train, e, epochs.min(3), &[1e-5, 1e-3]);
+    let s_naive = timer.elapsed_s();
+    let m_naive = evaluate_with(&naive, &test, &[1, 3, 5], Some(&props));
+    show("NaiveTopK (top-E LR)", &m_naive, naive.model_bytes(), s_naive);
+
+    // Reference baselines (not memory-matched): PLT tree and FastXML.
+    let timer = Timer::new();
+    let plt = Plt::train(&train, epochs.min(3), 0.5, 13);
+    let s_pltb = timer.elapsed_s();
+    let m_pltb = evaluate_with(&plt, &test, &[1, 3, 5], Some(&props));
+    show("PLT (tree baseline)", &m_pltb, plt.model_bytes(), s_pltb);
+    let timer = Timer::new();
+    let fx_cfg = FastXmlConfig { n_trees: if fast { 4 } else { 8 }, ..FastXmlConfig::default() };
+    let fx = FastXml::train(&train, &fx_cfg);
+    let s_fx = timer.elapsed_s();
+    let m_fx = evaluate_with(&fx, &test, &[1, 3, 5], Some(&props));
+    show("FastXML", &m_fx, fx.model_bytes(), s_fx);
+
+    let gain_single = m_ml.precision[0] - m_single.precision[0];
+    let gain_naive = m_ml.precision[0] - m_naive.precision[0];
+    println!("\nP@1 gain, multilabel over single-gold-path: {gain_single:+.4}");
+    println!("P@1 gain, multilabel over equal-memory NaiveTopK: {gain_naive:+.4}");
+
+    // The acceptance shape of the path-set refactor.
+    assert!(
+        gain_single > 0.0,
+        "union loss {} must beat the singleton-degenerate run {}",
+        m_ml.precision[0],
+        m_single.precision[0]
+    );
+    assert!(
+        gain_naive > 0.0,
+        "LTLS multilabel {} must beat equal-memory NaiveTopK {} (E={e} labels)",
+        m_ml.precision[0],
+        m_naive.precision[0]
+    );
+
+    let row = |tag: usize, m: &XcMetrics, bytes: usize, train_s: f64| {
+        Json::obj(vec![
+            ("multilabel", Json::from(tag)),
+            ("p1", Json::Num(m.precision[0])),
+            ("p3", Json::Num(m.precision[1])),
+            ("ndcg3", Json::Num(m.ndcg[1])),
+            ("recall3", Json::Num(m.recall[1])),
+            ("psp3", Json::Num(m.psp.as_ref().map(|p| p[1]).unwrap_or(0.0))),
+            ("model_bytes", Json::from(bytes)),
+            ("train_s", Json::Num(train_s)),
+        ])
+    };
+    let json = Json::obj(vec![
+        ("bench", Json::from("multilabel_sweep")),
+        ("classes", Json::from(c)),
+        ("edges", Json::from(e)),
+        ("epochs", Json::from(epochs)),
+        ("p1_gain_ml_vs_single", Json::Num(gain_single)),
+        ("p1_gain_ml_vs_naive", Json::Num(gain_naive)),
+        ("naive_p1", Json::Num(m_naive.precision[0])),
+        ("plt_baseline_p1", Json::Num(m_pltb.precision[0])),
+        ("fastxml_p1", Json::Num(m_fx.precision[0])),
+        (
+            "results",
+            Json::Arr(vec![
+                row(0, &m_single, b_single, s_single),
+                row(1, &m_ml, b_ml, s_ml),
+                row(2, &m_plt, b_plt, s_plt),
+            ]),
+        ),
+    ]);
+    println!("json: {}", json.dump());
+}

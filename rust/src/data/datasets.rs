@@ -227,22 +227,25 @@ pub fn all_analogs() -> Vec<AnalogSpec> {
     v
 }
 
-/// Look up an analog by paper name (case-insensitive). The extra name
-/// `"synthetic"` resolves to a small generic analog used by CI smoke runs
-/// (`ltls train --dataset synthetic --epochs 1`); it is not part of the
-/// paper registry and does not appear in [`all_analogs`].
+/// Look up an analog by paper name (case-insensitive). The extra names
+/// `"synthetic"` (multiclass) and `"synthetic-ml"` (its multilabel twin,
+/// ~3 labels per example over the same teacher) resolve to small generic
+/// analogs used by CI smoke runs
+/// (`ltls train --dataset synthetic --epochs 1`); they are not part of
+/// the paper registry and do not appear in [`all_analogs`].
 pub fn by_name(name: &str) -> Option<AnalogSpec> {
-    if name.eq_ignore_ascii_case("synthetic") {
+    if name.eq_ignore_ascii_case("synthetic") || name.eq_ignore_ascii_case("synthetic-ml") {
+        let multilabel = name.eq_ignore_ascii_case("synthetic-ml");
         return Some(AnalogSpec {
-            paper_name: "synthetic",
+            paper_name: if multilabel { "synthetic-ml" } else { "synthetic" },
             paper_n: 4_000,
             paper_d: 1_000,
             paper_c: 64,
             n: 4_000,
             d: 1_000,
             density: 0.01,
-            multiclass: true,
-            labels_per_example: 1,
+            multiclass: !multilabel,
+            labels_per_example: if multilabel { 3 } else { 1 },
             teacher: TeacherKind::Cluster,
             noise: 0.02,
             skew: 0.0,
@@ -309,5 +312,18 @@ mod tests {
         let (train, test) = a.generate(0.1, 1);
         assert!(train.validate().is_ok() && test.n_examples() > 0);
         assert!(all_analogs().iter().all(|x| x.paper_name != "synthetic"));
+    }
+
+    /// The multilabel smoke alias: same shape, genuinely multi-label rows.
+    #[test]
+    fn synthetic_ml_smoke_alias() {
+        let a = by_name("synthetic-ml").unwrap();
+        assert!(!a.multiclass && a.labels_per_example > 1);
+        let (train, test) = a.generate(0.1, 1);
+        assert!(train.validate().is_ok() && test.n_examples() > 0);
+        assert!(!train.multiclass, "label sets must survive generation");
+        let multi = (0..train.n_examples()).filter(|&i| train.labels_of(i).len() > 1).count();
+        assert!(multi * 2 > train.n_examples(), "most rows carry >1 label: {multi}");
+        assert!(all_analogs().iter().all(|x| x.paper_name != "synthetic-ml"));
     }
 }

@@ -248,6 +248,26 @@ mod tests {
         assert_eq!(ds2.labels_of(0), &[] as &[u32]);
     }
 
+    /// Full label *sets* survive dump→parse — nothing collapses a
+    /// multi-label row to its first label. Duplicates in the input are
+    /// deduped once at parse time and the header's C survives even when
+    /// no row touches the top label ids.
+    #[test]
+    fn dump_parse_roundtrip_preserves_full_label_sets() {
+        let text = "3 6 40\n7,2,19,2 0:1 3:0.5\n4 1:1\n, 2:2\n";
+        let ds = parse("mls", text.as_bytes()).unwrap();
+        assert!(!ds.multiclass);
+        assert_eq!(ds.labels_of(0), &[2, 7, 19], "sorted + deduped");
+        assert_eq!(ds.n_labels, 40, "header C wins over max label seen");
+        let dumped = dump(&ds);
+        let again = parse("mls2", dumped.as_bytes()).unwrap();
+        assert_eq!(again.n_labels, 40);
+        assert!(!again.multiclass);
+        for i in 0..ds.n_examples() {
+            assert_eq!(again.labels_of(i), ds.labels_of(i), "row {i}");
+        }
+    }
+
     /// The header's example count is validated against the rows read.
     #[test]
     fn header_row_count_mismatch_is_an_error() {

@@ -36,4 +36,4 @@
 
 pub mod workspace;
 
-pub use workspace::{DecodeWorkspace, PredictScratch, TrainScratch};
+pub use workspace::{DecodeWorkspace, PredictScratch, StepScratch, TrainScratch};

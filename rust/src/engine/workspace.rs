@@ -118,8 +118,34 @@ impl PredictScratch {
     }
 }
 
+/// Buffers owned by the shared objective kernel
+/// ([`crate::train::objective::objective_step`]): the loss decode state
+/// plus the symmetric-difference update sets. Split out of
+/// [`TrainScratch`] so the kernel can borrow them as one unit while the
+/// caller keeps the edge-score buffers (whose slices feed the kernel as
+/// plain `&[f32]`) borrowed separately.
+#[derive(Clone, Debug, Default)]
+pub struct StepScratch {
+    /// Decoder buffers for the loss's list-Viterbi.
+    pub ws: DecodeWorkspace,
+    /// Decoded (path, score) list used by
+    /// [`crate::loss::separation_loss_ws`] /
+    /// [`crate::loss::union_separation_ws`].
+    pub paths: Vec<Scored>,
+    /// Full edge sets of the current loss pair (positive / negative path),
+    /// filled by [`crate::graph::Topology::edges_of_label_into`].
+    pub pos_edges: Vec<u32>,
+    pub neg_edges: Vec<u32>,
+    /// Symmetric-difference edge sets of the current loss pair.
+    pub pos_only: Vec<u32>,
+    pub neg_only: Vec<u32>,
+    /// Per-positive `(path, hinged margin)` list of the multilabel
+    /// union-of-gold-paths objective (empty on the multiclass path).
+    pub pos_margins: Vec<(u64, f32)>,
+}
+
 /// A full per-worker *training* scratchpad: everything one SGD worker needs
-/// to run `x → edge scores → separation loss → sparse update` (and the
+/// to run `x → edge scores → objective loss → sparse update` (and the
 /// mini-batch variant) with zero steady-state allocation. One of these is
 /// owned by the serial [`crate::train::Trainer`] and by every worker of the
 /// Hogwild [`crate::train::ParallelTrainer`].
@@ -127,25 +153,15 @@ impl PredictScratch {
 pub struct TrainScratch {
     /// Edge-score vector `h = Wx + b` for the current example.
     pub h: Vec<f32>,
-    /// Decoder buffers for the loss's list-Viterbi.
-    pub ws: DecodeWorkspace,
-    /// Decoded (path, score) list used by
-    /// [`crate::loss::separation_loss_ws`].
-    pub paths: Vec<Scored>,
     /// Positive paths of the current example (labels resolved via the
     /// assignment table).
     pub pos: Vec<u64>,
-    /// Full edge sets of the loss pair (positive / negative path), filled
-    /// by [`crate::graph::Topology::edges_of_label_into`].
-    pub pos_edges: Vec<u32>,
-    pub neg_edges: Vec<u32>,
-    /// Symmetric-difference edge sets of the loss pair.
-    pub pos_only: Vec<u32>,
-    pub neg_only: Vec<u32>,
     /// Batched edge scores (`B × E`, row-major) for the mini-batch path.
     pub batch_h: Vec<f32>,
     /// Scoring-kernel scratch (gather triples + q8 i32 accumulator).
     pub score: ScoreScratch,
+    /// The objective kernel's loss/update buffers.
+    pub step: StepScratch,
 }
 
 impl TrainScratch {
@@ -179,8 +195,9 @@ mod tests {
     fn train_scratch_constructs_empty() {
         let s = TrainScratch::new();
         assert!(s.h.is_empty() && s.pos.is_empty() && s.batch_h.is_empty());
-        assert!(s.pos_only.is_empty() && s.neg_only.is_empty());
-        assert!(s.pos_edges.is_empty() && s.neg_edges.is_empty());
+        assert!(s.step.pos_only.is_empty() && s.step.neg_only.is_empty());
+        assert!(s.step.pos_edges.is_empty() && s.step.neg_edges.is_empty());
+        assert!(s.step.pos_margins.is_empty());
     }
 
     #[test]

@@ -1,10 +1,18 @@
 //! The standard extreme-classification metric suite beyond precision@1:
-//! precision@k for several k, nDCG@k, and label-space coverage — the
-//! metrics the XMLC repository reports for every method, so results from
-//! this library are directly comparable.
+//! precision@k, nDCG@k, recall@k, propensity-scored precision@k and
+//! label-space coverage — the metrics the XMLC repository reports for
+//! every method, so results from this library are directly comparable.
+//!
+//! PSP@k follows Jain et al. (KDD 2016): a label with training frequency
+//! `N_l` gets inverse propensity `1/p_l = 1 + C·(N_l + B)^(−A)` with
+//! A = 0.55, B = 1.5, C = (ln N − 1)·(B + 1)^A, and PSP@k is the
+//! ratio-of-sums `Σ_i psDCG_i / Σ_i ideal_i` so that rare (high
+//! inverse-propensity) labels dominate the score — the metric the
+//! multilabel sweep uses to show head-only baselines for what they are.
 
 use super::precision::Predictor;
 use crate::data::Dataset;
+use crate::engine::PredictScratch;
 
 /// Full metric sweep at the given cutoffs.
 #[derive(Clone, Debug)]
@@ -14,20 +22,89 @@ pub struct XcMetrics {
     pub precision: Vec<f64>,
     /// nDCG@k per cutoff.
     pub ndcg: Vec<f64>,
+    /// recall@k per cutoff: |top_k ∩ Y| / |Y| — the multilabel headline
+    /// (for singleton truth it equals P@1 at k = 1 and saturates above).
+    pub recall: Vec<f64>,
+    /// Propensity-scored precision@k per cutoff, present when the caller
+    /// supplied train-set [`Propensities`].
+    pub psp: Option<Vec<f64>>,
     /// Fraction of distinct labels ever predicted at the largest cutoff —
     /// a long-tail health diagnostic (degenerate head-only models score
     /// low here).
     pub coverage: f64,
 }
 
-/// Compute precision@k and nDCG@k for each cutoff in one pass.
+/// Per-label inverse propensities (Jain et al. 2016), estimated from the
+/// *training* split's label frequencies.
+#[derive(Clone, Debug)]
+pub struct Propensities {
+    /// `1/p_l` per label; ≥ 1, larger for rarer labels.
+    pub inv: Vec<f64>,
+}
+
+impl Propensities {
+    /// Estimate from a training set with the canonical XMLC constants
+    /// A = 0.55, B = 1.5 (the values the repository uses for every dataset
+    /// except Amazon/Wikipedia variants).
+    pub fn from_train(ds: &Dataset) -> Propensities {
+        Propensities::with_constants(ds, 0.55, 1.5)
+    }
+
+    /// Estimate with explicit A/B constants.
+    pub fn with_constants(ds: &Dataset, a: f64, b: f64) -> Propensities {
+        let n = ds.n_examples().max(1) as f64;
+        let c = (n.ln() - 1.0) * (b + 1.0).powf(a);
+        let inv = ds
+            .label_frequencies()
+            .iter()
+            .map(|&nl| 1.0 + c * (nl as f64 + b).powf(-a))
+            .collect();
+        Propensities { inv }
+    }
+
+    /// `1/p_l` for a label (1.0 — the uninformative weight — when the
+    /// label id is outside the training label space).
+    #[inline]
+    pub fn inv_of(&self, l: u32) -> f64 {
+        self.inv.get(l as usize).copied().unwrap_or(1.0)
+    }
+}
+
+/// Compute precision@k, nDCG@k and recall@k for each cutoff in one pass
+/// (PSP@k omitted; see [`evaluate_with`]).
 pub fn evaluate<P: Predictor + ?Sized>(model: &P, ds: &Dataset, cutoffs: &[usize]) -> XcMetrics {
+    evaluate_with(model, ds, cutoffs, None)
+}
+
+/// Compute precision@k, nDCG@k, recall@k — and PSP@k when train-set
+/// `propensities` are supplied — for each cutoff in one pass.
+///
+/// Predictions run through the engine path (`topk_into` with one reused
+/// [`PredictScratch`] and output buffer — what the serving workers
+/// execute); `topk_into` is contractually bit-identical to `topk`, so the
+/// numbers match the allocating path exactly. Examples with an empty
+/// label set are skipped but the denominator stays `n` (the repository's
+/// convention), except PSP@k, which is a ratio of sums over the non-empty
+/// rows only.
+pub fn evaluate_with<P: Predictor + ?Sized>(
+    model: &P,
+    ds: &Dataset,
+    cutoffs: &[usize],
+    propensities: Option<&Propensities>,
+) -> XcMetrics {
     assert!(!cutoffs.is_empty());
     let kmax = *cutoffs.iter().max().unwrap();
     let n = ds.n_examples();
     let mut precision = vec![0.0f64; cutoffs.len()];
     let mut ndcg = vec![0.0f64; cutoffs.len()];
+    let mut recall = vec![0.0f64; cutoffs.len()];
+    // PSP ratio-of-sums accumulators (numerator, denominator) per cutoff.
+    let mut psp_num = vec![0.0f64; cutoffs.len()];
+    let mut psp_den = vec![0.0f64; cutoffs.len()];
     let mut predicted = std::collections::HashSet::new();
+    let mut scratch = PredictScratch::new();
+    let mut top: Vec<(u32, f32)> = Vec::new();
+    let mut truth_inv: Vec<f64> = Vec::new();
 
     // Precompute discount table 1/log2(i+2).
     let disc: Vec<f64> = (0..kmax).map(|i| 1.0 / ((i + 2) as f64).log2()).collect();
@@ -37,13 +114,21 @@ pub fn evaluate<P: Predictor + ?Sized>(model: &P, ds: &Dataset, cutoffs: &[usize
         if truth.is_empty() {
             continue;
         }
-        let top = model.topk(ds.row(i), kmax);
+        model.topk_into(ds.row(i), kmax, &mut scratch, &mut top);
         for &l in top.iter().map(|(l, _)| l) {
             predicted.insert(l);
+        }
+        if let Some(p) = propensities {
+            // k largest inverse propensities among the true labels — the
+            // best any ranking could collect (the PSP@k ideal).
+            truth_inv.clear();
+            truth_inv.extend(truth.iter().map(|&l| p.inv_of(l)));
+            truth_inv.sort_unstable_by(|x, y| y.total_cmp(x));
         }
         for (ci, &k) in cutoffs.iter().enumerate() {
             let hits = top.iter().take(k).filter(|(l, _)| truth.contains(l)).count();
             precision[ci] += hits as f64 / k as f64;
+            recall[ci] += hits as f64 / truth.len() as f64;
             // nDCG@k: DCG over the ranked list / ideal DCG.
             let dcg: f64 = top
                 .iter()
@@ -54,16 +139,35 @@ pub fn evaluate<P: Predictor + ?Sized>(model: &P, ds: &Dataset, cutoffs: &[usize
                 .sum();
             let ideal: f64 = disc.iter().take(k.min(truth.len())).sum();
             ndcg[ci] += if ideal > 0.0 { dcg / ideal } else { 0.0 };
+            if let Some(p) = propensities {
+                psp_num[ci] += top
+                    .iter()
+                    .take(k)
+                    .filter(|(l, _)| truth.contains(l))
+                    .map(|&(l, _)| p.inv_of(l))
+                    .sum::<f64>()
+                    / k as f64;
+                psp_den[ci] += truth_inv.iter().take(k).sum::<f64>() / k as f64;
+            }
         }
     }
     let denom = n.max(1) as f64;
-    for v in precision.iter_mut().chain(ndcg.iter_mut()) {
+    for v in precision.iter_mut().chain(ndcg.iter_mut()).chain(recall.iter_mut()) {
         *v /= denom;
     }
+    let psp = propensities.map(|_| {
+        psp_num
+            .iter()
+            .zip(&psp_den)
+            .map(|(&num, &den)| if den > 0.0 { num / den } else { 0.0 })
+            .collect()
+    });
     XcMetrics {
         cutoffs: cutoffs.to_vec(),
         precision,
         ndcg,
+        recall,
+        psp,
         coverage: predicted.len() as f64 / ds.n_labels.max(1) as f64,
     }
 }
@@ -71,7 +175,15 @@ pub fn evaluate<P: Predictor + ?Sized>(model: &P, ds: &Dataset, cutoffs: &[usize
 impl std::fmt::Display for XcMetrics {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         for (i, &k) in self.cutoffs.iter().enumerate() {
-            write!(f, "P@{k}={:.4} nDCG@{k}={:.4}  ", self.precision[i], self.ndcg[i])?;
+            write!(
+                f,
+                "P@{k}={:.4} nDCG@{k}={:.4} R@{k}={:.4}",
+                self.precision[i], self.ndcg[i], self.recall[i]
+            )?;
+            if let Some(psp) = &self.psp {
+                write!(f, " PSP@{k}={:.4}", psp[i])?;
+            }
+            write!(f, "  ")?;
         }
         write!(f, "coverage={:.3}", self.coverage)
     }
@@ -154,6 +266,124 @@ mod tests {
         let m = evaluate(&AtRank(1, Default::default()), &ds, &[3]);
         // Predicts labels {0, 1000, 1002} every time → 3 / 2000.
         assert!((m.coverage - 3.0 / 2000.0).abs() < 1e-9);
+    }
+
+    /// Fixed-ranking predictor: always returns the same (label, score)
+    /// list, truncated to k.
+    struct Fixed(Vec<(u32, f32)>);
+    impl Predictor for Fixed {
+        fn topk(&self, _x: SparseVec, k: usize) -> Vec<(u32, f32)> {
+            self.0.iter().take(k).copied().collect()
+        }
+        fn model_bytes(&self) -> usize {
+            0
+        }
+        fn name(&self) -> &str {
+            "fixed"
+        }
+    }
+
+    /// A dataset with explicit per-row label sets (1 feature per row so
+    /// `row()` works).
+    fn labeled_dataset(labels: Vec<Vec<u32>>, n_labels: usize) -> Dataset {
+        let mut f = crate::sparse::CsrMatrix::new(4);
+        for _ in 0..labels.len() {
+            f.push_row(&[0], &[1.0]);
+        }
+        Dataset {
+            name: "labeled".into(),
+            features: f,
+            labels,
+            n_features: 4,
+            n_labels,
+            multiclass: false,
+        }
+    }
+
+    /// nDCG@k against a fully hand-computed oracle: truth {0, 5},
+    /// ranking [5, 7, 0].
+    #[test]
+    fn ndcg_matches_hand_computation() {
+        let ds = labeled_dataset(vec![vec![0, 5]], 10);
+        let model = Fixed(vec![(5, 0.9), (7, 0.5), (0, 0.1)]);
+        let m = evaluate(&model, &ds, &[1, 3]);
+        // k=1: hit at rank 0, |truth|=2 → DCG = 1, ideal = 1 → nDCG@1 = 1.
+        assert!((m.ndcg[0] - 1.0).abs() < 1e-12, "{}", m.ndcg[0]);
+        // k=3: hits at ranks 0 and 2 → DCG = 1/log2(2) + 1/log2(4) = 1.5;
+        // ideal = 1/log2(2) + 1/log2(3).
+        let ideal = 1.0 + 1.0 / 3.0f64.log2();
+        assert!((m.ndcg[1] - 1.5 / ideal).abs() < 1e-12, "{}", m.ndcg[1]);
+        // recall: 1/2 at k=1, 2/2 at k=3; precision: 1/1 and 2/3.
+        assert!((m.recall[0] - 0.5).abs() < 1e-12);
+        assert!((m.recall[1] - 1.0).abs() < 1e-12);
+        assert!((m.precision[0] - 1.0).abs() < 1e-12);
+        assert!((m.precision[1] - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    /// The Jain et al. inverse-propensity formula, pinned numerically, and
+    /// PSP@1 as a hand-computed ratio of sums: a head-only predictor
+    /// scores below its plain P@1 because the tail label it misses weighs
+    /// more.
+    #[test]
+    fn psp_matches_hand_computation() {
+        // Train set: label 0 six times, label 1 twice (label 2 unseen).
+        let mut rows = vec![vec![0u32]; 6];
+        rows.extend(vec![vec![1u32]; 2]);
+        let train = labeled_dataset(rows, 3);
+        let p = Propensities::from_train(&train);
+        // 1/p_l = 1 + C (N_l + B)^(−A), C = (ln 8 − 1)(B+1)^A.
+        let c = (8.0f64.ln() - 1.0) * 2.5f64.powf(0.55);
+        assert!((p.inv[0] - (1.0 + c * 7.5f64.powf(-0.55))).abs() < 1e-12);
+        assert!((p.inv[1] - (1.0 + c * 3.5f64.powf(-0.55))).abs() < 1e-12);
+        // Unseen label: N_l = 0 → the largest inverse propensity.
+        assert!((p.inv[2] - (1.0 + c * 1.5f64.powf(-0.55))).abs() < 1e-12);
+        assert!(p.inv[1] > p.inv[0], "rarer label ⇒ larger weight");
+        assert!((p.inv_of(99) - 1.0).abs() < 1e-12, "out-of-space label is uninformative");
+
+        // Eval set: one head-truth row, one tail-truth row; the predictor
+        // always answers with the head label.
+        let test = labeled_dataset(vec![vec![0], vec![1]], 3);
+        let model = Fixed(vec![(0, 1.0)]);
+        let m = evaluate_with(&model, &test, &[1], Some(&p));
+        let psp = m.psp.as_ref().expect("propensities supplied")[0];
+        // Ratio of sums: numerator collects inv_0 on the hit row only;
+        // the ideal collects each row's own label weight.
+        let want = p.inv[0] / (p.inv[0] + p.inv[1]);
+        assert!((psp - want).abs() < 1e-12, "{psp} vs {want}");
+        assert!(psp < m.precision[0], "PSP penalizes the head-only predictor: {m}");
+        assert!(format!("{m}").contains("PSP@1="), "{m}");
+    }
+
+    /// k beyond both the truth size and the model's label repertoire:
+    /// short prediction lists and k > |truth| must not panic or overcount.
+    #[test]
+    fn k_exceeding_labels_and_truth_is_safe() {
+        let ds = labeled_dataset(vec![vec![0, 1]], 4);
+        // The model only knows 3 labels — returns 3 entries at k = 10.
+        let model = Fixed(vec![(2, 0.9), (0, 0.6), (1, 0.3)]);
+        let p = Propensities::from_train(&ds);
+        let m = evaluate_with(&model, &ds, &[10], Some(&p));
+        assert!((m.precision[0] - 2.0 / 10.0).abs() < 1e-12, "hits / k, not / returned");
+        assert!((m.recall[0] - 1.0).abs() < 1e-12, "both truths found");
+        // Ideal DCG truncates at |truth| = 2, so nDCG stays ≤ 1 exactly.
+        assert!(m.ndcg[0] > 0.0 && m.ndcg[0] <= 1.0 + 1e-12);
+        // PSP ideal truncates at |truth| too: perfect-coverage ranking
+        // collects every truth weight the ideal does → PSP@10 = 1.
+        assert!((m.psp.unwrap()[0] - 1.0).abs() < 1e-12);
+    }
+
+    /// Rows with an empty label set are skipped but keep the averaged
+    /// denominators at n (repository convention); PSP, a ratio of sums,
+    /// ignores them entirely.
+    #[test]
+    fn empty_label_rows_skip_but_count_in_denominator() {
+        let ds = labeled_dataset(vec![vec![0], vec![]], 2);
+        let model = Fixed(vec![(0, 1.0)]);
+        let p = Propensities::from_train(&ds);
+        let m = evaluate_with(&model, &ds, &[1], Some(&p));
+        assert!((m.precision[0] - 0.5).abs() < 1e-12, "1 hit / n=2");
+        assert!((m.recall[0] - 0.5).abs() < 1e-12);
+        assert!((m.psp.unwrap()[0] - 1.0).abs() < 1e-12, "ratio over non-empty rows only");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Evaluation harness: precision@k, prediction timing, model-size
+//! Evaluation harness: precision@k, the multilabel metric suite (nDCG@k,
+//! recall@k, propensity-scored P@k), prediction timing, model-size
 //! accounting, and the table formatting used to regenerate the paper's
 //! Tables 1–3.
 
@@ -8,5 +9,6 @@ pub mod report;
 pub mod tables;
 pub mod timing;
 
+pub use metrics::{evaluate, evaluate_with, Propensities, XcMetrics};
 pub use precision::{precision_at_1, precision_at_k, Predictor};
 pub use timing::{time_epoch, time_predictions};

@@ -1,14 +1,19 @@
 //! Training losses (paper §5).
 //!
 //! * [`separation`] — the separation ranking loss used for all linear
-//!   experiments: hinge on the margin between the lowest-scoring positive
-//!   path and the highest-scoring negative path.
+//!   multiclass experiments: hinge on the margin between the
+//!   lowest-scoring positive path and the highest-scoring negative path.
+//! * [`multilabel`] — the union-of-gold-paths generalization: every
+//!   positive path hinges against the shared best negative, averaged over
+//!   the positive set (reduces bitwise to [`separation`] at |P| = 1).
 //! * [`trellis_softmax`] — multinomial logistic over all C paths via the
 //!   trellis log-partition function (the deep-variant loss; its gradient
 //!   w.r.t. edge scores is `posterior − indicator`).
 
+pub mod multilabel;
 pub mod separation;
 pub mod trellis_softmax;
 
+pub use multilabel::{union_separation, union_separation_ws, UnionOutcome};
 pub use separation::{separation_loss, separation_loss_ws, SeparationOutcome};
 pub use trellis_softmax::{trellis_softmax_grad, trellis_softmax_loss};

@@ -1,0 +1,172 @@
+//! Union-of-gold-paths separation loss — the multilabel generalization of
+//! [`super::separation`] (paper §5 extended to label *sets*, following the
+//! per-label decomposition of the PLT line of work, Jasinska et al.).
+//!
+//! Where the multiclass loss hinges only the single worst (positive,
+//! negative) pair, the multilabel objective hinges **every** positive path
+//! against the shared best negative and averages:
+//!
+//! `L(w, Y) = (1/|P|) Σ_{ℓp ∈ P(Y)} (1 + F(s(ℓn*)) − F(s(ℓp)))₊`
+//!
+//! with `ℓn* = argmax_{ℓn ∉ P} F(s(ℓn))`. The best negative is found
+//! exactly as in the multiclass loss — list-Viterbi top-`(|P| + 1)` must
+//! contain at least one non-positive path — and each positive is scored
+//! directly in `O(log C)`. At `|P| = 1` the expression reduces, term for
+//! term and float-op for float-op, to [`super::separation_loss_ws`]'s
+//! margin, which is what makes the singleton-target bit-identity guarantee
+//! of the objective refactor provable (pinned by
+//! `rust/tests/multilabel_parity.rs`).
+
+use crate::decode::{list_viterbi_into, score_label, Scored};
+use crate::engine::DecodeWorkspace;
+use crate::graph::Topology;
+
+/// What the union loss found.
+#[derive(Clone, Debug)]
+pub struct UnionOutcome {
+    /// Mean hinged margin over the positive set,
+    /// `(1/|P|) Σ (1 + F(ℓn*) − F(ℓp))₊`.
+    pub loss: f32,
+    /// Best negative path (shared by every positive's hinge).
+    pub neg: u64,
+    pub neg_score: f32,
+    /// How many positives have an active hinge (margin > 0).
+    pub active: usize,
+}
+
+/// Allocating variant of [`union_separation_ws`] (tests/tools).
+pub fn union_separation<T: Topology>(
+    t: &T,
+    h: &[f32],
+    positive_paths: &[u64],
+) -> Option<(UnionOutcome, Vec<(u64, f32)>)> {
+    let mut ws = DecodeWorkspace::new();
+    let mut topk = Vec::new();
+    let mut margins = Vec::new();
+    let out = union_separation_ws(t, h, positive_paths, &mut ws, &mut topk, &mut margins)?;
+    Some((out, margins))
+}
+
+/// Compute the union-of-gold-paths loss for an example whose positive
+/// labels map to trellis paths `positive_paths` (non-empty).
+///
+/// `margins` is filled with one `(path, hinged margin)` entry per positive
+/// (clamped at 0; entries with margin > 0 are the active hinges whose
+/// symmetric-difference updates the objective kernel applies). Runs on
+/// reused decode buffers, so the hot loops stay allocation-free. Returns
+/// `None` when every path in the top-`(|P|+1)` list is positive (only
+/// possible at |P| = C).
+pub fn union_separation_ws<T: Topology>(
+    t: &T,
+    h: &[f32],
+    positive_paths: &[u64],
+    ws: &mut DecodeWorkspace,
+    topk: &mut Vec<Scored>,
+    margins: &mut Vec<(u64, f32)>,
+) -> Option<UnionOutcome> {
+    debug_assert!(!positive_paths.is_empty());
+    margins.clear();
+    // Highest-scoring negative: the top-(|P|+1) list must contain at least
+    // one negative path (same search as the multiclass loss).
+    list_viterbi_into(t, h, positive_paths.len() + 1, ws, topk);
+    let neg = topk.iter().find(|s| !positive_paths.contains(&s.label))?;
+    let (neg_path, neg_score) = (neg.label, neg.score);
+    let mut sum = 0.0f32;
+    let mut active = 0usize;
+    for &p in positive_paths {
+        // Same float-op order as the multiclass margin:
+        // (1 + neg − pos).max(0).
+        let margin = 1.0 + neg_score - score_label(t, h, p);
+        let hinged = margin.max(0.0);
+        if hinged > 0.0 {
+            active += 1;
+        }
+        sum += hinged;
+        margins.push((p, hinged));
+    }
+    Some(UnionOutcome {
+        loss: sum / positive_paths.len() as f32,
+        neg: neg_path,
+        neg_score,
+        active,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::pathmat::PathMatrix;
+    use crate::graph::Trellis;
+    use crate::loss::separation_loss;
+    use crate::util::rng::Rng;
+
+    /// Against brute force: dense-decode all C paths, hinge every positive
+    /// against the global best negative, average.
+    #[test]
+    fn matches_bruteforce() {
+        let mut rng = Rng::new(171);
+        for c in [8u64, 22, 105] {
+            let t = Trellis::new(c);
+            let m = PathMatrix::materialize(&t);
+            for trial in 0..30 {
+                let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+                let np = 1 + (trial % 4);
+                let pos: Vec<u64> =
+                    rng.sample_distinct(c as usize, np).into_iter().map(|v| v as u64).collect();
+                let f = m.decode(&h);
+                let best_neg = (0..c)
+                    .filter(|l| !pos.contains(l))
+                    .map(|l| f[l as usize])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let want: f32 = pos
+                    .iter()
+                    .map(|&p| (1.0 + best_neg - f[p as usize]).max(0.0))
+                    .sum::<f32>()
+                    / pos.len() as f32;
+                let (got, margins) = union_separation(&t, &h, &pos).unwrap();
+                assert!(
+                    (got.loss - want).abs() < 1e-4,
+                    "C={c} trial={trial}: {} vs {want}",
+                    got.loss
+                );
+                assert!((got.neg_score - best_neg).abs() < 1e-4);
+                assert_eq!(margins.len(), pos.len());
+                assert_eq!(got.active, margins.iter().filter(|(_, m)| *m > 0.0).count());
+            }
+        }
+    }
+
+    /// At |P| = 1 the union loss IS the separation loss, bit for bit.
+    #[test]
+    fn singleton_is_bitwise_separation_loss() {
+        let mut rng = Rng::new(172);
+        let t = Trellis::new(105);
+        for _ in 0..40 {
+            let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+            let y = rng.below(105);
+            let mc = separation_loss(&t, &h, &[y]).unwrap();
+            let (ml, margins) = union_separation(&t, &h, &[y]).unwrap();
+            assert_eq!(mc.loss.to_bits(), ml.loss.to_bits());
+            assert_eq!(mc.neg, ml.neg);
+            assert_eq!(mc.neg_score.to_bits(), ml.neg_score.to_bits());
+            assert_eq!(margins, vec![(y, mc.loss)]);
+        }
+    }
+
+    /// Zero loss when every positive is far ahead of all negatives.
+    #[test]
+    fn zero_when_separated() {
+        let t = Trellis::new(22);
+        let mut h = vec![0.0f32; t.num_edges()];
+        for y in [3u64, 11] {
+            for e in crate::graph::codec::edges_of_label(&t, y) {
+                h[e as usize] += 10.0;
+            }
+        }
+        let (out, margins) = union_separation(&t, &h, &[3, 11]).unwrap();
+        assert_eq!(out.loss, 0.0);
+        assert_eq!(out.active, 0);
+        assert!(margins.iter().all(|(_, m)| *m == 0.0));
+        assert!(out.neg != 3 && out.neg != 11);
+    }
+}

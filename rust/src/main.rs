@@ -10,14 +10,19 @@
 //!   analog in libsvm format.
 //! * `train --dataset <analog|path.svm> [--epochs N] [--lr η] [--policy
 //!   top|random] [--l1 λ] [--width W] [--hash-bits B] [--threads N]
-//!   [--batch B] [--checkpoint-dir D] [--resume]` — train linear LTLS
-//!   (serially, or Hogwild-parallel with `--threads`; `--batch` scores B
-//!   examples per strip sweep; `--width` trains the W-LTLS wide trellis;
-//!   `--hash-bits` trains the feature-hashed weight store, bounding model
-//!   memory at `2^B·E` floats independently of D), report precision@1,
-//!   prediction time and model size. With `--checkpoint-dir` a checkpoint
-//!   is written after every epoch and `--resume` continues from the latest
-//!   one (same width / hash-bits / seed).
+//!   [--batch B] [--multilabel [--plt-weight]] [--checkpoint-dir D]
+//!   [--resume]` — train linear LTLS (serially, or Hogwild-parallel with
+//!   `--threads`; `--batch` scores B examples per strip sweep; `--width`
+//!   trains the W-LTLS wide trellis; `--hash-bits` trains the
+//!   feature-hashed weight store, bounding model memory at `2^B·E` floats
+//!   independently of D; `--multilabel` switches the objective to the
+//!   union-of-gold-paths margin loss over each example's full label set,
+//!   with `--plt-weight` adding PLT-style conditional weighting), report
+//!   precision@1, prediction time, model size and the top-k metric suite
+//!   (P@k, nDCG@k, recall@k, propensity-scored P@k). With
+//!   `--checkpoint-dir` a checkpoint is written after every epoch and
+//!   `--resume` continues from the latest one (same width / hash-bits /
+//!   seed / objective).
 //! * `quantize --model in.ltls --out out.ltls` — convert a trained dense
 //!   model file to the serve-only q8 backend (per-edge i8 weights, ~4×
 //!   smaller; format v3 carries the backend tag).
@@ -167,7 +172,7 @@ fn load_dataset(args: &Args) -> Result<(ltls::data::Dataset, ltls::data::Dataset
         Ok(ltls::data::split::random_split(&ds, 0.2, seed))
     } else {
         let analog = ltls::data::datasets::by_name(name)
-            .ok_or(format!("unknown dataset {name:?} (try: synthetic, sector, aloi.bin, LSHTC1, imageNet, Dmoz, bibtex, rcv1-regions, Eur-Lex, LSHTCwiki)"))?;
+            .ok_or(format!("unknown dataset {name:?} (try: synthetic, synthetic-ml, sector, aloi.bin, LSHTC1, imageNet, Dmoz, bibtex, rcv1-regions, Eur-Lex, LSHTCwiki)"))?;
         Ok(analog.generate(scale, seed))
     }
 }
@@ -315,6 +320,17 @@ fn cmd_train(args: &Args) -> i32 {
         "random" => ltls::assign::AssignPolicy::Random,
         _ => ltls::assign::AssignPolicy::TopRanked,
     };
+    let multilabel = args.get_bool("multilabel");
+    let plt_weight = args.get_bool("plt-weight");
+    if plt_weight && !multilabel {
+        eprintln!("error: --plt-weight only applies to the multilabel objective; add --multilabel");
+        return 1;
+    }
+    let objective = if multilabel {
+        ltls::train::Objective::Multilabel { plt_weight }
+    } else {
+        ltls::train::Objective::Multiclass
+    };
     let cfg = ltls::train::TrainConfig {
         lr: args.get_f32("lr", 0.5),
         l1_lambda: args.get_f32("l1", 0.0),
@@ -325,6 +341,7 @@ fn cmd_train(args: &Args) -> i32 {
         batch: args.get_usize("batch", 1),
         width,
         hash_bits,
+        objective,
         ..Default::default()
     };
     // The stored width picks the topology (2 runs the register-specialized
@@ -430,9 +447,10 @@ fn run_train<T: Topology, S: TrainableStore>(
         }
     };
     println!(
-        "training: {} thread(s), batch {}",
+        "training: {} thread(s), batch {}, objective {}",
         tr.n_threads(),
-        tr.config().batch.max(1)
+        tr.config().batch.max(1),
+        tr.config().objective,
     );
     if (tr.n_threads() > 1 || tr.config().batch > 1) && tr.config().averaging {
         println!("note: weight averaging is serial-only and is disabled on the Hogwild path");
@@ -496,8 +514,10 @@ fn run_train<T: Topology, S: TrainableStore>(
             model.bytes() as f64 / 1e6,
         );
     }
-    // Full XC metric sweep + optional model persistence.
-    let metrics = ltls::eval::metrics::evaluate(&model, test, &[1, 3, 5]);
+    // Full XC metric sweep (propensities fitted on the train split, as in
+    // Jain et al.) + optional model persistence.
+    let props = ltls::eval::Propensities::from_train(train);
+    let metrics = ltls::eval::evaluate_with(&model, test, &[1, 3, 5], Some(&props));
     println!("{metrics}");
     if let Some(path) = args.get("save") {
         match ltls::model::io::save(&model, std::path::Path::new(path)) {
@@ -1075,7 +1095,7 @@ fn cmd_eval(args: &Args) -> i32 {
             return 1;
         }
     };
-    let (_, test) = match load_dataset(args) {
+    let (train, test) = match load_dataset(args) {
         Ok(x) => x,
         Err(e) => {
             eprintln!("error: {e}");
@@ -1094,9 +1114,11 @@ fn cmd_eval(args: &Args) -> i32 {
     );
     fn report<T: Topology, S: WeightStore>(
         m: &ltls::train::TrainedModel<T, S>,
+        train: &ltls::data::Dataset,
         test: &ltls::data::Dataset,
     ) {
-        let r = ltls::eval::metrics::evaluate(m, test, &[1, 3, 5]);
+        let props = ltls::eval::Propensities::from_train(train);
+        let r = ltls::eval::evaluate_with(m, test, &[1, 3, 5], Some(&props));
         println!(
             "{} (C={}, W={}, E={}, backend={})",
             r,
@@ -1106,7 +1128,7 @@ fn cmd_eval(args: &Args) -> i32 {
             m.model.backend().name()
         );
     }
-    ltls::with_any_model!(&model, m => report(m, &test));
+    ltls::with_any_model!(&model, m => report(m, &train, &test));
     0
 }
 

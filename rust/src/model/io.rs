@@ -49,6 +49,8 @@
 //! Checkpoint format (little-endian, versioned independently):
 //! ```text
 //! magic "LTCK" | version u32 | epoch u32 | step u64 | seed u64
+//! objective u32 (v2+; see Objective::tag — 0 multiclass, 1 multilabel,
+//!                2 multilabel+plt; absent in v1, which loads multiclass)
 //! n_history u64 | (examples u64, active_hinge u64,
 //!                  loss_sum f64-bits, new_labels u64) * n_history
 //! model_len u64 | model bytes (the "LTLS" format above, raw weights)
@@ -58,9 +60,11 @@
 //! the global SGD step, so a resumed run continues the lr schedule and the
 //! per-epoch shuffles exactly. The embedded model bytes carry the backend
 //! tag, so a checkpoint of a hashed run resumes as hashed (and refuses to
-//! resume under a different backend). Not stored (restarts fresh at
-//! resume): the weight-averager state and the assigner's random-fallback
-//! RNG.
+//! resume under a different backend); the checkpoint header carries the
+//! training [`crate::train::Objective`], so a multilabel checkpoint
+//! refuses to resume as multiclass and vice versa. Not stored (restarts
+//! fresh at resume): the weight-averager state and the assigner's
+//! random-fallback RNG.
 
 use crate::assign::{AssignPolicy, Assigner};
 use crate::graph::{Topology, Trellis, WideTrellis};
@@ -71,7 +75,7 @@ use crate::model::quant::Q8Store;
 use crate::model::shard::ShardStore;
 use crate::model::store::{parse_f32s, Backend, WeightBlock, WeightStore};
 use crate::train::metrics::EpochMetrics;
-use crate::train::TrainedModel;
+use crate::train::{Objective, TrainedModel};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -84,7 +88,9 @@ const VERSION: u32 = 3;
 /// backend tag). Only [`serialize_shard`] writes it.
 const SHARD_VERSION: u32 = 4;
 const CKPT_MAGIC: &[u8; 4] = b"LTCK";
-const CKPT_VERSION: u32 = 1;
+/// v1: no objective field (implicitly multiclass). v2: objective tag u32
+/// after the seed.
+const CKPT_VERSION: u32 = 2;
 /// File alignment of the v3 weight block (cache-line sized; any mmap page
 /// base is a multiple of it).
 const WEIGHT_ALIGN: usize = 64;
@@ -713,6 +719,9 @@ pub struct Checkpoint<T: Topology = Trellis, S: WeightStore = DenseStore> {
     pub step: u64,
     /// The training seed (sanity: resume with the same-seeded config).
     pub seed: u64,
+    /// The training objective (sanity: a multilabel checkpoint refuses to
+    /// resume as multiclass and vice versa). v1 files load as multiclass.
+    pub objective: Objective,
     /// Per-epoch metrics, oldest first.
     pub history: Vec<EpochMetrics>,
     /// Raw (unaveraged) weights + trellis + label↔path table.
@@ -721,7 +730,14 @@ pub struct Checkpoint<T: Topology = Trellis, S: WeightStore = DenseStore> {
 
 /// Serialize a checkpoint.
 pub fn serialize_checkpoint<T: Topology, S: WeightStore>(ck: &Checkpoint<T, S>) -> Vec<u8> {
-    serialize_checkpoint_with(ck.epoch, ck.step, ck.seed, &ck.history, &serialize(&ck.model))
+    serialize_checkpoint_with(
+        ck.epoch,
+        ck.step,
+        ck.seed,
+        ck.objective,
+        &ck.history,
+        &serialize(&ck.model),
+    )
 }
 
 /// Low-level checkpoint writer over pre-serialized model bytes. Combined
@@ -731,6 +747,7 @@ pub fn serialize_checkpoint_with(
     epoch: u32,
     step: u64,
     seed: u64,
+    objective: Objective,
     history: &[EpochMetrics],
     model_bytes: &[u8],
 ) -> Vec<u8> {
@@ -740,6 +757,7 @@ pub fn serialize_checkpoint_with(
     put_u32(&mut out, epoch);
     put_u64(&mut out, step);
     put_u64(&mut out, seed);
+    put_u32(&mut out, objective.tag());
     put_u64(&mut out, history.len() as u64);
     for m in history {
         put_u64(&mut out, m.examples);
@@ -763,12 +781,15 @@ pub fn deserialize_checkpoint<T: Topology, S: WeightStore>(
         return Err("not an LTLS checkpoint file (bad magic)".into());
     }
     let version = r.u32()?;
-    if version != CKPT_VERSION {
+    if version == 0 || version > CKPT_VERSION {
         return Err(format!("unsupported checkpoint version {version}"));
     }
     let epoch = r.u32()?;
     let step = r.u64()?;
     let seed = r.u64()?;
+    // v1 predates the objective field: those runs were all multiclass.
+    let objective =
+        if version >= 2 { Objective::from_tag(r.u32()?)? } else { Objective::Multiclass };
     let n_history = r.u64()? as usize;
     if n_history.saturating_mul(32) > bytes.len() {
         return Err("truncated checkpoint (history)".into());
@@ -786,7 +807,7 @@ pub fn deserialize_checkpoint<T: Topology, S: WeightStore>(
     if r.i != bytes.len() {
         return Err(format!("{} trailing bytes", bytes.len() - r.i));
     }
-    Ok(Checkpoint { epoch, step, seed, history, model })
+    Ok(Checkpoint { epoch, step, seed, objective, history, model })
 }
 
 /// Peek the backend tag of the model embedded in a checkpoint file's
@@ -797,12 +818,15 @@ pub fn peek_checkpoint_backend(bytes: &[u8]) -> Result<Backend, String> {
         return Err("not an LTLS checkpoint file (bad magic)".into());
     }
     let version = r.u32()?;
-    if version != CKPT_VERSION {
+    if version == 0 || version > CKPT_VERSION {
         return Err(format!("unsupported checkpoint version {version}"));
     }
     let _ = r.u32()?; // epoch
     let _ = r.u64()?; // step
     let _ = r.u64()?; // seed
+    if version >= 2 {
+        let _ = r.u32()?; // objective tag
+    }
     let n_history = r.u64()? as usize;
     if n_history.saturating_mul(32) > bytes.len() {
         return Err("truncated checkpoint (history)".into());
@@ -1039,6 +1063,7 @@ mod tests {
             epoch: 3,
             step: 1234,
             seed: 42,
+            objective: Objective::Multilabel { plt_weight: true },
             history: vec![
                 EpochMetrics { examples: 400, active_hinge: 300, loss_sum: 99.5, new_labels: 24 },
                 EpochMetrics { examples: 400, active_hinge: 120, loss_sum: 31.25, new_labels: 0 },
@@ -1050,6 +1075,7 @@ mod tests {
         assert_eq!(ck2.epoch, 3);
         assert_eq!(ck2.step, 1234);
         assert_eq!(ck2.seed, 42);
+        assert_eq!(ck2.objective, Objective::Multilabel { plt_weight: true });
         assert_eq!(ck2.history.len(), 2);
         assert_eq!(ck2.history[0].examples, 400);
         assert_eq!(ck2.history[1].loss_sum, 31.25);
@@ -1066,7 +1092,14 @@ mod tests {
     #[test]
     fn checkpoint_rejects_corrupt_and_foreign_files() {
         let (m, _) = trained();
-        let ck = Checkpoint { epoch: 1, step: 10, seed: 7, history: vec![], model: m };
+        let ck = Checkpoint {
+            epoch: 1,
+            step: 10,
+            seed: 7,
+            objective: Objective::Multiclass,
+            history: vec![],
+            model: m,
+        };
         let mut bytes = serialize_checkpoint(&ck);
         assert!(deserialize_checkpoint::<Trellis, DenseStore>(&bytes[..16]).is_err()); // truncated
         bytes.push(0);
@@ -1077,8 +1110,60 @@ mod tests {
         // A plain model file is not a checkpoint (and vice versa).
         let (m2, _) = trained();
         assert!(deserialize_checkpoint::<Trellis, DenseStore>(&serialize(&m2)).is_err());
-        let ck2 = Checkpoint { epoch: 1, step: 10, seed: 7, history: vec![], model: m2 };
+        let ck2 = Checkpoint {
+            epoch: 1,
+            step: 10,
+            seed: 7,
+            objective: Objective::Multiclass,
+            history: vec![],
+            model: m2,
+        };
         assert!(deserialize::<Trellis, DenseStore>(&serialize_checkpoint(&ck2)).is_err());
+    }
+
+    /// A v1 checkpoint (no objective field) still loads — as multiclass —
+    /// and a bogus objective tag or future version is refused.
+    #[test]
+    fn checkpoint_v1_compat_and_bad_objective() {
+        let (m, _) = trained();
+        let ck = Checkpoint {
+            epoch: 2,
+            step: 55,
+            seed: 9,
+            objective: Objective::Multiclass,
+            history: vec![EpochMetrics {
+                examples: 10,
+                active_hinge: 4,
+                loss_sum: 1.5,
+                new_labels: 3,
+            }],
+            model: m,
+        };
+        let v2 = serialize_checkpoint(&ck);
+
+        // Hand-build the v1 layout: same bytes minus the objective u32 at
+        // offset 28 (after magic 4 | version 4 | epoch 4 | step 8 | seed 8),
+        // with the version field rewritten to 1.
+        let mut v1 = v2.clone();
+        v1.drain(28..32);
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let ck1 = deserialize_checkpoint::<Trellis, DenseStore>(&v1).unwrap();
+        assert_eq!(ck1.objective, Objective::Multiclass);
+        assert_eq!(ck1.step, 55);
+        assert_eq!(ck1.history.len(), 1);
+        assert_eq!(peek_checkpoint_backend(&v1).unwrap(), Backend::Dense);
+
+        // Unknown objective tag in a v2 file.
+        let mut bad_tag = v2.clone();
+        bad_tag[28..32].copy_from_slice(&7u32.to_le_bytes());
+        let err = deserialize_checkpoint::<Trellis, DenseStore>(&bad_tag).unwrap_err();
+        assert!(err.contains("objective tag"), "{err}");
+
+        // Future version.
+        let mut v3 = v2;
+        v3[4..8].copy_from_slice(&3u32.to_le_bytes());
+        assert!(deserialize_checkpoint::<Trellis, DenseStore>(&v3).is_err());
+        assert!(peek_checkpoint_backend(&v3).is_err());
     }
 
     #[test]
@@ -1091,6 +1176,7 @@ mod tests {
                 epoch,
                 step: epoch as u64 * 100,
                 seed: 42,
+                objective: Objective::Multiclass,
                 history: vec![],
                 model: m.clone(),
             };

@@ -1,5 +1,6 @@
 //! Trainer hyper-parameters.
 
+use super::objective::Objective;
 use crate::assign::AssignPolicy;
 
 /// Configuration for [`super::Trainer`].
@@ -16,6 +17,11 @@ pub struct TrainConfig {
     pub policy: AssignPolicy,
     /// L1 soft-threshold λ applied to the *final* model (paper §6); 0 = off.
     pub l1_lambda: f32,
+    /// Per-example target shape and loss (multiclass separation loss vs.
+    /// the multilabel union-of-gold-paths objective, see
+    /// [`super::objective`]). Carried into checkpoints; a resume under a
+    /// different objective is refused.
+    pub objective: Objective,
     /// RNG seed (example shuffling, random assignment).
     pub seed: u64,
     /// Shuffle examples between epochs.
@@ -50,6 +56,7 @@ impl Default for TrainConfig {
             averaging: true,
             policy: AssignPolicy::TopRanked,
             l1_lambda: 0.0,
+            objective: Objective::Multiclass,
             seed: 42,
             shuffle: true,
             log_every: 0,
@@ -119,5 +126,6 @@ mod tests {
         assert_eq!(c.batch, 1);
         assert_eq!(c.width, 2);
         assert_eq!(c.hash_bits, 0, "dense storage is the default backend");
+        assert_eq!(c.objective, Objective::Multiclass, "the paper's loss is the default");
     }
 }

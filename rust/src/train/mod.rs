@@ -1,12 +1,15 @@
 //! Online training of the LTLS linear model (paper §5).
 //!
-//! One SGD step: compute edge scores `h = Wx` (`O(E·nnz)`), find the
-//! separation-ranking loss pair (ℓp, ℓn) via list-Viterbi, and if the
-//! hinge is active update only the edges in the symmetric difference of
-//! the two paths (`+ηx` on positive-only edges, `−ηx` on negative-only
-//! edges) — `O(log C)` model work per step, with weight averaging.
+//! One SGD step: compute edge scores `h = Wx` (`O(E·nnz)`), run the
+//! configured [`objective::Objective`] — the separation-ranking loss pair
+//! (ℓp, ℓn) for multiclass, or the union-of-gold-paths hinge over the full
+//! label set for multilabel — via list-Viterbi, and for each active hinge
+//! update only the edges in the symmetric difference of the loss pair's
+//! paths (`+ηx` on positive-only edges, `−ηx` on negative-only edges) —
+//! `O(log C)` model work per step, with weight averaging.
 //!
-//! Two execution engines share that step:
+//! Two execution engines share that step (literally: both call the one
+//! [`objective::objective_step`] kernel):
 //!
 //! * [`trainer::Trainer`] — the strictly-serial path (with weight
 //!   averaging), now also the `threads = 1` special case of the parallel
@@ -19,11 +22,13 @@
 
 pub mod config;
 pub mod metrics;
+pub mod objective;
 pub mod parallel;
 pub mod shard;
 pub mod trainer;
 
 pub use config::TrainConfig;
+pub use objective::Objective;
 pub use metrics::{EpochMetrics, TrainStats};
 pub use parallel::ParallelTrainer;
 pub use trainer::{TrainedModel, Trainer};

@@ -1,0 +1,329 @@
+//! The training objective abstraction — what a per-example *target* means
+//! and how its loss gradient is applied.
+//!
+//! Before this module the training stack hard-coded one gold path per
+//! example (the multiclass separation loss). [`Objective`] makes the
+//! target shape explicit and [`objective_step`] is the **one** shared
+//! loss-and-update kernel both engines run — the serial
+//! [`super::Trainer::step`] and the Hogwild worker of
+//! [`super::ParallelTrainer`] differ only in the weight applier they pass
+//! in (plain store update + averager vs. relaxed-atomic shared update).
+//!
+//! * [`Objective::Multiclass`] — the paper's §5 separation ranking loss on
+//!   the single worst (positive, negative) pair. For an example whose
+//!   label set happens to be a singleton this executes exactly the
+//!   pre-refactor code path: same decode, same float-op order, same single
+//!   `update_edges(pos_only, neg_only, x, lr)` call — the bit-identity
+//!   invariant pinned by `rust/tests/multilabel_parity.rs`.
+//! * [`Objective::Multilabel`] — the union-of-gold-paths margin
+//!   ([`crate::loss::union_separation_ws`]): every positive path hinges
+//!   against the shared best negative, and each active hinge applies its
+//!   symmetric-difference update scaled by `lr / |P|` (per-example
+//!   gradient normalization, so an example with 20 tags moves the weights
+//!   as far as one with 1). With `plt_weight` each positive's update is
+//!   additionally scaled by the logistic link `σ(F(ℓn) − F(ℓp))` — the
+//!   conditional probability that the negative outranks that gold path —
+//!   the PLT-style conditional weighting of Jasinska et al.: confidently
+//!   separated labels contribute vanishing gradient, badly violated ones
+//!   full gradient.
+//!
+//! The objective is part of the training contract, so it is carried in
+//! checkpoints ([`crate::model::io::Checkpoint`]) and a resume under a
+//! different objective is refused like a seed/width/hash-bits mismatch.
+
+use super::config::TrainConfig;
+use super::metrics::EpochMetrics;
+use crate::engine::StepScratch;
+use crate::graph::Topology;
+use crate::loss::{separation_loss_ws, union_separation_ws};
+
+/// Which per-example target shape and loss the trainers optimize.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Objective {
+    /// One gold path per example (paper §5 separation ranking loss). A
+    /// multi-label row contributes only its single worst positive, exactly
+    /// as the pre-refactor trainer did.
+    #[default]
+    Multiclass,
+    /// Union-of-gold-paths margin over the full label set, 1/|P|
+    /// gradient normalization; `plt_weight` additionally scales each
+    /// positive's update by its conditional misranking probability.
+    Multilabel {
+        /// PLT-style conditional-probability weighting (Jasinska et al.).
+        plt_weight: bool,
+    },
+}
+
+impl Objective {
+    /// Stable wire tag (checkpoint format v2).
+    pub fn tag(self) -> u32 {
+        match self {
+            Objective::Multiclass => 0,
+            Objective::Multilabel { plt_weight: false } => 1,
+            Objective::Multilabel { plt_weight: true } => 2,
+        }
+    }
+
+    /// Inverse of [`Self::tag`] (checkpoint reader).
+    pub fn from_tag(tag: u32) -> Result<Objective, String> {
+        match tag {
+            0 => Ok(Objective::Multiclass),
+            1 => Ok(Objective::Multilabel { plt_weight: false }),
+            2 => Ok(Objective::Multilabel { plt_weight: true }),
+            t => Err(format!("unknown objective tag {t}")),
+        }
+    }
+
+    pub fn is_multilabel(self) -> bool {
+        matches!(self, Objective::Multilabel { .. })
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Objective::Multiclass => write!(f, "multiclass"),
+            Objective::Multilabel { plt_weight: false } => write!(f, "multilabel"),
+            Objective::Multilabel { plt_weight: true } => write!(f, "multilabel+plt"),
+        }
+    }
+}
+
+/// One objective step on a scored example: compute the loss for positive
+/// paths `pos` over edge scores `h`, fold it into `metrics`, and hand each
+/// active hinge's symmetric-difference update to `apply(pos_only_edges,
+/// neg_only_edges, eta)`. Returns the loss.
+///
+/// This is the single kernel both training engines execute; the engines
+/// differ only in `apply` — the serial trainer updates its store and
+/// averager, the Hogwild worker updates the shared atomic view. `t` is the
+/// global SGD step driving the lr schedule; an example with an empty label
+/// set contributes nothing (not counted as an example).
+#[allow(clippy::too_many_arguments)]
+pub fn objective_step<T: Topology, F: FnMut(&[u32], &[u32], f32)>(
+    trellis: &T,
+    config: &TrainConfig,
+    t: u64,
+    h: &[f32],
+    pos: &[u64],
+    scratch: &mut StepScratch,
+    metrics: &mut EpochMetrics,
+    apply: &mut F,
+) -> f32 {
+    if pos.is_empty() {
+        return 0.0;
+    }
+    match config.objective {
+        Objective::Multiclass => {
+            let mut loss_val = 0.0;
+            if let Some(out) =
+                separation_loss_ws(trellis, h, pos, &mut scratch.ws, &mut scratch.paths)
+            {
+                metrics.examples += 1;
+                metrics.loss_sum += out.loss as f64;
+                loss_val = out.loss;
+                if out.loss > 0.0 {
+                    metrics.active_hinge += 1;
+                    let lr = config.lr_at(t);
+                    symmetric_difference(trellis, out.pos, out.neg, scratch);
+                    apply(&scratch.pos_only, &scratch.neg_only, lr);
+                }
+            }
+            loss_val
+        }
+        Objective::Multilabel { plt_weight } => {
+            let Some(out) = union_separation_ws(
+                trellis,
+                h,
+                pos,
+                &mut scratch.ws,
+                &mut scratch.paths,
+                &mut scratch.pos_margins,
+            ) else {
+                return 0.0;
+            };
+            metrics.examples += 1;
+            metrics.loss_sum += out.loss as f64;
+            if out.loss > 0.0 {
+                metrics.active_hinge += 1;
+                let lr = config.lr_at(t);
+                // Per-example gradient normalization: the |P| per-positive
+                // hinges share one example's learning-rate budget.
+                let inv = 1.0 / pos.len() as f32;
+                // The margins list is detached while each active hinge's
+                // symmetric difference is resolved into the same scratch.
+                let margins = std::mem::take(&mut scratch.pos_margins);
+                for &(p, margin) in &margins {
+                    if margin <= 0.0 {
+                        continue;
+                    }
+                    // σ(neg − pos) = σ(margin − 1): the conditional
+                    // probability (logistic link) that the best negative
+                    // outranks this gold path.
+                    let w = if plt_weight { 1.0 / (1.0 + (1.0 - margin).exp()) } else { 1.0 };
+                    symmetric_difference(trellis, p, out.neg, scratch);
+                    apply(&scratch.pos_only, &scratch.neg_only, lr * (w * inv));
+                }
+                scratch.pos_margins = margins;
+            }
+            out.loss
+        }
+    }
+}
+
+/// Resolve the (positive, negative) path pair into the scratch's
+/// symmetric-difference edge sets (`pos_only` / `neg_only`) — the only
+/// edges an update touches (Fig. 2 semantics), with no allocation.
+#[inline]
+fn symmetric_difference<T: Topology>(trellis: &T, pos: u64, neg: u64, scratch: &mut StepScratch) {
+    trellis.edges_of_label_into(pos, &mut scratch.pos_edges);
+    trellis.edges_of_label_into(neg, &mut scratch.neg_edges);
+    let (pos_edges, neg_edges) = (&scratch.pos_edges, &scratch.neg_edges);
+    scratch.pos_only.clear();
+    scratch.neg_only.clear();
+    scratch.pos_only.extend(pos_edges.iter().filter(|e| !neg_edges.contains(e)));
+    scratch.neg_only.extend(neg_edges.iter().filter(|e| !pos_edges.contains(e)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Trellis;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tag_roundtrip_and_display() {
+        for o in [
+            Objective::Multiclass,
+            Objective::Multilabel { plt_weight: false },
+            Objective::Multilabel { plt_weight: true },
+        ] {
+            assert_eq!(Objective::from_tag(o.tag()).unwrap(), o);
+        }
+        assert!(Objective::from_tag(3).is_err());
+        assert_eq!(Objective::Multiclass.to_string(), "multiclass");
+        assert_eq!(Objective::Multilabel { plt_weight: false }.to_string(), "multilabel");
+        assert_eq!(Objective::Multilabel { plt_weight: true }.to_string(), "multilabel+plt");
+        assert!(!Objective::Multiclass.is_multilabel());
+        assert!(Objective::Multilabel { plt_weight: true }.is_multilabel());
+    }
+
+    /// On a singleton target, the multiclass and multilabel kernels emit
+    /// the SAME update stream: same edge sets, same eta, bitwise.
+    #[test]
+    fn singleton_update_streams_identical() {
+        let mut rng = Rng::new(271);
+        let t = Trellis::new(33);
+        let mc_cfg = TrainConfig::default();
+        let ml_cfg = TrainConfig {
+            objective: Objective::Multilabel { plt_weight: false },
+            ..mc_cfg.clone()
+        };
+        for step in 1..40u64 {
+            let h: Vec<f32> = (0..t.num_edges()).map(|_| rng.normal()).collect();
+            let y = rng.below(33);
+            let mut updates = [Vec::new(), Vec::new()];
+            for (ui, cfg) in [&mc_cfg, &ml_cfg].into_iter().enumerate() {
+                let mut scratch = StepScratch::default();
+                let mut metrics = EpochMetrics::default();
+                let loss = objective_step(
+                    &t,
+                    cfg,
+                    step,
+                    &h,
+                    &[y],
+                    &mut scratch,
+                    &mut metrics,
+                    &mut |po: &[u32], no: &[u32], eta: f32| {
+                        updates[ui].push((po.to_vec(), no.to_vec(), eta.to_bits()));
+                    },
+                );
+                assert_eq!(metrics.examples, 1);
+                assert_eq!(metrics.active_hinge, u64::from(loss > 0.0));
+            }
+            assert_eq!(updates[0], updates[1], "step {step}");
+        }
+    }
+
+    /// Multilabel: per-positive updates share the best negative and are
+    /// 1/|P|-normalized; empty label sets contribute nothing.
+    #[test]
+    fn multilabel_normalizes_and_skips_empty() {
+        let t = Trellis::new(22);
+        let cfg = TrainConfig {
+            objective: Objective::Multilabel { plt_weight: false },
+            ..TrainConfig::default()
+        };
+        let h = vec![0.0f32; Topology::num_edges(&t)];
+        let mut scratch = StepScratch::default();
+        let mut metrics = EpochMetrics::default();
+        // All-zero scores: every margin is exactly 1.0 (active).
+        let mut etas = Vec::new();
+        let loss = objective_step(
+            &t,
+            &cfg,
+            1,
+            &h,
+            &[2, 9, 17],
+            &mut scratch,
+            &mut metrics,
+            &mut |_: &[u32], _: &[u32], eta: f32| etas.push(eta),
+        );
+        assert_eq!(loss, 1.0);
+        assert_eq!(etas.len(), 3);
+        let lr3 = cfg.lr_at(1) * (1.0f32 / 3.0);
+        assert!(etas.iter().all(|&e| e == lr3), "{etas:?} vs {lr3}");
+
+        let mut metrics2 = EpochMetrics::default();
+        let loss2 = objective_step(
+            &t,
+            &cfg,
+            2,
+            &h,
+            &[],
+            &mut scratch,
+            &mut metrics2,
+            &mut |_: &[u32], _: &[u32], _: f32| panic!("empty target must not update"),
+        );
+        assert_eq!(loss2, 0.0);
+        assert_eq!(metrics2.examples, 0);
+    }
+
+    /// PLT weighting scales each eta by σ(margin − 1) ∈ (0, 1): a badly
+    /// violated positive gets a larger step than a barely violated one.
+    #[test]
+    fn plt_weighting_orders_etas_by_violation() {
+        let t = Trellis::new(22);
+        let cfg = TrainConfig {
+            objective: Objective::Multilabel { plt_weight: true },
+            ..TrainConfig::default()
+        };
+        // Boost one positive's path so its margin is smaller than the
+        // other's, leaving scores otherwise flat. +0.25 per edge keeps the
+        // boosted path's hinge active: the closest negative differs in
+        // exactly 2 edges, so its margin is 1 − 2·0.25 = 0.5 > 0 (a 0.5
+        // boost would land exactly on the hinge boundary).
+        let mut h = vec![0.0f32; Topology::num_edges(&t)];
+        for e in crate::graph::codec::edges_of_label(&t, 4) {
+            h[e as usize] += 0.25;
+        }
+        let mut scratch = StepScratch::default();
+        let mut metrics = EpochMetrics::default();
+        let mut etas = Vec::new();
+        objective_step(
+            &t,
+            &cfg,
+            1,
+            &h,
+            &[4, 9],
+            &mut scratch,
+            &mut metrics,
+            &mut |_: &[u32], _: &[u32], eta: f32| etas.push(eta),
+        );
+        assert_eq!(etas.len(), 2, "both hinges active");
+        let unweighted = cfg.lr_at(1) * 0.5;
+        // Path 4 (smaller violation) gets the smaller weighted step.
+        assert!(etas[0] < etas[1], "{etas:?}");
+        assert!(etas.iter().all(|&e| e > 0.0 && e < unweighted), "{etas:?} vs {unweighted}");
+    }
+}

@@ -48,13 +48,13 @@
 
 use super::config::TrainConfig;
 use super::metrics::EpochMetrics;
+use super::objective::objective_step;
 use super::shard::shard_epoch;
 use super::trainer::{TrainedModel, Trainer};
 use crate::assign::Assigner;
 use crate::data::Dataset;
 use crate::engine::TrainScratch;
 use crate::graph::{Topology, Trellis};
-use crate::loss::separation_loss_ws;
 use crate::model::io::{self, Checkpoint};
 use crate::model::{DenseStore, StripCodec, TrainableStore};
 use crate::sparse::SparseVec;
@@ -199,7 +199,7 @@ fn run_worker<T: Topology, C: StripCodec>(
     let mut scratch = TrainScratch::new();
     if trellis.as_binary().is_none() {
         // Pre-size the generic W-ary decode buffers (see Trainer::with_topology).
-        scratch.ws.reserve_wide(trellis.width() as usize, trellis.steps() as usize, 64);
+        scratch.step.ws.reserve_wide(trellis.width() as usize, trellis.steps() as usize, 64);
     }
     let mut rows: Vec<SparseVec<'_>> = Vec::with_capacity(batch);
     let e = weights.n_edges;
@@ -256,25 +256,21 @@ fn run_worker<T: Topology, C: StripCodec>(
                 metrics.new_labels += (a.table.n_assigned() - before) as u64;
             }
 
-            // Separation ranking loss + symmetric-difference update.
-            if let Some(out) =
-                separation_loss_ws(trellis, h, &pos, &mut scratch.ws, &mut scratch.paths)
-            {
-                metrics.examples += 1;
-                metrics.loss_sum += out.loss as f64;
-                if out.loss > 0.0 {
-                    metrics.active_hinge += 1;
-                    let lr = config.lr_at(t);
-                    trellis.edges_of_label_into(out.pos, &mut scratch.pos_edges);
-                    trellis.edges_of_label_into(out.neg, &mut scratch.neg_edges);
-                    let (pos_edges, neg_edges) = (&scratch.pos_edges, &scratch.neg_edges);
-                    scratch.pos_only.clear();
-                    scratch.neg_only.clear();
-                    scratch.pos_only.extend(pos_edges.iter().filter(|ed| !neg_edges.contains(ed)));
-                    scratch.neg_only.extend(neg_edges.iter().filter(|ed| !pos_edges.contains(ed)));
-                    weights.update_edges(&scratch.pos_only, &scratch.neg_only, x, lr);
-                }
-            }
+            // The shared objective kernel (loss + symmetric-difference
+            // updates); this engine applies each update to the shared
+            // atomic weight view.
+            objective_step(
+                trellis,
+                config,
+                t,
+                h,
+                &pos,
+                &mut scratch.step,
+                &mut metrics,
+                &mut |po: &[u32], no: &[u32], eta: f32| {
+                    weights.update_edges(po, no, x, eta);
+                },
+            );
             scratch.pos = pos;
         }
     }
@@ -334,20 +330,27 @@ impl<T: Topology, S: TrainableStore> ParallelTrainer<T, S> {
     /// permutations continue exactly), the epoch counter and the metrics
     /// history. Errors if `config.seed` differs from the checkpoint's seed
     /// — the "reproducible from the config alone" guarantee would silently
-    /// break otherwise — or if the checkpoint's trellis width or weight
-    /// backend differs from the config's. Not restored (documented): the
-    /// weight-averager state and the assigner's random-fallback RNG — both
-    /// restart fresh.
+    /// break otherwise — or if the checkpoint's objective, trellis width or
+    /// weight backend differs from the config's. Not restored (documented):
+    /// the weight-averager state and the assigner's random-fallback RNG —
+    /// both restart fresh.
     pub fn resume(
         config: TrainConfig,
         ck: Checkpoint<T, S>,
     ) -> Result<ParallelTrainer<T, S>, String> {
-        let Checkpoint { epoch, step, seed, history, model } = ck;
+        let Checkpoint { epoch, step, seed, objective, history, model } = ck;
         if seed != config.seed {
             return Err(format!(
                 "checkpoint was trained with seed {seed}, config has seed {} — \
                  resume with the same seed (or retrain)",
                 config.seed
+            ));
+        }
+        if objective != config.objective {
+            return Err(format!(
+                "checkpoint was trained with objective {objective}, config has {} — \
+                 resume with the same objective (or retrain)",
+                config.objective
             ));
         }
         // Same clamp the builder applies (a width above C is capped to C),
@@ -417,6 +420,7 @@ impl<T: Topology, S: TrainableStore> ParallelTrainer<T, S> {
             epoch: self.epochs_done,
             step: self.inner.step,
             seed: self.inner.config.seed,
+            objective: self.inner.config.objective,
             history: self.history.clone(),
             model: TrainedModel {
                 trellis: self.inner.trellis.clone(),
@@ -482,6 +486,7 @@ impl<T: Topology, S: TrainableStore> ParallelTrainer<T, S> {
             self.epochs_done,
             self.inner.step,
             self.inner.config.seed,
+            self.inner.config.objective,
             &self.history,
             &model_bytes,
         );

@@ -2,12 +2,12 @@
 
 use super::config::TrainConfig;
 use super::metrics::EpochMetrics;
+use super::objective::objective_step;
 use crate::assign::Assigner;
 use crate::data::Dataset;
 use crate::decode::{list_viterbi_into, viterbi_ws, Scored};
 use crate::engine::{PredictScratch, TrainScratch};
 use crate::graph::{Topology, Trellis};
-use crate::loss::separation_loss_ws;
 use crate::model::averaged::Averager;
 use crate::model::{DenseStore, TrainableStore, WeightStore};
 use crate::sparse::SparseVec;
@@ -65,7 +65,7 @@ impl<T: Topology, S: TrainableStore> Trainer<T, S> {
             // Pre-size the generic W-ary decode buffers so even the first
             // wide training step is allocation-free (the assignment policy
             // list-Viterbis up to 64 paths).
-            scratch.ws.reserve_wide(trellis.width() as usize, trellis.steps() as usize, 64);
+            scratch.step.ws.reserve_wide(trellis.width() as usize, trellis.steps() as usize, 64);
         }
         Ok(Trainer {
             config,
@@ -119,40 +119,26 @@ impl<T: Topology, S: TrainableStore> Trainer<T, S> {
         }
         metrics.new_labels += (self.assigner.table.n_assigned() - before) as u64;
 
-        // Separation ranking loss (§5), on the engine's reused decode
-        // buffers.
-        let mut loss_val = 0.0;
-        if let Some(out) =
-            separation_loss_ws(&self.trellis, &h, &pos, &mut self.scratch.ws, &mut self.scratch.paths)
-        {
-            metrics.examples += 1;
-            metrics.loss_sum += out.loss as f64;
-            loss_val = out.loss;
-            if out.loss > 0.0 {
-                metrics.active_hinge += 1;
-                let lr = self.config.lr_at(self.step);
-                // Update only the symmetric difference of the two paths
-                // (fused, strip-major — see model::store perf notes),
-                // resolved into the engine scratch: no allocation here.
-                self.trellis.edges_of_label_into(out.pos, &mut self.scratch.pos_edges);
-                self.trellis.edges_of_label_into(out.neg, &mut self.scratch.neg_edges);
-                let (pos_edges, neg_edges) = (&self.scratch.pos_edges, &self.scratch.neg_edges);
-                self.scratch.pos_only.clear();
-                self.scratch.neg_only.clear();
-                self.scratch.pos_only.extend(pos_edges.iter().filter(|e| !neg_edges.contains(e)));
-                self.scratch.neg_only.extend(neg_edges.iter().filter(|e| !pos_edges.contains(e)));
-                self.model.update_edges(&self.scratch.pos_only, &self.scratch.neg_only, x, lr);
-                if let Some(a) = &mut self.averager {
-                    a.record_edges(
-                        self.model.codec(),
-                        &self.scratch.pos_only,
-                        &self.scratch.neg_only,
-                        x,
-                        lr,
-                    );
+        // The configured objective's loss + symmetric-difference updates
+        // (the kernel shared with the Hogwild workers); this engine applies
+        // each update to its private store and the averager.
+        let model = &mut self.model;
+        let averager = &mut self.averager;
+        let loss_val = objective_step(
+            &self.trellis,
+            &self.config,
+            self.step,
+            &h,
+            &pos,
+            &mut self.scratch.step,
+            metrics,
+            &mut |po: &[u32], no: &[u32], eta: f32| {
+                model.update_edges(po, no, x, eta);
+                if let Some(a) = averager.as_mut() {
+                    a.record_edges(model.codec(), po, no, x, eta);
                 }
-            }
-        }
+            },
+        );
         self.scratch.h = h;
         self.scratch.pos = pos;
         loss_val

@@ -1,0 +1,256 @@
+//! The multilabel-objective refactor's load-bearing invariant, pinned:
+//!
+//! 1. A singleton label set under `Objective::Multilabel` reproduces the
+//!    multiclass trainer **bit-identically** — same epoch metrics (loss
+//!    bits included), same weights — on the serial engine and on the
+//!    1-worker Hogwild path, across the dense and hashed backends.
+//! 2. Multilabel training end-to-end actually learns (union loss, with
+//!    and without PLT weighting) and the eval suite reports the top-k
+//!    metric sweep on it.
+//! 3. Checkpoints carry the objective: it roundtrips through
+//!    save → load, and a mistyped resume (multiclass checkpoint under
+//!    `--multilabel` or vice versa) errors instead of training garbage.
+
+use ltls::data::synthetic::{SyntheticSpec, TeacherKind};
+use ltls::data::Dataset;
+use ltls::eval::{evaluate_with, precision_at_1, Propensities};
+use ltls::graph::Trellis;
+use ltls::model::{io, DenseStore, HashedStore};
+use ltls::train::{EpochMetrics, Objective, ParallelTrainer, TrainConfig, Trainer};
+
+const ML: Objective = Objective::Multilabel { plt_weight: false };
+const ML_PLT: Objective = Objective::Multilabel { plt_weight: true };
+
+fn cfg(objective: Objective) -> TrainConfig {
+    TrainConfig { averaging: false, objective, ..TrainConfig::default() }
+}
+
+fn assert_metrics_identical(a: &[EpochMetrics], b: &[EpochMetrics]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.examples, y.examples, "epoch {i} examples");
+        assert_eq!(x.active_hinge, y.active_hinge, "epoch {i} active_hinge");
+        assert_eq!(x.new_labels, y.new_labels, "epoch {i} new_labels");
+        assert_eq!(
+            x.loss_sum.to_bits(),
+            y.loss_sum.to_bits(),
+            "epoch {i} loss_sum: {} vs {}",
+            x.loss_sum,
+            y.loss_sum
+        );
+    }
+}
+
+/// Invariant 1, serial + dense: on a multiclass dataset (every label set
+/// is a singleton) the multilabel objective is the multiclass trainer,
+/// bit for bit — weight averaging included (default config).
+#[test]
+fn singleton_serial_dense_is_bit_identical() {
+    let ds = SyntheticSpec::multiclass(1500, 600, 64).seed(301).generate();
+    let mut mc = Trainer::new(
+        TrainConfig { objective: Objective::Multiclass, ..TrainConfig::default() },
+        ds.n_features,
+        ds.n_labels,
+    );
+    let mut ml = Trainer::new(
+        TrainConfig { objective: ML, ..TrainConfig::default() },
+        ds.n_features,
+        ds.n_labels,
+    );
+    let ms = mc.fit(&ds, 3);
+    let mm = ml.fit(&ds, 3);
+    assert_metrics_identical(&ms, &mm);
+    let a = mc.into_model();
+    let b = ml.into_model();
+    assert_eq!(a.model.w, b.model.w, "dense weights diverged");
+    assert_eq!(a.model.bias, b.model.bias);
+    // The label→path tables agree pair for pair too.
+    let pa: Vec<_> = a.assigner.table.pairs().collect();
+    let pb: Vec<_> = b.assigner.table.pairs().collect();
+    assert_eq!(pa, pb);
+}
+
+/// Invariant 1, 1-worker Hogwild + dense: the shared `objective_step`
+/// kernel behaves identically through the atomic weight view.
+#[test]
+fn singleton_hogwild_dense_is_bit_identical() {
+    let ds = SyntheticSpec::multiclass(1200, 500, 48).seed(302).generate();
+    let mut mc = ParallelTrainer::new(cfg(Objective::Multiclass), ds.n_features, ds.n_labels);
+    let mut ml = ParallelTrainer::new(cfg(ML), ds.n_features, ds.n_labels);
+    let mut ms = Vec::new();
+    let mut mm = Vec::new();
+    for _ in 0..3 {
+        ms.push(mc.hogwild_epoch(&ds));
+        mm.push(ml.hogwild_epoch(&ds));
+    }
+    assert_metrics_identical(&ms, &mm);
+    assert_eq!(mc.global_step(), ml.global_step());
+    let a = mc.into_model();
+    let b = ml.into_model();
+    assert_eq!(a.model.w, b.model.w, "hogwild weights diverged");
+    assert_eq!(a.model.bias, b.model.bias);
+}
+
+/// Invariant 1, hashed backend: serial and 1-worker Hogwild, singleton
+/// sets — the bucketed store sees the identical update stream.
+#[test]
+fn singleton_hashed_backend_is_bit_identical() {
+    let ds = SyntheticSpec::multiclass(1000, 800, 48).seed(303).generate();
+    let hcfg = |objective| TrainConfig { hash_bits: 9, ..cfg(objective) };
+
+    let mut mc = Trainer::<Trellis, HashedStore>::with_topology(
+        hcfg(Objective::Multiclass),
+        ds.n_features,
+        ds.n_labels,
+    )
+    .unwrap();
+    let mut ml =
+        Trainer::<Trellis, HashedStore>::with_topology(hcfg(ML), ds.n_features, ds.n_labels)
+            .unwrap();
+    assert_metrics_identical(&mc.fit(&ds, 2), &ml.fit(&ds, 2));
+    assert_eq!(mc.into_model().model.w, ml.into_model().model.w, "serial hashed");
+
+    let mut hc = ParallelTrainer::<Trellis, HashedStore>::with_topology(
+        hcfg(Objective::Multiclass),
+        ds.n_features,
+        ds.n_labels,
+    )
+    .unwrap();
+    let mut hl = ParallelTrainer::<Trellis, HashedStore>::with_topology(
+        hcfg(ML),
+        ds.n_features,
+        ds.n_labels,
+    )
+    .unwrap();
+    let mut ms = Vec::new();
+    let mut mm = Vec::new();
+    for _ in 0..2 {
+        ms.push(hc.hogwild_epoch(&ds));
+        mm.push(hl.hogwild_epoch(&ds));
+    }
+    assert_metrics_identical(&ms, &mm);
+    assert_eq!(hc.into_model().model.w, hl.into_model().model.w, "hogwild hashed");
+}
+
+/// Invariant 2: multilabel end-to-end — the union loss learns the planted
+/// multilabel teacher, PLT weighting also learns, and the eval suite
+/// reports the full P@k / nDCG@k / recall@k / PSP@k sweep.
+#[test]
+fn multilabel_end_to_end_learns_and_reports_metrics() {
+    let ds = SyntheticSpec::multilabel(3000, 1000, 48, 3)
+        .teacher(TeacherKind::Cluster)
+        .seed(304)
+        .generate();
+    assert!(!ds.multiclass);
+    let (train, test) = ltls::data::split::random_split(&ds, 0.2, 7);
+
+    for objective in [ML, ML_PLT] {
+        let mut tr = Trainer::new(
+            TrainConfig { objective, ..TrainConfig::default() },
+            ds.n_features,
+            ds.n_labels,
+        );
+        let ms = tr.fit(&train, 8);
+        assert!(
+            ms.last().unwrap().mean_loss() < ms[0].mean_loss(),
+            "{objective}: loss did not decrease"
+        );
+        let model = tr.into_model();
+        let p1 = precision_at_1(&model, &test);
+        assert!(p1 > 0.3, "{objective}: precision@1 = {p1} (chance ≈ {:.3})", 3.0 / 48.0);
+
+        let props = Propensities::from_train(&train);
+        let m = evaluate_with(&model, &test, &[1, 3, 5], Some(&props));
+        assert_eq!(m.precision.len(), 3);
+        assert_eq!(m.ndcg.len(), 3);
+        assert_eq!(m.recall.len(), 3);
+        let psp = m.psp.as_ref().expect("propensity sweep present");
+        assert_eq!(psp.len(), 3);
+        // With 3 true labels per row, recall@5 must exceed recall@1.
+        assert!(m.recall[2] > m.recall[0], "{objective}: recall not increasing in k");
+        for v in m.ndcg.iter().chain(&m.recall).chain(psp) {
+            assert!((0.0..=1.0 + 1e-9).contains(v), "{objective}: metric out of range: {m}");
+        }
+        let shown = format!("{m}");
+        assert!(shown.contains("R@5=") && shown.contains("PSP@1="), "{shown}");
+    }
+}
+
+/// Unlabeled rows (legal in XMLC files) are a no-op step, not a panic,
+/// under both objectives.
+#[test]
+fn unlabeled_rows_are_skipped_safely() {
+    let text = "4 6 8\n1,3 0:1 2:0.5\n, 1:1\n5 3:1\n, 4:1\n";
+    let ds = ltls::data::libsvm::parse("holes", text.as_bytes()).unwrap();
+    for objective in [Objective::Multiclass, ML] {
+        let mut tr = Trainer::new(cfg(objective), ds.n_features, ds.n_labels);
+        let ms = tr.fit(&ds, 2);
+        assert_eq!(ms[0].examples, 2, "{objective}: only labeled rows count as examples");
+    }
+}
+
+/// Invariant 3: the checkpoint's objective tag roundtrips, and a
+/// mistyped resume errors in both directions with an actionable message.
+#[test]
+fn checkpoint_objective_roundtrips_and_mistyped_resume_errors() {
+    let ds: Dataset = SyntheticSpec::multilabel(800, 400, 32, 2).seed(305).generate();
+    let dir = std::env::temp_dir().join(format!("ltls_ml_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Multilabel run writes checkpoints…
+    let mut tr = ParallelTrainer::new(cfg(ML_PLT), ds.n_features, ds.n_labels);
+    tr.fit_with_checkpoints(&ds, 2, &dir).unwrap();
+    let (_, path) = io::latest_checkpoint(&dir).unwrap().expect("checkpoint written");
+    let ck = io::load_checkpoint::<Trellis, DenseStore>(&path).unwrap();
+    assert_eq!(ck.objective, ML_PLT, "objective tag must roundtrip");
+
+    // …which a multiclass config must refuse to resume…
+    let err = ParallelTrainer::<Trellis, DenseStore>::resume(cfg(Objective::Multiclass), ck.clone())
+        .unwrap_err();
+    assert!(err.contains("objective"), "unhelpful error: {err}");
+    assert!(err.contains("multilabel+plt"), "error names the checkpoint objective: {err}");
+    // …while the matching config resumes and keeps training.
+    let mut resumed = ParallelTrainer::<Trellis, DenseStore>::resume(cfg(ML_PLT), ck).unwrap();
+    assert_eq!(resumed.epochs_done(), 2);
+    resumed.epoch(&ds);
+
+    // The reverse direction: multiclass checkpoint under --multilabel.
+    io::clear_checkpoints(&dir).unwrap();
+    let mut mc = ParallelTrainer::new(cfg(Objective::Multiclass), ds.n_features, ds.n_labels);
+    mc.fit_with_checkpoints(&ds, 1, &dir).unwrap();
+    let (_, path) = io::latest_checkpoint(&dir).unwrap().unwrap();
+    let ck = io::load_checkpoint::<Trellis, DenseStore>(&path).unwrap();
+    assert_eq!(ck.objective, Objective::Multiclass);
+    let err = ParallelTrainer::<Trellis, DenseStore>::resume(cfg(ML), ck).unwrap_err();
+    assert!(err.contains("objective") && err.contains("multiclass"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resume mid-run continues the multilabel trajectory exactly: epoch 3
+/// after a 2-epoch checkpoint equals epoch 3 of the uninterrupted run.
+#[test]
+fn multilabel_checkpoint_resume_reproduces_uninterrupted_run() {
+    let ds = SyntheticSpec::multilabel(900, 400, 32, 2).seed(306).generate();
+    let dir = std::env::temp_dir().join(format!("ltls_ml_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut full = ParallelTrainer::new(cfg(ML), ds.n_features, ds.n_labels);
+    let mf = full.fit(&ds, 3);
+
+    let mut first = ParallelTrainer::new(cfg(ML), ds.n_features, ds.n_labels);
+    first.fit_with_checkpoints(&ds, 2, &dir).unwrap();
+    drop(first);
+    let (_, path) = io::latest_checkpoint(&dir).unwrap().unwrap();
+    let ck = io::load_checkpoint::<Trellis, DenseStore>(&path).unwrap();
+    assert_metrics_identical(&ck.history, &mf[..2]);
+    let mut resumed = ParallelTrainer::resume(cfg(ML), ck).unwrap();
+    let m3 = resumed.epoch(&ds);
+    assert_metrics_identical(std::slice::from_ref(&m3), std::slice::from_ref(&mf[2]));
+    let a = full.into_model();
+    let b = resumed.into_model();
+    assert_eq!(a.model.w, b.model.w);
+    assert_eq!(a.model.bias, b.model.bias);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -52,7 +52,10 @@ use std::collections::BTreeMap;
 /// rows: 0 = request tracing disabled, 1 = the default sampling plus the
 /// slow-request ring. `shards` discriminates scatter-gather rows: the
 /// number of label-space shards the coordinator fans out over.
-const DISCRIMINATORS: [&str; 12] = [
+/// `multilabel` discriminates training-objective rows of the multilabel
+/// sweep: 0 = singleton-degenerate (label sets truncated to one gold
+/// path), 1 = union-of-gold-paths loss, 2 = union loss + PLT weighting.
+const DISCRIMINATORS: [&str; 13] = [
     "workers",
     "threads",
     "batch",
@@ -65,6 +68,7 @@ const DISCRIMINATORS: [&str; 12] = [
     "clients",
     "trace",
     "shards",
+    "multilabel",
 ];
 
 fn main() {
@@ -404,6 +408,25 @@ trailing noise
         assert_eq!(check_against_baseline(base, &c).unwrap().failures, 0);
         let mut worse = c.clone();
         worse.insert("serve_network.shard_scatter_ratio".into(), 0.3);
+        assert_eq!(check_against_baseline(base, &worse).unwrap().failures, 1);
+    }
+
+    #[test]
+    fn multilabel_rows_discriminate_objectives() {
+        let c = current_from(
+            "json: {\"bench\":\"multilabel_sweep\",\"p1_gain_ml_vs_single\":0.08,\"naive_p1\":0.31,\"results\":[{\"multilabel\":0,\"p1\":0.52,\"model_bytes\":180000.0},{\"multilabel\":1,\"p1\":0.60,\"model_bytes\":180000.0},{\"multilabel\":2,\"p1\":0.59,\"model_bytes\":180000.0}]}\n",
+        );
+        assert_eq!(c["multilabel_sweep.p1_gain_ml_vs_single"], 0.08);
+        assert_eq!(c["multilabel_sweep.naive_p1"], 0.31);
+        assert_eq!(c["multilabel_sweep.multilabel=0.p1"], 0.52);
+        assert_eq!(c["multilabel_sweep.multilabel=1.p1"], 0.60);
+        assert_eq!(c["multilabel_sweep.multilabel=2.p1"], 0.59);
+        // The refactor's payoff gate: the union loss must stay strictly
+        // ahead of the singleton-degenerate run.
+        let base = r#"{"metrics":{"multilabel_sweep.p1_gain_ml_vs_single":{"baseline":0.0001,"tolerance":0.0}}}"#;
+        assert_eq!(check_against_baseline(base, &c).unwrap().failures, 0);
+        let mut worse = c.clone();
+        worse.insert("multilabel_sweep.p1_gain_ml_vs_single".into(), -0.01);
         assert_eq!(check_against_baseline(base, &worse).unwrap().failures, 1);
     }
 
